@@ -1,0 +1,120 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//!  A. Aggregation granularity sweep — per-task vs per-core vs per-node
+//!     at a fixed scale (the paper only reports the last two).
+//!  B. Cleanup-cost dependence — the array-size coefficient is the cliff
+//!     knob; sweep it and watch the 512-node M* runtime.
+//!  C. Cleanup/dispatch interleave ratio — bounded starvation policy.
+//!  D. Task-duration skew — node-based max-lane duration under
+//!     log-normal and bimodal distributions (where per-node aggregation
+//!     pays an imbalance cost the constant-time benchmark hides).
+
+use llsched::aggregation::plan::{Aggregator, ClusterShape};
+use llsched::aggregation::{for_mode, NodeBased};
+use llsched::bench::section;
+use llsched::cluster::Cluster;
+use llsched::config::presets::TASK_CONFIGS;
+use llsched::config::Mode;
+use llsched::scheduler::core::{SchedulerSim, TaskModel};
+use llsched::scheduler::costmodel::CostModel;
+use llsched::scheduler::noise::NoiseModel;
+use llsched::util::fmt::count;
+use llsched::workload::paper::PaperCell;
+use llsched::workload::taskgen::TaskGen;
+
+fn quiet_run(nodes: u32, cost: CostModel, job: llsched::scheduler::job::JobSpec) -> (f64, f64) {
+    let sim = SchedulerSim::new(
+        Cluster::tx_green(nodes),
+        cost,
+        NoiseModel::dedicated(),
+        99,
+    )
+    .with_server_speed(1.0)
+    .with_task_model(TaskModel {
+        startup: 0.0,
+        jitter_sigma: 0.0,
+        p_node_late: 0.0,
+        late_range: (0.0, 0.0),
+    })
+    .without_timeline();
+    let (out, id) = sim.run_single(job);
+    let stats = out.job_stats(id, 240.0).expect("finished");
+    (stats.runtime, stats.release_span)
+}
+
+fn main() {
+    section("A. aggregation granularity (8 nodes, t=30s, T_job=240s)");
+    let cell = PaperCell::new(8, TASK_CONFIGS[2], Mode::NodeBased, 0);
+    println!(
+        "{:<12} {:>16} {:>10} {:>14}",
+        "mode", "sched tasks", "runtime", "release span"
+    );
+    for mode in [Mode::PerTask, Mode::MultiLevel, Mode::NodeBased] {
+        let shape = ClusterShape { nodes: 8, cores_per_node: 64, task_mem_mib: 256 };
+        let job = for_mode(mode).plan("abl", &cell.workload(), &shape).unwrap();
+        let n = job.array_size();
+        let (runtime, release) = quiet_run(8, CostModel::slurm_like_tx_green(), job);
+        println!(
+            "{:<12} {:>16} {:>9.0}s {:>13.1}s",
+            mode.to_string(),
+            count(n),
+            runtime,
+            release
+        );
+    }
+
+    section("B. cleanup array-size coefficient sweep (512 nodes, M*, t=60)");
+    println!("{:<16} {:>12} {:>12}", "coeff (µs/task)", "runtime", "vs paper 2768s");
+    for coeff_us in [0.0, 1.0, 2.15, 4.0, 8.0] {
+        let mut cost = CostModel::slurm_like_tx_green();
+        cost.cleanup_per_array_task = coeff_us * 1e-6;
+        let cell = PaperCell::new(512, TASK_CONFIGS[3], Mode::MultiLevel, 0);
+        let shape = cell.shape();
+        let job = for_mode(Mode::MultiLevel)
+            .plan("abl", &cell.workload(), &shape)
+            .unwrap();
+        let (runtime, _) = quiet_run(512, cost, job);
+        println!("{:<16} {:>11.0}s {:>12.2}x", coeff_us, runtime, runtime / 2768.0);
+    }
+
+    section("C. cleanup/dispatch interleave (512 nodes, M*, t=60)");
+    println!("{:<14} {:>12} {:>18}", "interleave", "runtime", "dispatch starved?");
+    for interleave in [1u32, 2, 8, 64, u32::MAX] {
+        let mut cost = CostModel::slurm_like_tx_green();
+        cost.cleanup_interleave = interleave;
+        let cell = PaperCell::new(512, TASK_CONFIGS[3], Mode::MultiLevel, 0);
+        let job = for_mode(Mode::MultiLevel)
+            .plan("abl", &cell.workload(), &cell.shape())
+            .unwrap();
+        let (runtime, _) = quiet_run(512, cost, job);
+        println!(
+            "{:<14} {:>11.0}s {:>18}",
+            if interleave == u32::MAX { "∞ (no cleanup pri)".to_string() } else { interleave.to_string() },
+            runtime,
+            if runtime > 1000.0 { "yes" } else { "no" }
+        );
+    }
+
+    section("D. task-duration skew and node-based lane imbalance (32 nodes)");
+    println!(
+        "{:<34} {:>14} {:>16}",
+        "distribution", "mean lane (s)", "max-lane runtime"
+    );
+    let shape = ClusterShape { nodes: 32, cores_per_node: 64, task_mem_mib: 256 };
+    let n_tasks = 32 * 64 * 8;
+    for (name, gen) in [
+        ("constant 30s", TaskGen::Constant { seconds: 30.0 }),
+        ("lognormal median 30s σ=0.5", TaskGen::LogNormal { median: 30.0, sigma: 0.5 }),
+        ("bimodal 5s/120s p=0.2", TaskGen::Bimodal { short: 5.0, long: 120.0, p_long: 0.2 }),
+        ("exponential mean 30s", TaskGen::Exponential { mean: 30.0 }),
+    ] {
+        let w = gen.generate(n_tasks, 7);
+        let job = NodeBased::default().plan("abl", &w, &shape).unwrap();
+        let mean_work = w.total_work() / (32.0 * 64.0);
+        let max_dur = job.tasks.iter().map(|t| t.duration).fold(0.0, f64::max);
+        println!("{:<34} {:>13.1}s {:>15.1}s", name, mean_work, max_dur);
+    }
+    println!("\nconstant-time tasks (the paper's benchmark) have zero imbalance;");
+    println!("skewed workloads pay a max-lane premium — the trade node-based");
+    println!("scheduling accepts for its 64x scheduler-load reduction.");
+}

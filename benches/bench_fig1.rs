@@ -1,0 +1,54 @@
+//! Bench: regenerate Fig 1 (normalized overhead vs task time, median of
+//! three runs per cell, both scheduling modes, all scales).
+
+use llsched::coordinator::experiment::{run_matrix, ExperimentOpts};
+use llsched::metrics::report;
+
+fn main() {
+    let opts = ExperimentOpts {
+        include_na: false,
+        max_nodes: 512,
+        runs: 3,
+        dt: 1.0,
+    };
+    let t0 = std::time::Instant::now();
+    let (points, _) = run_matrix(&opts, |_| {}).expect("matrix runs");
+    println!(
+        "Fig 1 — normalized overhead (runtime - T_job)/T_job, medians of 3 ({} cells, {:.1}s wall)\n",
+        points.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    println!(
+        "{:<8} {:>8} {:>6} {:>16} {:>15}",
+        "nodes", "t (s)", "mode", "median runtime", "norm overhead"
+    );
+    for p in &points {
+        println!(
+            "{:<8} {:>8} {:>6} {:>15.1}s {:>15.4}",
+            p.nodes,
+            p.task_time,
+            p.mode.short(),
+            p.median_runtime(),
+            p.norm_overhead()
+        );
+    }
+    println!("\n{}", report::fig1_plot(&points));
+    // The paper's two structural claims about this figure:
+    let node_based_under_10pct = points
+        .iter()
+        .filter(|p| p.mode == llsched::config::Mode::NodeBased)
+        .filter(|p| p.norm_overhead() < 0.10)
+        .count();
+    let node_based_total = points
+        .iter()
+        .filter(|p| p.mode == llsched::config::Mode::NodeBased)
+        .count();
+    println!(
+        "node-based cells under 10% overhead: {node_based_under_10pct}/{node_based_total} (paper: 'most')"
+    );
+    let multi_over_10pct = points
+        .iter()
+        .filter(|p| p.mode == llsched::config::Mode::MultiLevel)
+        .all(|p| p.norm_overhead() > 0.10);
+    println!("multi-level cells all above 10%: {multi_over_10pct} (paper: all)");
+}

@@ -1,0 +1,66 @@
+//! Bench: regenerate Fig 2 (system utilization over time, median runs)
+//! and report the derived utilization metrics the paper discusses:
+//! time-to-100%, peak utilization, and mean utilization while active.
+
+use llsched::coordinator::experiment::{fig2_label, median_runs, run_matrix, ExperimentOpts};
+use llsched::metrics::report;
+
+fn main() {
+    let opts = ExperimentOpts {
+        include_na: false,
+        max_nodes: 512,
+        runs: 3,
+        dt: 1.0,
+    };
+    let t0 = std::time::Instant::now();
+    let (_, all) = run_matrix(&opts, |_| {}).expect("matrix runs");
+    let med = median_runs(&all);
+    println!(
+        "Fig 2 — utilization over time, {} median runs ({:.1}s wall)\n",
+        med.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    println!(
+        "{:<14} {:>10} {:>14} {:>12} {:>12}",
+        "run", "peak util", "t to 100%", "mean active", "area (s)"
+    );
+    for r in &med {
+        let u = &r.utilization;
+        println!(
+            "{:<14} {:>9.1}% {:>14} {:>11.1}% {:>12.0}",
+            fig2_label(&r.cell),
+            u.peak() * 100.0,
+            u.time_to_reach(1.0)
+                .map(|t| format!("{t:.0}s"))
+                .unwrap_or_else(|| "never".into()),
+            u.mean_while_active() * 100.0,
+            u.area()
+        );
+    }
+    // ASCII rendering for the headline cells (512 nodes, t=60).
+    let series: Vec<(String, llsched::metrics::timeline::UtilizationSeries)> = med
+        .iter()
+        .filter(|r| r.cell.nodes == 512 && r.cell.task.task_time == 60.0)
+        .map(|r| (fig2_label(&r.cell), r.utilization.clone()))
+        .collect();
+    if !series.is_empty() {
+        println!("\n512-node, t=60 (the collapse vs the instant fill):\n");
+        println!("{}", report::fig2_plot(&series));
+    }
+    // The structural claims:
+    let m512_never_full = med
+        .iter()
+        .filter(|r| r.cell.nodes == 512 && r.cell.mode == llsched::config::Mode::MultiLevel)
+        .all(|r| r.utilization.time_to_reach(1.0).is_none());
+    println!("M* 512 never reaches 100% utilization: {m512_never_full} (paper: true)");
+    let n_fast_fill = med
+        .iter()
+        .filter(|r| r.cell.mode == llsched::config::Mode::NodeBased)
+        .filter(|r| r.utilization.time_to_reach(0.99).map(|t| t < 30.0).unwrap_or(false))
+        .count();
+    let n_total = med
+        .iter()
+        .filter(|r| r.cell.mode == llsched::config::Mode::NodeBased)
+        .count();
+    println!("N* runs filling the machine in <30s: {n_fast_fill}/{n_total} (paper: 'almost instantly')");
+}

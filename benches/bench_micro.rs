@@ -1,0 +1,121 @@
+//! Microbenchmarks of the hot paths (§Perf L3): DES event queue,
+//! scheduler event throughput, aggregation planning, script generation,
+//! pending-queue ops, and — when artifacts exist — PJRT step latency.
+
+use llsched::aggregation::plan::{Aggregator, ClusterShape, Workload};
+use llsched::aggregation::script::build_scripts;
+use llsched::aggregation::{MultiLevel, NodeBased};
+use llsched::bench::{bench, black_box, section, BenchOpts};
+use llsched::cluster::Cluster;
+use llsched::config::Mode;
+use llsched::coordinator::experiment::run_cell;
+use llsched::config::presets::TASK_CONFIGS;
+use llsched::scheduler::queue::PendingQueue;
+use llsched::sim::EventQueue;
+use llsched::workload::paper::PaperCell;
+use std::time::Duration;
+
+fn main() {
+    let opts = BenchOpts { warmup: 1, iters: 5, max_wall: Duration::from_secs(30) };
+
+    section("DES event queue");
+    let r = bench("event_queue push+pop 1M", opts, |i| {
+        let mut q: EventQueue<u64> = EventQueue::new();
+        for k in 0..1_000_000u64 {
+            q.at((k ^ (i as u64 * 7919)) as f64 % 1e6, k);
+        }
+        let mut sum = 0u64;
+        while let Some(e) = q.pop() {
+            sum = sum.wrapping_add(e.event);
+        }
+        sum
+    });
+    println!("{}", r.line());
+    println!(
+        "  → {:.1} M events/s",
+        2.0 / r.summary.p50.max(1e-12) // 1M push + 1M pop
+    );
+
+    section("scheduler DES throughput (512-node M* cell, the heaviest)");
+    let cell = PaperCell::new(512, TASK_CONFIGS[3], Mode::MultiLevel, 0);
+    let mut events = 0u64;
+    let r = bench("run_cell 512n/60s/M*", BenchOpts { warmup: 0, iters: 3, max_wall: Duration::from_secs(60) }, |_| {
+        let res = run_cell(&cell).expect("runs");
+        events = res.events;
+        res.runtime
+    });
+    println!("{}", r.line());
+    println!(
+        "  → {} events, {:.2} M events/s",
+        events,
+        events as f64 / r.summary.p50.max(1e-12) / 1e6
+    );
+
+    section("aggregation planning (7.9M-task workload)");
+    let shape = ClusterShape { nodes: 512, cores_per_node: 64, task_mem_mib: 256 };
+    let w = Workload::paper(32_768, 1.0, 240.0);
+    let r = bench("MultiLevel.plan 32768 tasks", opts, |_| {
+        black_box(MultiLevel.plan("b", &w, &shape).unwrap().array_size())
+    });
+    println!("{}", r.line());
+    let r = bench("NodeBased.plan 512 tasks", opts, |_| {
+        black_box(NodeBased::default().plan("b", &w, &shape).unwrap().array_size())
+    });
+    println!("{}", r.line());
+
+    section("script generation (512 nodes × 64 lanes)");
+    let r = bench("build_scripts 7.9M tasks", opts, |_| {
+        black_box(build_scripts(7_864_320, 512, 64, 1).len())
+    });
+    println!("{}", r.line());
+    let scripts = build_scripts(7_864_320, 512, 64, 1);
+    let r = bench("render one node script", opts, |_| {
+        black_box(scripts[0].render("./sim_task").len())
+    });
+    println!("{}", r.line());
+
+    section("pending queue (32768 tasks)");
+    let r = bench("push+pop 32768", opts, |_| {
+        let mut q = PendingQueue::new();
+        for t in 0..32_768u64 {
+            q.push(t, 0);
+        }
+        let mut n = 0u64;
+        while q.pop().is_some() {
+            n += 1;
+        }
+        n
+    });
+    println!("{}", r.line());
+
+    section("cluster placement search (512 nodes)");
+    let cluster = Cluster::tx_green(512);
+    let r = bench("find_idle_nodes(512)", opts, |_| {
+        black_box(cluster.find_idle_nodes(512, None).len())
+    });
+    println!("{}", r.line());
+    let r = bench("find_core_slots(32768)", opts, |_| {
+        black_box(cluster.find_core_slots(32_768, 64, None).len())
+    });
+    println!("{}", r.line());
+
+    section("PJRT runtime (requires `make artifacts`)");
+    match llsched::runtime::find_artifacts_dir() {
+        Some(dir) => {
+            let rt =
+                llsched::runtime::Runtime::load(&dir.join("simstep_8x32x32.hlo.txt")).unwrap();
+            let state = vec![0.5f32; rt.artifact.elements()];
+            let r = bench("simstep_8x32x32 step (4 scan iters)", BenchOpts { warmup: 3, iters: 20, max_wall: Duration::from_secs(20) }, |_| {
+                black_box(rt.step(&state).unwrap().1)
+            });
+            println!("{}", r.line());
+            let rt = llsched::runtime::Runtime::load(&dir.join("simstep_1x128x128.hlo.txt")).unwrap();
+            let state = vec![0.5f32; rt.artifact.elements()];
+            let r = bench("simstep_1x128x128 step (4 scan iters)", BenchOpts { warmup: 3, iters: 20, max_wall: Duration::from_secs(20) }, |_| {
+                black_box(rt.step(&state).unwrap().1)
+            });
+            println!("{}", r.line());
+        }
+        None => println!("  artifacts/ not found — skipped"),
+    }
+}

@@ -1,0 +1,54 @@
+//! Bench: regenerate Table III (summary of run times).
+//!
+//! One measured DES run per cell (the paper's 3-run medians come from
+//! `examples/paper_tables.rs`); this bench also reports the simulator's
+//! own throughput (DES events/second) per cell, which is the §Perf L3
+//! metric.
+
+use llsched::bench::{bench, section, BenchOpts};
+use llsched::config::presets::{is_paper_na, NODE_SCALES, TASK_CONFIGS};
+use llsched::config::Mode;
+use llsched::coordinator::experiment::run_cell;
+use llsched::workload::paper::PaperCell;
+use std::time::Duration;
+
+fn main() {
+    section("Table III — runtime per cell (simulated) + DES throughput");
+    println!(
+        "{:<16} {:>10} {:>12} {:>12} {:>14}",
+        "cell", "runtime", "overhead", "sim events", "events/sec"
+    );
+    for &nodes in &NODE_SCALES {
+        for task in &TASK_CONFIGS {
+            for mode in [Mode::MultiLevel, Mode::NodeBased] {
+                if is_paper_na(nodes, task, mode) {
+                    println!("{:<16} {:>10}", format!("{}n/{}s/{}", nodes, task.task_time, mode.short()), "N/A");
+                    continue;
+                }
+                let cell = PaperCell::new(nodes, *task, mode, 0);
+                let mut events = 0u64;
+                let mut runtime = 0.0;
+                let mut overhead = 0.0;
+                let r = bench(
+                    &cell.label(),
+                    BenchOpts { warmup: 0, iters: 1, max_wall: Duration::from_secs(120) },
+                    |_| {
+                        let res = run_cell(&cell).expect("cell runs");
+                        events = res.events;
+                        runtime = res.runtime;
+                        overhead = res.overhead;
+                    },
+                );
+                let wall = r.summary.mean;
+                println!(
+                    "{:<16} {:>9.0}s {:>11.0}s {:>12} {:>14.0}",
+                    cell.label(),
+                    runtime,
+                    overhead,
+                    events,
+                    events as f64 / wall.max(1e-9)
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,75 @@
+//! Interactive-launch demo: the paper's §I claim that node-based
+//! scheduling launches "large scale interactive jobs at a rate of over
+//! 5000 jobs/second (260,000+ Matlab/Octave processes in under 40
+//! seconds)".
+//!
+//! We reproduce the scenario: a 512-node interactive job with 64 worker
+//! processes per node (32,768 processes — the machine slice of the
+//! reference; the paper's 260k figure is the full 40k-core system with
+//! multiple launches) submitted in triples mode, measuring processes
+//! started per second of virtual time, and comparing with the per-core
+//! and per-task styles.
+//!
+//! ```bash
+//! cargo run --release --example interactive_launch
+//! ```
+
+use llsched::aggregation::plan::{ClusterShape, Workload};
+use llsched::aggregation::for_mode;
+use llsched::cluster::Cluster;
+use llsched::config::Mode;
+use llsched::scheduler::core::{SchedulerSim, TaskModel};
+use llsched::scheduler::costmodel::CostModel;
+use llsched::scheduler::noise::NoiseModel;
+use llsched::util::fmt::{count, dur, Table};
+
+fn main() -> llsched::Result<()> {
+    let nodes = 512u32;
+    let shape = ClusterShape { nodes, cores_per_node: 64, task_mem_mib: 256 };
+    // Interactive session: every core gets one long-lived worker process.
+    let workers = shape.processors();
+    let workload = Workload::Uniform { count: workers, duration: 600.0 };
+
+    println!(
+        "interactive launch: {} worker processes on {} nodes\n",
+        count(workers),
+        nodes
+    );
+    let mut table = Table::new(vec![
+        "mode",
+        "scheduling tasks",
+        "time to full machine",
+        "processes/sec",
+    ]);
+    for mode in [Mode::PerTask, Mode::MultiLevel, Mode::NodeBased] {
+        let job = for_mode(mode).plan("interactive", &workload, &shape)?;
+        let array = job.array_size();
+        let sim = SchedulerSim::new(
+            Cluster::tx_green(nodes),
+            CostModel::slurm_like_tx_green(),
+            NoiseModel::dedicated(),
+            7,
+        )
+        .with_server_speed(1.0)
+        .with_task_model(TaskModel {
+            startup: 0.8,
+            jitter_sigma: 0.0,
+            p_node_late: 0.0,
+            late_range: (0.0, 0.0),
+        })
+        .without_timeline();
+        let (out, id) = sim.run_single(job);
+        let stats = out.job_stats(id, 600.0).expect("finished");
+        let fill = stats.dispatch_span + 0.8; // + startup
+        table.row(vec![
+            mode.to_string(),
+            count(array),
+            dur(fill),
+            format!("{:.0}", workers as f64 / fill.max(1e-9)),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("the paper's claim — >5000 processes/second, a full interactive");
+    println!("machine in seconds — holds only for the node-based launch path.");
+    Ok(())
+}

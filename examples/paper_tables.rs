@@ -1,0 +1,127 @@
+//! End-to-end driver: regenerate every table and figure of the paper on
+//! the simulated TX-Green substrate, write CSV/JSON to `results/`, and
+//! print the paper-vs-measured comparison recorded in EXPERIMENTS.md.
+//!
+//! ```bash
+//! cargo run --release --example paper_tables            # full matrix
+//! cargo run --release --example paper_tables -- --quick # ≤128 nodes
+//! ```
+
+use llsched::coordinator::experiment::{fig2_label, median_runs, run_matrix, ExperimentOpts};
+use llsched::config::Mode;
+use llsched::metrics::overhead::speedup;
+use llsched::metrics::report;
+use llsched::util::fmt::dur;
+use std::path::Path;
+
+/// Paper Table III medians (seconds) for the structural comparison.
+const PAPER_MEDIANS: &[(u32, f64, &str, f64)] = &[
+    (32, 1.0, "M", 291.0),
+    (32, 1.0, "N", 242.0),
+    (64, 1.0, "M", 291.0),
+    (64, 1.0, "N", 242.0),
+    (128, 1.0, "M", 424.0),
+    (128, 1.0, "N", 245.0),
+    (256, 1.0, "M", 430.0),
+    (256, 1.0, "N", 256.0),
+    (512, 60.0, "M", 2768.0),
+    (512, 60.0, "N", 312.0),
+];
+
+fn main() -> llsched::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let opts = ExperimentOpts {
+        include_na: false,
+        max_nodes: if quick { 128 } else { 512 },
+        runs: 3,
+        dt: 1.0,
+    };
+    let out = Path::new("results");
+    std::fs::create_dir_all(out)?;
+
+    println!("== Table I ==\n{}", report::table1());
+    println!("== Table II ==\n{}", report::table2());
+
+    let t0 = std::time::Instant::now();
+    let (points, all) = run_matrix(&opts, |r| {
+        eprintln!(
+            "  {:>14}  runtime {:>8}  fill {:>8}  release {:>9}{}",
+            r.cell.label(),
+            dur(r.runtime),
+            dur(r.dispatch_span),
+            dur(r.release_span),
+            if r.unusable_in_production { "  [unusable in production]" } else { "" }
+        );
+    })?;
+    println!(
+        "\n== Table III == ({} runs in {:.1}s wall)\n",
+        all.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    println!("{}", report::table3(&points));
+    std::fs::write(out.join("table3.json"), report::results_json(&points).to_pretty())?;
+
+    // Fig 1.
+    println!("== Fig 1 (normalized overhead vs task time) ==\n");
+    println!("{}", report::fig1_plot(&points));
+    report::fig1_csv(&points).save(&out.join("fig1.csv"))?;
+
+    // Fig 2.
+    let med = median_runs(&all);
+    let series: Vec<(String, llsched::metrics::timeline::UtilizationSeries)> = med
+        .iter()
+        .map(|r| (fig2_label(&r.cell), r.utilization.clone()))
+        .collect();
+    report::fig2_csv(&series).save(&out.join("fig2.csv"))?;
+    let t60: Vec<_> = series.iter().filter(|(l, _)| l.ends_with("t60")).cloned().collect();
+    println!("== Fig 2 (utilization vs time; t=60 median runs) ==\n");
+    println!("{}", report::fig2_plot(&t60));
+
+    // Paper-vs-measured comparison.
+    println!("== paper vs measured (medians) ==\n");
+    let mut cmp = llsched::util::fmt::Table::new(vec![
+        "cell", "paper median", "measured median", "ratio",
+    ]);
+    for &(nodes, t, mode_s, paper) in PAPER_MEDIANS {
+        if nodes > opts.max_nodes {
+            continue;
+        }
+        let mode = if mode_s == "M" { Mode::MultiLevel } else { Mode::NodeBased };
+        if let Some(p) = points
+            .iter()
+            .find(|p| p.nodes == nodes && p.task_time == t && p.mode == mode)
+        {
+            let m = p.median_runtime();
+            cmp.row(vec![
+                format!("{nodes}n/t={t}/{mode_s}*"),
+                format!("{paper:.0}s"),
+                format!("{m:.0}s"),
+                format!("{:.2}x", m / paper),
+            ]);
+        }
+    }
+    println!("{}", cmp.render());
+
+    // Headline speedup (512-node scale): M* is only measurable at t=60
+    // (the paper's other cells are N/A); compare its overhead against
+    // every N* task-time cell and report the range, as `llsched speedup`
+    // does.
+    if !quick {
+        if let Some(m) = points
+            .iter()
+            .find(|p| p.nodes == 512 && p.task_time == 60.0 && p.mode == Mode::MultiLevel)
+        {
+            let ns: Vec<_> = points
+                .iter()
+                .filter(|p| p.nodes == 512 && p.mode == Mode::NodeBased)
+                .collect();
+            let med = ns.iter().map(|n| speedup(m, n, false)).fold(0.0, f64::max);
+            let best = ns.iter().map(|n| speedup(m, n, true)).fold(0.0, f64::max);
+            println!(
+                "headline @512n: overhead ratio up to {med:.0}x median / {best:.0}x best (paper ~57x / ~100x)"
+            );
+        }
+    }
+    println!("\nresults written to {:?}", out);
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! Real-compute end-to-end: the full three-layer stack on actual
+//! hardware. A node-based execution script (L3's generated artifact)
+//! drives pinned worker lanes that execute *real* short-running
+//! simulations — the AOT-compiled JAX/Pallas module (L2/L1) — through the
+//! PJRT runtime, with checksums verified against the Python oracle.
+//!
+//! Requires `make artifacts`.
+//!
+//! ```bash
+//! cargo run --release --example real_compute [-- --tasks N --iters K]
+//! ```
+
+use llsched::aggregation::script::build_scripts;
+use llsched::coordinator::cli::Args;
+use llsched::exec::payload::Payload;
+use llsched::exec::worker::NodeExecutor;
+use llsched::runtime::server::RuntimeServer;
+use llsched::util::fmt::Table;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() -> llsched::Result<()> {
+    // Flags only (no subcommand): prepend a dummy command for the parser.
+    let args = Args::parse(
+        std::iter::once("real_compute".to_string()).chain(std::env::args().skip(1)),
+    )
+    .unwrap_or_default();
+    let tasks: u64 = args.opt_parse("tasks", 32)?;
+    let iters: usize = args.opt_parse("iters", 2)?;
+    let lanes: u32 = args
+        .opt_parse("lanes", std::thread::available_parallelism().map(|n| n.get() as u32).unwrap_or(2))?;
+
+    let dir = llsched::runtime::find_artifacts_dir().ok_or_else(|| {
+        llsched::Error::Runtime("artifacts/ not found — run `make artifacts`".into())
+    })?;
+
+    println!("three-layer end-to-end: {tasks} tasks × {iters} module invocations, {lanes} lanes\n");
+    let mut table = Table::new(vec![
+        "artifact",
+        "tasks",
+        "wall",
+        "busy",
+        "efficiency",
+        "checksum fold",
+    ]);
+    for name in ["simstep_8x32x32", "simstep_4x64x64", "simstep_1x128x128"] {
+        let server = Arc::new(RuntimeServer::spawn(dir.join(format!("{name}.hlo.txt")))?);
+        // L3: the node-based script for one node with `lanes` cores.
+        let script = &build_scripts(tasks, 1, lanes, 1)[0];
+        let payload = Payload::Simulate { server: server.clone(), iters };
+        let t0 = Instant::now();
+        let rep = NodeExecutor::pinned().run(script, &payload)?;
+        assert_eq!(rep.tasks_failed, 0, "all tasks must succeed");
+        table.row(vec![
+            name.to_string(),
+            format!("{}", rep.tasks_run),
+            format!("{:.2}s", t0.elapsed().as_secs_f64()),
+            format!("{:.2}s", rep.busy_seconds),
+            format!("{:.0}%", rep.efficiency() * 100.0),
+            format!("{:#010x}", rep.checksum_fold),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("every task ran the AOT-compiled Pallas simulation through PJRT;");
+    println!("checksums are cross-checked against python in `cargo test`.");
+    Ok(())
+}

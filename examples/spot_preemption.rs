@@ -1,0 +1,45 @@
+//! Spot-job preemption demo (paper §I): node-based allocation of
+//! preemptable spot jobs releases resources much faster when an
+//! interactive job needs the machine.
+//!
+//! The scenario: a spot job soaks N nodes; at t=120 s an interactive user
+//! asks for the machine and the spot job is preempted. We measure the
+//! release latency (preemption request → all resources free) for
+//! core-based vs node-based spot allocation across scales.
+//!
+//! ```bash
+//! cargo run --release --example spot_preemption
+//! ```
+
+use llsched::config::Mode;
+use llsched::spot::measure_release;
+use llsched::util::fmt::{count, dur, Table};
+
+fn main() -> llsched::Result<()> {
+    println!("spot-job release latency after preemption (dedicated system)\n");
+    let mut table = Table::new(vec![
+        "nodes",
+        "core-based tasks",
+        "core-based release",
+        "node-based tasks",
+        "node-based release",
+        "speedup",
+    ]);
+    for nodes in [8u32, 32, 128, 512] {
+        let core = measure_release(Mode::MultiLevel, nodes, 64, 120.0, 11)?;
+        let node = measure_release(Mode::NodeBased, nodes, 64, 120.0, 11)?;
+        table.row(vec![
+            nodes.to_string(),
+            count(core.sched_tasks),
+            dur(core.release_latency),
+            count(node.sched_tasks),
+            dur(node.release_latency),
+            format!("{:.0}x", core.release_latency / node.release_latency.max(1e-9)),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("node-based spot jobs need 64x fewer preemption signals and cleanup");
+    println!("transactions, so the interactive job that triggered the preemption");
+    println!("gets its resources in seconds instead of minutes (paper §I).");
+    Ok(())
+}

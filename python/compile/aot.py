@@ -1,0 +1,94 @@
+"""AOT export: lower the L2 model to HLO *text* artifacts for the Rust
+runtime.
+
+HLO text (NOT `lowered.compile()` / serialized protos) is the interchange
+format: the image's xla_extension 0.5.1 rejects jax>=0.5 protos with
+64-bit instruction ids, while the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Also writes `expected_checksums.json`: reference checksums for a few
+(variant, task_id, invocation-count) combinations, which the Rust
+integration tests compare against PJRT results — the cross-language
+correctness oracle.
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile.model import initial_state, simulate
+
+# Shape variants exported as artifacts: (batch, h, w).
+VARIANTS = [
+    (8, 32, 32),   # "small"  — quick tasks, smoke tests
+    (4, 64, 64),   # "medium"
+    (1, 128, 128), # "large"  — one full VMEM-sized tile
+]
+
+# (variant index, task_id, chained invocations) for expected_checksums.
+CHECKSUM_CASES = [(0, 0, 1), (0, 7, 3), (1, 42, 2), (2, 3, 1)]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_variant(batch: int, h: int, w: int, out_dir: str) -> str:
+    spec = jax.ShapeDtypeStruct((batch, h, w), jnp.float32)
+    lowered = jax.jit(simulate).lower(spec)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"simstep_{batch}x{h}x{w}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    return path
+
+
+def expected_checksums() -> list[dict]:
+    """Reference checksums via the jitted model (no Pallas bypass: this is
+    the exact computation the artifact encodes)."""
+    out = []
+    for vi, task_id, invocations in CHECKSUM_CASES:
+        batch, h, w = VARIANTS[vi]
+        state = initial_state(batch, h, w, task_id)
+        checksum = None
+        for _ in range(invocations):
+            state, checksum = simulate(state)
+        out.append(
+            {
+                "artifact": f"simstep_{batch}x{h}x{w}",
+                "task_id": task_id,
+                "invocations": invocations,
+                "checksum": float(checksum[0, 0]),
+            }
+        )
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    for batch, h, w in VARIANTS:
+        path = export_variant(batch, h, w, args.out_dir)
+        size = os.path.getsize(path)
+        print(f"wrote {path} ({size} bytes)")
+    cs_path = os.path.join(args.out_dir, "expected_checksums.json")
+    with open(cs_path, "w") as f:
+        json.dump(expected_checksums(), f, indent=2)
+    print(f"wrote {cs_path}")
+
+
+if __name__ == "__main__":
+    main()

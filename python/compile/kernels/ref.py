@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for the Pallas kernels (the build-time correctness
+signal: pytest + hypothesis assert allclose between kernels and these)."""
+
+import jax.numpy as jnp
+
+from compile.kernels.simstep import ALPHA, BETA
+
+
+def simstep_ref(x: jnp.ndarray, alpha: float = ALPHA, beta: float = BETA) -> jnp.ndarray:
+    """Reference diffusion + cubic damping step, batched `[b, h, w]`."""
+    lap = (
+        jnp.roll(x, 1, axis=1)
+        + jnp.roll(x, -1, axis=1)
+        + jnp.roll(x, 1, axis=2)
+        + jnp.roll(x, -1, axis=2)
+        - 4.0 * x
+    )
+    y = x + alpha * lap
+    return y - beta * y**3
+
+
+def checksum_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Reference weighted-sum checksum; returns `[1, 1]`."""
+    h = x.shape[1]
+    weights = (1.0 + (jnp.arange(h, dtype=x.dtype) % 2.0)).reshape(1, h, 1)
+    return jnp.sum(x * weights).reshape(1, 1)
+
+
+def simulate_ref(x: jnp.ndarray, steps: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Reference for the L2 model: `steps` chained steps + checksum."""
+    for _ in range(steps):
+        x = simstep_ref(x)
+    return x, checksum_ref(x)

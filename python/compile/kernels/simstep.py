@@ -1,0 +1,72 @@
+"""L1 Pallas kernel: one step of the synthetic short-running simulation.
+
+The paper's benchmark tasks are "large scale simulations of short running
+jobs" — constant-time science payloads (MATLAB/Octave simulations on MIT
+SuperCloud). Our payload is a batched 2-D diffusion step fused with a
+cubic damping update over a periodic domain:
+
+    lap  = roll(x,+1,h) + roll(x,-1,h) + roll(x,+1,w) + roll(x,-1,w) - 4x
+    y    = x + alpha * lap
+    out  = y - beta * y**3
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the batch dimension is the
+Pallas grid; each program owns one (h, w) f32 tile in VMEM (<= 128x128 =
+64 KiB, far under the ~16 MiB VMEM budget even with double buffering),
+and the stencil + damping are fused so the tile makes exactly one
+HBM->VMEM->HBM round trip per step. `interpret=True` everywhere: the CPU
+PJRT client cannot execute Mosaic custom-calls, and interpret mode lowers
+to plain HLO that the Rust runtime loads directly.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Physics constants of the synthetic simulation (shared with ref.py).
+ALPHA = 0.05
+BETA = 0.01
+
+
+def _simstep_kernel(x_ref, o_ref, *, alpha: float, beta: float):
+    """One fused stencil + damping step over a single (1, h, w) block."""
+    x = x_ref[...]  # block shape (1, h, w): axis 1 = h, axis 2 = w
+    lap = (
+        jnp.roll(x, 1, axis=1)
+        + jnp.roll(x, -1, axis=1)
+        + jnp.roll(x, 1, axis=2)
+        + jnp.roll(x, -1, axis=2)
+        - 4.0 * x
+    )
+    y = x + alpha * lap
+    o_ref[...] = y - beta * y * y * y
+
+
+@functools.partial(jax.jit, static_argnames=())
+def simstep(x: jax.Array) -> jax.Array:
+    """Apply one simulation step to a batched state `[batch, h, w] f32`."""
+    batch, h, w = x.shape
+    return pl.pallas_call(
+        functools.partial(_simstep_kernel, alpha=ALPHA, beta=BETA),
+        out_shape=jax.ShapeDtypeStruct((batch, h, w), x.dtype),
+        grid=(batch,),
+        in_specs=[pl.BlockSpec((1, h, w), lambda b: (b, 0, 0))],
+        out_specs=pl.BlockSpec((1, h, w), lambda b: (b, 0, 0)),
+        interpret=True,
+    )(x)
+
+
+def vmem_bytes_per_program(h: int, w: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM footprint of one grid program (in + out tiles).
+
+    Used by the DESIGN.md roofline notes; interpret-mode wallclock is not
+    a TPU proxy, so we reason about footprint and arithmetic intensity.
+    """
+    return 2 * h * w * dtype_bytes
+
+
+def flops_per_element() -> int:
+    """FLOPs per element per step (4 adds + sub + axpy + cubic damping)."""
+    # lap: 4 add + 1 mul/sub chain = 5; y = x + a*lap: 2; y^3 damping: 3.
+    return 10

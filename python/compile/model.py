@@ -1,0 +1,45 @@
+"""L2 JAX model: the compute graph of one short-running simulation task.
+
+`simulate` chains SCAN_STEPS kernel steps with `lax.scan` (no unrolling —
+one fused HLO while-loop) and finishes with the checksum kernel. This is
+the function `aot.py` lowers once per shape variant; the Rust runtime
+invokes the compiled module repeatedly to scale task duration.
+"""
+
+import jax
+import numpy as np
+
+from compile.kernels.checksum import checksum
+from compile.kernels.simstep import simstep
+
+# Inner steps per module invocation. Rust chains invocations for longer
+# tasks, so this only sets the granularity of one PJRT execute call.
+SCAN_STEPS = 4
+
+
+def simulate(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Run SCAN_STEPS simulation steps; return `(state, checksum)`."""
+
+    def body(state, _):
+        return simstep(state), None
+
+    final, _ = jax.lax.scan(body, x, None, length=SCAN_STEPS)
+    return final, checksum(final)
+
+
+def initial_state(batch: int, h: int, w: int, task_id: int) -> np.ndarray:
+    """Deterministic per-task initial state.
+
+    Mirrors `rust/src/runtime/server.rs::initial_state` bit-for-bit: a
+    SplitMix-style integer hash of `(element_index, task_id)` with u64
+    wraparound, mapped to `[0, 1)` f32 (numpy, not jnp: JAX's default
+    32-bit ints would break the wraparound semantics). Cross-language
+    checksum tests depend on this.
+    """
+    n = batch * h * w
+    with np.errstate(over="ignore"):
+        i = np.arange(n, dtype=np.uint64)
+        x = i + np.uint64(task_id) * np.uint64(7919)
+        h64 = (x * np.uint64(0x9E3779B97F4A7C15)) >> np.uint64(40)
+    vals = h64.astype(np.float32) / np.float32(1 << 24)
+    return vals.reshape(batch, h, w)

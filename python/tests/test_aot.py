@@ -1,0 +1,73 @@
+"""AOT path: HLO-text export sanity and the cross-language checksum
+oracle file."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot
+from compile.model import initial_state, simulate
+
+
+@pytest.fixture(scope="module")
+def out_dir(tmp_path_factory):
+    d = tmp_path_factory.mktemp("artifacts")
+    return str(d)
+
+
+class TestExport:
+    def test_variant_exports_hlo_text(self, out_dir):
+        path = aot.export_variant(2, 8, 8, out_dir)
+        assert path.endswith("simstep_2x8x8.hlo.txt")
+        text = open(path).read()
+        assert "ENTRY" in text, "must be HLO text, not a proto"
+        assert "HloModule" in text
+        # Tuple-returning module: (state, checksum).
+        assert "tuple" in text.lower()
+
+    def test_all_variants_have_distinct_shapes(self, out_dir):
+        paths = [aot.export_variant(b, h, w, out_dir) for b, h, w in aot.VARIANTS]
+        assert len(set(paths)) == len(aot.VARIANTS)
+        for (b, h, w), p in zip(aot.VARIANTS, paths):
+            assert f"{b}x{h}x{w}" in p
+            assert os.path.getsize(p) > 500
+
+    def test_hlo_text_mentions_shape(self, out_dir):
+        path = aot.export_variant(2, 8, 8, out_dir)
+        text = open(path).read()
+        assert "f32[2,8,8]" in text
+
+
+class TestChecksumOracle:
+    def test_cases_cover_every_variant(self):
+        cases = aot.expected_checksums()
+        artifacts = {c["artifact"] for c in cases}
+        for b, h, w in aot.VARIANTS:
+            assert f"simstep_{b}x{h}x{w}" in artifacts
+
+    def test_checksums_reproducible(self):
+        a = aot.expected_checksums()
+        b = aot.expected_checksums()
+        for x, y in zip(a, b):
+            assert x == y
+
+    def test_checksum_matches_direct_model_run(self):
+        case = aot.expected_checksums()[0]
+        b, h, w = aot.VARIANTS[0]
+        state = initial_state(b, h, w, case["task_id"])
+        cs = None
+        for _ in range(case["invocations"]):
+            state, cs = simulate(state)
+        assert abs(float(cs[0, 0]) - case["checksum"]) < 1e-5
+
+    def test_json_roundtrip(self, out_dir):
+        cases = aot.expected_checksums()
+        p = os.path.join(out_dir, "expected_checksums.json")
+        with open(p, "w") as f:
+            json.dump(cases, f)
+        loaded = json.load(open(p))
+        assert loaded == cases
+        for c in loaded:
+            assert np.isfinite(c["checksum"])

@@ -1,0 +1,141 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes; every case asserts allclose between the
+interpret-mode Pallas kernel and ref.py — the core build-time correctness
+signal for the artifacts the Rust runtime executes.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.checksum import checksum
+from compile.kernels.ref import checksum_ref, simstep_ref, simulate_ref
+from compile.kernels.simstep import (
+    ALPHA,
+    flops_per_element,
+    simstep,
+    vmem_bytes_per_program,
+)
+
+shapes = st.tuples(
+    st.integers(min_value=1, max_value=4),   # batch
+    st.integers(min_value=2, max_value=24),  # h
+    st.integers(min_value=2, max_value=24),  # w
+)
+
+
+def rand_state(shape, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(-1.0, 1.0, size=shape).astype(np.float32))
+
+
+class TestSimstepKernel:
+    @settings(max_examples=25, deadline=None)
+    @given(shape=shapes, seed=st.integers(min_value=0, max_value=2**31))
+    def test_matches_reference(self, shape, seed):
+        x = rand_state(shape, seed)
+        got = simstep(x)
+        want = simstep_ref(x)
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+    def test_shape_and_dtype_preserved(self):
+        x = rand_state((3, 8, 16), 0)
+        y = simstep(x)
+        assert y.shape == x.shape
+        assert y.dtype == jnp.float32
+
+    def test_constant_field_stays_constant_modulo_damping(self):
+        # Uniform field: laplacian is zero, only damping acts.
+        x = jnp.full((1, 8, 8), 0.5, dtype=jnp.float32)
+        y = simstep(x)
+        expected = 0.5 - 0.01 * 0.5**3
+        np.testing.assert_allclose(y, expected, rtol=1e-6)
+
+    def test_translation_equivariance(self):
+        # Periodic stencil: rolling the input rolls the output.
+        x = rand_state((1, 12, 12), 3)
+        rolled = jnp.roll(x, 5, axis=1)
+        np.testing.assert_allclose(
+            simstep(rolled), jnp.roll(simstep(x), 5, axis=1), rtol=1e-6, atol=1e-6
+        )
+
+    def test_batch_elements_independent(self):
+        x = rand_state((4, 8, 8), 4)
+        full = simstep(x)
+        for b in range(4):
+            single = simstep(x[b : b + 1])
+            np.testing.assert_allclose(full[b : b + 1], single, rtol=1e-6, atol=1e-6)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2**31))
+    def test_diffusion_conserves_mass_without_damping(self, seed):
+        # With beta=0, periodic diffusion conserves the field sum.
+        x = rand_state((2, 10, 10), seed)
+        lap_only = simstep_ref(x, alpha=ALPHA, beta=0.0)
+        np.testing.assert_allclose(
+            jnp.sum(lap_only), jnp.sum(x), rtol=1e-4, atol=1e-4
+        )
+
+    def test_stability_many_steps(self):
+        # Repeated application must not blow up (damping bounds it).
+        x = rand_state((1, 16, 16), 9)
+        for _ in range(50):
+            x = simstep(x)
+        assert bool(jnp.all(jnp.isfinite(x)))
+        assert float(jnp.max(jnp.abs(x))) < 10.0
+
+
+class TestChecksumKernel:
+    @settings(max_examples=25, deadline=None)
+    @given(shape=shapes, seed=st.integers(min_value=0, max_value=2**31))
+    def test_matches_reference(self, shape, seed):
+        x = rand_state(shape, seed)
+        got = checksum(x)
+        want = checksum_ref(x)
+        assert got.shape == (1, 1)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_zero_state(self):
+        x = jnp.zeros((3, 8, 8), dtype=jnp.float32)
+        np.testing.assert_allclose(checksum(x), 0.0, atol=1e-7)
+
+    def test_linearity(self):
+        x = rand_state((2, 8, 8), 11)
+        np.testing.assert_allclose(
+            checksum(2.0 * x), 2.0 * checksum(x), rtol=1e-5, atol=1e-5
+        )
+
+    def test_batch_additivity(self):
+        x = rand_state((4, 6, 6), 12)
+        total = checksum(x)
+        parts = sum(float(checksum(x[b : b + 1])[0, 0]) for b in range(4))
+        np.testing.assert_allclose(float(total[0, 0]), parts, rtol=1e-5, atol=1e-5)
+
+    def test_weights_not_uniform(self):
+        # Moving mass between rows with different weights changes the sum.
+        x = jnp.zeros((1, 4, 4), dtype=jnp.float32).at[0, 0, 0].set(1.0)
+        y = jnp.zeros((1, 4, 4), dtype=jnp.float32).at[0, 1, 0].set(1.0)
+        assert abs(float(checksum(x)[0, 0]) - float(checksum(y)[0, 0])) > 0.5
+
+
+class TestRooflineEstimates:
+    def test_vmem_footprint_within_budget(self):
+        # Largest exported tile: 128x128 f32 in+out = 128 KiB << 16 MiB.
+        assert vmem_bytes_per_program(128, 128) == 2 * 128 * 128 * 4
+        assert vmem_bytes_per_program(128, 128) < 16 * 1024 * 1024 // 4
+
+    def test_flops_estimate_positive(self):
+        assert flops_per_element() >= 8
+
+
+@pytest.mark.parametrize("steps", [1, 3])
+def test_simulate_ref_chains_steps(steps):
+    x = rand_state((2, 8, 8), 21)
+    state, cs = simulate_ref(x, steps)
+    expect = x
+    for _ in range(steps):
+        expect = simstep_ref(expect)
+    np.testing.assert_allclose(state, expect, rtol=1e-6)
+    np.testing.assert_allclose(cs, checksum_ref(expect), rtol=1e-6)

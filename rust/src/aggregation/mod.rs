@@ -1,0 +1,57 @@
+//! Task aggregation — the paper's contribution.
+//!
+//! A user workload is a set of *compute tasks*. An aggregator decides how
+//! they are packed into *scheduling tasks*, which is what the scheduler
+//! places, tracks and cleans up:
+//!
+//! * [`per_task::PerTask`] — 1 scheduling task per compute task (naive
+//!   baseline; what a plain array job does),
+//! * [`multi_level::MultiLevel`] — 1 scheduling task per physical core;
+//!   all compute tasks bound for that core run in a loop inside it
+//!   (LLMapReduce MIMO, the paper's "M*" comparison point),
+//! * [`node_based::NodeBased`] — 1 scheduling task per *node*; all compute
+//!   tasks bound for the node's cores are wrapped in a generated
+//!   execution script with explicit per-process core pinning and thread
+//!   counts (the paper's "N*" contribution, a.k.a. triples mode).
+//!
+//! The aggregation is explicit and algorithmic ("because this aggregation
+//! is done explicitly and algorithmically, we can design how we want to
+//! manage the compute tasks" — §II), so the same plans drive both the DES
+//! (virtual time) and the real executor (actual processes, real pinning).
+
+pub mod multi_level;
+pub mod node_based;
+pub mod per_task;
+pub mod plan;
+pub mod script;
+pub mod triples;
+
+pub use multi_level::MultiLevel;
+pub use node_based::NodeBased;
+pub use per_task::PerTask;
+pub use plan::{Aggregator, ClusterShape, Workload};
+pub use script::NodeScript;
+pub use triples::Triple;
+
+use crate::config::Mode;
+
+/// Construct the aggregator for a mode.
+pub fn for_mode(mode: Mode) -> Box<dyn Aggregator> {
+    match mode {
+        Mode::PerTask => Box::new(PerTask),
+        Mode::MultiLevel => Box::new(MultiLevel),
+        Mode::NodeBased => Box::new(NodeBased::default()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factory_maps_modes() {
+        assert_eq!(for_mode(Mode::PerTask).mode(), Mode::PerTask);
+        assert_eq!(for_mode(Mode::MultiLevel).mode(), Mode::MultiLevel);
+        assert_eq!(for_mode(Mode::NodeBased).mode(), Mode::NodeBased);
+    }
+}

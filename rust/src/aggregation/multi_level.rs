@@ -1,0 +1,118 @@
+//! Multi-level scheduling (LLMapReduce MIMO) — the paper's comparison
+//! point, "M*".
+//!
+//! "Aggregates all the compute tasks to be executed on the same physical
+//! core as a single scheduling task by packing all individual compute
+//! tasks in a loop" (§II). The scheduler therefore sees one scheduling
+//! task per *processor*: P = nodes × cores_per_node tasks (Table II:
+//! 2048 … 32768).
+
+use crate::aggregation::plan::{split_even, Aggregator, ClusterShape, Workload};
+use crate::config::Mode;
+use crate::error::Result;
+use crate::scheduler::job::{ComputeBatch, JobSpec, ResourceRequest, SchedTaskSpec};
+
+/// The per-core aggregator.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct MultiLevel;
+
+impl Aggregator for MultiLevel {
+    fn mode(&self) -> Mode {
+        Mode::MultiLevel
+    }
+
+    fn plan(&self, name: &str, workload: &Workload, shape: &ClusterShape) -> Result<JobSpec> {
+        workload.validate()?;
+        let processors = shape.processors();
+        let counts = split_even(workload.count(), processors);
+        let mut tasks = Vec::with_capacity(processors as usize);
+        let mut next = 0u64; // contiguous block assignment, like MIMO's loop
+        for &n in &counts {
+            if n == 0 {
+                continue; // fewer tasks than processors: idle cores get none
+            }
+            let duration: f64 = match workload {
+                Workload::Uniform { duration, .. } => n as f64 * duration,
+                Workload::Explicit(v) => {
+                    v[next as usize..(next + n) as usize].iter().sum()
+                }
+            };
+            let each = duration / n as f64;
+            tasks.push(SchedTaskSpec {
+                request: ResourceRequest::Cores {
+                    cores: 1,
+                    mem_mib: shape.task_mem_mib,
+                },
+                duration,
+                batch: ComputeBatch { count: n, each },
+                lanes: 1,
+            });
+            next += n;
+        }
+        Ok(JobSpec {
+            name: name.to_string(),
+            tasks,
+            reservation: None,
+            priority: 0,
+            preemptable: false,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shape(nodes: u32) -> ClusterShape {
+        ClusterShape { nodes, cores_per_node: 64, task_mem_mib: 512 }
+    }
+
+    #[test]
+    fn one_sched_task_per_processor() {
+        // Paper Table I long config on 32 nodes: 2048 processors × 4 tasks.
+        let w = Workload::paper(2048, 60.0, 240.0);
+        let job = MultiLevel.plan("mimo", &w, &shape(32)).unwrap();
+        assert_eq!(job.array_size(), 2048);
+        assert_eq!(job.total_compute_tasks(), 8192);
+        for t in &job.tasks {
+            assert_eq!(t.duration, 240.0, "each core does T_job of work");
+            assert_eq!(t.batch.count, 4);
+        }
+    }
+
+    #[test]
+    fn rapid_config_packs_240_per_core() {
+        let w = Workload::paper(2048, 1.0, 240.0);
+        let job = MultiLevel.plan("mimo", &w, &shape(32)).unwrap();
+        assert_eq!(job.array_size(), 2048);
+        assert!(job.tasks.iter().all(|t| t.batch.count == 240));
+        assert!(job.tasks.iter().all(|t| (t.duration - 240.0).abs() < 1e-9));
+    }
+
+    #[test]
+    fn work_is_conserved() {
+        let w = Workload::Uniform { count: 10_000, duration: 3.0 };
+        let job = MultiLevel.plan("mimo", &w, &shape(2)).unwrap();
+        let total: f64 = job.tasks.iter().map(|t| t.duration).sum();
+        assert!((total - 30_000.0).abs() < 1e-6);
+        assert_eq!(job.total_compute_tasks(), 10_000);
+    }
+
+    #[test]
+    fn explicit_workload_contiguous_blocks() {
+        let durs: Vec<f64> = (1..=8).map(|i| i as f64).collect();
+        let tiny = ClusterShape { nodes: 1, cores_per_node: 4, task_mem_mib: 0 };
+        let job = MultiLevel.plan("mimo", &Workload::Explicit(durs), &tiny).unwrap();
+        assert_eq!(job.array_size(), 4);
+        // blocks [1,2], [3,4], [5,6], [7,8] → sums 3, 7, 11, 15
+        let sums: Vec<f64> = job.tasks.iter().map(|t| t.duration).collect();
+        assert_eq!(sums, vec![3.0, 7.0, 11.0, 15.0]);
+    }
+
+    #[test]
+    fn fewer_tasks_than_processors_drops_empty_slots() {
+        let w = Workload::Uniform { count: 10, duration: 1.0 };
+        let job = MultiLevel.plan("mimo", &w, &shape(32)).unwrap();
+        assert_eq!(job.array_size(), 10, "only non-empty scheduling tasks");
+    }
+}

@@ -1,0 +1,186 @@
+//! Node-based scheduling ("triples mode") — the paper's contribution, "N*".
+//!
+//! All compute tasks bound for one node become a *single* scheduling task
+//! requesting the whole node; a generated execution script (see
+//! [`crate::aggregation::script`]) runs one pinned worker loop per core.
+//! The scheduler therefore sees `nodes` scheduling tasks instead of
+//! `nodes × cores` (multi-level) or `total_tasks` (naive): at the paper's
+//! largest scale this is 512 instead of 32768 or 7.9 M.
+
+use crate::aggregation::plan::{split_even, Aggregator, ClusterShape, Workload};
+use crate::aggregation::script::{build_scripts, NodeScript};
+use crate::aggregation::triples::Triple;
+use crate::config::Mode;
+use crate::error::Result;
+use crate::scheduler::job::{ComputeBatch, JobSpec, ResourceRequest, SchedTaskSpec};
+
+/// The per-node aggregator.
+#[derive(Debug, Clone, Copy)]
+pub struct NodeBased {
+    /// Threads per worker process (triples-mode third knob).
+    pub threads_per_process: u32,
+}
+
+impl Default for NodeBased {
+    fn default() -> Self {
+        NodeBased { threads_per_process: 1 }
+    }
+}
+
+impl NodeBased {
+    /// Construct from a triple; `threads_per_process` is carried into the
+    /// generated scripts.
+    pub fn from_triple(t: &Triple) -> NodeBased {
+        NodeBased { threads_per_process: t.threads_per_process }
+    }
+
+    /// Generate the node scripts for a workload (exposed for the launch
+    /// tools, the real executor and the examples).
+    pub fn scripts(&self, workload: &Workload, shape: &ClusterShape) -> Vec<NodeScript> {
+        build_scripts(
+            workload.count(),
+            shape.nodes,
+            shape.cores_per_node,
+            self.threads_per_process,
+        )
+    }
+}
+
+impl Aggregator for NodeBased {
+    fn mode(&self) -> Mode {
+        Mode::NodeBased
+    }
+
+    fn plan(&self, name: &str, workload: &Workload, shape: &ClusterShape) -> Result<JobSpec> {
+        workload.validate()?;
+        let per_node = split_even(workload.count(), shape.nodes as u64);
+        let mut tasks = Vec::with_capacity(shape.nodes as usize);
+        let mut next = 0u64;
+        for &n_tasks in &per_node {
+            if n_tasks == 0 {
+                continue;
+            }
+            // The node task occupies the node until its slowest core lane
+            // drains: duration = max over lanes of the lane's serial work.
+            let lane_counts = split_even(n_tasks, shape.cores_per_node as u64);
+            let duration = match workload {
+                Workload::Uniform { duration, .. } => {
+                    lane_counts.iter().copied().max().unwrap_or(0) as f64 * duration
+                }
+                Workload::Explicit(v) => {
+                    // Contiguous assignment lane by lane, mirroring
+                    // build_scripts.
+                    let mut lane_start = next;
+                    let mut max_lane = 0.0f64;
+                    for &c in &lane_counts {
+                        let sum: f64 =
+                            v[lane_start as usize..(lane_start + c) as usize].iter().sum();
+                        max_lane = max_lane.max(sum);
+                        lane_start += c;
+                    }
+                    max_lane
+                }
+            };
+            let each = if n_tasks > 0 {
+                workload_mean(workload, next, n_tasks)
+            } else {
+                0.0
+            };
+            tasks.push(SchedTaskSpec {
+                request: ResourceRequest::WholeNode,
+                duration,
+                batch: ComputeBatch {
+                    count: n_tasks / shape.cores_per_node as u64,
+                    each,
+                },
+                lanes: shape.cores_per_node,
+            });
+            next += n_tasks;
+        }
+        Ok(JobSpec {
+            name: name.to_string(),
+            tasks,
+            reservation: None,
+            priority: 0,
+            preemptable: false,
+        })
+    }
+}
+
+fn workload_mean(w: &Workload, start: u64, count: u64) -> f64 {
+    match w {
+        Workload::Uniform { duration, .. } => *duration,
+        Workload::Explicit(v) => {
+            v[start as usize..(start + count) as usize].iter().sum::<f64>() / count as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shape(nodes: u32) -> ClusterShape {
+        ClusterShape { nodes, cores_per_node: 64, task_mem_mib: 512 }
+    }
+
+    #[test]
+    fn one_sched_task_per_node() {
+        // Paper: 512 nodes, rapid tasks → 512 scheduling tasks, not 7.9 M.
+        let w = Workload::paper(32_768, 1.0, 240.0);
+        let job = NodeBased::default().plan("triples", &w, &shape(512)).unwrap();
+        assert_eq!(job.array_size(), 512);
+        assert_eq!(job.total_compute_tasks(), 512 * 64 * 240);
+        for t in &job.tasks {
+            assert_eq!(t.request, ResourceRequest::WholeNode);
+            assert!((t.duration - 240.0).abs() < 1e-9, "balanced lanes run T_job");
+            assert_eq!(t.lanes, 64);
+        }
+    }
+
+    #[test]
+    fn duration_is_max_lane_not_sum() {
+        // 65 tasks of 10 s on one 64-core node: one lane gets 2 tasks.
+        let w = Workload::Uniform { count: 65, duration: 10.0 };
+        let job = NodeBased::default().plan("t", &w, &shape(1)).unwrap();
+        assert_eq!(job.array_size(), 1);
+        assert_eq!(job.tasks[0].duration, 20.0);
+    }
+
+    #[test]
+    fn explicit_durations_use_lane_assignment() {
+        // 4-core node, 8 tasks: lanes get [10,1],[1,1],[1,1],[1,1] → max 11.
+        let tiny = ClusterShape { nodes: 1, cores_per_node: 4, task_mem_mib: 0 };
+        let w = Workload::Explicit(vec![10.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0]);
+        let job = NodeBased::default().plan("t", &w, &tiny).unwrap();
+        assert_eq!(job.tasks[0].duration, 11.0);
+    }
+
+    #[test]
+    fn scripts_match_plan() {
+        let w = Workload::paper(2048, 5.0, 240.0);
+        let nb = NodeBased::default();
+        let job = nb.plan("t", &w, &shape(32)).unwrap();
+        let scripts = nb.scripts(&w, &shape(32));
+        assert_eq!(scripts.len(), job.tasks.len());
+        let total: u64 = scripts.iter().map(|s| s.total_tasks()).sum();
+        assert_eq!(total, w.count());
+    }
+
+    #[test]
+    fn threads_from_triple() {
+        let t = Triple { nodes: 4, processes_per_node: 16, threads_per_process: 4 };
+        let nb = NodeBased::from_triple(&t);
+        let w = Workload::Uniform { count: 100, duration: 1.0 };
+        let scripts = nb.scripts(&w, &shape(4));
+        assert!(scripts.iter().all(|s| s.threads_per_process == 4));
+    }
+
+    #[test]
+    fn fewer_tasks_than_nodes() {
+        let w = Workload::Uniform { count: 3, duration: 2.0 };
+        let job = NodeBased::default().plan("t", &w, &shape(8)).unwrap();
+        assert_eq!(job.array_size(), 3, "empty nodes get no scheduling task");
+        assert!(job.tasks.iter().all(|t| t.duration == 2.0));
+    }
+}

@@ -1,0 +1,83 @@
+//! Naive baseline: one scheduling task per compute task.
+//!
+//! This is what a plain Slurm array job does and the reason short-running
+//! jobs are "inefficient due to the overhead associated with the life
+//! cycles of the jobs" (paper §I). With 1 s tasks at 512-node scale this
+//! means ~7.9 M scheduling tasks — the ablation benches show the scheduler
+//! drowning long before that.
+
+use crate::aggregation::plan::{Aggregator, ClusterShape, Workload};
+use crate::config::Mode;
+use crate::error::Result;
+use crate::scheduler::job::{ComputeBatch, JobSpec, ResourceRequest, SchedTaskSpec};
+
+/// The 1:1 aggregator.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct PerTask;
+
+impl Aggregator for PerTask {
+    fn mode(&self) -> Mode {
+        Mode::PerTask
+    }
+
+    fn plan(&self, name: &str, workload: &Workload, shape: &ClusterShape) -> Result<JobSpec> {
+        workload.validate()?;
+        let tasks = (0..workload.count())
+            .map(|i| {
+                let d = workload.duration(i);
+                SchedTaskSpec {
+                    request: ResourceRequest::Cores {
+                        cores: 1,
+                        mem_mib: shape.task_mem_mib,
+                    },
+                    duration: d,
+                    batch: ComputeBatch { count: 1, each: d },
+                    lanes: 1,
+                }
+            })
+            .collect();
+        Ok(JobSpec {
+            name: name.to_string(),
+            tasks,
+            reservation: None,
+            priority: 0,
+            preemptable: false,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shape() -> ClusterShape {
+        ClusterShape { nodes: 2, cores_per_node: 64, task_mem_mib: 512 }
+    }
+
+    #[test]
+    fn one_sched_task_per_compute_task() {
+        let w = Workload::Uniform { count: 100, duration: 5.0 };
+        let job = PerTask.plan("naive", &w, &shape()).unwrap();
+        assert_eq!(job.array_size(), 100);
+        assert_eq!(job.total_compute_tasks(), 100);
+        for t in &job.tasks {
+            assert_eq!(t.duration, 5.0);
+            assert_eq!(t.request, ResourceRequest::Cores { cores: 1, mem_mib: 512 });
+        }
+    }
+
+    #[test]
+    fn explicit_durations_pass_through() {
+        let w = Workload::Explicit(vec![1.0, 2.0, 4.0]);
+        let job = PerTask.plan("naive", &w, &shape()).unwrap();
+        let durs: Vec<f64> = job.tasks.iter().map(|t| t.duration).collect();
+        assert_eq!(durs, vec![1.0, 2.0, 4.0]);
+    }
+
+    #[test]
+    fn empty_rejected() {
+        assert!(PerTask
+            .plan("naive", &Workload::Explicit(vec![]), &shape())
+            .is_err());
+    }
+}

@@ -1,0 +1,153 @@
+//! Workload descriptions and the [`Aggregator`] interface.
+
+use crate::config::Mode;
+use crate::error::{Error, Result};
+use crate::scheduler::job::JobSpec;
+
+/// The compute tasks a user wants run.
+#[derive(Debug, Clone)]
+pub enum Workload {
+    /// `count` identical tasks of `duration` seconds — the paper's
+    /// constant-time benchmark tasks. Kept symbolic so 8-million-task
+    /// workloads never materialize per-task state.
+    Uniform { count: u64, duration: f64 },
+    /// Explicit per-task durations (traces, real workloads).
+    Explicit(Vec<f64>),
+}
+
+impl Workload {
+    /// Number of compute tasks.
+    pub fn count(&self) -> u64 {
+        match self {
+            Workload::Uniform { count, .. } => *count,
+            Workload::Explicit(v) => v.len() as u64,
+        }
+    }
+
+    /// Total serial work, seconds.
+    pub fn total_work(&self) -> f64 {
+        match self {
+            Workload::Uniform { count, duration } => *count as f64 * duration,
+            Workload::Explicit(v) => v.iter().sum(),
+        }
+    }
+
+    /// Duration of task `i`.
+    pub fn duration(&self, i: u64) -> f64 {
+        match self {
+            Workload::Uniform { duration, .. } => *duration,
+            Workload::Explicit(v) => v[i as usize],
+        }
+    }
+
+    /// The paper's Table I/II workload: fill `processors` cores with
+    /// `t_job / task_time` tasks each.
+    pub fn paper(processors: u64, task_time: f64, t_job: f64) -> Workload {
+        let per_proc = (t_job / task_time).round() as u64;
+        Workload::Uniform {
+            count: processors * per_proc,
+            duration: task_time,
+        }
+    }
+
+    /// Validate.
+    pub fn validate(&self) -> Result<()> {
+        if self.count() == 0 {
+            return Err(Error::Infeasible("empty workload".into()));
+        }
+        match self {
+            Workload::Uniform { duration, .. } if *duration <= 0.0 => {
+                Err(Error::Infeasible("non-positive task duration".into()))
+            }
+            Workload::Explicit(v) if v.iter().any(|d| *d <= 0.0) => {
+                Err(Error::Infeasible("non-positive task duration".into()))
+            }
+            _ => Ok(()),
+        }
+    }
+}
+
+/// The slice of machine the job will be packed onto.
+#[derive(Debug, Clone, Copy)]
+pub struct ClusterShape {
+    pub nodes: u32,
+    pub cores_per_node: u32,
+    /// Memory per compute task, MiB (per-core requests carry it; node
+    /// requests take the whole node's memory — the paper notes node-based
+    /// scheduling "allows for better usage of memory").
+    pub task_mem_mib: u64,
+}
+
+impl ClusterShape {
+    pub fn processors(&self) -> u64 {
+        self.nodes as u64 * self.cores_per_node as u64
+    }
+}
+
+/// An aggregation strategy: maps a workload onto scheduling tasks.
+pub trait Aggregator {
+    /// Which mode this implements.
+    fn mode(&self) -> Mode;
+
+    /// Build the job. The returned spec's scheduling tasks carry both the
+    /// DES representation (durations, batch counts) and — for node-based —
+    /// the generated execution script.
+    fn plan(&self, name: &str, workload: &Workload, shape: &ClusterShape) -> Result<JobSpec>;
+}
+
+/// Split `count` items as evenly as possible over `bins` bins
+/// (first `count % bins` bins get one extra). Returns per-bin counts.
+pub fn split_even(count: u64, bins: u64) -> Vec<u64> {
+    assert!(bins > 0);
+    let base = count / bins;
+    let extra = count % bins;
+    (0..bins)
+        .map(|i| base + if i < extra { 1 } else { 0 })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_workload_counts() {
+        // 512 nodes × 64 cores, 1 s tasks, 240 s per processor.
+        let w = Workload::paper(32_768, 1.0, 240.0);
+        assert_eq!(w.count(), 7_864_320);
+        assert_eq!(w.total_work(), 7_864_320.0);
+        assert_eq!(w.duration(123), 1.0);
+    }
+
+    #[test]
+    fn explicit_workload() {
+        let w = Workload::Explicit(vec![1.0, 2.0, 3.0]);
+        assert_eq!(w.count(), 3);
+        assert_eq!(w.total_work(), 6.0);
+        assert_eq!(w.duration(2), 3.0);
+    }
+
+    #[test]
+    fn validation() {
+        assert!(Workload::Uniform { count: 0, duration: 1.0 }.validate().is_err());
+        assert!(Workload::Uniform { count: 1, duration: 0.0 }.validate().is_err());
+        assert!(Workload::Explicit(vec![1.0, -2.0]).validate().is_err());
+        assert!(Workload::Explicit(vec![]).validate().is_err());
+        assert!(Workload::Uniform { count: 5, duration: 2.0 }.validate().is_ok());
+    }
+
+    #[test]
+    fn split_even_distributes_remainder() {
+        assert_eq!(split_even(10, 3), vec![4, 3, 3]);
+        assert_eq!(split_even(9, 3), vec![3, 3, 3]);
+        assert_eq!(split_even(2, 4), vec![1, 1, 0, 0]);
+        let s = split_even(7_864_320, 32_768);
+        assert!(s.iter().all(|&c| c == 240));
+    }
+
+    #[test]
+    fn shape_processors() {
+        let s = ClusterShape { nodes: 512, cores_per_node: 64, task_mem_mib: 512 };
+        assert_eq!(s.processors(), 32_768);
+    }
+}

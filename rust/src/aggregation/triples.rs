@@ -1,0 +1,138 @@
+//! The triples-mode resource specification.
+//!
+//! Node-based scheduling is "also termed 'triples mode'" (§I): the user
+//! gives `(n_nodes, processes_per_node, threads_per_process)` and the
+//! launch tools translate it into whole-node scheduling tasks with
+//! explicit affinity. This module is the typed form of that triple.
+
+use crate::error::{Error, Result};
+
+/// `(nodes, ppn, tpp)` — the LLsub/LLMapReduce triples-mode argument.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Triple {
+    /// Number of whole nodes to allocate.
+    pub nodes: u32,
+    /// Processes (compute-task workers) per node.
+    pub processes_per_node: u32,
+    /// Threads each process may use.
+    pub threads_per_process: u32,
+}
+
+impl Triple {
+    /// Parse the `[N,P,T]` / `N,P,T` / `NxPxT` forms used on the CLI.
+    pub fn parse(s: &str) -> Result<Triple> {
+        let cleaned = s.trim().trim_start_matches('[').trim_end_matches(']');
+        let parts: Vec<&str> = if cleaned.contains(',') {
+            cleaned.split(',').collect()
+        } else {
+            cleaned.split('x').collect()
+        };
+        if parts.len() != 3 {
+            return Err(Error::Config(format!(
+                "triple {s:?}: expected three comma- or x-separated fields"
+            )));
+        }
+        let nums: Result<Vec<u32>> = parts
+            .iter()
+            .map(|p| {
+                p.trim()
+                    .parse::<u32>()
+                    .map_err(|_| Error::Config(format!("triple {s:?}: bad number {p:?}")))
+            })
+            .collect();
+        let n = nums?;
+        let t = Triple {
+            nodes: n[0],
+            processes_per_node: n[1],
+            threads_per_process: n[2],
+        };
+        t.validate(u32::MAX)?;
+        Ok(t)
+    }
+
+    /// Check the triple fits a node with `cores_per_node` cores
+    /// (ppn × tpp must not oversubscribe the node).
+    pub fn validate(&self, cores_per_node: u32) -> Result<()> {
+        if self.nodes == 0 || self.processes_per_node == 0 || self.threads_per_process == 0 {
+            return Err(Error::Config("triple fields must be positive".into()));
+        }
+        let per_node = self.processes_per_node as u64 * self.threads_per_process as u64;
+        if per_node > cores_per_node as u64 {
+            return Err(Error::Config(format!(
+                "triple oversubscribes node: {} procs × {} threads > {} cores",
+                self.processes_per_node, self.threads_per_process, cores_per_node
+            )));
+        }
+        Ok(())
+    }
+
+    /// Total worker processes across the allocation.
+    pub fn total_processes(&self) -> u64 {
+        self.nodes as u64 * self.processes_per_node as u64
+    }
+
+    /// The canonical triples mode for the paper's benchmarks: fill every
+    /// core with a single-threaded worker.
+    pub fn fill(nodes: u32, cores_per_node: u32) -> Triple {
+        Triple {
+            nodes,
+            processes_per_node: cores_per_node,
+            threads_per_process: 1,
+        }
+    }
+}
+
+impl std::fmt::Display for Triple {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "[{},{},{}]",
+            self.nodes, self.processes_per_node, self.threads_per_process
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_forms() {
+        let want = Triple { nodes: 32, processes_per_node: 64, threads_per_process: 1 };
+        assert_eq!(Triple::parse("[32,64,1]").unwrap(), want);
+        assert_eq!(Triple::parse("32,64,1").unwrap(), want);
+        assert_eq!(Triple::parse("32x64x1").unwrap(), want);
+        assert_eq!(Triple::parse(" [ 32 , 64 , 1 ] ").unwrap(), want);
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!(Triple::parse("32,64").is_err());
+        assert!(Triple::parse("a,b,c").is_err());
+        assert!(Triple::parse("0,1,1").is_err());
+        assert!(Triple::parse("").is_err());
+    }
+
+    #[test]
+    fn oversubscription_rejected() {
+        let t = Triple { nodes: 1, processes_per_node: 32, threads_per_process: 4 };
+        assert!(t.validate(64).is_err());
+        assert!(t.validate(128).is_ok());
+    }
+
+    #[test]
+    fn fill_and_totals() {
+        let t = Triple::fill(512, 64);
+        assert_eq!(t.total_processes(), 32_768);
+        assert_eq!(t.to_string(), "[512,64,1]");
+        t.validate(64).unwrap();
+    }
+
+    #[test]
+    fn threads_trade_against_processes() {
+        // 16 procs × 4 threads fills a 64-core node exactly.
+        let t = Triple { nodes: 2, processes_per_node: 16, threads_per_process: 4 };
+        t.validate(64).unwrap();
+        assert_eq!(t.total_processes(), 32);
+    }
+}

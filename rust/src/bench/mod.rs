@@ -1,0 +1,151 @@
+//! Benchmark harness (the vendored crate set has no criterion).
+//!
+//! Provides warmup + repeated measurement with summary statistics, wall
+//!-clock budgets, and a uniform report format used by every bench binary
+//! under `benches/`.
+
+use crate::util::stats::Summary;
+use std::time::{Duration, Instant};
+
+/// Configuration of one measurement.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchOpts {
+    /// Warmup iterations (not recorded).
+    pub warmup: usize,
+    /// Recorded iterations.
+    pub iters: usize,
+    /// Soft wall-clock budget; measurement stops early (but after at
+    /// least one recorded iteration) once exceeded.
+    pub max_wall: Duration,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts {
+            warmup: 1,
+            iters: 10,
+            max_wall: Duration::from_secs(60),
+        }
+    }
+}
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration wall times, seconds.
+    pub times: Vec<f64>,
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    /// One-line report: `name  mean ± std  [min … p95]  (n)`.
+    pub fn line(&self) -> String {
+        let s = &self.summary;
+        format!(
+            "{:<44} {:>10} ± {:>8}  [{} … {}]  n={}",
+            self.name,
+            fmt_secs(s.mean),
+            fmt_secs(s.stddev),
+            fmt_secs(s.min),
+            fmt_secs(s.p95),
+            s.n
+        )
+    }
+}
+
+/// Format seconds with adaptive units.
+pub fn fmt_secs(s: f64) -> String {
+    if s.is_nan() {
+        return "n/a".into();
+    }
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.3}s")
+    }
+}
+
+/// Measure `f`, returning per-iteration times. `f` receives the iteration
+/// index and must return something observable to defeat dead-code
+/// elimination (return any value; it is black-boxed).
+pub fn bench<T>(name: &str, opts: BenchOpts, mut f: impl FnMut(usize) -> T) -> BenchResult {
+    for i in 0..opts.warmup {
+        black_box(f(i));
+    }
+    let start = Instant::now();
+    let mut times = Vec::with_capacity(opts.iters);
+    for i in 0..opts.iters {
+        let t0 = Instant::now();
+        black_box(f(i));
+        times.push(t0.elapsed().as_secs_f64());
+        if start.elapsed() > opts.max_wall && !times.is_empty() {
+            break;
+        }
+    }
+    let summary = Summary::of(&times);
+    BenchResult {
+        name: name.to_string(),
+        times,
+        summary,
+    }
+}
+
+/// Opaque value sink (stable `std::hint::black_box`).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Print a bench section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_requested_iterations() {
+        let r = bench(
+            "noop",
+            BenchOpts { warmup: 2, iters: 5, max_wall: Duration::from_secs(10) },
+            |i| i * 2,
+        );
+        assert_eq!(r.times.len(), 5);
+        assert_eq!(r.summary.n, 5);
+        assert!(r.summary.mean >= 0.0);
+    }
+
+    #[test]
+    fn wall_budget_stops_early() {
+        let r = bench(
+            "sleepy",
+            BenchOpts { warmup: 0, iters: 100, max_wall: Duration::from_millis(30) },
+            |_| std::thread::sleep(Duration::from_millis(20)),
+        );
+        assert!(r.times.len() < 100, "stopped after {} iters", r.times.len());
+        assert!(!r.times.is_empty());
+    }
+
+    #[test]
+    fn line_formats() {
+        let r = bench("fmt", BenchOpts::default(), |_| 1 + 1);
+        let line = r.line();
+        assert!(line.contains("fmt"));
+        assert!(line.contains("n="));
+    }
+
+    #[test]
+    fn fmt_secs_units() {
+        assert_eq!(fmt_secs(2.5), "2.500s");
+        assert!(fmt_secs(0.002).ends_with("ms"));
+        assert!(fmt_secs(2e-6).ends_with("µs"));
+        assert!(fmt_secs(5e-9).ends_with("ns"));
+        assert_eq!(fmt_secs(f64::NAN), "n/a");
+    }
+}

@@ -1,0 +1,273 @@
+//! Core masks and process-affinity control.
+//!
+//! Node-based scheduling's script generator emits explicit per-process core
+//! pinning ("holistically pinning processes to cores" — paper §I). In the
+//! DES the mask is bookkeeping; in the real executor ([`crate::exec`]) the
+//! same mask is applied with `sched_setaffinity(2)`.
+
+use std::fmt;
+
+/// A set of cores on one node, packed as 64-bit words.
+#[derive(Clone, PartialEq, Eq)]
+pub struct CoreMask {
+    words: Vec<u64>,
+    ncores: u32,
+}
+
+impl CoreMask {
+    /// Empty mask over a node with `ncores` cores.
+    pub fn empty(ncores: u32) -> CoreMask {
+        CoreMask {
+            words: vec![0; ((ncores as usize) + 63) / 64],
+            ncores,
+        }
+    }
+
+    /// Mask with all `ncores` cores set.
+    pub fn full(ncores: u32) -> CoreMask {
+        let mut m = CoreMask::empty(ncores);
+        for c in 0..ncores {
+            m.set(c);
+        }
+        m
+    }
+
+    /// Mask with a contiguous range `[lo, hi)` set.
+    pub fn range(ncores: u32, lo: u32, hi: u32) -> CoreMask {
+        assert!(lo <= hi && hi <= ncores, "bad core range {lo}..{hi}");
+        let mut m = CoreMask::empty(ncores);
+        for c in lo..hi {
+            m.set(c);
+        }
+        m
+    }
+
+    /// Node core count this mask ranges over.
+    pub fn ncores(&self) -> u32 {
+        self.ncores
+    }
+
+    /// Set one core bit.
+    pub fn set(&mut self, core: u32) {
+        assert!(core < self.ncores, "core {core} out of range");
+        self.words[(core / 64) as usize] |= 1u64 << (core % 64);
+    }
+
+    /// Test one core bit.
+    pub fn get(&self, core: u32) -> bool {
+        if core >= self.ncores {
+            return false;
+        }
+        self.words[(core / 64) as usize] & (1u64 << (core % 64)) != 0
+    }
+
+    /// Number of set cores.
+    pub fn count(&self) -> u32 {
+        self.words.iter().map(|w| w.count_ones()).sum()
+    }
+
+    /// True if `other` ⊆ `self`.
+    pub fn contains(&self, other: &CoreMask) -> bool {
+        self.words
+            .iter()
+            .zip(&other.words)
+            .all(|(a, b)| a & b == *b)
+    }
+
+    /// Remove all cores in `other` from `self`.
+    pub fn clear(&mut self, other: &CoreMask) {
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a &= !b;
+        }
+    }
+
+    /// Claim the `n` lowest-indexed *unset* cores, setting them in `self`
+    /// and returning them as a new mask. Caller must ensure capacity.
+    pub fn take_lowest_free(&mut self, n: u32) -> CoreMask {
+        let mut taken = CoreMask::empty(self.ncores);
+        let mut left = n;
+        for c in 0..self.ncores {
+            if left == 0 {
+                break;
+            }
+            if !self.get(c) {
+                self.set(c);
+                taken.set(c);
+                left -= 1;
+            }
+        }
+        assert_eq!(left, 0, "take_lowest_free: not enough free cores");
+        taken
+    }
+
+    /// Iterate set core indices in ascending order.
+    pub fn iter(&self) -> impl Iterator<Item = u32> + '_ {
+        (0..self.ncores).filter(move |&c| self.get(c))
+    }
+
+    /// Render as a `taskset`-style hex string (lowest core = LSB).
+    pub fn to_hex(&self) -> String {
+        let mut s = String::from("0x");
+        let mut started = false;
+        for w in self.words.iter().rev() {
+            if started {
+                s.push_str(&format!("{w:016x}"));
+            } else if *w != 0 || self.words.len() == 1 {
+                s.push_str(&format!("{w:x}"));
+                started = true;
+            }
+        }
+        if !started {
+            s.push('0');
+        }
+        s
+    }
+
+    /// Render as a cpu-list string (`0-3,8,12-15`), the format used in the
+    /// generated node scripts and accepted by `taskset -c`.
+    pub fn to_cpulist(&self) -> String {
+        let cores: Vec<u32> = self.iter().collect();
+        let mut parts: Vec<String> = Vec::new();
+        let mut i = 0;
+        while i < cores.len() {
+            let start = cores[i];
+            let mut end = start;
+            while i + 1 < cores.len() && cores[i + 1] == end + 1 {
+                i += 1;
+                end = cores[i];
+            }
+            if start == end {
+                parts.push(format!("{start}"));
+            } else {
+                parts.push(format!("{start}-{end}"));
+            }
+            i += 1;
+        }
+        parts.join(",")
+    }
+
+    /// Apply this mask to the calling thread with `sched_setaffinity(2)`.
+    /// No-op error on platforms without it. Used by the real executor.
+    #[cfg(target_os = "linux")]
+    pub fn apply_to_current_thread(&self) -> std::io::Result<()> {
+        unsafe {
+            let mut set: libc::cpu_set_t = std::mem::zeroed();
+            libc::CPU_ZERO(&mut set);
+            let ncpu = libc::sysconf(libc::_SC_NPROCESSORS_ONLN) as u32;
+            let mut any = false;
+            for c in self.iter() {
+                if c < ncpu {
+                    libc::CPU_SET(c as usize, &mut set);
+                    any = true;
+                }
+            }
+            if !any {
+                // Mask refers only to cores this host doesn't have (e.g. a
+                // 64-core script on a small dev box): leave affinity alone.
+                return Ok(());
+            }
+            let rc = libc::sched_setaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &set);
+            if rc != 0 {
+                return Err(std::io::Error::last_os_error());
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for CoreMask {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "CoreMask({})", self.to_cpulist())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_and_full() {
+        assert_eq!(CoreMask::empty(64).count(), 0);
+        assert_eq!(CoreMask::full(64).count(), 64);
+        assert_eq!(CoreMask::full(65).count(), 65);
+    }
+
+    #[test]
+    fn set_get_clear() {
+        let mut m = CoreMask::empty(128);
+        m.set(0);
+        m.set(63);
+        m.set(64);
+        m.set(127);
+        assert!(m.get(0) && m.get(63) && m.get(64) && m.get(127));
+        assert!(!m.get(1));
+        assert_eq!(m.count(), 4);
+        let mut rm = CoreMask::empty(128);
+        rm.set(63);
+        m.clear(&rm);
+        assert!(!m.get(63));
+        assert_eq!(m.count(), 3);
+    }
+
+    #[test]
+    fn contains_subset() {
+        let big = CoreMask::range(64, 0, 8);
+        let small = CoreMask::range(64, 2, 5);
+        assert!(big.contains(&small));
+        assert!(!small.contains(&big));
+        assert!(big.contains(&CoreMask::empty(64)));
+    }
+
+    #[test]
+    fn take_lowest_free_skips_taken() {
+        let mut m = CoreMask::empty(16);
+        m.set(0);
+        m.set(2);
+        let t = m.take_lowest_free(3);
+        assert_eq!(t.iter().collect::<Vec<_>>(), vec![1, 3, 4]);
+        assert_eq!(m.count(), 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "not enough free cores")]
+    fn take_lowest_free_overflow_panics() {
+        let mut m = CoreMask::full(4);
+        m.take_lowest_free(1);
+    }
+
+    #[test]
+    fn cpulist_formats() {
+        let mut m = CoreMask::empty(32);
+        for c in [0, 1, 2, 3, 8, 12, 13, 14, 15] {
+            m.set(c);
+        }
+        assert_eq!(m.to_cpulist(), "0-3,8,12-15");
+        assert_eq!(CoreMask::empty(8).to_cpulist(), "");
+        let mut single = CoreMask::empty(8);
+        single.set(5);
+        assert_eq!(single.to_cpulist(), "5");
+    }
+
+    #[test]
+    fn hex_formats() {
+        let m = CoreMask::range(64, 0, 4);
+        assert_eq!(m.to_hex(), "0xf");
+        let mut hi = CoreMask::empty(128);
+        hi.set(64);
+        assert_eq!(hi.to_hex(), "0x10000000000000000");
+        assert_eq!(CoreMask::empty(8).to_hex(), "0x0");
+    }
+
+    #[test]
+    #[cfg(target_os = "linux")]
+    fn apply_affinity_smoke() {
+        // Pin to core 0 (always exists); must not error.
+        let mut m = CoreMask::empty(1);
+        m.set(0);
+        m.apply_to_current_thread().unwrap();
+        // Out-of-range-only mask is a no-op, not an error.
+        let mut far = CoreMask::empty(4096);
+        far.set(4095);
+        far.apply_to_current_thread().unwrap();
+    }
+}

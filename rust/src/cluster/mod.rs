@@ -1,0 +1,14 @@
+//! Cluster model: nodes, cores, memory, affinity and topology.
+//!
+//! Substrate for the paper's testbed (TX-Green: 64-core Xeon Phi nodes).
+//! The model tracks per-node core occupancy and memory, node lifecycle
+//! states, and named reservations (the paper ran most benchmarks on a
+//! reserved slice of the production machine).
+
+pub mod affinity;
+pub mod node;
+pub mod topology;
+
+pub use affinity::CoreMask;
+pub use node::{Node, NodeId, NodeState};
+pub use topology::{Cluster, Reservation};

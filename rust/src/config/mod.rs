@@ -1,0 +1,224 @@
+//! Configuration system: a TOML-subset parser (offline build: no serde /
+//! toml crates) plus typed experiment configuration and paper presets.
+
+pub mod parser;
+pub mod presets;
+
+use crate::error::{Error, Result};
+use parser::Value;
+
+/// Which aggregation mode a run uses (paper §II).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Mode {
+    /// One scheduling task per compute task (naive baseline).
+    PerTask,
+    /// One scheduling task per physical core — multi-level scheduling,
+    /// LLMapReduce MIMO (the paper's comparison point, "M*").
+    MultiLevel,
+    /// One scheduling task per node — node-based scheduling, "triples
+    /// mode" (the paper's contribution, "N*").
+    NodeBased,
+}
+
+impl Mode {
+    /// Parse from the names used in configs and CLI flags.
+    pub fn parse(s: &str) -> Result<Mode> {
+        match s {
+            "per-task" | "per_task" | "naive" => Ok(Mode::PerTask),
+            "multi-level" | "multi_level" | "mimo" | "M" => Ok(Mode::MultiLevel),
+            "node-based" | "node_based" | "triples" | "N" => Ok(Mode::NodeBased),
+            other => Err(Error::Config(format!("unknown mode {other:?}"))),
+        }
+    }
+
+    /// The paper's shorthand (M* / N*).
+    pub fn short(&self) -> &'static str {
+        match self {
+            Mode::PerTask => "P*",
+            Mode::MultiLevel => "M*",
+            Mode::NodeBased => "N*",
+        }
+    }
+}
+
+impl std::fmt::Display for Mode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            Mode::PerTask => "per-task",
+            Mode::MultiLevel => "multi-level",
+            Mode::NodeBased => "node-based",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// Fully-resolved configuration for one benchmark run.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Number of nodes in the benchmark slice (Table II: 32…512).
+    pub nodes: u32,
+    /// Cores per node (Table II: 64).
+    pub cores_per_node: u32,
+    /// Task time `t` in seconds (Table I: 1, 5, 30, 60).
+    pub task_time: f64,
+    /// Job time per processor `T_job` (Table I: 240 s).
+    pub job_time: f64,
+    /// Aggregation mode.
+    pub mode: Mode,
+    /// RNG seed for jitter.
+    pub seed: u64,
+    /// Dedicated system (no background noise) — the paper needed this for
+    /// multi-level at 256/512 nodes.
+    pub dedicated: bool,
+    /// Memory per compute task, MiB.
+    pub task_mem_mib: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            nodes: 32,
+            cores_per_node: 64,
+            task_time: 60.0,
+            job_time: 240.0,
+            mode: Mode::NodeBased,
+            seed: 1,
+            dedicated: false,
+            task_mem_mib: 512,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Total processors P = nodes × cores_per_node (Table II).
+    pub fn processors(&self) -> u64 {
+        self.nodes as u64 * self.cores_per_node as u64
+    }
+
+    /// Tasks per processor n = T_job / t (Table I).
+    pub fn tasks_per_processor(&self) -> u64 {
+        (self.job_time / self.task_time).round() as u64
+    }
+
+    /// Total compute tasks in the job (≈8M at 512 nodes / 1 s tasks).
+    pub fn total_tasks(&self) -> u64 {
+        self.processors() * self.tasks_per_processor()
+    }
+
+    /// Validate ranges.
+    pub fn validate(&self) -> Result<()> {
+        if self.nodes == 0 || self.cores_per_node == 0 {
+            return Err(Error::Config("nodes and cores_per_node must be > 0".into()));
+        }
+        if self.task_time <= 0.0 || self.job_time <= 0.0 {
+            return Err(Error::Config("task_time and job_time must be > 0".into()));
+        }
+        if self.task_time > self.job_time {
+            return Err(Error::Config(format!(
+                "task_time {} exceeds job_time {}",
+                self.task_time, self.job_time
+            )));
+        }
+        Ok(())
+    }
+
+    /// Build from a parsed config file (`[run]` section).
+    pub fn from_value(root: &Value) -> Result<RunConfig> {
+        let mut c = RunConfig::default();
+        let run = root.get("run").unwrap_or(root);
+        if let Some(v) = run.get("nodes") {
+            c.nodes = v.as_int()? as u32;
+        }
+        if let Some(v) = run.get("cores_per_node") {
+            c.cores_per_node = v.as_int()? as u32;
+        }
+        if let Some(v) = run.get("task_time") {
+            c.task_time = v.as_float()?;
+        }
+        if let Some(v) = run.get("job_time") {
+            c.job_time = v.as_float()?;
+        }
+        if let Some(v) = run.get("mode") {
+            c.mode = Mode::parse(v.as_str()?)?;
+        }
+        if let Some(v) = run.get("seed") {
+            c.seed = v.as_int()? as u64;
+        }
+        if let Some(v) = run.get("dedicated") {
+            c.dedicated = v.as_bool()?;
+        }
+        if let Some(v) = run.get("task_mem_mib") {
+            c.task_mem_mib = v.as_int()? as u64;
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    /// Parse a config file from disk.
+    pub fn from_file(path: &std::path::Path) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path)?;
+        let v = parser::parse(&text)?;
+        RunConfig::from_value(&v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parse_aliases() {
+        assert_eq!(Mode::parse("triples").unwrap(), Mode::NodeBased);
+        assert_eq!(Mode::parse("mimo").unwrap(), Mode::MultiLevel);
+        assert_eq!(Mode::parse("naive").unwrap(), Mode::PerTask);
+        assert!(Mode::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn derived_quantities_match_paper_tables() {
+        // Table I/II: 512 nodes × 64 cores, 1 s tasks → ~8M tasks.
+        let c = RunConfig {
+            nodes: 512,
+            task_time: 1.0,
+            ..Default::default()
+        };
+        assert_eq!(c.processors(), 32_768);
+        assert_eq!(c.tasks_per_processor(), 240);
+        assert_eq!(c.total_tasks(), 7_864_320);
+    }
+
+    #[test]
+    fn validation_catches_bad_values() {
+        let mut c = RunConfig::default();
+        c.task_time = 0.0;
+        assert!(c.validate().is_err());
+        let mut c2 = RunConfig::default();
+        c2.task_time = 500.0; // > job_time
+        assert!(c2.validate().is_err());
+        let mut c3 = RunConfig::default();
+        c3.nodes = 0;
+        assert!(c3.validate().is_err());
+    }
+
+    #[test]
+    fn from_value_reads_run_section() {
+        let v = parser::parse(
+            "[run]\nnodes = 64\ntask_time = 5.0\nmode = \"multi-level\"\ndedicated = true\n",
+        )
+        .unwrap();
+        let c = RunConfig::from_value(&v).unwrap();
+        assert_eq!(c.nodes, 64);
+        assert_eq!(c.task_time, 5.0);
+        assert_eq!(c.mode, Mode::MultiLevel);
+        assert!(c.dedicated);
+        // Defaults preserved.
+        assert_eq!(c.cores_per_node, 64);
+    }
+
+    #[test]
+    fn from_value_flat_file_also_works() {
+        let v = parser::parse("nodes = 128\n").unwrap();
+        let c = RunConfig::from_value(&v).unwrap();
+        assert_eq!(c.nodes, 128);
+    }
+}

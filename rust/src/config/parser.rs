@@ -1,0 +1,275 @@
+//! A TOML-subset parser.
+//!
+//! Supports what llsched config files use: `[section]` and
+//! `[section.sub]` headers, `key = value` pairs with string / integer /
+//! float / boolean / homogeneous-array values, `#` comments, and blank
+//! lines. Unsupported TOML (dates, inline tables, multi-line strings) is
+//! rejected with a line-numbered error rather than silently misparsed.
+
+use crate::error::{Error, Result};
+
+/// A parsed config value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+    /// A table (section); insertion-ordered.
+    Table(Vec<(String, Value)>),
+}
+
+impl Value {
+    /// Get a child of a table.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Table(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            other => Err(Error::Config(format!("expected string, got {other:?}"))),
+        }
+    }
+
+    pub fn as_int(&self) -> Result<i64> {
+        match self {
+            Value::Int(i) => Ok(*i),
+            other => Err(Error::Config(format!("expected integer, got {other:?}"))),
+        }
+    }
+
+    /// Accepts both ints and floats.
+    pub fn as_float(&self) -> Result<f64> {
+        match self {
+            Value::Float(x) => Ok(*x),
+            Value::Int(i) => Ok(*i as f64),
+            other => Err(Error::Config(format!("expected number, got {other:?}"))),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            other => Err(Error::Config(format!("expected bool, got {other:?}"))),
+        }
+    }
+
+    fn table_mut(&mut self) -> &mut Vec<(String, Value)> {
+        match self {
+            Value::Table(pairs) => pairs,
+            _ => unreachable!("internal: non-table in section path"),
+        }
+    }
+}
+
+/// Parse a config document into a root [`Value::Table`].
+pub fn parse(text: &str) -> Result<Value> {
+    let mut root = Value::Table(Vec::new());
+    let mut section_path: Vec<String> = Vec::new();
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') {
+            if !line.ends_with(']') {
+                return Err(err(lineno, "unterminated section header"));
+            }
+            let inner = &line[1..line.len() - 1];
+            if inner.is_empty() {
+                return Err(err(lineno, "empty section header"));
+            }
+            section_path = inner.split('.').map(|s| s.trim().to_string()).collect();
+            if section_path.iter().any(|s| s.is_empty()) {
+                return Err(err(lineno, "empty section path component"));
+            }
+            ensure_section(&mut root, &section_path, lineno)?;
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| err(lineno, "expected `key = value`"))?;
+        let key = line[..eq].trim().to_string();
+        if key.is_empty() {
+            return Err(err(lineno, "empty key"));
+        }
+        let value = parse_value(line[eq + 1..].trim(), lineno)?;
+        let table = section_table(&mut root, &section_path);
+        if table.iter().any(|(k, _)| *k == key) {
+            return Err(err(lineno, &format!("duplicate key {key:?}")));
+        }
+        table.push((key, value));
+    }
+    Ok(root)
+}
+
+fn err(lineno: usize, msg: &str) -> Error {
+    Error::Config(format!("line {}: {}", lineno + 1, msg))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn ensure_section(root: &mut Value, path: &[String], lineno: usize) -> Result<()> {
+    let mut cur = root;
+    for part in path {
+        let exists = cur.get(part).is_some();
+        if !exists {
+            cur.table_mut()
+                .push((part.clone(), Value::Table(Vec::new())));
+        }
+        let pairs = cur.table_mut();
+        let slot = pairs
+            .iter_mut()
+            .find(|(k, _)| k == part)
+            .map(|(_, v)| v)
+            .expect("just ensured");
+        if !matches!(slot, Value::Table(_)) {
+            return Err(err(lineno, &format!("{part:?} is a value, not a section")));
+        }
+        cur = slot;
+    }
+    Ok(())
+}
+
+fn section_table<'a>(root: &'a mut Value, path: &[String]) -> &'a mut Vec<(String, Value)> {
+    let mut cur = root;
+    for part in path {
+        let pairs = cur.table_mut();
+        let idx = pairs
+            .iter()
+            .position(|(k, _)| k == part)
+            .expect("section pre-created by ensure_section");
+        cur = &mut pairs[idx].1;
+    }
+    cur.table_mut()
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<Value> {
+    if s.is_empty() {
+        return Err(err(lineno, "missing value"));
+    }
+    if s.starts_with('"') {
+        if s.len() < 2 || !s.ends_with('"') {
+            return Err(err(lineno, "unterminated string"));
+        }
+        let inner = &s[1..s.len() - 1];
+        if inner.contains('"') {
+            return Err(err(lineno, "embedded quotes not supported"));
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if s.starts_with('[') {
+        if !s.ends_with(']') {
+            return Err(err(lineno, "unterminated array"));
+        }
+        let inner = s[1..s.len() - 1].trim();
+        if inner.is_empty() {
+            return Ok(Value::Arr(Vec::new()));
+        }
+        let items: Result<Vec<Value>> = inner
+            .split(',')
+            .map(|it| parse_value(it.trim(), lineno))
+            .collect();
+        return Ok(Value::Arr(items?));
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(x) = s.parse::<f64>() {
+        return Ok(Value::Float(x));
+    }
+    Err(err(lineno, &format!("cannot parse value {s:?}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_and_sections() {
+        let v = parse(
+            "top = 1\n[a]\nx = \"hi\"  # comment\ny = 2.5\n[a.b]\nz = true\narr = [1, 2, 3]\n",
+        )
+        .unwrap();
+        assert_eq!(v.get("top").unwrap().as_int().unwrap(), 1);
+        let a = v.get("a").unwrap();
+        assert_eq!(a.get("x").unwrap().as_str().unwrap(), "hi");
+        assert_eq!(a.get("y").unwrap().as_float().unwrap(), 2.5);
+        let b = a.get("b").unwrap();
+        assert_eq!(b.get("z").unwrap().as_bool().unwrap(), true);
+        assert_eq!(
+            b.get("arr").unwrap(),
+            &Value::Arr(vec![Value::Int(1), Value::Int(2), Value::Int(3)])
+        );
+    }
+
+    #[test]
+    fn comments_respect_strings() {
+        let v = parse("s = \"a # not comment\"\n").unwrap();
+        assert_eq!(v.get("s").unwrap().as_str().unwrap(), "a # not comment");
+    }
+
+    #[test]
+    fn underscored_ints() {
+        let v = parse("n = 32_768\n").unwrap();
+        assert_eq!(v.get("n").unwrap().as_int().unwrap(), 32_768);
+    }
+
+    #[test]
+    fn duplicate_key_rejected() {
+        assert!(parse("a = 1\na = 2\n").is_err());
+    }
+
+    #[test]
+    fn bad_syntax_has_line_numbers() {
+        let e = parse("ok = 1\nbroken\n").unwrap_err().to_string();
+        assert!(e.contains("line 2"), "{e}");
+    }
+
+    #[test]
+    fn section_vs_value_conflict() {
+        assert!(parse("[a]\nb = 1\n[a.b]\nc = 2\n").is_err());
+    }
+
+    #[test]
+    fn unterminated_constructs() {
+        assert!(parse("[sec\n").is_err());
+        assert!(parse("s = \"oops\n").is_err());
+        assert!(parse("a = [1, 2\n").is_err());
+        assert!(parse("a =\n").is_err());
+    }
+
+    #[test]
+    fn empty_array_and_floats() {
+        let v = parse("e = []\nf = -3.5\ni = -7\n").unwrap();
+        assert_eq!(v.get("e").unwrap(), &Value::Arr(vec![]));
+        assert_eq!(v.get("f").unwrap().as_float().unwrap(), -3.5);
+        assert_eq!(v.get("i").unwrap().as_int().unwrap(), -7);
+        // int coerces to float but not vice versa
+        assert_eq!(v.get("i").unwrap().as_float().unwrap(), -7.0);
+        assert!(v.get("f").unwrap().as_int().is_err());
+    }
+}

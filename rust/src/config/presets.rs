@@ -1,0 +1,138 @@
+//! Paper benchmark presets: Table I task configurations and Table II
+//! cluster configurations, plus the full Table III run matrix.
+
+use crate::config::{Mode, RunConfig};
+
+/// A Table I column: a named task-time configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TaskConfig {
+    pub name: &'static str,
+    /// Task time `t`, seconds.
+    pub task_time: f64,
+    /// Job time per processor `T_job`, seconds.
+    pub job_time: f64,
+}
+
+impl TaskConfig {
+    /// Tasks per processor, n = T_job / t.
+    pub fn tasks_per_processor(&self) -> u64 {
+        (self.job_time / self.task_time).round() as u64
+    }
+}
+
+/// Table I: rapid (1 s), fast (5 s), medium (30 s), long (60 s); T_job=240 s.
+pub const TASK_CONFIGS: [TaskConfig; 4] = [
+    TaskConfig { name: "rapid", task_time: 1.0, job_time: 240.0 },
+    TaskConfig { name: "fast", task_time: 5.0, job_time: 240.0 },
+    TaskConfig { name: "medium", task_time: 30.0, job_time: 240.0 },
+    TaskConfig { name: "long", task_time: 60.0, job_time: 240.0 },
+];
+
+/// Table II node-count scaling points.
+pub const NODE_SCALES: [u32; 5] = [32, 64, 128, 256, 512];
+
+/// Cores per node on the paper's testbed.
+pub const CORES_PER_NODE: u32 = 64;
+
+/// Runs per cell in Table III.
+pub const RUNS_PER_CELL: usize = 3;
+
+/// Build the `RunConfig` for one Table III cell.
+pub fn cell(nodes: u32, task: &TaskConfig, mode: Mode, run_idx: usize) -> RunConfig {
+    RunConfig {
+        nodes,
+        cores_per_node: CORES_PER_NODE,
+        task_time: task.task_time,
+        job_time: task.job_time,
+        mode,
+        // Seed is a stable function of the cell so each of the 3 runs is
+        // reproducible but distinct.
+        seed: (nodes as u64) << 32
+            | (task.task_time as u64) << 16
+            | (mode as u64) << 8
+            | run_idx as u64,
+        // The paper needed a dedicated system for multi-level at ≥256
+        // nodes (scheduler unresponsive under production load).
+        dedicated: mode == Mode::MultiLevel && nodes >= 256,
+        task_mem_mib: 512,
+    }
+}
+
+/// The paper ran multi-level at 512 nodes only for long (60 s) tasks; the
+/// other cells are N/A ("takes too long to release the completed tasks").
+pub fn is_paper_na(nodes: u32, task: &TaskConfig, mode: Mode) -> bool {
+    mode == Mode::MultiLevel && nodes == 512 && task.task_time < 60.0
+}
+
+/// The full Table III matrix (both modes, all scales, all task types,
+/// 3 runs per cell), excluding the paper's N/A cells unless `include_na`.
+pub fn table3_matrix(include_na: bool) -> Vec<RunConfig> {
+    let mut out = Vec::new();
+    for &nodes in &NODE_SCALES {
+        for task in &TASK_CONFIGS {
+            for mode in [Mode::MultiLevel, Mode::NodeBased] {
+                if !include_na && is_paper_na(nodes, task, mode) {
+                    continue;
+                }
+                for run in 0..RUNS_PER_CELL {
+                    out.push(cell(nodes, task, mode, run));
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_tasks_per_processor() {
+        let n: Vec<u64> = TASK_CONFIGS.iter().map(|t| t.tasks_per_processor()).collect();
+        assert_eq!(n, vec![240, 48, 8, 4]); // Table I row 3
+    }
+
+    #[test]
+    fn table2_total_processor_time() {
+        // Table II: total processor time = P × T_job; 32 nodes → 136.5 h.
+        for (&nodes, hours) in NODE_SCALES.iter().zip([136.5, 273.1, 546.1, 1092.3, 2184.5]) {
+            let p = nodes as f64 * CORES_PER_NODE as f64;
+            let h = p * 240.0 / 3600.0;
+            assert!((h - hours).abs() < 0.06, "{nodes} nodes: {h} vs {hours}");
+        }
+    }
+
+    #[test]
+    fn matrix_size_matches_paper() {
+        // Full grid: 5 scales × 4 tasks × 2 modes × 3 runs = 120.
+        assert_eq!(table3_matrix(true).len(), 120);
+        // Paper's N/A: M* at 512 for t ∈ {1,5,30} → 3 cells × 3 runs = 9 fewer.
+        assert_eq!(table3_matrix(false).len(), 111);
+    }
+
+    #[test]
+    fn na_cells_are_multilevel_512_short() {
+        assert!(is_paper_na(512, &TASK_CONFIGS[0], Mode::MultiLevel));
+        assert!(!is_paper_na(512, &TASK_CONFIGS[3], Mode::MultiLevel));
+        assert!(!is_paper_na(512, &TASK_CONFIGS[0], Mode::NodeBased));
+        assert!(!is_paper_na(256, &TASK_CONFIGS[0], Mode::MultiLevel));
+    }
+
+    #[test]
+    fn cell_seeds_distinct_and_stable() {
+        let a = cell(32, &TASK_CONFIGS[0], Mode::NodeBased, 0);
+        let b = cell(32, &TASK_CONFIGS[0], Mode::NodeBased, 1);
+        let a2 = cell(32, &TASK_CONFIGS[0], Mode::NodeBased, 0);
+        assert_ne!(a.seed, b.seed);
+        assert_eq!(a.seed, a2.seed);
+    }
+
+    #[test]
+    fn dedicated_rule() {
+        assert!(cell(256, &TASK_CONFIGS[0], Mode::MultiLevel, 0).dedicated);
+        assert!(cell(512, &TASK_CONFIGS[3], Mode::MultiLevel, 0).dedicated);
+        assert!(!cell(128, &TASK_CONFIGS[0], Mode::MultiLevel, 0).dedicated);
+        assert!(!cell(512, &TASK_CONFIGS[0], Mode::NodeBased, 0).dedicated);
+    }
+}

@@ -1,0 +1,138 @@
+//! Hand-rolled CLI argument parsing (offline build: no clap).
+
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+
+/// Parsed command line: a subcommand, positional args, and `--key[=value]`
+/// flags.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding `argv[0]`).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        if let Some(cmd) = it.next() {
+            if cmd.starts_with('-') {
+                return Err(Error::Config(format!(
+                    "expected a subcommand before flags, got {cmd:?}"
+                )));
+            }
+            out.command = cmd;
+        }
+        while let Some(a) = it.next() {
+            if let Some(flag) = a.strip_prefix("--") {
+                if flag.is_empty() {
+                    return Err(Error::Config("bare `--` not supported".into()));
+                }
+                if let Some((k, v)) = flag.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    // `--key value` form, unless the next token is a flag.
+                    let v = it.next().expect("peeked");
+                    out.flags.insert(flag.to_string(), v);
+                } else {
+                    out.flags.insert(flag.to_string(), String::from("true"));
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Boolean flag (present without value, or `=true/false`).
+    pub fn flag(&self, name: &str) -> bool {
+        matches!(self.flags.get(name).map(String::as_str), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// String option.
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    /// Typed option with default.
+    pub fn opt_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse::<T>().map_err(|_| {
+                Error::Config(format!("flag --{name}: cannot parse {v:?}"))
+            }),
+        }
+    }
+
+    /// Error if unknown flags were passed (catches typos).
+    pub fn expect_known(&self, known: &[&str]) -> Result<()> {
+        for k in self.flags.keys() {
+            if !known.contains(&k.as_str()) {
+                return Err(Error::Config(format!(
+                    "unknown flag --{k} (known: {})",
+                    known.join(", ")
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(&["table3", "--quick", "--runs=2", "--out", "results"]);
+        assert_eq!(a.command, "table3");
+        assert!(a.flag("quick"));
+        assert_eq!(a.opt_parse::<usize>("runs", 3).unwrap(), 2);
+        assert_eq!(a.opt("out"), Some("results"));
+        assert!(!a.flag("missing"));
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse(&["run", "config.toml", "--seed", "7"]);
+        assert_eq!(a.positional, vec!["config.toml"]);
+        assert_eq!(a.opt_parse::<u64>("seed", 0).unwrap(), 7);
+    }
+
+    #[test]
+    fn value_then_flag_disambiguation() {
+        let a = parse(&["x", "--a", "--b", "v"]);
+        assert!(a.flag("a"), "--a has no value because --b follows");
+        assert_eq!(a.opt("b"), Some("v"));
+    }
+
+    #[test]
+    fn unknown_flag_detection() {
+        let a = parse(&["t", "--good", "--typo=1"]);
+        assert!(a.expect_known(&["good", "typo"]).is_ok());
+        assert!(a.expect_known(&["good"]).is_err());
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!(Args::parse(vec!["--flag-first".to_string()]).is_err());
+        let bad = parse(&["c", "--n=abc"]);
+        assert!(bad.opt_parse::<u32>("n", 1).is_err());
+    }
+
+    #[test]
+    fn empty_argv() {
+        let a = Args::parse(Vec::<String>::new()).unwrap();
+        assert_eq!(a.command, "");
+    }
+}

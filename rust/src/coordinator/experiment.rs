@@ -1,0 +1,273 @@
+//! Experiment orchestration: run Table III cells end-to-end over the DES
+//! scheduler and collect the paper's measurements.
+
+use crate::aggregation;
+use crate::cluster::Cluster;
+use crate::config::presets::{self, NODE_SCALES, RUNS_PER_CELL, TASK_CONFIGS};
+use crate::config::Mode;
+use crate::error::{Error, Result};
+use crate::metrics::overhead::OverheadPoint;
+use crate::metrics::timeline::UtilizationSeries;
+use crate::scheduler::core::{SchedulerSim, SimOutcome};
+use crate::scheduler::costmodel::CostModel;
+use crate::scheduler::noise::NoiseModel;
+use crate::workload::paper::PaperCell;
+
+/// Result of one benchmark run (one cell, one repetition).
+#[derive(Debug)]
+pub struct CellResult {
+    pub cell: PaperCell,
+    /// The paper's "job run time": first task start → last task end.
+    pub runtime: f64,
+    /// Runtime minus T_job.
+    pub overhead: f64,
+    /// Machine-fill span (first → last dispatch).
+    pub dispatch_span: f64,
+    /// First end → last cleanup (release span).
+    pub release_span: f64,
+    /// Utilization series for Fig 2.
+    pub utilization: UtilizationSeries,
+    /// Scheduler responsiveness indicator.
+    pub longest_busy_stretch: f64,
+    /// Whether the responsiveness guard would bar this from production.
+    pub unusable_in_production: bool,
+    /// DES events processed (engine throughput accounting).
+    pub events: u64,
+}
+
+/// Options for matrix runs.
+#[derive(Debug, Clone, Copy)]
+pub struct ExperimentOpts {
+    /// Include the paper's N/A cells (multi-level 512 nodes, short tasks).
+    pub include_na: bool,
+    /// Only run scales up to this node count (quick mode).
+    pub max_nodes: u32,
+    /// Repetitions per cell (paper: 3).
+    pub runs: usize,
+    /// Fig 2 sampling step, seconds.
+    pub dt: f64,
+}
+
+impl Default for ExperimentOpts {
+    fn default() -> Self {
+        ExperimentOpts {
+            include_na: false,
+            max_nodes: 512,
+            runs: RUNS_PER_CELL,
+            dt: 1.0,
+        }
+    }
+}
+
+/// Run one cell (one repetition) end-to-end.
+pub fn run_cell(cell: &PaperCell) -> Result<CellResult> {
+    let cfg = &cell.config;
+    cfg.validate()?;
+    let cluster = Cluster::homogeneous(cfg.nodes, cfg.cores_per_node, 192 * 1024);
+    let noise = if cfg.dedicated {
+        NoiseModel::dedicated()
+    } else {
+        NoiseModel::production()
+    };
+    let sim = SchedulerSim::new(cluster, CostModel::slurm_like_tx_green(), noise, cfg.seed);
+    let agg = aggregation::for_mode(cfg.mode);
+    let job = agg.plan(&cell.label(), &cell.workload(), &cell.shape())?;
+    let (outcome, job_id) = sim.run_single(job);
+    summarize(cell.clone(), &outcome, job_id, 1.0)
+}
+
+fn summarize(
+    cell: PaperCell,
+    outcome: &SimOutcome,
+    job_id: u64,
+    dt: f64,
+) -> Result<CellResult> {
+    let stats = outcome
+        .job_stats(job_id, cell.config.job_time)
+        .ok_or_else(|| Error::Infeasible(format!("{}: job did not finish", cell.label())))?;
+    let utilization = UtilizationSeries::from_steps(
+        &outcome.timeline,
+        cell.config.processors(),
+        dt,
+    );
+    Ok(CellResult {
+        runtime: stats.runtime,
+        overhead: stats.overhead,
+        dispatch_span: stats.dispatch_span,
+        release_span: stats.release_span,
+        utilization,
+        longest_busy_stretch: outcome.longest_busy_stretch,
+        unusable_in_production: outcome.unusable_in_production(),
+        events: outcome.events_processed,
+        cell,
+    })
+}
+
+/// Run the full (or truncated) Table III matrix. Returns the per-cell
+/// overhead points (for Table III / Fig 1) and all individual results
+/// (for Fig 2 and diagnostics). `progress` is called after each run.
+pub fn run_matrix(
+    opts: &ExperimentOpts,
+    mut progress: impl FnMut(&CellResult),
+) -> Result<(Vec<OverheadPoint>, Vec<CellResult>)> {
+    let mut points = Vec::new();
+    let mut all = Vec::new();
+    for &nodes in NODE_SCALES.iter().filter(|&&n| n <= opts.max_nodes) {
+        for task in &TASK_CONFIGS {
+            for mode in [Mode::MultiLevel, Mode::NodeBased] {
+                if !opts.include_na && presets::is_paper_na(nodes, task, mode) {
+                    continue;
+                }
+                let mut runtimes = Vec::with_capacity(opts.runs);
+                for run_idx in 0..opts.runs {
+                    let cell = PaperCell::new(nodes, *task, mode, run_idx);
+                    let res = run_cell(&cell)?;
+                    runtimes.push(res.runtime);
+                    progress(&res);
+                    all.push(res);
+                }
+                points.push(OverheadPoint {
+                    nodes,
+                    task_time: task.task_time,
+                    mode,
+                    runtimes,
+                    t_job: task.job_time,
+                });
+            }
+        }
+    }
+    Ok((points, all))
+}
+
+/// Pick, per `(nodes, task, mode)`, the run whose runtime is the median of
+/// its cell — the runs Fig 2 plots.
+pub fn median_runs(all: &[CellResult]) -> Vec<&CellResult> {
+    let mut out: Vec<&CellResult> = Vec::new();
+    for &nodes in &NODE_SCALES {
+        for task in &TASK_CONFIGS {
+            for mode in [Mode::MultiLevel, Mode::NodeBased] {
+                let mut cell_runs: Vec<&CellResult> = all
+                    .iter()
+                    .filter(|r| {
+                        r.cell.nodes == nodes
+                            && r.cell.task.task_time == task.task_time
+                            && r.cell.mode == mode
+                    })
+                    .collect();
+                if cell_runs.is_empty() {
+                    continue;
+                }
+                cell_runs.sort_by(|a, b| a.runtime.partial_cmp(&b.runtime).expect("no NaN"));
+                out.push(cell_runs[cell_runs.len() / 2]);
+            }
+        }
+    }
+    out
+}
+
+/// Label in the paper's Fig 2 convention: `M-S1-A` (mode, scale index,
+/// run letter).
+pub fn fig2_label(cell: &PaperCell) -> String {
+    let scale_idx = NODE_SCALES
+        .iter()
+        .position(|&n| n == cell.nodes)
+        .map(|i| i + 1)
+        .unwrap_or(0);
+    let mode = match cell.mode {
+        Mode::MultiLevel => "M",
+        Mode::NodeBased => "N",
+        Mode::PerTask => "P",
+    };
+    let run = (b'A' + cell.run_idx as u8) as char;
+    format!("{mode}-S{scale_idx}-{run}-t{}", cell.task.task_time as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cell(mode: Mode, run_idx: usize) -> PaperCell {
+        PaperCell::new(32, TASK_CONFIGS[3], mode, run_idx) // 32 nodes, 60 s
+    }
+
+    #[test]
+    fn single_cell_runs_and_lands_near_paper() {
+        let res = run_cell(&small_cell(Mode::NodeBased, 0)).unwrap();
+        // Paper: N* at 32 nodes ≈ 241–243 s.
+        assert!(
+            (240.5..250.0).contains(&res.runtime),
+            "runtime {}",
+            res.runtime
+        );
+        assert!(res.utilization.peak() > 0.99, "fills the machine");
+    }
+
+    #[test]
+    fn multi_level_costs_more_at_32_nodes() {
+        // Median of three runs, exactly like the paper's Table III.
+        let med = |mode: Mode| {
+            let mut rts: Vec<f64> = (0..3)
+                .map(|i| run_cell(&small_cell(mode, i)).unwrap().runtime)
+                .collect();
+            rts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            rts[1]
+        };
+        let m = med(Mode::MultiLevel);
+        let n = med(Mode::NodeBased);
+        // Paper: M* ≈ 277–305 vs N* ≈ 241–243.
+        assert!(m > n + 10.0, "M {m} vs N {n}");
+        assert!((260.0..340.0).contains(&m), "M median {m}");
+        assert!((240.5..255.0).contains(&n), "N median {n}");
+    }
+
+    #[test]
+    fn quick_matrix_has_expected_cells() {
+        let opts = ExperimentOpts {
+            max_nodes: 32,
+            runs: 1,
+            ..Default::default()
+        };
+        let (points, all) = run_matrix(&opts, |_| {}).unwrap();
+        // 1 scale × 4 tasks × 2 modes.
+        assert_eq!(points.len(), 8);
+        assert_eq!(all.len(), 8);
+        for p in &points {
+            assert_eq!(p.runtimes.len(), 1);
+            assert!(p.median_runtime() > 240.0);
+        }
+    }
+
+    #[test]
+    fn median_runs_picks_one_per_cell() {
+        let opts = ExperimentOpts {
+            max_nodes: 32,
+            runs: 3,
+            ..Default::default()
+        };
+        let (_, all) = run_matrix(&opts, |_| {}).unwrap();
+        let med = median_runs(&all);
+        assert_eq!(med.len(), 8);
+        // The median run's runtime is the middle of its cell's three.
+        for m in med {
+            let mut cell_times: Vec<f64> = all
+                .iter()
+                .filter(|r| {
+                    r.cell.nodes == m.cell.nodes
+                        && r.cell.mode == m.cell.mode
+                        && r.cell.task.task_time == m.cell.task.task_time
+                })
+                .map(|r| r.runtime)
+                .collect();
+            cell_times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            assert_eq!(m.runtime, cell_times[1]);
+        }
+    }
+
+    #[test]
+    fn fig2_labels() {
+        let c = PaperCell::new(512, TASK_CONFIGS[0], Mode::MultiLevel, 2);
+        assert_eq!(fig2_label(&c), "M-S5-C-t1");
+        let c2 = PaperCell::new(32, TASK_CONFIGS[3], Mode::NodeBased, 0);
+        assert_eq!(fig2_label(&c2), "N-S1-A-t60");
+    }
+}

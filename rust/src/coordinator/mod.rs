@@ -1,0 +1,7 @@
+//! The top-level coordinator: experiment orchestration (the paper's
+//! benchmark matrix), the CLI, and result persistence.
+
+pub mod cli;
+pub mod experiment;
+
+pub use experiment::{run_cell, run_matrix, CellResult, ExperimentOpts};

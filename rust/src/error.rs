@@ -1,0 +1,44 @@
+//! Library-wide error type.
+
+use thiserror::Error;
+
+/// Errors surfaced by the llsched library.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// A job or task referenced an id that does not exist.
+    #[error("unknown {kind} id {id}")]
+    UnknownId { kind: &'static str, id: u64 },
+
+    /// A resource request cannot ever be satisfied by the cluster.
+    #[error("infeasible request: {0}")]
+    Infeasible(String),
+
+    /// Configuration file / value errors.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// The scheduler refused the submission (e.g. responsiveness guard).
+    #[error("submission rejected: {0}")]
+    Rejected(String),
+
+    /// Invalid state transition in a job/task/node state machine.
+    #[error("invalid transition: {0}")]
+    InvalidTransition(String),
+
+    /// PJRT / XLA runtime errors.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// I/O errors (artifact loading, report writing).
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(e.to_string())
+    }
+}
+
+/// Convenience result alias used across the crate.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,10 @@
+//! The real executor: run an aggregated job's compute tasks as actual
+//! work on this machine's cores, following the generated node scripts'
+//! structure (one pinned worker lane per core) — proving the aggregation
+//! plans drive real execution, not just the DES.
+
+pub mod payload;
+pub mod worker;
+
+pub use payload::Payload;
+pub use worker::{NodeExecutor, NodeRunReport};

@@ -1,0 +1,100 @@
+//! Compute-task payloads for the real executor.
+//!
+//! The paper's benchmark tasks are constant-time occupiers; the real
+//! executor supports those (sleep / busy-spin) plus the genuine article:
+//! a short-running simulation implemented by the AOT-compiled JAX/Pallas
+//! artifact executed through PJRT.
+
+use crate::error::Result;
+use crate::runtime::server::RuntimeServer;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// What one compute task does.
+#[derive(Clone)]
+pub enum Payload {
+    /// Sleep for the given seconds (a cooperative constant-time task).
+    Sleep(f64),
+    /// Busy-spin for the given seconds (an uncooperative one).
+    Spin(f64),
+    /// Run `iters` chained simulation steps through the node-local PJRT
+    /// runtime server.
+    Simulate { server: Arc<RuntimeServer>, iters: usize },
+}
+
+impl std::fmt::Debug for Payload {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Payload::Sleep(s) => write!(f, "Sleep({s}s)"),
+            Payload::Spin(s) => write!(f, "Spin({s}s)"),
+            Payload::Simulate { iters, server } => write!(
+                f,
+                "Simulate({iters} iters of {})",
+                server.artifact().name
+            ),
+        }
+    }
+}
+
+/// Result of executing one compute task.
+#[derive(Debug, Clone, Copy)]
+pub struct TaskResult {
+    /// Wall time the task took, seconds.
+    pub wall: f64,
+    /// Payload checksum (0 for sleep/spin) — integrity check for the
+    /// simulate path, verified against the Python oracle in tests.
+    pub checksum: f32,
+}
+
+impl Payload {
+    /// Execute the payload for compute task `task_id`.
+    pub fn run(&self, task_id: u64) -> Result<TaskResult> {
+        let t0 = Instant::now();
+        match self {
+            Payload::Sleep(s) => {
+                std::thread::sleep(Duration::from_secs_f64(*s));
+                Ok(TaskResult { wall: t0.elapsed().as_secs_f64(), checksum: 0.0 })
+            }
+            Payload::Spin(s) => {
+                let mut acc = task_id;
+                while t0.elapsed().as_secs_f64() < *s {
+                    // A little integer churn so the loop can't be elided.
+                    for _ in 0..1000 {
+                        acc = acc.wrapping_mul(6364136223846793005).wrapping_add(1);
+                    }
+                    std::hint::black_box(acc);
+                }
+                Ok(TaskResult { wall: t0.elapsed().as_secs_f64(), checksum: 0.0 })
+            }
+            Payload::Simulate { server, iters } => {
+                let checksum = server.run_task(task_id, *iters)?;
+                Ok(TaskResult { wall: t0.elapsed().as_secs_f64(), checksum })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sleep_takes_about_right() {
+        let r = Payload::Sleep(0.05).run(0).unwrap();
+        assert!(r.wall >= 0.05 && r.wall < 0.5, "wall {}", r.wall);
+        assert_eq!(r.checksum, 0.0);
+    }
+
+    #[test]
+    fn spin_takes_about_right() {
+        let r = Payload::Spin(0.05).run(1).unwrap();
+        assert!(r.wall >= 0.05 && r.wall < 0.5, "wall {}", r.wall);
+    }
+
+    #[test]
+    fn debug_formats() {
+        assert_eq!(format!("{:?}", Payload::Sleep(1.0)), "Sleep(1s)");
+        assert!(format!("{:?}", Payload::Spin(2.0)).contains("Spin"));
+    }
+    // Simulate-path tests live in rust/tests/runtime_integration.rs.
+}

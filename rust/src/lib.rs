@@ -1,0 +1,46 @@
+//! # llsched — node-based job scheduling for large-scale short-running jobs
+//!
+//! Reproduction of Byun et al., *"Node-Based Job Scheduling for Large Scale
+//! Simulations of Short Running Jobs"*, IEEE HPEC 2021.
+//!
+//! The library is organized in layers (see `DESIGN.md`):
+//!
+//! * **Substrates** — a deterministic discrete-event simulation engine
+//!   ([`sim`]), a cluster model ([`cluster`]), and a Slurm-like centralized
+//!   scheduler ([`scheduler`]) with a calibrated cost model.
+//! * **The paper's contribution** — task-aggregation modes ([`aggregation`]):
+//!   per-task (naive baseline), per-core multi-level scheduling
+//!   (LLMapReduce MIMO), and per-node *node-based* scheduling ("triples
+//!   mode") with generated per-node execution scripts and explicit
+//!   process-affinity control. User-facing launch tools mirroring
+//!   LLsub / LLMapReduce live in [`lltools`]; preemptable spot jobs in
+//!   [`spot`].
+//! * **Workloads & metrics** — the paper's Table I/II benchmark matrix
+//!   ([`workload`]), utilization timelines, overhead metrics and
+//!   paper-style reports ([`metrics`]).
+//! * **Real execution** — a PJRT runtime ([`runtime`]) that loads the
+//!   AOT-compiled JAX/Pallas artifacts, and a pinned-thread executor
+//!   ([`exec`]) so scheduled tasks can run *real* compute payloads.
+//! * **Infrastructure** — config parsing ([`config`]), a bench harness
+//!   ([`mod@bench`]), a tiny property-testing toolkit ([`testing`]) and
+//!   utilities ([`util`]); all hand-rolled because this build is fully
+//!   offline (no serde/clap/criterion/proptest in the vendored crate set).
+
+pub mod aggregation;
+pub mod bench;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod error;
+pub mod exec;
+pub mod lltools;
+pub mod metrics;
+pub mod runtime;
+pub mod scheduler;
+pub mod sim;
+pub mod spot;
+pub mod testing;
+pub mod util;
+pub mod workload;
+
+pub use error::{Error, Result};

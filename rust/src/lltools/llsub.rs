@@ -1,0 +1,137 @@
+//! `LLsub` — the general-purpose launcher.
+//!
+//! Classic mode submits an array of single-core scheduling tasks; triples
+//! mode (`LLsub cmd [N,PPN,TPP]`) submits whole-node scheduling tasks with
+//! generated pinning scripts — the paper's node-based path.
+
+use crate::aggregation::plan::{Aggregator, ClusterShape, Workload};
+use crate::aggregation::script::NodeScript;
+use crate::aggregation::triples::Triple;
+use crate::aggregation::{NodeBased, PerTask};
+use crate::error::Result;
+use crate::scheduler::job::JobSpec;
+
+/// A prepared LLsub submission.
+#[derive(Debug)]
+pub struct Submission {
+    pub job: JobSpec,
+    /// Generated node scripts (triples mode only).
+    pub scripts: Vec<NodeScript>,
+}
+
+/// The LLsub front end.
+#[derive(Debug, Clone)]
+pub struct LLsub {
+    /// Command the workers run (recorded into generated scripts).
+    pub command: String,
+    /// Estimated duration of one invocation, seconds (used by the DES;
+    /// the real executor measures actual durations).
+    pub task_seconds: f64,
+    /// Submit into a reservation.
+    pub reservation: Option<String>,
+    /// Job priority.
+    pub priority: i32,
+}
+
+impl LLsub {
+    pub fn new(command: &str, task_seconds: f64) -> LLsub {
+        LLsub {
+            command: command.to_string(),
+            task_seconds,
+            reservation: None,
+            priority: 0,
+        }
+    }
+
+    /// Classic array submission: `count` single-core tasks.
+    pub fn array(&self, count: u64, shape: &ClusterShape) -> Result<Submission> {
+        let w = Workload::Uniform { count, duration: self.task_seconds };
+        let mut job = PerTask.plan(&format!("LLsub:{}", self.command), &w, shape)?;
+        job.reservation = self.reservation.clone();
+        job.priority = self.priority;
+        Ok(Submission { job, scripts: vec![] })
+    }
+
+    /// Triples-mode submission: `[N,PPN,TPP]` → N whole-node scheduling
+    /// tasks running N×PPN workers, with generated pinned scripts.
+    pub fn triples(&self, triple: &Triple, shape: &ClusterShape) -> Result<Submission> {
+        triple.validate(shape.cores_per_node)?;
+        let count = triple.total_processes();
+        let w = Workload::Uniform { count, duration: self.task_seconds };
+        let run_shape = ClusterShape {
+            nodes: triple.nodes,
+            // PPN workers per node; each lane is one worker process.
+            cores_per_node: triple.processes_per_node,
+            task_mem_mib: shape.task_mem_mib,
+        };
+        let nb = NodeBased::from_triple(triple);
+        let mut job = nb.plan(
+            &format!("LLsub:{}:{}", self.command, triple),
+            &w,
+            &run_shape,
+        )?;
+        job.reservation = self.reservation.clone();
+        job.priority = self.priority;
+        let scripts = nb.scripts(&w, &run_shape);
+        Ok(Submission { job, scripts })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::job::ResourceRequest;
+
+    fn shape() -> ClusterShape {
+        ClusterShape { nodes: 8, cores_per_node: 64, task_mem_mib: 256 }
+    }
+
+    #[test]
+    fn array_mode_is_per_task() {
+        let sub = LLsub::new("./sim", 5.0).array(100, &shape()).unwrap();
+        assert_eq!(sub.job.array_size(), 100);
+        assert!(sub.scripts.is_empty());
+        assert!(sub.job.name.contains("./sim"));
+    }
+
+    #[test]
+    fn triples_mode_is_node_based() {
+        let t = Triple::fill(8, 64);
+        let sub = LLsub::new("./sim", 5.0).triples(&t, &shape()).unwrap();
+        assert_eq!(sub.job.array_size(), 8);
+        assert_eq!(sub.scripts.len(), 8);
+        assert!(sub
+            .job
+            .tasks
+            .iter()
+            .all(|x| x.request == ResourceRequest::WholeNode));
+        // One worker per core, one task per worker.
+        assert_eq!(sub.job.total_compute_tasks(), 512);
+    }
+
+    #[test]
+    fn triples_respects_ppn() {
+        // 2 nodes × 4 workers × 8 threads on 64-core nodes.
+        let t = Triple { nodes: 2, processes_per_node: 4, threads_per_process: 8 };
+        let sub = LLsub::new("cmd", 1.0).triples(&t, &shape()).unwrap();
+        assert_eq!(sub.scripts.len(), 2);
+        assert!(sub.scripts.iter().all(|s| s.threads_per_process == 8));
+        assert_eq!(sub.scripts[0].lanes.len(), 4, "one lane per worker");
+    }
+
+    #[test]
+    fn oversubscribed_triple_rejected() {
+        let t = Triple { nodes: 1, processes_per_node: 64, threads_per_process: 2 };
+        assert!(LLsub::new("c", 1.0).triples(&t, &shape()).is_err());
+    }
+
+    #[test]
+    fn reservation_and_priority_carried() {
+        let mut ll = LLsub::new("c", 1.0);
+        ll.reservation = Some("bench".into());
+        ll.priority = 7;
+        let sub = ll.triples(&Triple::fill(2, 64), &shape()).unwrap();
+        assert_eq!(sub.job.reservation.as_deref(), Some("bench"));
+        assert_eq!(sub.job.priority, 7);
+    }
+}

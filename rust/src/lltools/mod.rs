@@ -1,0 +1,17 @@
+//! User-facing launch tools, mirroring the MIT SuperCloud stack the paper
+//! integrates node-based scheduling into:
+//!
+//! * [`llsub::LLsub`] — submit a command at a given scale, either as a
+//!   classic array job or in triples mode (`LLsub cmd [Nnodes,PPN,TPP]`),
+//! * [`llmapreduce::LLMapReduce`] — map a task list over the machine with
+//!   MIMO (multi-level, per-core) aggregation, optionally with the
+//!   `--triples` flag for node-based aggregation.
+//!
+//! Both tools produce ordinary [`crate::scheduler::job::JobSpec`]s, so they run unchanged against
+//! the DES scheduler and the real executor.
+
+pub mod llmapreduce;
+pub mod llsub;
+
+pub use llmapreduce::LLMapReduce;
+pub use llsub::LLsub;

@@ -1,0 +1,275 @@
+//! `llsched` — the leader binary: runs the paper's benchmarks, renders
+//! tables/figures, and drives demo workloads.
+//!
+//! ```text
+//! llsched table1                       # Table I (parameter sets)
+//! llsched table2                       # Table II (benchmark configs)
+//! llsched table3 [--quick] [--runs N] [--include-na] [--out DIR]
+//! llsched fig1   [--quick] [--out DIR] # overhead scatter (CSV + ASCII)
+//! llsched fig2   [--quick] [--out DIR] # utilization curves (CSV + ASCII)
+//! llsched speedup                      # headline 57×/100× numbers
+//! llsched run CONFIG.toml              # one run from a config file
+//! llsched spot [--nodes N]             # spot release latency demo
+//! llsched artifacts                    # check PJRT artifacts load
+//! ```
+
+use llsched::coordinator::cli::Args;
+use llsched::coordinator::experiment::{
+    fig2_label, median_runs, run_matrix, ExperimentOpts,
+};
+use llsched::config::{Mode, RunConfig};
+use llsched::error::Result;
+use llsched::metrics::overhead::speedup;
+use llsched::metrics::report;
+use llsched::util::fmt::dur;
+use std::path::PathBuf;
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.command.as_str() {
+        "" | "help" | "--help" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        "table1" => {
+            println!("Table I — parameter sets (task time vs tasks per processor)\n");
+            println!("{}", report::table1());
+            Ok(())
+        }
+        "table2" => {
+            println!("Table II — benchmark configurations\n");
+            println!("{}", report::table2());
+            Ok(())
+        }
+        "table3" => cmd_table3(args),
+        "fig1" => cmd_fig1(args),
+        "fig2" => cmd_fig2(args),
+        "speedup" => cmd_speedup(args),
+        "run" => cmd_run(args),
+        "spot" => cmd_spot(args),
+        "artifacts" => cmd_artifacts(args),
+        other => {
+            eprint!("{}", HELP);
+            Err(llsched::Error::Config(format!("unknown command {other:?}")))
+        }
+    }
+}
+
+const HELP: &str = "\
+llsched — node-based job scheduling (HPEC 2021 reproduction)
+
+commands:
+  table1                    print Table I (parameter sets)
+  table2                    print Table II (benchmark configurations)
+  table3 [--quick] [--runs N] [--include-na] [--out DIR]
+                            run the benchmark matrix, print Table III
+  fig1   [--quick] [--out DIR]   overhead scatter (Fig 1) as CSV + ASCII
+  fig2   [--quick] [--out DIR]   utilization curves (Fig 2) as CSV + ASCII
+  speedup                   headline M*/N* overhead ratios at 512 nodes
+  run CONFIG.toml [--seed N]     run one configuration
+  spot [--nodes N]          spot-job release-latency comparison
+  artifacts                 verify AOT artifacts load and execute
+";
+
+fn opts_from(args: &Args) -> Result<ExperimentOpts> {
+    let quick = args.flag("quick");
+    Ok(ExperimentOpts {
+        include_na: args.flag("include-na"),
+        max_nodes: args.opt_parse("max-nodes", if quick { 128 } else { 512 })?,
+        runs: args.opt_parse("runs", if quick { 1 } else { 3 })?,
+        dt: 1.0,
+    })
+}
+
+fn out_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.opt("out").unwrap_or("results"))
+}
+
+fn cmd_table3(args: &Args) -> Result<()> {
+    args.expect_known(&["quick", "runs", "include-na", "out", "max-nodes"])?;
+    let opts = opts_from(args)?;
+    let t0 = std::time::Instant::now();
+    let (points, _all) = run_matrix(&opts, |r| {
+        eprintln!(
+            "  {}  runtime {:>8}  overhead {:>8}  fill {:>8}{}",
+            r.cell.label(),
+            dur(r.runtime),
+            dur(r.overhead),
+            dur(r.dispatch_span),
+            if r.unusable_in_production { "  [guard: unusable in production]" } else { "" },
+        );
+    })?;
+    println!("\nTable III — summary of run times (simulated)\n");
+    println!("{}", report::table3(&points));
+    let dir = out_dir(args);
+    std::fs::create_dir_all(&dir)?;
+    std::fs::write(dir.join("table3.json"), report::results_json(&points).to_pretty())?;
+    println!("(matrix wall time {:.1}s; JSON in {:?})", t0.elapsed().as_secs_f64(), dir.join("table3.json"));
+    Ok(())
+}
+
+fn cmd_fig1(args: &Args) -> Result<()> {
+    args.expect_known(&["quick", "runs", "include-na", "out", "max-nodes"])?;
+    let opts = opts_from(args)?;
+    let (points, _) = run_matrix(&opts, |_| {})?;
+    println!("Fig 1 — normalized overhead vs task time\n");
+    println!("{}", report::fig1_plot(&points));
+    let dir = out_dir(args);
+    report::fig1_csv(&points).save(&dir.join("fig1.csv"))?;
+    println!("(CSV in {:?})", dir.join("fig1.csv"));
+    Ok(())
+}
+
+fn cmd_fig2(args: &Args) -> Result<()> {
+    args.expect_known(&["quick", "runs", "include-na", "out", "max-nodes"])?;
+    let opts = opts_from(args)?;
+    let (_, all) = run_matrix(&opts, |_| {})?;
+    let med = median_runs(&all);
+    let series: Vec<(String, llsched::metrics::timeline::UtilizationSeries)> = med
+        .iter()
+        .map(|r| (fig2_label(&r.cell), r.utilization.clone()))
+        .collect();
+    println!("Fig 2 — system utilization over time (median runs)\n");
+    // Plot a readable subset: largest scale, both modes, t=60.
+    let subset: Vec<_> = series
+        .iter()
+        .filter(|(l, _)| l.ends_with("t60"))
+        .cloned()
+        .collect();
+    println!("{}", report::fig2_plot(&subset));
+    let dir = out_dir(args);
+    report::fig2_csv(&series).save(&dir.join("fig2.csv"))?;
+    println!("(full CSV in {:?})", dir.join("fig2.csv"));
+    Ok(())
+}
+
+fn cmd_speedup(args: &Args) -> Result<()> {
+    args.expect_known(&["runs"])?;
+    // Only the cells the headline needs: 512 nodes, t=60, both modes.
+    let opts = ExperimentOpts {
+        include_na: false,
+        max_nodes: 512,
+        runs: args.opt_parse("runs", 3)?,
+        dt: 1.0,
+    };
+    let (points, _) = run_matrix(&opts, |_| {})?;
+    let m = points
+        .iter()
+        .find(|p| p.nodes == 512 && p.task_time == 60.0 && p.mode == Mode::MultiLevel)
+        .expect("M* 512 t=60 present");
+    println!("512-node scale (M* only measurable at t=60, as in the paper):");
+    println!(
+        "  M* t=60 runtimes: {:?}",
+        m.runtimes.iter().map(|r| r.round()).collect::<Vec<_>>()
+    );
+    let mut med_ratios = Vec::new();
+    let mut best_ratios = Vec::new();
+    for n in points
+        .iter()
+        .filter(|p| p.nodes == 512 && p.mode == Mode::NodeBased)
+    {
+        let med = speedup(m, n, false);
+        let best = speedup(m, n, true);
+        med_ratios.push(med);
+        best_ratios.push(best);
+        println!(
+            "  vs N* t={:<3} runtimes {:?}: overhead ratio {:>5.0}x (median) {:>5.0}x (best)",
+            n.task_time,
+            n.runtimes.iter().map(|r| r.round()).collect::<Vec<_>>(),
+            med,
+            best
+        );
+    }
+    let max_med = med_ratios.iter().cloned().fold(0.0, f64::max);
+    let max_best = best_ratios.iter().cloned().fold(0.0, f64::max);
+    println!(
+        "  headline: up to {max_med:.0}x (median basis) / {max_best:.0}x (best basis); paper reports ~57x / ~100x"
+    );
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    args.expect_known(&["seed"])?;
+    let path = args
+        .positional
+        .first()
+        .ok_or_else(|| llsched::Error::Config("run needs a CONFIG.toml".into()))?;
+    let mut cfg = RunConfig::from_file(std::path::Path::new(path))?;
+    cfg.seed = args.opt_parse("seed", cfg.seed)?;
+    let task = llsched::config::presets::TaskConfig {
+        name: "custom",
+        task_time: cfg.task_time,
+        job_time: cfg.job_time,
+    };
+    let mut cell = llsched::workload::paper::PaperCell::new(cfg.nodes, task, cfg.mode, 0);
+    cell.config = cfg;
+    let res = llsched::coordinator::experiment::run_cell(&cell)?;
+    println!("run {}:", cell.label());
+    println!("  runtime        {}", dur(res.runtime));
+    println!("  overhead       {}", dur(res.overhead));
+    println!("  dispatch span  {}", dur(res.dispatch_span));
+    println!("  release span   {}", dur(res.release_span));
+    println!("  peak util      {:.1}%", res.utilization.peak() * 100.0);
+    println!("  busy stretch   {}", dur(res.longest_busy_stretch));
+    Ok(())
+}
+
+fn cmd_spot(args: &Args) -> Result<()> {
+    args.expect_known(&["nodes"])?;
+    let nodes: u32 = args.opt_parse("nodes", 32)?;
+    for mode in [Mode::MultiLevel, Mode::NodeBased] {
+        let r = llsched::spot::measure_release(mode, nodes, 64, 120.0, 7)?;
+        println!(
+            "{:<12} {:>6} sched tasks   release latency {:>9}",
+            mode.to_string(),
+            r.sched_tasks,
+            dur(r.release_latency)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    args.expect_known(&[])?;
+    let mut pool = llsched::runtime::ExecPool::discover()?;
+    let files = pool.list()?;
+    println!("artifacts directory: {} file(s)", files.len());
+    for f in &files {
+        let name = f
+            .file_name()
+            .and_then(|n| n.to_str())
+            .and_then(|n| n.strip_suffix(".hlo.txt"))
+            .unwrap_or_default()
+            .to_string();
+        let rt = pool.get(&name)?;
+        let a = &rt.artifact;
+        let state = vec![0.5f32; a.elements()];
+        let (out, checksum) = rt.step(&state)?;
+        println!(
+            "  {name}: platform={} shape={}x{}x{} checksum={checksum:.6} out[0]={:.6}",
+            rt.platform(),
+            a.batch,
+            a.h,
+            a.w,
+            out[0]
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,9 @@
+//! Metrics: utilization timelines (Fig 2), overhead analysis (Fig 1),
+//! and paper-style report rendering (Tables I–III).
+
+pub mod overhead;
+pub mod report;
+pub mod timeline;
+
+pub use overhead::{norm_overhead, speedup, OverheadPoint};
+pub use timeline::UtilizationSeries;

@@ -1,0 +1,122 @@
+//! Overhead analysis (the paper's Fig 1 and headline speedup).
+//!
+//! Overhead = runtime − T_job; Fig 1 plots it normalized by T_job per
+//! `(task time, scale, mode)` using the median of three runs. The
+//! headline claim compares multi-level vs node-based overhead at 512
+//! nodes: ~57× on medians, ~100× on best runtimes.
+
+use crate::config::Mode;
+use crate::util::stats;
+
+/// One Fig 1 point: a `(scale, task time, mode)` cell with its three runs.
+#[derive(Debug, Clone)]
+pub struct OverheadPoint {
+    pub nodes: u32,
+    pub task_time: f64,
+    pub mode: Mode,
+    /// Measured runtimes of the (usually three) runs, seconds.
+    pub runtimes: Vec<f64>,
+    /// Job time per processor T_job.
+    pub t_job: f64,
+}
+
+impl OverheadPoint {
+    /// Median runtime (the paper's reported statistic).
+    pub fn median_runtime(&self) -> f64 {
+        stats::median(&self.runtimes)
+    }
+
+    /// Best (minimum) runtime.
+    pub fn best_runtime(&self) -> f64 {
+        stats::min(&self.runtimes)
+    }
+
+    /// Median overhead, seconds.
+    pub fn overhead(&self) -> f64 {
+        self.median_runtime() - self.t_job
+    }
+
+    /// Fig 1's vertical axis: median overhead normalized by T_job.
+    pub fn norm_overhead(&self) -> f64 {
+        self.overhead() / self.t_job
+    }
+
+    /// Best-run overhead.
+    pub fn best_overhead(&self) -> f64 {
+        self.best_runtime() - self.t_job
+    }
+}
+
+/// Normalized overhead for a single runtime.
+pub fn norm_overhead(runtime: f64, t_job: f64) -> f64 {
+    (runtime - t_job) / t_job
+}
+
+/// Overhead ratio between two points (e.g. M* / N* at the same cell) —
+/// the paper's "up to 100 times faster scheduler performance".
+/// `best` selects best-runtime basis instead of median.
+pub fn speedup(multi: &OverheadPoint, node: &OverheadPoint, best: bool) -> f64 {
+    let (m, n) = if best {
+        (multi.best_overhead(), node.best_overhead())
+    } else {
+        (multi.overhead(), node.overhead())
+    };
+    if n <= 0.0 {
+        f64::INFINITY
+    } else {
+        m / n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn point(mode: Mode, runtimes: &[f64]) -> OverheadPoint {
+        OverheadPoint {
+            nodes: 512,
+            task_time: 60.0,
+            mode,
+            runtimes: runtimes.to_vec(),
+            t_job: 240.0,
+        }
+    }
+
+    #[test]
+    fn paper_512_node_long_cell() {
+        // Table III, 512 nodes, t=60: M* 2644,2768,2791; N* 266,487,312.
+        let m = point(Mode::MultiLevel, &[2644.0, 2768.0, 2791.0]);
+        let n = point(Mode::NodeBased, &[266.0, 487.0, 312.0]);
+        assert_eq!(m.median_runtime(), 2768.0);
+        assert_eq!(n.median_runtime(), 312.0);
+        let med = speedup(&m, &n, false);
+        let best = speedup(&m, &n, true);
+        // Paper: "about 57x (median) and 100x (best)".
+        assert!((30.0..80.0).contains(&med), "median speedup {med}");
+        assert!((80.0..120.0).contains(&best), "best speedup {best}");
+    }
+
+    #[test]
+    fn norm_overhead_axis() {
+        assert!((norm_overhead(242.0, 240.0) - 2.0 / 240.0).abs() < 1e-12);
+        assert!((norm_overhead(480.0, 240.0) - 1.0).abs() < 1e-12);
+        let p = point(Mode::NodeBased, &[241.0, 242.0, 243.0]);
+        assert!(p.norm_overhead() < 0.1, "node-based under 10% (paper)");
+    }
+
+    #[test]
+    fn zero_or_negative_node_overhead_is_infinite_speedup() {
+        let m = point(Mode::MultiLevel, &[300.0]);
+        let n = point(Mode::NodeBased, &[240.0]);
+        assert!(speedup(&m, &n, false).is_infinite());
+    }
+
+    #[test]
+    fn best_vs_median_basis() {
+        let p = point(Mode::MultiLevel, &[250.0, 300.0, 350.0]);
+        assert_eq!(p.median_runtime(), 300.0);
+        assert_eq!(p.best_runtime(), 250.0);
+        assert_eq!(p.overhead(), 60.0);
+        assert_eq!(p.best_overhead(), 10.0);
+    }
+}

@@ -1,0 +1,236 @@
+//! Paper-style report rendering: Tables I–III, Fig 1 data, Fig 2 series,
+//! as ASCII tables/plots, CSV files and JSON documents.
+
+use crate::config::presets::{TaskConfig, CORES_PER_NODE, NODE_SCALES, TASK_CONFIGS};
+use crate::config::Mode;
+use crate::metrics::overhead::OverheadPoint;
+use crate::metrics::timeline::UtilizationSeries;
+use crate::util::csv::Csv;
+use crate::util::fmt::{ascii_plot, count, Table};
+use crate::util::json::Json;
+
+/// Render Table I (parameter sets).
+pub fn table1() -> String {
+    let mut t = Table::new(vec!["Configuration", "Rapid", "Fast", "Medium", "Long"]);
+    let row = |name: &str, f: &dyn Fn(&TaskConfig) -> String| {
+        let mut cells = vec![name.to_string()];
+        cells.extend(TASK_CONFIGS.iter().map(f));
+        cells
+    };
+    t.row(row("Task time, t", &|c| format!("{}s", c.task_time)));
+    t.row(row("Job time per processor, T_job", &|c| {
+        format!("{}s", c.job_time)
+    }));
+    t.row(row("Tasks per processor, n", &|c| {
+        format!("{}", c.tasks_per_processor())
+    }));
+    t.render()
+}
+
+/// Render Table II (benchmark configurations).
+pub fn table2() -> String {
+    let mut t = Table::new(vec!["Nodes", "Cores/node", "Processors P", "Total processor time"]);
+    for &n in &NODE_SCALES {
+        let p = n as u64 * CORES_PER_NODE as u64;
+        let hours = p as f64 * 240.0 / 3600.0;
+        t.row(vec![
+            n.to_string(),
+            CORES_PER_NODE.to_string(),
+            count(p),
+            format!("{hours:.1} h"),
+        ]);
+    }
+    t.render()
+}
+
+/// Render Table III (run times) from measured points. Points are keyed by
+/// `(nodes, task_time, mode)`; missing cells render as N/A, matching the
+/// paper's 512-node multi-level gaps.
+pub fn table3(points: &[OverheadPoint]) -> String {
+    let mut t = Table::new(vec!["Config", "Mode", "t=1", "t=5", "t=30", "t=60"]);
+    for &nodes in &NODE_SCALES {
+        for mode in [Mode::MultiLevel, Mode::NodeBased] {
+            let mut cells = vec![format!("{nodes} nodes"), mode.short().to_string()];
+            for tc in &TASK_CONFIGS {
+                let cell = points.iter().find(|p| {
+                    p.nodes == nodes && p.mode == mode && p.task_time == tc.task_time
+                });
+                cells.push(match cell {
+                    Some(p) => p
+                        .runtimes
+                        .iter()
+                        .map(|r| format!("{r:.0}"))
+                        .collect::<Vec<_>>()
+                        .join(", "),
+                    None => "N/A".to_string(),
+                });
+            }
+            t.row(cells);
+        }
+    }
+    t.render()
+}
+
+/// Fig 1 as CSV: one row per `(nodes, task_time, mode)` with the median
+/// normalized overhead.
+pub fn fig1_csv(points: &[OverheadPoint]) -> Csv {
+    let mut c = Csv::with_header(&[
+        "nodes",
+        "task_time_s",
+        "mode",
+        "median_runtime_s",
+        "overhead_s",
+        "norm_overhead",
+    ]);
+    for p in points {
+        c.row(&[
+            p.nodes.to_string(),
+            format!("{}", p.task_time),
+            p.mode.short().to_string(),
+            format!("{:.1}", p.median_runtime()),
+            format!("{:.1}", p.overhead()),
+            format!("{:.4}", p.norm_overhead()),
+        ]);
+    }
+    c
+}
+
+/// Fig 1 as an ASCII scatter: normalized overhead vs task time, one series
+/// per `(scale, mode)`.
+pub fn fig1_plot(points: &[OverheadPoint]) -> String {
+    let mut series: Vec<(String, Vec<(f64, f64)>)> = Vec::new();
+    for &nodes in &NODE_SCALES {
+        for mode in [Mode::MultiLevel, Mode::NodeBased] {
+            let pts: Vec<(f64, f64)> = points
+                .iter()
+                .filter(|p| p.nodes == nodes && p.mode == mode)
+                .map(|p| (p.task_time, p.norm_overhead().max(0.0)))
+                .collect();
+            if !pts.is_empty() {
+                series.push((format!("{} {}n", mode.short(), nodes), pts));
+            }
+        }
+    }
+    let y_max = series
+        .iter()
+        .flat_map(|(_, pts)| pts.iter().map(|p| p.1))
+        .fold(0.1_f64, f64::max);
+    ascii_plot(&series, 64, 20, y_max * 1.05)
+}
+
+/// Fig 2 as CSV: long format `(label, t, utilization)`.
+pub fn fig2_csv(series: &[(String, UtilizationSeries)]) -> Csv {
+    let mut c = Csv::with_header(&["run", "t_s", "utilization"]);
+    for (label, s) in series {
+        for &(t, u) in &s.thin(400) {
+            c.row(&[label.clone(), format!("{t:.1}"), format!("{u:.4}")]);
+        }
+    }
+    c
+}
+
+/// Fig 2 as an ASCII plot (utilization vs time).
+pub fn fig2_plot(series: &[(String, UtilizationSeries)]) -> String {
+    let plot_series: Vec<(String, Vec<(f64, f64)>)> = series
+        .iter()
+        .map(|(label, s)| (label.clone(), s.thin(64)))
+        .collect();
+    ascii_plot(&plot_series, 72, 22, 1.0)
+}
+
+/// Full results document (for `results/*.json`).
+pub fn results_json(points: &[OverheadPoint]) -> Json {
+    let mut arr = Vec::new();
+    for p in points {
+        arr.push(
+            Json::obj()
+                .set("nodes", p.nodes as u64)
+                .set("task_time_s", p.task_time)
+                .set("mode", p.mode.short())
+                .set("runtimes_s", p.runtimes.clone())
+                .set("median_runtime_s", p.median_runtime())
+                .set("overhead_s", p.overhead())
+                .set("norm_overhead", p.norm_overhead()),
+        );
+    }
+    Json::obj()
+        .set("t_job_s", 240.0)
+        .set("cells", Json::Arr(arr))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_points() -> Vec<OverheadPoint> {
+        vec![
+            OverheadPoint {
+                nodes: 32,
+                task_time: 1.0,
+                mode: Mode::MultiLevel,
+                runtimes: vec![305.0, 284.0, 291.0],
+                t_job: 240.0,
+            },
+            OverheadPoint {
+                nodes: 32,
+                task_time: 1.0,
+                mode: Mode::NodeBased,
+                runtimes: vec![241.0, 242.0, 243.0],
+                t_job: 240.0,
+            },
+        ]
+    }
+
+    #[test]
+    fn table1_matches_paper_numbers() {
+        let t = table1();
+        assert!(t.contains("240"), "rapid tasks per processor");
+        assert!(t.contains("1s") && t.contains("60s"));
+    }
+
+    #[test]
+    fn table2_totals() {
+        let t = table2();
+        assert!(t.contains("32,768"));
+        assert!(t.contains("2184.5 h"));
+        assert!(t.contains("136.5 h"));
+    }
+
+    #[test]
+    fn table3_renders_measured_and_na() {
+        let t = table3(&sample_points());
+        assert!(t.contains("305, 284, 291"));
+        assert!(t.contains("241, 242, 243"));
+        assert!(t.contains("N/A"), "unmeasured cells are N/A");
+        assert!(t.contains("M*") && t.contains("N*"));
+    }
+
+    #[test]
+    fn fig1_csv_and_plot() {
+        let pts = sample_points();
+        let c = fig1_csv(&pts);
+        assert!(c.as_str().contains("nodes,task_time_s,mode"));
+        assert!(c.as_str().lines().count() == 3);
+        let plot = fig1_plot(&pts);
+        assert!(plot.contains("M* 32n"));
+        assert!(plot.contains("N* 32n"));
+    }
+
+    #[test]
+    fn fig2_csv_shape() {
+        let s = UtilizationSeries::from_steps(&[(0.0, 64), (100.0, 0)], 64, 1.0);
+        let c = fig2_csv(&[("M-S1-A".to_string(), s)]);
+        let lines: Vec<&str> = c.as_str().lines().collect();
+        assert_eq!(lines[0], "run,t_s,utilization");
+        assert!(lines.len() > 50);
+        assert!(lines[1].starts_with("M-S1-A,0.0,1.0000"));
+    }
+
+    #[test]
+    fn json_document() {
+        let j = results_json(&sample_points());
+        let s = j.to_string();
+        assert!(s.contains("\"cells\""));
+        assert!(s.contains("\"median_runtime_s\":291"));
+    }
+}

@@ -1,0 +1,147 @@
+//! Utilization-over-time series (the paper's Fig 2).
+//!
+//! The scheduler sim emits `(time, running_cores)` step points; this
+//! module normalizes them against the slice's processor count, shifts
+//! time zero to the first scheduling event (the paper does the same:
+//! "we shifted the time in such a way that the initial time zero is to be
+//! the first scheduling event"), and resamples onto a regular grid for
+//! plotting / CSV export.
+
+use crate::sim::Time;
+
+/// A utilization series for one run.
+#[derive(Debug, Clone)]
+pub struct UtilizationSeries {
+    /// Regular-grid samples `(t, utilization in [0,1])`, t starting at 0.
+    pub samples: Vec<(Time, f64)>,
+    /// Grid step, seconds.
+    pub dt: Time,
+    /// Processors the utilization is normalized against.
+    pub processors: u64,
+}
+
+impl UtilizationSeries {
+    /// Build from raw step points. `processors` is P for the run;
+    /// `dt` the sampling step.
+    pub fn from_steps(steps: &[(Time, u64)], processors: u64, dt: Time) -> UtilizationSeries {
+        assert!(dt > 0.0 && processors > 0);
+        if steps.is_empty() {
+            return UtilizationSeries { samples: vec![], dt, processors };
+        }
+        let t0 = steps[0].0; // first scheduling event = time zero
+        let t_end = steps.last().expect("non-empty").0;
+        let n = ((t_end - t0) / dt).ceil() as usize + 1;
+        let mut samples = Vec::with_capacity(n);
+        let mut idx = 0;
+        let mut current: u64 = 0;
+        for k in 0..n {
+            let t = t0 + k as f64 * dt;
+            while idx < steps.len() && steps[idx].0 <= t {
+                current = steps[idx].1;
+                idx += 1;
+            }
+            samples.push((t - t0, current as f64 / processors as f64));
+        }
+        UtilizationSeries { samples, dt, processors }
+    }
+
+    /// Peak utilization reached.
+    pub fn peak(&self) -> f64 {
+        self.samples.iter().map(|s| s.1).fold(0.0, f64::max)
+    }
+
+    /// First time utilization reaches `level` (None if never).
+    pub fn time_to_reach(&self, level: f64) -> Option<Time> {
+        self.samples.iter().find(|s| s.1 >= level).map(|s| s.0)
+    }
+
+    /// Integral of utilization over time (≈ delivered processor-seconds /
+    /// P). For a perfect run this equals T_job.
+    pub fn area(&self) -> f64 {
+        self.samples.iter().map(|s| s.1 * self.dt).sum()
+    }
+
+    /// Mean utilization over the span where the job is active.
+    pub fn mean_while_active(&self) -> f64 {
+        let active: Vec<f64> = self
+            .samples
+            .iter()
+            .map(|s| s.1)
+            .filter(|&u| u > 0.0)
+            .collect();
+        if active.is_empty() {
+            0.0
+        } else {
+            active.iter().sum::<f64>() / active.len() as f64
+        }
+    }
+
+    /// Downsample to at most `max_points` for plotting.
+    pub fn thin(&self, max_points: usize) -> Vec<(Time, f64)> {
+        if self.samples.len() <= max_points {
+            return self.samples.clone();
+        }
+        let stride = self.samples.len() as f64 / max_points as f64;
+        (0..max_points)
+            .map(|i| self.samples[(i as f64 * stride) as usize])
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_resampling() {
+        // 4 cores: 2 busy at t=10, 4 at t=11, 0 at t=20.
+        let steps = vec![(10.0, 2), (11.0, 4), (20.0, 0)];
+        let s = UtilizationSeries::from_steps(&steps, 4, 1.0);
+        assert_eq!(s.samples[0], (0.0, 0.5), "time shifted to first event");
+        assert_eq!(s.samples[1], (1.0, 1.0));
+        assert_eq!(s.samples.last().unwrap().1, 0.0);
+        assert_eq!(s.peak(), 1.0);
+    }
+
+    #[test]
+    fn time_to_reach_full() {
+        let steps = vec![(0.0, 1), (5.0, 2), (9.0, 4)];
+        let s = UtilizationSeries::from_steps(&steps, 4, 1.0);
+        assert_eq!(s.time_to_reach(1.0), Some(9.0));
+        assert_eq!(s.time_to_reach(0.25), Some(0.0));
+        let never = UtilizationSeries::from_steps(&[(0.0, 1), (2.0, 0)], 4, 1.0);
+        assert_eq!(never.time_to_reach(0.9), None);
+    }
+
+    #[test]
+    fn area_approximates_work() {
+        // 4 cores fully busy for 100 s → area ≈ 100.
+        let steps = vec![(0.0, 4), (100.0, 0)];
+        let s = UtilizationSeries::from_steps(&steps, 4, 0.5);
+        assert!((s.area() - 100.0).abs() < 1.0, "area {}", s.area());
+    }
+
+    #[test]
+    fn empty_steps() {
+        let s = UtilizationSeries::from_steps(&[], 4, 1.0);
+        assert!(s.samples.is_empty());
+        assert_eq!(s.peak(), 0.0);
+        assert_eq!(s.area(), 0.0);
+    }
+
+    #[test]
+    fn thinning_preserves_endpoints_shape() {
+        let steps: Vec<(f64, u64)> = (0..1000).map(|i| (i as f64, (i % 5) as u64)).collect();
+        let s = UtilizationSeries::from_steps(&steps, 4, 1.0);
+        let thin = s.thin(100);
+        assert_eq!(thin.len(), 100);
+        assert_eq!(thin[0].0, 0.0);
+    }
+
+    #[test]
+    fn mean_while_active_ignores_idle_tail() {
+        let steps = vec![(0.0, 4), (10.0, 0), (100.0, 0)];
+        let s = UtilizationSeries::from_steps(&steps, 4, 1.0);
+        assert!(s.mean_while_active() > 0.9);
+    }
+}

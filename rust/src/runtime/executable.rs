@@ -1,0 +1,138 @@
+//! Loading and executing one AOT artifact.
+
+use crate::error::{Error, Result};
+use std::path::Path;
+
+/// Metadata of a loaded artifact (parsed from its filename:
+/// `<name>_<batch>x<h>x<w>.hlo.txt`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Artifact {
+    pub name: String,
+    /// State shape the module expects: `[batch, h, w]` f32.
+    pub batch: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+impl Artifact {
+    /// Parse `simstep_8x32x32.hlo.txt` → name `simstep`, shape 8×32×32.
+    pub fn parse(path: &Path) -> Result<Artifact> {
+        let stem = path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .and_then(|n| n.strip_suffix(".hlo.txt"))
+            .ok_or_else(|| Error::Runtime(format!("not an HLO artifact: {path:?}")))?;
+        let (name, dims) = stem
+            .rsplit_once('_')
+            .ok_or_else(|| Error::Runtime(format!("no shape suffix in {stem:?}")))?;
+        let parts: Vec<usize> = dims
+            .split('x')
+            .map(|d| d.parse::<usize>())
+            .collect::<std::result::Result<_, _>>()
+            .map_err(|_| Error::Runtime(format!("bad shape suffix {dims:?}")))?;
+        if parts.len() != 3 {
+            return Err(Error::Runtime(format!("expected 3 dims in {dims:?}")));
+        }
+        Ok(Artifact {
+            name: name.to_string(),
+            batch: parts[0],
+            h: parts[1],
+            w: parts[2],
+        })
+    }
+
+    /// Number of f32 elements in the state tensor.
+    pub fn elements(&self) -> usize {
+        self.batch * self.h * self.w
+    }
+}
+
+/// A PJRT CPU runtime holding one compiled executable.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    pub artifact: Artifact,
+}
+
+impl Runtime {
+    /// Load an HLO-text artifact and compile it on the CPU PJRT client.
+    pub fn load(path: &Path) -> Result<Runtime> {
+        let artifact = Artifact::parse(path)?;
+        let client = xla::PjRtClient::cpu()?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Runtime("non-UTF-8 path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        Ok(Runtime { client, exe, artifact })
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute the simulation-step module: `state: [batch, h, w] f32`
+    /// (row-major) → `(new_state, checksum)`.
+    ///
+    /// The module was lowered with `return_tuple=True`, so the single
+    /// output is a 2-tuple.
+    pub fn step(&self, state: &[f32]) -> Result<(Vec<f32>, f32)> {
+        let a = &self.artifact;
+        if state.len() != a.elements() {
+            return Err(Error::Runtime(format!(
+                "state has {} elements, artifact {} wants {}",
+                state.len(),
+                a.name,
+                a.elements()
+            )));
+        }
+        let lit = xla::Literal::vec1(state).reshape(&[
+            a.batch as i64,
+            a.h as i64,
+            a.w as i64,
+        ])?;
+        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        let (new_state_l, checksum_l) = result.to_tuple2()?;
+        let new_state = new_state_l.to_vec::<f32>()?;
+        let checksum = checksum_l.to_vec::<f32>()?[0];
+        Ok((new_state, checksum))
+    }
+
+    /// Run `iters` chained steps, feeding each output into the next input
+    /// (the "short-running simulation" payload of one compute task).
+    pub fn run_task(&self, state: &[f32], iters: usize) -> Result<(Vec<f32>, f32)> {
+        let mut s = state.to_vec();
+        let mut checksum = 0.0;
+        for _ in 0..iters {
+            let (ns, c) = self.step(&s)?;
+            s = ns;
+            checksum = c;
+        }
+        Ok((s, checksum))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_parse_ok() {
+        let a = Artifact::parse(Path::new("artifacts/simstep_8x32x32.hlo.txt")).unwrap();
+        assert_eq!(a.name, "simstep");
+        assert_eq!((a.batch, a.h, a.w), (8, 32, 32));
+        assert_eq!(a.elements(), 8 * 32 * 32);
+    }
+
+    #[test]
+    fn artifact_parse_errors() {
+        assert!(Artifact::parse(Path::new("x.pb")).is_err());
+        assert!(Artifact::parse(Path::new("noshape.hlo.txt")).is_err());
+        assert!(Artifact::parse(Path::new("bad_1x2.hlo.txt")).is_err());
+        assert!(Artifact::parse(Path::new("bad_axbxc.hlo.txt")).is_err());
+    }
+    // Execution tests live in rust/tests/runtime_integration.rs (they
+    // need `make artifacts` to have run).
+}

@@ -1,0 +1,59 @@
+//! PJRT runtime: load AOT-compiled JAX/Pallas artifacts (HLO text) and
+//! execute them from Rust.
+//!
+//! Python runs only at build time (`make artifacts`); this module is the
+//! request-path bridge: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! HLO *text* is the interchange format: the crate's xla_extension 0.5.1
+//! rejects jax≥0.5's 64-bit-instruction-id protos, while the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+pub mod executable;
+pub mod pool;
+pub mod server;
+
+pub use executable::{Artifact, Runtime};
+pub use pool::ExecPool;
+pub use server::RuntimeServer;
+
+use std::path::{Path, PathBuf};
+
+/// Default artifacts directory (relative to the repo root).
+pub const ARTIFACTS_DIR: &str = "artifacts";
+
+/// Locate the artifacts directory from the current working directory or
+/// its ancestors (so examples/tests work from any cwd inside the repo).
+pub fn find_artifacts_dir() -> Option<PathBuf> {
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        let cand = dir.join(ARTIFACTS_DIR);
+        if cand.join("simstep_8x32x32.hlo.txt").exists() || cand.join(".stamp").exists() {
+            return Some(cand);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}
+
+/// True if `path` looks like an HLO text artifact.
+pub fn is_hlo_artifact(path: &Path) -> bool {
+    path.extension().map(|e| e == "txt").unwrap_or(false)
+        && path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .map(|n| n.ends_with(".hlo.txt"))
+            .unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_name_filter() {
+        assert!(is_hlo_artifact(Path::new("artifacts/simstep_8x32x32.hlo.txt")));
+        assert!(!is_hlo_artifact(Path::new("artifacts/simstep.pb")));
+        assert!(!is_hlo_artifact(Path::new("artifacts/notes.txt")));
+    }
+}

@@ -1,0 +1,84 @@
+//! Executable pool: one compiled PJRT executable shared by worker lanes.
+//!
+//! PJRT loaded executables are internally synchronized; workers clone the
+//! `Arc` and execute concurrently. The pool also caches by artifact name
+//! so examples can grab "the small simstep" without tracking paths.
+
+use crate::error::{Error, Result};
+use crate::runtime::executable::Runtime;
+use crate::runtime::{find_artifacts_dir, is_hlo_artifact};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// A cache of loaded artifacts keyed by artifact name.
+pub struct ExecPool {
+    dir: PathBuf,
+    loaded: HashMap<String, Arc<Runtime>>,
+}
+
+impl ExecPool {
+    /// Open the pool over an explicit artifacts directory.
+    pub fn open(dir: PathBuf) -> ExecPool {
+        ExecPool {
+            dir,
+            loaded: HashMap::new(),
+        }
+    }
+
+    /// Open the pool by discovering `artifacts/` from the cwd upwards.
+    pub fn discover() -> Result<ExecPool> {
+        let dir = find_artifacts_dir().ok_or_else(|| {
+            Error::Runtime(
+                "artifacts/ not found — run `make artifacts` first".to_string(),
+            )
+        })?;
+        Ok(ExecPool::open(dir))
+    }
+
+    /// List artifact files available in the directory.
+    pub fn list(&self) -> Result<Vec<PathBuf>> {
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(&self.dir)? {
+            let p = entry?.path();
+            if is_hlo_artifact(&p) {
+                out.push(p);
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    /// Load (or fetch cached) an artifact by name, e.g. `simstep_8x32x32`.
+    pub fn get(&mut self, name: &str) -> Result<Arc<Runtime>> {
+        if let Some(r) = self.loaded.get(name) {
+            return Ok(r.clone());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        if !path.exists() {
+            return Err(Error::Runtime(format!(
+                "artifact {name:?} not found in {:?} (run `make artifacts`)",
+                self.dir
+            )));
+        }
+        let rt = Arc::new(Runtime::load(&path)?);
+        self.loaded.insert(name.to_string(), rt.clone());
+        Ok(rt)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_artifact_is_a_clear_error() {
+        let mut pool = ExecPool::open(std::env::temp_dir().join("no_such_dir_llsched"));
+        let err = match pool.get("simstep_8x32x32") {
+            Err(e) => e.to_string(),
+            Ok(_) => panic!("expected missing-artifact error"),
+        };
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+    // Positive-path tests live in rust/tests/runtime_integration.rs.
+}

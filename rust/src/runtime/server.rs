@@ -1,0 +1,142 @@
+//! Node-local runtime server.
+//!
+//! The `xla` crate's PJRT handles are `!Send` (`Rc` internals), so they
+//! cannot be shared across worker lanes directly. Mirroring how a real
+//! node agent would host one model instance, [`RuntimeServer`] owns the
+//! compiled executable on a dedicated thread and serves execution
+//! requests from the pinned worker lanes over channels.
+
+use crate::error::{Error, Result};
+use crate::runtime::executable::{Artifact, Runtime};
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Sender};
+use std::thread::JoinHandle;
+
+enum Request {
+    /// Run `iters` chained simulation steps for compute task `task_id`;
+    /// reply with the final checksum.
+    RunTask {
+        task_id: u64,
+        iters: usize,
+        reply: Sender<Result<f32>>,
+    },
+    Shutdown,
+}
+
+/// A handle to the runtime thread. Cloneable across lanes via `Arc`.
+pub struct RuntimeServer {
+    tx: Sender<Request>,
+    handle: Option<JoinHandle<()>>,
+    artifact: Artifact,
+}
+
+impl RuntimeServer {
+    /// Spawn the server: loads + compiles the artifact on its own thread.
+    /// Fails fast if the artifact cannot be loaded.
+    pub fn spawn(path: PathBuf) -> Result<RuntimeServer> {
+        let artifact = Artifact::parse(&path)?;
+        let (tx, rx) = channel::<Request>();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let handle = std::thread::Builder::new()
+            .name(format!("pjrt-{}", artifact.name))
+            .spawn(move || {
+                let rt = match Runtime::load(&path) {
+                    Ok(rt) => {
+                        let _ = ready_tx.send(Ok(()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::RunTask { task_id, iters, reply } => {
+                            let state = initial_state(&rt.artifact, task_id);
+                            let res = rt.run_task(&state, iters).map(|(_, c)| c);
+                            let _ = reply.send(res);
+                        }
+                        Request::Shutdown => break,
+                    }
+                }
+            })
+            .map_err(|e| Error::Runtime(format!("spawn runtime thread: {e}")))?;
+        ready_rx
+            .recv()
+            .map_err(|_| Error::Runtime("runtime thread died during load".into()))??;
+        Ok(RuntimeServer {
+            tx,
+            handle: Some(handle),
+            artifact,
+        })
+    }
+
+    /// The artifact this server hosts.
+    pub fn artifact(&self) -> &Artifact {
+        &self.artifact
+    }
+
+    /// Execute one compute task (blocking until the runtime thread
+    /// replies). Thread-safe; callable from any lane.
+    pub fn run_task(&self, task_id: u64, iters: usize) -> Result<f32> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Request::RunTask { task_id, iters, reply })
+            .map_err(|_| Error::Runtime("runtime thread gone".into()))?;
+        rx.recv()
+            .map_err(|_| Error::Runtime("runtime thread dropped reply".into()))?
+    }
+}
+
+impl Drop for RuntimeServer {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Deterministic per-task initial state: a cheap hash of `(element,
+/// task_id)` mapped into `[0, 1)`. Mirrored exactly by the Python oracle
+/// (`python/tests/test_aot.py::initial_state`) so checksums can be
+/// compared across the language boundary.
+pub fn initial_state(artifact: &Artifact, task_id: u64) -> Vec<f32> {
+    (0..artifact.elements())
+        .map(|i| {
+            let x = (i as u64).wrapping_add(task_id.wrapping_mul(7919));
+            let h = x.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 40;
+            (h as f32) / (1u64 << 24) as f32
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn initial_state_deterministic_and_bounded() {
+        let a = Artifact {
+            name: "simstep".into(),
+            batch: 2,
+            h: 4,
+            w: 4,
+        };
+        let s1 = initial_state(&a, 7);
+        let s2 = initial_state(&a, 7);
+        let s3 = initial_state(&a, 8);
+        assert_eq!(s1, s2);
+        assert_ne!(s1, s3);
+        assert_eq!(s1.len(), 32);
+        assert!(s1.iter().all(|&x| (0.0..1.0).contains(&x)));
+    }
+
+    #[test]
+    fn spawn_missing_artifact_fails_fast() {
+        let err = RuntimeServer::spawn(PathBuf::from("/nonexistent/simstep_1x4x4.hlo.txt"));
+        assert!(err.is_err());
+    }
+    // Live-execution tests in rust/tests/runtime_integration.rs.
+}

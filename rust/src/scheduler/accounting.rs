@@ -1,0 +1,152 @@
+//! Per-task records and job-level statistics — the "scheduler log" the
+//! paper reads its measurements from (§III.B: runtime is "the time between
+//! the start time of the first task and the end time of the last task").
+
+use crate::scheduler::job::{JobId, TaskId, TaskState};
+use crate::sim::Time;
+
+/// Timestamps of one scheduling task's life cycle.
+#[derive(Debug, Clone)]
+pub struct TaskRecord {
+    pub task: TaskId,
+    pub job: JobId,
+    pub state: TaskState,
+    /// When the job containing the task was submitted.
+    pub submit_t: Time,
+    /// Dispatch (= start) time in the scheduler log.
+    pub start_t: Option<Time>,
+    /// When the task's work finished (enters COMPLETING).
+    pub end_t: Option<Time>,
+    /// When the scheduler finished the cleanup transaction (resources
+    /// actually released).
+    pub cleanup_t: Option<Time>,
+    /// Cores the task occupied while running.
+    pub cores: u32,
+}
+
+impl TaskRecord {
+    /// Resource-hold time beyond useful work (end → cleanup).
+    pub fn hold_after_end(&self) -> Option<Time> {
+        Some(self.cleanup_t? - self.end_t?)
+    }
+}
+
+/// Aggregated statistics for one job, computed from its task records.
+#[derive(Debug, Clone)]
+pub struct JobStats {
+    pub job: JobId,
+    pub array_size: u64,
+    /// First task start (scheduler-log convention).
+    pub first_start: Time,
+    /// Last task end.
+    pub last_end: Time,
+    /// Last cleanup (job fully released).
+    pub last_cleanup: Time,
+    /// The paper's "job run time": last_end − first_start.
+    pub runtime: Time,
+    /// Overhead vs the job time per processor T_job: runtime − T_job.
+    pub overhead: Time,
+    /// Overhead normalized by T_job (Fig 1's vertical axis).
+    pub norm_overhead: f64,
+    /// Time from first to last dispatch (machine fill time).
+    pub dispatch_span: Time,
+    /// Time from first task end to last cleanup (release span — the
+    /// paper's "releasing the completed tasks takes significantly longer").
+    pub release_span: Time,
+}
+
+impl JobStats {
+    /// Compute stats over the records of one job. `t_job` is the job time
+    /// per processor (Table I: 240 s). Returns `None` if any task of the
+    /// job is unfinished.
+    pub fn compute(job: JobId, records: &[TaskRecord], t_job: Time) -> Option<JobStats> {
+        let recs: Vec<&TaskRecord> = records.iter().filter(|r| r.job == job).collect();
+        if recs.is_empty() || recs.iter().any(|r| r.cleanup_t.is_none()) {
+            return None;
+        }
+        let first_start = recs.iter().map(|r| r.start_t.unwrap()).fold(f64::INFINITY, f64::min);
+        let last_start = recs.iter().map(|r| r.start_t.unwrap()).fold(0.0, f64::max);
+        let first_end = recs.iter().map(|r| r.end_t.unwrap()).fold(f64::INFINITY, f64::min);
+        let last_end = recs.iter().map(|r| r.end_t.unwrap()).fold(0.0, f64::max);
+        let last_cleanup = recs.iter().map(|r| r.cleanup_t.unwrap()).fold(0.0, f64::max);
+        let runtime = last_end - first_start;
+        Some(JobStats {
+            job,
+            array_size: recs.len() as u64,
+            first_start,
+            last_end,
+            last_cleanup,
+            runtime,
+            overhead: runtime - t_job,
+            norm_overhead: (runtime - t_job) / t_job,
+            dispatch_span: last_start - first_start,
+            release_span: last_cleanup - first_end,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(job: JobId, task: TaskId, start: Time, end: Time, cleanup: Time) -> TaskRecord {
+        TaskRecord {
+            task,
+            job,
+            state: TaskState::Done,
+            submit_t: 0.0,
+            start_t: Some(start),
+            end_t: Some(end),
+            cleanup_t: Some(cleanup),
+            cores: 1,
+        }
+    }
+
+    #[test]
+    fn stats_from_simple_job() {
+        let records = vec![
+            rec(1, 0, 10.0, 250.0, 251.0),
+            rec(1, 1, 12.0, 252.0, 260.0),
+            rec(1, 2, 14.0, 254.0, 255.0),
+        ];
+        let s = JobStats::compute(1, &records, 240.0).unwrap();
+        assert_eq!(s.array_size, 3);
+        assert_eq!(s.first_start, 10.0);
+        assert_eq!(s.last_end, 254.0);
+        assert_eq!(s.runtime, 244.0);
+        assert!((s.overhead - 4.0).abs() < 1e-12);
+        assert!((s.norm_overhead - 4.0 / 240.0).abs() < 1e-12);
+        assert_eq!(s.dispatch_span, 4.0);
+        assert_eq!(s.release_span, 260.0 - 250.0);
+    }
+
+    #[test]
+    fn unfinished_job_yields_none() {
+        let mut records = vec![rec(1, 0, 1.0, 2.0, 3.0)];
+        records.push(TaskRecord {
+            cleanup_t: None,
+            ..rec(1, 1, 1.0, 2.0, 3.0)
+        });
+        assert!(JobStats::compute(1, &records, 240.0).is_none());
+    }
+
+    #[test]
+    fn other_jobs_ignored() {
+        let records = vec![rec(1, 0, 0.0, 240.0, 241.0), rec(2, 1, 50.0, 400.0, 401.0)];
+        let s = JobStats::compute(1, &records, 240.0).unwrap();
+        assert_eq!(s.runtime, 240.0);
+        assert_eq!(s.array_size, 1);
+    }
+
+    #[test]
+    fn missing_job_yields_none() {
+        let records = vec![rec(1, 0, 0.0, 1.0, 2.0)];
+        assert!(JobStats::compute(9, &records, 240.0).is_none());
+    }
+
+    #[test]
+    fn hold_after_end() {
+        let r = rec(1, 0, 0.0, 240.0, 250.0);
+        assert_eq!(r.hold_after_end(), Some(10.0));
+    }
+}

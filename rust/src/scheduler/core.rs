@@ -1,0 +1,981 @@
+//! The scheduler simulation core: a single-threaded scheduler server
+//! serializing registration, dispatch, cleanup, preemption signalling and
+//! background (production) work over the cluster model, driven by the DES
+//! engine.
+//!
+//! This is the substrate the paper's two aggregation modes are measured
+//! against. The collapse mechanism at 512-node scale is *emergent*, not
+//! scripted: dispatching 32768 core-level scheduling tasks takes longer
+//! than T_job = 240 s, so completions start flooding the server while it
+//! is still dispatching; cleanup transactions (which cost more than
+//! dispatches and grow with array size) then starve dispatch, which
+//! delays the remaining placements past the 2500 s mark — exactly the
+//! behaviour reported in the paper's §III.B.
+
+use crate::cluster::{Cluster, NodeState};
+use crate::scheduler::costmodel::CostModel;
+use crate::scheduler::job::{
+    JobId, JobSpec, Placement, ResourceRequest, SchedTaskSpec, TaskId, TaskState,
+};
+use crate::scheduler::noise::NoiseModel;
+use crate::scheduler::queue::PendingQueue;
+use crate::scheduler::accounting::{JobStats, TaskRecord};
+use crate::sim::{self, EventQueue, Time};
+use crate::util::rng::Rng;
+use std::collections::VecDeque;
+
+/// Events of the scheduler simulation.
+#[derive(Debug)]
+pub enum SchedEvent {
+    /// A job submission arrives at the scheduler.
+    Submit(JobId),
+    /// The server finished its current operation.
+    ServerDone(Op),
+    /// A running scheduling task's occupancy ended.
+    TaskEnded(TaskId),
+    /// Background (production) small-burst arrival.
+    NoiseSmall,
+    /// Background large-burst arrival (another user's big launch).
+    NoiseLarge,
+    /// Preemption of a (spot) job is requested.
+    Preempt(JobId),
+}
+
+/// Operations the server can be busy with.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Op {
+    /// Register a submitted job (materialize array tasks).
+    Register(JobId),
+    /// Scheduling-cycle scan before a batch of dispatches.
+    Cycle,
+    /// Dispatch one scheduling task.
+    Dispatch(TaskId),
+    /// Cleanup transaction for one finished task.
+    Cleanup(TaskId),
+    /// Background work burst of the given demand.
+    Noise(f64),
+    /// Preemption signal to one running task.
+    PreemptSignal(TaskId),
+}
+
+/// Per-task live state (record + dispatch bookkeeping).
+#[derive(Debug)]
+struct TaskSlot {
+    spec: SchedTaskSpec,
+    record: TaskRecord,
+    placement: Option<Placement>,
+    priority: i32,
+}
+
+/// Per-job metadata.
+#[derive(Debug, Clone)]
+pub struct JobMeta {
+    pub id: JobId,
+    pub name: String,
+    pub array_size: u64,
+    pub reservation: Option<String>,
+    pub priority: i32,
+    pub preemptable: bool,
+    pub submit_t: Time,
+}
+
+/// How much server time went to each class of work.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BusyBreakdown {
+    pub register: Time,
+    pub cycle: Time,
+    pub dispatch: Time,
+    pub cleanup: Time,
+    pub noise: Time,
+    pub preempt: Time,
+}
+
+impl BusyBreakdown {
+    /// Total server-busy time.
+    pub fn total(&self) -> Time {
+        self.register + self.cycle + self.dispatch + self.cleanup + self.noise + self.preempt
+    }
+}
+
+/// Tunables of the task execution model (outside the scheduler proper).
+#[derive(Debug, Clone)]
+pub struct TaskModel {
+    /// Fixed startup overhead when a scheduling task launches on its
+    /// resources (script spin-up, binary load).
+    pub startup: Time,
+    /// Additive half-normal jitter sigma on occupancy duration.
+    pub jitter_sigma: f64,
+    /// Probability that a *whole-node* allocation joins late in
+    /// production mode, at full (512-node) machine scale; the effective
+    /// probability is `p_node_late × (cluster_nodes / 512)²` — grabbing
+    /// nearly the whole machine inevitably includes draining nodes,
+    /// while partial allocations pick from spare capacity. Core-level
+    /// requests fit into gaps and do not suffer drain contention.
+    pub p_node_late: f64,
+    /// Late-join delay range, seconds.
+    pub late_range: (Time, Time),
+}
+
+impl Default for TaskModel {
+    fn default() -> Self {
+        TaskModel {
+            startup: 0.8,
+            jitter_sigma: 0.4,
+            p_node_late: 0.0008,
+            late_range: (20.0, 250.0),
+        }
+    }
+}
+
+/// Everything measured from one simulation run.
+#[derive(Debug)]
+pub struct SimOutcome {
+    pub records: Vec<TaskRecord>,
+    pub jobs: Vec<JobMeta>,
+    /// `(time, running_cores)` after each change (Fig 2 raw series).
+    pub timeline: Vec<(Time, u64)>,
+    pub busy: BusyBreakdown,
+    pub final_time: Time,
+    pub events_processed: u64,
+    /// Peak completion backlog (responsiveness indicator).
+    pub max_completion_backlog: usize,
+    /// Longest continuous stretch of server-busy time (the paper's
+    /// "scheduler becomes unresponsive" indicator).
+    pub longest_busy_stretch: Time,
+}
+
+impl SimOutcome {
+    /// Job statistics (Table III row ingredients) for one job.
+    pub fn job_stats(&self, job: JobId, t_job: Time) -> Option<JobStats> {
+        JobStats::compute(job, &self.records, t_job)
+    }
+
+    /// The paper's responsiveness guard: a production scheduler is
+    /// "unusable" when it stays saturated for minutes at a time.
+    pub fn unusable_in_production(&self) -> bool {
+        self.longest_busy_stretch > 60.0
+    }
+}
+
+/// The scheduler simulation actor. Create, submit jobs, then [`Self::run`].
+pub struct SchedulerSim {
+    cluster: Cluster,
+    cost: CostModel,
+    noise: NoiseModel,
+    task_model: TaskModel,
+    rng: Rng,
+    production: bool,
+
+    specs: Vec<Option<JobSpec>>, // consumed at Submit
+    jobs: Vec<JobMeta>,
+    tasks: Vec<TaskSlot>,
+    pending: PendingQueue,
+    completions: VecDeque<TaskId>,
+    preempt_q: VecDeque<TaskId>,
+    noise_q: VecDeque<f64>,
+
+    /// Per-run multiplicative factor on all server op costs (hardware /
+    /// kernel / filesystem variability between runs; sampled log-normal,
+    /// σ = 5 %). Gives dedicated-system runs the paper's natural spread.
+    op_scale: f64,
+    server_busy: bool,
+    busy_since: Time,
+    longest_busy_stretch: Time,
+    hol_blocked: bool,
+    cycle_budget: u32,
+    cleanups_since_dispatch: u32,
+
+    busy: BusyBreakdown,
+    running_cores: u64,
+    /// Raw `(time, ±cores)` deltas; late-joining nodes stamp their start
+    /// in the future relative to the dispatch event, so deltas are sorted
+    /// and prefix-summed into the absolute series when the run finishes.
+    timeline: Vec<(Time, i64)>,
+    record_timeline: bool,
+    max_completion_backlog: usize,
+}
+
+impl SchedulerSim {
+    /// New simulation over `cluster`. `production = !dedicated` enables
+    /// the background-noise process and node-churn late joins.
+    pub fn new(cluster: Cluster, cost: CostModel, noise: NoiseModel, seed: u64) -> SchedulerSim {
+        let production = noise.mean_load() > 0.0;
+        let mut rng = Rng::new(seed);
+        let op_scale = rng.lognormal(0.0, 0.05);
+        SchedulerSim {
+            cluster,
+            cost,
+            noise,
+            task_model: TaskModel::default(),
+            rng,
+            production,
+            op_scale,
+            specs: Vec::new(),
+            jobs: Vec::new(),
+            tasks: Vec::new(),
+            pending: PendingQueue::new(),
+            completions: VecDeque::new(),
+            preempt_q: VecDeque::new(),
+            noise_q: VecDeque::new(),
+            server_busy: false,
+            busy_since: 0.0,
+            longest_busy_stretch: 0.0,
+            hol_blocked: false,
+            cycle_budget: 0,
+            cleanups_since_dispatch: 0,
+            busy: BusyBreakdown::default(),
+            running_cores: 0,
+            timeline: Vec::new(),
+            record_timeline: true,
+            max_completion_backlog: 0,
+        }
+    }
+
+    /// Override the task execution model.
+    pub fn with_task_model(mut self, tm: TaskModel) -> Self {
+        self.task_model = tm;
+        self
+    }
+
+    /// Disable the (possibly large) utilization timeline recording.
+    pub fn without_timeline(mut self) -> Self {
+        self.record_timeline = false;
+        self
+    }
+
+    /// Fix the per-run server-speed factor (tests use 1.0 for exact
+    /// accounting; experiments keep the sampled value).
+    pub fn with_server_speed(mut self, scale: f64) -> Self {
+        assert!(scale > 0.0);
+        self.op_scale = scale;
+        self
+    }
+
+    /// Queue a job for submission at virtual time `t`. Returns its id.
+    pub fn submit_at(&mut self, q: &mut EventQueue<SchedEvent>, t: Time, spec: JobSpec) -> JobId {
+        let id = self.specs.len() as JobId;
+        self.specs.push(Some(spec));
+        q.at(t, SchedEvent::Submit(id));
+        id
+    }
+
+    /// Request preemption of a job at virtual time `t`.
+    pub fn preempt_at(&mut self, q: &mut EventQueue<SchedEvent>, t: Time, job: JobId) {
+        q.at(t, SchedEvent::Preempt(job));
+    }
+
+    /// Drive the simulation to completion and return the outcome.
+    pub fn run(mut self, q: &mut EventQueue<SchedEvent>) -> SimOutcome {
+        self.prime_noise(q);
+        let (final_time, events) = sim::run(&mut self, q);
+        let mut deltas = self.timeline;
+        deltas.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("no NaN times"));
+        let mut running: i64 = 0;
+        let timeline: Vec<(Time, u64)> = deltas
+            .into_iter()
+            .map(|(t, d)| {
+                running += d;
+                debug_assert!(running >= 0, "negative core count in timeline");
+                (t, running as u64)
+            })
+            .collect();
+        SimOutcome {
+            records: self.tasks.into_iter().map(|t| t.record).collect(),
+            jobs: self.jobs,
+            timeline,
+            busy: self.busy,
+            final_time,
+            events_processed: events,
+            max_completion_backlog: self.max_completion_backlog,
+            longest_busy_stretch: self.longest_busy_stretch,
+        }
+    }
+
+    /// Convenience: run a single job on a fresh queue; returns
+    /// `(outcome, job_id)`.
+    pub fn run_single(mut self, spec: JobSpec) -> (SimOutcome, JobId) {
+        let mut q = EventQueue::new();
+        let id = self.submit_at(&mut q, 0.0, spec);
+        (self.run(&mut q), id)
+    }
+
+    fn prime_noise(&mut self, q: &mut EventQueue<SchedEvent>) {
+        if let Some((gap, _)) = self.noise.next_small(&mut self.rng) {
+            q.after(gap, SchedEvent::NoiseSmall);
+        }
+        if let Some((gap, _)) = self.noise.next_large(&mut self.rng) {
+            q.after(gap, SchedEvent::NoiseLarge);
+        }
+    }
+
+    // ---- server loop -----------------------------------------------------
+
+    /// If the server is idle, pick the next operation and start it.
+    fn kick(&mut self, now: Time, q: &mut EventQueue<SchedEvent>) {
+        if self.server_busy {
+            return;
+        }
+        if let Some((op, cost)) = self.pick_next() {
+            self.server_busy = true;
+            self.busy_since = now;
+            q.after(cost, SchedEvent::ServerDone(op));
+        }
+    }
+
+    /// Work-conserving service discipline (see module docs):
+    /// noise → preempt signals → cleanups (with bounded dispatch
+    /// interleave) → dispatches (cycle-batched).
+    fn pick_next(&mut self) -> Option<(Op, Time)> {
+        let s = self.op_scale;
+        if let Some(demand) = self.noise_q.pop_front() {
+            return Some((Op::Noise(demand), demand * s));
+        }
+        if let Some(t) = self.preempt_q.pop_front() {
+            return Some((Op::PreemptSignal(t), self.cost.preempt_signal * s));
+        }
+        let can_dispatch = !self.pending.is_empty() && !self.hol_blocked;
+        if !self.completions.is_empty() {
+            let must_interleave =
+                can_dispatch && self.cleanups_since_dispatch >= self.cost.cleanup_interleave;
+            if !must_interleave {
+                let tid = self.completions.pop_front().expect("checked non-empty");
+                self.cleanups_since_dispatch += 1;
+                let array = self.jobs[self.tasks[tid as usize].record.job as usize].array_size;
+                return Some((Op::Cleanup(tid), self.cost.cleanup(array) * s));
+            }
+        }
+        if can_dispatch {
+            if self.cycle_budget == 0 {
+                return Some((Op::Cycle, self.cost.cycle(self.pending.len()) * s));
+            }
+            let tid = self.pending.pop().expect("checked non-empty");
+            self.cleanups_since_dispatch = 0;
+            self.cycle_budget -= 1;
+            let node_level =
+                self.tasks[tid as usize].spec.request == ResourceRequest::WholeNode;
+            return Some((Op::Dispatch(tid), self.cost.dispatch(node_level) * s));
+        }
+        None
+    }
+
+    fn apply_op(&mut self, now: Time, op: Op, q: &mut EventQueue<SchedEvent>) {
+        match op {
+            Op::Register(job) => {
+                self.busy.register +=
+                    self.cost.submit(self.jobs[job as usize].array_size) * self.op_scale;
+                // Materialized at Submit; now they become schedulable.
+                let prio = self.jobs[job as usize].priority;
+                let ids: Vec<TaskId> = self
+                    .tasks
+                    .iter()
+                    .filter(|t| t.record.job == job && t.record.state == TaskState::Pending)
+                    .map(|t| t.record.task)
+                    .collect();
+                for tid in ids {
+                    self.pending.push(tid, prio);
+                }
+            }
+            Op::Cycle => {
+                self.busy.cycle += self.cost.cycle(self.pending.len()) * self.op_scale;
+                self.cycle_budget = self.cost.dispatch_cycle_batch;
+            }
+            Op::Dispatch(tid) => {
+                let node_level =
+                    self.tasks[tid as usize].spec.request == ResourceRequest::WholeNode;
+                self.busy.dispatch += self.cost.dispatch(node_level) * self.op_scale;
+                self.try_place(now, tid, q);
+            }
+            Op::Cleanup(tid) => {
+                let array = self.jobs[self.tasks[tid as usize].record.job as usize].array_size;
+                self.busy.cleanup += self.cost.cleanup(array) * self.op_scale;
+                self.finish_cleanup(now, tid);
+            }
+            Op::Noise(d) => {
+                self.busy.noise += d * self.op_scale;
+            }
+            Op::PreemptSignal(tid) => {
+                self.busy.preempt += self.cost.preempt_signal * self.op_scale;
+                self.apply_preempt_signal(now, tid);
+            }
+        }
+    }
+
+    /// Attempt placement of a dispatched task; on failure the task goes
+    /// back to the head of the queue and dispatch blocks until a cleanup
+    /// frees resources.
+    fn try_place(&mut self, now: Time, tid: TaskId, q: &mut EventQueue<SchedEvent>) {
+        let slot = &self.tasks[tid as usize];
+        let job = &self.jobs[slot.record.job as usize];
+        let reservation = job.reservation.clone();
+        let request = slot.spec.request;
+        let placement = match request {
+            ResourceRequest::WholeNode => {
+                let nodes = self.cluster.find_idle_nodes(1, reservation.as_deref());
+                nodes.first().copied().map(|node| {
+                    let mem = self.cluster.node(node).expect("valid node").free_mem_mib();
+                    let mask = self
+                        .cluster
+                        .node_mut(node)
+                        .expect("valid node")
+                        .allocate_whole()
+                        .expect("idle node allocates");
+                    Placement { node, mask, mem_mib: mem }
+                })
+            }
+            ResourceRequest::Cores { cores, mem_mib } => self
+                .cluster
+                .find_fit_node(cores, mem_mib, reservation.as_deref())
+                .map(|node| {
+                    let mask = self
+                        .cluster
+                        .allocate_on(node, cores, mem_mib)
+                        .expect("fit search said it fits");
+                    Placement { node, mask, mem_mib }
+                }),
+        };
+        match placement {
+            Some(p) => {
+                // Production node-churn: whole-node allocations on a
+                // near-machine-scale job occasionally get a node that is
+                // still draining and joins late.
+                let cores = p.mask.count();
+                let whole_node = request == ResourceRequest::WholeNode;
+                let late = if self.production && whole_node {
+                    let frac = self.cluster.n_nodes() as f64 / 512.0;
+                    let prob = self.task_model.p_node_late * frac * frac;
+                    if self.rng.chance(prob.min(1.0)) {
+                        self.rng
+                            .range_f64(self.task_model.late_range.0, self.task_model.late_range.1)
+                    } else {
+                        0.0
+                    }
+                } else {
+                    0.0
+                };
+                let start = now + late;
+                let slot = &mut self.tasks[tid as usize];
+                slot.record.state = TaskState::Running;
+                slot.record.start_t = Some(start);
+                slot.record.cores = cores;
+                slot.placement = Some(p);
+                let jitter = self.rng.normal().abs() * self.task_model.jitter_sigma;
+                let occupancy = self.task_model.startup + slot.spec.duration + jitter;
+                self.running_cores += cores as u64;
+                if self.record_timeline {
+                    self.timeline.push((start, cores as i64));
+                }
+                q.at(start + occupancy, SchedEvent::TaskEnded(tid));
+            }
+            None => {
+                // Head-of-line blocked: wait for resources to free.
+                let prio = self.tasks[tid as usize].priority;
+                self.pending.push_front(tid, prio);
+                self.cycle_budget = 0; // a fresh cycle rescans when unblocked
+                self.hol_blocked = true;
+            }
+        }
+    }
+
+    fn finish_cleanup(&mut self, now: Time, tid: TaskId) {
+        let slot = &mut self.tasks[tid as usize];
+        debug_assert!(
+            slot.record.state == TaskState::Completing
+                || slot.record.state == TaskState::Preempted,
+            "cleanup of task in state {:?}",
+            slot.record.state
+        );
+        slot.record.state = TaskState::Done;
+        slot.record.cleanup_t = Some(now);
+        if let Some(p) = slot.placement.take() {
+            self.cluster
+                .release_on(p.node, &p.mask, p.mem_mib)
+                .expect("release of held placement");
+        }
+        // Resources freed: head-of-line dispatch may proceed.
+        self.hol_blocked = false;
+    }
+
+    fn apply_preempt_signal(&mut self, now: Time, tid: TaskId) {
+        let slot = &mut self.tasks[tid as usize];
+        if slot.record.state != TaskState::Running {
+            return; // finished on its own before the signal landed
+        }
+        slot.record.state = TaskState::Preempted;
+        slot.record.end_t = Some(now);
+        let cores = slot.record.cores as u64;
+        self.running_cores -= cores;
+        if self.record_timeline {
+            self.timeline.push((now, -(cores as i64)));
+        }
+        self.completions.push_back(tid);
+        self.note_backlog();
+    }
+
+    fn note_backlog(&mut self) {
+        if self.completions.len() > self.max_completion_backlog {
+            self.max_completion_backlog = self.completions.len();
+        }
+    }
+}
+
+impl sim::Actor for SchedulerSim {
+    type Event = SchedEvent;
+
+    fn handle(&mut self, now: Time, ev: SchedEvent, q: &mut EventQueue<SchedEvent>) {
+        match ev {
+            SchedEvent::Submit(id) => {
+                let spec = self.specs[id as usize].take().expect("double submit");
+                spec.validate(64).expect("invalid job spec submitted");
+                let meta = JobMeta {
+                    id,
+                    name: spec.name.clone(),
+                    array_size: spec.array_size(),
+                    reservation: spec.reservation.clone(),
+                    priority: spec.priority,
+                    preemptable: spec.preemptable,
+                    submit_t: now,
+                };
+                // Materialize task slots (records in PENDING).
+                for t in &spec.tasks {
+                    let tid = self.tasks.len() as TaskId;
+                    self.tasks.push(TaskSlot {
+                        spec: t.clone(),
+                        record: TaskRecord {
+                            task: tid,
+                            job: id,
+                            state: TaskState::Pending,
+                            submit_t: now,
+                            start_t: None,
+                            end_t: None,
+                            cleanup_t: None,
+                            cores: 0,
+                        },
+                        placement: None,
+                        priority: spec.priority,
+                    });
+                }
+                while self.jobs.len() <= id as usize {
+                    // placeholder ordering safety (ids are dense by construction)
+                    self.jobs.push(meta.clone());
+                }
+                self.jobs[id as usize] = meta;
+                // Registration is server work.
+                let cost = self.cost.submit(spec.array_size());
+                if self.server_busy {
+                    // Serialize behind current op by queueing as noise-less
+                    // op: model keeps it simple — registration happens when
+                    // the server frees up; we enqueue a zero-arrival noise
+                    // slot carrying the register op via the preempt path.
+                    // Simpler: treat registration as an immediate follow-up
+                    // event retry.
+                    q.after(sim::TICK, SchedEvent::Submit(id));
+                    // restore spec for retry
+                    self.specs[id as usize] = Some(spec);
+                    // drop the duplicate task slots we just materialized
+                    for _ in 0..self.jobs[id as usize].array_size {
+                        self.tasks.pop();
+                    }
+                    return;
+                }
+                self.server_busy = true;
+                self.busy_since = now;
+                q.after(cost * self.op_scale, SchedEvent::ServerDone(Op::Register(id)));
+            }
+            SchedEvent::ServerDone(op) => {
+                self.apply_op(now, op, q);
+                self.server_busy = false;
+                // Background bursts do not count as *scheduler* saturation:
+                // the unusable-in-production guard measures the load this
+                // job itself puts on the server, matching the paper's
+                // observation about multi-level runs.
+                let is_noise = matches!(op, Op::Noise(_));
+                let stretch_started = if is_noise { now } else { self.busy_since };
+                let stretch = now - stretch_started;
+                if stretch > self.longest_busy_stretch {
+                    self.longest_busy_stretch = stretch;
+                }
+                self.kick(now, q);
+                if self.server_busy {
+                    // The server went straight back to work: this is one
+                    // continuous saturated stretch, so keep its start time.
+                    self.busy_since = stretch_started;
+                }
+            }
+            SchedEvent::TaskEnded(tid) => {
+                let slot = &mut self.tasks[tid as usize];
+                if slot.record.state != TaskState::Running {
+                    return; // stale (e.g. preempted)
+                }
+                slot.record.state = TaskState::Completing;
+                slot.record.end_t = Some(now);
+                let cores = slot.record.cores as u64;
+                self.running_cores -= cores;
+                if self.record_timeline {
+                    self.timeline.push((now, -(cores as i64)));
+                }
+                self.completions.push_back(tid);
+                self.note_backlog();
+                self.kick(now, q);
+            }
+            SchedEvent::NoiseSmall => {
+                if let Some((gap, demand)) = self.noise.next_small(&mut self.rng) {
+                    self.noise_q.push_back(demand);
+                    // Only keep the process alive while user work exists;
+                    // otherwise the sim would never terminate.
+                    if self.has_outstanding_work() {
+                        q.after(gap, SchedEvent::NoiseSmall);
+                    }
+                }
+                self.kick(now, q);
+            }
+            SchedEvent::NoiseLarge => {
+                if let Some((gap, demand)) = self.noise.next_large(&mut self.rng) {
+                    self.noise_q.push_back(demand);
+                    if self.has_outstanding_work() {
+                        q.after(gap, SchedEvent::NoiseLarge);
+                    }
+                }
+                self.kick(now, q);
+            }
+            SchedEvent::Preempt(job) => {
+                // Pending tasks of the job are simply removed (cheap, no
+                // server involvement beyond the dequeue).
+                let ids: Vec<TaskId> = self
+                    .tasks
+                    .iter()
+                    .filter(|t| t.record.job == job)
+                    .map(|t| t.record.task)
+                    .collect();
+                for tid in ids {
+                    match self.tasks[tid as usize].record.state {
+                        TaskState::Pending => {
+                            if self.pending.remove(tid) {
+                                let slot = &mut self.tasks[tid as usize];
+                                slot.record.state = TaskState::Done;
+                                slot.record.start_t = Some(now);
+                                slot.record.end_t = Some(now);
+                                slot.record.cleanup_t = Some(now);
+                            }
+                        }
+                        TaskState::Running => self.preempt_q.push_back(tid),
+                        _ => {}
+                    }
+                }
+                self.kick(now, q);
+            }
+        }
+    }
+}
+
+impl SchedulerSim {
+    fn has_outstanding_work(&self) -> bool {
+        !self.pending.is_empty()
+            || !self.completions.is_empty()
+            || !self.preempt_q.is_empty()
+            || self.running_cores > 0
+            || self.tasks.iter().any(|t| {
+                matches!(
+                    t.record.state,
+                    TaskState::Pending | TaskState::Running | TaskState::Completing
+                )
+            })
+    }
+
+    /// Number of nodes currently fully idle (test/metric helper).
+    pub fn idle_nodes(&self) -> usize {
+        self.cluster
+            .nodes()
+            .filter(|n| n.state() == NodeState::Up && n.is_idle())
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::job::ComputeBatch;
+
+    fn uniform_job(
+        n_tasks: usize,
+        request: ResourceRequest,
+        duration: f64,
+        lanes: u32,
+    ) -> JobSpec {
+        JobSpec {
+            name: "test".into(),
+            tasks: vec![
+                SchedTaskSpec {
+                    request,
+                    duration,
+                    batch: ComputeBatch { count: 1, each: duration },
+                    lanes,
+                };
+                n_tasks
+            ],
+            reservation: None,
+            priority: 0,
+            preemptable: false,
+        }
+    }
+
+    fn quiet_sim(nodes: u32) -> SchedulerSim {
+        SchedulerSim::new(
+            Cluster::tx_green(nodes),
+            CostModel::slurm_like_tx_green(),
+            NoiseModel::dedicated(),
+            42,
+        )
+        .with_task_model(TaskModel {
+            startup: 0.0,
+            jitter_sigma: 0.0,
+            p_node_late: 0.0,
+            late_range: (0.0, 0.0),
+        })
+        .with_server_speed(1.0)
+    }
+
+    #[test]
+    fn single_node_task_full_lifecycle() {
+        let sim = quiet_sim(1);
+        let (out, job) = sim.run_single(uniform_job(1, ResourceRequest::WholeNode, 100.0, 64));
+        let stats = out.job_stats(job, 100.0).unwrap();
+        assert_eq!(stats.array_size, 1);
+        assert!((stats.runtime - 100.0).abs() < 1e-6, "{}", stats.runtime);
+        let r = &out.records[0];
+        assert_eq!(r.state, TaskState::Done);
+        assert_eq!(r.cores, 64);
+        assert!(r.cleanup_t.unwrap() >= r.end_t.unwrap());
+    }
+
+    #[test]
+    fn all_tasks_complete_and_resources_return() {
+        let sim = quiet_sim(4);
+        let (out, _) = sim.run_single(uniform_job(
+            256,
+            ResourceRequest::Cores { cores: 1, mem_mib: 16 },
+            10.0,
+            1,
+        ));
+        assert!(out.records.iter().all(|r| r.state == TaskState::Done));
+        assert_eq!(out.records.len(), 256);
+        // Timeline returns to zero.
+        assert_eq!(out.timeline.last().unwrap().1, 0);
+    }
+
+    #[test]
+    fn oversubscription_serializes_wave_by_wave() {
+        // 2 nodes × 64 cores, 256 single-core 10 s tasks → ≥2 waves.
+        let sim = quiet_sim(2);
+        let (out, job) = sim.run_single(uniform_job(
+            256,
+            ResourceRequest::Cores { cores: 1, mem_mib: 0 },
+            10.0,
+            1,
+        ));
+        let stats = out.job_stats(job, 10.0).unwrap();
+        // 256 tasks on 128 cores: runtime at least 2 waves of 10 s.
+        assert!(stats.runtime >= 20.0 - 1e-9, "runtime {}", stats.runtime);
+        assert!(out.records.iter().all(|r| r.state == TaskState::Done));
+    }
+
+    #[test]
+    fn dispatch_cost_shows_in_fill_time() {
+        let sim = quiet_sim(8);
+        let (out, job) = sim.run_single(uniform_job(
+            512,
+            ResourceRequest::Cores { cores: 1, mem_mib: 0 },
+            240.0,
+            1,
+        ));
+        let stats = out.job_stats(job, 240.0).unwrap();
+        let c = CostModel::slurm_like_tx_green();
+        let expected_fill = 512.0 * c.dispatch_core;
+        assert!(
+            (stats.dispatch_span - expected_fill).abs() < 0.5 + expected_fill * 0.2,
+            "span {} vs expected {}",
+            stats.dispatch_span,
+            expected_fill
+        );
+    }
+
+    #[test]
+    fn node_based_fill_is_much_faster_than_core_based() {
+        let core = quiet_sim(8)
+            .run_single(uniform_job(512, ResourceRequest::Cores { cores: 1, mem_mib: 0 }, 240.0, 1));
+        let node = quiet_sim(8).run_single(uniform_job(8, ResourceRequest::WholeNode, 240.0, 64));
+        let cs = core.0.job_stats(core.1, 240.0).unwrap();
+        let ns = node.0.job_stats(node.1, 240.0).unwrap();
+        assert!(
+            ns.dispatch_span * 10.0 < cs.dispatch_span,
+            "node {} vs core {}",
+            ns.dispatch_span,
+            cs.dispatch_span
+        );
+    }
+
+    #[test]
+    fn cleanup_serialization_holds_resources() {
+        // One node, 64 single-core tasks, all end together: cleanup is
+        // serialized so release_span > 0 and grows with array size.
+        let sim = quiet_sim(1);
+        let (out, job) = sim.run_single(uniform_job(
+            64,
+            ResourceRequest::Cores { cores: 1, mem_mib: 0 },
+            50.0,
+            1,
+        ));
+        let stats = out.job_stats(job, 50.0).unwrap();
+        assert!(stats.release_span > 0.0);
+        let c = CostModel::slurm_like_tx_green();
+        // At least ~64 cleanups' worth of serialized work in the span.
+        assert!(stats.release_span >= 32.0 * c.cleanup(64), "{}", stats.release_span);
+    }
+
+    #[test]
+    fn preemption_releases_resources() {
+        let mut sim = quiet_sim(2);
+        let mut q = EventQueue::new();
+        let spot = sim.submit_at(
+            &mut q,
+            0.0,
+            JobSpec {
+                priority: -10,
+                preemptable: true,
+                ..uniform_job(2, ResourceRequest::WholeNode, 10_000.0, 64)
+            },
+        );
+        sim.preempt_at(&mut q, 50.0, spot);
+        let out = sim.run(&mut q);
+        assert!(out.records.iter().all(|r| r.state == TaskState::Done));
+        // Ended + cleaned at preemption (~50 s), not at 10 000 s. (The
+        // stale TaskEnded calendar entries still drain, so final_time is
+        // the original horizon — only the records matter.)
+        for r in &out.records {
+            assert!(r.end_t.unwrap() < 100.0, "end {}", r.end_t.unwrap());
+            assert!(r.cleanup_t.unwrap() < 100.0, "cleanup {}", r.cleanup_t.unwrap());
+        }
+    }
+
+    #[test]
+    fn preempting_pending_tasks_cancels_them() {
+        // 1 node, 2 whole-node spot tasks: second stays pending; preempt
+        // cancels it without it ever running.
+        let mut sim = quiet_sim(1);
+        let mut q = EventQueue::new();
+        let spot = sim.submit_at(
+            &mut q,
+            0.0,
+            JobSpec {
+                priority: -10,
+                preemptable: true,
+                ..uniform_job(2, ResourceRequest::WholeNode, 10_000.0, 64)
+            },
+        );
+        sim.preempt_at(&mut q, 20.0, spot);
+        let out = sim.run(&mut q);
+        assert!(out.records.iter().all(|r| r.state == TaskState::Done));
+        let started: Vec<_> = out
+            .records
+            .iter()
+            .filter(|r| r.cores > 0)
+            .collect();
+        assert_eq!(started.len(), 1, "only the first task ever ran");
+    }
+
+    #[test]
+    fn higher_priority_wins_when_resources_free() {
+        // One node; a low-priority 2-task job occupies it (task A runs,
+        // task B queues). A high-priority job submitted later jumps the
+        // queue: when the node frees, it runs before low-priority task B.
+        let mut sim = quiet_sim(1);
+        let mut q = EventQueue::new();
+        let low = sim.submit_at(
+            &mut q,
+            0.0,
+            JobSpec {
+                priority: -10,
+                ..uniform_job(2, ResourceRequest::WholeNode, 10.0, 64)
+            },
+        );
+        let high = sim.submit_at(
+            &mut q,
+            1.0,
+            JobSpec {
+                priority: 10,
+                ..uniform_job(1, ResourceRequest::WholeNode, 10.0, 64)
+            },
+        );
+        let out = sim.run(&mut q);
+        let hi = out.records.iter().find(|r| r.job == high).unwrap();
+        let lo_b = out
+            .records
+            .iter()
+            .filter(|r| r.job == low)
+            .max_by(|a, b| a.start_t.partial_cmp(&b.start_t).unwrap())
+            .unwrap();
+        assert!(
+            hi.start_t.unwrap() < lo_b.start_t.unwrap(),
+            "high prio {} should start before low-prio task B {}",
+            hi.start_t.unwrap(),
+            lo_b.start_t.unwrap()
+        );
+    }
+
+    #[test]
+    fn ideal_cost_model_has_zero_overhead() {
+        let sim = SchedulerSim::new(
+            Cluster::tx_green(2),
+            CostModel::ideal(),
+            NoiseModel::dedicated(),
+            1,
+        )
+        .with_task_model(TaskModel {
+            startup: 0.0,
+            jitter_sigma: 0.0,
+            p_node_late: 0.0,
+            late_range: (0.0, 0.0),
+        });
+        let (out, job) = sim.run_single(uniform_job(
+            128,
+            ResourceRequest::Cores { cores: 1, mem_mib: 0 },
+            30.0,
+            1,
+        ));
+        let stats = out.job_stats(job, 30.0).unwrap();
+        assert!(stats.overhead.abs() < 1e-6, "overhead {}", stats.overhead);
+    }
+
+    #[test]
+    fn busy_breakdown_accounts_for_work() {
+        let sim = quiet_sim(2);
+        let (out, _) = sim.run_single(uniform_job(
+            128,
+            ResourceRequest::Cores { cores: 1, mem_mib: 0 },
+            10.0,
+            1,
+        ));
+        let c = CostModel::slurm_like_tx_green();
+        assert!((out.busy.dispatch - 128.0 * c.dispatch_core).abs() < 1e-6);
+        assert!((out.busy.cleanup - 128.0 * c.cleanup(128)).abs() < 1e-6);
+        assert!(out.busy.noise == 0.0);
+        assert!(out.busy.total() > 0.0);
+    }
+
+    #[test]
+    fn timeline_is_monotone_in_time_and_conserves_cores() {
+        let sim = quiet_sim(2);
+        let (out, _) = sim.run_single(uniform_job(
+            100,
+            ResourceRequest::Cores { cores: 1, mem_mib: 0 },
+            5.0,
+            1,
+        ));
+        let mut prev_t = 0.0;
+        for &(t, cores) in &out.timeline {
+            assert!(t >= prev_t);
+            assert!(cores <= 128);
+            prev_t = t;
+        }
+        assert_eq!(out.timeline.last().unwrap().1, 0);
+    }
+}

@@ -1,0 +1,244 @@
+//! Jobs, scheduling tasks and their state machine.
+//!
+//! Terminology follows the paper: a *compute task* is one unit of user
+//! work (e.g. a 1-second simulation); a *scheduling task* is what the
+//! scheduler actually places and tracks. The aggregation mode decides how
+//! many compute tasks ride inside one scheduling task.
+
+use crate::cluster::affinity::CoreMask;
+use crate::cluster::node::NodeId;
+use crate::error::{Error, Result};
+use crate::sim::Time;
+
+/// Job identifier.
+pub type JobId = u64;
+/// Scheduling-task identifier (global, dense).
+pub type TaskId = u64;
+
+/// Scheduling-task lifecycle, mirroring Slurm's visible states.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskState {
+    /// In the pending queue, not yet placed.
+    Pending,
+    /// Placed and running on its resources.
+    Running,
+    /// Work finished; waiting for the scheduler's cleanup transaction.
+    /// Resources are *held* until cleanup completes (the paper's
+    /// "releasing the completed tasks takes significantly longer" effect).
+    Completing,
+    /// Cleaned up; resources released.
+    Done,
+    /// Killed by preemption (spot jobs) before finishing.
+    Preempted,
+}
+
+impl TaskState {
+    /// Valid transitions. Everything else is a state-machine bug.
+    pub fn can_transition_to(self, next: TaskState) -> bool {
+        use TaskState::*;
+        matches!(
+            (self, next),
+            (Pending, Running)
+                | (Running, Completing)
+                | (Running, Preempted)
+                | (Completing, Done)
+                | (Preempted, Done)
+        )
+    }
+}
+
+/// What a scheduling task asks the scheduler for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ResourceRequest {
+    /// `cores` cores on a single node plus memory (per-task / multi-level).
+    Cores { cores: u32, mem_mib: u64 },
+    /// One whole node (node-based scheduling).
+    WholeNode,
+}
+
+impl ResourceRequest {
+    /// Cores this request occupies on a node with `cores_per_node` cores.
+    pub fn cores_on(&self, cores_per_node: u32) -> u32 {
+        match self {
+            ResourceRequest::Cores { cores, .. } => *cores,
+            ResourceRequest::WholeNode => cores_per_node,
+        }
+    }
+}
+
+/// A compact batch of identical compute tasks (the DES representation; at
+/// 512 nodes × 1 s tasks a job has ~7.9 M compute tasks, so we never
+/// materialize them individually on the simulation path).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ComputeBatch {
+    /// Number of compute tasks in the batch.
+    pub count: u64,
+    /// Duration of each compute task, seconds.
+    pub each: f64,
+}
+
+impl ComputeBatch {
+    /// Total serial work in the batch.
+    pub fn total(&self) -> f64 {
+        self.count as f64 * self.each
+    }
+}
+
+/// One scheduling task, as submitted.
+#[derive(Debug, Clone)]
+pub struct SchedTaskSpec {
+    /// Resources requested from the scheduler.
+    pub request: ResourceRequest,
+    /// How long the task occupies its resources (for aggregated tasks this
+    /// is the serial per-core work, e.g. n × t = T_job).
+    pub duration: Time,
+    /// The compute tasks aggregated inside, as (per-core batch, lanes).
+    /// `lanes` is the number of parallel streams (1 for per-core tasks,
+    /// `cores_per_node` for node tasks).
+    pub batch: ComputeBatch,
+    pub lanes: u32,
+}
+
+impl SchedTaskSpec {
+    /// Total compute tasks carried by this scheduling task.
+    pub fn compute_tasks(&self) -> u64 {
+        self.batch.count * self.lanes as u64
+    }
+}
+
+/// A job: an array of scheduling tasks plus submission metadata.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub name: String,
+    pub tasks: Vec<SchedTaskSpec>,
+    /// Submit into a named reservation (paper: benchmark slice).
+    pub reservation: Option<String>,
+    /// Priority (higher dispatches first); spot jobs use low priority.
+    pub priority: i32,
+    /// Spot jobs are preemptable.
+    pub preemptable: bool,
+}
+
+impl JobSpec {
+    /// Array size (number of scheduling tasks) — the scheduler-visible
+    /// load, the quantity the paper's contribution minimizes.
+    pub fn array_size(&self) -> u64 {
+        self.tasks.len() as u64
+    }
+
+    /// Total compute tasks across the array.
+    pub fn total_compute_tasks(&self) -> u64 {
+        self.tasks.iter().map(|t| t.compute_tasks()).sum()
+    }
+
+    /// Basic sanity checks before submission.
+    pub fn validate(&self, cores_per_node: u32) -> Result<()> {
+        if self.tasks.is_empty() {
+            return Err(Error::Rejected("empty job".into()));
+        }
+        for t in &self.tasks {
+            if t.duration <= 0.0 {
+                return Err(Error::Rejected("non-positive task duration".into()));
+            }
+            if let ResourceRequest::Cores { cores, .. } = t.request {
+                if cores == 0 || cores > cores_per_node {
+                    return Err(Error::Rejected(format!(
+                        "request of {cores} cores does not fit a {cores_per_node}-core node"
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Where a running task was placed.
+#[derive(Debug, Clone)]
+pub struct Placement {
+    pub node: NodeId,
+    pub mask: CoreMask,
+    pub mem_mib: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn state_machine_legal_paths() {
+        use TaskState::*;
+        assert!(Pending.can_transition_to(Running));
+        assert!(Running.can_transition_to(Completing));
+        assert!(Completing.can_transition_to(Done));
+        assert!(Running.can_transition_to(Preempted));
+        assert!(Preempted.can_transition_to(Done));
+    }
+
+    #[test]
+    fn state_machine_illegal_paths() {
+        use TaskState::*;
+        assert!(!Pending.can_transition_to(Completing));
+        assert!(!Pending.can_transition_to(Done));
+        assert!(!Done.can_transition_to(Pending));
+        assert!(!Completing.can_transition_to(Running));
+        assert!(!Pending.can_transition_to(Preempted));
+    }
+
+    #[test]
+    fn batch_totals() {
+        let b = ComputeBatch { count: 240, each: 1.0 };
+        assert_eq!(b.total(), 240.0);
+    }
+
+    #[test]
+    fn spec_counts() {
+        let node_task = SchedTaskSpec {
+            request: ResourceRequest::WholeNode,
+            duration: 240.0,
+            batch: ComputeBatch { count: 48, each: 5.0 },
+            lanes: 64,
+        };
+        assert_eq!(node_task.compute_tasks(), 48 * 64);
+        let job = JobSpec {
+            name: "j".into(),
+            tasks: vec![node_task; 32],
+            reservation: None,
+            priority: 0,
+            preemptable: false,
+        };
+        assert_eq!(job.array_size(), 32);
+        assert_eq!(job.total_compute_tasks(), 32 * 48 * 64);
+    }
+
+    #[test]
+    fn validation() {
+        let mut job = JobSpec {
+            name: "j".into(),
+            tasks: vec![],
+            reservation: None,
+            priority: 0,
+            preemptable: false,
+        };
+        assert!(job.validate(64).is_err(), "empty job");
+        job.tasks.push(SchedTaskSpec {
+            request: ResourceRequest::Cores { cores: 65, mem_mib: 0 },
+            duration: 1.0,
+            batch: ComputeBatch { count: 1, each: 1.0 },
+            lanes: 1,
+        });
+        assert!(job.validate(64).is_err(), "oversized core request");
+        job.tasks[0].request = ResourceRequest::Cores { cores: 1, mem_mib: 0 };
+        assert!(job.validate(64).is_ok());
+        job.tasks[0].duration = 0.0;
+        assert!(job.validate(64).is_err(), "zero duration");
+    }
+
+    #[test]
+    fn request_core_counts() {
+        assert_eq!(ResourceRequest::WholeNode.cores_on(64), 64);
+        assert_eq!(
+            ResourceRequest::Cores { cores: 3, mem_mib: 0 }.cores_on(64),
+            3
+        );
+    }
+}

@@ -1,0 +1,32 @@
+//! The Slurm-like centralized scheduler substrate.
+//!
+//! The paper measures how a production scheduler (Slurm on TX-Green)
+//! behaves when a single array job carries 2048–32768 scheduling tasks
+//! (multi-level / per-core aggregation) versus 32–512 (node-based
+//! aggregation). We rebuild the relevant scheduler anatomy:
+//!
+//! * a **job/task state machine** (`PENDING → RUNNING → COMPLETING →
+//!   DONE`) with full per-task timestamps ([`job`], [`accounting`]),
+//! * a **single-threaded scheduler server** that serializes submission
+//!   registration, dispatch RPCs and completion cleanup transactions —
+//!   the serialization is what collapses at 512-node scale ([`core`]),
+//! * a **calibrated cost model** for each server operation
+//!   ([`costmodel`]), including the array-size-dependent cleanup cost the
+//!   paper observed ("releasing the completed tasks takes significantly
+//!   longer than dispatching"),
+//! * a **pending queue** with FIFO + priority ordering ([`queue`]), and
+//! * a **background-load (production noise) process** reproducing the
+//!   paper's production-vs-dedicated distinction ([`noise`]).
+
+pub mod accounting;
+pub mod core;
+pub mod costmodel;
+pub mod job;
+pub mod noise;
+pub mod queue;
+
+pub use accounting::{JobStats, TaskRecord};
+pub use core::{SchedEvent, SchedulerSim, SimOutcome};
+pub use costmodel::CostModel;
+pub use job::{ComputeBatch, JobId, JobSpec, ResourceRequest, SchedTaskSpec, TaskId, TaskState};
+pub use queue::PendingQueue;

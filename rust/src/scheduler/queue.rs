@@ -1,0 +1,194 @@
+//! The pending queue: priority-then-FIFO ordering over scheduling tasks.
+//!
+//! Within one array job all tasks share a priority, so dispatch order is
+//! array order (Slurm behaves the same). Across jobs, higher priority goes
+//! first; spot jobs ride at negative priority.
+
+use crate::scheduler::job::TaskId;
+use std::collections::VecDeque;
+
+/// One pending entry.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct Entry {
+    task: TaskId,
+    priority: i32,
+    seq: u64,
+}
+
+/// Priority + FIFO pending queue with O(1) pop and O(log n)-ish insert
+/// (bucketed by priority; priorities in practice are a handful of values).
+#[derive(Debug, Default)]
+pub struct PendingQueue {
+    /// Buckets sorted by descending priority; each bucket FIFO.
+    buckets: Vec<(i32, VecDeque<Entry>)>,
+    seq: u64,
+    len: usize,
+}
+
+impl PendingQueue {
+    pub fn new() -> PendingQueue {
+        PendingQueue::default()
+    }
+
+    /// Enqueue a task at a priority.
+    pub fn push(&mut self, task: TaskId, priority: i32) {
+        self.seq += 1;
+        self.len += 1;
+        let e = Entry {
+            task,
+            priority,
+            seq: self.seq,
+        };
+        match self.buckets.binary_search_by(|(p, _)| priority.cmp(p)) {
+            Ok(i) => self.buckets[i].1.push_back(e),
+            Err(i) => {
+                let mut q = VecDeque::new();
+                q.push_back(e);
+                self.buckets.insert(i, (priority, q));
+            }
+        }
+    }
+
+    /// Peek the next task without removing it.
+    pub fn peek(&self) -> Option<TaskId> {
+        self.buckets
+            .iter()
+            .find(|(_, q)| !q.is_empty())
+            .and_then(|(_, q)| q.front().map(|e| e.task))
+    }
+
+    /// Pop the highest-priority, oldest task.
+    pub fn pop(&mut self) -> Option<TaskId> {
+        for (_, q) in self.buckets.iter_mut() {
+            if let Some(e) = q.pop_front() {
+                self.len -= 1;
+                return Some(e.task);
+            }
+        }
+        None
+    }
+
+    /// Put a task back at the *front* of its priority bucket (head-of-line
+    /// retry after a failed placement).
+    pub fn push_front(&mut self, task: TaskId, priority: i32) {
+        self.len += 1;
+        let e = Entry {
+            task,
+            priority,
+            seq: 0, // front of bucket
+        };
+        match self.buckets.binary_search_by(|(p, _)| priority.cmp(p)) {
+            Ok(i) => self.buckets[i].1.push_front(e),
+            Err(i) => {
+                let mut q = VecDeque::new();
+                q.push_back(e);
+                self.buckets.insert(i, (priority, q));
+            }
+        }
+    }
+
+    /// Remove an arbitrary task (job cancellation); O(n).
+    pub fn remove(&mut self, task: TaskId) -> bool {
+        for (_, q) in self.buckets.iter_mut() {
+            if let Some(pos) = q.iter().position(|e| e.task == task) {
+                q.remove(pos);
+                self.len -= 1;
+                return true;
+            }
+        }
+        false
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_within_priority() {
+        let mut q = PendingQueue::new();
+        q.push(1, 0);
+        q.push(2, 0);
+        q.push(3, 0);
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn priority_order_across_buckets() {
+        let mut q = PendingQueue::new();
+        q.push(10, -5); // spot
+        q.push(11, 0); // normal
+        q.push(12, 5); // interactive
+        q.push(13, 0);
+        assert_eq!(q.pop(), Some(12));
+        assert_eq!(q.pop(), Some(11));
+        assert_eq!(q.pop(), Some(13));
+        assert_eq!(q.pop(), Some(10));
+    }
+
+    #[test]
+    fn push_front_retries_first() {
+        let mut q = PendingQueue::new();
+        q.push(1, 0);
+        q.push(2, 0);
+        let t = q.pop().unwrap();
+        q.push_front(t, 0);
+        assert_eq!(q.pop(), Some(1), "retried task pops first again");
+    }
+
+    #[test]
+    fn peek_does_not_remove() {
+        let mut q = PendingQueue::new();
+        q.push(7, 1);
+        assert_eq!(q.peek(), Some(7));
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.pop(), Some(7));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn remove_specific() {
+        let mut q = PendingQueue::new();
+        q.push(1, 0);
+        q.push(2, 0);
+        q.push(3, 1);
+        assert!(q.remove(2));
+        assert!(!q.remove(99));
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(), Some(3));
+        assert_eq!(q.pop(), Some(1));
+    }
+
+    #[test]
+    fn interleaved_priorities_stay_fifo() {
+        let mut q = PendingQueue::new();
+        for i in 0..100u64 {
+            q.push(i, (i % 3) as i32);
+        }
+        let mut last_by_prio = [None::<u64>; 3];
+        let mut prio_seen = Vec::new();
+        while let Some(t) = q.pop() {
+            let p = (t % 3) as usize;
+            if let Some(prev) = last_by_prio[p] {
+                assert!(t > prev, "FIFO violated within priority {p}");
+            }
+            last_by_prio[p] = Some(t);
+            prio_seen.push(p);
+        }
+        // All priority-2 tasks must come before any priority-1, etc.
+        let first_1 = prio_seen.iter().position(|&p| p == 1).unwrap();
+        let last_2 = prio_seen.iter().rposition(|&p| p == 2).unwrap();
+        assert!(last_2 < first_1);
+    }
+}

@@ -1,0 +1,188 @@
+//! Event calendar: a time-ordered priority queue with stable FIFO
+//! tie-breaking for events scheduled at the same virtual instant.
+
+use super::Time;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// An event scheduled at a virtual time. Ordering is `(time, seq)` so
+/// same-time events pop in insertion order (determinism).
+#[derive(Debug)]
+pub struct Scheduled<E> {
+    pub time: Time,
+    pub seq: u64,
+    pub event: E,
+}
+
+impl<E> PartialEq for Scheduled<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<E> Eq for Scheduled<E> {}
+
+impl<E> PartialOrd for Scheduled<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<E> Ord for Scheduled<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; invert to get earliest-first.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .expect("NaN event time")
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// The event calendar.
+#[derive(Debug)]
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Scheduled<E>>,
+    seq: u64,
+    now: Time,
+    scheduled_total: u64,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    /// Empty calendar at time 0.
+    pub fn new() -> Self {
+        EventQueue {
+            heap: BinaryHeap::new(),
+            seq: 0,
+            now: 0.0,
+            scheduled_total: 0,
+        }
+    }
+
+    /// Current virtual time (the time of the last popped event).
+    pub fn now(&self) -> Time {
+        self.now
+    }
+
+    /// Schedule `event` at absolute time `at`. Times in the past are
+    /// clamped to `now` (the event fires "immediately"), which keeps actor
+    /// code free of time bookkeeping bugs.
+    pub fn at(&mut self, at: Time, event: E) {
+        let t = if at < self.now { self.now } else { at };
+        self.seq += 1;
+        self.scheduled_total += 1;
+        self.heap.push(Scheduled {
+            time: t,
+            seq: self.seq,
+            event,
+        });
+    }
+
+    /// Schedule `event` after a relative delay.
+    pub fn after(&mut self, delay: Time, event: E) {
+        debug_assert!(delay >= 0.0, "negative delay");
+        self.at(self.now + delay, event);
+    }
+
+    /// Pop the earliest event, advancing the clock to its timestamp.
+    pub fn pop(&mut self) -> Option<Scheduled<E>> {
+        let ev = self.heap.pop()?;
+        debug_assert!(ev.time >= self.now, "time went backwards");
+        self.now = ev.time;
+        Some(ev)
+    }
+
+    /// Peek the next event time without popping.
+    pub fn peek_time(&self) -> Option<Time> {
+        self.heap.peek().map(|e| e.time)
+    }
+
+    /// Number of pending events.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// True if no events are pending.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Total events ever scheduled (engine throughput accounting).
+    pub fn scheduled_total(&self) -> u64 {
+        self.scheduled_total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.at(3.0, "c");
+        q.at(1.0, "a");
+        q.at(2.0, "b");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|e| e.event)).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn same_time_is_fifo() {
+        let mut q = EventQueue::new();
+        for i in 0..100 {
+            q.at(5.0, i);
+        }
+        let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|e| e.event)).collect();
+        assert_eq!(order, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut q = EventQueue::new();
+        q.at(2.0, ());
+        q.at(1.0, ());
+        q.pop();
+        assert_eq!(q.now(), 1.0);
+        q.pop();
+        assert_eq!(q.now(), 2.0);
+    }
+
+    #[test]
+    fn past_times_clamp_to_now() {
+        let mut q = EventQueue::new();
+        q.at(5.0, "later");
+        q.pop();
+        q.at(1.0, "past"); // scheduled at t=1 while now=5 → fires at 5
+        let e = q.pop().unwrap();
+        assert_eq!(e.time, 5.0);
+        assert_eq!(e.event, "past");
+    }
+
+    #[test]
+    fn after_is_relative() {
+        let mut q = EventQueue::new();
+        q.at(10.0, "first");
+        q.pop();
+        q.after(2.5, "second");
+        assert_eq!(q.pop().unwrap().time, 12.5);
+    }
+
+    #[test]
+    fn counters() {
+        let mut q: EventQueue<()> = EventQueue::new();
+        assert!(q.is_empty());
+        q.at(1.0, ());
+        q.at(2.0, ());
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.scheduled_total(), 2);
+        q.pop();
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.scheduled_total(), 2);
+    }
+}

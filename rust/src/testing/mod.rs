@@ -1,0 +1,6 @@
+//! Test support: a miniature property-testing toolkit (the vendored crate
+//! set has no `proptest`), used by the coordinator-invariant test suites.
+
+pub mod prop;
+
+pub use prop::{forall, Gen};

@@ -1,0 +1,167 @@
+//! Mini property-based testing: seeded random case generation with
+//! first-failure shrinking over a scalar "size" knob.
+//!
+//! Not a proptest replacement — just enough to express the coordinator
+//! invariants ("for any workload and any cluster shape, aggregation
+//! conserves tasks", "the scheduler always drains", …) as randomized
+//! properties with reproducible failures.
+
+use crate::util::rng::Rng;
+
+/// A generation context handed to property closures.
+pub struct Gen {
+    rng: Rng,
+    /// Current size bound; shrinking retries the property at smaller sizes.
+    pub size: usize,
+}
+
+impl Gen {
+    /// Integer in `[lo, hi]`, additionally capped by the current size.
+    pub fn int(&mut self, lo: u64, hi: u64) -> u64 {
+        let hi_capped = hi.min(lo.saturating_add(self.size as u64));
+        lo + self.rng.below(hi_capped - lo + 1)
+    }
+
+    /// usize in `[lo, hi]` (size-capped).
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.int(lo as u64, hi as u64) as usize
+    }
+
+    /// f64 in `[lo, hi)`.
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    /// Boolean with probability `p`.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.rng.chance(p)
+    }
+
+    /// Pick one of the slice's elements.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        let i = self.rng.range(0, xs.len());
+        &xs[i]
+    }
+
+    /// A vector of `n` items built by `f`.
+    pub fn vec<T>(&mut self, n: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        (0..n).map(|_| f(self)).collect()
+    }
+}
+
+/// Run `cases` random cases of a property. On failure, retry with smaller
+/// sizes to report the smallest failing seed/size, then panic with a
+/// reproduction line.
+pub fn forall(name: &str, cases: usize, prop: impl Fn(&mut Gen) -> Result<(), String>) {
+    forall_seeded(name, 0xC0FFEE, cases, prop)
+}
+
+/// [`forall`] with an explicit base seed (for reproducing failures).
+pub fn forall_seeded(
+    name: &str,
+    base_seed: u64,
+    cases: usize,
+    prop: impl Fn(&mut Gen) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        let seed = base_seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        // Sizes ramp up so early cases are small.
+        let size = 1 + (case * 97) % 1000;
+        if let Err(msg) = run_case(&prop, seed, size) {
+            // Shrink: halve the size until the property passes again.
+            let (mut fail_size, mut fail_msg) = (size, msg);
+            let mut s = size / 2;
+            while s >= 1 {
+                match run_case(&prop, seed, s) {
+                    Err(m) => {
+                        fail_size = s;
+                        fail_msg = m;
+                        if s == 1 {
+                            break;
+                        }
+                        s /= 2;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property {name:?} failed (case {case}, seed {seed:#x}, shrunk size {fail_size}): {fail_msg}\n\
+                 reproduce with forall_seeded({name:?}, {seed:#x}, 1, ..) at size {fail_size}"
+            );
+        }
+    }
+}
+
+fn run_case(
+    prop: &impl Fn(&mut Gen) -> Result<(), String>,
+    seed: u64,
+    size: usize,
+) -> Result<(), String> {
+    let mut g = Gen {
+        rng: Rng::new(seed),
+        size,
+    };
+    prop(&mut g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        forall("reverse twice is identity", 50, |g| {
+            let v = g.vec(g.size.min(64), |g| g.int(0, 100));
+            let mut r = v.clone();
+            r.reverse();
+            r.reverse();
+            if r == v {
+                Ok(())
+            } else {
+                Err("mismatch".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"always fails\"")]
+    fn failing_property_panics_with_repro() {
+        forall("always fails", 10, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn shrinking_reports_small_size() {
+        let res = std::panic::catch_unwind(|| {
+            forall("fails above 10", 100, |g| {
+                if g.size > 10 {
+                    Err(format!("size {}", g.size))
+                } else {
+                    Ok(())
+                }
+            });
+        });
+        let msg = *res.unwrap_err().downcast::<String>().unwrap();
+        // Shrinker halves until ≤10 passes again, so the reported failing
+        // size should be ≤ 2× the threshold.
+        assert!(msg.contains("shrunk size"), "{msg}");
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        let mut g = Gen { rng: Rng::new(1), size: 1000 };
+        for _ in 0..1000 {
+            let x = g.int(5, 10);
+            assert!((5..=10).contains(&x));
+            let f = g.f64(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn size_caps_ranges() {
+        let mut g = Gen { rng: Rng::new(2), size: 3 };
+        for _ in 0..100 {
+            assert!(g.int(0, 1_000_000) <= 3);
+        }
+    }
+}

@@ -1,0 +1,112 @@
+//! Tiny CSV writer (RFC 4180 quoting) for the figure/benchmark data dumps.
+
+use std::io::Write;
+use std::path::Path;
+
+/// In-memory CSV document builder.
+#[derive(Debug, Default)]
+pub struct Csv {
+    buf: String,
+    ncol: Option<usize>,
+}
+
+impl Csv {
+    /// Start a CSV with a header row.
+    pub fn with_header<S: AsRef<str>>(cols: &[S]) -> Csv {
+        let mut c = Csv::default();
+        c.row(cols);
+        c
+    }
+
+    /// Append a row of string-ish cells; enforces constant arity.
+    pub fn row<S: AsRef<str>>(&mut self, cells: &[S]) -> &mut Self {
+        match self.ncol {
+            None => self.ncol = Some(cells.len()),
+            Some(n) => assert_eq!(n, cells.len(), "CSV arity mismatch"),
+        }
+        for (i, c) in cells.iter().enumerate() {
+            if i > 0 {
+                self.buf.push(',');
+            }
+            self.buf.push_str(&quote(c.as_ref()));
+        }
+        self.buf.push('\n');
+        self
+    }
+
+    /// Append a row of f64s, formatted with up to 6 significant decimals.
+    pub fn row_f64(&mut self, cells: &[f64]) -> &mut Self {
+        let strs: Vec<String> = cells.iter().map(|x| trim_f64(*x)).collect();
+        self.row(&strs)
+    }
+
+    /// The document text.
+    pub fn as_str(&self) -> &str {
+        &self.buf
+    }
+
+    /// Write the document to `path`, creating parent directories.
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.buf.as_bytes())
+    }
+}
+
+fn quote(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+fn trim_f64(x: f64) -> String {
+    if x.is_nan() {
+        return String::new();
+    }
+    if x == x.trunc() && x.abs() < 1e15 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x:.6}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_rows() {
+        let mut c = Csv::with_header(&["a", "b"]);
+        c.row(&["1", "x,y"]).row(&["2", "q\"t"]);
+        assert_eq!(c.as_str(), "a,b\n1,\"x,y\"\n2,\"q\"\"t\"\n");
+    }
+
+    #[test]
+    fn f64_rows() {
+        let mut c = Csv::with_header(&["v", "w"]);
+        c.row_f64(&[2.0, 2.5]);
+        c.row_f64(&[f64::NAN, 1.0]);
+        assert_eq!(c.as_str(), "v,w\n2,2.500000\n,1\n");
+    }
+
+    #[test]
+    #[should_panic(expected = "CSV arity mismatch")]
+    fn arity_enforced() {
+        let mut c = Csv::with_header(&["a", "b"]);
+        c.row(&["only"]);
+    }
+
+    #[test]
+    fn save_roundtrip() {
+        let mut c = Csv::with_header(&["x"]);
+        c.row(&["1"]);
+        let p = std::env::temp_dir().join("llsched_csv_test/out.csv");
+        c.save(&p).unwrap();
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), "x\n1\n");
+        let _ = std::fs::remove_file(&p);
+    }
+}

@@ -1,0 +1,200 @@
+//! Formatting helpers: durations, counts, ASCII tables and ASCII plots.
+//!
+//! The paper reports everything as tables (Table I–III) and two figures
+//! (overhead scatter, utilization-vs-time curves); the report layer renders
+//! terminal-friendly versions of all of them through this module.
+
+/// Format a duration in (virtual or real) seconds, e.g. `242.0s`, `1.2h`.
+pub fn dur(seconds: f64) -> String {
+    if seconds.is_nan() {
+        return "N/A".to_string();
+    }
+    if seconds < 0.0 {
+        return format!("-{}", dur(-seconds));
+    }
+    if seconds < 120.0 {
+        format!("{seconds:.1}s")
+    } else if seconds < 7200.0 {
+        format!("{:.1}m", seconds / 60.0)
+    } else {
+        format!("{:.1}h", seconds / 3600.0)
+    }
+}
+
+/// Format a count with thousands separators (`8,388,608`).
+pub fn count(n: u64) -> String {
+    let s = n.to_string();
+    let mut out = String::with_capacity(s.len() + s.len() / 3);
+    for (i, c) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(c);
+    }
+    out
+}
+
+/// A simple right-padded ASCII table renderer.
+#[derive(Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with the given column headers.
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
+        Table {
+            header: header.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row; panics if the column count mismatches the header.
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    /// Number of data rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True if the table has no data rows.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Render with `|`-separated columns and a dashed header rule.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for i in 0..ncol {
+                line.push(' ');
+                line.push_str(&format!("{:<w$}", cells[i], w = widths[i]));
+                line.push_str(" |");
+            }
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        let mut rule = String::from("|");
+        for w in &widths {
+            rule.push_str(&"-".repeat(w + 2));
+            rule.push('|');
+        }
+        out.push_str(&rule);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Render an ASCII line plot of one or more named series.
+///
+/// Used for the terminal rendering of Fig 2 (utilization vs time). Each
+/// series is a list of `(x, y)` points; y is expected in `[0, y_max]`.
+pub fn ascii_plot(series: &[(String, Vec<(f64, f64)>)], width: usize, height: usize, y_max: f64) -> String {
+    let marks = ['*', '+', 'o', 'x', '#', '@', '%', '&'];
+    let x_max = series
+        .iter()
+        .flat_map(|(_, pts)| pts.iter().map(|p| p.0))
+        .fold(1e-9_f64, f64::max);
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, pts)) in series.iter().enumerate() {
+        let mark = marks[si % marks.len()];
+        for &(x, y) in pts {
+            let xi = ((x / x_max) * (width - 1) as f64).round() as usize;
+            let yi = ((y / y_max).clamp(0.0, 1.0) * (height - 1) as f64).round() as usize;
+            let row = height - 1 - yi;
+            grid[row][xi.min(width - 1)] = mark;
+        }
+    }
+    let mut out = String::new();
+    for (ri, row) in grid.iter().enumerate() {
+        let ylabel = if ri == 0 {
+            format!("{y_max:>7.1} ")
+        } else if ri == height - 1 {
+            format!("{:>7.1} ", 0.0)
+        } else {
+            " ".repeat(8)
+        };
+        out.push_str(&ylabel);
+        out.push('|');
+        out.push_str(&row.iter().collect::<String>());
+        out.push('\n');
+    }
+    out.push_str(&" ".repeat(8));
+    out.push('+');
+    out.push_str(&"-".repeat(width));
+    out.push('\n');
+    out.push_str(&format!("{:>9}0{:>w$.0}\n", "", x_max, w = width - 1));
+    for (si, (name, _)) in series.iter().enumerate() {
+        out.push_str(&format!("  {} {}\n", marks[si % marks.len()], name));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dur_ranges() {
+        assert_eq!(dur(12.34), "12.3s");
+        assert_eq!(dur(242.0), "4.0m");
+        assert_eq!(dur(7200.0), "2.0h");
+        assert_eq!(dur(f64::NAN), "N/A");
+        assert_eq!(dur(-5.0), "-5.0s");
+    }
+
+    #[test]
+    fn count_separators() {
+        assert_eq!(count(0), "0");
+        assert_eq!(count(999), "999");
+        assert_eq!(count(1000), "1,000");
+        assert_eq!(count(8_388_608), "8,388,608");
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(vec!["a", "bb"]);
+        t.row(vec!["1", "2"]);
+        t.row(vec!["333", "4"]);
+        let r = t.render();
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines.len(), 4);
+        // All lines same width.
+        assert!(lines.windows(2).all(|w| w[0].len() == w[1].len()));
+        assert!(lines[0].contains("a") && lines[0].contains("bb"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn table_arity_checked() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.row(vec!["only-one"]);
+    }
+
+    #[test]
+    fn ascii_plot_smoke() {
+        let s = vec![("up".to_string(), vec![(0.0, 0.0), (10.0, 1.0)])];
+        let p = ascii_plot(&s, 20, 5, 1.0);
+        assert!(p.contains('*'));
+        assert!(p.contains("up"));
+    }
+}

@@ -1,0 +1,9 @@
+//! Small self-contained utilities (PRNG, statistics, formatting, JSON/CSV
+//! emitters). Hand-rolled because the build environment is offline and the
+//! vendored crate set has no `rand`, `serde` or table-formatting crates.
+
+pub mod csv;
+pub mod fmt;
+pub mod json;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,10 @@
+//! Workload construction: the paper's benchmark matrix, synthetic task
+//! distributions for extension studies, and trace record/replay.
+
+pub mod paper;
+pub mod taskgen;
+pub mod trace;
+
+pub use paper::{paper_workload, PaperCell};
+pub use taskgen::TaskGen;
+pub use trace::Trace;

@@ -1,0 +1,89 @@
+//! The paper's benchmark workloads (Tables I & II).
+
+use crate::aggregation::plan::{ClusterShape, Workload};
+use crate::config::presets::{TaskConfig, CORES_PER_NODE};
+use crate::config::{Mode, RunConfig};
+
+/// One cell of the Table III matrix, fully resolved.
+#[derive(Debug, Clone)]
+pub struct PaperCell {
+    pub nodes: u32,
+    pub task: TaskConfig,
+    pub mode: Mode,
+    pub run_idx: usize,
+    pub config: RunConfig,
+}
+
+impl PaperCell {
+    pub fn new(nodes: u32, task: TaskConfig, mode: Mode, run_idx: usize) -> PaperCell {
+        PaperCell {
+            nodes,
+            task,
+            mode,
+            run_idx,
+            config: crate::config::presets::cell(nodes, &task, mode, run_idx),
+        }
+    }
+
+    /// The machine slice this cell fills.
+    pub fn shape(&self) -> ClusterShape {
+        ClusterShape {
+            nodes: self.nodes,
+            cores_per_node: CORES_PER_NODE,
+            task_mem_mib: self.config.task_mem_mib,
+        }
+    }
+
+    /// The compute workload: every processor runs T_job seconds of
+    /// `task_time`-second tasks.
+    pub fn workload(&self) -> Workload {
+        paper_workload(&self.config)
+    }
+
+    /// Human label like `512n/1s/N*`.
+    pub fn label(&self) -> String {
+        format!(
+            "{}n/{}s/{}",
+            self.nodes,
+            self.task.task_time as u64,
+            self.mode.short()
+        )
+    }
+}
+
+/// Build the constant-time-task workload for a run configuration.
+pub fn paper_workload(c: &RunConfig) -> Workload {
+    Workload::paper(c.processors(), c.task_time, c.job_time)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::{NODE_SCALES, TASK_CONFIGS};
+
+    #[test]
+    fn cell_workload_sizes() {
+        let cell = PaperCell::new(512, TASK_CONFIGS[0], Mode::NodeBased, 0);
+        assert_eq!(cell.workload().count(), 7_864_320);
+        assert_eq!(cell.shape().processors(), 32_768);
+        assert_eq!(cell.label(), "512n/1s/N*");
+    }
+
+    #[test]
+    fn total_work_matches_table2() {
+        // Table II: total processor time in hours.
+        for (&nodes, hours) in NODE_SCALES.iter().zip([136.5, 273.1, 546.1, 1092.3, 2184.5]) {
+            let cell = PaperCell::new(nodes, TASK_CONFIGS[3], Mode::MultiLevel, 0);
+            let h = cell.workload().total_work() / 3600.0;
+            assert!((h - hours).abs() < 0.06, "{nodes}: {h} vs {hours}");
+        }
+    }
+
+    #[test]
+    fn workload_independent_of_mode() {
+        let a = PaperCell::new(64, TASK_CONFIGS[1], Mode::MultiLevel, 0);
+        let b = PaperCell::new(64, TASK_CONFIGS[1], Mode::NodeBased, 0);
+        assert_eq!(a.workload().count(), b.workload().count());
+        assert_eq!(a.workload().total_work(), b.workload().total_work());
+    }
+}

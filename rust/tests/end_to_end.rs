@@ -1,0 +1,150 @@
+//! End-to-end integration: launch tools → scheduler → metrics → reports,
+//! plus the paper-shape assertions that tie the whole reproduction
+//! together at reduced scale.
+
+use llsched::aggregation::plan::ClusterShape;
+use llsched::aggregation::triples::Triple;
+use llsched::cluster::Cluster;
+use llsched::config::presets::TASK_CONFIGS;
+use llsched::config::Mode;
+use llsched::coordinator::experiment::{run_cell, run_matrix, ExperimentOpts};
+use llsched::lltools::{LLMapReduce, LLsub};
+use llsched::metrics::report;
+use llsched::scheduler::core::SchedulerSim;
+use llsched::scheduler::costmodel::CostModel;
+use llsched::scheduler::noise::NoiseModel;
+use llsched::workload::paper::PaperCell;
+use llsched::aggregation::plan::Workload;
+
+#[test]
+fn llsub_triples_flow_through_scheduler() {
+    let shape = ClusterShape { nodes: 4, cores_per_node: 64, task_mem_mib: 64 };
+    let sub = LLsub::new("./sim_task", 5.0)
+        .triples(&Triple::fill(4, 64), &shape)
+        .unwrap();
+    let sim = SchedulerSim::new(
+        Cluster::tx_green(4),
+        CostModel::slurm_like_tx_green(),
+        NoiseModel::dedicated(),
+        3,
+    )
+    .with_server_speed(1.0);
+    let (out, job) = sim.run_single(sub.job);
+    let stats = out.job_stats(job, 5.0).unwrap();
+    assert_eq!(stats.array_size, 4);
+    assert!(stats.runtime < 10.0, "runtime {}", stats.runtime);
+    // Generated scripts really do cover 4 × 64 workers.
+    let total: u64 = sub.scripts.iter().map(|s| s.total_tasks()).sum();
+    assert_eq!(total, 256);
+}
+
+#[test]
+fn llmapreduce_mimo_vs_triples_same_work_different_array() {
+    let shape = ClusterShape { nodes: 8, cores_per_node: 64, task_mem_mib: 64 };
+    let w = Workload::Uniform { count: 8 * 64 * 4, duration: 2.0 };
+    let mimo = LLMapReduce::new("mapper").map(&w, &shape).unwrap();
+    let trip = LLMapReduce::new("mapper").with_triples().map(&w, &shape).unwrap();
+    assert_eq!(mimo.job.array_size(), 512);
+    assert_eq!(trip.job.array_size(), 8);
+    // Scheduler-visible load ratio = cores per node (the paper's lever).
+    assert_eq!(mimo.job.array_size() / trip.job.array_size(), 64);
+}
+
+#[test]
+fn paper_shape_holds_at_small_scale() {
+    // The qualitative claims, at 32 nodes (fast to simulate):
+    // N* overhead < 10% T_job; M* overhead > 10%; N* fills faster.
+    let t = TASK_CONFIGS[3];
+    let n = run_cell(&PaperCell::new(32, t, Mode::NodeBased, 0)).unwrap();
+    let m = run_cell(&PaperCell::new(32, t, Mode::MultiLevel, 0)).unwrap();
+    assert!(n.overhead / 240.0 < 0.10, "N* norm overhead {}", n.overhead / 240.0);
+    assert!(m.overhead / 240.0 > 0.10, "M* norm overhead {}", m.overhead / 240.0);
+    assert!(n.dispatch_span < m.dispatch_span / 10.0);
+    // Both reach full utilization at this scale (paper Fig 2, S1).
+    assert!(n.utilization.peak() > 0.99);
+    assert!(m.utilization.peak() > 0.99);
+}
+
+#[test]
+fn overhead_roughly_independent_of_task_time() {
+    // Paper: "the overhead time remains at the same level regardless of
+    // the task times ... as long as the configuration size is kept the
+    // same" — because the scheduling-task count is fixed per mode.
+    let mut overheads = Vec::new();
+    for t in &TASK_CONFIGS {
+        let m = run_cell(&PaperCell::new(32, *t, Mode::MultiLevel, 1)).unwrap();
+        overheads.push(m.overhead);
+    }
+    let min = overheads.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = overheads.iter().cloned().fold(0.0, f64::max);
+    assert!(
+        max < 3.0 * min.max(10.0),
+        "overheads vary too much with t: {overheads:?}"
+    );
+}
+
+#[test]
+fn matrix_reports_render() {
+    let opts = ExperimentOpts { max_nodes: 64, runs: 1, ..Default::default() };
+    let (points, all) = run_matrix(&opts, |_| {}).unwrap();
+    let t3 = report::table3(&points);
+    assert!(t3.contains("32 nodes") && t3.contains("64 nodes"));
+    assert!(t3.contains("N/A"), "512-node rows unmeasured here");
+    let f1 = report::fig1_csv(&points);
+    assert_eq!(f1.as_str().lines().count(), points.len() + 1);
+    let med: Vec<_> = llsched::coordinator::experiment::median_runs(&all);
+    assert_eq!(med.len(), points.len());
+    let series: Vec<(String, llsched::metrics::timeline::UtilizationSeries)> = med
+        .iter()
+        .map(|r| {
+            (
+                llsched::coordinator::experiment::fig2_label(&r.cell),
+                r.utilization.clone(),
+            )
+        })
+        .collect();
+    let f2 = report::fig2_csv(&series);
+    assert!(f2.as_str().lines().count() > 100);
+}
+
+#[test]
+fn release_span_grows_with_array_size() {
+    // Paper: "releasing the completed tasks takes significantly longer
+    // as compared to dispatching" at scale. Compare release spans.
+    let t = TASK_CONFIGS[3];
+    let m64 = run_cell(&PaperCell::new(64, t, Mode::MultiLevel, 0)).unwrap();
+    let m256 = run_cell(&PaperCell::new(256, t, Mode::MultiLevel, 0)).unwrap();
+    assert!(
+        m256.release_span > 2.0 * m64.release_span,
+        "release spans {} vs {}",
+        m64.release_span,
+        m256.release_span
+    );
+    // And node-based release is far cheaper at the same scale.
+    let n256 = run_cell(&PaperCell::new(256, t, Mode::NodeBased, 0)).unwrap();
+    assert!(n256.release_span * 10.0 < m256.release_span);
+}
+
+#[test]
+fn spot_release_headline() {
+    // Node-based spot jobs release ~an order of magnitude faster.
+    let core = llsched::spot::measure_release(Mode::MultiLevel, 32, 64, 60.0, 5).unwrap();
+    let node = llsched::spot::measure_release(Mode::NodeBased, 32, 64, 60.0, 5).unwrap();
+    assert_eq!(core.sched_tasks / node.sched_tasks, 64);
+    assert!(node.release_latency * 20.0 < core.release_latency);
+}
+
+#[test]
+fn guard_marks_512_multilevel_unusable() {
+    // The paper could not run M* at 512 nodes in production; our
+    // responsiveness guard reproduces the distinction.
+    let t = TASK_CONFIGS[3];
+    let m = run_cell(&PaperCell::new(512, t, Mode::MultiLevel, 0)).unwrap();
+    assert!(m.unusable_in_production, "M* 512 saturates the scheduler");
+    assert!(m.runtime > 2000.0, "the collapse: {}", m.runtime);
+    let n = run_cell(&PaperCell::new(512, t, Mode::NodeBased, 0)).unwrap();
+    assert!(!n.unusable_in_production, "N* stays responsive");
+    // Paper: M* 512 never reaches 100% utilization.
+    assert!(m.utilization.peak() < 1.0);
+    assert!(m.utilization.peak() < 0.90, "peak {}", m.utilization.peak());
+}

@@ -1,0 +1,138 @@
+//! Integration tests over the PJRT runtime: load the AOT artifacts built
+//! by `make artifacts`, execute them, and verify the numerics against the
+//! Python-side oracle (`artifacts/expected_checksums.json`) — the
+//! cross-language correctness proof for the three-layer stack.
+
+use llsched::exec::payload::Payload;
+use llsched::exec::worker::NodeExecutor;
+use llsched::aggregation::script::build_scripts;
+use llsched::runtime::server::{initial_state, RuntimeServer};
+use llsched::runtime::{ExecPool, Runtime};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn artifacts_dir() -> PathBuf {
+    llsched::runtime::find_artifacts_dir().expect("run `make artifacts` first")
+}
+
+/// Minimal JSON reader for the oracle file (array of flat objects).
+fn oracle_cases() -> Vec<(String, u64, usize, f64)> {
+    let text = std::fs::read_to_string(artifacts_dir().join("expected_checksums.json"))
+        .expect("expected_checksums.json present");
+    let mut out = Vec::new();
+    for obj in text.split('{').skip(1) {
+        let field = |key: &str| -> String {
+            let pat = format!("\"{key}\":");
+            let rest = &obj[obj.find(&pat).unwrap() + pat.len()..];
+            rest.trim_start()
+                .trim_start_matches('"')
+                .split(|c| c == '"' || c == ',' || c == '}' || c == '\n')
+                .next()
+                .unwrap()
+                .trim()
+                .to_string()
+        };
+        out.push((
+            field("artifact"),
+            field("task_id").parse().unwrap(),
+            field("invocations").parse().unwrap(),
+            field("checksum").parse().unwrap(),
+        ));
+    }
+    out
+}
+
+#[test]
+fn artifacts_load_and_execute() {
+    let mut pool = ExecPool::open(artifacts_dir());
+    let files = pool.list().unwrap();
+    assert_eq!(files.len(), 3, "three shape variants exported");
+    for f in &files {
+        let name = f
+            .file_name()
+            .and_then(|n| n.to_str())
+            .and_then(|n| n.strip_suffix(".hlo.txt"))
+            .unwrap()
+            .to_string();
+        let rt = pool.get(&name).unwrap();
+        let state = vec![0.25f32; rt.artifact.elements()];
+        let (out, checksum) = rt.step(&state).unwrap();
+        assert_eq!(out.len(), state.len());
+        assert!(out.iter().all(|x| x.is_finite()));
+        assert!(checksum.is_finite());
+    }
+}
+
+#[test]
+fn step_is_deterministic() {
+    let rt = Runtime::load(&artifacts_dir().join("simstep_8x32x32.hlo.txt")).unwrap();
+    let state = initial_state(&rt.artifact, 5);
+    let (a, ca) = rt.step(&state).unwrap();
+    let (b, cb) = rt.step(&state).unwrap();
+    assert_eq!(a, b);
+    assert_eq!(ca, cb);
+}
+
+#[test]
+fn uniform_field_matches_closed_form() {
+    // A constant field has zero laplacian: each inner step applies only
+    // the cubic damping y - 0.01*y^3; the module runs 4 scan steps.
+    let rt = Runtime::load(&artifacts_dir().join("simstep_8x32x32.hlo.txt")).unwrap();
+    let state = vec![0.5f32; rt.artifact.elements()];
+    let (out, _) = rt.step(&state).unwrap();
+    let mut v = 0.5f64;
+    for _ in 0..4 {
+        v = v - 0.01 * v * v * v;
+    }
+    for &x in out.iter().take(16) {
+        assert!((x as f64 - v).abs() < 1e-5, "{x} vs {v}");
+    }
+}
+
+#[test]
+fn checksums_match_python_oracle() {
+    let cases = oracle_cases();
+    assert!(cases.len() >= 4, "oracle has cases");
+    let mut pool = ExecPool::open(artifacts_dir());
+    for (artifact, task_id, invocations, expected) in cases {
+        let rt = pool.get(&artifact).unwrap();
+        let state = initial_state(&rt.artifact, task_id);
+        let (_, checksum) = rt.run_task(&state, invocations).unwrap();
+        let rel = ((checksum as f64 - expected) / expected.abs().max(1e-9)).abs();
+        assert!(
+            rel < 1e-4,
+            "{artifact} task {task_id} x{invocations}: rust {checksum} vs python {expected}"
+        );
+    }
+}
+
+#[test]
+fn runtime_server_serves_lanes() {
+    let server = Arc::new(
+        RuntimeServer::spawn(artifacts_dir().join("simstep_8x32x32.hlo.txt")).unwrap(),
+    );
+    // Same task twice → identical checksum; different tasks differ.
+    let a = server.run_task(1, 1).unwrap();
+    let b = server.run_task(1, 1).unwrap();
+    let c = server.run_task(2, 1).unwrap();
+    assert_eq!(a, b);
+    assert_ne!(a, c);
+}
+
+#[test]
+fn node_executor_runs_pjrt_payload_under_generated_script() {
+    // The full L3→L1 path: node-based script → pinned lanes → PJRT tasks.
+    let server = Arc::new(
+        RuntimeServer::spawn(artifacts_dir().join("simstep_8x32x32.hlo.txt")).unwrap(),
+    );
+    let scripts = build_scripts(8, 1, 4, 1);
+    let rep = NodeExecutor::default()
+        .run(
+            &scripts[0],
+            &Payload::Simulate { server: server.clone(), iters: 1 },
+        )
+        .unwrap();
+    assert_eq!(rep.tasks_run, 8);
+    assert_eq!(rep.tasks_failed, 0);
+    assert_ne!(rep.checksum_fold, 0, "checksums folded in");
+}
