@@ -1,0 +1,159 @@
+//! Bench: indexed placement vs the linear-scan baseline.
+//!
+//! The acceptance bar for the placement subsystem: indexed placement
+//! beats the O(N) scan by ≥10× for single-task dispatch at 4096 nodes.
+//! Three measurements per scale (512 / 4096 / 16384 nodes):
+//!
+//!  1. single-task core-level dispatch on a nearly-full cluster — the
+//!     worst case for first-fit scans (the fitting node is the last);
+//!  2. whole-node ("give me an idle node") lookup on the same cluster;
+//!  3. a full node-based machine fill — N whole-node placements, the
+//!     paper's interactive-launch hot loop (scan pays O(N²) total,
+//!     the index O(N log N)).
+//!
+//! ```bash
+//! cargo bench --bench bench_placement
+//! ```
+
+use llsched::bench::{bench, black_box, fmt_secs, section, BenchOpts};
+use llsched::cluster::Cluster;
+use llsched::placement::{FreeIndex, PlacementEngine, Strategy};
+use std::time::Duration;
+
+const SCALES: [u32; 3] = [512, 4096, 16384];
+
+/// Cluster with every node but the last fully allocated.
+fn near_full(nodes: u32) -> Cluster {
+    let mut c = Cluster::tx_green(nodes);
+    for id in 0..nodes - 1 {
+        c.node_mut(id).unwrap().allocate_whole().unwrap();
+    }
+    c
+}
+
+fn fill_scan(nodes: u32) -> usize {
+    let mut cluster = Cluster::tx_green(nodes);
+    let mut placed = 0usize;
+    loop {
+        let id = {
+            let idle = cluster.find_idle_nodes(1, None);
+            match idle.first() {
+                Some(&id) => id,
+                None => break,
+            }
+        };
+        cluster.node_mut(id).unwrap().allocate_whole().unwrap();
+        placed += 1;
+    }
+    placed
+}
+
+fn fill_indexed(nodes: u32) -> usize {
+    let mut cluster = Cluster::tx_green(nodes);
+    let mut engine = PlacementEngine::new(&cluster, Strategy::NodeBased, 1);
+    let mut placed = 0usize;
+    while engine.place_whole(&mut cluster, None).is_some() {
+        placed += 1;
+    }
+    placed
+}
+
+fn main() {
+    let opts = BenchOpts {
+        warmup: 1,
+        iters: 5,
+        max_wall: Duration::from_secs(30),
+    };
+    let mut dispatch_speedups = Vec::new();
+
+    for &nodes in &SCALES {
+        section(&format!("{nodes} nodes"));
+        let cluster = near_full(nodes);
+        let index = FreeIndex::build(&cluster);
+        let queries: usize = 1000;
+
+        // 1. single-task core-level dispatch query.
+        let scan = bench(&format!("scan  find_fit_node ×{queries}"), opts, |_| {
+            let mut acc = 0u64;
+            for _ in 0..queries {
+                acc += black_box(cluster.find_fit_node(1, 0, None).unwrap()) as u64;
+            }
+            acc
+        });
+        println!("{}", scan.line());
+        let indexed = bench(&format!("index first_fit      ×{queries}"), opts, |_| {
+            let mut acc = 0u64;
+            for _ in 0..queries {
+                acc += black_box(index.first_fit(&cluster, 0, 1, 0).unwrap()) as u64;
+            }
+            acc
+        });
+        println!("{}", indexed.line());
+        let speedup = scan.summary.p50 / indexed.summary.p50.max(1e-12);
+        println!(
+            "  → single-task dispatch: scan {}/op, index {}/op, speedup {speedup:.0}x",
+            fmt_secs(scan.summary.p50 / queries as f64),
+            fmt_secs(indexed.summary.p50 / queries as f64),
+        );
+        dispatch_speedups.push((nodes, speedup));
+
+        // 2. whole-node (idle pool) lookup.
+        let scan_idle = bench(&format!("scan  find_idle_nodes ×{queries}"), opts, |_| {
+            let mut acc = 0u64;
+            for _ in 0..queries {
+                acc += black_box(cluster.find_idle_nodes(1, None).first().copied().unwrap())
+                    as u64;
+            }
+            acc
+        });
+        println!("{}", scan_idle.line());
+        let index_idle = bench(&format!("index idle_lowest     ×{queries}"), opts, |_| {
+            let mut acc = 0u64;
+            for _ in 0..queries {
+                acc += black_box(index.idle_lowest(&cluster, 0).unwrap()) as u64;
+            }
+            acc
+        });
+        println!("{}", index_idle.line());
+        println!(
+            "  → whole-node lookup: speedup {:.0}x",
+            scan_idle.summary.p50 / index_idle.summary.p50.max(1e-12)
+        );
+
+        // 3. full node-based machine fill (the interactive-launch loop).
+        let fill_opts = BenchOpts {
+            warmup: 0,
+            iters: 3,
+            max_wall: Duration::from_secs(30),
+        };
+        let scan_fill = bench(&format!("scan  fill {nodes} whole nodes"), fill_opts, |_| {
+            black_box(fill_scan(nodes))
+        });
+        println!("{}", scan_fill.line());
+        let index_fill = bench(&format!("index fill {nodes} whole nodes"), fill_opts, |_| {
+            black_box(fill_indexed(nodes))
+        });
+        println!("{}", index_fill.line());
+        println!(
+            "  → machine fill: speedup {:.0}x",
+            scan_fill.summary.p50 / index_fill.summary.p50.max(1e-12)
+        );
+    }
+
+    section("acceptance");
+    let mut failed = false;
+    for (nodes, speedup) in &dispatch_speedups {
+        let verdict = if *nodes < 4096 {
+            "info"
+        } else if *speedup >= 10.0 {
+            "PASS (≥10x required)"
+        } else {
+            failed = true;
+            "FAIL (≥10x required)"
+        };
+        println!("single-task dispatch at {nodes:>6} nodes: {speedup:>8.0}x  [{verdict}]");
+    }
+    if failed {
+        std::process::exit(1);
+    }
+}

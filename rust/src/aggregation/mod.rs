@@ -54,4 +54,12 @@ mod tests {
         assert_eq!(for_mode(Mode::MultiLevel).mode(), Mode::MultiLevel);
         assert_eq!(for_mode(Mode::NodeBased).mode(), Mode::NodeBased);
     }
+
+    #[test]
+    fn modes_name_their_placement_defaults() {
+        use crate::placement::Strategy;
+        assert_eq!(for_mode(Mode::PerTask).default_strategy(), Strategy::FirstFit);
+        assert_eq!(for_mode(Mode::MultiLevel).default_strategy(), Strategy::FirstFit);
+        assert_eq!(for_mode(Mode::NodeBased).default_strategy(), Strategy::NodeBased);
+    }
 }

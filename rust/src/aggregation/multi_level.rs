@@ -10,6 +10,7 @@
 use crate::aggregation::plan::{split_even, Aggregator, ClusterShape, Workload};
 use crate::config::Mode;
 use crate::error::Result;
+use crate::placement::Strategy;
 use crate::scheduler::job::{ComputeBatch, JobSpec, ResourceRequest, SchedTaskSpec};
 
 /// The per-core aggregator.
@@ -19,6 +20,13 @@ pub struct MultiLevel;
 impl Aggregator for MultiLevel {
     fn mode(&self) -> Mode {
         Mode::MultiLevel
+    }
+
+    /// Per-core requests go through the index's first-fit query: the
+    /// same lowest-node-first packing as the historical scan, answered
+    /// from the free-core buckets instead of an O(N) walk.
+    fn default_strategy(&self) -> Strategy {
+        Strategy::FirstFit
     }
 
     fn plan(&self, name: &str, workload: &Workload, shape: &ClusterShape) -> Result<JobSpec> {

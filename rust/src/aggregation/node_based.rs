@@ -12,6 +12,7 @@ use crate::aggregation::script::{build_scripts, NodeScript};
 use crate::aggregation::triples::Triple;
 use crate::config::Mode;
 use crate::error::Result;
+use crate::placement::Strategy;
 use crate::scheduler::job::{ComputeBatch, JobSpec, ResourceRequest, SchedTaskSpec};
 
 /// The per-node aggregator.
@@ -49,6 +50,13 @@ impl NodeBased {
 impl Aggregator for NodeBased {
     fn mode(&self) -> Mode {
         Mode::NodeBased
+    }
+
+    /// Whole-node requests route through the placement index's idle
+    /// pool — the O(log n) pop that gives the simulator's own dispatch
+    /// the paper's node-vs-task asymptotics.
+    fn default_strategy(&self) -> Strategy {
+        Strategy::NodeBased
     }
 
     fn plan(&self, name: &str, workload: &Workload, shape: &ClusterShape) -> Result<JobSpec> {

@@ -9,6 +9,7 @@
 use crate::aggregation::plan::{Aggregator, ClusterShape, Workload};
 use crate::config::Mode;
 use crate::error::Result;
+use crate::placement::Strategy;
 use crate::scheduler::job::{ComputeBatch, JobSpec, ResourceRequest, SchedTaskSpec};
 
 /// The 1:1 aggregator.
@@ -18,6 +19,12 @@ pub struct PerTask;
 impl Aggregator for PerTask {
     fn mode(&self) -> Mode {
         Mode::PerTask
+    }
+
+    /// One single-core request per compute task: indexed first-fit,
+    /// matching what the naive array job got from the linear scan.
+    fn default_strategy(&self) -> Strategy {
+        Strategy::FirstFit
     }
 
     fn plan(&self, name: &str, workload: &Workload, shape: &ClusterShape) -> Result<JobSpec> {

@@ -2,6 +2,7 @@
 
 use crate::config::Mode;
 use crate::error::{Error, Result};
+use crate::placement::Strategy;
 use crate::scheduler::job::JobSpec;
 
 /// The compute tasks a user wants run.
@@ -93,6 +94,14 @@ pub trait Aggregator {
     /// DES representation (durations, batch counts) and — for node-based —
     /// the generated execution script.
     fn plan(&self, name: &str, workload: &Workload, shape: &ClusterShape) -> Result<JobSpec>;
+
+    /// The placement strategy this mode's jobs route through by default
+    /// (used when the run config sets no explicit `placement`). The
+    /// core-level modes keep the historical first-fit scan order;
+    /// node-based overrides this with the idle-pool fast path.
+    fn default_strategy(&self) -> Strategy {
+        Strategy::FirstFit
+    }
 }
 
 /// Split `count` items as evenly as possible over `bins` bins

@@ -148,28 +148,43 @@ impl CoreMask {
 
     /// Apply this mask to the calling thread with `sched_setaffinity(2)`.
     /// No-op error on platforms without it. Used by the real executor.
+    ///
+    /// Hand-rolled FFI: the offline build vendors no `libc` crate.
+    /// `cpu_set_t` on Linux is a fixed 1024-bit mask.
     #[cfg(target_os = "linux")]
     pub fn apply_to_current_thread(&self) -> std::io::Result<()> {
-        unsafe {
-            let mut set: libc::cpu_set_t = std::mem::zeroed();
-            libc::CPU_ZERO(&mut set);
-            let ncpu = libc::sysconf(libc::_SC_NPROCESSORS_ONLN) as u32;
-            let mut any = false;
-            for c in self.iter() {
-                if c < ncpu {
-                    libc::CPU_SET(c as usize, &mut set);
-                    any = true;
-                }
+        const CPU_SETSIZE: u32 = 1024;
+        const WORDS: usize = (CPU_SETSIZE as usize) / 64;
+        /// `_SC_NPROCESSORS_ONLN` on Linux.
+        const SC_NPROCESSORS_ONLN: i32 = 84;
+        extern "C" {
+            // pid 0 = the calling thread.
+            fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+            fn sysconf(name: i32) -> i64;
+        }
+        // Online-CPU count, NOT available_parallelism(): the latter
+        // reflects the process's current affinity mask, which would make
+        // pinning silently skip cores outside an inherited mask.
+        let ncpu = match unsafe { sysconf(SC_NPROCESSORS_ONLN) } {
+            n if n > 0 => n as u32,
+            _ => 1,
+        };
+        let mut set = [0u64; WORDS];
+        let mut any = false;
+        for c in self.iter() {
+            if c < ncpu && c < CPU_SETSIZE {
+                set[(c / 64) as usize] |= 1u64 << (c % 64);
+                any = true;
             }
-            if !any {
-                // Mask refers only to cores this host doesn't have (e.g. a
-                // 64-core script on a small dev box): leave affinity alone.
-                return Ok(());
-            }
-            let rc = libc::sched_setaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &set);
-            if rc != 0 {
-                return Err(std::io::Error::last_os_error());
-            }
+        }
+        if !any {
+            // Mask refers only to cores this host doesn't have (e.g. a
+            // 64-core script on a small dev box): leave affinity alone.
+            return Ok(());
+        }
+        let rc = unsafe { sched_setaffinity(0, WORDS * 8, set.as_ptr()) };
+        if rc != 0 {
+            return Err(std::io::Error::last_os_error());
         }
         Ok(())
     }

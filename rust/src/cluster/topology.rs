@@ -89,6 +89,12 @@ impl Cluster {
         self.reservations.iter().find(|r| r.name == name)
     }
 
+    /// All reservations, in creation order (the placement index
+    /// partitions its buckets by this list).
+    pub fn reservations(&self) -> &[Reservation] {
+        &self.reservations
+    }
+
     /// Nodes eligible for a job: inside its reservation if named, else all
     /// unreserved nodes.
     pub fn eligible_nodes(&self, reservation: Option<&str>) -> Vec<NodeId> {
@@ -125,10 +131,15 @@ impl Cluster {
     }
 
     /// Find one node that can host `cores` cores + `mem_mib` (first-fit
-    /// scan, no allocation) — the dispatch hot path. Best-fit via
-    /// [`Cluster::find_core_slots`] is kept for multi-node planning; for
-    /// single-task placement first-fit is equivalent for the homogeneous
-    /// fill workloads and ~40× cheaper at 512-node scale (§Perf).
+    /// scan, no allocation) — the scan baseline the indexed placement
+    /// subsystem ([`crate::placement`]) is benchmarked against; the
+    /// dispatch hot path now goes through the index.
+    ///
+    /// Down/draining nodes are excluded with an explicit
+    /// [`NodeState::Up`] guard, matching [`Cluster::find_idle_nodes`].
+    /// (`can_fit` also enforces it, but placement searches must never
+    /// rely on a node-local check alone: a regression here would place
+    /// core-level tasks on drained nodes.)
     pub fn find_fit_node(
         &self,
         cores: u32,
@@ -146,7 +157,9 @@ impl Cluster {
         };
         self.nodes
             .iter()
-            .find(|n| n.can_fit(cores, mem_mib) && in_reservation(n.id))
+            .find(|n| {
+                n.state() == NodeState::Up && n.can_fit(cores, mem_mib) && in_reservation(n.id)
+            })
             .map(|n| n.id)
     }
 
@@ -277,5 +290,30 @@ mod tests {
         let slots = c.find_core_slots(128, 64, None);
         let total: u64 = slots.iter().map(|(_, k)| *k as u64).sum();
         assert_eq!(total, 64);
+    }
+
+    #[test]
+    fn fit_search_skips_down_and_draining_nodes() {
+        // Regression: find_fit_node must apply the same NodeState::Up
+        // guard as find_idle_nodes, or core-level tasks land on drained
+        // nodes.
+        let mut c = Cluster::tx_green(3);
+        c.node_mut(0).unwrap().set_state(NodeState::Down);
+        c.node_mut(1).unwrap().set_state(NodeState::Draining);
+        assert_eq!(c.find_fit_node(1, 0, None), Some(2));
+        c.node_mut(2).unwrap().set_state(NodeState::Down);
+        assert_eq!(c.find_fit_node(1, 0, None), None);
+        // Recovery is visible again.
+        c.node_mut(1).unwrap().set_state(NodeState::Up);
+        assert_eq!(c.find_fit_node(1, 0, None), Some(1));
+    }
+
+    #[test]
+    fn reservations_accessor_lists_in_order() {
+        let mut c = Cluster::tx_green(6);
+        c.reserve("a", vec![0, 1]).unwrap();
+        c.reserve("b", vec![2]).unwrap();
+        let names: Vec<&str> = c.reservations().iter().map(|r| r.name.as_str()).collect();
+        assert_eq!(names, vec!["a", "b"]);
     }
 }

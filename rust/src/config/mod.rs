@@ -5,6 +5,7 @@ pub mod parser;
 pub mod presets;
 
 use crate::error::{Error, Result};
+use crate::placement::Strategy;
 use parser::Value;
 
 /// Which aggregation mode a run uses (paper §II).
@@ -72,6 +73,10 @@ pub struct RunConfig {
     pub dedicated: bool,
     /// Memory per compute task, MiB.
     pub task_mem_mib: u64,
+    /// Placement strategy (`placement = "best-fit"` in config files);
+    /// `None` defers to the aggregation mode's default
+    /// ([`crate::aggregation::plan::Aggregator::default_strategy`]).
+    pub placement: Option<Strategy>,
 }
 
 impl Default for RunConfig {
@@ -85,6 +90,7 @@ impl Default for RunConfig {
             seed: 1,
             dedicated: false,
             task_mem_mib: 512,
+            placement: None,
         }
     }
 }
@@ -150,8 +156,18 @@ impl RunConfig {
         if let Some(v) = run.get("task_mem_mib") {
             c.task_mem_mib = v.as_int()? as u64;
         }
+        if let Some(v) = run.get("placement") {
+            c.placement = Some(Strategy::parse(v.as_str()?)?);
+        }
         c.validate()?;
         Ok(c)
+    }
+
+    /// The placement strategy this run uses: the explicit `placement`
+    /// key if set, else the aggregation mode's default.
+    pub fn placement_strategy(&self) -> Strategy {
+        self.placement
+            .unwrap_or_else(|| crate::aggregation::for_mode(self.mode).default_strategy())
     }
 
     /// Parse a config file from disk.
@@ -213,6 +229,24 @@ mod tests {
         assert!(c.dedicated);
         // Defaults preserved.
         assert_eq!(c.cores_per_node, 64);
+        assert_eq!(c.placement, None);
+    }
+
+    #[test]
+    fn placement_key_parses_and_defaults_by_mode() {
+        let v = parser::parse("[run]\nplacement = \"best-fit\"\n").unwrap();
+        let c = RunConfig::from_value(&v).unwrap();
+        assert_eq!(c.placement, Some(Strategy::BestFit));
+        assert_eq!(c.placement_strategy(), Strategy::BestFit);
+        // Unset: node-based mode uses the fast path, core-level modes
+        // the first-fit scan order.
+        let node = RunConfig { mode: Mode::NodeBased, ..Default::default() };
+        assert_eq!(node.placement_strategy(), Strategy::NodeBased);
+        let multi = RunConfig { mode: Mode::MultiLevel, ..Default::default() };
+        assert_eq!(multi.placement_strategy(), Strategy::FirstFit);
+        // Bad values are config errors.
+        let bad = parser::parse("[run]\nplacement = \"bogus\"\n").unwrap();
+        assert!(RunConfig::from_value(&bad).is_err());
     }
 
     #[test]

@@ -1,7 +1,9 @@
 //! Paper benchmark presets: Table I task configurations and Table II
-//! cluster configurations, plus the full Table III run matrix.
+//! cluster configurations, plus the full Table III run matrix and
+//! placement-policy sweeps.
 
 use crate::config::{Mode, RunConfig};
+use crate::placement::ALL_STRATEGIES;
 
 /// A Table I column: a named task-time configuration.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -55,7 +57,22 @@ pub fn cell(nodes: u32, task: &TaskConfig, mode: Mode, run_idx: usize) -> RunCon
         // nodes (scheduler unresponsive under production load).
         dedicated: mode == Mode::MultiLevel && nodes >= 256,
         task_mem_mib: 512,
+        // Per-mode default (node-based fast path for N*, first-fit for
+        // the core-level modes); sweeps override it explicitly.
+        placement: None,
     }
+}
+
+/// One cell replicated across every placement strategy — the
+/// policy-comparison scenario the placement subsystem opens up.
+pub fn placement_sweep(nodes: u32, task: &TaskConfig, mode: Mode) -> Vec<RunConfig> {
+    ALL_STRATEGIES
+        .iter()
+        .map(|&s| RunConfig {
+            placement: Some(s),
+            ..cell(nodes, task, mode, 0)
+        })
+        .collect()
 }
 
 /// The paper ran multi-level at 512 nodes only for long (60 s) tasks; the
@@ -126,6 +143,20 @@ mod tests {
         let a2 = cell(32, &TASK_CONFIGS[0], Mode::NodeBased, 0);
         assert_ne!(a.seed, b.seed);
         assert_eq!(a.seed, a2.seed);
+    }
+
+    #[test]
+    fn placement_sweep_covers_all_strategies() {
+        use crate::placement::Strategy;
+        let sweep = placement_sweep(32, &TASK_CONFIGS[3], Mode::MultiLevel);
+        assert_eq!(sweep.len(), 5);
+        let strategies: Vec<Strategy> =
+            sweep.iter().map(|c| c.placement.unwrap()).collect();
+        for s in ALL_STRATEGIES {
+            assert!(strategies.contains(&s), "{s} missing from sweep");
+        }
+        // Everything else matches the base cell.
+        assert!(sweep.iter().all(|c| c.nodes == 32 && c.mode == Mode::MultiLevel));
     }
 
     #[test]

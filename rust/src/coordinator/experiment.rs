@@ -8,6 +8,7 @@ use crate::config::Mode;
 use crate::error::{Error, Result};
 use crate::metrics::overhead::OverheadPoint;
 use crate::metrics::timeline::UtilizationSeries;
+use crate::placement::Strategy;
 use crate::scheduler::core::{SchedulerSim, SimOutcome};
 use crate::scheduler::costmodel::CostModel;
 use crate::scheduler::noise::NoiseModel;
@@ -31,6 +32,8 @@ pub struct CellResult {
     pub longest_busy_stretch: f64,
     /// Whether the responsiveness guard would bar this from production.
     pub unusable_in_production: bool,
+    /// Placement strategy the run dispatched through.
+    pub placement: Strategy,
     /// DES events processed (engine throughput accounting).
     pub events: u64,
 }
@@ -59,7 +62,9 @@ impl Default for ExperimentOpts {
     }
 }
 
-/// Run one cell (one repetition) end-to-end.
+/// Run one cell (one repetition) end-to-end. The placement strategy is
+/// the config's explicit `placement` if set, else the aggregation
+/// mode's default (node-based fast path for N*, first-fit otherwise).
 pub fn run_cell(cell: &PaperCell) -> Result<CellResult> {
     let cfg = &cell.config;
     cfg.validate()?;
@@ -69,17 +74,20 @@ pub fn run_cell(cell: &PaperCell) -> Result<CellResult> {
     } else {
         NoiseModel::production()
     };
-    let sim = SchedulerSim::new(cluster, CostModel::slurm_like_tx_green(), noise, cfg.seed);
+    let placement = cfg.placement_strategy();
+    let sim = SchedulerSim::new(cluster, CostModel::slurm_like_tx_green(), noise, cfg.seed)
+        .with_placement(placement);
     let agg = aggregation::for_mode(cfg.mode);
     let job = agg.plan(&cell.label(), &cell.workload(), &cell.shape())?;
     let (outcome, job_id) = sim.run_single(job);
-    summarize(cell.clone(), &outcome, job_id, 1.0)
+    summarize(cell.clone(), &outcome, job_id, placement, 1.0)
 }
 
 fn summarize(
     cell: PaperCell,
     outcome: &SimOutcome,
     job_id: u64,
+    placement: Strategy,
     dt: f64,
 ) -> Result<CellResult> {
     let stats = outcome
@@ -98,9 +106,29 @@ fn summarize(
         utilization,
         longest_busy_stretch: outcome.longest_busy_stretch,
         unusable_in_production: outcome.unusable_in_production(),
+        placement,
         events: outcome.events_processed,
         cell,
     })
+}
+
+/// Run one cell under every placement strategy (same seed, same
+/// workload) — the policy-comparison scenario the placement subsystem
+/// opens up. Returns `(strategy, result)` pairs.
+pub fn run_placement_sweep(
+    nodes: u32,
+    task: &presets::TaskConfig,
+    mode: Mode,
+) -> Result<Vec<(Strategy, CellResult)>> {
+    presets::placement_sweep(nodes, task, mode)
+        .into_iter()
+        .map(|cfg| {
+            let strategy = cfg.placement_strategy();
+            let mut cell = PaperCell::new(cfg.nodes, *task, cfg.mode, 0);
+            cell.config = cfg;
+            Ok((strategy, run_cell(&cell)?))
+        })
+        .collect()
 }
 
 /// Run the full (or truncated) Table III matrix. Returns the per-cell
@@ -260,6 +288,18 @@ mod tests {
                 .collect();
             cell_times.sort_by(|a, b| a.partial_cmp(b).unwrap());
             assert_eq!(m.runtime, cell_times[1]);
+        }
+    }
+
+    #[test]
+    fn placement_sweep_runs_all_policies() {
+        let sweep = run_placement_sweep(8, &TASK_CONFIGS[3], Mode::NodeBased).unwrap();
+        assert_eq!(sweep.len(), 5);
+        for (strategy, res) in &sweep {
+            assert_eq!(res.placement, *strategy);
+            // Every policy still completes the job in sane time (wide
+            // bound: production noise can land a large burst mid-run).
+            assert!(res.runtime > 240.0 && res.runtime < 700.0, "{strategy}: {}", res.runtime);
         }
     }
 

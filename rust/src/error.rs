@@ -1,44 +1,94 @@
 //! Library-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls: the offline build has no
+//! `thiserror`, and the PJRT bindings are stubbed (see
+//! [`crate::runtime::stub`]), so the error surface stays dependency-free.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors surfaced by the llsched library.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// A job or task referenced an id that does not exist.
-    #[error("unknown {kind} id {id}")]
     UnknownId { kind: &'static str, id: u64 },
 
     /// A resource request cannot ever be satisfied by the cluster.
-    #[error("infeasible request: {0}")]
     Infeasible(String),
 
     /// Configuration file / value errors.
-    #[error("config error: {0}")]
     Config(String),
 
     /// The scheduler refused the submission (e.g. responsiveness guard).
-    #[error("submission rejected: {0}")]
     Rejected(String),
 
     /// Invalid state transition in a job/task/node state machine.
-    #[error("invalid transition: {0}")]
     InvalidTransition(String),
 
     /// PJRT / XLA runtime errors.
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// I/O errors (artifact loading, report writing).
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 }
 
-impl From<xla::Error> for Error {
-    fn from(e: xla::Error) -> Self {
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::UnknownId { kind, id } => write!(f, "unknown {kind} id {id}"),
+            Error::Infeasible(m) => write!(f, "infeasible request: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Rejected(m) => write!(f, "submission rejected: {m}"),
+            Error::InvalidTransition(m) => write!(f, "invalid transition: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Io(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl From<crate::runtime::stub::XlaError> for Error {
+    fn from(e: crate::runtime::stub::XlaError) -> Self {
         Error::Runtime(e.to_string())
     }
 }
 
 /// Convenience result alias used across the crate.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats() {
+        assert_eq!(
+            Error::UnknownId { kind: "node", id: 5 }.to_string(),
+            "unknown node id 5"
+        );
+        assert_eq!(Error::Config("bad".into()).to_string(), "config error: bad");
+        assert!(Error::Infeasible("x".into()).to_string().contains("infeasible"));
+    }
+
+    #[test]
+    fn io_errors_convert() {
+        let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(matches!(e, Error::Io(_)));
+        assert!(e.to_string().contains("gone"));
+        use std::error::Error as _;
+        assert!(e.source().is_some());
+    }
+}

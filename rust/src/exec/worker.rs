@@ -61,37 +61,42 @@ impl NodeExecutor {
         let checksum = AtomicU64::new(0);
         let active_lanes = script.lanes.iter().filter(|l| l.count() > 0).count();
 
-        crossbeam_utils::thread::scope(|scope| {
-            for lane in script.lanes.iter().filter(|l| l.count() > 0) {
-                let payload = payload.clone();
-                let failed = &failed;
-                let busy_us = &busy_us;
-                let checksum = &checksum;
-                let pin = self.pin;
-                scope.spawn(move |_| {
-                    if pin {
-                        let mut mask = CoreMask::empty(lane.core + 1);
-                        mask.set(lane.core);
-                        // Best effort: out-of-range masks are no-ops.
-                        let _ = mask.apply_to_current_thread();
-                    }
-                    for task_id in lane.start..lane.end {
-                        match payload.run(task_id) {
-                            Ok(r) => {
-                                busy_us.fetch_add((r.wall * 1e6) as u64, Ordering::Relaxed);
-                                checksum.fetch_xor(
-                                    r.checksum.to_bits() as u64,
-                                    Ordering::Relaxed,
-                                );
-                            }
-                            Err(_) => {
-                                failed.fetch_add(1, Ordering::Relaxed);
+        // std::thread::scope joins all lanes on exit and propagates lane
+        // panics as a panic of the scope itself; catch it so a wedged
+        // payload surfaces as an Err, not a test-killing unwind.
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            std::thread::scope(|scope| {
+                for lane in script.lanes.iter().filter(|l| l.count() > 0) {
+                    let payload = payload.clone();
+                    let failed = &failed;
+                    let busy_us = &busy_us;
+                    let checksum = &checksum;
+                    let pin = self.pin;
+                    scope.spawn(move || {
+                        if pin {
+                            let mut mask = CoreMask::empty(lane.core + 1);
+                            mask.set(lane.core);
+                            // Best effort: out-of-range masks are no-ops.
+                            let _ = mask.apply_to_current_thread();
+                        }
+                        for task_id in lane.start..lane.end {
+                            match payload.run(task_id) {
+                                Ok(r) => {
+                                    busy_us.fetch_add((r.wall * 1e6) as u64, Ordering::Relaxed);
+                                    checksum.fetch_xor(
+                                        r.checksum.to_bits() as u64,
+                                        Ordering::Relaxed,
+                                    );
+                                }
+                                Err(_) => {
+                                    failed.fetch_add(1, Ordering::Relaxed);
+                                }
                             }
                         }
-                    }
-                });
-            }
-        })
+                    });
+                }
+            })
+        }))
         .map_err(|_| Error::Runtime("worker lane panicked".into()))?;
 
         Ok(NodeRunReport {

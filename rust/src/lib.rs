@@ -6,8 +6,10 @@
 //! The library is organized in layers (see `DESIGN.md`):
 //!
 //! * **Substrates** — a deterministic discrete-event simulation engine
-//!   ([`sim`]), a cluster model ([`cluster`]), and a Slurm-like centralized
-//!   scheduler ([`scheduler`]) with a calibrated cost model.
+//!   ([`sim`]), a cluster model ([`cluster`]), a pluggable placement
+//!   subsystem over an incremental free-capacity index ([`placement`]),
+//!   and a Slurm-like centralized scheduler ([`scheduler`]) with a
+//!   calibrated cost model.
 //! * **The paper's contribution** — task-aggregation modes ([`aggregation`]):
 //!   per-task (naive baseline), per-core multi-level scheduling
 //!   (LLMapReduce MIMO), and per-node *node-based* scheduling ("triples
@@ -35,6 +37,7 @@ pub mod error;
 pub mod exec;
 pub mod lltools;
 pub mod metrics;
+pub mod placement;
 pub mod runtime;
 pub mod scheduler;
 pub mod sim;

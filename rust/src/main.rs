@@ -15,12 +15,13 @@
 
 use llsched::coordinator::cli::Args;
 use llsched::coordinator::experiment::{
-    fig2_label, median_runs, run_matrix, ExperimentOpts,
+    fig2_label, median_runs, run_matrix, run_placement_sweep, ExperimentOpts,
 };
 use llsched::config::{Mode, RunConfig};
 use llsched::error::Result;
 use llsched::metrics::overhead::speedup;
 use llsched::metrics::report;
+use llsched::placement::Strategy;
 use llsched::util::fmt::dur;
 use std::path::PathBuf;
 
@@ -63,6 +64,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "fig2" => cmd_fig2(args),
         "speedup" => cmd_speedup(args),
         "run" => cmd_run(args),
+        "placement" => cmd_placement(args),
         "spot" => cmd_spot(args),
         "artifacts" => cmd_artifacts(args),
         other => {
@@ -83,7 +85,11 @@ commands:
   fig1   [--quick] [--out DIR]   overhead scatter (Fig 1) as CSV + ASCII
   fig2   [--quick] [--out DIR]   utilization curves (Fig 2) as CSV + ASCII
   speedup                   headline M*/N* overhead ratios at 512 nodes
-  run CONFIG.toml [--seed N]     run one configuration
+  run CONFIG.toml [--seed N] [--placement P]
+                            run one configuration; P is one of
+                            first-fit|best-fit|spread|random|node-based
+  placement [--nodes N] [--mode M] [--task-time T]
+                            compare all placement policies on one cell
   spot [--nodes N]          spot-job release-latency comparison
   artifacts                 verify AOT artifacts load and execute
 ";
@@ -206,13 +212,16 @@ fn cmd_speedup(args: &Args) -> Result<()> {
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
-    args.expect_known(&["seed"])?;
+    args.expect_known(&["seed", "placement"])?;
     let path = args
         .positional
         .first()
         .ok_or_else(|| llsched::Error::Config("run needs a CONFIG.toml".into()))?;
     let mut cfg = RunConfig::from_file(std::path::Path::new(path))?;
     cfg.seed = args.opt_parse("seed", cfg.seed)?;
+    if let Some(p) = args.opt("placement") {
+        cfg.placement = Some(Strategy::parse(p)?);
+    }
     let task = llsched::config::presets::TaskConfig {
         name: "custom",
         task_time: cfg.task_time,
@@ -222,12 +231,50 @@ fn cmd_run(args: &Args) -> Result<()> {
     cell.config = cfg;
     let res = llsched::coordinator::experiment::run_cell(&cell)?;
     println!("run {}:", cell.label());
+    println!("  placement      {}", res.placement);
     println!("  runtime        {}", dur(res.runtime));
     println!("  overhead       {}", dur(res.overhead));
     println!("  dispatch span  {}", dur(res.dispatch_span));
     println!("  release span   {}", dur(res.release_span));
     println!("  peak util      {:.1}%", res.utilization.peak() * 100.0);
     println!("  busy stretch   {}", dur(res.longest_busy_stretch));
+    Ok(())
+}
+
+fn cmd_placement(args: &Args) -> Result<()> {
+    args.expect_known(&["nodes", "mode", "task-time"])?;
+    let nodes: u32 = args.opt_parse("nodes", 32)?;
+    let mode = Mode::parse(args.opt("mode").unwrap_or("node-based"))?;
+    let task_time: f64 = args.opt_parse("task-time", 60.0)?;
+    let task = llsched::config::presets::TASK_CONFIGS
+        .iter()
+        .find(|t| t.task_time == task_time)
+        .copied()
+        .unwrap_or(llsched::config::presets::TaskConfig {
+            name: "custom",
+            task_time,
+            job_time: 240.0,
+        });
+    println!(
+        "placement-policy comparison: {nodes} nodes, {mode} aggregation, t={task_time}s\n"
+    );
+    let mut table = llsched::util::fmt::Table::new(vec![
+        "policy",
+        "runtime",
+        "overhead",
+        "fill time",
+        "release span",
+    ]);
+    for (strategy, res) in run_placement_sweep(nodes, &task, mode)? {
+        table.row(vec![
+            strategy.to_string(),
+            dur(res.runtime),
+            dur(res.overhead),
+            dur(res.dispatch_span),
+            dur(res.release_span),
+        ]);
+    }
+    println!("{}", table.render());
     Ok(())
 }
 

@@ -1,0 +1,492 @@
+//! The free-capacity index: incremental bookkeeping over the cluster.
+//!
+//! [`FreeIndex`] answers the two placement questions the dispatch hot
+//! path asks — "give me an idle node" (node-based path) and "give me a
+//! node with `cores` free cores and `mem` free MiB" (core-level path) —
+//! without scanning the node table. It keeps, per reservation
+//! partition, one `BTreeSet<NodeId>` bucket per free-core count; a node
+//! always sits in exactly one bucket (its current free-core count), and
+//! moves between buckets on every allocate/release delta. Idle nodes
+//! are exactly the full bucket (free == cores) of a homogeneous
+//! partition, so whole-node queries are an O(log n) set lookup and fit
+//! queries walk at most `cores_per_node` buckets instead of every node.
+//!
+//! Down/draining nodes are *not indexed* (mirroring the `NodeState::Up`
+//! guard of the scan-based search paths), and every candidate the index
+//! proposes is re-checked with [`crate::cluster::Node::can_fit`] before
+//! use, so a desynchronized index can cause a slow answer but never a
+//! wrong one. `check_consistency` asserts full agreement with a
+//! brute-force cluster scan; the property tests in
+//! `rust/tests/placement_properties.rs` drive it under randomized
+//! allocate/release sequences.
+
+use crate::cluster::{Cluster, NodeId, NodeState};
+use crate::util::rng::Rng;
+use std::collections::BTreeSet;
+
+/// Per-partition free-core buckets.
+#[derive(Debug, Clone, Default)]
+struct PartitionBuckets {
+    /// `buckets[c]` = ids of indexed nodes with exactly `c` free cores.
+    buckets: Vec<BTreeSet<NodeId>>,
+}
+
+/// The incrementally-maintained free-capacity index.
+#[derive(Debug, Clone)]
+pub struct FreeIndex {
+    /// Cores on the largest node (bucket count − 1).
+    cores_per_node: u32,
+    /// Reservation names; reservation `r` is partition `r + 1`,
+    /// unreserved nodes are partition 0.
+    names: Vec<String>,
+    /// Node → partition id.
+    partition: Vec<u32>,
+    /// Node → cached free-core count (valid for indexed nodes).
+    free: Vec<u32>,
+    /// Node → currently present in the buckets (i.e. was `Up` at the
+    /// last build/state refresh).
+    indexed: Vec<bool>,
+    parts: Vec<PartitionBuckets>,
+}
+
+impl FreeIndex {
+    /// Build the index from the cluster's current state (node states,
+    /// existing allocations, reservations).
+    pub fn build(cluster: &Cluster) -> FreeIndex {
+        let cores_per_node = cluster.nodes().map(|n| n.cores).max().unwrap_or(0);
+        let names: Vec<String> = cluster
+            .reservations()
+            .iter()
+            .map(|r| r.name.clone())
+            .collect();
+        let n_nodes = cluster.n_nodes() as usize;
+        let mut partition = vec![0u32; n_nodes];
+        for (r, res) in cluster.reservations().iter().enumerate() {
+            for &id in &res.nodes {
+                partition[id as usize] = r as u32 + 1;
+            }
+        }
+        let empty = PartitionBuckets {
+            buckets: vec![BTreeSet::new(); cores_per_node as usize + 1],
+        };
+        let mut idx = FreeIndex {
+            cores_per_node,
+            names,
+            partition,
+            free: vec![0; n_nodes],
+            indexed: vec![false; n_nodes],
+            parts: vec![empty; cluster.reservations().len() + 1],
+        };
+        for node in cluster.nodes() {
+            let id = node.id as usize;
+            let free = node.free_cores();
+            idx.free[id] = free;
+            if node.state() == NodeState::Up {
+                idx.indexed[id] = true;
+                let part = idx.partition[id] as usize;
+                idx.parts[part].buckets[free as usize].insert(node.id);
+            }
+        }
+        idx
+    }
+
+    /// Cores on the (largest) node; buckets run `0..=cores_per_node`.
+    pub fn cores_per_node(&self) -> u32 {
+        self.cores_per_node
+    }
+
+    /// Resolve a reservation name to a partition id. `None` reservation
+    /// is the unreserved partition 0; an unknown name yields `None`
+    /// (no eligible nodes), matching the scan-based search semantics.
+    pub fn partition_for(&self, reservation: Option<&str>) -> Option<u32> {
+        match reservation {
+            None => Some(0),
+            Some(name) => self
+                .names
+                .iter()
+                .position(|n| n == name)
+                .map(|i| i as u32 + 1),
+        }
+    }
+
+    /// Apply an allocate/release delta: node `id` now has `new_free`
+    /// free cores. O(log n).
+    pub fn on_delta(&mut self, id: NodeId, new_free: u32) {
+        let i = id as usize;
+        debug_assert!(new_free <= self.cores_per_node);
+        let old_free = self.free[i];
+        if self.indexed[i] && old_free != new_free {
+            let part = self.partition[i] as usize;
+            self.parts[part].buckets[old_free as usize].remove(&id);
+            self.parts[part].buckets[new_free as usize].insert(id);
+        }
+        self.free[i] = new_free;
+    }
+
+    /// Apply a node lifecycle change: only `Up` nodes are indexed.
+    pub fn on_state_change(&mut self, id: NodeId, state: NodeState) {
+        let i = id as usize;
+        let up = state == NodeState::Up;
+        let part = self.partition[i] as usize;
+        let free = self.free[i] as usize;
+        if up && !self.indexed[i] {
+            self.parts[part].buckets[free].insert(id);
+            self.indexed[i] = true;
+        } else if !up && self.indexed[i] {
+            self.parts[part].buckets[free].remove(&id);
+            self.indexed[i] = false;
+        }
+    }
+
+    // ---- whole-node (idle pool) queries --------------------------------
+    //
+    // The idle pool is the full bucket (free == cores_per_node), which
+    // identifies idle nodes only when every node has `cores_per_node`
+    // cores. The fit queries below are size-agnostic, but these idle
+    // queries assume a homogeneous cluster (the only kind `Cluster`
+    // currently constructs); a heterogeneous extension must widen them
+    // to per-capacity buckets.
+
+    fn idle_bucket(&self, part: u32) -> &BTreeSet<NodeId> {
+        &self.parts[part as usize].buckets[self.cores_per_node as usize]
+    }
+
+    /// Lowest-numbered wholly idle node in the partition.
+    pub fn idle_lowest(&self, cluster: &Cluster, part: u32) -> Option<NodeId> {
+        self.idle_bucket(part)
+            .iter()
+            .copied()
+            .find(|&n| is_idle(cluster, n))
+    }
+
+    /// Highest-numbered wholly idle node — the node-based fast path's
+    /// O(log n) "pop" (any idle node is as good as any other for a
+    /// whole-node request; taking from one end avoids ordering work).
+    pub fn idle_highest(&self, cluster: &Cluster, part: u32) -> Option<NodeId> {
+        self.idle_bucket(part)
+            .iter()
+            .rev()
+            .copied()
+            .find(|&n| is_idle(cluster, n))
+    }
+
+    /// Uniformly random idle node.
+    pub fn idle_random(&self, cluster: &Cluster, part: u32, rng: &mut Rng) -> Option<NodeId> {
+        let bucket = self.idle_bucket(part);
+        if bucket.is_empty() {
+            return None;
+        }
+        let k = rng.below(bucket.len() as u64) as usize;
+        // Probe from a random start; wrap to the front if the tail of
+        // the bucket has no idle node (mem edge cases only).
+        bucket
+            .iter()
+            .skip(k)
+            .chain(bucket.iter().take(k))
+            .copied()
+            .find(|&n| is_idle(cluster, n))
+    }
+
+    /// Number of wholly idle nodes in the partition.
+    pub fn idle_count(&self, cluster: &Cluster, part: u32) -> usize {
+        self.idle_bucket(part)
+            .iter()
+            .filter(|&&n| is_idle(cluster, n))
+            .count()
+    }
+
+    // ---- cores + mem fit queries ---------------------------------------
+
+    /// Lowest-numbered node that fits `cores` + `mem_mib` (the indexed
+    /// equivalent of the historical first-fit scan). O(buckets · log n).
+    pub fn first_fit(
+        &self,
+        cluster: &Cluster,
+        part: u32,
+        cores: u32,
+        mem_mib: u64,
+    ) -> Option<NodeId> {
+        let mut best: Option<NodeId> = None;
+        for c in cores..=self.cores_per_node {
+            if let Some(n) = self.bucket_candidate(cluster, part, c, cores, mem_mib) {
+                best = Some(match best {
+                    Some(b) => b.min(n),
+                    None => n,
+                });
+            }
+        }
+        best
+    }
+
+    /// Node with the fewest sufficient free cores (densest packing).
+    pub fn best_fit(
+        &self,
+        cluster: &Cluster,
+        part: u32,
+        cores: u32,
+        mem_mib: u64,
+    ) -> Option<NodeId> {
+        (cores..=self.cores_per_node)
+            .find_map(|c| self.bucket_candidate(cluster, part, c, cores, mem_mib))
+    }
+
+    /// Node with the most free cores (worst-fit / spread).
+    pub fn worst_fit(
+        &self,
+        cluster: &Cluster,
+        part: u32,
+        cores: u32,
+        mem_mib: u64,
+    ) -> Option<NodeId> {
+        (cores..=self.cores_per_node)
+            .rev()
+            .find_map(|c| self.bucket_candidate(cluster, part, c, cores, mem_mib))
+    }
+
+    /// Uniformly random fitting node: pick a bucket weighted by size,
+    /// then a random member. Falls back to [`Self::best_fit`] when the
+    /// sampled candidate fails the memory check.
+    ///
+    /// Selection within a bucket is an O(bucket) walk (`BTreeSet` has
+    /// no order-statistics); the random policy is a comparison
+    /// baseline, not a hot path, so it trades speed for uniformity.
+    pub fn random_fit(
+        &self,
+        cluster: &Cluster,
+        part: u32,
+        cores: u32,
+        mem_mib: u64,
+        rng: &mut Rng,
+    ) -> Option<NodeId> {
+        if cores > self.cores_per_node {
+            return None;
+        }
+        let pb = &self.parts[part as usize];
+        let total: usize = (cores..=self.cores_per_node)
+            .map(|c| pb.buckets[c as usize].len())
+            .sum();
+        if total == 0 {
+            return None;
+        }
+        let mut k = rng.below(total as u64) as usize;
+        for c in cores..=self.cores_per_node {
+            let bucket = &pb.buckets[c as usize];
+            if k < bucket.len() {
+                if let Some(&n) = bucket.iter().nth(k) {
+                    if fits(cluster, n, cores, mem_mib) {
+                        return Some(n);
+                    }
+                }
+                // Sampled a node whose memory is too tight: fall back to
+                // a deterministic search rather than resampling forever.
+                return self.best_fit(cluster, part, cores, mem_mib);
+            }
+            k -= bucket.len();
+        }
+        None
+    }
+
+    /// Lowest-id member of one bucket passing the full fit check.
+    fn bucket_candidate(
+        &self,
+        cluster: &Cluster,
+        part: u32,
+        bucket_free: u32,
+        cores: u32,
+        mem_mib: u64,
+    ) -> Option<NodeId> {
+        self.parts[part as usize].buckets[bucket_free as usize]
+            .iter()
+            .copied()
+            .find(|&n| fits(cluster, n, cores, mem_mib))
+    }
+
+    // ---- introspection / verification ----------------------------------
+
+    /// Cached free-core count for a node (test/diagnostic helper).
+    pub fn cached_free(&self, id: NodeId) -> u32 {
+        self.free[id as usize]
+    }
+
+    /// Verify the index agrees with a brute-force scan of the cluster:
+    /// every `Up` node sits in exactly the bucket of its free-core
+    /// count, non-`Up` nodes are absent, and bucket totals match.
+    pub fn check_consistency(&self, cluster: &Cluster) -> std::result::Result<(), String> {
+        let mut bucketed = 0usize;
+        for pb in &self.parts {
+            bucketed += pb.buckets.iter().map(|b| b.len()).sum::<usize>();
+        }
+        let mut up_nodes = 0usize;
+        for node in cluster.nodes() {
+            let i = node.id as usize;
+            let part = self.partition[i] as usize;
+            let present = self.parts[part].buckets[node.free_cores() as usize].contains(&node.id);
+            if node.state() == NodeState::Up {
+                up_nodes += 1;
+                if self.free[i] != node.free_cores() {
+                    return Err(format!(
+                        "node {}: cached free {} vs actual {}",
+                        node.id,
+                        self.free[i],
+                        node.free_cores()
+                    ));
+                }
+                if !present {
+                    return Err(format!(
+                        "node {}: missing from bucket {} of partition {part}",
+                        node.id,
+                        node.free_cores()
+                    ));
+                }
+            } else if self.indexed[i] {
+                return Err(format!("node {}: not Up but still indexed", node.id));
+            }
+        }
+        if bucketed != up_nodes {
+            return Err(format!(
+                "{bucketed} bucketed entries vs {up_nodes} Up nodes"
+            ));
+        }
+        Ok(())
+    }
+}
+
+fn fits(cluster: &Cluster, id: NodeId, cores: u32, mem_mib: u64) -> bool {
+    cluster
+        .node(id)
+        .map(|n| n.can_fit(cores, mem_mib))
+        .unwrap_or(false)
+}
+
+fn is_idle(cluster: &Cluster, id: NodeId) -> bool {
+    cluster
+        .node(id)
+        .map(|n| n.state() == NodeState::Up && n.is_idle())
+        .unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn index_over(cluster: &Cluster) -> FreeIndex {
+        let idx = FreeIndex::build(cluster);
+        idx.check_consistency(cluster).unwrap();
+        idx
+    }
+
+    #[test]
+    fn fresh_cluster_is_all_idle() {
+        let c = Cluster::tx_green(8);
+        let idx = index_over(&c);
+        assert_eq!(idx.idle_count(&c, 0), 8);
+        assert_eq!(idx.idle_lowest(&c, 0), Some(0));
+        assert_eq!(idx.idle_highest(&c, 0), Some(7));
+    }
+
+    #[test]
+    fn deltas_move_nodes_between_buckets() {
+        let mut c = Cluster::tx_green(4);
+        let mut idx = index_over(&c);
+        c.allocate_on(1, 10, 0).unwrap();
+        idx.on_delta(1, c.node(1).unwrap().free_cores());
+        idx.check_consistency(&c).unwrap();
+        assert_eq!(idx.idle_count(&c, 0), 3);
+        assert_eq!(idx.cached_free(1), 54);
+        // Fit query for 60 cores skips node 1 (only 54 free).
+        assert_eq!(idx.first_fit(&c, 0, 60, 0), Some(0));
+        // Best fit for 50 cores prefers the tightest node.
+        assert_eq!(idx.best_fit(&c, 0, 50, 0), Some(1));
+        // Spread prefers an untouched node.
+        assert_eq!(idx.worst_fit(&c, 0, 1, 0), Some(0));
+    }
+
+    #[test]
+    fn down_nodes_leave_the_index() {
+        let mut c = Cluster::tx_green(3);
+        let mut idx = index_over(&c);
+        c.node_mut(0).unwrap().set_state(NodeState::Down);
+        idx.on_state_change(0, NodeState::Down);
+        idx.check_consistency(&c).unwrap();
+        assert_eq!(idx.idle_lowest(&c, 0), Some(1));
+        assert_eq!(idx.first_fit(&c, 0, 1, 0), Some(1));
+        c.node_mut(0).unwrap().set_state(NodeState::Up);
+        idx.on_state_change(0, NodeState::Up);
+        assert_eq!(idx.idle_lowest(&c, 0), Some(0));
+    }
+
+    #[test]
+    fn draining_nodes_also_leave_the_index() {
+        let mut c = Cluster::tx_green(2);
+        let mut idx = index_over(&c);
+        c.node_mut(0).unwrap().set_state(NodeState::Draining);
+        idx.on_state_change(0, NodeState::Draining);
+        assert_eq!(idx.first_fit(&c, 0, 1, 0), Some(1));
+        assert_eq!(idx.idle_count(&c, 0), 1);
+    }
+
+    #[test]
+    fn reservations_partition_queries() {
+        let mut c = Cluster::tx_green(4);
+        c.reserve("bench", vec![0, 1]).unwrap();
+        let idx = index_over(&c);
+        let bench = idx.partition_for(Some("bench")).unwrap();
+        let open = idx.partition_for(None).unwrap();
+        assert_eq!(idx.idle_count(&c, bench), 2);
+        assert_eq!(idx.idle_count(&c, open), 2);
+        assert_eq!(idx.idle_lowest(&c, bench), Some(0));
+        assert_eq!(idx.idle_lowest(&c, open), Some(2));
+        assert_eq!(idx.partition_for(Some("nope")), None);
+    }
+
+    #[test]
+    fn memory_limits_respected() {
+        let mut c = Cluster::homogeneous(2, 4, 100);
+        let mut idx = index_over(&c);
+        c.allocate_on(0, 1, 90).unwrap();
+        idx.on_delta(0, 3);
+        // Node 0 has 3 free cores but only 10 MiB free.
+        assert_eq!(idx.first_fit(&c, 0, 1, 50), Some(1));
+        assert_eq!(idx.best_fit(&c, 0, 1, 50), Some(1));
+        assert_eq!(idx.first_fit(&c, 0, 1, 5), Some(0));
+        assert_eq!(idx.first_fit(&c, 0, 4, 0), Some(1), "4 cores need a free node");
+        assert_eq!(idx.first_fit(&c, 0, 5, 0), None, "no node has 5 cores");
+    }
+
+    #[test]
+    fn oversized_requests_yield_none() {
+        let c = Cluster::tx_green(2);
+        let idx = index_over(&c);
+        assert_eq!(idx.first_fit(&c, 0, 65, 0), None);
+        assert_eq!(idx.worst_fit(&c, 0, 65, 0), None);
+        let mut rng = Rng::new(1);
+        assert_eq!(idx.random_fit(&c, 0, 65, 0, &mut rng), None);
+    }
+
+    #[test]
+    fn random_fit_is_uniformish_and_valid() {
+        let c = Cluster::tx_green(16);
+        let idx = index_over(&c);
+        let mut rng = Rng::new(7);
+        let mut seen = [0u32; 16];
+        for _ in 0..1600 {
+            let n = idx.random_fit(&c, 0, 1, 0, &mut rng).unwrap();
+            seen[n as usize] += 1;
+        }
+        assert!(seen.iter().all(|&k| k > 0), "all nodes sampled: {seen:?}");
+    }
+
+    #[test]
+    fn full_cluster_answers_none() {
+        let mut c = Cluster::tx_green(2);
+        let mut idx = index_over(&c);
+        for id in 0..2 {
+            c.node_mut(id).unwrap().allocate_whole().unwrap();
+            idx.on_delta(id, 0);
+        }
+        idx.check_consistency(&c).unwrap();
+        assert_eq!(idx.idle_count(&c, 0), 0);
+        assert_eq!(idx.idle_highest(&c, 0), None);
+        assert_eq!(idx.first_fit(&c, 0, 1, 0), None);
+    }
+}

@@ -1,0 +1,356 @@
+//! Placement policies and the engine that applies them.
+//!
+//! A [`PlacementPolicy`] turns free-capacity queries into a node choice;
+//! the [`PlacementEngine`] owns the [`FreeIndex`] plus the active policy
+//! and is the single choke point through which the scheduler allocates
+//! and releases resources, so the index is maintained incrementally and
+//! can never drift from the cluster.
+
+use crate::cluster::{Cluster, NodeId};
+use crate::error::Result;
+use crate::placement::free_index::FreeIndex;
+use crate::placement::Strategy;
+use crate::scheduler::job::Placement;
+use crate::util::rng::Rng;
+
+/// A placement strategy: picks a node for a request, given the index.
+///
+/// Policies are stateful only where the strategy demands it (the random
+/// policy carries its seeded generator); everything else is a pure
+/// query over the index.
+pub trait PlacementPolicy {
+    /// Which strategy this implements.
+    fn strategy(&self) -> Strategy;
+
+    /// Pick a node for a `cores` + `mem_mib` request in `part`.
+    fn pick_cores(
+        &mut self,
+        index: &FreeIndex,
+        cluster: &Cluster,
+        part: u32,
+        cores: u32,
+        mem_mib: u64,
+    ) -> Option<NodeId>;
+
+    /// Pick a wholly idle node for a whole-node request in `part`.
+    fn pick_whole(&mut self, index: &FreeIndex, cluster: &Cluster, part: u32) -> Option<NodeId>;
+}
+
+/// Lowest-numbered node that fits — the indexed equivalent of the
+/// historical linear scan (identical choices, without the O(N) walk).
+#[derive(Debug, Default)]
+pub struct FirstFit;
+
+impl PlacementPolicy for FirstFit {
+    fn strategy(&self) -> Strategy {
+        Strategy::FirstFit
+    }
+
+    fn pick_cores(
+        &mut self,
+        index: &FreeIndex,
+        cluster: &Cluster,
+        part: u32,
+        cores: u32,
+        mem_mib: u64,
+    ) -> Option<NodeId> {
+        index.first_fit(cluster, part, cores, mem_mib)
+    }
+
+    fn pick_whole(&mut self, index: &FreeIndex, cluster: &Cluster, part: u32) -> Option<NodeId> {
+        index.idle_lowest(cluster, part)
+    }
+}
+
+/// Fewest sufficient free cores — packs partial nodes densely, keeping
+/// whole nodes free for node-level jobs.
+#[derive(Debug, Default)]
+pub struct BestFit;
+
+impl PlacementPolicy for BestFit {
+    fn strategy(&self) -> Strategy {
+        Strategy::BestFit
+    }
+
+    fn pick_cores(
+        &mut self,
+        index: &FreeIndex,
+        cluster: &Cluster,
+        part: u32,
+        cores: u32,
+        mem_mib: u64,
+    ) -> Option<NodeId> {
+        index.best_fit(cluster, part, cores, mem_mib)
+    }
+
+    fn pick_whole(&mut self, index: &FreeIndex, cluster: &Cluster, part: u32) -> Option<NodeId> {
+        index.idle_lowest(cluster, part)
+    }
+}
+
+/// Most free cores (worst-fit) — spreads load across the machine.
+#[derive(Debug, Default)]
+pub struct Spread;
+
+impl PlacementPolicy for Spread {
+    fn strategy(&self) -> Strategy {
+        Strategy::Spread
+    }
+
+    fn pick_cores(
+        &mut self,
+        index: &FreeIndex,
+        cluster: &Cluster,
+        part: u32,
+        cores: u32,
+        mem_mib: u64,
+    ) -> Option<NodeId> {
+        index.worst_fit(cluster, part, cores, mem_mib)
+    }
+
+    fn pick_whole(&mut self, index: &FreeIndex, cluster: &Cluster, part: u32) -> Option<NodeId> {
+        index.idle_lowest(cluster, part)
+    }
+}
+
+/// Uniformly random fitting node (seeded, so runs stay reproducible).
+#[derive(Debug)]
+pub struct Random {
+    rng: Rng,
+}
+
+impl Random {
+    pub fn new(seed: u64) -> Random {
+        Random { rng: Rng::new(seed) }
+    }
+}
+
+impl PlacementPolicy for Random {
+    fn strategy(&self) -> Strategy {
+        Strategy::Random
+    }
+
+    fn pick_cores(
+        &mut self,
+        index: &FreeIndex,
+        cluster: &Cluster,
+        part: u32,
+        cores: u32,
+        mem_mib: u64,
+    ) -> Option<NodeId> {
+        index.random_fit(cluster, part, cores, mem_mib, &mut self.rng)
+    }
+
+    fn pick_whole(&mut self, index: &FreeIndex, cluster: &Cluster, part: u32) -> Option<NodeId> {
+        index.idle_random(cluster, part, &mut self.rng)
+    }
+}
+
+/// The paper's node-based fast path: whole-node requests pop straight
+/// off one end of the idle pool (O(log n), no ordering work); stray
+/// core-level requests fall back to indexed best-fit so they pack into
+/// partial nodes instead of breaking idle ones.
+#[derive(Debug, Default)]
+pub struct NodeBasedFast;
+
+impl PlacementPolicy for NodeBasedFast {
+    fn strategy(&self) -> Strategy {
+        Strategy::NodeBased
+    }
+
+    fn pick_cores(
+        &mut self,
+        index: &FreeIndex,
+        cluster: &Cluster,
+        part: u32,
+        cores: u32,
+        mem_mib: u64,
+    ) -> Option<NodeId> {
+        index.best_fit(cluster, part, cores, mem_mib)
+    }
+
+    fn pick_whole(&mut self, index: &FreeIndex, cluster: &Cluster, part: u32) -> Option<NodeId> {
+        index.idle_highest(cluster, part)
+    }
+}
+
+/// Construct the policy for a strategy. `seed` only feeds the random
+/// policy's generator; deterministic policies ignore it.
+pub fn policy_for(strategy: Strategy, seed: u64) -> Box<dyn PlacementPolicy> {
+    match strategy {
+        Strategy::FirstFit => Box::new(FirstFit),
+        Strategy::BestFit => Box::new(BestFit),
+        Strategy::Spread => Box::new(Spread),
+        Strategy::Random => Box::new(Random::new(seed)),
+        Strategy::NodeBased => Box::new(NodeBasedFast),
+    }
+}
+
+/// The placement façade the scheduler dispatches through: owns the
+/// index and policy, and pairs every cluster allocate/release with the
+/// corresponding index delta.
+pub struct PlacementEngine {
+    index: FreeIndex,
+    policy: Box<dyn PlacementPolicy>,
+    seed: u64,
+}
+
+impl PlacementEngine {
+    /// New engine over the cluster's current state.
+    pub fn new(cluster: &Cluster, strategy: Strategy, seed: u64) -> PlacementEngine {
+        PlacementEngine {
+            index: FreeIndex::build(cluster),
+            policy: policy_for(strategy, seed),
+            seed,
+        }
+    }
+
+    /// The active strategy.
+    pub fn strategy(&self) -> Strategy {
+        self.policy.strategy()
+    }
+
+    /// Swap the placement strategy (resets the random policy's stream).
+    pub fn set_strategy(&mut self, strategy: Strategy) {
+        self.policy = policy_for(strategy, self.seed);
+    }
+
+    /// Rebuild the index from scratch — an escape hatch for callers
+    /// that mutate the cluster (reservations, node states) outside the
+    /// engine after construction. The scheduler never needs it: the
+    /// cluster moves into the sim before the engine is built and every
+    /// subsequent mutation flows through the engine.
+    pub fn rebuild(&mut self, cluster: &Cluster) {
+        self.index = FreeIndex::build(cluster);
+    }
+
+    /// Read access to the index (diagnostics, tests, benches).
+    pub fn index(&self) -> &FreeIndex {
+        &self.index
+    }
+
+    /// Place a whole-node request: pick an idle node via the policy,
+    /// allocate every core and all free memory, update the index.
+    pub fn place_whole(
+        &mut self,
+        cluster: &mut Cluster,
+        reservation: Option<&str>,
+    ) -> Option<Placement> {
+        let part = self.index.partition_for(reservation)?;
+        let node = self.policy.pick_whole(&self.index, cluster, part)?;
+        let mem_mib = cluster.node(node).ok()?.free_mem_mib();
+        let mask = cluster.node_mut(node).ok()?.allocate_whole().ok()?;
+        self.index.on_delta(node, 0);
+        Some(Placement { node, mask, mem_mib })
+    }
+
+    /// Place a `cores` + `mem_mib` request via the policy; allocate the
+    /// lowest free cores on the chosen node, update the index.
+    pub fn place_cores(
+        &mut self,
+        cluster: &mut Cluster,
+        cores: u32,
+        mem_mib: u64,
+        reservation: Option<&str>,
+    ) -> Option<Placement> {
+        let part = self.index.partition_for(reservation)?;
+        let node = self
+            .policy
+            .pick_cores(&self.index, cluster, part, cores, mem_mib)?;
+        let mask = cluster.allocate_on(node, cores, mem_mib).ok()?;
+        let free = cluster.node(node).ok()?.free_cores();
+        self.index.on_delta(node, free);
+        Some(Placement { node, mask, mem_mib })
+    }
+
+    /// Release a placement and update the index.
+    pub fn release(&mut self, cluster: &mut Cluster, p: &Placement) -> Result<()> {
+        cluster.release_on(p.node, &p.mask, p.mem_mib)?;
+        let free = cluster.node(p.node)?.free_cores();
+        self.index.on_delta(p.node, free);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::ALL_STRATEGIES;
+
+    #[test]
+    fn factory_maps_strategies() {
+        for s in ALL_STRATEGIES {
+            assert_eq!(policy_for(s, 1).strategy(), s);
+        }
+    }
+
+    #[test]
+    fn engine_round_trips_whole_nodes() {
+        let mut c = Cluster::tx_green(3);
+        let mut e = PlacementEngine::new(&c, Strategy::NodeBased, 1);
+        let a = e.place_whole(&mut c, None).expect("idle node");
+        let b = e.place_whole(&mut c, None).expect("second idle node");
+        assert_ne!(a.node, b.node);
+        assert_eq!(c.busy_cores(), 2 * 64);
+        e.index().check_consistency(&c).unwrap();
+        e.release(&mut c, &a).unwrap();
+        e.release(&mut c, &b).unwrap();
+        assert_eq!(c.busy_cores(), 0);
+        e.index().check_consistency(&c).unwrap();
+        // Three placements drain the cluster; a fourth fails cleanly.
+        for _ in 0..3 {
+            e.place_whole(&mut c, None).expect("refilled");
+        }
+        assert!(e.place_whole(&mut c, None).is_none());
+        e.index().check_consistency(&c).unwrap();
+    }
+
+    #[test]
+    fn engine_packs_core_requests() {
+        let mut c = Cluster::tx_green(2);
+        let mut e = PlacementEngine::new(&c, Strategy::BestFit, 1);
+        let first = e.place_cores(&mut c, 10, 0, None).expect("fits");
+        // Best-fit keeps stacking onto the already-broken node.
+        let second = e.place_cores(&mut c, 10, 0, None).expect("fits");
+        assert_eq!(first.node, second.node);
+        e.index().check_consistency(&c).unwrap();
+    }
+
+    #[test]
+    fn spread_breaks_fresh_nodes() {
+        let mut c = Cluster::tx_green(2);
+        let mut e = PlacementEngine::new(&c, Strategy::Spread, 1);
+        let first = e.place_cores(&mut c, 10, 0, None).expect("fits");
+        let second = e.place_cores(&mut c, 10, 0, None).expect("fits");
+        assert_ne!(first.node, second.node, "worst-fit spreads");
+    }
+
+    #[test]
+    fn first_fit_matches_scan_semantics() {
+        let mut c = Cluster::tx_green(4);
+        let mut e = PlacementEngine::new(&c, Strategy::FirstFit, 1);
+        // Fill node 0, then ask again: first-fit walks to node 1, exactly
+        // like Cluster::find_fit_node would.
+        for _ in 0..64 {
+            assert_eq!(e.place_cores(&mut c, 1, 0, None).unwrap().node, 0);
+        }
+        assert_eq!(e.place_cores(&mut c, 1, 0, None).unwrap().node, 1);
+        assert_eq!(
+            c.find_fit_node(1, 0, None),
+            Some(1),
+            "scan and index agree"
+        );
+    }
+
+    #[test]
+    fn reservations_fence_engine_placements() {
+        let mut c = Cluster::tx_green(4);
+        c.reserve("bench", vec![2, 3]).unwrap();
+        let mut e = PlacementEngine::new(&c, Strategy::FirstFit, 1);
+        let open = e.place_whole(&mut c, None).unwrap();
+        assert!(open.node < 2, "unreserved placement stays outside");
+        let fenced = e.place_whole(&mut c, Some("bench")).unwrap();
+        assert!(fenced.node >= 2, "reserved placement stays inside");
+        assert!(e.place_whole(&mut c, Some("missing")).is_none());
+    }
+}

@@ -1,6 +1,11 @@
 //! Loading and executing one AOT artifact.
+//!
+//! The offline build links the PJRT stub bindings; swap the `use` below
+//! for the real `xla` crate to re-enable live execution (the call
+//! surface is identical).
 
 use crate::error::{Error, Result};
+use crate::runtime::stub as xla;
 use std::path::Path;
 
 /// Metadata of a loaded artifact (parsed from its filename:
@@ -93,7 +98,7 @@ impl Runtime {
             a.h as i64,
             a.w as i64,
         ])?;
-        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        let result = self.exe.execute(&[lit])?[0][0].to_literal_sync()?;
         let (new_state_l, checksum_l) = result.to_tuple2()?;
         let new_state = new_state_l.to_vec::<f32>()?;
         let checksum = checksum_l.to_vec::<f32>()?[0];

@@ -11,12 +11,20 @@
 pub mod executable;
 pub mod pool;
 pub mod server;
+pub mod stub;
 
 pub use executable::{Artifact, Runtime};
 pub use pool::ExecPool;
 pub use server::RuntimeServer;
 
 use std::path::{Path, PathBuf};
+
+/// Whether this build can actually execute PJRT artifacts. The offline
+/// build links the [`stub`] bindings and returns `false`; integration
+/// tests and examples use this to skip live-execution paths gracefully.
+pub fn pjrt_available() -> bool {
+    stub::AVAILABLE
+}
 
 /// Default artifacts directory (relative to the repo root).
 pub const ARTIFACTS_DIR: &str = "artifacts";

@@ -1,0 +1,124 @@
+//! Offline stand-in for the `xla` PJRT bindings.
+//!
+//! The original runtime layer linked the `xla` crate (xla_extension
+//! 0.5.1) to compile and execute the AOT-exported HLO-text artifacts.
+//! The offline build vendors no external crates, so this module mirrors
+//! the small slice of the `xla` API surface the runtime layer uses and
+//! fails fast at client construction. The rest of the crate (DES
+//! scheduler, aggregation, placement, launch tools) is unaffected; code
+//! that needs live PJRT checks [`AVAILABLE`] / `runtime::pjrt_available`
+//! and skips gracefully.
+//!
+//! Re-enabling real execution is a one-line change in
+//! [`crate::runtime::executable`]: swap `use crate::runtime::stub as
+//! xla;` for the real crate import.
+
+use std::fmt;
+
+/// Whether this build carries a live PJRT runtime.
+pub const AVAILABLE: bool = false;
+
+/// Error type mirroring `xla::Error`.
+#[derive(Debug)]
+pub struct XlaError(pub String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+fn unavailable<T>() -> Result<T, XlaError> {
+    Err(XlaError(
+        "PJRT runtime not available in this build (offline stub; see runtime::stub)".to_string(),
+    ))
+}
+
+/// Stand-in for `xla::PjRtClient`.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// The real binding constructs a CPU PJRT client; the stub fails fast.
+    pub fn cpu() -> Result<PjRtClient, XlaError> {
+        unavailable()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
+        unavailable()
+    }
+}
+
+/// Stand-in for `xla::HloModuleProto`.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, XlaError> {
+        unavailable()
+    }
+}
+
+/// Stand-in for `xla::XlaComputation`.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Stand-in for `xla::PjRtLoadedExecutable`.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute(&self, _args: &[Literal]) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        unavailable()
+    }
+}
+
+/// Stand-in for `xla::PjRtBuffer`.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        unavailable()
+    }
+}
+
+/// Stand-in for `xla::Literal`.
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1(_xs: &[f32]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, XlaError> {
+        unavailable()
+    }
+
+    pub fn to_tuple2(&self) -> Result<(Literal, Literal), XlaError> {
+        unavailable()
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, XlaError> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_fails_fast_with_clear_message() {
+        let err = PjRtClient::cpu().err().expect("stub has no client");
+        assert!(err.to_string().contains("offline stub"), "{err}");
+        assert!(!AVAILABLE);
+    }
+}

@@ -1,7 +1,16 @@
-//! The scheduler simulation core: a single-threaded scheduler server
-//! serializing registration, dispatch, cleanup, preemption signalling and
-//! background (production) work over the cluster model, driven by the DES
-//! engine.
+//! The scheduler simulation façade.
+//!
+//! [`SchedulerSim`] is a single-threaded scheduler server serializing
+//! registration, dispatch, cleanup, preemption signalling and background
+//! (production) work over the cluster model, driven by the DES engine.
+//! This file holds the public types and the construction/run API; the
+//! behaviour is split across focused submodules:
+//!
+//! * [`crate::scheduler::server`] — the op loop and work-conserving
+//!   service discipline (what the server does next, and what it costs);
+//! * [`crate::scheduler::lifecycle`] — task state transitions:
+//!   placement (through the [`crate::placement`] engine), completion
+//!   cleanup, and preemption.
 //!
 //! This is the substrate the paper's two aggregation modes are measured
 //! against. The collapse mechanism at 512-node scale is *emergent*, not
@@ -13,13 +22,12 @@
 //! behaviour reported in the paper's §III.B.
 
 use crate::cluster::{Cluster, NodeState};
+use crate::placement::{PlacementEngine, Strategy};
+use crate::scheduler::accounting::{JobStats, TaskRecord};
 use crate::scheduler::costmodel::CostModel;
-use crate::scheduler::job::{
-    JobId, JobSpec, Placement, ResourceRequest, SchedTaskSpec, TaskId, TaskState,
-};
+use crate::scheduler::job::{JobId, JobSpec, Placement, SchedTaskSpec, TaskId};
 use crate::scheduler::noise::NoiseModel;
 use crate::scheduler::queue::PendingQueue;
-use crate::scheduler::accounting::{JobStats, TaskRecord};
 use crate::sim::{self, EventQueue, Time};
 use crate::util::rng::Rng;
 use std::collections::VecDeque;
@@ -60,11 +68,11 @@ pub enum Op {
 
 /// Per-task live state (record + dispatch bookkeeping).
 #[derive(Debug)]
-struct TaskSlot {
-    spec: SchedTaskSpec,
-    record: TaskRecord,
-    placement: Option<Placement>,
-    priority: i32,
+pub(crate) struct TaskSlot {
+    pub(crate) spec: SchedTaskSpec,
+    pub(crate) record: TaskRecord,
+    pub(crate) placement: Option<Placement>,
+    pub(crate) priority: i32,
 }
 
 /// Per-job metadata.
@@ -159,51 +167,62 @@ impl SimOutcome {
 
 /// The scheduler simulation actor. Create, submit jobs, then [`Self::run`].
 pub struct SchedulerSim {
-    cluster: Cluster,
-    cost: CostModel,
-    noise: NoiseModel,
-    task_model: TaskModel,
-    rng: Rng,
-    production: bool,
+    pub(crate) cluster: Cluster,
+    pub(crate) engine: PlacementEngine,
+    pub(crate) cost: CostModel,
+    pub(crate) noise: NoiseModel,
+    pub(crate) task_model: TaskModel,
+    pub(crate) rng: Rng,
+    pub(crate) production: bool,
 
-    specs: Vec<Option<JobSpec>>, // consumed at Submit
-    jobs: Vec<JobMeta>,
-    tasks: Vec<TaskSlot>,
-    pending: PendingQueue,
-    completions: VecDeque<TaskId>,
-    preempt_q: VecDeque<TaskId>,
-    noise_q: VecDeque<f64>,
+    pub(crate) specs: Vec<Option<JobSpec>>, // consumed at Submit
+    pub(crate) jobs: Vec<JobMeta>,
+    pub(crate) tasks: Vec<TaskSlot>,
+    pub(crate) pending: PendingQueue,
+    pub(crate) completions: VecDeque<TaskId>,
+    pub(crate) preempt_q: VecDeque<TaskId>,
+    pub(crate) noise_q: VecDeque<f64>,
 
     /// Per-run multiplicative factor on all server op costs (hardware /
     /// kernel / filesystem variability between runs; sampled log-normal,
     /// σ = 5 %). Gives dedicated-system runs the paper's natural spread.
-    op_scale: f64,
-    server_busy: bool,
-    busy_since: Time,
-    longest_busy_stretch: Time,
-    hol_blocked: bool,
-    cycle_budget: u32,
-    cleanups_since_dispatch: u32,
+    pub(crate) op_scale: f64,
+    pub(crate) server_busy: bool,
+    pub(crate) busy_since: Time,
+    pub(crate) longest_busy_stretch: Time,
+    pub(crate) hol_blocked: bool,
+    pub(crate) cycle_budget: u32,
+    pub(crate) cleanups_since_dispatch: u32,
 
-    busy: BusyBreakdown,
-    running_cores: u64,
+    pub(crate) busy: BusyBreakdown,
+    pub(crate) running_cores: u64,
     /// Raw `(time, ±cores)` deltas; late-joining nodes stamp their start
     /// in the future relative to the dispatch event, so deltas are sorted
     /// and prefix-summed into the absolute series when the run finishes.
-    timeline: Vec<(Time, i64)>,
-    record_timeline: bool,
-    max_completion_backlog: usize,
+    pub(crate) timeline: Vec<(Time, i64)>,
+    pub(crate) record_timeline: bool,
+    pub(crate) max_completion_backlog: usize,
 }
 
 impl SchedulerSim {
     /// New simulation over `cluster`. `production = !dedicated` enables
-    /// the background-noise process and node-churn late joins.
+    /// the background-noise process and node-churn late joins. Placement
+    /// defaults to [`Strategy::FirstFit`] (the historical scan order);
+    /// override with [`Self::with_placement`].
     pub fn new(cluster: Cluster, cost: CostModel, noise: NoiseModel, seed: u64) -> SchedulerSim {
         let production = noise.mean_load() > 0.0;
         let mut rng = Rng::new(seed);
         let op_scale = rng.lognormal(0.0, 0.05);
+        // The placement rng stream is derived from, but independent of,
+        // the sim stream: policy choice must not perturb jitter/noise.
+        let engine = PlacementEngine::new(
+            &cluster,
+            Strategy::FirstFit,
+            seed ^ 0x9E37_79B9_7F4A_7C15,
+        );
         SchedulerSim {
             cluster,
+            engine,
             cost,
             noise,
             task_model: TaskModel::default(),
@@ -237,6 +256,17 @@ impl SchedulerSim {
         self
     }
 
+    /// Select the placement strategy (see [`crate::placement`]).
+    pub fn with_placement(mut self, strategy: Strategy) -> Self {
+        self.engine.set_strategy(strategy);
+        self
+    }
+
+    /// The active placement strategy.
+    pub fn placement(&self) -> Strategy {
+        self.engine.strategy()
+    }
+
     /// Disable the (possibly large) utilization timeline recording.
     pub fn without_timeline(mut self) -> Self {
         self.record_timeline = false;
@@ -264,7 +294,10 @@ impl SchedulerSim {
         q.at(t, SchedEvent::Preempt(job));
     }
 
-    /// Drive the simulation to completion and return the outcome.
+    /// Drive the simulation to completion and return the outcome. The
+    /// placement index built at construction is still current: the
+    /// cluster moves into the sim at [`Self::new`] and nothing mutates
+    /// it between then and here.
     pub fn run(mut self, q: &mut EventQueue<SchedEvent>) -> SimOutcome {
         self.prime_noise(q);
         let (final_time, events) = sim::run(&mut self, q);
@@ -308,379 +341,6 @@ impl SchedulerSim {
         }
     }
 
-    // ---- server loop -----------------------------------------------------
-
-    /// If the server is idle, pick the next operation and start it.
-    fn kick(&mut self, now: Time, q: &mut EventQueue<SchedEvent>) {
-        if self.server_busy {
-            return;
-        }
-        if let Some((op, cost)) = self.pick_next() {
-            self.server_busy = true;
-            self.busy_since = now;
-            q.after(cost, SchedEvent::ServerDone(op));
-        }
-    }
-
-    /// Work-conserving service discipline (see module docs):
-    /// noise → preempt signals → cleanups (with bounded dispatch
-    /// interleave) → dispatches (cycle-batched).
-    fn pick_next(&mut self) -> Option<(Op, Time)> {
-        let s = self.op_scale;
-        if let Some(demand) = self.noise_q.pop_front() {
-            return Some((Op::Noise(demand), demand * s));
-        }
-        if let Some(t) = self.preempt_q.pop_front() {
-            return Some((Op::PreemptSignal(t), self.cost.preempt_signal * s));
-        }
-        let can_dispatch = !self.pending.is_empty() && !self.hol_blocked;
-        if !self.completions.is_empty() {
-            let must_interleave =
-                can_dispatch && self.cleanups_since_dispatch >= self.cost.cleanup_interleave;
-            if !must_interleave {
-                let tid = self.completions.pop_front().expect("checked non-empty");
-                self.cleanups_since_dispatch += 1;
-                let array = self.jobs[self.tasks[tid as usize].record.job as usize].array_size;
-                return Some((Op::Cleanup(tid), self.cost.cleanup(array) * s));
-            }
-        }
-        if can_dispatch {
-            if self.cycle_budget == 0 {
-                return Some((Op::Cycle, self.cost.cycle(self.pending.len()) * s));
-            }
-            let tid = self.pending.pop().expect("checked non-empty");
-            self.cleanups_since_dispatch = 0;
-            self.cycle_budget -= 1;
-            let node_level =
-                self.tasks[tid as usize].spec.request == ResourceRequest::WholeNode;
-            return Some((Op::Dispatch(tid), self.cost.dispatch(node_level) * s));
-        }
-        None
-    }
-
-    fn apply_op(&mut self, now: Time, op: Op, q: &mut EventQueue<SchedEvent>) {
-        match op {
-            Op::Register(job) => {
-                self.busy.register +=
-                    self.cost.submit(self.jobs[job as usize].array_size) * self.op_scale;
-                // Materialized at Submit; now they become schedulable.
-                let prio = self.jobs[job as usize].priority;
-                let ids: Vec<TaskId> = self
-                    .tasks
-                    .iter()
-                    .filter(|t| t.record.job == job && t.record.state == TaskState::Pending)
-                    .map(|t| t.record.task)
-                    .collect();
-                for tid in ids {
-                    self.pending.push(tid, prio);
-                }
-            }
-            Op::Cycle => {
-                self.busy.cycle += self.cost.cycle(self.pending.len()) * self.op_scale;
-                self.cycle_budget = self.cost.dispatch_cycle_batch;
-            }
-            Op::Dispatch(tid) => {
-                let node_level =
-                    self.tasks[tid as usize].spec.request == ResourceRequest::WholeNode;
-                self.busy.dispatch += self.cost.dispatch(node_level) * self.op_scale;
-                self.try_place(now, tid, q);
-            }
-            Op::Cleanup(tid) => {
-                let array = self.jobs[self.tasks[tid as usize].record.job as usize].array_size;
-                self.busy.cleanup += self.cost.cleanup(array) * self.op_scale;
-                self.finish_cleanup(now, tid);
-            }
-            Op::Noise(d) => {
-                self.busy.noise += d * self.op_scale;
-            }
-            Op::PreemptSignal(tid) => {
-                self.busy.preempt += self.cost.preempt_signal * self.op_scale;
-                self.apply_preempt_signal(now, tid);
-            }
-        }
-    }
-
-    /// Attempt placement of a dispatched task; on failure the task goes
-    /// back to the head of the queue and dispatch blocks until a cleanup
-    /// frees resources.
-    fn try_place(&mut self, now: Time, tid: TaskId, q: &mut EventQueue<SchedEvent>) {
-        let slot = &self.tasks[tid as usize];
-        let job = &self.jobs[slot.record.job as usize];
-        let reservation = job.reservation.clone();
-        let request = slot.spec.request;
-        let placement = match request {
-            ResourceRequest::WholeNode => {
-                let nodes = self.cluster.find_idle_nodes(1, reservation.as_deref());
-                nodes.first().copied().map(|node| {
-                    let mem = self.cluster.node(node).expect("valid node").free_mem_mib();
-                    let mask = self
-                        .cluster
-                        .node_mut(node)
-                        .expect("valid node")
-                        .allocate_whole()
-                        .expect("idle node allocates");
-                    Placement { node, mask, mem_mib: mem }
-                })
-            }
-            ResourceRequest::Cores { cores, mem_mib } => self
-                .cluster
-                .find_fit_node(cores, mem_mib, reservation.as_deref())
-                .map(|node| {
-                    let mask = self
-                        .cluster
-                        .allocate_on(node, cores, mem_mib)
-                        .expect("fit search said it fits");
-                    Placement { node, mask, mem_mib }
-                }),
-        };
-        match placement {
-            Some(p) => {
-                // Production node-churn: whole-node allocations on a
-                // near-machine-scale job occasionally get a node that is
-                // still draining and joins late.
-                let cores = p.mask.count();
-                let whole_node = request == ResourceRequest::WholeNode;
-                let late = if self.production && whole_node {
-                    let frac = self.cluster.n_nodes() as f64 / 512.0;
-                    let prob = self.task_model.p_node_late * frac * frac;
-                    if self.rng.chance(prob.min(1.0)) {
-                        self.rng
-                            .range_f64(self.task_model.late_range.0, self.task_model.late_range.1)
-                    } else {
-                        0.0
-                    }
-                } else {
-                    0.0
-                };
-                let start = now + late;
-                let slot = &mut self.tasks[tid as usize];
-                slot.record.state = TaskState::Running;
-                slot.record.start_t = Some(start);
-                slot.record.cores = cores;
-                slot.placement = Some(p);
-                let jitter = self.rng.normal().abs() * self.task_model.jitter_sigma;
-                let occupancy = self.task_model.startup + slot.spec.duration + jitter;
-                self.running_cores += cores as u64;
-                if self.record_timeline {
-                    self.timeline.push((start, cores as i64));
-                }
-                q.at(start + occupancy, SchedEvent::TaskEnded(tid));
-            }
-            None => {
-                // Head-of-line blocked: wait for resources to free.
-                let prio = self.tasks[tid as usize].priority;
-                self.pending.push_front(tid, prio);
-                self.cycle_budget = 0; // a fresh cycle rescans when unblocked
-                self.hol_blocked = true;
-            }
-        }
-    }
-
-    fn finish_cleanup(&mut self, now: Time, tid: TaskId) {
-        let slot = &mut self.tasks[tid as usize];
-        debug_assert!(
-            slot.record.state == TaskState::Completing
-                || slot.record.state == TaskState::Preempted,
-            "cleanup of task in state {:?}",
-            slot.record.state
-        );
-        slot.record.state = TaskState::Done;
-        slot.record.cleanup_t = Some(now);
-        if let Some(p) = slot.placement.take() {
-            self.cluster
-                .release_on(p.node, &p.mask, p.mem_mib)
-                .expect("release of held placement");
-        }
-        // Resources freed: head-of-line dispatch may proceed.
-        self.hol_blocked = false;
-    }
-
-    fn apply_preempt_signal(&mut self, now: Time, tid: TaskId) {
-        let slot = &mut self.tasks[tid as usize];
-        if slot.record.state != TaskState::Running {
-            return; // finished on its own before the signal landed
-        }
-        slot.record.state = TaskState::Preempted;
-        slot.record.end_t = Some(now);
-        let cores = slot.record.cores as u64;
-        self.running_cores -= cores;
-        if self.record_timeline {
-            self.timeline.push((now, -(cores as i64)));
-        }
-        self.completions.push_back(tid);
-        self.note_backlog();
-    }
-
-    fn note_backlog(&mut self) {
-        if self.completions.len() > self.max_completion_backlog {
-            self.max_completion_backlog = self.completions.len();
-        }
-    }
-}
-
-impl sim::Actor for SchedulerSim {
-    type Event = SchedEvent;
-
-    fn handle(&mut self, now: Time, ev: SchedEvent, q: &mut EventQueue<SchedEvent>) {
-        match ev {
-            SchedEvent::Submit(id) => {
-                let spec = self.specs[id as usize].take().expect("double submit");
-                spec.validate(64).expect("invalid job spec submitted");
-                let meta = JobMeta {
-                    id,
-                    name: spec.name.clone(),
-                    array_size: spec.array_size(),
-                    reservation: spec.reservation.clone(),
-                    priority: spec.priority,
-                    preemptable: spec.preemptable,
-                    submit_t: now,
-                };
-                // Materialize task slots (records in PENDING).
-                for t in &spec.tasks {
-                    let tid = self.tasks.len() as TaskId;
-                    self.tasks.push(TaskSlot {
-                        spec: t.clone(),
-                        record: TaskRecord {
-                            task: tid,
-                            job: id,
-                            state: TaskState::Pending,
-                            submit_t: now,
-                            start_t: None,
-                            end_t: None,
-                            cleanup_t: None,
-                            cores: 0,
-                        },
-                        placement: None,
-                        priority: spec.priority,
-                    });
-                }
-                while self.jobs.len() <= id as usize {
-                    // placeholder ordering safety (ids are dense by construction)
-                    self.jobs.push(meta.clone());
-                }
-                self.jobs[id as usize] = meta;
-                // Registration is server work.
-                let cost = self.cost.submit(spec.array_size());
-                if self.server_busy {
-                    // Serialize behind current op by queueing as noise-less
-                    // op: model keeps it simple — registration happens when
-                    // the server frees up; we enqueue a zero-arrival noise
-                    // slot carrying the register op via the preempt path.
-                    // Simpler: treat registration as an immediate follow-up
-                    // event retry.
-                    q.after(sim::TICK, SchedEvent::Submit(id));
-                    // restore spec for retry
-                    self.specs[id as usize] = Some(spec);
-                    // drop the duplicate task slots we just materialized
-                    for _ in 0..self.jobs[id as usize].array_size {
-                        self.tasks.pop();
-                    }
-                    return;
-                }
-                self.server_busy = true;
-                self.busy_since = now;
-                q.after(cost * self.op_scale, SchedEvent::ServerDone(Op::Register(id)));
-            }
-            SchedEvent::ServerDone(op) => {
-                self.apply_op(now, op, q);
-                self.server_busy = false;
-                // Background bursts do not count as *scheduler* saturation:
-                // the unusable-in-production guard measures the load this
-                // job itself puts on the server, matching the paper's
-                // observation about multi-level runs.
-                let is_noise = matches!(op, Op::Noise(_));
-                let stretch_started = if is_noise { now } else { self.busy_since };
-                let stretch = now - stretch_started;
-                if stretch > self.longest_busy_stretch {
-                    self.longest_busy_stretch = stretch;
-                }
-                self.kick(now, q);
-                if self.server_busy {
-                    // The server went straight back to work: this is one
-                    // continuous saturated stretch, so keep its start time.
-                    self.busy_since = stretch_started;
-                }
-            }
-            SchedEvent::TaskEnded(tid) => {
-                let slot = &mut self.tasks[tid as usize];
-                if slot.record.state != TaskState::Running {
-                    return; // stale (e.g. preempted)
-                }
-                slot.record.state = TaskState::Completing;
-                slot.record.end_t = Some(now);
-                let cores = slot.record.cores as u64;
-                self.running_cores -= cores;
-                if self.record_timeline {
-                    self.timeline.push((now, -(cores as i64)));
-                }
-                self.completions.push_back(tid);
-                self.note_backlog();
-                self.kick(now, q);
-            }
-            SchedEvent::NoiseSmall => {
-                if let Some((gap, demand)) = self.noise.next_small(&mut self.rng) {
-                    self.noise_q.push_back(demand);
-                    // Only keep the process alive while user work exists;
-                    // otherwise the sim would never terminate.
-                    if self.has_outstanding_work() {
-                        q.after(gap, SchedEvent::NoiseSmall);
-                    }
-                }
-                self.kick(now, q);
-            }
-            SchedEvent::NoiseLarge => {
-                if let Some((gap, demand)) = self.noise.next_large(&mut self.rng) {
-                    self.noise_q.push_back(demand);
-                    if self.has_outstanding_work() {
-                        q.after(gap, SchedEvent::NoiseLarge);
-                    }
-                }
-                self.kick(now, q);
-            }
-            SchedEvent::Preempt(job) => {
-                // Pending tasks of the job are simply removed (cheap, no
-                // server involvement beyond the dequeue).
-                let ids: Vec<TaskId> = self
-                    .tasks
-                    .iter()
-                    .filter(|t| t.record.job == job)
-                    .map(|t| t.record.task)
-                    .collect();
-                for tid in ids {
-                    match self.tasks[tid as usize].record.state {
-                        TaskState::Pending => {
-                            if self.pending.remove(tid) {
-                                let slot = &mut self.tasks[tid as usize];
-                                slot.record.state = TaskState::Done;
-                                slot.record.start_t = Some(now);
-                                slot.record.end_t = Some(now);
-                                slot.record.cleanup_t = Some(now);
-                            }
-                        }
-                        TaskState::Running => self.preempt_q.push_back(tid),
-                        _ => {}
-                    }
-                }
-                self.kick(now, q);
-            }
-        }
-    }
-}
-
-impl SchedulerSim {
-    fn has_outstanding_work(&self) -> bool {
-        !self.pending.is_empty()
-            || !self.completions.is_empty()
-            || !self.preempt_q.is_empty()
-            || self.running_cores > 0
-            || self.tasks.iter().any(|t| {
-                matches!(
-                    t.record.state,
-                    TaskState::Pending | TaskState::Running | TaskState::Completing
-                )
-            })
-    }
-
     /// Number of nodes currently fully idle (test/metric helper).
     pub fn idle_nodes(&self) -> usize {
         self.cluster
@@ -693,7 +353,7 @@ impl SchedulerSim {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::scheduler::job::ComputeBatch;
+    use crate::scheduler::job::{ComputeBatch, ResourceRequest, TaskState};
 
     fn uniform_job(
         n_tasks: usize,
@@ -977,5 +637,21 @@ mod tests {
             prev_t = t;
         }
         assert_eq!(out.timeline.last().unwrap().1, 0);
+    }
+
+    #[test]
+    fn placement_strategy_defaults_and_overrides() {
+        let sim = quiet_sim(2);
+        assert_eq!(sim.placement(), Strategy::FirstFit);
+        let sim = quiet_sim(2).with_placement(Strategy::Spread);
+        assert_eq!(sim.placement(), Strategy::Spread);
+        // The run still drains under a non-default policy.
+        let (out, _) = sim.run_single(uniform_job(
+            64,
+            ResourceRequest::Cores { cores: 1, mem_mib: 0 },
+            5.0,
+            1,
+        ));
+        assert!(out.records.iter().all(|r| r.state == TaskState::Done));
     }
 }

@@ -1,0 +1,178 @@
+//! Task lifecycle: placement, completion, cleanup and preemption.
+//!
+//! These are the effects of the server's operations on the task state
+//! machine (`PENDING → RUNNING → COMPLETING → DONE`, with `PREEMPTED`
+//! off the running state) and on the cluster's resources. All resource
+//! allocation and release flows through the placement engine
+//! ([`crate::placement::PlacementEngine`]), so the free-capacity index
+//! is maintained incrementally and dispatch never scans the node table.
+
+use crate::scheduler::core::{SchedEvent, SchedulerSim};
+use crate::scheduler::job::{JobId, ResourceRequest, TaskId, TaskState};
+use crate::sim::{EventQueue, Time};
+
+impl SchedulerSim {
+    /// Attempt placement of a dispatched task; on failure the task goes
+    /// back to the head of the queue and dispatch blocks until a cleanup
+    /// frees resources.
+    pub(crate) fn try_place(&mut self, now: Time, tid: TaskId, q: &mut EventQueue<SchedEvent>) {
+        let (request, reservation) = {
+            let slot = &self.tasks[tid as usize];
+            let job = &self.jobs[slot.record.job as usize];
+            (slot.spec.request, job.reservation.clone())
+        };
+        let placement = match request {
+            ResourceRequest::WholeNode => self
+                .engine
+                .place_whole(&mut self.cluster, reservation.as_deref()),
+            ResourceRequest::Cores { cores, mem_mib } => self.engine.place_cores(
+                &mut self.cluster,
+                cores,
+                mem_mib,
+                reservation.as_deref(),
+            ),
+        };
+        match placement {
+            Some(p) => {
+                // Production node-churn: whole-node allocations on a
+                // near-machine-scale job occasionally get a node that is
+                // still draining and joins late.
+                let cores = p.mask.count();
+                let whole_node = request == ResourceRequest::WholeNode;
+                let late = if self.production && whole_node {
+                    let frac = self.cluster.n_nodes() as f64 / 512.0;
+                    let prob = self.task_model.p_node_late * frac * frac;
+                    if self.rng.chance(prob.min(1.0)) {
+                        self.rng
+                            .range_f64(self.task_model.late_range.0, self.task_model.late_range.1)
+                    } else {
+                        0.0
+                    }
+                } else {
+                    0.0
+                };
+                let start = now + late;
+                let slot = &mut self.tasks[tid as usize];
+                slot.record.state = TaskState::Running;
+                slot.record.start_t = Some(start);
+                slot.record.cores = cores;
+                slot.placement = Some(p);
+                let jitter = self.rng.normal().abs() * self.task_model.jitter_sigma;
+                let occupancy = self.task_model.startup + slot.spec.duration + jitter;
+                self.running_cores += cores as u64;
+                if self.record_timeline {
+                    self.timeline.push((start, cores as i64));
+                }
+                q.at(start + occupancy, SchedEvent::TaskEnded(tid));
+            }
+            None => {
+                // Head-of-line blocked: wait for resources to free.
+                let prio = self.tasks[tid as usize].priority;
+                self.pending.push_front(tid, prio);
+                self.cycle_budget = 0; // a fresh cycle rescans when unblocked
+                self.hol_blocked = true;
+            }
+        }
+    }
+
+    /// A running task's occupancy ended: it enters COMPLETING and waits
+    /// for the server's cleanup transaction (resources still held).
+    pub(crate) fn finish_task(&mut self, now: Time, tid: TaskId) {
+        let slot = &mut self.tasks[tid as usize];
+        if slot.record.state != TaskState::Running {
+            return; // stale (e.g. preempted)
+        }
+        slot.record.state = TaskState::Completing;
+        slot.record.end_t = Some(now);
+        let cores = slot.record.cores as u64;
+        self.running_cores -= cores;
+        if self.record_timeline {
+            self.timeline.push((now, -(cores as i64)));
+        }
+        self.completions.push_back(tid);
+        self.note_backlog();
+    }
+
+    /// The cleanup transaction completed: release resources, mark DONE.
+    pub(crate) fn finish_cleanup(&mut self, now: Time, tid: TaskId) {
+        let slot = &mut self.tasks[tid as usize];
+        debug_assert!(
+            slot.record.state == TaskState::Completing
+                || slot.record.state == TaskState::Preempted,
+            "cleanup of task in state {:?}",
+            slot.record.state
+        );
+        slot.record.state = TaskState::Done;
+        slot.record.cleanup_t = Some(now);
+        if let Some(p) = slot.placement.take() {
+            self.engine
+                .release(&mut self.cluster, &p)
+                .expect("release of held placement");
+        }
+        // Resources freed: head-of-line dispatch may proceed.
+        self.hol_blocked = false;
+    }
+
+    /// A preemption signal landed on a (possibly already finished) task.
+    pub(crate) fn apply_preempt_signal(&mut self, now: Time, tid: TaskId) {
+        let slot = &mut self.tasks[tid as usize];
+        if slot.record.state != TaskState::Running {
+            return; // finished on its own before the signal landed
+        }
+        slot.record.state = TaskState::Preempted;
+        slot.record.end_t = Some(now);
+        let cores = slot.record.cores as u64;
+        self.running_cores -= cores;
+        if self.record_timeline {
+            self.timeline.push((now, -(cores as i64)));
+        }
+        self.completions.push_back(tid);
+        self.note_backlog();
+    }
+
+    /// Preempt a whole job: pending tasks are cancelled outright (cheap,
+    /// no server involvement beyond the dequeue); running tasks queue a
+    /// preemption signal through the server.
+    pub(crate) fn preempt_job(&mut self, now: Time, job: JobId) {
+        let ids: Vec<TaskId> = self
+            .tasks
+            .iter()
+            .filter(|t| t.record.job == job)
+            .map(|t| t.record.task)
+            .collect();
+        for tid in ids {
+            match self.tasks[tid as usize].record.state {
+                TaskState::Pending => {
+                    if self.pending.remove(tid) {
+                        let slot = &mut self.tasks[tid as usize];
+                        slot.record.state = TaskState::Done;
+                        slot.record.start_t = Some(now);
+                        slot.record.end_t = Some(now);
+                        slot.record.cleanup_t = Some(now);
+                    }
+                }
+                TaskState::Running => self.preempt_q.push_back(tid),
+                _ => {}
+            }
+        }
+    }
+
+    pub(crate) fn note_backlog(&mut self) {
+        if self.completions.len() > self.max_completion_backlog {
+            self.max_completion_backlog = self.completions.len();
+        }
+    }
+
+    pub(crate) fn has_outstanding_work(&self) -> bool {
+        !self.pending.is_empty()
+            || !self.completions.is_empty()
+            || !self.preempt_q.is_empty()
+            || self.running_cores > 0
+            || self.tasks.iter().any(|t| {
+                matches!(
+                    t.record.state,
+                    TaskState::Pending | TaskState::Running | TaskState::Completing
+                )
+            })
+    }
+}

@@ -9,7 +9,10 @@
 //!   DONE`) with full per-task timestamps ([`job`], [`accounting`]),
 //! * a **single-threaded scheduler server** that serializes submission
 //!   registration, dispatch RPCs and completion cleanup transactions —
-//!   the serialization is what collapses at 512-node scale ([`core`]),
+//!   the serialization is what collapses at 512-node scale. The façade
+//!   and public types live in [`core`]; the op loop and service
+//!   discipline in [`server`]; task state transitions, placement (via
+//!   [`crate::placement`]) and cleanup in [`lifecycle`],
 //! * a **calibrated cost model** for each server operation
 //!   ([`costmodel`]), including the array-size-dependent cleanup cost the
 //!   paper observed ("releasing the completed tasks takes significantly
@@ -22,11 +25,13 @@ pub mod accounting;
 pub mod core;
 pub mod costmodel;
 pub mod job;
+pub mod lifecycle;
 pub mod noise;
 pub mod queue;
+pub mod server;
 
 pub use accounting::{JobStats, TaskRecord};
-pub use core::{SchedEvent, SchedulerSim, SimOutcome};
+pub use self::core::{SchedEvent, SchedulerSim, SimOutcome};
 pub use costmodel::CostModel;
 pub use job::{ComputeBatch, JobId, JobSpec, ResourceRequest, SchedTaskSpec, TaskId, TaskState};
 pub use queue::PendingQueue;

@@ -171,6 +171,80 @@ mod tests {
     }
 
     #[test]
+    fn push_front_into_missing_bucket_creates_it() {
+        // A head-of-line retry at a priority with no live bucket must
+        // create the bucket in sorted position, not panic or misorder.
+        let mut q = PendingQueue::new();
+        q.push(1, 0);
+        q.push_front(2, 5); // no priority-5 bucket exists yet
+        q.push_front(3, -5); // nor a -5 one
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.pop(), Some(2), "highest priority first");
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(3));
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.len(), 0);
+    }
+
+    #[test]
+    fn push_front_ordering_within_existing_bucket() {
+        let mut q = PendingQueue::new();
+        q.push(1, 0);
+        q.push(2, 0);
+        q.push_front(9, 0);
+        q.push_front(8, 0);
+        // Most recent retry pops first, then the earlier retry, then FIFO.
+        assert_eq!(q.pop(), Some(8));
+        assert_eq!(q.pop(), Some(9));
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn remove_maintains_len_invariants() {
+        let mut q = PendingQueue::new();
+        for t in 0..10u64 {
+            q.push(t, (t % 2) as i32);
+        }
+        assert_eq!(q.len(), 10);
+        // Remove from the middle, the head, and a push_front entry.
+        assert!(q.remove(4));
+        assert!(q.remove(1));
+        q.push_front(99, 1);
+        assert!(q.remove(99));
+        assert_eq!(q.len(), 8);
+        // Double-remove and unknown ids leave len untouched.
+        assert!(!q.remove(4));
+        assert!(!q.remove(1234));
+        assert_eq!(q.len(), 8);
+        // Drain: count must match len, ids must be the surviving ones.
+        let mut drained = Vec::new();
+        while let Some(t) = q.pop() {
+            drained.push(t);
+        }
+        assert_eq!(drained.len(), 8);
+        assert!(!drained.contains(&4) && !drained.contains(&1) && !drained.contains(&99));
+        assert!(q.is_empty());
+        assert_eq!(q.len(), 0);
+    }
+
+    #[test]
+    fn remove_then_push_front_roundtrip() {
+        // The scheduler's failed-dispatch path: pop, fail, push_front,
+        // preemption removes it. len must stay exact throughout.
+        let mut q = PendingQueue::new();
+        q.push(7, 0);
+        let t = q.pop().unwrap();
+        assert_eq!(q.len(), 0);
+        q.push_front(t, 0);
+        assert_eq!(q.len(), 1);
+        assert!(q.remove(t));
+        assert!(q.is_empty());
+        assert_eq!(q.peek(), None);
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
     fn interleaved_priorities_stay_fifo() {
         let mut q = PendingQueue::new();
         for i in 0..100u64 {

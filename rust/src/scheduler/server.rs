@@ -1,0 +1,224 @@
+//! The scheduler server: the op loop, the work-conserving service
+//! discipline, and the DES event handler.
+//!
+//! Everything here models *what the single-threaded server spends its
+//! time on*. The rules that produce the paper's 512-node collapse:
+//!
+//! 1. one operation at a time (registration, cycle scan, dispatch,
+//!    cleanup, noise burst, preempt signal), each with a calibrated
+//!    virtual-time cost ([`crate::scheduler::costmodel`]);
+//! 2. service order: background noise → preempt signals → cleanups
+//!    (with a bounded dispatch interleave) → cycle-batched dispatches;
+//! 3. cleanups cost more than dispatches and grow with array size, so
+//!    once completions flood in, dispatch starves.
+//!
+//! What happens when an operation *completes* (state transitions,
+//! placement, resource release) lives in
+//! [`crate::scheduler::lifecycle`].
+
+use crate::scheduler::accounting::TaskRecord;
+use crate::scheduler::core::{JobMeta, Op, SchedEvent, SchedulerSim, TaskSlot};
+use crate::scheduler::job::{ResourceRequest, TaskId, TaskState};
+use crate::sim::{self, EventQueue, Time};
+
+impl SchedulerSim {
+    /// If the server is idle, pick the next operation and start it.
+    pub(crate) fn kick(&mut self, now: Time, q: &mut EventQueue<SchedEvent>) {
+        if self.server_busy {
+            return;
+        }
+        if let Some((op, cost)) = self.pick_next() {
+            self.server_busy = true;
+            self.busy_since = now;
+            q.after(cost, SchedEvent::ServerDone(op));
+        }
+    }
+
+    /// Work-conserving service discipline (see module docs):
+    /// noise → preempt signals → cleanups (with bounded dispatch
+    /// interleave) → dispatches (cycle-batched).
+    pub(crate) fn pick_next(&mut self) -> Option<(Op, Time)> {
+        let s = self.op_scale;
+        if let Some(demand) = self.noise_q.pop_front() {
+            return Some((Op::Noise(demand), demand * s));
+        }
+        if let Some(t) = self.preempt_q.pop_front() {
+            return Some((Op::PreemptSignal(t), self.cost.preempt_signal * s));
+        }
+        let can_dispatch = !self.pending.is_empty() && !self.hol_blocked;
+        if !self.completions.is_empty() {
+            let must_interleave =
+                can_dispatch && self.cleanups_since_dispatch >= self.cost.cleanup_interleave;
+            if !must_interleave {
+                let tid = self.completions.pop_front().expect("checked non-empty");
+                self.cleanups_since_dispatch += 1;
+                let array = self.jobs[self.tasks[tid as usize].record.job as usize].array_size;
+                return Some((Op::Cleanup(tid), self.cost.cleanup(array) * s));
+            }
+        }
+        if can_dispatch {
+            if self.cycle_budget == 0 {
+                return Some((Op::Cycle, self.cost.cycle(self.pending.len()) * s));
+            }
+            let tid = self.pending.pop().expect("checked non-empty");
+            self.cleanups_since_dispatch = 0;
+            self.cycle_budget -= 1;
+            let node_level =
+                self.tasks[tid as usize].spec.request == ResourceRequest::WholeNode;
+            return Some((Op::Dispatch(tid), self.cost.dispatch(node_level) * s));
+        }
+        None
+    }
+
+    /// Account a finished operation and apply its effects.
+    pub(crate) fn apply_op(&mut self, now: Time, op: Op, q: &mut EventQueue<SchedEvent>) {
+        match op {
+            Op::Register(job) => {
+                self.busy.register +=
+                    self.cost.submit(self.jobs[job as usize].array_size) * self.op_scale;
+                // Materialized at Submit; now they become schedulable.
+                let prio = self.jobs[job as usize].priority;
+                let ids: Vec<TaskId> = self
+                    .tasks
+                    .iter()
+                    .filter(|t| t.record.job == job && t.record.state == TaskState::Pending)
+                    .map(|t| t.record.task)
+                    .collect();
+                for tid in ids {
+                    self.pending.push(tid, prio);
+                }
+            }
+            Op::Cycle => {
+                self.busy.cycle += self.cost.cycle(self.pending.len()) * self.op_scale;
+                self.cycle_budget = self.cost.dispatch_cycle_batch;
+            }
+            Op::Dispatch(tid) => {
+                let node_level =
+                    self.tasks[tid as usize].spec.request == ResourceRequest::WholeNode;
+                self.busy.dispatch += self.cost.dispatch(node_level) * self.op_scale;
+                self.try_place(now, tid, q);
+            }
+            Op::Cleanup(tid) => {
+                let array = self.jobs[self.tasks[tid as usize].record.job as usize].array_size;
+                self.busy.cleanup += self.cost.cleanup(array) * self.op_scale;
+                self.finish_cleanup(now, tid);
+            }
+            Op::Noise(d) => {
+                self.busy.noise += d * self.op_scale;
+            }
+            Op::PreemptSignal(tid) => {
+                self.busy.preempt += self.cost.preempt_signal * self.op_scale;
+                self.apply_preempt_signal(now, tid);
+            }
+        }
+    }
+}
+
+impl sim::Actor for SchedulerSim {
+    type Event = SchedEvent;
+
+    fn handle(&mut self, now: Time, ev: SchedEvent, q: &mut EventQueue<SchedEvent>) {
+        match ev {
+            SchedEvent::Submit(id) => {
+                if self.server_busy {
+                    // The server is mid-operation: retry a tick later so
+                    // registration serializes behind it (nothing is
+                    // materialized yet, so there is nothing to roll back).
+                    q.after(sim::TICK, SchedEvent::Submit(id));
+                    return;
+                }
+                let spec = self.specs[id as usize].take().expect("double submit");
+                // Largest node's core count, cached by the placement
+                // index (no O(nodes) walk per submission).
+                let cores_per_node = self.engine.index().cores_per_node();
+                spec.validate(cores_per_node).expect("invalid job spec submitted");
+                let meta = JobMeta {
+                    id,
+                    name: spec.name.clone(),
+                    array_size: spec.array_size(),
+                    reservation: spec.reservation.clone(),
+                    priority: spec.priority,
+                    preemptable: spec.preemptable,
+                    submit_t: now,
+                };
+                // Materialize task slots (records in PENDING).
+                for t in &spec.tasks {
+                    let tid = self.tasks.len() as TaskId;
+                    self.tasks.push(TaskSlot {
+                        spec: t.clone(),
+                        record: TaskRecord {
+                            task: tid,
+                            job: id,
+                            state: TaskState::Pending,
+                            submit_t: now,
+                            start_t: None,
+                            end_t: None,
+                            cleanup_t: None,
+                            cores: 0,
+                        },
+                        placement: None,
+                        priority: spec.priority,
+                    });
+                }
+                while self.jobs.len() <= id as usize {
+                    // placeholder ordering safety (ids are dense by construction)
+                    self.jobs.push(meta.clone());
+                }
+                self.jobs[id as usize] = meta;
+                // Registration is server work.
+                let cost = self.cost.submit(spec.array_size());
+                self.server_busy = true;
+                self.busy_since = now;
+                q.after(cost * self.op_scale, SchedEvent::ServerDone(Op::Register(id)));
+            }
+            SchedEvent::ServerDone(op) => {
+                self.apply_op(now, op, q);
+                self.server_busy = false;
+                // Background bursts do not count as *scheduler* saturation:
+                // the unusable-in-production guard measures the load this
+                // job itself puts on the server, matching the paper's
+                // observation about multi-level runs.
+                let is_noise = matches!(op, Op::Noise(_));
+                let stretch_started = if is_noise { now } else { self.busy_since };
+                let stretch = now - stretch_started;
+                if stretch > self.longest_busy_stretch {
+                    self.longest_busy_stretch = stretch;
+                }
+                self.kick(now, q);
+                if self.server_busy {
+                    // The server went straight back to work: this is one
+                    // continuous saturated stretch, so keep its start time.
+                    self.busy_since = stretch_started;
+                }
+            }
+            SchedEvent::TaskEnded(tid) => {
+                self.finish_task(now, tid);
+                self.kick(now, q);
+            }
+            SchedEvent::NoiseSmall => {
+                if let Some((gap, demand)) = self.noise.next_small(&mut self.rng) {
+                    self.noise_q.push_back(demand);
+                    // Only keep the process alive while user work exists;
+                    // otherwise the sim would never terminate.
+                    if self.has_outstanding_work() {
+                        q.after(gap, SchedEvent::NoiseSmall);
+                    }
+                }
+                self.kick(now, q);
+            }
+            SchedEvent::NoiseLarge => {
+                if let Some((gap, demand)) = self.noise.next_large(&mut self.rng) {
+                    self.noise_q.push_back(demand);
+                    if self.has_outstanding_work() {
+                        q.after(gap, SchedEvent::NoiseLarge);
+                    }
+                }
+                self.kick(now, q);
+            }
+            SchedEvent::Preempt(job) => {
+                self.preempt_job(now, job);
+                self.kick(now, q);
+            }
+        }
+    }
+}

@@ -1,0 +1,309 @@
+//! Property tests for the placement subsystem.
+//!
+//! The free-capacity index is only allowed to be *fast*; it is never
+//! allowed to disagree with a brute-force scan of the cluster. These
+//! tests drive randomized allocate/release/state-change sequences and
+//! assert, after every step, that the index's answers match the
+//! scan-based searches (`Cluster::find_fit_node`,
+//! `Cluster::find_idle_nodes`) and that the internal bucket structure is
+//! exactly consistent with the node table. A second suite runs every
+//! placement policy end-to-end through the scheduler.
+
+use llsched::cluster::{Cluster, NodeState};
+use llsched::placement::{FreeIndex, PlacementEngine, Strategy, ALL_STRATEGIES};
+use llsched::scheduler::core::{SchedulerSim, TaskModel};
+use llsched::scheduler::costmodel::CostModel;
+use llsched::scheduler::job::{ComputeBatch, JobSpec, ResourceRequest, SchedTaskSpec, TaskState};
+use llsched::scheduler::noise::NoiseModel;
+use llsched::testing::prop::{forall, Gen};
+
+/// One live allocation in the reference model.
+struct Alloc {
+    node: u32,
+    mask: llsched::cluster::CoreMask,
+    mem: u64,
+}
+
+#[test]
+fn free_index_matches_brute_force_under_random_churn() {
+    forall("index == scan under churn", 60, |g| {
+        let nodes = g.int(1, 32) as u32 + 1;
+        let cores = *g.choose(&[2u32, 4, 8, 64]);
+        let mem_per_node = 1024u64;
+        let mut cluster = Cluster::homogeneous(nodes, cores, mem_per_node);
+        // Sometimes fence off a reservation slice.
+        let reservation = if nodes >= 4 && g.chance(0.5) {
+            let k = g.int(1, (nodes / 2) as u64) as u32;
+            cluster
+                .reserve("bench", (0..k).collect())
+                .map_err(|e| e.to_string())?;
+            Some("bench")
+        } else {
+            None
+        };
+        let mut index = FreeIndex::build(&cluster);
+        let mut allocs: Vec<Alloc> = Vec::new();
+
+        let steps = 30 + g.usize(0, 50);
+        for _ in 0..steps {
+            let action = g.int(0, 9);
+            match action {
+                // Allocate through the index's first-fit answer.
+                0..=4 => {
+                    let want = g.int(1, cores as u64) as u32;
+                    let mem = g.int(0, 64);
+                    let res = if g.chance(0.5) { reservation } else { None };
+                    let scan = cluster.find_fit_node(want, mem, res);
+                    let part = index.partition_for(res);
+                    let indexed = part.and_then(|p| index.first_fit(&cluster, p, want, mem));
+                    if indexed != scan {
+                        return Err(format!(
+                            "first_fit {indexed:?} vs scan {scan:?} (want {want} cores, {mem} MiB, res {res:?})"
+                        ));
+                    }
+                    if let Some(node) = indexed {
+                        let mask = cluster
+                            .allocate_on(node, want, mem)
+                            .map_err(|e| format!("index said it fits: {e}"))?;
+                        let free = cluster.node(node).unwrap().free_cores();
+                        index.on_delta(node, free);
+                        allocs.push(Alloc { node, mask, mem });
+                    }
+                }
+                // Release a random live allocation.
+                5..=7 => {
+                    if allocs.is_empty() {
+                        continue;
+                    }
+                    let i = g.usize(0, allocs.len() - 1);
+                    let a = allocs.swap_remove(i);
+                    cluster
+                        .release_on(a.node, &a.mask, a.mem)
+                        .map_err(|e| e.to_string())?;
+                    let free = cluster.node(a.node).unwrap().free_cores();
+                    index.on_delta(a.node, free);
+                }
+                // Flip a node's lifecycle state.
+                _ => {
+                    let id = g.int(0, nodes as u64 - 1) as u32;
+                    let state = *g.choose(&[NodeState::Up, NodeState::Draining, NodeState::Down]);
+                    cluster.node_mut(id).unwrap().set_state(state);
+                    index.on_state_change(id, state);
+                }
+            }
+
+            // Invariants after every step.
+            index.check_consistency(&cluster)?;
+            for res in [None, reservation] {
+                let Some(part) = index.partition_for(res) else {
+                    continue;
+                };
+                // Idle pool matches the scan.
+                let scan_idle = cluster.find_idle_nodes(nodes, res);
+                if index.idle_count(&cluster, part) != scan_idle.len() {
+                    return Err(format!(
+                        "idle_count {} vs scan {} (res {res:?})",
+                        index.idle_count(&cluster, part),
+                        scan_idle.len()
+                    ));
+                }
+                if index.idle_lowest(&cluster, part) != scan_idle.first().copied() {
+                    return Err(format!(
+                        "idle_lowest {:?} vs scan {:?}",
+                        index.idle_lowest(&cluster, part),
+                        scan_idle.first()
+                    ));
+                }
+                // Fit feasibility and extremal-choice properties.
+                let want = g.int(1, cores as u64) as u32;
+                let scan = cluster.find_fit_node(want, 0, res);
+                let best = index.best_fit(&cluster, part, want, 0);
+                let worst = index.worst_fit(&cluster, part, want, 0);
+                if best.is_some() != scan.is_some() || worst.is_some() != scan.is_some() {
+                    return Err(format!(
+                        "feasibility disagreement: best {best:?} worst {worst:?} scan {scan:?}"
+                    ));
+                }
+                let eligible_free: Vec<u32> = scan_eligible_free(&cluster, res, want);
+                if let Some(b) = best {
+                    let f = cluster.node(b).unwrap().free_cores();
+                    if eligible_free.iter().any(|&x| x < f) {
+                        return Err(format!("best_fit picked {f} free, tighter node exists"));
+                    }
+                }
+                if let Some(w) = worst {
+                    let f = cluster.node(w).unwrap().free_cores();
+                    if eligible_free.iter().any(|&x| x > f) {
+                        return Err(format!("worst_fit picked {f} free, freer node exists"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Free-core counts of all Up nodes eligible for `res` that fit `want`.
+fn scan_eligible_free(cluster: &Cluster, res: Option<&str>, want: u32) -> Vec<u32> {
+    cluster
+        .eligible_nodes(res)
+        .into_iter()
+        .filter_map(|id| {
+            let n = cluster.node(id).unwrap();
+            if n.can_fit(want, 0) {
+                Some(n.free_cores())
+            } else {
+                None
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn engine_placements_keep_index_consistent() {
+    forall("engine keeps index consistent", 40, |g| {
+        let nodes = g.int(1, 16) as u32 + 1;
+        let strategy = *g.choose(&ALL_STRATEGIES);
+        let mut cluster = Cluster::homogeneous(nodes, 8, 4096);
+        let mut engine = PlacementEngine::new(&cluster, strategy, g.int(0, u64::MAX - 1));
+        let mut placements = Vec::new();
+        for _ in 0..g.usize(10, 60) {
+            if g.chance(0.6) {
+                let p = if g.chance(0.3) {
+                    engine.place_whole(&mut cluster, None)
+                } else {
+                    engine.place_cores(&mut cluster, g.int(1, 8) as u32, g.int(0, 128), None)
+                };
+                if let Some(p) = p {
+                    placements.push(p);
+                }
+            } else if !placements.is_empty() {
+                let i = g.usize(0, placements.len() - 1);
+                let p = placements.swap_remove(i);
+                engine.release(&mut cluster, &p).map_err(|e| e.to_string())?;
+            }
+            engine
+                .index()
+                .check_consistency(&cluster)
+                .map_err(|e| format!("{strategy}: {e}"))?;
+        }
+        Ok(())
+    });
+}
+
+// ---- every policy, end-to-end through the scheduler --------------------
+
+fn mixed_job() -> JobSpec {
+    // Whole-node and core-level tasks interleaved, so both placement
+    // paths (idle pool + fit buckets) are exercised.
+    let mut tasks = Vec::new();
+    for i in 0..24usize {
+        if i % 3 == 0 {
+            tasks.push(SchedTaskSpec {
+                request: ResourceRequest::WholeNode,
+                duration: 10.0,
+                batch: ComputeBatch { count: 64, each: 10.0 / 64.0 },
+                lanes: 64,
+            });
+        } else {
+            tasks.push(SchedTaskSpec {
+                request: ResourceRequest::Cores { cores: 4, mem_mib: 64 },
+                duration: 8.0,
+                batch: ComputeBatch { count: 1, each: 8.0 },
+                lanes: 4,
+            });
+        }
+    }
+    JobSpec {
+        name: "mixed".into(),
+        tasks,
+        reservation: None,
+        priority: 0,
+        preemptable: false,
+    }
+}
+
+fn run_with(strategy: Strategy) -> llsched::scheduler::core::SimOutcome {
+    let sim = SchedulerSim::new(
+        Cluster::tx_green(6),
+        CostModel::slurm_like_tx_green(),
+        NoiseModel::dedicated(),
+        7,
+    )
+    .with_server_speed(1.0)
+    .with_task_model(TaskModel {
+        startup: 0.0,
+        jitter_sigma: 0.0,
+        p_node_late: 0.0,
+        late_range: (0.0, 0.0),
+    })
+    .with_placement(strategy);
+    assert_eq!(sim.placement(), strategy);
+    let (out, _) = sim.run_single(mixed_job());
+    out
+}
+
+#[test]
+fn first_fit_policy_completes_mixed_workload() {
+    let out = run_with(Strategy::FirstFit);
+    assert!(out.records.iter().all(|r| r.state == TaskState::Done));
+    assert_eq!(out.timeline.last().unwrap().1, 0, "resources return");
+}
+
+#[test]
+fn best_fit_policy_completes_mixed_workload() {
+    let out = run_with(Strategy::BestFit);
+    assert!(out.records.iter().all(|r| r.state == TaskState::Done));
+    assert_eq!(out.timeline.last().unwrap().1, 0);
+}
+
+#[test]
+fn spread_policy_completes_mixed_workload() {
+    let out = run_with(Strategy::Spread);
+    assert!(out.records.iter().all(|r| r.state == TaskState::Done));
+    assert_eq!(out.timeline.last().unwrap().1, 0);
+}
+
+#[test]
+fn random_policy_completes_mixed_workload() {
+    let out = run_with(Strategy::Random);
+    assert!(out.records.iter().all(|r| r.state == TaskState::Done));
+    assert_eq!(out.timeline.last().unwrap().1, 0);
+}
+
+#[test]
+fn node_based_policy_completes_mixed_workload() {
+    let out = run_with(Strategy::NodeBased);
+    assert!(out.records.iter().all(|r| r.state == TaskState::Done));
+    assert_eq!(out.timeline.last().unwrap().1, 0);
+}
+
+#[test]
+fn policies_are_selectable_via_config() {
+    // The config layer resolves every strategy name down to a working
+    // run — the same path `llsched run --placement` takes.
+    for s in ALL_STRATEGIES {
+        let parsed = Strategy::parse(&s.to_string()).unwrap();
+        assert_eq!(parsed, s);
+        let cfg = llsched::config::RunConfig {
+            nodes: 4,
+            placement: Some(s),
+            ..Default::default()
+        };
+        assert_eq!(cfg.placement_strategy(), s);
+    }
+}
+
+#[test]
+fn best_fit_packs_denser_than_spread() {
+    // Two 4-core placements on a fresh 2-node cluster: best-fit stacks
+    // them on one node, spread puts them on different nodes. The
+    // policies are observably different, not just differently named.
+    for (strategy, same_node) in [(Strategy::BestFit, true), (Strategy::Spread, false)] {
+        let mut cluster = Cluster::tx_green(2);
+        let mut engine = PlacementEngine::new(&cluster, strategy, 1);
+        let a = engine.place_cores(&mut cluster, 4, 0, None).unwrap();
+        let b = engine.place_cores(&mut cluster, 4, 0, None).unwrap();
+        assert_eq!(a.node == b.node, same_node, "{strategy}");
+    }
+}

@@ -11,6 +11,22 @@ use llsched::runtime::{ExecPool, Runtime};
 use std::path::PathBuf;
 use std::sync::Arc;
 
+/// The live-execution tests need both a PJRT-capable build (not the
+/// offline stub) and the artifacts from `make artifacts`. When either is
+/// missing the tests skip (pass vacuously) with a note, so the default
+/// offline `cargo test` stays green.
+fn runtime_ready() -> Option<PathBuf> {
+    if !llsched::runtime::pjrt_available() {
+        eprintln!("skipping: PJRT stub build (see runtime::stub)");
+        return None;
+    }
+    let dir = llsched::runtime::find_artifacts_dir();
+    if dir.is_none() {
+        eprintln!("skipping: artifacts/ not found — run `make artifacts` first");
+    }
+    dir
+}
+
 fn artifacts_dir() -> PathBuf {
     llsched::runtime::find_artifacts_dir().expect("run `make artifacts` first")
 }
@@ -44,6 +60,9 @@ fn oracle_cases() -> Vec<(String, u64, usize, f64)> {
 
 #[test]
 fn artifacts_load_and_execute() {
+    let Some(_dir) = runtime_ready() else {
+        return;
+    };
     let mut pool = ExecPool::open(artifacts_dir());
     let files = pool.list().unwrap();
     assert_eq!(files.len(), 3, "three shape variants exported");
@@ -65,6 +84,9 @@ fn artifacts_load_and_execute() {
 
 #[test]
 fn step_is_deterministic() {
+    let Some(_dir) = runtime_ready() else {
+        return;
+    };
     let rt = Runtime::load(&artifacts_dir().join("simstep_8x32x32.hlo.txt")).unwrap();
     let state = initial_state(&rt.artifact, 5);
     let (a, ca) = rt.step(&state).unwrap();
@@ -75,6 +97,9 @@ fn step_is_deterministic() {
 
 #[test]
 fn uniform_field_matches_closed_form() {
+    let Some(_dir) = runtime_ready() else {
+        return;
+    };
     // A constant field has zero laplacian: each inner step applies only
     // the cubic damping y - 0.01*y^3; the module runs 4 scan steps.
     let rt = Runtime::load(&artifacts_dir().join("simstep_8x32x32.hlo.txt")).unwrap();
@@ -91,6 +116,9 @@ fn uniform_field_matches_closed_form() {
 
 #[test]
 fn checksums_match_python_oracle() {
+    let Some(_dir) = runtime_ready() else {
+        return;
+    };
     let cases = oracle_cases();
     assert!(cases.len() >= 4, "oracle has cases");
     let mut pool = ExecPool::open(artifacts_dir());
@@ -108,6 +136,9 @@ fn checksums_match_python_oracle() {
 
 #[test]
 fn runtime_server_serves_lanes() {
+    let Some(_dir) = runtime_ready() else {
+        return;
+    };
     let server = Arc::new(
         RuntimeServer::spawn(artifacts_dir().join("simstep_8x32x32.hlo.txt")).unwrap(),
     );
@@ -121,6 +152,9 @@ fn runtime_server_serves_lanes() {
 
 #[test]
 fn node_executor_runs_pjrt_payload_under_generated_script() {
+    let Some(_dir) = runtime_ready() else {
+        return;
+    };
     // The full L3→L1 path: node-based script → pinned lanes → PJRT tasks.
     let server = Arc::new(
         RuntimeServer::spawn(artifacts_dir().join("simstep_8x32x32.hlo.txt")).unwrap(),
