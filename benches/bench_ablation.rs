@@ -89,7 +89,11 @@ fn main() {
         let (runtime, _) = quiet_run(512, cost, job);
         println!(
             "{:<14} {:>11.0}s {:>18}",
-            if interleave == u32::MAX { "∞ (no cleanup pri)".to_string() } else { interleave.to_string() },
+            if interleave == u32::MAX {
+                "∞ (no cleanup pri)".to_string()
+            } else {
+                interleave.to_string()
+            },
             runtime,
             if runtime > 1000.0 { "yes" } else { "no" }
         );

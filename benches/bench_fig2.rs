@@ -62,5 +62,7 @@ fn main() {
         .iter()
         .filter(|r| r.cell.mode == llsched::config::Mode::NodeBased)
         .count();
-    println!("N* runs filling the machine in <30s: {n_fast_fill}/{n_total} (paper: 'almost instantly')");
+    println!(
+        "N* runs filling the machine in <30s: {n_fast_fill}/{n_total} (paper: 'almost instantly')"
+    );
 }

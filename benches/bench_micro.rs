@@ -39,7 +39,8 @@ fn main() {
     section("scheduler DES throughput (512-node M* cell, the heaviest)");
     let cell = PaperCell::new(512, TASK_CONFIGS[3], Mode::MultiLevel, 0);
     let mut events = 0u64;
-    let r = bench("run_cell 512n/60s/M*", BenchOpts { warmup: 0, iters: 3, max_wall: Duration::from_secs(60) }, |_| {
+    let heavy_opts = BenchOpts { warmup: 0, iters: 3, max_wall: Duration::from_secs(60) };
+    let r = bench("run_cell 512n/60s/M*", heavy_opts, |_| {
         let res = run_cell(&cell).expect("runs");
         events = res.events;
         res.runtime
@@ -105,13 +106,15 @@ fn main() {
             let rt =
                 llsched::runtime::Runtime::load(&dir.join("simstep_8x32x32.hlo.txt")).unwrap();
             let state = vec![0.5f32; rt.artifact.elements()];
-            let r = bench("simstep_8x32x32 step (4 scan iters)", BenchOpts { warmup: 3, iters: 20, max_wall: Duration::from_secs(20) }, |_| {
+            let rt_opts = BenchOpts { warmup: 3, iters: 20, max_wall: Duration::from_secs(20) };
+            let r = bench("simstep_8x32x32 step (4 scan iters)", rt_opts, |_| {
                 black_box(rt.step(&state).unwrap().1)
             });
             println!("{}", r.line());
-            let rt = llsched::runtime::Runtime::load(&dir.join("simstep_1x128x128.hlo.txt")).unwrap();
+            let rt = llsched::runtime::Runtime::load(&dir.join("simstep_1x128x128.hlo.txt"))
+                .unwrap();
             let state = vec![0.5f32; rt.artifact.elements()];
-            let r = bench("simstep_1x128x128 step (4 scan iters)", BenchOpts { warmup: 3, iters: 20, max_wall: Duration::from_secs(20) }, |_| {
+            let r = bench("simstep_1x128x128 step (4 scan iters)", rt_opts, |_| {
                 black_box(rt.step(&state).unwrap().1)
             });
             println!("{}", r.line());

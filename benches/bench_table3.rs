@@ -22,7 +22,8 @@ fn main() {
         for task in &TASK_CONFIGS {
             for mode in [Mode::MultiLevel, Mode::NodeBased] {
                 if is_paper_na(nodes, task, mode) {
-                    println!("{:<16} {:>10}", format!("{}n/{}s/{}", nodes, task.task_time, mode.short()), "N/A");
+                    let label = format!("{}n/{}s/{}", nodes, task.task_time, mode.short());
+                    println!("{:<16} {:>10}", label, "N/A");
                     continue;
                 }
                 let cell = PaperCell::new(nodes, *task, mode, 0);

@@ -27,8 +27,10 @@ fn main() -> llsched::Result<()> {
     .unwrap_or_default();
     let tasks: u64 = args.opt_parse("tasks", 32)?;
     let iters: usize = args.opt_parse("iters", 2)?;
-    let lanes: u32 = args
-        .opt_parse("lanes", std::thread::available_parallelism().map(|n| n.get() as u32).unwrap_or(2))?;
+    let default_lanes = std::thread::available_parallelism()
+        .map(|n| n.get() as u32)
+        .unwrap_or(2);
+    let lanes: u32 = args.opt_parse("lanes", default_lanes)?;
 
     let dir = llsched::runtime::find_artifacts_dir().ok_or_else(|| {
         llsched::Error::Runtime("artifacts/ not found — run `make artifacts`".into())

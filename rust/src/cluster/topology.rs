@@ -34,6 +34,24 @@ impl Cluster {
         Cluster::homogeneous(n_nodes, 64, 192 * 1024)
     }
 
+    /// Heterogeneous cluster from `(count, cores, mem_mib)` groups, ids
+    /// assigned densely in group order. The placement index keys its
+    /// idle pool by per-node capacity, so mixed node sizes are fully
+    /// supported on the indexed dispatch path.
+    pub fn heterogeneous(groups: &[(u32, u32, u64)]) -> Cluster {
+        let mut nodes = Vec::new();
+        for &(count, cores, mem_mib) in groups {
+            for _ in 0..count {
+                let id = nodes.len() as NodeId;
+                nodes.push(Node::new(id, cores, mem_mib));
+            }
+        }
+        Cluster {
+            nodes,
+            reservations: Vec::new(),
+        }
+    }
+
     pub fn n_nodes(&self) -> u32 {
         self.nodes.len() as u32
     }
@@ -219,6 +237,18 @@ mod tests {
         assert_eq!(c.n_nodes(), 32);
         assert_eq!(c.total_cores(), 32 * 64);
         assert_eq!(c.busy_cores(), 0);
+    }
+
+    #[test]
+    fn heterogeneous_shape() {
+        let c = Cluster::heterogeneous(&[(2, 64, 1024), (3, 16, 512)]);
+        assert_eq!(c.n_nodes(), 5);
+        assert_eq!(c.total_cores(), 2 * 64 + 3 * 16);
+        assert_eq!(c.node(0).unwrap().cores, 64);
+        assert_eq!(c.node(4).unwrap().cores, 16);
+        // Ids are dense and in group order.
+        let ids: Vec<u32> = c.nodes().map(|n| n.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4]);
     }
 
     #[test]

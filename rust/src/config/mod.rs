@@ -77,6 +77,10 @@ pub struct RunConfig {
     /// `None` defers to the aggregation mode's default
     /// ([`crate::aggregation::plan::Aggregator::default_strategy`]).
     pub placement: Option<Strategy>,
+    /// Enable backfill scheduling (`backfill = true`): blocked
+    /// whole-node heads hold earliest-start reservations while small
+    /// core-level tasks fill gaps ([`crate::placement::backfill`]).
+    pub backfill: bool,
 }
 
 impl Default for RunConfig {
@@ -91,6 +95,7 @@ impl Default for RunConfig {
             dedicated: false,
             task_mem_mib: 512,
             placement: None,
+            backfill: false,
         }
     }
 }
@@ -158,6 +163,9 @@ impl RunConfig {
         }
         if let Some(v) = run.get("placement") {
             c.placement = Some(Strategy::parse(v.as_str()?)?);
+        }
+        if let Some(v) = run.get("backfill") {
+            c.backfill = v.as_bool()?;
         }
         c.validate()?;
         Ok(c)
@@ -230,6 +238,16 @@ mod tests {
         // Defaults preserved.
         assert_eq!(c.cores_per_node, 64);
         assert_eq!(c.placement, None);
+        assert!(!c.backfill);
+    }
+
+    #[test]
+    fn backfill_key_parses() {
+        let v = parser::parse("[run]\nbackfill = true\n").unwrap();
+        let c = RunConfig::from_value(&v).unwrap();
+        assert!(c.backfill);
+        let bad = parser::parse("[run]\nbackfill = \"yes\"\n").unwrap();
+        assert!(RunConfig::from_value(&bad).is_err());
     }
 
     #[test]

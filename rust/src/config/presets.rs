@@ -1,9 +1,10 @@
 //! Paper benchmark presets: Table I task configurations and Table II
-//! cluster configurations, plus the full Table III run matrix and
-//! placement-policy sweeps.
+//! cluster configurations, plus the full Table III run matrix,
+//! placement-policy sweeps, and interactive-vs-batch contention sweeps.
 
 use crate::config::{Mode, RunConfig};
 use crate::placement::ALL_STRATEGIES;
+use crate::workload::contention::ContentionMix;
 
 /// A Table I column: a named task-time configuration.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -60,7 +61,47 @@ pub fn cell(nodes: u32, task: &TaskConfig, mode: Mode, run_idx: usize) -> RunCon
         // Per-mode default (node-based fast path for N*, first-fit for
         // the core-level modes); sweeps override it explicitly.
         placement: None,
+        // The paper's single-job matrix has no contention to backfill
+        // around; contention runs opt in explicitly.
+        backfill: false,
     }
+}
+
+/// One entry of the contention sweep: a mix plus a backfill setting.
+#[derive(Debug, Clone)]
+pub struct ContentionCell {
+    pub mix: ContentionMix,
+    pub backfill: bool,
+}
+
+impl ContentionCell {
+    /// Human label like `default/32n/backfill`.
+    pub fn label(&self) -> String {
+        format!(
+            "{}/{}n/{}",
+            self.mix.name,
+            self.mix.nodes,
+            if self.backfill { "backfill" } else { "no-backfill" }
+        )
+    }
+}
+
+/// The interactive-vs-batch contention sweep at one cluster size:
+/// every named mix, with backfill off and on, so the `contention`
+/// CLI subcommand (and CI) can compare per-class launch latency and
+/// utilization across the policy flip.
+pub fn contention_sweep(nodes: u32) -> Vec<ContentionCell> {
+    let mut out = Vec::new();
+    for name in ["tiny", "default", "heavy"] {
+        let mix = ContentionMix::preset(name, nodes).expect("known preset name");
+        for backfill in [false, true] {
+            out.push(ContentionCell {
+                mix: mix.clone(),
+                backfill,
+            });
+        }
+    }
+    out
 }
 
 /// One cell replicated across every placement strategy — the
@@ -157,6 +198,19 @@ mod tests {
         }
         // Everything else matches the base cell.
         assert!(sweep.iter().all(|c| c.nodes == 32 && c.mode == Mode::MultiLevel));
+    }
+
+    #[test]
+    fn contention_sweep_pairs_mixes_with_backfill_flip() {
+        let sweep = contention_sweep(16);
+        assert_eq!(sweep.len(), 6, "3 mixes × backfill off/on");
+        for pair in sweep.chunks(2) {
+            assert_eq!(pair[0].mix.name, pair[1].mix.name);
+            assert!(!pair[0].backfill && pair[1].backfill);
+            assert_eq!(pair[0].mix.nodes, 16);
+        }
+        assert_eq!(sweep[0].label(), "tiny/16n/no-backfill");
+        assert_eq!(sweep[1].label(), "tiny/16n/backfill");
     }
 
     #[test]

@@ -6,12 +6,15 @@ use crate::cluster::Cluster;
 use crate::config::presets::{self, NODE_SCALES, RUNS_PER_CELL, TASK_CONFIGS};
 use crate::config::Mode;
 use crate::error::{Error, Result};
+use crate::metrics::contention::{per_class, ClassReport};
 use crate::metrics::overhead::OverheadPoint;
 use crate::metrics::timeline::UtilizationSeries;
 use crate::placement::Strategy;
 use crate::scheduler::core::{SchedulerSim, SimOutcome};
 use crate::scheduler::costmodel::CostModel;
 use crate::scheduler::noise::NoiseModel;
+use crate::sim::EventQueue;
+use crate::workload::contention::{ContentionMix, JobClass};
 use crate::workload::paper::PaperCell;
 
 /// Result of one benchmark run (one cell, one repetition).
@@ -76,7 +79,8 @@ pub fn run_cell(cell: &PaperCell) -> Result<CellResult> {
     };
     let placement = cfg.placement_strategy();
     let sim = SchedulerSim::new(cluster, CostModel::slurm_like_tx_green(), noise, cfg.seed)
-        .with_placement(placement);
+        .with_placement(placement)
+        .with_backfill(cfg.backfill);
     let agg = aggregation::for_mode(cfg.mode);
     let job = agg.plan(&cell.label(), &cell.workload(), &cell.shape())?;
     let (outcome, job_id) = sim.run_single(job);
@@ -129,6 +133,101 @@ pub fn run_placement_sweep(
             Ok((strategy, run_cell(&cell)?))
         })
         .collect()
+}
+
+/// Result of one interactive-vs-batch contention run.
+#[derive(Debug)]
+pub struct ContentionResult {
+    pub mix_name: String,
+    pub nodes: u32,
+    pub backfill: bool,
+    /// Per-class launch latency / utilization ([`JobClass`] order:
+    /// interactive, batch).
+    pub reports: Vec<ClassReport>,
+    /// First submit → last cleanup, seconds.
+    pub span: f64,
+    /// Whole-cluster utilization over the span, in `[0, 1]`.
+    pub utilization: f64,
+    /// Backfill dispatches performed.
+    pub backfills: usize,
+    /// Every backfill placed on a held node vacated it by the hold's
+    /// planned start (the no-delay invariant, checked from records).
+    pub holds_respected: bool,
+    /// Tasks that never finished (should be 0 — arrivals are finite).
+    pub unfinished: usize,
+}
+
+/// Run one contention mix end-to-end: submit the generated interactive
+/// and batch streams, drain the scheduler, and split launch latency and
+/// utilization by class. `backfill` flips the reservation + backfill
+/// machinery; placement uses the node-based fast path (the mix contains
+/// whole-node jobs by construction).
+pub fn run_contention(
+    mix: &ContentionMix,
+    backfill: bool,
+    seed: u64,
+) -> Result<ContentionResult> {
+    let cluster = Cluster::tx_green(mix.nodes);
+    let total_cores = cluster.total_cores();
+    let mut sim = SchedulerSim::new(
+        cluster,
+        CostModel::slurm_like_tx_green(),
+        NoiseModel::dedicated(),
+        seed,
+    )
+    .with_placement(Strategy::NodeBased)
+    .with_backfill(backfill);
+    let mut q = EventQueue::new();
+    let subs = mix.generate(seed);
+    if subs.is_empty() {
+        return Err(Error::Infeasible(format!(
+            "contention mix {:?} generated no submissions",
+            mix.name
+        )));
+    }
+    let mut classes: Vec<JobClass> = Vec::with_capacity(subs.len());
+    for sub in subs {
+        classes.push(sub.class);
+        let id = sim.submit_at(&mut q, sub.at, sub.spec);
+        debug_assert_eq!(id as usize, classes.len() - 1, "job ids are dense");
+    }
+    let outcome = sim.run(&mut q);
+    let (reports, span) = per_class(&outcome.records, &classes, total_cores);
+    let utilization: f64 = reports.iter().map(|r| r.utilization).sum();
+    // Backfill admission uses the *declared* duration (a walltime
+    // estimate); the task model adds half-normal jitter (σ = 0.4 s) on
+    // top, modelling estimate error. Tolerate its tail here — the
+    // strict zero-jitter invariant is pinned by the property tests in
+    // `rust/tests/backfill_properties.rs`.
+    let jitter_slack = 5.0;
+    let holds_respected = outcome.backfills.iter().all(|b| {
+        let Some(h) = b.hold else {
+            return true;
+        };
+        if b.node != h.node {
+            return true;
+        }
+        outcome.records[b.task as usize]
+            .end_t
+            .map(|end| end <= h.start + jitter_slack)
+            .unwrap_or(false)
+    });
+    let unfinished = outcome
+        .records
+        .iter()
+        .filter(|r| r.cleanup_t.is_none())
+        .count();
+    Ok(ContentionResult {
+        mix_name: mix.name.clone(),
+        nodes: mix.nodes,
+        backfill,
+        reports,
+        span,
+        utilization,
+        backfills: outcome.backfills.len(),
+        holds_respected,
+        unfinished,
+    })
 }
 
 /// Run the full (or truncated) Table III matrix. Returns the per-cell
@@ -301,6 +400,41 @@ mod tests {
             // bound: production noise can land a large burst mid-run).
             assert!(res.runtime > 240.0 && res.runtime < 700.0, "{strategy}: {}", res.runtime);
         }
+    }
+
+    #[test]
+    fn contention_tiny_runs_end_to_end() {
+        let mix = ContentionMix::preset("tiny", 8).unwrap();
+        let res = run_contention(&mix, true, 11).unwrap();
+        assert_eq!(res.unfinished, 0, "all tasks drain");
+        assert!(res.holds_respected, "no backfill delays a reservation");
+        assert_eq!(res.reports.len(), 2);
+        let inter = &res.reports[0];
+        let batch = &res.reports[1];
+        assert_eq!(inter.class, JobClass::Interactive);
+        assert_eq!(batch.class, JobClass::Batch);
+        assert!(inter.tasks > 0 && batch.tasks > 0);
+        assert_eq!(inter.completed, inter.tasks);
+        assert_eq!(batch.completed, batch.tasks);
+        assert!(res.span > 0.0);
+        assert!(res.utilization > 0.0 && res.utilization <= 1.0);
+        // Interactive launches must stay fast in the tiny mix.
+        assert!(
+            inter.median_launch_latency < 30.0,
+            "interactive median {}",
+            inter.median_launch_latency
+        );
+    }
+
+    #[test]
+    fn contention_backfill_flag_round_trips() {
+        let mix = ContentionMix::preset("tiny", 4).unwrap();
+        let off = run_contention(&mix, false, 3).unwrap();
+        let on = run_contention(&mix, true, 3).unwrap();
+        assert!(!off.backfill && on.backfill);
+        assert_eq!(off.backfills, 0, "no backfill ops when disabled");
+        assert_eq!(off.unfinished, 0);
+        assert_eq!(on.unfinished, 0);
     }
 
     #[test]

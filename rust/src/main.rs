@@ -15,7 +15,8 @@
 
 use llsched::coordinator::cli::Args;
 use llsched::coordinator::experiment::{
-    fig2_label, median_runs, run_matrix, run_placement_sweep, ExperimentOpts,
+    fig2_label, median_runs, run_contention, run_matrix, run_placement_sweep, ContentionResult,
+    ExperimentOpts,
 };
 use llsched::config::{Mode, RunConfig};
 use llsched::error::Result;
@@ -23,6 +24,7 @@ use llsched::metrics::overhead::speedup;
 use llsched::metrics::report;
 use llsched::placement::Strategy;
 use llsched::util::fmt::dur;
+use llsched::workload::contention::ContentionMix;
 use std::path::PathBuf;
 
 fn main() {
@@ -65,6 +67,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "speedup" => cmd_speedup(args),
         "run" => cmd_run(args),
         "placement" => cmd_placement(args),
+        "contention" => cmd_contention(args),
         "spot" => cmd_spot(args),
         "artifacts" => cmd_artifacts(args),
         other => {
@@ -90,6 +93,12 @@ commands:
                             first-fit|best-fit|spread|random|node-based
   placement [--nodes N] [--mode M] [--task-time T]
                             compare all placement policies on one cell
+  contention [--preset P] [--nodes N] [--seed S] [--no-backfill]
+             [--compare] [--sweep]
+                            run an interactive-vs-batch contention mix
+                            (P: tiny|default|heavy) and report per-class
+                            launch latency + utilization; --compare runs
+                            backfill off vs on; --sweep runs every mix
   spot [--nodes N]          spot-job release-latency comparison
   artifacts                 verify AOT artifacts load and execute
 ";
@@ -127,7 +136,11 @@ fn cmd_table3(args: &Args) -> Result<()> {
     let dir = out_dir(args);
     std::fs::create_dir_all(&dir)?;
     std::fs::write(dir.join("table3.json"), report::results_json(&points).to_pretty())?;
-    println!("(matrix wall time {:.1}s; JSON in {:?})", t0.elapsed().as_secs_f64(), dir.join("table3.json"));
+    println!(
+        "(matrix wall time {:.1}s; JSON in {:?})",
+        t0.elapsed().as_secs_f64(),
+        dir.join("table3.json")
+    );
     Ok(())
 }
 
@@ -276,6 +289,88 @@ fn cmd_placement(args: &Args) -> Result<()> {
     }
     println!("{}", table.render());
     Ok(())
+}
+
+fn cmd_contention(args: &Args) -> Result<()> {
+    args.expect_known(&["preset", "nodes", "seed", "no-backfill", "compare", "sweep"])?;
+    let nodes: u32 = args.opt_parse("nodes", 32)?;
+    let seed: u64 = args.opt_parse("seed", 7)?;
+    if args.flag("sweep") {
+        println!("contention sweep: {nodes} nodes, seed {seed}\n");
+        let mut table = llsched::util::fmt::Table::new(vec![
+            "scenario",
+            "class",
+            "jobs",
+            "median lat",
+            "p95 lat",
+            "util",
+        ]);
+        for cell in llsched::config::presets::contention_sweep(nodes) {
+            let res = run_contention(&cell.mix, cell.backfill, seed)?;
+            for r in &res.reports {
+                table.row(vec![
+                    cell.label(),
+                    r.class.to_string(),
+                    r.jobs.to_string(),
+                    dur(r.median_launch_latency),
+                    dur(r.p95_launch_latency),
+                    format!("{:.1}%", r.utilization * 100.0),
+                ]);
+            }
+        }
+        println!("{}", table.render());
+        return Ok(());
+    }
+    let preset = args.opt("preset").unwrap_or("default");
+    let mix = ContentionMix::preset(preset, nodes)?;
+    let modes: Vec<bool> = if args.flag("compare") {
+        vec![false, true]
+    } else {
+        vec![!args.flag("no-backfill")]
+    };
+    for backfill in modes {
+        let res = run_contention(&mix, backfill, seed)?;
+        print_contention(&res);
+    }
+    Ok(())
+}
+
+fn print_contention(res: &ContentionResult) {
+    println!(
+        "contention {}: {} nodes, backfill {}",
+        res.mix_name,
+        res.nodes,
+        if res.backfill { "on" } else { "off" },
+    );
+    let mut table = llsched::util::fmt::Table::new(vec![
+        "class",
+        "jobs",
+        "tasks",
+        "median lat",
+        "p95 lat",
+        "core-seconds",
+        "util",
+    ]);
+    for r in &res.reports {
+        table.row(vec![
+            r.class.to_string(),
+            r.jobs.to_string(),
+            r.tasks.to_string(),
+            dur(r.median_launch_latency),
+            dur(r.p95_launch_latency),
+            format!("{:.0}", r.core_seconds),
+            format!("{:.1}%", r.utilization * 100.0),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "  span {}  cluster util {:.1}%  backfills {}  holds respected {}  unfinished {}\n",
+        dur(res.span),
+        res.utilization * 100.0,
+        res.backfills,
+        res.holds_respected,
+        res.unfinished,
+    );
 }
 
 fn cmd_spot(args: &Args) -> Result<()> {

@@ -1,0 +1,165 @@
+//! Per-class contention metrics: launch latency and utilization split
+//! by job class (interactive vs batch).
+//!
+//! The paper's pitch is "interactive jobs launch fast while batch keeps
+//! the machine utilized"; these metrics make both halves measurable for
+//! one contention run. Launch latency is the scheduler-log convention
+//! (task start − job submit); utilization is delivered core-seconds as
+//! a share of cluster capacity over the run's span.
+
+use crate::scheduler::accounting::TaskRecord;
+use crate::sim::Time;
+use crate::util::stats;
+use crate::workload::contention::{JobClass, JOB_CLASSES};
+
+/// Per-class summary of one contention run.
+#[derive(Debug, Clone)]
+pub struct ClassReport {
+    pub class: JobClass,
+    /// Jobs submitted in this class.
+    pub jobs: usize,
+    /// Scheduling tasks across those jobs.
+    pub tasks: usize,
+    /// Tasks that finished (reached DONE).
+    pub completed: usize,
+    /// Median of task start − job submit, seconds.
+    pub median_launch_latency: Time,
+    /// 95th percentile launch latency, seconds.
+    pub p95_launch_latency: Time,
+    /// Delivered core-seconds by this class.
+    pub core_seconds: f64,
+    /// Share of cluster capacity over the run span, in `[0, 1]`.
+    pub utilization: f64,
+}
+
+/// Compute per-class reports. `classes[job]` maps dense job ids to
+/// their class; `total_cores` is cluster capacity. Returns the reports
+/// (one per class, [`JOB_CLASSES`] order) and the run span used for
+/// utilization (first submit → last cleanup).
+pub fn per_class(
+    records: &[TaskRecord],
+    classes: &[JobClass],
+    total_cores: u64,
+) -> (Vec<ClassReport>, Time) {
+    let mut first_submit = f64::INFINITY;
+    let mut last_cleanup: f64 = 0.0;
+    for r in records {
+        first_submit = first_submit.min(r.submit_t);
+        if let Some(c) = r.cleanup_t {
+            last_cleanup = last_cleanup.max(c);
+        }
+    }
+    let span = if first_submit.is_finite() && last_cleanup > first_submit {
+        last_cleanup - first_submit
+    } else {
+        0.0
+    };
+    let capacity = total_cores as f64 * span;
+    let reports = JOB_CLASSES
+        .iter()
+        .map(|&class| {
+            let mut latencies = Vec::new();
+            let mut core_seconds = 0.0;
+            let mut tasks = 0usize;
+            let mut completed = 0usize;
+            for r in records {
+                if classes.get(r.job as usize).copied() != Some(class) {
+                    continue;
+                }
+                tasks += 1;
+                if let Some(start) = r.start_t {
+                    latencies.push(start - r.submit_t);
+                    if let Some(end) = r.end_t {
+                        core_seconds += r.cores as f64 * (end - start).max(0.0);
+                    }
+                }
+                if r.cleanup_t.is_some() {
+                    completed += 1;
+                }
+            }
+            let jobs = classes.iter().filter(|&&c| c == class).count();
+            ClassReport {
+                class,
+                jobs,
+                tasks,
+                completed,
+                median_launch_latency: stats::median(&latencies),
+                p95_launch_latency: stats::percentile(&latencies, 95.0),
+                core_seconds,
+                utilization: if capacity > 0.0 {
+                    core_seconds / capacity
+                } else {
+                    0.0
+                },
+            }
+        })
+        .collect();
+    (reports, span)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::job::TaskState;
+
+    fn rec(job: u64, submit: f64, start: f64, end: f64, cores: u32) -> TaskRecord {
+        TaskRecord {
+            task: 0,
+            job,
+            state: TaskState::Done,
+            submit_t: submit,
+            start_t: Some(start),
+            end_t: Some(end),
+            cleanup_t: Some(end + 1.0),
+            cores,
+        }
+    }
+
+    #[test]
+    fn latency_and_utilization_split_by_class() {
+        // Job 0 interactive (2 tasks), job 1 batch (1 task).
+        let classes = vec![JobClass::Interactive, JobClass::Batch];
+        let records = vec![
+            rec(0, 0.0, 1.0, 11.0, 2),  // latency 1, 20 core-s
+            rec(0, 0.0, 3.0, 13.0, 2),  // latency 3, 20 core-s
+            rec(1, 0.0, 10.0, 110.0, 64), // latency 10, 6400 core-s
+        ];
+        let (reports, span) = per_class(&records, &classes, 128);
+        assert_eq!(span, 111.0, "first submit 0 → last cleanup 111");
+        let inter = &reports[0];
+        assert_eq!(inter.class, JobClass::Interactive);
+        assert_eq!(inter.jobs, 1);
+        assert_eq!(inter.tasks, 2);
+        assert_eq!(inter.completed, 2);
+        assert!((inter.median_launch_latency - 2.0).abs() < 1e-9);
+        assert!((inter.core_seconds - 40.0).abs() < 1e-9);
+        let batch = &reports[1];
+        assert_eq!(batch.tasks, 1);
+        assert!((batch.median_launch_latency - 10.0).abs() < 1e-9);
+        assert!((batch.utilization - 6400.0 / (128.0 * 111.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unstarted_tasks_count_but_do_not_skew_latency() {
+        let classes = vec![JobClass::Batch];
+        let mut unfinished = rec(0, 5.0, 0.0, 0.0, 0);
+        unfinished.start_t = None;
+        unfinished.end_t = None;
+        unfinished.cleanup_t = None;
+        let records = vec![rec(0, 5.0, 8.0, 18.0, 4), unfinished];
+        let (reports, _) = per_class(&records, &classes, 64);
+        let batch = &reports[1];
+        assert_eq!(batch.tasks, 2);
+        assert_eq!(batch.completed, 1);
+        assert!((batch.median_launch_latency - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_records_are_safe() {
+        let (reports, span) = per_class(&[], &[], 64);
+        assert_eq!(span, 0.0);
+        assert_eq!(reports.len(), 2);
+        assert!(reports[0].median_launch_latency.is_nan());
+        assert_eq!(reports[0].utilization, 0.0);
+    }
+}

@@ -1,9 +1,12 @@
 //! Metrics: utilization timelines (Fig 2), overhead analysis (Fig 1),
-//! and paper-style report rendering (Tables I–III).
+//! per-class contention metrics (launch latency / utilization by job
+//! class), and paper-style report rendering (Tables I–III).
 
+pub mod contention;
 pub mod overhead;
 pub mod report;
 pub mod timeline;
 
+pub use contention::{per_class, ClassReport};
 pub use overhead::{norm_overhead, speedup, OverheadPoint};
 pub use timeline::UtilizationSeries;

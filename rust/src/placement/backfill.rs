@@ -1,0 +1,244 @@
+//! Backfill reservations over the free-capacity index.
+//!
+//! The paper's motivating tension (and the "Best of Both Worlds" line
+//! of work, arXiv:2008.02223) is interactive-vs-batch contention: large
+//! whole-node jobs must not starve behind a stream of small core-level
+//! jobs, and small jobs must not wait behind a blocked whole-node head.
+//! The classic answer is EASY-style backfill: give the blocked
+//! whole-node job an *earliest-start reservation* (a hold on the node
+//! expected to free soonest), and let small jobs jump the queue only
+//! when they provably vacate before the hold starts.
+//!
+//! [`ReservationLedger`] is the bookkeeping half of that policy. It
+//! tracks, per node, the latest expected completion time among running
+//! tasks (expected ends are exact in the DES: occupancy is known at
+//! placement time), plans a hold for a blocked whole-node task by
+//! picking the node with the earliest expected free time from the
+//! [`FreeIndex`] partition, and answers the admission question "may a
+//! task expected to end at `t` run on node `n`?". The scheduler's
+//! dispatch loop ([`crate::scheduler::server`]) consults it both for
+//! backfill candidates and for normal core-level placements while a
+//! hold is active, so no later job — backfilled or not — can delay the
+//! reservation's start.
+
+use crate::cluster::{Cluster, NodeId, NodeState};
+use crate::placement::free_index::FreeIndex;
+use crate::scheduler::job::TaskId;
+use crate::sim::Time;
+
+/// Slack added to hold starts when admitting work onto the held node:
+/// a task may end exactly at the hold start (the hold task dispatches
+/// after the freeing cleanup anyway), so exact ties are admissible.
+const TIE_EPS: Time = 1e-9;
+
+/// An earliest-start reservation for one blocked whole-node task.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Hold {
+    /// The whole-node scheduling task the hold protects.
+    pub task: TaskId,
+    /// The node expected to free soonest when the hold was planned.
+    pub node: NodeId,
+    /// Expected start time: when `node`'s last running task ends.
+    pub start: Time,
+}
+
+/// Per-node expected-completion bookkeeping plus the active hold.
+///
+/// One hold at a time (EASY backfill reserves for the queue head only);
+/// holds for deeper queue entries would shrink backfill opportunity
+/// without improving the starvation bound the property tests pin down.
+#[derive(Debug, Clone)]
+pub struct ReservationLedger {
+    /// Node → latest expected occupancy end among running tasks.
+    expected_end: Vec<Time>,
+    /// Node → number of running tasks (resets `expected_end` at zero).
+    running: Vec<u32>,
+    hold: Option<Hold>,
+}
+
+impl ReservationLedger {
+    /// Ledger over `n_nodes` nodes, all initially idle.
+    pub fn new(n_nodes: usize) -> ReservationLedger {
+        ReservationLedger {
+            expected_end: vec![0.0; n_nodes],
+            running: vec![0; n_nodes],
+            hold: None,
+        }
+    }
+
+    /// A task was placed on `node` with known occupancy end.
+    pub fn note_start(&mut self, node: NodeId, expected_end: Time) {
+        let i = node as usize;
+        self.running[i] += 1;
+        if expected_end > self.expected_end[i] {
+            self.expected_end[i] = expected_end;
+        }
+    }
+
+    /// A task's resources on `node` were released (cleanup finished).
+    pub fn note_release(&mut self, node: NodeId) {
+        let i = node as usize;
+        self.running[i] = self.running[i].saturating_sub(1);
+        if self.running[i] == 0 {
+            self.expected_end[i] = 0.0;
+        }
+    }
+
+    /// Expected time `node` frees relative to `now` (now if idle).
+    pub fn expected_free(&self, node: NodeId, now: Time) -> Time {
+        self.expected_end[node as usize].max(now)
+    }
+
+    /// The active hold, if any.
+    pub fn hold(&self) -> Option<Hold> {
+        self.hold
+    }
+
+    /// The active hold if it belongs to `task`.
+    pub fn hold_for(&self, task: TaskId) -> Option<Hold> {
+        self.hold.filter(|h| h.task == task)
+    }
+
+    /// Plan a hold for a blocked whole-node task: the `Up` node of the
+    /// partition with the earliest expected free time (lowest id on
+    /// ties). O(partition) — runs on head-of-line block, not dispatch.
+    pub fn plan_whole_node(
+        &self,
+        index: &FreeIndex,
+        cluster: &Cluster,
+        part: u32,
+        now: Time,
+    ) -> Option<(NodeId, Time)> {
+        let mut best: Option<(NodeId, Time)> = None;
+        for id in index.partition_nodes(part) {
+            let up = cluster
+                .node(id)
+                .map(|n| n.state() == NodeState::Up)
+                .unwrap_or(false);
+            if !up {
+                continue;
+            }
+            let free_at = self.expected_free(id, now);
+            let better = match best {
+                None => true,
+                Some((_, t)) => free_at < t,
+            };
+            if better {
+                best = Some((id, free_at));
+            }
+        }
+        best
+    }
+
+    /// Install (or refresh) the hold for `task`. Refused while a
+    /// different task's hold is active — one reservation at a time.
+    pub fn set_hold(&mut self, task: TaskId, node: NodeId, start: Time) -> bool {
+        match self.hold {
+            Some(h) if h.task != task => false,
+            _ => {
+                self.hold = Some(Hold { task, node, start });
+                true
+            }
+        }
+    }
+
+    /// Drop the hold if it belongs to `task` (placement succeeded or
+    /// the task was cancelled/preempted).
+    pub fn clear_hold(&mut self, task: TaskId) {
+        if self.hold.map(|h| h.task == task).unwrap_or(false) {
+            self.hold = None;
+        }
+    }
+
+    /// May a task expected to end at `est_end` be placed on `node`
+    /// without delaying the active hold? Non-held nodes are always
+    /// admissible (their occupancy cannot move the held node's free
+    /// time); the held node admits only tasks that vacate first.
+    pub fn allows_backfill(&self, node: NodeId, est_end: Time) -> bool {
+        match self.hold {
+            None => true,
+            Some(h) => h.node != node || est_end <= h.start + TIE_EPS,
+        }
+    }
+
+    /// May a whole-node task other than the hold's own take `node`?
+    /// While a hold is active, the held node is fenced off for it.
+    pub fn allows_whole_node(&self, node: NodeId, task: TaskId) -> bool {
+        match self.hold {
+            None => true,
+            Some(h) => h.task == task || h.node != node,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+
+    #[test]
+    fn start_release_tracks_expected_ends() {
+        let mut l = ReservationLedger::new(3);
+        l.note_start(1, 50.0);
+        l.note_start(1, 30.0);
+        assert_eq!(l.expected_free(1, 10.0), 50.0);
+        assert_eq!(l.expected_free(0, 10.0), 10.0, "idle node frees now");
+        l.note_release(1);
+        assert_eq!(l.expected_free(1, 10.0), 50.0, "one task still running");
+        l.note_release(1);
+        assert_eq!(l.expected_free(1, 10.0), 10.0, "empty node resets");
+    }
+
+    #[test]
+    fn plan_picks_earliest_freeing_node() {
+        let c = Cluster::tx_green(3);
+        let idx = FreeIndex::build(&c);
+        let mut l = ReservationLedger::new(3);
+        l.note_start(0, 100.0);
+        l.note_start(1, 40.0);
+        l.note_start(2, 70.0);
+        assert_eq!(l.plan_whole_node(&idx, &c, 0, 5.0), Some((1, 40.0)));
+        // An already-idle node frees "now" and wins.
+        l.note_release(1);
+        assert_eq!(l.plan_whole_node(&idx, &c, 0, 5.0), Some((1, 5.0)));
+    }
+
+    #[test]
+    fn plan_skips_down_nodes() {
+        let mut c = Cluster::tx_green(2);
+        let mut idx = FreeIndex::build(&c);
+        c.node_mut(0).unwrap().set_state(NodeState::Down);
+        idx.on_state_change(0, NodeState::Down);
+        let l = ReservationLedger::new(2);
+        assert_eq!(l.plan_whole_node(&idx, &c, 0, 0.0), Some((1, 0.0)));
+    }
+
+    #[test]
+    fn single_hold_discipline() {
+        let mut l = ReservationLedger::new(2);
+        assert!(l.set_hold(7, 0, 100.0));
+        assert!(!l.set_hold(8, 1, 50.0), "second hold refused");
+        assert!(l.set_hold(7, 1, 90.0), "own hold refreshes");
+        assert_eq!(l.hold_for(7).unwrap().start, 90.0);
+        assert!(l.hold_for(8).is_none());
+        l.clear_hold(8);
+        assert!(l.hold().is_some(), "other task cannot clear");
+        l.clear_hold(7);
+        assert!(l.hold().is_none());
+        assert!(l.set_hold(8, 1, 50.0), "free again");
+    }
+
+    #[test]
+    fn backfill_admission_rules() {
+        let mut l = ReservationLedger::new(3);
+        assert!(l.allows_backfill(0, 1e12), "no hold: anything goes");
+        l.set_hold(1, 2, 100.0);
+        assert!(l.allows_backfill(0, 1e12), "non-held node unrestricted");
+        assert!(l.allows_backfill(2, 99.0), "vacates before the hold");
+        assert!(l.allows_backfill(2, 100.0), "exact tie admissible");
+        assert!(!l.allows_backfill(2, 101.0), "would delay the hold");
+        assert!(l.allows_whole_node(2, 1), "hold task may take its node");
+        assert!(!l.allows_whole_node(2, 9), "others may not");
+        assert!(l.allows_whole_node(0, 9));
+    }
+}

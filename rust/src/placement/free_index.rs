@@ -6,10 +6,14 @@
 //! without scanning the node table. It keeps, per reservation
 //! partition, one `BTreeSet<NodeId>` bucket per free-core count; a node
 //! always sits in exactly one bucket (its current free-core count), and
-//! moves between buckets on every allocate/release delta. Idle nodes
-//! are exactly the full bucket (free == cores) of a homogeneous
-//! partition, so whole-node queries are an O(log n) set lookup and fit
-//! queries walk at most `cores_per_node` buckets instead of every node.
+//! moves between buckets on every allocate/release delta. Alongside the
+//! buckets each partition keeps an explicit *idle pool*: the set of
+//! nodes whose free count equals their own capacity. On a homogeneous
+//! cluster that is the full bucket, but tracking it per node makes the
+//! whole-node queries correct on mixed node sizes too (a wholly idle
+//! 32-core node is idle even when the largest node has 64 cores).
+//! Whole-node queries are an O(log n) set lookup and fit queries walk
+//! at most `cores_per_node` buckets instead of every node.
 //!
 //! Down/draining nodes are *not indexed* (mirroring the `NodeState::Up`
 //! guard of the scan-based search paths), and every candidate the index
@@ -24,11 +28,15 @@ use crate::cluster::{Cluster, NodeId, NodeState};
 use crate::util::rng::Rng;
 use std::collections::BTreeSet;
 
-/// Per-partition free-core buckets.
+/// Per-partition free-core buckets plus the idle pool.
 #[derive(Debug, Clone, Default)]
 struct PartitionBuckets {
     /// `buckets[c]` = ids of indexed nodes with exactly `c` free cores.
     buckets: Vec<BTreeSet<NodeId>>,
+    /// Indexed nodes whose free count equals their *own* capacity —
+    /// wholly idle regardless of per-node core count, so the pool stays
+    /// correct on heterogeneous clusters.
+    idle: BTreeSet<NodeId>,
 }
 
 /// The incrementally-maintained free-capacity index.
@@ -41,6 +49,8 @@ pub struct FreeIndex {
     names: Vec<String>,
     /// Node → partition id.
     partition: Vec<u32>,
+    /// Node → physical core count (idle-pool membership test).
+    capacity: Vec<u32>,
     /// Node → cached free-core count (valid for indexed nodes).
     free: Vec<u32>,
     /// Node → currently present in the buckets (i.e. was `Up` at the
@@ -68,11 +78,13 @@ impl FreeIndex {
         }
         let empty = PartitionBuckets {
             buckets: vec![BTreeSet::new(); cores_per_node as usize + 1],
+            idle: BTreeSet::new(),
         };
         let mut idx = FreeIndex {
             cores_per_node,
             names,
             partition,
+            capacity: vec![0; n_nodes],
             free: vec![0; n_nodes],
             indexed: vec![false; n_nodes],
             parts: vec![empty; cluster.reservations().len() + 1],
@@ -80,11 +92,15 @@ impl FreeIndex {
         for node in cluster.nodes() {
             let id = node.id as usize;
             let free = node.free_cores();
+            idx.capacity[id] = node.cores;
             idx.free[id] = free;
             if node.state() == NodeState::Up {
                 idx.indexed[id] = true;
                 let part = idx.partition[id] as usize;
                 idx.parts[part].buckets[free as usize].insert(node.id);
+                if free == node.cores {
+                    idx.parts[part].idle.insert(node.id);
+                }
             }
         }
         idx
@@ -93,6 +109,21 @@ impl FreeIndex {
     /// Cores on the (largest) node; buckets run `0..=cores_per_node`.
     pub fn cores_per_node(&self) -> u32 {
         self.cores_per_node
+    }
+
+    /// Physical core count of one node (cached at build time).
+    pub fn node_capacity(&self, id: NodeId) -> u32 {
+        self.capacity[id as usize]
+    }
+
+    /// Indexed (`Up`) nodes of a partition, ascending by id. O(nodes) —
+    /// for occasional planning passes (backfill reservations), not the
+    /// dispatch hot path.
+    pub fn partition_nodes(&self, part: u32) -> Vec<NodeId> {
+        (0..self.partition.len())
+            .filter(|&i| self.indexed[i] && self.partition[i] == part)
+            .map(|i| i as NodeId)
+            .collect()
     }
 
     /// Resolve a reservation name to a partition id. `None` reservation
@@ -119,6 +150,11 @@ impl FreeIndex {
             let part = self.partition[i] as usize;
             self.parts[part].buckets[old_free as usize].remove(&id);
             self.parts[part].buckets[new_free as usize].insert(id);
+            if new_free == self.capacity[i] {
+                self.parts[part].idle.insert(id);
+            } else {
+                self.parts[part].idle.remove(&id);
+            }
         }
         self.free[i] = new_free;
     }
@@ -131,39 +167,55 @@ impl FreeIndex {
         let free = self.free[i] as usize;
         if up && !self.indexed[i] {
             self.parts[part].buckets[free].insert(id);
+            if self.free[i] == self.capacity[i] {
+                self.parts[part].idle.insert(id);
+            }
             self.indexed[i] = true;
         } else if !up && self.indexed[i] {
             self.parts[part].buckets[free].remove(&id);
+            self.parts[part].idle.remove(&id);
             self.indexed[i] = false;
         }
     }
 
     // ---- whole-node (idle pool) queries --------------------------------
     //
-    // The idle pool is the full bucket (free == cores_per_node), which
-    // identifies idle nodes only when every node has `cores_per_node`
-    // cores. The fit queries below are size-agnostic, but these idle
-    // queries assume a homogeneous cluster (the only kind `Cluster`
-    // currently constructs); a heterogeneous extension must widen them
-    // to per-capacity buckets.
+    // The idle pool tracks nodes whose free count equals their own
+    // capacity, so these queries are correct on heterogeneous clusters
+    // (nodes of mixed core counts) as well as homogeneous ones. Every
+    // candidate is still re-checked with `is_idle` (memory edge cases).
 
-    fn idle_bucket(&self, part: u32) -> &BTreeSet<NodeId> {
-        &self.parts[part as usize].buckets[self.cores_per_node as usize]
+    fn idle_pool(&self, part: u32) -> &BTreeSet<NodeId> {
+        &self.parts[part as usize].idle
     }
 
     /// Lowest-numbered wholly idle node in the partition.
     pub fn idle_lowest(&self, cluster: &Cluster, part: u32) -> Option<NodeId> {
-        self.idle_bucket(part)
+        self.idle_pool(part)
             .iter()
             .copied()
             .find(|&n| is_idle(cluster, n))
+    }
+
+    /// Lowest-numbered wholly idle node passing `allow` (backfill holds
+    /// exclude nodes reserved for a pending whole-node job).
+    pub fn idle_lowest_where<F: Fn(NodeId) -> bool>(
+        &self,
+        cluster: &Cluster,
+        part: u32,
+        allow: F,
+    ) -> Option<NodeId> {
+        self.idle_pool(part)
+            .iter()
+            .copied()
+            .find(|&n| allow(n) && is_idle(cluster, n))
     }
 
     /// Highest-numbered wholly idle node — the node-based fast path's
     /// O(log n) "pop" (any idle node is as good as any other for a
     /// whole-node request; taking from one end avoids ordering work).
     pub fn idle_highest(&self, cluster: &Cluster, part: u32) -> Option<NodeId> {
-        self.idle_bucket(part)
+        self.idle_pool(part)
             .iter()
             .rev()
             .copied()
@@ -172,24 +224,23 @@ impl FreeIndex {
 
     /// Uniformly random idle node.
     pub fn idle_random(&self, cluster: &Cluster, part: u32, rng: &mut Rng) -> Option<NodeId> {
-        let bucket = self.idle_bucket(part);
-        if bucket.is_empty() {
+        let pool = self.idle_pool(part);
+        if pool.is_empty() {
             return None;
         }
-        let k = rng.below(bucket.len() as u64) as usize;
+        let k = rng.below(pool.len() as u64) as usize;
         // Probe from a random start; wrap to the front if the tail of
-        // the bucket has no idle node (mem edge cases only).
-        bucket
-            .iter()
+        // the pool has no idle node (mem edge cases only).
+        pool.iter()
             .skip(k)
-            .chain(bucket.iter().take(k))
+            .chain(pool.iter().take(k))
             .copied()
             .find(|&n| is_idle(cluster, n))
     }
 
     /// Number of wholly idle nodes in the partition.
     pub fn idle_count(&self, cluster: &Cluster, part: u32) -> usize {
-        self.idle_bucket(part)
+        self.idle_pool(part)
             .iter()
             .filter(|&&n| is_idle(cluster, n))
             .count()
@@ -241,6 +292,48 @@ impl FreeIndex {
         (cores..=self.cores_per_node)
             .rev()
             .find_map(|c| self.bucket_candidate(cluster, part, c, cores, mem_mib))
+    }
+
+    // ---- reservation-aware (filtered) fit queries ----------------------
+    //
+    // Backfill passes place around earliest-start holds: a candidate is
+    // admissible only when the `allow` predicate accepts it (e.g. "not
+    // the held node, unless the task vacates before the hold starts").
+
+    /// Lowest-numbered node that fits and passes `allow`.
+    pub fn first_fit_where<F: Fn(NodeId) -> bool>(
+        &self,
+        cluster: &Cluster,
+        part: u32,
+        cores: u32,
+        mem_mib: u64,
+        allow: F,
+    ) -> Option<NodeId> {
+        let mut best: Option<NodeId> = None;
+        for c in cores..=self.cores_per_node {
+            let cand = self.bucket_candidate_where(cluster, part, c, cores, mem_mib, &allow);
+            if let Some(n) = cand {
+                best = Some(match best {
+                    Some(b) => b.min(n),
+                    None => n,
+                });
+            }
+        }
+        best
+    }
+
+    /// Node with the fewest sufficient free cores that passes `allow`
+    /// (densest packing among admissible nodes).
+    pub fn best_fit_where<F: Fn(NodeId) -> bool>(
+        &self,
+        cluster: &Cluster,
+        part: u32,
+        cores: u32,
+        mem_mib: u64,
+        allow: F,
+    ) -> Option<NodeId> {
+        (cores..=self.cores_per_node)
+            .find_map(|c| self.bucket_candidate_where(cluster, part, c, cores, mem_mib, &allow))
     }
 
     /// Uniformly random fitting node: pick a bucket weighted by size,
@@ -301,6 +394,22 @@ impl FreeIndex {
             .find(|&n| fits(cluster, n, cores, mem_mib))
     }
 
+    /// Lowest-id member of one bucket passing the fit check and `allow`.
+    fn bucket_candidate_where<F: Fn(NodeId) -> bool>(
+        &self,
+        cluster: &Cluster,
+        part: u32,
+        bucket_free: u32,
+        cores: u32,
+        mem_mib: u64,
+        allow: &F,
+    ) -> Option<NodeId> {
+        self.parts[part as usize].buckets[bucket_free as usize]
+            .iter()
+            .copied()
+            .find(|&n| allow(n) && fits(cluster, n, cores, mem_mib))
+    }
+
     // ---- introspection / verification ----------------------------------
 
     /// Cached free-core count for a node (test/diagnostic helper).
@@ -338,8 +447,18 @@ impl FreeIndex {
                         node.free_cores()
                     ));
                 }
+                let in_pool = self.parts[part].idle.contains(&node.id);
+                let all_free = node.free_cores() == node.cores;
+                if in_pool != all_free {
+                    return Err(format!(
+                        "node {}: idle-pool membership {in_pool} vs all-cores-free {all_free}",
+                        node.id
+                    ));
+                }
             } else if self.indexed[i] {
                 return Err(format!("node {}: not Up but still indexed", node.id));
+            } else if self.parts[part].idle.contains(&node.id) {
+                return Err(format!("node {}: not Up but still in the idle pool", node.id));
             }
         }
         if bucketed != up_nodes {
@@ -474,6 +593,80 @@ mod tests {
             seen[n as usize] += 1;
         }
         assert!(seen.iter().all(|&k| k > 0), "all nodes sampled: {seen:?}");
+    }
+
+    #[test]
+    fn heterogeneous_idle_pool_sees_small_nodes() {
+        // Nodes 0–1: 64 cores; nodes 2–3: 16 cores. A wholly idle
+        // 16-core node must be in the idle pool even though the full
+        // bucket sits at free == 64.
+        let mut c = Cluster::heterogeneous(&[(2, 64, 1024), (2, 16, 512)]);
+        let mut idx = index_over(&c);
+        assert_eq!(idx.idle_count(&c, 0), 4);
+        assert_eq!(idx.cores_per_node(), 64);
+        assert_eq!(idx.node_capacity(0), 64);
+        assert_eq!(idx.node_capacity(3), 16);
+        // Occupy the big nodes: only the small ones stay idle.
+        for id in 0..2 {
+            c.node_mut(id).unwrap().allocate_whole().unwrap();
+            idx.on_delta(id, 0);
+        }
+        idx.check_consistency(&c).unwrap();
+        assert_eq!(idx.idle_count(&c, 0), 2);
+        assert_eq!(idx.idle_lowest(&c, 0), Some(2));
+        assert_eq!(idx.idle_highest(&c, 0), Some(3));
+        // One core on node 2: it leaves the pool; release returns it.
+        c.allocate_on(2, 1, 0).unwrap();
+        idx.on_delta(2, 15);
+        idx.check_consistency(&c).unwrap();
+        assert_eq!(idx.idle_lowest(&c, 0), Some(3));
+        // A 17-core fit query must skip the 16-core nodes entirely.
+        assert_eq!(idx.first_fit(&c, 0, 17, 0), None);
+        assert_eq!(idx.first_fit(&c, 0, 16, 0), Some(3));
+    }
+
+    #[test]
+    fn heterogeneous_state_changes_keep_pool_consistent() {
+        let mut c = Cluster::heterogeneous(&[(1, 8, 64), (1, 4, 64)]);
+        let mut idx = index_over(&c);
+        assert_eq!(idx.idle_count(&c, 0), 2);
+        c.node_mut(1).unwrap().set_state(NodeState::Down);
+        idx.on_state_change(1, NodeState::Down);
+        idx.check_consistency(&c).unwrap();
+        assert_eq!(idx.idle_count(&c, 0), 1);
+        c.node_mut(1).unwrap().set_state(NodeState::Up);
+        idx.on_state_change(1, NodeState::Up);
+        idx.check_consistency(&c).unwrap();
+        assert_eq!(idx.idle_count(&c, 0), 2);
+        assert_eq!(idx.idle_highest(&c, 0), Some(1));
+    }
+
+    #[test]
+    fn filtered_queries_respect_allow() {
+        let c = Cluster::tx_green(4);
+        let idx = index_over(&c);
+        assert_eq!(idx.idle_lowest_where(&c, 0, |n| n != 0), Some(1));
+        assert_eq!(idx.first_fit_where(&c, 0, 1, 0, |n| n >= 2), Some(2));
+        assert_eq!(idx.best_fit_where(&c, 0, 1, 0, |n| n == 3), Some(3));
+        assert_eq!(idx.best_fit_where(&c, 0, 1, 0, |_| false), None);
+        // Unfiltered and trivially-filtered queries agree.
+        assert_eq!(
+            idx.first_fit(&c, 0, 2, 0),
+            idx.first_fit_where(&c, 0, 2, 0, |_| true)
+        );
+    }
+
+    #[test]
+    fn partition_nodes_lists_up_members() {
+        let mut c = Cluster::tx_green(4);
+        c.reserve("bench", vec![1, 2]).unwrap();
+        let mut idx = index_over(&c);
+        let bench = idx.partition_for(Some("bench")).unwrap();
+        assert_eq!(idx.partition_nodes(0), vec![0, 3]);
+        assert_eq!(idx.partition_nodes(bench), vec![1, 2]);
+        c.node_mut(1).unwrap().set_state(NodeState::Down);
+        idx.on_state_change(1, NodeState::Down);
+        assert_eq!(idx.partition_nodes(bench), vec![2]);
     }
 
     #[test]

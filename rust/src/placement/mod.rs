@@ -21,16 +21,22 @@
 //! * [`PlacementEngine`] — the façade the scheduler talks to: it owns
 //!   the index and the policy, wraps cluster allocate/release so the
 //!   index never desynchronizes, and hands back
-//!   [`crate::scheduler::job::Placement`]s.
+//!   [`crate::scheduler::job::Placement`]s;
+//! * [`ReservationLedger`] — earliest-start backfill reservations for
+//!   blocked whole-node jobs, planned from the index plus expected
+//!   completion times, with the admission rules the dispatch loop
+//!   enforces while a hold is active ([`backfill`]).
 //!
 //! Policy selection threads through every layer: config files
 //! (`placement = "best-fit"`), the `--placement` CLI flag, experiment
 //! presets, and the aggregation modes (each mode names its default via
 //! [`crate::aggregation::plan::Aggregator::default_strategy`]).
 
+pub mod backfill;
 pub mod free_index;
 pub mod policy;
 
+pub use backfill::{Hold, ReservationLedger};
 pub use free_index::FreeIndex;
 pub use policy::{policy_for, PlacementEngine, PlacementPolicy};
 

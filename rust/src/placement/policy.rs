@@ -263,6 +263,58 @@ impl PlacementEngine {
         Some(Placement { node, mask, mem_mib })
     }
 
+    /// Place a whole-node request on an idle node passing `allow`
+    /// (lowest admissible id). Used while a backfill hold is active:
+    /// other whole-node jobs must not take the held node, so the
+    /// policy's unfiltered idle query is bypassed.
+    pub fn place_whole_where(
+        &mut self,
+        cluster: &mut Cluster,
+        reservation: Option<&str>,
+        allow: &dyn Fn(NodeId) -> bool,
+    ) -> Option<Placement> {
+        let part = self.index.partition_for(reservation)?;
+        let node = self.index.idle_lowest_where(cluster, part, allow)?;
+        let mem_mib = cluster.node(node).ok()?.free_mem_mib();
+        let mask = cluster.node_mut(node).ok()?.allocate_whole().ok()?;
+        self.index.on_delta(node, 0);
+        Some(Placement { node, mask, mem_mib })
+    }
+
+    /// Place a `cores` + `mem_mib` request on the tightest node passing
+    /// `allow` (best-fit among admissible nodes). Backfill placements
+    /// go through here so they pack into gaps instead of breaking idle
+    /// nodes a reservation may be counting on.
+    pub fn place_cores_where(
+        &mut self,
+        cluster: &mut Cluster,
+        cores: u32,
+        mem_mib: u64,
+        reservation: Option<&str>,
+        allow: &dyn Fn(NodeId) -> bool,
+    ) -> Option<Placement> {
+        let part = self.index.partition_for(reservation)?;
+        let node = self.index.best_fit_where(cluster, part, cores, mem_mib, allow)?;
+        let mask = cluster.allocate_on(node, cores, mem_mib).ok()?;
+        let free = cluster.node(node).ok()?.free_cores();
+        self.index.on_delta(node, free);
+        Some(Placement { node, mask, mem_mib })
+    }
+
+    /// Would a filtered core placement succeed right now? Pure query —
+    /// the dispatch loop's backfill-candidate test (no allocation).
+    pub fn peek_cores_where(
+        &self,
+        cluster: &Cluster,
+        reservation: Option<&str>,
+        cores: u32,
+        mem_mib: u64,
+        allow: &dyn Fn(NodeId) -> bool,
+    ) -> Option<NodeId> {
+        let part = self.index.partition_for(reservation)?;
+        self.index.best_fit_where(cluster, part, cores, mem_mib, allow)
+    }
+
     /// Release a placement and update the index.
     pub fn release(&mut self, cluster: &mut Cluster, p: &Placement) -> Result<()> {
         cluster.release_on(p.node, &p.mask, p.mem_mib)?;
@@ -340,6 +392,27 @@ mod tests {
             Some(1),
             "scan and index agree"
         );
+    }
+
+    #[test]
+    fn filtered_placements_respect_allow() {
+        let mut c = Cluster::tx_green(3);
+        let mut e = PlacementEngine::new(&c, Strategy::NodeBased, 1);
+        // Whole-node placement skips a disallowed (held) node.
+        let p = e.place_whole_where(&mut c, None, &|n| n != 0).unwrap();
+        assert_eq!(p.node, 1);
+        // Core placement packs into the tightest admissible node.
+        assert_eq!(e.peek_cores_where(&c, None, 4, 0, &|_| true), Some(0));
+        let q = e.place_cores_where(&mut c, 4, 0, None, &|n| n == 2).unwrap();
+        assert_eq!(q.node, 2);
+        e.index().check_consistency(&c).unwrap();
+        // Nothing admissible → clean None, no allocation.
+        assert!(e.place_cores_where(&mut c, 1, 0, None, &|_| false).is_none());
+        assert!(e.place_whole_where(&mut c, None, &|_| false).is_none());
+        e.release(&mut c, &p).unwrap();
+        e.release(&mut c, &q).unwrap();
+        assert_eq!(c.busy_cores(), 0);
+        e.index().check_consistency(&c).unwrap();
     }
 
     #[test]

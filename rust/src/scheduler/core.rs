@@ -21,8 +21,8 @@
 //! delays the remaining placements past the 2500 s mark — exactly the
 //! behaviour reported in the paper's §III.B.
 
-use crate::cluster::{Cluster, NodeState};
-use crate::placement::{PlacementEngine, Strategy};
+use crate::cluster::{Cluster, NodeId, NodeState};
+use crate::placement::{Hold, PlacementEngine, ReservationLedger, Strategy};
 use crate::scheduler::accounting::{JobStats, TaskRecord};
 use crate::scheduler::costmodel::CostModel;
 use crate::scheduler::job::{JobId, JobSpec, Placement, SchedTaskSpec, TaskId};
@@ -58,6 +58,9 @@ pub enum Op {
     Cycle,
     /// Dispatch one scheduling task.
     Dispatch(TaskId),
+    /// Backfill-dispatch one core-level task around a blocked
+    /// whole-node head (admitted against the reservation ledger).
+    Backfill(TaskId),
     /// Cleanup transaction for one finished task.
     Cleanup(TaskId),
     /// Background work burst of the given demand.
@@ -135,6 +138,22 @@ impl Default for TaskModel {
     }
 }
 
+/// One backfill dispatch, as recorded for diagnostics and the backfill
+/// invariant tests (no backfilled task may delay a reservation).
+#[derive(Debug, Clone, Copy)]
+pub struct BackfillEvent {
+    /// The backfilled (core-level) task.
+    pub task: TaskId,
+    /// Node it was placed on.
+    pub node: NodeId,
+    /// Placement time.
+    pub time: Time,
+    /// The earliest-start reservation active at placement time, if any
+    /// (a backfill can also jump a blocked *core-level* head, which
+    /// plans no hold).
+    pub hold: Option<Hold>,
+}
+
 /// Everything measured from one simulation run.
 #[derive(Debug)]
 pub struct SimOutcome {
@@ -150,6 +169,8 @@ pub struct SimOutcome {
     /// Longest continuous stretch of server-busy time (the paper's
     /// "scheduler becomes unresponsive" indicator).
     pub longest_busy_stretch: Time,
+    /// Backfill dispatches performed (empty when backfill is off).
+    pub backfills: Vec<BackfillEvent>,
 }
 
 impl SimOutcome {
@@ -169,6 +190,15 @@ impl SimOutcome {
 pub struct SchedulerSim {
     pub(crate) cluster: Cluster,
     pub(crate) engine: PlacementEngine,
+    /// Backfill reservation ledger (expected node free times + the
+    /// active hold). Maintained on every placement/release; consulted
+    /// only when `backfill` is on.
+    pub(crate) ledger: ReservationLedger,
+    /// Enable EASY-style backfill around blocked whole-node heads.
+    pub(crate) backfill: bool,
+    /// How many pending entries a backfill scan may inspect.
+    pub(crate) backfill_lookahead: usize,
+    pub(crate) backfill_log: Vec<BackfillEvent>,
     pub(crate) cost: CostModel,
     pub(crate) noise: NoiseModel,
     pub(crate) task_model: TaskModel,
@@ -220,9 +250,14 @@ impl SchedulerSim {
             Strategy::FirstFit,
             seed ^ 0x9E37_79B9_7F4A_7C15,
         );
+        let ledger = ReservationLedger::new(cluster.n_nodes() as usize);
         SchedulerSim {
             cluster,
             engine,
+            ledger,
+            backfill: false,
+            backfill_lookahead: 64,
+            backfill_log: Vec::new(),
             cost,
             noise,
             task_model: TaskModel::default(),
@@ -265,6 +300,28 @@ impl SchedulerSim {
     /// The active placement strategy.
     pub fn placement(&self) -> Strategy {
         self.engine.strategy()
+    }
+
+    /// Enable/disable backfill scheduling: blocked whole-node heads get
+    /// an earliest-start reservation and small core-level tasks may
+    /// jump the queue into gaps they vacate before it starts (see
+    /// [`crate::placement::backfill`]). Off by default — it changes
+    /// dispatch order, so the paper-reproduction runs keep the plain
+    /// head-of-line discipline unless a config opts in.
+    pub fn with_backfill(mut self, on: bool) -> Self {
+        self.backfill = on;
+        self
+    }
+
+    /// Whether backfill scheduling is enabled.
+    pub fn backfill_enabled(&self) -> bool {
+        self.backfill
+    }
+
+    /// Bound on how many pending entries one backfill scan inspects.
+    pub fn with_backfill_lookahead(mut self, entries: usize) -> Self {
+        self.backfill_lookahead = entries;
+        self
     }
 
     /// Disable the (possibly large) utilization timeline recording.
@@ -321,6 +378,7 @@ impl SchedulerSim {
             events_processed: events,
             max_completion_backlog: self.max_completion_backlog,
             longest_busy_stretch: self.longest_busy_stretch,
+            backfills: self.backfill_log,
         }
     }
 
@@ -460,8 +518,12 @@ mod tests {
 
     #[test]
     fn node_based_fill_is_much_faster_than_core_based() {
-        let core = quiet_sim(8)
-            .run_single(uniform_job(512, ResourceRequest::Cores { cores: 1, mem_mib: 0 }, 240.0, 1));
+        let core = quiet_sim(8).run_single(uniform_job(
+            512,
+            ResourceRequest::Cores { cores: 1, mem_mib: 0 },
+            240.0,
+            1,
+        ));
         let node = quiet_sim(8).run_single(uniform_job(8, ResourceRequest::WholeNode, 240.0, 64));
         let cs = core.0.job_stats(core.1, 240.0).unwrap();
         let ns = node.0.job_stats(node.1, 240.0).unwrap();

@@ -7,71 +7,204 @@
 //! ([`crate::placement::PlacementEngine`]), so the free-capacity index
 //! is maintained incrementally and dispatch never scans the node table.
 
-use crate::scheduler::core::{SchedEvent, SchedulerSim};
-use crate::scheduler::job::{JobId, ResourceRequest, TaskId, TaskState};
+use crate::scheduler::core::{BackfillEvent, SchedEvent, SchedulerSim};
+use crate::scheduler::job::{JobId, Placement, ResourceRequest, TaskId, TaskState};
 use crate::sim::{EventQueue, Time};
 
 impl SchedulerSim {
     /// Attempt placement of a dispatched task; on failure the task goes
     /// back to the head of the queue and dispatch blocks until a cleanup
-    /// frees resources.
+    /// frees resources. With backfill enabled, a failing whole-node task
+    /// additionally plans an earliest-start reservation, and all
+    /// placements made while a hold is active are filtered so they
+    /// cannot delay it.
     pub(crate) fn try_place(&mut self, now: Time, tid: TaskId, q: &mut EventQueue<SchedEvent>) {
         let (request, reservation) = {
             let slot = &self.tasks[tid as usize];
             let job = &self.jobs[slot.record.job as usize];
             (slot.spec.request, job.reservation.clone())
         };
+        let hold_active = self.backfill && self.ledger.hold().is_some();
         let placement = match request {
-            ResourceRequest::WholeNode => self
-                .engine
-                .place_whole(&mut self.cluster, reservation.as_deref()),
-            ResourceRequest::Cores { cores, mem_mib } => self.engine.place_cores(
-                &mut self.cluster,
-                cores,
-                mem_mib,
-                reservation.as_deref(),
-            ),
+            ResourceRequest::WholeNode => {
+                if hold_active {
+                    // The held node is fenced off for the reservation's
+                    // own task; everyone else picks around it.
+                    let ledger = &self.ledger;
+                    self.engine.place_whole_where(
+                        &mut self.cluster,
+                        reservation.as_deref(),
+                        &|n| ledger.allows_whole_node(n, tid),
+                    )
+                } else {
+                    self.engine
+                        .place_whole(&mut self.cluster, reservation.as_deref())
+                }
+            }
+            ResourceRequest::Cores { cores, mem_mib } => {
+                if hold_active {
+                    let est_end =
+                        now + self.task_model.startup + self.tasks[tid as usize].spec.duration;
+                    let ledger = &self.ledger;
+                    self.engine.place_cores_where(
+                        &mut self.cluster,
+                        cores,
+                        mem_mib,
+                        reservation.as_deref(),
+                        &|n| ledger.allows_backfill(n, est_end),
+                    )
+                } else {
+                    self.engine.place_cores(
+                        &mut self.cluster,
+                        cores,
+                        mem_mib,
+                        reservation.as_deref(),
+                    )
+                }
+            }
         };
         match placement {
             Some(p) => {
-                // Production node-churn: whole-node allocations on a
-                // near-machine-scale job occasionally get a node that is
-                // still draining and joins late.
-                let cores = p.mask.count();
-                let whole_node = request == ResourceRequest::WholeNode;
-                let late = if self.production && whole_node {
-                    let frac = self.cluster.n_nodes() as f64 / 512.0;
-                    let prob = self.task_model.p_node_late * frac * frac;
-                    if self.rng.chance(prob.min(1.0)) {
-                        self.rng
-                            .range_f64(self.task_model.late_range.0, self.task_model.late_range.1)
-                    } else {
-                        0.0
-                    }
-                } else {
-                    0.0
-                };
-                let start = now + late;
-                let slot = &mut self.tasks[tid as usize];
-                slot.record.state = TaskState::Running;
-                slot.record.start_t = Some(start);
-                slot.record.cores = cores;
-                slot.placement = Some(p);
-                let jitter = self.rng.normal().abs() * self.task_model.jitter_sigma;
-                let occupancy = self.task_model.startup + slot.spec.duration + jitter;
-                self.running_cores += cores as u64;
-                if self.record_timeline {
-                    self.timeline.push((start, cores as i64));
-                }
-                q.at(start + occupancy, SchedEvent::TaskEnded(tid));
+                self.start_running(now, tid, p, request == ResourceRequest::WholeNode, q);
             }
             None => {
+                if self.backfill && request == ResourceRequest::WholeNode {
+                    self.plan_hold(now, tid, reservation.as_deref());
+                }
                 // Head-of-line blocked: wait for resources to free.
                 let prio = self.tasks[tid as usize].priority;
                 self.pending.push_front(tid, prio);
                 self.cycle_budget = 0; // a fresh cycle rescans when unblocked
                 self.hol_blocked = true;
             }
+        }
+    }
+
+    /// Apply a successful placement: state transition, accounting,
+    /// ledger bookkeeping, and the occupancy-end event. Shared by the
+    /// normal dispatch path and the backfill path; the RNG call order
+    /// (late-join draw, then jitter draw) matches the historical
+    /// `try_place` body exactly, so existing seeds reproduce.
+    pub(crate) fn start_running(
+        &mut self,
+        now: Time,
+        tid: TaskId,
+        p: Placement,
+        whole_node: bool,
+        q: &mut EventQueue<SchedEvent>,
+    ) {
+        // Production node-churn: whole-node allocations on a
+        // near-machine-scale job occasionally get a node that is
+        // still draining and joins late.
+        let cores = p.mask.count();
+        let node = p.node;
+        let late = if self.production && whole_node {
+            let frac = self.cluster.n_nodes() as f64 / 512.0;
+            let prob = self.task_model.p_node_late * frac * frac;
+            if self.rng.chance(prob.min(1.0)) {
+                self.rng
+                    .range_f64(self.task_model.late_range.0, self.task_model.late_range.1)
+            } else {
+                0.0
+            }
+        } else {
+            0.0
+        };
+        let start = now + late;
+        let slot = &mut self.tasks[tid as usize];
+        slot.record.state = TaskState::Running;
+        slot.record.start_t = Some(start);
+        slot.record.cores = cores;
+        slot.placement = Some(p);
+        let jitter = self.rng.normal().abs() * self.task_model.jitter_sigma;
+        let occupancy = self.task_model.startup + slot.spec.duration + jitter;
+        self.running_cores += cores as u64;
+        self.ledger.note_start(node, start + occupancy);
+        self.ledger.clear_hold(tid);
+        if self.record_timeline {
+            self.timeline.push((start, cores as i64));
+        }
+        q.at(start + occupancy, SchedEvent::TaskEnded(tid));
+    }
+
+    /// Place a backfill-admitted core-level task. Runs the same filtered
+    /// query the admission scan used (state cannot change in between:
+    /// the server serializes all mutating operations), then records the
+    /// backfill against the active hold for the invariant tests.
+    pub(crate) fn try_place_backfill(
+        &mut self,
+        now: Time,
+        tid: TaskId,
+        q: &mut EventQueue<SchedEvent>,
+    ) {
+        let request = self.tasks[tid as usize].spec.request;
+        let (cores, mem_mib) = match request {
+            ResourceRequest::Cores { cores, mem_mib } => (cores, mem_mib),
+            ResourceRequest::WholeNode => {
+                // Never admitted by the scan; requeue defensively.
+                let prio = self.tasks[tid as usize].priority;
+                self.pending.push_front(tid, prio);
+                return;
+            }
+        };
+        let duration = self.tasks[tid as usize].spec.duration;
+        let reservation = self.jobs[self.tasks[tid as usize].record.job as usize]
+            .reservation
+            .clone();
+        let est_end = now + self.task_model.startup + duration;
+        let hold = self.ledger.hold();
+        let ledger = &self.ledger;
+        let placement = self.engine.place_cores_where(
+            &mut self.cluster,
+            cores,
+            mem_mib,
+            reservation.as_deref(),
+            &|n| ledger.allows_backfill(n, est_end),
+        );
+        match placement {
+            Some(p) => {
+                self.backfill_log.push(BackfillEvent {
+                    task: tid,
+                    node: p.node,
+                    time: now,
+                    hold,
+                });
+                self.start_running(now, tid, p, false, q);
+            }
+            None => {
+                // Admission raced a hold change; requeue at the front of
+                // its bucket so ordering churn stays minimal.
+                let prio = self.tasks[tid as usize].priority;
+                self.pending.push_front(tid, prio);
+            }
+        }
+    }
+
+    /// Plan (or refresh) the earliest-start reservation for a blocked
+    /// whole-node task: the eligible node expected to free soonest.
+    fn plan_hold(&mut self, now: Time, tid: TaskId, reservation: Option<&str>) {
+        if let Some(h) = self.ledger.hold() {
+            // One hold at a time (EASY discipline): never displace
+            // another task's reservation.
+            if h.task != tid {
+                return;
+            }
+            // Our estimate is still ahead of the clock: keep the fence
+            // stable instead of re-running the O(nodes) planning scan
+            // on every head-of-line retry. Only an *overdue* hold
+            // (node freed late, went down, …) is re-planned.
+            if now < h.start {
+                return;
+            }
+        }
+        let Some(part) = self.engine.index().partition_for(reservation) else {
+            return;
+        };
+        if let Some((node, start)) =
+            self.ledger
+                .plan_whole_node(self.engine.index(), &self.cluster, part, now)
+        {
+            let _ = self.ledger.set_hold(tid, node, start);
         }
     }
 
@@ -108,6 +241,9 @@ impl SchedulerSim {
             self.engine
                 .release(&mut self.cluster, &p)
                 .expect("release of held placement");
+            // Backfill release hook: expected free times update so hold
+            // planning sees the node drain.
+            self.ledger.note_release(p.node);
         }
         // Resources freed: head-of-line dispatch may proceed.
         self.hol_blocked = false;
@@ -149,6 +285,8 @@ impl SchedulerSim {
                         slot.record.start_t = Some(now);
                         slot.record.end_t = Some(now);
                         slot.record.cleanup_t = Some(now);
+                        // A cancelled task must not keep a node fenced.
+                        self.ledger.clear_hold(tid);
                     }
                 }
                 TaskState::Running => self.preempt_q.push_back(tid),

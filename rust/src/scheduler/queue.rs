@@ -87,6 +87,35 @@ impl PendingQueue {
         }
     }
 
+    /// Pop the first task (priority-then-FIFO order) satisfying `pred`,
+    /// scanning at most `max_scan` entries — the backfill lookahead.
+    ///
+    /// The bound keeps the scan cheap on deep queues *and* bounds
+    /// priority inversion: a backfill candidate can only jump entries
+    /// inside the lookahead window, so ahead-of-it tasks age out of
+    /// reach after at most `max_scan` backfills.
+    pub fn pop_where(
+        &mut self,
+        max_scan: usize,
+        mut pred: impl FnMut(TaskId) -> bool,
+    ) -> Option<TaskId> {
+        let mut scanned = 0usize;
+        for (_, q) in self.buckets.iter_mut() {
+            let budget = max_scan - scanned;
+            if let Some(pos) = q.iter().take(budget).position(|e| pred(e.task)) {
+                let task = q[pos].task;
+                let _ = q.remove(pos);
+                self.len -= 1;
+                return Some(task);
+            }
+            scanned += q.len().min(budget);
+            if scanned >= max_scan {
+                return None;
+            }
+        }
+        None
+    }
+
     /// Remove an arbitrary task (job cancellation); O(n).
     pub fn remove(&mut self, task: TaskId) -> bool {
         for (_, q) in self.buckets.iter_mut() {
@@ -242,6 +271,38 @@ mod tests {
         assert!(q.is_empty());
         assert_eq!(q.peek(), None);
         assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn pop_where_scans_in_order_and_respects_bound() {
+        let mut q = PendingQueue::new();
+        q.push(1, 0);
+        q.push(2, 0);
+        q.push(3, 5); // higher priority, scanned first
+        q.push(4, 0);
+        // First even task in priority-FIFO order: 3 is odd, then 1 odd,
+        // then 2.
+        assert_eq!(q.pop_where(10, |t| t % 2 == 0), Some(2));
+        assert_eq!(q.len(), 3);
+        // Bound: scanning only 2 entries (3, then 1) finds no even task.
+        assert_eq!(q.pop_where(2, |t| t % 2 == 0), None);
+        assert_eq!(q.len(), 3, "failed scan removes nothing");
+        // Remaining order is untouched.
+        assert_eq!(q.pop(), Some(3));
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(4));
+    }
+
+    #[test]
+    fn pop_where_never_matches_leaves_queue_intact() {
+        let mut q = PendingQueue::new();
+        for t in 0..5u64 {
+            q.push(t, 0);
+        }
+        assert_eq!(q.pop_where(100, |_| false), None);
+        assert_eq!(q.len(), 5);
+        let drained: Vec<_> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(drained, vec![0, 1, 2, 3, 4]);
     }
 
     #[test]

@@ -5,17 +5,26 @@
 //! time on*. The rules that produce the paper's 512-node collapse:
 //!
 //! 1. one operation at a time (registration, cycle scan, dispatch,
-//!    cleanup, noise burst, preempt signal), each with a calibrated
-//!    virtual-time cost ([`crate::scheduler::costmodel`]);
+//!    cleanup, noise burst, preempt signal, backfill dispatch), each
+//!    with a calibrated virtual-time cost
+//!    ([`crate::scheduler::costmodel`]);
 //! 2. service order: background noise → preempt signals → cleanups
-//!    (with a bounded dispatch interleave) → cycle-batched dispatches;
+//!    (with a bounded dispatch interleave) → cycle-batched dispatches →
+//!    backfill (only when the head of the queue is blocked);
 //! 3. cleanups cost more than dispatches and grow with array size, so
 //!    once completions flood in, dispatch starves.
+//!
+//! With backfill enabled ([`SchedulerSim::with_backfill`]) a blocked
+//! whole-node head holds an earliest-start reservation
+//! ([`crate::placement::backfill`]); the backfill branch then admits
+//! small core-level tasks from a bounded lookahead window, provided the
+//! placement engine can put them somewhere that cannot delay the hold.
 //!
 //! What happens when an operation *completes* (state transitions,
 //! placement, resource release) lives in
 //! [`crate::scheduler::lifecycle`].
 
+use crate::cluster::NodeState;
 use crate::scheduler::accounting::TaskRecord;
 use crate::scheduler::core::{JobMeta, Op, SchedEvent, SchedulerSim, TaskSlot};
 use crate::scheduler::job::{ResourceRequest, TaskId, TaskState};
@@ -27,7 +36,7 @@ impl SchedulerSim {
         if self.server_busy {
             return;
         }
-        if let Some((op, cost)) = self.pick_next() {
+        if let Some((op, cost)) = self.pick_next(now) {
             self.server_busy = true;
             self.busy_since = now;
             q.after(cost, SchedEvent::ServerDone(op));
@@ -36,8 +45,8 @@ impl SchedulerSim {
 
     /// Work-conserving service discipline (see module docs):
     /// noise → preempt signals → cleanups (with bounded dispatch
-    /// interleave) → dispatches (cycle-batched).
-    pub(crate) fn pick_next(&mut self) -> Option<(Op, Time)> {
+    /// interleave) → dispatches (cycle-batched) → backfill.
+    pub(crate) fn pick_next(&mut self, now: Time) -> Option<(Op, Time)> {
         let s = self.op_scale;
         if let Some(demand) = self.noise_q.pop_front() {
             return Some((Op::Noise(demand), demand * s));
@@ -67,7 +76,64 @@ impl SchedulerSim {
                 self.tasks[tid as usize].spec.request == ResourceRequest::WholeNode;
             return Some((Op::Dispatch(tid), self.cost.dispatch(node_level) * s));
         }
+        // Backfill machinery: only runs while the head of the queue is
+        // blocked (otherwise normal dispatch above is work-conserving).
+        if self.backfill && self.hol_blocked {
+            // The held node came wholly idle: dispatch the reservation's
+            // own task out of order, wherever it sits in the queue —
+            // without this, a blocked higher-priority head would let the
+            // held node idle while the reserved job starves behind it.
+            if let Some(h) = self.ledger.hold() {
+                let ready = self
+                    .cluster
+                    .node(h.node)
+                    .map(|n| n.state() == NodeState::Up && n.is_idle())
+                    .unwrap_or(false);
+                if ready {
+                    if self.pending.remove(h.task) {
+                        self.cleanups_since_dispatch = 0;
+                        return Some((Op::Dispatch(h.task), self.cost.dispatch(true) * s));
+                    }
+                    // Hold task no longer pending (cancelled): unfence.
+                    self.ledger.clear_hold(h.task);
+                }
+            }
+            if let Some(tid) = self.find_backfill(now) {
+                self.cleanups_since_dispatch = 0;
+                return Some((Op::Backfill(tid), self.cost.dispatch(false) * s));
+            }
+        }
         None
+    }
+
+    /// Scan the lookahead window of the pending queue for a core-level
+    /// task the placement engine can admit without delaying the active
+    /// hold. Pops (and returns) the first such task.
+    fn find_backfill(&mut self, now: Time) -> Option<TaskId> {
+        // The dispatch op lands `dispatch_core × op_scale` later; fold
+        // that into the completion estimate so the admission decision
+        // made here is exactly the one the placement re-check sees.
+        let dispatch_at = now + self.cost.dispatch(false) * self.op_scale;
+        let startup = self.task_model.startup;
+        let tasks = &self.tasks;
+        let jobs = &self.jobs;
+        let engine = &self.engine;
+        let cluster = &self.cluster;
+        let ledger = &self.ledger;
+        self.pending.pop_where(self.backfill_lookahead, |tid| {
+            let slot = &tasks[tid as usize];
+            let (cores, mem_mib) = match slot.spec.request {
+                ResourceRequest::Cores { cores, mem_mib } => (cores, mem_mib),
+                ResourceRequest::WholeNode => return false,
+            };
+            let est_end = dispatch_at + startup + slot.spec.duration;
+            let res = jobs[slot.record.job as usize].reservation.as_deref();
+            engine
+                .peek_cores_where(cluster, res, cores, mem_mib, &|n| {
+                    ledger.allows_backfill(n, est_end)
+                })
+                .is_some()
+        })
     }
 
     /// Account a finished operation and apply its effects.
@@ -97,6 +163,10 @@ impl SchedulerSim {
                     self.tasks[tid as usize].spec.request == ResourceRequest::WholeNode;
                 self.busy.dispatch += self.cost.dispatch(node_level) * self.op_scale;
                 self.try_place(now, tid, q);
+            }
+            Op::Backfill(tid) => {
+                self.busy.dispatch += self.cost.dispatch(false) * self.op_scale;
+                self.try_place_backfill(now, tid, q);
             }
             Op::Cleanup(tid) => {
                 let array = self.jobs[self.tasks[tid as usize].record.job as usize].array_size;

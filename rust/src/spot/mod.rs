@@ -86,7 +86,8 @@ pub fn measure_release(
     });
     let mut q = EventQueue::new();
     // Spot job wants to run far longer than the preemption point.
-    let job = sim.submit_at(&mut q, 0.0, spot_job(mode, nodes, cores_per_node, preempt_at * 100.0)?);
+    let spec = spot_job(mode, nodes, cores_per_node, preempt_at * 100.0)?;
+    let job = sim.submit_at(&mut q, 0.0, spec);
     sim.preempt_at(&mut q, preempt_at, job);
     let out = sim.run(&mut q);
     let released_t = out

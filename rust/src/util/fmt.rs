@@ -108,7 +108,12 @@ impl Table {
 ///
 /// Used for the terminal rendering of Fig 2 (utilization vs time). Each
 /// series is a list of `(x, y)` points; y is expected in `[0, y_max]`.
-pub fn ascii_plot(series: &[(String, Vec<(f64, f64)>)], width: usize, height: usize, y_max: f64) -> String {
+pub fn ascii_plot(
+    series: &[(String, Vec<(f64, f64)>)],
+    width: usize,
+    height: usize,
+    y_max: f64,
+) -> String {
     let marks = ['*', '+', 'o', 'x', '#', '@', '%', '&'];
     let x_max = series
         .iter()

@@ -1,0 +1,359 @@
+//! Interactive-vs-batch contention mixes.
+//!
+//! The paper's node-based scheduler exists so large fleets of short
+//! interactive jobs and long-running batch jobs can share one cluster
+//! ("Best of Both Worlds", arXiv:2008.02223, frames the same tension).
+//! This module generates multi-job scenarios for that regime: each
+//! job class has a configurable arrival process ([`Arrival`]), job-size
+//! and duration distributions, and a priority; [`ContentionMix`]
+//! expands a set of classes into a time-sorted submission stream the
+//! contention runner ([`crate::coordinator::experiment::run_contention`])
+//! feeds to the scheduler. Per-class launch latency and utilization are
+//! computed by [`crate::metrics::contention`], so the paper's "fast
+//! interactive launch while batch keeps the machine busy" claim is
+//! directly measurable — with and without backfill.
+
+use crate::error::{Error, Result};
+use crate::scheduler::job::{ComputeBatch, JobSpec, ResourceRequest, SchedTaskSpec};
+use crate::sim::Time;
+use crate::util::rng::Rng;
+use crate::workload::taskgen::TaskGen;
+
+/// Which contention class a job belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum JobClass {
+    /// Small, short, latency-sensitive core-level jobs.
+    Interactive,
+    /// Large, long-running whole-node array jobs.
+    Batch,
+}
+
+/// Both classes, in report order.
+pub const JOB_CLASSES: [JobClass; 2] = [JobClass::Interactive, JobClass::Batch];
+
+impl JobClass {
+    /// Short label used in job names and report rows.
+    pub fn label(&self) -> &'static str {
+        match self {
+            JobClass::Interactive => "interactive",
+            JobClass::Batch => "batch",
+        }
+    }
+}
+
+impl std::fmt::Display for JobClass {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.label())
+    }
+}
+
+/// A job arrival process over a finite horizon.
+#[derive(Debug, Clone, Copy)]
+pub enum Arrival {
+    /// Poisson arrivals at `rate` jobs per second.
+    Poisson { rate: f64 },
+    /// Fixed inter-arrival `gap`, first job at `start`.
+    Periodic { gap: Time, start: Time },
+    /// `count` jobs all submitted at `at`.
+    Burst { at: Time, count: u64 },
+}
+
+impl Arrival {
+    /// Materialize arrival times within `[0, horizon)`.
+    pub fn times(&self, horizon: Time, rng: &mut Rng) -> Vec<Time> {
+        match *self {
+            Arrival::Poisson { rate } => {
+                let mut out = Vec::new();
+                if rate <= 0.0 {
+                    return out;
+                }
+                let mut t = rng.exponential(rate);
+                while t < horizon {
+                    out.push(t);
+                    t += rng.exponential(rate);
+                }
+                out
+            }
+            Arrival::Periodic { gap, start } => {
+                let mut out = Vec::new();
+                if gap <= 0.0 {
+                    return out;
+                }
+                let mut t = start;
+                while t < horizon {
+                    out.push(t);
+                    t += gap;
+                }
+                out
+            }
+            Arrival::Burst { at, count } => {
+                if at < horizon {
+                    vec![at; count as usize]
+                } else {
+                    Vec::new()
+                }
+            }
+        }
+    }
+}
+
+/// One job class of a contention mix.
+#[derive(Debug, Clone)]
+pub struct ClassSpec {
+    pub class: JobClass,
+    pub arrival: Arrival,
+    /// Scheduling tasks per job (array size).
+    pub tasks_per_job: u64,
+    /// Per-task resource shape (core-level or whole-node).
+    pub request: ResourceRequest,
+    /// Per-task duration distribution.
+    pub duration: TaskGen,
+    /// Dispatch priority (higher first; interactive outranks batch).
+    pub priority: i32,
+    /// Parallel compute lanes per scheduling task.
+    pub lanes: u32,
+}
+
+/// A named interactive-vs-batch scenario.
+#[derive(Debug, Clone)]
+pub struct ContentionMix {
+    pub name: String,
+    /// Cluster size the mix is scaled for.
+    pub nodes: u32,
+    /// Arrival horizon, seconds (the run itself drains past it).
+    pub horizon: Time,
+    pub classes: Vec<ClassSpec>,
+}
+
+/// One job submission: when, what, and which class it belongs to.
+#[derive(Debug, Clone)]
+pub struct Submission {
+    pub at: Time,
+    pub class: JobClass,
+    pub spec: JobSpec,
+}
+
+impl ContentionMix {
+    /// Expand the mix into a time-sorted submission stream. Arrival and
+    /// duration streams are forked per class, so adding a class never
+    /// perturbs another class's draws.
+    pub fn generate(&self, seed: u64) -> Vec<Submission> {
+        let mut root = Rng::new(seed);
+        let mut subs = Vec::new();
+        for (ci, cs) in self.classes.iter().enumerate() {
+            let mut arr_rng = root.fork();
+            let mut dur_rng = root.fork();
+            let times = cs.arrival.times(self.horizon, &mut arr_rng);
+            for (ji, at) in times.into_iter().enumerate() {
+                let mut tasks = Vec::with_capacity(cs.tasks_per_job as usize);
+                for _ in 0..cs.tasks_per_job {
+                    // Floor keeps pathological samples out of the DES
+                    // (durations must be strictly positive).
+                    let d = cs.duration.sample(&mut dur_rng).max(0.01);
+                    tasks.push(SchedTaskSpec {
+                        request: cs.request,
+                        duration: d,
+                        batch: ComputeBatch { count: 1, each: d },
+                        lanes: cs.lanes,
+                    });
+                }
+                subs.push(Submission {
+                    at,
+                    class: cs.class,
+                    spec: JobSpec {
+                        name: format!("{}-{ci}-{ji}", cs.class.label()),
+                        tasks,
+                        reservation: None,
+                        priority: cs.priority,
+                        preemptable: false,
+                    },
+                });
+            }
+        }
+        subs.sort_by(|a, b| a.at.partial_cmp(&b.at).expect("no NaN arrival"));
+        subs
+    }
+
+    /// Total scheduling tasks across all submissions.
+    pub fn total_tasks(&self, seed: u64) -> u64 {
+        self.generate(seed)
+            .iter()
+            .map(|s| s.spec.array_size())
+            .sum()
+    }
+
+    /// A named preset scaled to `nodes` (64-core nodes assumed):
+    ///
+    /// * `tiny` — seconds-long smoke mix for CI and tests;
+    /// * `default` — a balanced mix: periodic half-machine batch
+    ///   arrays under a Poisson stream of small interactive jobs;
+    /// * `heavy` — full-machine batch arrays under sustained
+    ///   interactive pressure (the starvation regime).
+    pub fn preset(name: &str, nodes: u32) -> Result<ContentionMix> {
+        let nodes = nodes.max(2);
+        match name {
+            "tiny" => Ok(ContentionMix {
+                name: "tiny".into(),
+                nodes,
+                horizon: 150.0,
+                classes: vec![
+                    ClassSpec {
+                        class: JobClass::Interactive,
+                        arrival: Arrival::Poisson { rate: 0.2 },
+                        tasks_per_job: 2,
+                        request: ResourceRequest::Cores { cores: 2, mem_mib: 128 },
+                        duration: TaskGen::LogNormal { median: 3.0, sigma: 0.5 },
+                        priority: 10,
+                        lanes: 2,
+                    },
+                    ClassSpec {
+                        class: JobClass::Batch,
+                        arrival: Arrival::Periodic { gap: 60.0, start: 5.0 },
+                        tasks_per_job: (nodes / 2).max(1) as u64,
+                        request: ResourceRequest::WholeNode,
+                        duration: TaskGen::Constant { seconds: 60.0 },
+                        priority: -5,
+                        lanes: 64,
+                    },
+                ],
+            }),
+            "default" => Ok(ContentionMix {
+                name: "default".into(),
+                nodes,
+                horizon: 600.0,
+                classes: vec![
+                    ClassSpec {
+                        class: JobClass::Interactive,
+                        arrival: Arrival::Poisson { rate: 0.25 },
+                        tasks_per_job: 4,
+                        request: ResourceRequest::Cores { cores: 2, mem_mib: 256 },
+                        duration: TaskGen::Bimodal { short: 2.0, long: 20.0, p_long: 0.2 },
+                        priority: 10,
+                        lanes: 2,
+                    },
+                    ClassSpec {
+                        class: JobClass::Batch,
+                        arrival: Arrival::Periodic { gap: 150.0, start: 10.0 },
+                        tasks_per_job: (nodes / 2).max(1) as u64,
+                        request: ResourceRequest::WholeNode,
+                        duration: TaskGen::Constant { seconds: 180.0 },
+                        priority: -5,
+                        lanes: 64,
+                    },
+                ],
+            }),
+            "heavy" => Ok(ContentionMix {
+                name: "heavy".into(),
+                nodes,
+                horizon: 900.0,
+                classes: vec![
+                    ClassSpec {
+                        class: JobClass::Interactive,
+                        arrival: Arrival::Poisson { rate: 0.5 },
+                        tasks_per_job: 4,
+                        request: ResourceRequest::Cores { cores: 4, mem_mib: 256 },
+                        duration: TaskGen::Bimodal { short: 2.0, long: 30.0, p_long: 0.25 },
+                        priority: 10,
+                        lanes: 4,
+                    },
+                    ClassSpec {
+                        class: JobClass::Batch,
+                        arrival: Arrival::Periodic { gap: 240.0, start: 10.0 },
+                        tasks_per_job: nodes as u64,
+                        request: ResourceRequest::WholeNode,
+                        duration: TaskGen::Constant { seconds: 240.0 },
+                        priority: -5,
+                        lanes: 64,
+                    },
+                ],
+            }),
+            other => Err(Error::Config(format!(
+                "unknown contention preset {other:?} (known: tiny, default, heavy)"
+            ))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_roughly_respected() {
+        let mut rng = Rng::new(1);
+        let times = Arrival::Poisson { rate: 0.5 }.times(10_000.0, &mut rng);
+        let n = times.len() as f64;
+        assert!((n - 5000.0).abs() < 300.0, "count {n}");
+        assert!(times.windows(2).all(|w| w[0] <= w[1]), "sorted");
+        assert!(times.iter().all(|&t| (0.0..10_000.0).contains(&t)));
+    }
+
+    #[test]
+    fn periodic_and_burst_arrivals() {
+        let mut rng = Rng::new(2);
+        let p = Arrival::Periodic { gap: 50.0, start: 10.0 }.times(200.0, &mut rng);
+        assert_eq!(p, vec![10.0, 60.0, 110.0, 160.0]);
+        let b = Arrival::Burst { at: 30.0, count: 3 }.times(200.0, &mut rng);
+        assert_eq!(b, vec![30.0, 30.0, 30.0]);
+        let late = Arrival::Burst { at: 250.0, count: 3 }.times(200.0, &mut rng);
+        assert!(late.is_empty(), "out-of-horizon bursts are dropped");
+        let none = Arrival::Poisson { rate: 0.0 }.times(100.0, &mut rng);
+        assert!(none.is_empty());
+    }
+
+    #[test]
+    fn generation_is_deterministic_and_sorted() {
+        let mix = ContentionMix::preset("tiny", 8).unwrap();
+        let a = mix.generate(42);
+        let b = mix.generate(42);
+        assert_eq!(a.len(), b.len());
+        assert!(!a.is_empty());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at, y.at);
+            assert_eq!(x.class, y.class);
+            assert_eq!(x.spec.array_size(), y.spec.array_size());
+        }
+        assert!(a.windows(2).all(|w| w[0].at <= w[1].at), "time-sorted");
+        // Both classes are present.
+        assert!(a.iter().any(|s| s.class == JobClass::Interactive));
+        assert!(a.iter().any(|s| s.class == JobClass::Batch));
+    }
+
+    #[test]
+    fn presets_resolve_and_validate() {
+        for name in ["tiny", "default", "heavy"] {
+            let mix = ContentionMix::preset(name, 16).unwrap();
+            assert_eq!(mix.name, name);
+            for sub in mix.generate(7) {
+                sub.spec.validate(64).expect("generated job is valid");
+            }
+        }
+        assert!(ContentionMix::preset("bogus", 16).is_err());
+    }
+
+    #[test]
+    fn batch_jobs_are_whole_node_and_lower_priority() {
+        let mix = ContentionMix::preset("default", 32).unwrap();
+        let subs = mix.generate(1);
+        for s in &subs {
+            match s.class {
+                JobClass::Batch => {
+                    assert!(s
+                        .spec
+                        .tasks
+                        .iter()
+                        .all(|t| t.request == ResourceRequest::WholeNode));
+                    assert!(s.spec.priority < 0);
+                }
+                JobClass::Interactive => {
+                    assert!(s
+                        .spec
+                        .tasks
+                        .iter()
+                        .all(|t| matches!(t.request, ResourceRequest::Cores { .. })));
+                    assert!(s.spec.priority > 0);
+                }
+            }
+        }
+    }
+}

@@ -1,10 +1,13 @@
 //! Workload construction: the paper's benchmark matrix, synthetic task
-//! distributions for extension studies, and trace record/replay.
+//! distributions for extension studies, interactive-vs-batch contention
+//! mixes, and trace record/replay.
 
+pub mod contention;
 pub mod paper;
 pub mod taskgen;
 pub mod trace;
 
+pub use contention::{Arrival, ClassSpec, ContentionMix, JobClass, Submission};
 pub use paper::{paper_workload, PaperCell};
 pub use taskgen::TaskGen;
 pub use trace::Trace;

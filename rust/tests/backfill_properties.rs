@@ -1,0 +1,295 @@
+//! Backfill invariants, end-to-end through the scheduler.
+//!
+//! Two properties pin the reservation machinery down:
+//!
+//! 1. **No delay**: no backfilled task placed on a held node may still
+//!    be running when the hold's planned start arrives (checked from
+//!    the recorded `BackfillEvent`s against the task records), and
+//!    enabling backfill must not push a whole-node job's start
+//!    materially later than the plain head-of-line discipline.
+//! 2. **No starvation**: under sustained small-job pressure, whole-node
+//!    jobs still run promptly — the earliest-start hold fences a
+//!    draining node off from the backfill stream.
+
+use llsched::cluster::Cluster;
+use llsched::scheduler::core::{SchedulerSim, SimOutcome, TaskModel};
+use llsched::scheduler::costmodel::CostModel;
+use llsched::scheduler::job::{
+    ComputeBatch, JobSpec, ResourceRequest, SchedTaskSpec, TaskState,
+};
+use llsched::scheduler::noise::NoiseModel;
+use llsched::sim::EventQueue;
+use llsched::testing::prop::forall;
+
+/// Quiet, deterministic sim: no noise, no jitter, unit server speed.
+fn quiet_sim(nodes: u32, seed: u64, backfill: bool) -> SchedulerSim {
+    SchedulerSim::new(
+        Cluster::tx_green(nodes),
+        CostModel::slurm_like_tx_green(),
+        NoiseModel::dedicated(),
+        seed,
+    )
+    .with_task_model(TaskModel {
+        startup: 0.0,
+        jitter_sigma: 0.0,
+        p_node_late: 0.0,
+        late_range: (0.0, 0.0),
+    })
+    .with_server_speed(1.0)
+    .with_backfill(backfill)
+}
+
+fn job(
+    name: &str,
+    n_tasks: usize,
+    request: ResourceRequest,
+    duration: f64,
+    priority: i32,
+) -> JobSpec {
+    let lanes = match request {
+        ResourceRequest::WholeNode => 64,
+        ResourceRequest::Cores { cores, .. } => cores,
+    };
+    JobSpec {
+        name: name.into(),
+        tasks: vec![
+            SchedTaskSpec {
+                request,
+                duration,
+                batch: ComputeBatch { count: 1, each: duration },
+                lanes,
+            };
+            n_tasks
+        ],
+        reservation: None,
+        priority,
+        preemptable: false,
+    }
+}
+
+/// Assert the recorded backfills respect the no-delay invariant.
+fn assert_holds_respected(out: &SimOutcome) {
+    for b in &out.backfills {
+        let Some(h) = b.hold else { continue };
+        if b.node != h.node {
+            continue;
+        }
+        let end = out.records[b.task as usize]
+            .end_t
+            .expect("backfilled task ran");
+        assert!(
+            end <= h.start + 1e-6,
+            "backfilled task {} on held node {} ends {} after hold start {}",
+            b.task,
+            b.node,
+            end,
+            h.start
+        );
+    }
+}
+
+// A crafted gap scenario: node 0 half-busy with a 50 s core job, node 1
+// taken whole; a second whole-node task blocks and holds node 0 while
+// short interactive tasks arrive — they must backfill into node 0's gap
+// and vacate before the hold starts.
+fn gap_scenario(backfill: bool) -> SimOutcome {
+    let mut sim = quiet_sim(2, 9, backfill);
+    let mut q = EventQueue::new();
+    sim.submit_at(
+        &mut q,
+        0.0,
+        job("warm", 1, ResourceRequest::Cores { cores: 32, mem_mib: 0 }, 50.0, 0),
+    );
+    sim.submit_at(&mut q, 1.0, job("batch", 2, ResourceRequest::WholeNode, 100.0, 0));
+    sim.submit_at(
+        &mut q,
+        2.0,
+        job("inter", 10, ResourceRequest::Cores { cores: 8, mem_mib: 0 }, 5.0, 5),
+    );
+    sim.run(&mut q)
+}
+
+#[test]
+fn backfill_fills_gaps_and_vacates_before_the_hold() {
+    let out = gap_scenario(true);
+    assert!(out.records.iter().all(|r| r.state == TaskState::Done));
+    assert!(!out.backfills.is_empty(), "the gap scenario must backfill");
+    assert_holds_respected(&out);
+    // Interactive tasks ran well before the 50 s drain of node 0.
+    let inter_starts: Vec<f64> = out
+        .records
+        .iter()
+        .filter(|r| r.job == 2)
+        .map(|r| r.start_t.unwrap())
+        .collect();
+    assert_eq!(inter_starts.len(), 10);
+    assert!(
+        inter_starts.iter().all(|&s| s < 45.0),
+        "interactive starts {inter_starts:?} should beat the 50 s drain"
+    );
+}
+
+#[test]
+fn backfill_does_not_delay_whole_node_starts() {
+    let with = gap_scenario(true);
+    let without = gap_scenario(false);
+    let last_batch_start = |out: &SimOutcome| -> f64 {
+        out.records
+            .iter()
+            .filter(|r| r.job == 1)
+            .map(|r| r.start_t.unwrap())
+            .fold(0.0, f64::max)
+    };
+    let on = last_batch_start(&with);
+    let off = last_batch_start(&without);
+    // Generous server-op slack; a real regression (waiting out a 5 s
+    // interactive wave, or worse) is an order of magnitude larger.
+    assert!(
+        on <= off + 5.0,
+        "backfill delayed the whole-node job: {on} vs {off}"
+    );
+    // And the interactive class must have gained from backfill.
+    let median_inter = |out: &SimOutcome| -> f64 {
+        let mut lats: Vec<f64> = out
+            .records
+            .iter()
+            .filter(|r| r.job == 2)
+            .map(|r| r.start_t.unwrap() - r.submit_t)
+            .collect();
+        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        lats[lats.len() / 2]
+    };
+    assert!(
+        median_inter(&with) + 10.0 < median_inter(&without),
+        "backfill should cut interactive latency: {} vs {}",
+        median_inter(&with),
+        median_inter(&without)
+    );
+}
+
+#[test]
+fn whole_node_jobs_run_under_sustained_small_job_pressure() {
+    // 4 nodes; an oversubscribing stream of 48-core 10 s tasks (arrays
+    // of 5, every 5 s, for 300 s — only one fits per node, so nodes are
+    // never wholly free while the stream has backlog) plus a trickle of
+    // 8-core 2 s tasks that can backfill into the 16-core gaps. A
+    // 2-task whole-node job submitted at t = 20 must still start
+    // promptly: its hold fences a draining node off from the stream.
+    let mut sim = quiet_sim(4, 13, true);
+    let mut q = EventQueue::new();
+    for i in 0..60u64 {
+        sim.submit_at(
+            &mut q,
+            5.0 * i as f64,
+            job("big", 5, ResourceRequest::Cores { cores: 48, mem_mib: 0 }, 10.0, 0),
+        );
+        sim.submit_at(
+            &mut q,
+            5.0 * i as f64 + 2.5,
+            job("small", 5, ResourceRequest::Cores { cores: 8, mem_mib: 0 }, 2.0, 0),
+        );
+    }
+    // Off the 2.5 s arrival grid so the submit does not land inside
+    // another job's registration window (which would spin TICK retries).
+    let batch = sim.submit_at(&mut q, 21.3, job("batch", 2, ResourceRequest::WholeNode, 30.0, 0));
+    let out = sim.run(&mut q);
+    assert!(out.records.iter().all(|r| r.state == TaskState::Done));
+    assert!(!out.backfills.is_empty(), "pressure scenario must backfill");
+    assert_holds_respected(&out);
+    let batch_starts: Vec<f64> = out
+        .records
+        .iter()
+        .filter(|r| r.job == batch)
+        .map(|r| r.start_t.unwrap())
+        .collect();
+    assert_eq!(batch_starts.len(), 2);
+    for s in &batch_starts {
+        assert!(
+            *s < 150.0,
+            "whole-node task starved until {s} under small-job pressure"
+        );
+    }
+}
+
+#[test]
+fn backfilled_tasks_never_delay_reservations_under_random_mixes() {
+    forall("backfill no-delay invariant", 25, |g| {
+        let nodes = 2 + g.int(0, 4) as u32;
+        let seed = g.int(0, u64::MAX - 1);
+        let mut sim = quiet_sim(nodes, seed, true);
+        let mut q = EventQueue::new();
+        // One whole-node batch array somewhere in the arrival window.
+        let batch_tasks = 1 + g.usize(1, nodes as usize * 2);
+        let batch_at = g.f64(0.0, 20.0);
+        sim.submit_at(
+            &mut q,
+            batch_at,
+            job(
+                "batch",
+                batch_tasks,
+                ResourceRequest::WholeNode,
+                g.f64(20.0, 120.0),
+                0,
+            ),
+        );
+        // A fleet of small core jobs around it. Arrival times sit on a
+        // fixed grid wider than the ~0.5 s registration window, so
+        // submissions do not pile into TICK-granularity retry spins.
+        let n_small = 5 + g.usize(0, 35);
+        for i in 0..n_small {
+            let cores = 1 << g.int(0, 5); // 1..32
+            sim.submit_at(
+                &mut q,
+                1.0 + 1.25 * i as f64,
+                job(
+                    &format!("small-{i}"),
+                    1 + g.usize(0, 3),
+                    ResourceRequest::Cores { cores: cores as u32, mem_mib: 0 },
+                    g.f64(1.0, 15.0),
+                    g.int(0, 10) as i32,
+                ),
+            );
+        }
+        let out = sim.run(&mut q);
+        if !out.records.iter().all(|r| r.state == TaskState::Done) {
+            return Err("run did not drain".into());
+        }
+        for b in &out.backfills {
+            let Some(h) = b.hold else { continue };
+            if b.node != h.node {
+                continue;
+            }
+            let end = out.records[b.task as usize]
+                .end_t
+                .ok_or("backfilled task has no end")?;
+            if end > h.start + 1e-6 {
+                return Err(format!(
+                    "task {} on held node {} ends {} > hold start {}",
+                    b.task, b.node, end, h.start
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn backfill_off_keeps_plain_head_of_line_semantics() {
+    // With backfill disabled nothing may be recorded and the run must
+    // behave exactly like the seed scheduler (strict head-of-line).
+    let out = gap_scenario(false);
+    assert!(out.backfills.is_empty());
+    assert!(out.records.iter().all(|r| r.state == TaskState::Done));
+    // Strict HOL: no interactive task may start before the whole-node
+    // head unblocks at the 50 s drain.
+    let first_inter = out
+        .records
+        .iter()
+        .filter(|r| r.job == 2)
+        .map(|r| r.start_t.unwrap())
+        .fold(f64::INFINITY, f64::min);
+    assert!(
+        first_inter >= 50.0,
+        "without backfill interactive waits for the drain, got {first_inter}"
+    );
+}
