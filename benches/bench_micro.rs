@@ -79,10 +79,10 @@ fn main() {
     let r = bench("push+pop 32768", opts, |_| {
         let mut q = PendingQueue::new();
         for t in 0..32_768u64 {
-            q.push(t, 0);
+            q.push(t, 0, 0.0);
         }
         let mut n = 0u64;
-        while q.pop().is_some() {
+        while q.pop(0.0).is_some() {
             n += 1;
         }
         n

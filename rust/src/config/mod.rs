@@ -6,6 +6,7 @@ pub mod presets;
 
 use crate::error::{Error, Result};
 use crate::placement::Strategy;
+use crate::scheduler::queue::AgingPolicy;
 use parser::Value;
 
 /// Which aggregation mode a run uses (paper §II).
@@ -81,6 +82,20 @@ pub struct RunConfig {
     /// whole-node heads hold earliest-start reservations while small
     /// core-level tasks fill gaps ([`crate::placement::backfill`]).
     pub backfill: bool,
+    /// Max simultaneous backfill holds (`holds = 4`): earliest-start
+    /// reservations for the top-K blocked whole-node tasks. `1` is the
+    /// original EASY single-hold discipline; only meaningful with
+    /// `backfill = true`.
+    pub holds: usize,
+    /// Queue-aging slope (`aging = 0.5`), in priority points per second
+    /// of pending wait; `0` disables aging (static priorities).
+    pub aging: f64,
+    /// Cap on the aging boost (`aging_cap = 1000`).
+    pub aging_cap: i32,
+    /// Walltime-estimate error sigma (`walltime_error = 0.3`):
+    /// log-normal multiplicative error on the estimates backfill plans
+    /// from; `0` keeps the DES's exact-oracle estimates.
+    pub walltime_error: f64,
 }
 
 impl Default for RunConfig {
@@ -96,6 +111,10 @@ impl Default for RunConfig {
             task_mem_mib: 512,
             placement: None,
             backfill: false,
+            holds: 4,
+            aging: 0.0,
+            aging_cap: 1000,
+            walltime_error: 0.0,
         }
     }
 }
@@ -129,6 +148,15 @@ impl RunConfig {
                 "task_time {} exceeds job_time {}",
                 self.task_time, self.job_time
             )));
+        }
+        if self.holds == 0 {
+            return Err(Error::Config("holds must be >= 1".into()));
+        }
+        if self.aging < 0.0 || self.aging_cap < 0 {
+            return Err(Error::Config("aging slope and cap must be >= 0".into()));
+        }
+        if self.walltime_error < 0.0 {
+            return Err(Error::Config("walltime_error must be >= 0".into()));
         }
         Ok(())
     }
@@ -167,8 +195,43 @@ impl RunConfig {
         if let Some(v) = run.get("backfill") {
             c.backfill = v.as_bool()?;
         }
+        if let Some(v) = run.get("holds") {
+            // Range-check before the usize cast: a negative value must
+            // be a config error, not a wrap to a huge hold capacity.
+            let holds = v.as_int()?;
+            if holds < 1 {
+                return Err(Error::Config(format!("holds must be >= 1, got {holds}")));
+            }
+            c.holds = holds as usize;
+        }
+        if let Some(v) = run.get("aging") {
+            c.aging = v.as_float()?;
+        }
+        if let Some(v) = run.get("aging_cap") {
+            let cap = v.as_int()?;
+            if !(0..=i32::MAX as i64).contains(&cap) {
+                return Err(Error::Config(format!(
+                    "aging_cap must be in 0..={}, got {cap}",
+                    i32::MAX
+                )));
+            }
+            c.aging_cap = cap as i32;
+        }
+        if let Some(v) = run.get("walltime_error") {
+            c.walltime_error = v.as_float()?;
+        }
         c.validate()?;
         Ok(c)
+    }
+
+    /// The queue-aging policy this run uses (`None` when the slope is
+    /// zero: static priorities).
+    pub fn aging_policy(&self) -> Option<AgingPolicy> {
+        if self.aging > 0.0 {
+            Some(AgingPolicy::new(self.aging, self.aging_cap))
+        } else {
+            None
+        }
     }
 
     /// The placement strategy this run uses: the explicit `placement`
@@ -248,6 +311,51 @@ mod tests {
         assert!(c.backfill);
         let bad = parser::parse("[run]\nbackfill = \"yes\"\n").unwrap();
         assert!(RunConfig::from_value(&bad).is_err());
+    }
+
+    #[test]
+    fn fairness_keys_parse_with_defaults() {
+        let v = parser::parse("[run]\n").unwrap();
+        let c = RunConfig::from_value(&v).unwrap();
+        assert_eq!(c.holds, 4);
+        assert_eq!(c.aging, 0.0);
+        assert_eq!(c.aging_cap, 1000);
+        assert_eq!(c.walltime_error, 0.0);
+        assert!(c.aging_policy().is_none(), "zero slope = static priorities");
+        let v = parser::parse(
+            "[run]\nholds = 2\naging = 0.5\naging_cap = 64\nwalltime_error = 0.3\n",
+        )
+        .unwrap();
+        let c = RunConfig::from_value(&v).unwrap();
+        assert_eq!(c.holds, 2);
+        assert_eq!(c.aging, 0.5);
+        assert_eq!(c.aging_cap, 64);
+        assert_eq!(c.walltime_error, 0.3);
+        let policy = c.aging_policy().expect("positive slope enables aging");
+        assert_eq!(policy.slope, 0.5);
+        assert_eq!(policy.cap, 64);
+    }
+
+    #[test]
+    fn fairness_keys_validated() {
+        let mut c = RunConfig::default();
+        c.holds = 0;
+        assert!(c.validate().is_err(), "zero holds rejected");
+        let mut c = RunConfig::default();
+        c.aging = -0.1;
+        assert!(c.validate().is_err(), "negative slope rejected");
+        let mut c = RunConfig::default();
+        c.walltime_error = -0.5;
+        assert!(c.validate().is_err(), "negative sigma rejected");
+        let bad = parser::parse("[run]\nholds = 0\n").unwrap();
+        assert!(RunConfig::from_value(&bad).is_err());
+        // Negative values must error, not wrap through the casts.
+        let bad = parser::parse("[run]\nholds = -3\n").unwrap();
+        assert!(RunConfig::from_value(&bad).is_err());
+        let bad = parser::parse("[run]\naging_cap = -1\n").unwrap();
+        assert!(RunConfig::from_value(&bad).is_err());
+        let bad = parser::parse("[run]\naging_cap = 5000000000\n").unwrap();
+        assert!(RunConfig::from_value(&bad).is_err(), "out of i32 range");
     }
 
     #[test]

@@ -62,8 +62,14 @@ pub fn cell(nodes: u32, task: &TaskConfig, mode: Mode, run_idx: usize) -> RunCon
         // the core-level modes); sweeps override it explicitly.
         placement: None,
         // The paper's single-job matrix has no contention to backfill
-        // around; contention runs opt in explicitly.
+        // around; contention runs opt in explicitly. The fairness knobs
+        // keep their config defaults (top-4 holds, aging off, exact
+        // walltime estimates) — all inert while backfill is off.
         backfill: false,
+        holds: 4,
+        aging: 0.0,
+        aging_cap: 1000,
+        walltime_error: 0.0,
     }
 }
 

@@ -13,8 +13,11 @@ use crate::placement::Strategy;
 use crate::scheduler::core::{SchedulerSim, SimOutcome};
 use crate::scheduler::costmodel::CostModel;
 use crate::scheduler::noise::NoiseModel;
+use crate::scheduler::queue::AgingPolicy;
 use crate::sim::EventQueue;
-use crate::workload::contention::{ContentionMix, JobClass};
+use crate::util::csv::Csv;
+use crate::util::json::Json;
+use crate::workload::contention::{ContentionMix, JobClass, WalltimeError};
 use crate::workload::paper::PaperCell;
 
 /// Result of one benchmark run (one cell, one repetition).
@@ -80,7 +83,10 @@ pub fn run_cell(cell: &PaperCell) -> Result<CellResult> {
     let placement = cfg.placement_strategy();
     let sim = SchedulerSim::new(cluster, CostModel::slurm_like_tx_green(), noise, cfg.seed)
         .with_placement(placement)
-        .with_backfill(cfg.backfill);
+        .with_backfill(cfg.backfill)
+        .with_holds(cfg.holds)
+        .with_aging(cfg.aging_policy())
+        .with_walltime_error(WalltimeError::from_sigma(cfg.walltime_error));
     let agg = aggregation::for_mode(cfg.mode);
     let job = agg.plan(&cell.label(), &cell.workload(), &cell.shape())?;
     let (outcome, job_id) = sim.run_single(job);
@@ -135,12 +141,43 @@ pub fn run_placement_sweep(
         .collect()
 }
 
+/// Knobs for one contention run: backfill plus the fairness / noise
+/// layer — top-K holds, queue aging, walltime-estimate error.
+#[derive(Debug, Clone, Copy)]
+pub struct ContentionOpts {
+    pub backfill: bool,
+    /// Max simultaneous earliest-start holds (K; `1` = the original
+    /// EASY single-hold discipline).
+    pub holds: usize,
+    /// Queue aging (`None` = static priorities).
+    pub aging: Option<AgingPolicy>,
+    /// Walltime-estimate error model the ledger plans from.
+    pub walltime_error: WalltimeError,
+    pub seed: u64,
+}
+
+impl ContentionOpts {
+    /// The classic (pre-fairness-layer) options: single hold, no aging,
+    /// exact estimates — schedules are bit-for-bit the historical ones.
+    pub fn classic(backfill: bool, seed: u64) -> ContentionOpts {
+        ContentionOpts {
+            backfill,
+            holds: 1,
+            aging: None,
+            walltime_error: WalltimeError::None,
+            seed,
+        }
+    }
+}
+
 /// Result of one interactive-vs-batch contention run.
 #[derive(Debug)]
 pub struct ContentionResult {
     pub mix_name: String,
     pub nodes: u32,
     pub backfill: bool,
+    /// The full knob set the run used.
+    pub opts: ContentionOpts,
     /// Per-class launch latency / utilization ([`JobClass`] order:
     /// interactive, batch).
     pub reports: Vec<ClassReport>,
@@ -150,23 +187,39 @@ pub struct ContentionResult {
     pub utilization: f64,
     /// Backfill dispatches performed.
     pub backfills: usize,
+    /// Peak simultaneous holds observed (≤ the configured K).
+    pub max_active_holds: usize,
     /// Every backfill placed on a held node vacated it by the hold's
     /// planned start (the no-delay invariant, checked from records).
+    /// Trivially true under a walltime-error model: delays then are the
+    /// modelled estimate error, not a scheduler bug.
     pub holds_respected: bool,
     /// Tasks that never finished (should be 0 — arrivals are finite).
     pub unfinished: usize,
 }
 
-/// Run one contention mix end-to-end: submit the generated interactive
-/// and batch streams, drain the scheduler, and split launch latency and
-/// utilization by class. `backfill` flips the reservation + backfill
-/// machinery; placement uses the node-based fast path (the mix contains
-/// whole-node jobs by construction).
+/// Run one contention mix with the classic single-hold options — the
+/// historical entry point; see [`run_contention_with`] for the fairness
+/// and noise knobs.
 pub fn run_contention(
     mix: &ContentionMix,
     backfill: bool,
     seed: u64,
 ) -> Result<ContentionResult> {
+    run_contention_with(mix, ContentionOpts::classic(backfill, seed))
+}
+
+/// Run one contention mix end-to-end: submit the generated interactive
+/// and batch streams, drain the scheduler, and split launch latency and
+/// utilization by class. `opts.backfill` flips the reservation +
+/// backfill machinery, `opts.holds`/`opts.aging`/`opts.walltime_error`
+/// the fairness layer; placement uses the node-based fast path (the mix
+/// contains whole-node jobs by construction).
+pub fn run_contention_with(
+    mix: &ContentionMix,
+    opts: ContentionOpts,
+) -> Result<ContentionResult> {
+    let seed = opts.seed;
     let cluster = Cluster::tx_green(mix.nodes);
     let total_cores = cluster.total_cores();
     let mut sim = SchedulerSim::new(
@@ -176,7 +229,10 @@ pub fn run_contention(
         seed,
     )
     .with_placement(Strategy::NodeBased)
-    .with_backfill(backfill);
+    .with_backfill(opts.backfill)
+    .with_holds(opts.holds)
+    .with_aging(opts.aging)
+    .with_walltime_error(opts.walltime_error);
     let mut q = EventQueue::new();
     let subs = mix.generate(seed);
     if subs.is_empty() {
@@ -198,20 +254,23 @@ pub fn run_contention(
     // estimate); the task model adds half-normal jitter (σ = 0.4 s) on
     // top, modelling estimate error. Tolerate its tail here — the
     // strict zero-jitter invariant is pinned by the property tests in
-    // `rust/tests/backfill_properties.rs`.
+    // `rust/tests/backfill_properties.rs`. Under an explicit
+    // walltime-error model, hold delays are the *modelled* estimate
+    // error — expected, not a bug — so the check is skipped.
     let jitter_slack = 5.0;
-    let holds_respected = outcome.backfills.iter().all(|b| {
-        let Some(h) = b.hold else {
-            return true;
-        };
-        if b.node != h.node {
-            return true;
-        }
-        outcome.records[b.task as usize]
-            .end_t
-            .map(|end| end <= h.start + jitter_slack)
-            .unwrap_or(false)
-    });
+    let holds_respected = opts.walltime_error != WalltimeError::None
+        || outcome.backfills.iter().all(|b| {
+            let Some(h) = b.hold else {
+                return true;
+            };
+            if b.node != h.node {
+                return true;
+            }
+            outcome.records[b.task as usize]
+                .end_t
+                .map(|end| end <= h.start + jitter_slack)
+                .unwrap_or(false)
+        });
     let unfinished = outcome
         .records
         .iter()
@@ -220,14 +279,129 @@ pub fn run_contention(
     Ok(ContentionResult {
         mix_name: mix.name.clone(),
         nodes: mix.nodes,
-        backfill,
+        backfill: opts.backfill,
+        opts,
         reports,
         span,
         utilization,
         backfills: outcome.backfills.len(),
+        max_active_holds: outcome.max_active_holds,
         holds_respected,
         unfinished,
     })
+}
+
+/// Human label for the aging knob in exports: `off` or `slope/cap`.
+fn aging_label(aging: Option<AgingPolicy>) -> String {
+    match aging {
+        None => "off".into(),
+        Some(a) => format!("{}/{}", a.slope, a.cap),
+    }
+}
+
+/// Fixed-precision CSV cell; NaN (e.g. no-task latency) renders empty,
+/// matching [`Csv::row_f64`]'s convention.
+fn f6(x: f64) -> String {
+    if x.is_nan() {
+        String::new()
+    } else {
+        format!("{x:.6}")
+    }
+}
+
+/// Per-class contention series as CSV (one row per scenario × class),
+/// mirroring `fig1 --out`: the `contention --out DIR` data dump.
+pub fn contention_csv(results: &[ContentionResult]) -> Csv {
+    let mut c = Csv::with_header(&[
+        "scenario",
+        "nodes",
+        "backfill",
+        "holds",
+        "aging",
+        "walltime_error",
+        "class",
+        "jobs",
+        "tasks",
+        "completed",
+        "median_latency_s",
+        "p95_latency_s",
+        "max_latency_s",
+        "starvation_age_s",
+        "core_seconds",
+        "utilization",
+        "span_s",
+        "backfills",
+        "max_active_holds",
+    ]);
+    for r in results {
+        for rep in &r.reports {
+            c.row(&[
+                r.mix_name.clone(),
+                r.nodes.to_string(),
+                r.backfill.to_string(),
+                r.opts.holds.to_string(),
+                aging_label(r.opts.aging),
+                r.opts.walltime_error.to_string(),
+                rep.class.to_string(),
+                rep.jobs.to_string(),
+                rep.tasks.to_string(),
+                rep.completed.to_string(),
+                f6(rep.median_launch_latency),
+                f6(rep.p95_launch_latency),
+                f6(rep.max_launch_latency),
+                f6(rep.starvation_age),
+                format!("{:.3}", rep.core_seconds),
+                f6(rep.utilization),
+                format!("{:.3}", r.span),
+                r.backfills.to_string(),
+                r.max_active_holds.to_string(),
+            ]);
+        }
+    }
+    c
+}
+
+/// The same per-class series as a JSON document (one object per
+/// scenario, with a `classes` array), for plotting pipelines.
+pub fn contention_json(results: &[ContentionResult]) -> Json {
+    let runs: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            let classes: Vec<Json> = r
+                .reports
+                .iter()
+                .map(|rep| {
+                    Json::obj()
+                        .set("class", rep.class.label())
+                        .set("jobs", rep.jobs)
+                        .set("tasks", rep.tasks)
+                        .set("completed", rep.completed)
+                        .set("median_latency_s", rep.median_launch_latency)
+                        .set("p95_latency_s", rep.p95_launch_latency)
+                        .set("max_latency_s", rep.max_launch_latency)
+                        .set("starvation_age_s", rep.starvation_age)
+                        .set("core_seconds", rep.core_seconds)
+                        .set("utilization", rep.utilization)
+                })
+                .collect();
+            Json::obj()
+                .set("scenario", r.mix_name.clone())
+                .set("nodes", r.nodes)
+                .set("backfill", r.backfill)
+                .set("holds", r.opts.holds)
+                .set("aging", aging_label(r.opts.aging))
+                .set("walltime_error", r.opts.walltime_error.to_string())
+                .set("seed", r.opts.seed)
+                .set("span_s", r.span)
+                .set("utilization", r.utilization)
+                .set("backfills", r.backfills)
+                .set("max_active_holds", r.max_active_holds)
+                .set("holds_respected", r.holds_respected)
+                .set("unfinished", r.unfinished)
+                .set("classes", Json::Arr(classes))
+        })
+        .collect();
+    Json::obj().set("contention", Json::Arr(runs))
 }
 
 /// Run the full (or truncated) Table III matrix. Returns the per-cell
@@ -435,6 +609,88 @@ mod tests {
         assert_eq!(off.backfills, 0, "no backfill ops when disabled");
         assert_eq!(off.unfinished, 0);
         assert_eq!(on.unfinished, 0);
+    }
+
+    #[test]
+    fn contention_with_fairness_knobs_runs_end_to_end() {
+        let mix = ContentionMix::preset("tiny", 8).unwrap();
+        let opts = ContentionOpts {
+            backfill: true,
+            holds: 4,
+            aging: Some(AgingPolicy::new(0.5, 100)),
+            walltime_error: WalltimeError::LogNormal { sigma: 0.3 },
+            seed: 11,
+        };
+        let res = run_contention_with(&mix, opts).unwrap();
+        assert_eq!(res.unfinished, 0, "noisy estimates must not wedge the run");
+        assert!(res.max_active_holds <= 4);
+        assert!(res.holds_respected, "trivially true under a noise model");
+        assert_eq!(res.reports.len(), 2);
+        assert!(res.reports.iter().all(|r| r.completed == r.tasks));
+        assert_eq!(res.opts.holds, 4);
+    }
+
+    #[test]
+    fn classic_wrapper_matches_explicit_classic_opts() {
+        let mix = ContentionMix::preset("tiny", 4).unwrap();
+        let a = run_contention(&mix, true, 5).unwrap();
+        let b = run_contention_with(&mix, ContentionOpts::classic(true, 5)).unwrap();
+        assert_eq!(a.backfills, b.backfills);
+        assert_eq!(a.unfinished, b.unfinished);
+        assert_eq!(a.span, b.span);
+        for (x, y) in a.reports.iter().zip(&b.reports) {
+            assert_eq!(x.median_launch_latency, y.median_launch_latency);
+            assert_eq!(x.p95_launch_latency, y.p95_launch_latency);
+            assert_eq!(x.core_seconds, y.core_seconds);
+        }
+        // The classic wrapper is the single-hold discipline.
+        assert!(a.max_active_holds <= 1);
+    }
+
+    #[test]
+    fn contention_export_schema_and_determinism() {
+        // A golden-file-style test over the tiny preset at a fixed
+        // seed: the schema is pinned exactly, and two identical runs
+        // must serialize byte-for-byte identically (same seed → same
+        // schedule → same export).
+        let mix = ContentionMix::preset("tiny", 8).unwrap();
+        let opts = ContentionOpts {
+            backfill: true,
+            holds: 2,
+            aging: Some(AgingPolicy::new(0.5, 100)),
+            walltime_error: WalltimeError::LogNormal { sigma: 0.3 },
+            seed: 42,
+        };
+        let a = run_contention_with(&mix, opts).unwrap();
+        let b = run_contention_with(&mix, opts).unwrap();
+        let csv_a = contention_csv(std::slice::from_ref(&a));
+        let csv_b = contention_csv(std::slice::from_ref(&b));
+        assert_eq!(csv_a.as_str(), csv_b.as_str(), "export must be deterministic");
+        let lines: Vec<&str> = csv_a.as_str().lines().collect();
+        assert_eq!(
+            lines[0],
+            "scenario,nodes,backfill,holds,aging,walltime_error,class,jobs,tasks,\
+             completed,median_latency_s,p95_latency_s,max_latency_s,starvation_age_s,\
+             core_seconds,utilization,span_s,backfills,max_active_holds",
+            "golden header"
+        );
+        assert_eq!(lines.len(), 3, "header + one row per class");
+        assert!(lines[1].starts_with("tiny,8,true,2,0.5/100,lognormal(0.3),interactive,"));
+        assert!(lines[2].starts_with("tiny,8,true,2,0.5/100,lognormal(0.3),batch,"));
+        let json_a = contention_json(std::slice::from_ref(&a)).to_pretty();
+        let json_b = contention_json(std::slice::from_ref(&b)).to_pretty();
+        assert_eq!(json_a, json_b);
+        for key in [
+            "\"scenario\": \"tiny\"",
+            "\"holds\": 2",
+            "\"aging\": \"0.5/100\"",
+            "\"walltime_error\": \"lognormal(0.3)\"",
+            "\"classes\": [",
+            "\"starvation_age_s\":",
+            "\"max_latency_s\":",
+        ] {
+            assert!(json_a.contains(key), "json missing {key}: {json_a}");
+        }
     }
 
     #[test]

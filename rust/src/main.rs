@@ -15,16 +15,17 @@
 
 use llsched::coordinator::cli::Args;
 use llsched::coordinator::experiment::{
-    fig2_label, median_runs, run_contention, run_matrix, run_placement_sweep, ContentionResult,
-    ExperimentOpts,
+    contention_csv, contention_json, fig2_label, median_runs, run_contention_with, run_matrix,
+    run_placement_sweep, ContentionOpts, ContentionResult, ExperimentOpts,
 };
 use llsched::config::{Mode, RunConfig};
 use llsched::error::Result;
 use llsched::metrics::overhead::speedup;
 use llsched::metrics::report;
 use llsched::placement::Strategy;
+use llsched::scheduler::queue::AgingPolicy;
 use llsched::util::fmt::dur;
-use llsched::workload::contention::ContentionMix;
+use llsched::workload::contention::{ContentionMix, WalltimeError};
 use std::path::PathBuf;
 
 fn main() {
@@ -94,11 +95,18 @@ commands:
   placement [--nodes N] [--mode M] [--task-time T]
                             compare all placement policies on one cell
   contention [--preset P] [--nodes N] [--seed S] [--no-backfill]
-             [--compare] [--sweep]
+             [--compare] [--sweep] [--holds K] [--aging SLOPE]
+             [--aging-cap CAP] [--walltime-error SIGMA] [--out DIR]
                             run an interactive-vs-batch contention mix
                             (P: tiny|default|heavy) and report per-class
                             launch latency + utilization; --compare runs
-                            backfill off vs on; --sweep runs every mix
+                            backfill off vs on; --sweep runs every mix;
+                            --holds reserves for the top-K blocked
+                            whole-node jobs (default 4), --aging boosts
+                            priority by SLOPE points per second waited
+                            (0 = off, capped at CAP), --walltime-error
+                            plans backfill from log-normal noisy
+                            estimates; --out writes per-class CSV + JSON
   spot [--nodes N]          spot-job release-latency comparison
   artifacts                 verify AOT artifacts load and execute
 ";
@@ -292,9 +300,51 @@ fn cmd_placement(args: &Args) -> Result<()> {
 }
 
 fn cmd_contention(args: &Args) -> Result<()> {
-    args.expect_known(&["preset", "nodes", "seed", "no-backfill", "compare", "sweep"])?;
+    args.expect_known(&[
+        "preset",
+        "nodes",
+        "seed",
+        "no-backfill",
+        "compare",
+        "sweep",
+        "holds",
+        "aging",
+        "aging-cap",
+        "walltime-error",
+        "out",
+    ])?;
     let nodes: u32 = args.opt_parse("nodes", 32)?;
     let seed: u64 = args.opt_parse("seed", 7)?;
+    let holds: usize = args.opt_parse("holds", 4)?;
+    let aging_slope: f64 = args.opt_parse("aging", 0.0)?;
+    let aging_cap: i32 = args.opt_parse("aging-cap", 1000)?;
+    let sigma: f64 = args.opt_parse("walltime-error", 0.0)?;
+    // Mirror the config-file validation: reject values that would
+    // otherwise be silently clamped into a different policy.
+    if holds < 1 {
+        return Err(llsched::Error::Config("--holds must be >= 1".into()));
+    }
+    if aging_slope < 0.0 || aging_cap < 0 {
+        return Err(llsched::Error::Config(
+            "--aging and --aging-cap must be >= 0".into(),
+        ));
+    }
+    if sigma < 0.0 {
+        return Err(llsched::Error::Config("--walltime-error must be >= 0".into()));
+    }
+    let aging = if aging_slope > 0.0 {
+        Some(AgingPolicy::new(aging_slope, aging_cap))
+    } else {
+        None
+    };
+    let opts_for = |backfill: bool| ContentionOpts {
+        backfill,
+        holds,
+        aging,
+        walltime_error: WalltimeError::from_sigma(sigma),
+        seed,
+    };
+    let mut results: Vec<ContentionResult> = Vec::new();
     if args.flag("sweep") {
         println!("contention sweep: {nodes} nodes, seed {seed}\n");
         let mut table = llsched::util::fmt::Table::new(vec![
@@ -303,10 +353,11 @@ fn cmd_contention(args: &Args) -> Result<()> {
             "jobs",
             "median lat",
             "p95 lat",
+            "max lat",
             "util",
         ]);
         for cell in llsched::config::presets::contention_sweep(nodes) {
-            let res = run_contention(&cell.mix, cell.backfill, seed)?;
+            let res = run_contention_with(&cell.mix, opts_for(cell.backfill))?;
             for r in &res.reports {
                 table.row(vec![
                     cell.label(),
@@ -314,33 +365,52 @@ fn cmd_contention(args: &Args) -> Result<()> {
                     r.jobs.to_string(),
                     dur(r.median_launch_latency),
                     dur(r.p95_launch_latency),
+                    dur(r.max_launch_latency),
                     format!("{:.1}%", r.utilization * 100.0),
                 ]);
             }
+            results.push(res);
         }
         println!("{}", table.render());
-        return Ok(());
-    }
-    let preset = args.opt("preset").unwrap_or("default");
-    let mix = ContentionMix::preset(preset, nodes)?;
-    let modes: Vec<bool> = if args.flag("compare") {
-        vec![false, true]
     } else {
-        vec![!args.flag("no-backfill")]
-    };
-    for backfill in modes {
-        let res = run_contention(&mix, backfill, seed)?;
-        print_contention(&res);
+        let preset = args.opt("preset").unwrap_or("default");
+        let mix = ContentionMix::preset(preset, nodes)?;
+        let modes: Vec<bool> = if args.flag("compare") {
+            vec![false, true]
+        } else {
+            vec![!args.flag("no-backfill")]
+        };
+        for backfill in modes {
+            let res = run_contention_with(&mix, opts_for(backfill))?;
+            print_contention(&res);
+            results.push(res);
+        }
+    }
+    if let Some(out) = args.opt("out") {
+        let dir = PathBuf::from(out);
+        std::fs::create_dir_all(&dir)?;
+        contention_csv(&results).save(&dir.join("contention.csv"))?;
+        std::fs::write(
+            dir.join("contention.json"),
+            contention_json(&results).to_pretty(),
+        )?;
+        println!("(per-class CSV/JSON in {dir:?})");
     }
     Ok(())
 }
 
 fn print_contention(res: &ContentionResult) {
     println!(
-        "contention {}: {} nodes, backfill {}",
+        "contention {}: {} nodes, backfill {}, holds {}, aging {}, walltime error {}",
         res.mix_name,
         res.nodes,
         if res.backfill { "on" } else { "off" },
+        res.opts.holds,
+        match res.opts.aging {
+            Some(a) => format!("{}/s (cap {})", a.slope, a.cap),
+            None => "off".to_string(),
+        },
+        res.opts.walltime_error,
     );
     let mut table = llsched::util::fmt::Table::new(vec![
         "class",
@@ -348,6 +418,7 @@ fn print_contention(res: &ContentionResult) {
         "tasks",
         "median lat",
         "p95 lat",
+        "max lat",
         "core-seconds",
         "util",
     ]);
@@ -358,16 +429,18 @@ fn print_contention(res: &ContentionResult) {
             r.tasks.to_string(),
             dur(r.median_launch_latency),
             dur(r.p95_launch_latency),
+            dur(r.max_launch_latency),
             format!("{:.0}", r.core_seconds),
             format!("{:.1}%", r.utilization * 100.0),
         ]);
     }
     println!("{}", table.render());
     println!(
-        "  span {}  cluster util {:.1}%  backfills {}  holds respected {}  unfinished {}\n",
+        "  span {}  cluster util {:.1}%  backfills {}  peak holds {}  holds respected {}  unfinished {}\n",
         dur(res.span),
         res.utilization * 100.0,
         res.backfills,
+        res.max_active_holds,
         res.holds_respected,
         res.unfinished,
     );

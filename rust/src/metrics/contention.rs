@@ -26,6 +26,13 @@ pub struct ClassReport {
     pub median_launch_latency: Time,
     /// 95th percentile launch latency, seconds.
     pub p95_launch_latency: Time,
+    /// Worst launch latency in the class (max start − submit), seconds;
+    /// NaN when nothing started. The fairness-bound metric: aging caps
+    /// it, static priorities let it grow with the opposing stream.
+    pub max_launch_latency: Time,
+    /// Oldest never-started task's age at the end of the run, seconds
+    /// (0 when every task started) — the outright-starvation indicator.
+    pub starvation_age: Time,
     /// Delivered core-seconds by this class.
     pub core_seconds: f64,
     /// Share of cluster capacity over the run span, in `[0, 1]`.
@@ -43,10 +50,23 @@ pub fn per_class(
 ) -> (Vec<ClassReport>, Time) {
     let mut first_submit = f64::INFINITY;
     let mut last_cleanup: f64 = 0.0;
+    // The run's horizon for starvation ages: the latest timestamp any
+    // record carries. Unlike `last_cleanup` it stays meaningful when a
+    // run is truncated before anything finishes — the exact situation
+    // a starvation metric must not report as zero.
+    let mut run_end: f64 = 0.0;
     for r in records {
         first_submit = first_submit.min(r.submit_t);
+        run_end = run_end.max(r.submit_t);
+        if let Some(t) = r.start_t {
+            run_end = run_end.max(t);
+        }
+        if let Some(t) = r.end_t {
+            run_end = run_end.max(t);
+        }
         if let Some(c) = r.cleanup_t {
             last_cleanup = last_cleanup.max(c);
+            run_end = run_end.max(c);
         }
     }
     let span = if first_submit.is_finite() && last_cleanup > first_submit {
@@ -62,15 +82,23 @@ pub fn per_class(
             let mut core_seconds = 0.0;
             let mut tasks = 0usize;
             let mut completed = 0usize;
+            let mut starvation_age: f64 = 0.0;
             for r in records {
                 if classes.get(r.job as usize).copied() != Some(class) {
                     continue;
                 }
                 tasks += 1;
-                if let Some(start) = r.start_t {
-                    latencies.push(start - r.submit_t);
-                    if let Some(end) = r.end_t {
-                        core_seconds += r.cores as f64 * (end - start).max(0.0);
+                match r.start_t {
+                    Some(start) => {
+                        latencies.push(start - r.submit_t);
+                        if let Some(end) = r.end_t {
+                            core_seconds += r.cores as f64 * (end - start).max(0.0);
+                        }
+                    }
+                    // Never started: its age keeps growing until the
+                    // run's end.
+                    None => {
+                        starvation_age = starvation_age.max((run_end - r.submit_t).max(0.0));
                     }
                 }
                 if r.cleanup_t.is_some() {
@@ -78,6 +106,11 @@ pub fn per_class(
                 }
             }
             let jobs = classes.iter().filter(|&&c| c == class).count();
+            let max_launch_latency = if latencies.is_empty() {
+                f64::NAN
+            } else {
+                latencies.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+            };
             ClassReport {
                 class,
                 jobs,
@@ -85,6 +118,8 @@ pub fn per_class(
                 completed,
                 median_launch_latency: stats::median(&latencies),
                 p95_launch_latency: stats::percentile(&latencies, 95.0),
+                max_launch_latency,
+                starvation_age,
                 core_seconds,
                 utilization: if capacity > 0.0 {
                     core_seconds / capacity
@@ -160,6 +195,55 @@ mod tests {
         assert_eq!(span, 0.0);
         assert_eq!(reports.len(), 2);
         assert!(reports[0].median_launch_latency.is_nan());
+        assert!(reports[0].max_launch_latency.is_nan());
+        assert_eq!(reports[0].starvation_age, 0.0);
         assert_eq!(reports[0].utilization, 0.0);
+    }
+
+    #[test]
+    fn max_wait_and_starvation_age() {
+        let classes = vec![JobClass::Interactive, JobClass::Batch];
+        let mut starved = rec(1, 2.0, 0.0, 0.0, 0);
+        starved.start_t = None;
+        starved.end_t = None;
+        starved.cleanup_t = None;
+        let records = vec![
+            rec(0, 0.0, 1.0, 5.0, 2),   // latency 1
+            rec(0, 0.0, 9.0, 15.0, 2),  // latency 9 (the class max)
+            rec(1, 3.0, 50.0, 90.0, 64), // latency 47; cleanup at 91
+            starved,                    // batch task never started
+        ];
+        let (reports, span) = per_class(&records, &classes, 128);
+        assert_eq!(span, 91.0);
+        let inter = &reports[0];
+        assert!((inter.max_launch_latency - 9.0).abs() < 1e-9);
+        assert_eq!(inter.starvation_age, 0.0, "everything started");
+        let batch = &reports[1];
+        assert!((batch.max_launch_latency - 47.0).abs() < 1e-9);
+        // The starved task was submitted at 2 and the run ended at 91.
+        assert!((batch.starvation_age - 89.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn starvation_age_survives_truncated_runs() {
+        // No task ever reached cleanup; the starved task's age must be
+        // measured against the latest timestamp seen, not cleanups
+        // (which would clamp it to zero in the worst starvation case).
+        let classes = vec![JobClass::Batch];
+        let mut running = rec(0, 0.0, 5.0, 0.0, 4);
+        running.end_t = None;
+        running.cleanup_t = None;
+        let mut starved = rec(0, 1.0, 0.0, 0.0, 0);
+        starved.start_t = None;
+        starved.end_t = None;
+        starved.cleanup_t = None;
+        let (reports, span) = per_class(&[running, starved], &classes, 64);
+        assert_eq!(span, 0.0, "no cleanups: utilization span stays empty");
+        let batch = &reports[1];
+        assert!(
+            (batch.starvation_age - 4.0).abs() < 1e-9,
+            "latest start (5) minus submit (1), got {}",
+            batch.starvation_age
+        );
     }
 }

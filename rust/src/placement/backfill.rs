@@ -11,22 +11,28 @@
 //!
 //! [`ReservationLedger`] is the bookkeeping half of that policy. It
 //! tracks, per node, the latest expected completion time among running
-//! tasks (expected ends are exact in the DES: occupancy is known at
-//! placement time), plans a hold for a blocked whole-node task by
-//! picking the node with the earliest expected free time from the
-//! [`FreeIndex`] partition, and answers the admission question "may a
-//! task expected to end at `t` run on node `n`?". The scheduler's
-//! dispatch loop ([`crate::scheduler::server`]) consults it both for
-//! backfill candidates and for normal core-level placements while a
-//! hold is active, so no later job — backfilled or not — can delay the
-//! reservation's start.
+//! tasks (expected ends come from walltime *estimates* — exact in the
+//! DES oracle case, noisy under a
+//! [`crate::workload::contention::WalltimeError`] model), plans a hold
+//! for a blocked whole-node task by picking the node with the earliest
+//! expected free time from the [`FreeIndex`] partition, and answers the
+//! admission question "may a task expected to end at `t` run on node
+//! `n`?". The scheduler's dispatch loop ([`crate::scheduler::server`])
+//! consults it both for backfill candidates and for normal core-level
+//! placements while holds are active, so no later job — backfilled or
+//! not — can delay a reservation's start.
+//!
+//! Since PR 3 the ledger carries up to `K` simultaneous holds
+//! ([`ReservationLedger::set_max_holds`]): reservations for the top-K
+//! blocked whole-node tasks, each fencing a distinct node. `K = 1`
+//! reproduces the original EASY single-hold discipline exactly.
 
 use crate::cluster::{Cluster, NodeId, NodeState};
 use crate::placement::free_index::FreeIndex;
 use crate::scheduler::job::TaskId;
 use crate::sim::Time;
 
-/// Slack added to hold starts when admitting work onto the held node:
+/// Slack added to hold starts when admitting work onto a held node:
 /// a task may end exactly at the hold start (the hold task dispatches
 /// after the freeing cleanup anyway), so exact ties are admissible.
 const TIE_EPS: Time = 1e-9;
@@ -42,10 +48,10 @@ pub struct Hold {
     pub start: Time,
 }
 
-/// Per-node expected-completion bookkeeping plus the active hold.
+/// Per-node expected-completion bookkeeping plus the active holds.
 ///
-/// One hold at a time (EASY backfill reserves for the queue head only);
-/// holds for deeper queue entries would shrink backfill opportunity
+/// At most [`Self::max_holds`] reservations at a time, on pairwise
+/// distinct nodes; holds beyond that would shrink backfill opportunity
 /// without improving the starvation bound the property tests pin down.
 #[derive(Debug, Clone)]
 pub struct ReservationLedger {
@@ -53,20 +59,37 @@ pub struct ReservationLedger {
     expected_end: Vec<Time>,
     /// Node → number of running tasks (resets `expected_end` at zero).
     running: Vec<u32>,
-    hold: Option<Hold>,
+    /// Active holds, in planning order. Invariants: `len() ≤ max_holds`,
+    /// one hold per task, one hold per node.
+    holds: Vec<Hold>,
+    max_holds: usize,
 }
 
 impl ReservationLedger {
-    /// Ledger over `n_nodes` nodes, all initially idle.
+    /// Ledger over `n_nodes` nodes, all initially idle. Starts in the
+    /// single-hold (EASY) discipline; raise via [`Self::set_max_holds`].
     pub fn new(n_nodes: usize) -> ReservationLedger {
         ReservationLedger {
             expected_end: vec![0.0; n_nodes],
             running: vec![0; n_nodes],
-            hold: None,
+            holds: Vec::new(),
+            max_holds: 1,
         }
     }
 
-    /// A task was placed on `node` with known occupancy end.
+    /// Allow up to `k` simultaneous holds (clamped to ≥ 1). Shrinking
+    /// drops the most recently planned holds first.
+    pub fn set_max_holds(&mut self, k: usize) {
+        self.max_holds = k.max(1);
+        self.holds.truncate(self.max_holds);
+    }
+
+    /// The configured hold capacity K.
+    pub fn max_holds(&self) -> usize {
+        self.max_holds
+    }
+
+    /// A task was placed on `node` with an (estimated) occupancy end.
     pub fn note_start(&mut self, node: NodeId, expected_end: Time) {
         let i = node as usize;
         self.running[i] += 1;
@@ -89,33 +112,58 @@ impl ReservationLedger {
         self.expected_end[node as usize].max(now)
     }
 
-    /// The active hold, if any.
+    /// All active holds, in planning order.
+    pub fn holds(&self) -> &[Hold] {
+        &self.holds
+    }
+
+    /// The oldest active hold, if any (single-hold-era accessor).
     pub fn hold(&self) -> Option<Hold> {
-        self.hold
+        self.holds.first().copied()
     }
 
-    /// The active hold if it belongs to `task`.
+    /// Whether any hold is active.
+    pub fn has_holds(&self) -> bool {
+        !self.holds.is_empty()
+    }
+
+    /// Whether the ledger is at its hold capacity.
+    pub fn is_full(&self) -> bool {
+        self.holds.len() >= self.max_holds
+    }
+
+    /// The active hold belonging to `task`, if any.
     pub fn hold_for(&self, task: TaskId) -> Option<Hold> {
-        self.hold.filter(|h| h.task == task)
+        self.holds.iter().copied().find(|h| h.task == task)
     }
 
-    /// Plan a hold for a blocked whole-node task: the `Up` node of the
-    /// partition with the earliest expected free time (lowest id on
-    /// ties). O(partition) — runs on head-of-line block, not dispatch.
+    /// The active hold fencing `node`, if any.
+    pub fn hold_on(&self, node: NodeId) -> Option<Hold> {
+        self.holds.iter().copied().find(|h| h.node == node)
+    }
+
+    /// Plan a hold for the blocked whole-node task `for_task`: the `Up`
+    /// node of the partition with the earliest expected free time
+    /// (lowest id on ties), skipping nodes already fenced for *other*
+    /// tasks. O(partition) — runs on head-of-line block, not dispatch.
     pub fn plan_whole_node(
         &self,
         index: &FreeIndex,
         cluster: &Cluster,
         part: u32,
         now: Time,
+        for_task: TaskId,
     ) -> Option<(NodeId, Time)> {
         let mut best: Option<(NodeId, Time)> = None;
-        for id in index.partition_nodes(part) {
+        for id in index.partition_nodes_iter(part) {
             let up = cluster
                 .node(id)
                 .map(|n| n.state() == NodeState::Up)
                 .unwrap_or(false);
             if !up {
+                continue;
+            }
+            if self.holds.iter().any(|h| h.node == id && h.task != for_task) {
                 continue;
             }
             let free_at = self.expected_free(id, now);
@@ -130,44 +178,77 @@ impl ReservationLedger {
         best
     }
 
-    /// Install (or refresh) the hold for `task`. Refused while a
-    /// different task's hold is active — one reservation at a time.
+    /// Install (or refresh) the hold for `task`. Refused when the
+    /// ledger is at capacity with other tasks' holds, or when `node` is
+    /// already fenced for a different task — holds never overlap.
     pub fn set_hold(&mut self, task: TaskId, node: NodeId, start: Time) -> bool {
-        match self.hold {
-            Some(h) if h.task != task => false,
-            _ => {
-                self.hold = Some(Hold { task, node, start });
-                true
-            }
+        if self.holds.iter().any(|h| h.task != task && h.node == node) {
+            return false;
         }
+        if let Some(i) = self.holds.iter().position(|h| h.task == task) {
+            self.holds[i] = Hold { task, node, start };
+            return true;
+        }
+        if self.holds.len() >= self.max_holds {
+            return false;
+        }
+        self.holds.push(Hold { task, node, start });
+        true
     }
 
-    /// Drop the hold if it belongs to `task` (placement succeeded or
-    /// the task was cancelled/preempted).
+    /// Drop the hold belonging to `task` (placement succeeded or the
+    /// task was cancelled/preempted). Other tasks' holds are untouched.
     pub fn clear_hold(&mut self, task: TaskId) {
-        if self.hold.map(|h| h.task == task).unwrap_or(false) {
-            self.hold = None;
-        }
+        self.holds.retain(|h| h.task != task);
     }
 
     /// May a task expected to end at `est_end` be placed on `node`
-    /// without delaying the active hold? Non-held nodes are always
-    /// admissible (their occupancy cannot move the held node's free
-    /// time); the held node admits only tasks that vacate first.
+    /// without delaying any active hold? Unheld nodes are always
+    /// admissible (their occupancy cannot move a held node's free
+    /// time); a held node admits only tasks that vacate first.
     pub fn allows_backfill(&self, node: NodeId, est_end: Time) -> bool {
-        match self.hold {
+        match self.hold_on(node) {
             None => true,
-            Some(h) => h.node != node || est_end <= h.start + TIE_EPS,
+            Some(h) => est_end <= h.start + TIE_EPS,
         }
     }
 
-    /// May a whole-node task other than the hold's own take `node`?
-    /// While a hold is active, the held node is fenced off for it.
+    /// May a whole-node task other than a hold's own take `node`?
+    /// While a hold is active, its node is fenced off for it.
     pub fn allows_whole_node(&self, node: NodeId, task: TaskId) -> bool {
-        match self.hold {
+        match self.hold_on(node) {
             None => true,
-            Some(h) => h.task == task || h.node != node,
+            Some(h) => h.task == task,
         }
+    }
+
+    /// Structural invariants the property harness pins down: at most K
+    /// holds, one per task, one per node, all nodes in range.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        if self.holds.len() > self.max_holds {
+            return Err(format!(
+                "{} holds exceed capacity {}",
+                self.holds.len(),
+                self.max_holds
+            ));
+        }
+        for (i, a) in self.holds.iter().enumerate() {
+            if a.node as usize >= self.expected_end.len() {
+                return Err(format!("hold on unknown node {}", a.node));
+            }
+            for b in &self.holds[i + 1..] {
+                if a.node == b.node {
+                    return Err(format!(
+                        "holds for tasks {} and {} overlap on node {}",
+                        a.task, b.task, a.node
+                    ));
+                }
+                if a.task == b.task {
+                    return Err(format!("task {} holds two nodes", a.task));
+                }
+            }
+        }
+        Ok(())
     }
 }
 
@@ -197,10 +278,10 @@ mod tests {
         l.note_start(0, 100.0);
         l.note_start(1, 40.0);
         l.note_start(2, 70.0);
-        assert_eq!(l.plan_whole_node(&idx, &c, 0, 5.0), Some((1, 40.0)));
+        assert_eq!(l.plan_whole_node(&idx, &c, 0, 5.0, 9), Some((1, 40.0)));
         // An already-idle node frees "now" and wins.
         l.note_release(1);
-        assert_eq!(l.plan_whole_node(&idx, &c, 0, 5.0), Some((1, 5.0)));
+        assert_eq!(l.plan_whole_node(&idx, &c, 0, 5.0, 9), Some((1, 5.0)));
     }
 
     #[test]
@@ -210,14 +291,30 @@ mod tests {
         c.node_mut(0).unwrap().set_state(NodeState::Down);
         idx.on_state_change(0, NodeState::Down);
         let l = ReservationLedger::new(2);
-        assert_eq!(l.plan_whole_node(&idx, &c, 0, 0.0), Some((1, 0.0)));
+        assert_eq!(l.plan_whole_node(&idx, &c, 0, 0.0, 9), Some((1, 0.0)));
+    }
+
+    #[test]
+    fn plan_skips_nodes_held_for_other_tasks() {
+        let c = Cluster::tx_green(3);
+        let idx = FreeIndex::build(&c);
+        let mut l = ReservationLedger::new(3);
+        l.set_max_holds(3);
+        l.note_start(0, 100.0);
+        l.note_start(1, 40.0);
+        l.note_start(2, 70.0);
+        assert!(l.set_hold(7, 1, 40.0), "task 7 takes the earliest node");
+        // Task 8 must plan around node 1; next-earliest is node 2.
+        assert_eq!(l.plan_whole_node(&idx, &c, 0, 5.0, 8), Some((2, 70.0)));
+        // Re-planning for the holder itself may keep its own node.
+        assert_eq!(l.plan_whole_node(&idx, &c, 0, 5.0, 7), Some((1, 40.0)));
     }
 
     #[test]
     fn single_hold_discipline() {
         let mut l = ReservationLedger::new(2);
         assert!(l.set_hold(7, 0, 100.0));
-        assert!(!l.set_hold(8, 1, 50.0), "second hold refused");
+        assert!(!l.set_hold(8, 1, 50.0), "second hold refused at K = 1");
         assert!(l.set_hold(7, 1, 90.0), "own hold refreshes");
         assert_eq!(l.hold_for(7).unwrap().start, 90.0);
         assert!(l.hold_for(8).is_none());
@@ -229,16 +326,67 @@ mod tests {
     }
 
     #[test]
+    fn multi_hold_discipline() {
+        let mut l = ReservationLedger::new(4);
+        l.set_max_holds(3);
+        assert!(l.set_hold(1, 0, 10.0));
+        assert!(l.set_hold(2, 1, 20.0));
+        assert!(l.set_hold(3, 2, 30.0));
+        assert!(l.is_full());
+        assert!(!l.set_hold(4, 3, 40.0), "fourth hold refused at K = 3");
+        assert_eq!(l.holds().len(), 3);
+        // Distinct-node discipline: nobody may fence an already-held node.
+        assert!(!l.set_hold(2, 0, 5.0), "refresh onto another task's node refused");
+        assert!(l.set_hold(2, 3, 25.0), "refresh onto a free node ok");
+        assert_eq!(l.hold_for(2).unwrap().node, 3);
+        // Clearing one hold frees exactly one slot and its node.
+        l.clear_hold(2);
+        assert_eq!(l.holds().len(), 2);
+        assert!(l.hold_on(3).is_none());
+        assert!(l.set_hold(4, 3, 40.0));
+        assert!(l.check_invariants().is_ok());
+    }
+
+    #[test]
+    fn shrinking_capacity_truncates_holds() {
+        let mut l = ReservationLedger::new(4);
+        l.set_max_holds(3);
+        assert!(l.set_hold(1, 0, 10.0));
+        assert!(l.set_hold(2, 1, 20.0));
+        assert!(l.set_hold(3, 2, 30.0));
+        l.set_max_holds(1);
+        assert_eq!(l.holds().len(), 1, "newest holds dropped first");
+        assert_eq!(l.hold().unwrap().task, 1);
+        assert!(l.check_invariants().is_ok());
+    }
+
+    #[test]
     fn backfill_admission_rules() {
         let mut l = ReservationLedger::new(3);
         assert!(l.allows_backfill(0, 1e12), "no hold: anything goes");
         l.set_hold(1, 2, 100.0);
-        assert!(l.allows_backfill(0, 1e12), "non-held node unrestricted");
+        assert!(l.allows_backfill(0, 1e12), "unheld node unrestricted");
         assert!(l.allows_backfill(2, 99.0), "vacates before the hold");
         assert!(l.allows_backfill(2, 100.0), "exact tie admissible");
         assert!(!l.allows_backfill(2, 101.0), "would delay the hold");
         assert!(l.allows_whole_node(2, 1), "hold task may take its node");
         assert!(!l.allows_whole_node(2, 9), "others may not");
         assert!(l.allows_whole_node(0, 9));
+    }
+
+    #[test]
+    fn admission_checks_every_active_hold() {
+        let mut l = ReservationLedger::new(4);
+        l.set_max_holds(2);
+        l.set_hold(1, 0, 50.0);
+        l.set_hold(2, 3, 200.0);
+        assert!(!l.allows_backfill(0, 60.0), "first hold enforced");
+        assert!(l.allows_backfill(0, 50.0));
+        assert!(!l.allows_backfill(3, 201.0), "second hold enforced too");
+        assert!(l.allows_backfill(3, 150.0));
+        assert!(l.allows_backfill(1, 1e12), "unheld nodes stay open");
+        assert!(!l.allows_whole_node(0, 2), "fences are per-task");
+        assert!(l.allows_whole_node(0, 1));
+        assert!(l.allows_whole_node(3, 2));
     }
 }

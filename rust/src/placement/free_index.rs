@@ -120,10 +120,16 @@ impl FreeIndex {
     /// for occasional planning passes (backfill reservations), not the
     /// dispatch hot path.
     pub fn partition_nodes(&self, part: u32) -> Vec<NodeId> {
+        self.partition_nodes_iter(part).collect()
+    }
+
+    /// Allocation-free variant of [`Self::partition_nodes`]: the hold
+    /// planner walks a partition once per reservation candidate, so it
+    /// must not materialize a `Vec` each pass.
+    pub fn partition_nodes_iter(&self, part: u32) -> impl Iterator<Item = NodeId> + '_ {
         (0..self.partition.len())
-            .filter(|&i| self.indexed[i] && self.partition[i] == part)
+            .filter(move |&i| self.indexed[i] && self.partition[i] == part)
             .map(|i| i as NodeId)
-            .collect()
     }
 
     /// Resolve a reservation name to a partition id. `None` reservation

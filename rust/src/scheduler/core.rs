@@ -27,9 +27,10 @@ use crate::scheduler::accounting::{JobStats, TaskRecord};
 use crate::scheduler::costmodel::CostModel;
 use crate::scheduler::job::{JobId, JobSpec, Placement, SchedTaskSpec, TaskId};
 use crate::scheduler::noise::NoiseModel;
-use crate::scheduler::queue::PendingQueue;
+use crate::scheduler::queue::{AgingPolicy, PendingQueue};
 use crate::sim::{self, EventQueue, Time};
 use crate::util::rng::Rng;
+use crate::workload::contention::WalltimeError;
 use std::collections::VecDeque;
 
 /// Events of the scheduler simulation.
@@ -76,6 +77,13 @@ pub(crate) struct TaskSlot {
     pub(crate) record: TaskRecord,
     pub(crate) placement: Option<Placement>,
     pub(crate) priority: i32,
+    /// The walltime *estimate* backfill admission and hold planning use
+    /// (`spec.duration × WalltimeError::factor`; equal to the true
+    /// duration when the error model is [`WalltimeError::None`]).
+    pub(crate) est_duration: Time,
+    /// When the task joined the pending queue — preserved across
+    /// head-of-line reinsertions so aging credit is never reset.
+    pub(crate) enqueued_at: Time,
 }
 
 /// Per-job metadata.
@@ -148,9 +156,10 @@ pub struct BackfillEvent {
     pub node: NodeId,
     /// Placement time.
     pub time: Time,
-    /// The earliest-start reservation active at placement time, if any
-    /// (a backfill can also jump a blocked *core-level* head, which
-    /// plans no hold).
+    /// The earliest-start reservation fencing the *placed node* at
+    /// placement time, if any (a backfill can also jump a blocked
+    /// core-level head, which plans no hold, or land on an unheld
+    /// node while other nodes carry holds).
     pub hold: Option<Hold>,
 }
 
@@ -171,6 +180,12 @@ pub struct SimOutcome {
     pub longest_busy_stretch: Time,
     /// Backfill dispatches performed (empty when backfill is off).
     pub backfills: Vec<BackfillEvent>,
+    /// Peak number of simultaneously active holds (≤ the configured K).
+    pub max_active_holds: usize,
+    /// Whether the ledger ever violated the hold invariants (> K holds,
+    /// overlapping nodes, duplicate tasks). Must stay `false`; checked
+    /// by the fairness property suite after every planning pass.
+    pub hold_invariant_violated: bool,
 }
 
 impl SimOutcome {
@@ -199,6 +214,17 @@ pub struct SchedulerSim {
     /// How many pending entries a backfill scan may inspect.
     pub(crate) backfill_lookahead: usize,
     pub(crate) backfill_log: Vec<BackfillEvent>,
+    /// Queue-aging policy (mirrored into the pending queue); `None`
+    /// keeps the static priority-then-FIFO discipline.
+    pub(crate) aging: Option<AgingPolicy>,
+    /// Walltime-estimate error model: what the ledger plans from.
+    pub(crate) walltime: WalltimeError,
+    /// Estimate-noise stream, independent of the sim stream so turning
+    /// noise on or off never perturbs jitter/arrival draws.
+    pub(crate) walltime_rng: Rng,
+    /// Peak simultaneous holds + invariant flag (see [`SimOutcome`]).
+    pub(crate) max_holds_seen: usize,
+    pub(crate) hold_invariant_violated: bool,
     pub(crate) cost: CostModel,
     pub(crate) noise: NoiseModel,
     pub(crate) task_model: TaskModel,
@@ -258,6 +284,11 @@ impl SchedulerSim {
             backfill: false,
             backfill_lookahead: 64,
             backfill_log: Vec::new(),
+            aging: None,
+            walltime: WalltimeError::None,
+            walltime_rng: Rng::new(seed ^ 0x5DEE_CE66_D5A6_1C5D),
+            max_holds_seen: 0,
+            hold_invariant_violated: false,
             cost,
             noise,
             task_model: TaskModel::default(),
@@ -324,6 +355,53 @@ impl SchedulerSim {
         self
     }
 
+    /// Reserve for up to `k` blocked whole-node tasks at once (top-K
+    /// multi-hold backfill; clamped to ≥ 1). The default `1` is the
+    /// original EASY single-hold discipline — `with_holds(1)` schedules
+    /// are bit-for-bit identical to it, which the equivalence property
+    /// in `rust/tests/fairness_properties.rs` pins down.
+    pub fn with_holds(mut self, k: usize) -> Self {
+        self.ledger.set_max_holds(k);
+        self
+    }
+
+    /// The configured hold capacity K.
+    pub fn holds(&self) -> usize {
+        self.ledger.max_holds()
+    }
+
+    /// Install a queue-aging policy (`None` = static priorities): a
+    /// pending task's effective priority rises with its wait, so a
+    /// low-priority whole-node job behind a sustained high-priority
+    /// stream eventually reaches the head — and, with backfill on, an
+    /// earliest-start hold.
+    pub fn with_aging(mut self, policy: Option<AgingPolicy>) -> Self {
+        self.aging = policy;
+        self.pending.set_aging(policy);
+        self
+    }
+
+    /// The active aging policy.
+    pub fn aging(&self) -> Option<AgingPolicy> {
+        self.aging
+    }
+
+    /// Install a walltime-estimate error model: tasks carry an
+    /// *estimated* runtime distinct from their true runtime, the
+    /// reservation ledger plans from the estimates, and overdue holds
+    /// are re-planned rather than stalling dispatch. The default
+    /// [`WalltimeError::None`] keeps the DES's exact-oracle estimates
+    /// (and draws nothing, so seeds reproduce bit-for-bit).
+    pub fn with_walltime_error(mut self, model: WalltimeError) -> Self {
+        self.walltime = model;
+        self
+    }
+
+    /// The active walltime-estimate error model.
+    pub fn walltime_error(&self) -> WalltimeError {
+        self.walltime
+    }
+
     /// Disable the (possibly large) utilization timeline recording.
     pub fn without_timeline(mut self) -> Self {
         self.record_timeline = false;
@@ -379,6 +457,8 @@ impl SchedulerSim {
             max_completion_backlog: self.max_completion_backlog,
             longest_busy_stretch: self.longest_busy_stretch,
             backfills: self.backfill_log,
+            max_active_holds: self.max_holds_seen,
+            hold_invariant_violated: self.hold_invariant_violated,
         }
     }
 

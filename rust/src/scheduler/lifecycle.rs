@@ -14,17 +14,18 @@ use crate::sim::{EventQueue, Time};
 impl SchedulerSim {
     /// Attempt placement of a dispatched task; on failure the task goes
     /// back to the head of the queue and dispatch blocks until a cleanup
-    /// frees resources. With backfill enabled, a failing whole-node task
-    /// additionally plans an earliest-start reservation, and all
-    /// placements made while a hold is active are filtered so they
-    /// cannot delay it.
+    /// frees resources. With backfill enabled, a block additionally
+    /// plans earliest-start reservations — for the failing whole-node
+    /// head and, with multi-hold (K > 1), the next blocked whole-node
+    /// tasks in the lookahead window — and all placements made while
+    /// holds are active are filtered so they cannot delay any of them.
     pub(crate) fn try_place(&mut self, now: Time, tid: TaskId, q: &mut EventQueue<SchedEvent>) {
         let (request, reservation) = {
             let slot = &self.tasks[tid as usize];
             let job = &self.jobs[slot.record.job as usize];
             (slot.spec.request, job.reservation.clone())
         };
-        let hold_active = self.backfill && self.ledger.hold().is_some();
+        let hold_active = self.backfill && self.ledger.has_holds();
         let placement = match request {
             ResourceRequest::WholeNode => {
                 if hold_active {
@@ -43,8 +44,11 @@ impl SchedulerSim {
             }
             ResourceRequest::Cores { cores, mem_mib } => {
                 if hold_active {
+                    // Admission uses the walltime estimate, exactly as
+                    // the backfill scan does (exact when the error
+                    // model is off).
                     let est_end =
-                        now + self.task_model.startup + self.tasks[tid as usize].spec.duration;
+                        now + self.task_model.startup + self.tasks[tid as usize].est_duration;
                     let ledger = &self.ledger;
                     self.engine.place_cores_where(
                         &mut self.cluster,
@@ -68,12 +72,15 @@ impl SchedulerSim {
                 self.start_running(now, tid, p, request == ResourceRequest::WholeNode, q);
             }
             None => {
-                if self.backfill && request == ResourceRequest::WholeNode {
-                    self.plan_hold(now, tid, reservation.as_deref());
+                if self.backfill {
+                    self.plan_holds(now, tid, request);
                 }
-                // Head-of-line blocked: wait for resources to free.
+                // Head-of-line blocked: wait for resources to free. The
+                // reinsertion carries the original enqueue timestamp so
+                // retries never reset aging credit.
                 let prio = self.tasks[tid as usize].priority;
-                self.pending.push_front(tid, prio);
+                let enqueued_at = self.tasks[tid as usize].enqueued_at;
+                self.pending.push_front(tid, prio, enqueued_at);
                 self.cycle_budget = 0; // a fresh cycle rescans when unblocked
                 self.hol_blocked = true;
             }
@@ -118,8 +125,19 @@ impl SchedulerSim {
         slot.placement = Some(p);
         let jitter = self.rng.normal().abs() * self.task_model.jitter_sigma;
         let occupancy = self.task_model.startup + slot.spec.duration + jitter;
+        // The ledger plans from walltime *estimates*: with an error
+        // model installed the expected end is the declared one (startup
+        // + estimate), not the DES oracle's exact occupancy — overdue
+        // holds are re-planned when the mismatch surfaces. Without a
+        // model the oracle value is kept, bit-for-bit the historical
+        // behaviour.
+        let expected_end = if self.walltime.is_none() {
+            start + occupancy
+        } else {
+            start + self.task_model.startup + slot.est_duration
+        };
         self.running_cores += cores as u64;
-        self.ledger.note_start(node, start + occupancy);
+        self.ledger.note_start(node, expected_end);
         self.ledger.clear_hold(tid);
         if self.record_timeline {
             self.timeline.push((start, cores as i64));
@@ -143,16 +161,16 @@ impl SchedulerSim {
             ResourceRequest::WholeNode => {
                 // Never admitted by the scan; requeue defensively.
                 let prio = self.tasks[tid as usize].priority;
-                self.pending.push_front(tid, prio);
+                let enqueued_at = self.tasks[tid as usize].enqueued_at;
+                self.pending.push_front(tid, prio, enqueued_at);
                 return;
             }
         };
-        let duration = self.tasks[tid as usize].spec.duration;
+        let est_duration = self.tasks[tid as usize].est_duration;
         let reservation = self.jobs[self.tasks[tid as usize].record.job as usize]
             .reservation
             .clone();
-        let est_end = now + self.task_model.startup + duration;
-        let hold = self.ledger.hold();
+        let est_end = now + self.task_model.startup + est_duration;
         let ledger = &self.ledger;
         let placement = self.engine.place_cores_where(
             &mut self.cluster,
@@ -167,7 +185,7 @@ impl SchedulerSim {
                     task: tid,
                     node: p.node,
                     time: now,
-                    hold,
+                    hold: self.ledger.hold_on(p.node),
                 });
                 self.start_running(now, tid, p, false, q);
             }
@@ -175,37 +193,83 @@ impl SchedulerSim {
                 // Admission raced a hold change; requeue at the front of
                 // its bucket so ordering churn stays minimal.
                 let prio = self.tasks[tid as usize].priority;
-                self.pending.push_front(tid, prio);
+                let enqueued_at = self.tasks[tid as usize].enqueued_at;
+                self.pending.push_front(tid, prio, enqueued_at);
             }
         }
     }
 
-    /// Plan (or refresh) the earliest-start reservation for a blocked
-    /// whole-node task: the eligible node expected to free soonest.
-    fn plan_hold(&mut self, now: Time, tid: TaskId, reservation: Option<&str>) {
-        if let Some(h) = self.ledger.hold() {
-            // One hold at a time (EASY discipline): never displace
-            // another task's reservation.
-            if h.task != tid {
-                return;
-            }
-            // Our estimate is still ahead of the clock: keep the fence
-            // stable instead of re-running the O(nodes) planning scan
-            // on every head-of-line retry. Only an *overdue* hold
-            // (node freed late, went down, …) is re-planned.
-            if now < h.start {
-                return;
+    /// Plan (or refresh) earliest-start reservations for the blocked
+    /// head (when it is whole-node) plus — with multi-hold enabled
+    /// (K > 1) — the next whole-node tasks in the lookahead window, up
+    /// to K in total, each fencing a distinct node.
+    ///
+    /// Per task the EASY skip rules apply: a hold whose estimated start
+    /// is still ahead of the clock is kept stable instead of re-running
+    /// the O(nodes) planning scan on every head-of-line retry; only an
+    /// *overdue* hold (node freed late, walltime under-estimate, node
+    /// went down, …) is re-planned — this is what keeps dispatch moving
+    /// instead of stalling when estimates are noisy.
+    fn plan_holds(&mut self, now: Time, head: TaskId, head_request: ResourceRequest) {
+        let k = self.ledger.max_holds();
+        let mut candidates: Vec<TaskId> = Vec::new();
+        // Position 0 is reserved for the blocked head itself: with
+        // K = 1 only a blocked whole-node *head* ever plans a hold,
+        // exactly the single-hold discipline.
+        if head_request == ResourceRequest::WholeNode {
+            candidates.push(head);
+        }
+        // Scanning the window is pointless when every hold slot is
+        // taken and every hold's estimate is still ahead of the clock:
+        // each candidate would hit a skip arm below. This keeps the
+        // per-retry cost of a *stable* multi-hold state at O(1), like
+        // the single-hold discipline's.
+        let worth_scanning =
+            !self.ledger.is_full() || self.ledger.holds().iter().any(|h| now >= h.start);
+        if k > 1 && worth_scanning {
+            for tid in self.pending.iter_ordered(now, self.backfill_lookahead) {
+                if candidates.len() >= k {
+                    break;
+                }
+                if tid == head || candidates.contains(&tid) {
+                    continue;
+                }
+                if self.tasks[tid as usize].spec.request == ResourceRequest::WholeNode {
+                    candidates.push(tid);
+                }
             }
         }
-        let Some(part) = self.engine.index().partition_for(reservation) else {
-            return;
-        };
-        if let Some((node, start)) =
-            self.ledger
-                .plan_whole_node(self.engine.index(), &self.cluster, part, now)
-        {
-            let _ = self.ledger.set_hold(tid, node, start);
+        for tid in candidates {
+            match self.ledger.hold_for(tid) {
+                // Estimate still ahead of the clock: keep the fence.
+                Some(h) if now < h.start => continue,
+                // Overdue: fall through and re-plan.
+                Some(_) => {}
+                // No hold and no free slot: set_hold would refuse —
+                // skip the planning scan entirely.
+                None if self.ledger.is_full() => continue,
+                None => {}
+            }
+            let reservation = self.jobs[self.tasks[tid as usize].record.job as usize]
+                .reservation
+                .clone();
+            let Some(part) = self.engine.index().partition_for(reservation.as_deref()) else {
+                continue;
+            };
+            if let Some((node, start)) =
+                self.ledger
+                    .plan_whole_node(self.engine.index(), &self.cluster, part, now, tid)
+            {
+                let _ = self.ledger.set_hold(tid, node, start);
+            }
         }
+        if self.ledger.holds().len() > self.max_holds_seen {
+            self.max_holds_seen = self.ledger.holds().len();
+        }
+        if self.ledger.check_invariants().is_err() {
+            self.hold_invariant_violated = true;
+        }
+        debug_assert!(!self.hold_invariant_violated, "hold invariants broken");
     }
 
     /// A running task's occupancy ended: it enters COMPLETING and waits

@@ -34,4 +34,4 @@ pub use accounting::{JobStats, TaskRecord};
 pub use self::core::{SchedEvent, SchedulerSim, SimOutcome};
 pub use costmodel::CostModel;
 pub use job::{ComputeBatch, JobId, JobSpec, ResourceRequest, SchedTaskSpec, TaskId, TaskState};
-pub use queue::PendingQueue;
+pub use queue::{AgingPolicy, PendingQueue};

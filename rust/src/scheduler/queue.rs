@@ -1,11 +1,71 @@
-//! The pending queue: priority-then-FIFO ordering over scheduling tasks.
+//! The pending queue: priority-then-FIFO ordering over scheduling tasks,
+//! with optional queue aging.
 //!
 //! Within one array job all tasks share a priority, so dispatch order is
 //! array order (Slurm behaves the same). Across jobs, higher priority goes
 //! first; spot jobs ride at negative priority.
+//!
+//! With an [`AgingPolicy`] installed, a pending entry's *effective*
+//! priority rises with its wait time (configurable slope, capped), so a
+//! low-priority whole-node job stuck behind a sustained high-priority
+//! stream eventually outranks fresh arrivals and reaches the head —
+//! the cross-priority starvation fix the backfill reservations alone
+//! cannot provide. With no policy installed the queue behaves exactly
+//! like the static priority-then-FIFO discipline (same pop order, same
+//! scan order), which the equivalence properties in
+//! `rust/tests/fairness_properties.rs` pin down.
 
 use crate::scheduler::job::TaskId;
+use crate::sim::Time;
 use std::collections::VecDeque;
+
+/// Queue-aging policy: effective priority = static priority +
+/// `min(cap, floor(slope × wait))`.
+///
+/// The floor keeps effective priorities integral, so aging never breaks
+/// FIFO ties within a class faster than one priority point at a time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AgingPolicy {
+    /// Priority points gained per second of wait (> 0 to have effect).
+    pub slope: f64,
+    /// Maximum boost above the static priority (≥ 0).
+    pub cap: i32,
+}
+
+impl AgingPolicy {
+    /// Convenience constructor.
+    pub fn new(slope: f64, cap: i32) -> AgingPolicy {
+        AgingPolicy { slope, cap }
+    }
+
+    /// The boost earned after `wait` seconds (0 for non-positive wait).
+    pub fn boost(&self, wait: Time) -> i64 {
+        if self.slope <= 0.0 || wait <= 0.0 {
+            return 0;
+        }
+        // `as` saturates, so pathological slopes cannot overflow.
+        ((self.slope * wait) as i64).min(self.cap.max(0) as i64)
+    }
+
+    /// Effective priority of a `base`-priority entry after `wait` seconds.
+    pub fn effective(&self, base: i32, wait: Time) -> i64 {
+        base as i64 + self.boost(wait)
+    }
+
+    /// Wait after which a `base`-priority entry outranks a fresh entry
+    /// of priority `other` (the bound the fairness properties use);
+    /// `None` when the cap is too small to ever close the gap.
+    pub fn overtake_wait(&self, base: i32, other: i32) -> Option<Time> {
+        let gap = (other as i64 - base as i64) + 1;
+        if gap <= 0 {
+            return Some(0.0);
+        }
+        if self.slope <= 0.0 || gap > self.cap.max(0) as i64 {
+            return None;
+        }
+        Some((gap as f64 + 1.0) / self.slope)
+    }
+}
 
 /// One pending entry.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -13,16 +73,25 @@ struct Entry {
     task: TaskId,
     priority: i32,
     seq: u64,
+    /// When the entry first joined the queue. Head-of-line reinsertions
+    /// ([`PendingQueue::push_front`]) carry the *original* timestamp —
+    /// re-stamping would silently reset aging credit on every failed
+    /// placement retry, un-fixing the starvation aging exists to fix.
+    enqueued_at: Time,
 }
 
-/// Priority + FIFO pending queue with O(1) pop and O(log n)-ish insert
-/// (bucketed by priority; priorities in practice are a handful of values).
+/// Priority + FIFO pending queue with O(buckets) pop and O(log n)-ish
+/// insert (bucketed by priority; priorities in practice are a handful of
+/// values). Aging, when enabled, reranks buckets by their *front* entry's
+/// effective priority — within a bucket the front is the oldest entry, so
+/// it is also the bucket's best under any non-negative slope.
 #[derive(Debug, Default)]
 pub struct PendingQueue {
-    /// Buckets sorted by descending priority; each bucket FIFO.
+    /// Buckets sorted by descending static priority; each bucket FIFO.
     buckets: Vec<(i32, VecDeque<Entry>)>,
     seq: u64,
     len: usize,
+    aging: Option<AgingPolicy>,
 }
 
 impl PendingQueue {
@@ -30,14 +99,26 @@ impl PendingQueue {
         PendingQueue::default()
     }
 
-    /// Enqueue a task at a priority.
-    pub fn push(&mut self, task: TaskId, priority: i32) {
+    /// Install (or remove) the aging policy. `None` restores the static
+    /// priority-then-FIFO discipline bit-for-bit.
+    pub fn set_aging(&mut self, aging: Option<AgingPolicy>) {
+        self.aging = aging;
+    }
+
+    /// The installed aging policy.
+    pub fn aging(&self) -> Option<AgingPolicy> {
+        self.aging
+    }
+
+    /// Enqueue a task at a priority, timestamped `now` for aging.
+    pub fn push(&mut self, task: TaskId, priority: i32, now: Time) {
         self.seq += 1;
         self.len += 1;
         let e = Entry {
             task,
             priority,
             seq: self.seq,
+            enqueued_at: now,
         };
         match self.buckets.binary_search_by(|(p, _)| priority.cmp(p)) {
             Ok(i) => self.buckets[i].1.push_back(e),
@@ -49,33 +130,16 @@ impl PendingQueue {
         }
     }
 
-    /// Peek the next task without removing it.
-    pub fn peek(&self) -> Option<TaskId> {
-        self.buckets
-            .iter()
-            .find(|(_, q)| !q.is_empty())
-            .and_then(|(_, q)| q.front().map(|e| e.task))
-    }
-
-    /// Pop the highest-priority, oldest task.
-    pub fn pop(&mut self) -> Option<TaskId> {
-        for (_, q) in self.buckets.iter_mut() {
-            if let Some(e) = q.pop_front() {
-                self.len -= 1;
-                return Some(e.task);
-            }
-        }
-        None
-    }
-
     /// Put a task back at the *front* of its priority bucket (head-of-line
-    /// retry after a failed placement).
-    pub fn push_front(&mut self, task: TaskId, priority: i32) {
+    /// retry after a failed placement). `enqueued_at` must be the entry's
+    /// original enqueue time so the retry keeps its aging credit.
+    pub fn push_front(&mut self, task: TaskId, priority: i32, enqueued_at: Time) {
         self.len += 1;
         let e = Entry {
             task,
             priority,
             seq: 0, // front of bucket
+            enqueued_at,
         };
         match self.buckets.binary_search_by(|(p, _)| priority.cmp(p)) {
             Ok(i) => self.buckets[i].1.push_front(e),
@@ -87,8 +151,109 @@ impl PendingQueue {
         }
     }
 
-    /// Pop the first task (priority-then-FIFO order) satisfying `pred`,
-    /// scanning at most `max_scan` entries — the backfill lookahead.
+    /// Effective priority of an entry at `now`.
+    fn effective(&self, e: &Entry, now: Time) -> i64 {
+        match self.aging {
+            None => e.priority as i64,
+            Some(a) => a.effective(e.priority, now - e.enqueued_at),
+        }
+    }
+
+    /// The bucket whose *front* entry ranks first in dispatch order at
+    /// `now` (the allocation-free core of `pop`/`peek`, the scheduler's
+    /// hottest queue op). With no aging this is the first non-empty
+    /// bucket, exactly the historical walk.
+    fn best_front(&self, now: Time) -> Option<usize> {
+        if self.aging.is_none() {
+            return self.buckets.iter().position(|(_, q)| !q.is_empty());
+        }
+        let mut best: Option<(usize, i64)> = None;
+        for (i, (_, q)) in self.buckets.iter().enumerate() {
+            if let Some(front) = q.front() {
+                let eff = self.effective(front, now);
+                // Strict `>` keeps the earlier bucket (higher static
+                // priority) on effective-priority ties.
+                let better = match best {
+                    None => true,
+                    Some((_, b)) => eff > b,
+                };
+                if better {
+                    best = Some((i, eff));
+                }
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+
+    /// `(bucket, position)` pairs in dispatch order — effective priority
+    /// descending, higher static priority then FIFO on ties — at most
+    /// `max` of them. A k-way merge over bucket cursors: within a bucket
+    /// entries sit oldest-first (head-of-line retries re-enter at the
+    /// front with their original stamp, so a rare backfill-race requeue
+    /// may transiently front a younger entry — the discipline is exact
+    /// everywhere else), so effective priority never increases along a
+    /// cursor and the merge order is globally correct. With no aging
+    /// this degenerates to the static bucket-then-FIFO walk, taken as a
+    /// merge-free fast path.
+    fn scan_order(&self, now: Time, max: usize) -> Vec<(usize, usize)> {
+        if self.aging.is_none() {
+            let mut out = Vec::new();
+            'buckets: for (i, (_, q)) in self.buckets.iter().enumerate() {
+                for p in 0..q.len() {
+                    if out.len() >= max {
+                        break 'buckets;
+                    }
+                    out.push((i, p));
+                }
+            }
+            return out;
+        }
+        let mut cursors = vec![0usize; self.buckets.len()];
+        let mut out = Vec::new();
+        while out.len() < max {
+            let mut best: Option<(usize, i64)> = None;
+            for (i, (_, q)) in self.buckets.iter().enumerate() {
+                if cursors[i] < q.len() {
+                    let eff = self.effective(&q[cursors[i]], now);
+                    // Strict `>` keeps the earlier bucket (higher static
+                    // priority) on effective-priority ties.
+                    let better = match best {
+                        None => true,
+                        Some((_, b)) => eff > b,
+                    };
+                    if better {
+                        best = Some((i, eff));
+                    }
+                }
+            }
+            match best {
+                Some((i, _)) => {
+                    out.push((i, cursors[i]));
+                    cursors[i] += 1;
+                }
+                None => break,
+            }
+        }
+        out
+    }
+
+    /// Peek the next task at `now` without removing it.
+    pub fn peek(&self, now: Time) -> Option<TaskId> {
+        let bi = self.best_front(now)?;
+        self.buckets[bi].1.front().map(|e| e.task)
+    }
+
+    /// Pop the effectively-highest-priority, oldest task at `now`.
+    pub fn pop(&mut self, now: Time) -> Option<TaskId> {
+        let bi = self.best_front(now)?;
+        let e = self.buckets[bi].1.pop_front().expect("best bucket is non-empty");
+        self.len -= 1;
+        Some(e.task)
+    }
+
+    /// Pop the first task (effective-priority dispatch order at `now`)
+    /// satisfying `pred`, inspecting at most `max_scan` entries — the
+    /// backfill lookahead.
     ///
     /// The bound keeps the scan cheap on deep queues *and* bounds
     /// priority inversion: a backfill candidate can only jump entries
@@ -97,23 +262,27 @@ impl PendingQueue {
     pub fn pop_where(
         &mut self,
         max_scan: usize,
+        now: Time,
         mut pred: impl FnMut(TaskId) -> bool,
     ) -> Option<TaskId> {
-        let mut scanned = 0usize;
-        for (_, q) in self.buckets.iter_mut() {
-            let budget = max_scan - scanned;
-            if let Some(pos) = q.iter().take(budget).position(|e| pred(e.task)) {
-                let task = q[pos].task;
-                let _ = q.remove(pos);
+        for (bi, pos) in self.scan_order(now, max_scan) {
+            let task = self.buckets[bi].1[pos].task;
+            if pred(task) {
+                let _ = self.buckets[bi].1.remove(pos);
                 self.len -= 1;
                 return Some(task);
             }
-            scanned += q.len().min(budget);
-            if scanned >= max_scan {
-                return None;
-            }
         }
         None
+    }
+
+    /// The first `max` tasks in dispatch order at `now`, without
+    /// removing anything — the multi-hold planner's candidate window.
+    pub fn iter_ordered(&self, now: Time, max: usize) -> Vec<TaskId> {
+        self.scan_order(now, max)
+            .into_iter()
+            .map(|(b, p)| self.buckets[b].1[p].task)
+            .collect()
     }
 
     /// Remove an arbitrary task (job cancellation); O(n).
@@ -144,59 +313,59 @@ mod tests {
     #[test]
     fn fifo_within_priority() {
         let mut q = PendingQueue::new();
-        q.push(1, 0);
-        q.push(2, 0);
-        q.push(3, 0);
-        assert_eq!(q.pop(), Some(1));
-        assert_eq!(q.pop(), Some(2));
-        assert_eq!(q.pop(), Some(3));
-        assert_eq!(q.pop(), None);
+        q.push(1, 0, 0.0);
+        q.push(2, 0, 0.0);
+        q.push(3, 0, 0.0);
+        assert_eq!(q.pop(0.0), Some(1));
+        assert_eq!(q.pop(0.0), Some(2));
+        assert_eq!(q.pop(0.0), Some(3));
+        assert_eq!(q.pop(0.0), None);
     }
 
     #[test]
     fn priority_order_across_buckets() {
         let mut q = PendingQueue::new();
-        q.push(10, -5); // spot
-        q.push(11, 0); // normal
-        q.push(12, 5); // interactive
-        q.push(13, 0);
-        assert_eq!(q.pop(), Some(12));
-        assert_eq!(q.pop(), Some(11));
-        assert_eq!(q.pop(), Some(13));
-        assert_eq!(q.pop(), Some(10));
+        q.push(10, -5, 0.0); // spot
+        q.push(11, 0, 0.0); // normal
+        q.push(12, 5, 0.0); // interactive
+        q.push(13, 0, 0.0);
+        assert_eq!(q.pop(1.0), Some(12));
+        assert_eq!(q.pop(1.0), Some(11));
+        assert_eq!(q.pop(1.0), Some(13));
+        assert_eq!(q.pop(1.0), Some(10));
     }
 
     #[test]
     fn push_front_retries_first() {
         let mut q = PendingQueue::new();
-        q.push(1, 0);
-        q.push(2, 0);
-        let t = q.pop().unwrap();
-        q.push_front(t, 0);
-        assert_eq!(q.pop(), Some(1), "retried task pops first again");
+        q.push(1, 0, 0.0);
+        q.push(2, 0, 0.0);
+        let t = q.pop(0.0).unwrap();
+        q.push_front(t, 0, 0.0);
+        assert_eq!(q.pop(0.0), Some(1), "retried task pops first again");
     }
 
     #[test]
     fn peek_does_not_remove() {
         let mut q = PendingQueue::new();
-        q.push(7, 1);
-        assert_eq!(q.peek(), Some(7));
+        q.push(7, 1, 0.0);
+        assert_eq!(q.peek(0.0), Some(7));
         assert_eq!(q.len(), 1);
-        assert_eq!(q.pop(), Some(7));
+        assert_eq!(q.pop(0.0), Some(7));
         assert!(q.is_empty());
     }
 
     #[test]
     fn remove_specific() {
         let mut q = PendingQueue::new();
-        q.push(1, 0);
-        q.push(2, 0);
-        q.push(3, 1);
+        q.push(1, 0, 0.0);
+        q.push(2, 0, 0.0);
+        q.push(3, 1, 0.0);
         assert!(q.remove(2));
         assert!(!q.remove(99));
         assert_eq!(q.len(), 2);
-        assert_eq!(q.pop(), Some(3));
-        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(0.0), Some(3));
+        assert_eq!(q.pop(0.0), Some(1));
     }
 
     #[test]
@@ -204,42 +373,42 @@ mod tests {
         // A head-of-line retry at a priority with no live bucket must
         // create the bucket in sorted position, not panic or misorder.
         let mut q = PendingQueue::new();
-        q.push(1, 0);
-        q.push_front(2, 5); // no priority-5 bucket exists yet
-        q.push_front(3, -5); // nor a -5 one
+        q.push(1, 0, 0.0);
+        q.push_front(2, 5, 0.0); // no priority-5 bucket exists yet
+        q.push_front(3, -5, 0.0); // nor a -5 one
         assert_eq!(q.len(), 3);
-        assert_eq!(q.pop(), Some(2), "highest priority first");
-        assert_eq!(q.pop(), Some(1));
-        assert_eq!(q.pop(), Some(3));
-        assert_eq!(q.pop(), None);
+        assert_eq!(q.pop(0.0), Some(2), "highest priority first");
+        assert_eq!(q.pop(0.0), Some(1));
+        assert_eq!(q.pop(0.0), Some(3));
+        assert_eq!(q.pop(0.0), None);
         assert_eq!(q.len(), 0);
     }
 
     #[test]
     fn push_front_ordering_within_existing_bucket() {
         let mut q = PendingQueue::new();
-        q.push(1, 0);
-        q.push(2, 0);
-        q.push_front(9, 0);
-        q.push_front(8, 0);
+        q.push(1, 0, 0.0);
+        q.push(2, 0, 0.0);
+        q.push_front(9, 0, 0.0);
+        q.push_front(8, 0, 0.0);
         // Most recent retry pops first, then the earlier retry, then FIFO.
-        assert_eq!(q.pop(), Some(8));
-        assert_eq!(q.pop(), Some(9));
-        assert_eq!(q.pop(), Some(1));
-        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(0.0), Some(8));
+        assert_eq!(q.pop(0.0), Some(9));
+        assert_eq!(q.pop(0.0), Some(1));
+        assert_eq!(q.pop(0.0), Some(2));
     }
 
     #[test]
     fn remove_maintains_len_invariants() {
         let mut q = PendingQueue::new();
         for t in 0..10u64 {
-            q.push(t, (t % 2) as i32);
+            q.push(t, (t % 2) as i32, 0.0);
         }
         assert_eq!(q.len(), 10);
         // Remove from the middle, the head, and a push_front entry.
         assert!(q.remove(4));
         assert!(q.remove(1));
-        q.push_front(99, 1);
+        q.push_front(99, 1, 0.0);
         assert!(q.remove(99));
         assert_eq!(q.len(), 8);
         // Double-remove and unknown ids leave len untouched.
@@ -248,7 +417,7 @@ mod tests {
         assert_eq!(q.len(), 8);
         // Drain: count must match len, ids must be the surviving ones.
         let mut drained = Vec::new();
-        while let Some(t) = q.pop() {
+        while let Some(t) = q.pop(0.0) {
             drained.push(t);
         }
         assert_eq!(drained.len(), 8);
@@ -262,46 +431,46 @@ mod tests {
         // The scheduler's failed-dispatch path: pop, fail, push_front,
         // preemption removes it. len must stay exact throughout.
         let mut q = PendingQueue::new();
-        q.push(7, 0);
-        let t = q.pop().unwrap();
+        q.push(7, 0, 0.0);
+        let t = q.pop(0.0).unwrap();
         assert_eq!(q.len(), 0);
-        q.push_front(t, 0);
+        q.push_front(t, 0, 0.0);
         assert_eq!(q.len(), 1);
         assert!(q.remove(t));
         assert!(q.is_empty());
-        assert_eq!(q.peek(), None);
-        assert_eq!(q.pop(), None);
+        assert_eq!(q.peek(0.0), None);
+        assert_eq!(q.pop(0.0), None);
     }
 
     #[test]
     fn pop_where_scans_in_order_and_respects_bound() {
         let mut q = PendingQueue::new();
-        q.push(1, 0);
-        q.push(2, 0);
-        q.push(3, 5); // higher priority, scanned first
-        q.push(4, 0);
+        q.push(1, 0, 0.0);
+        q.push(2, 0, 0.0);
+        q.push(3, 5, 0.0); // higher priority, scanned first
+        q.push(4, 0, 0.0);
         // First even task in priority-FIFO order: 3 is odd, then 1 odd,
         // then 2.
-        assert_eq!(q.pop_where(10, |t| t % 2 == 0), Some(2));
+        assert_eq!(q.pop_where(10, 0.0, |t| t % 2 == 0), Some(2));
         assert_eq!(q.len(), 3);
         // Bound: scanning only 2 entries (3, then 1) finds no even task.
-        assert_eq!(q.pop_where(2, |t| t % 2 == 0), None);
+        assert_eq!(q.pop_where(2, 0.0, |t| t % 2 == 0), None);
         assert_eq!(q.len(), 3, "failed scan removes nothing");
         // Remaining order is untouched.
-        assert_eq!(q.pop(), Some(3));
-        assert_eq!(q.pop(), Some(1));
-        assert_eq!(q.pop(), Some(4));
+        assert_eq!(q.pop(0.0), Some(3));
+        assert_eq!(q.pop(0.0), Some(1));
+        assert_eq!(q.pop(0.0), Some(4));
     }
 
     #[test]
     fn pop_where_never_matches_leaves_queue_intact() {
         let mut q = PendingQueue::new();
         for t in 0..5u64 {
-            q.push(t, 0);
+            q.push(t, 0, 0.0);
         }
-        assert_eq!(q.pop_where(100, |_| false), None);
+        assert_eq!(q.pop_where(100, 0.0, |_| false), None);
         assert_eq!(q.len(), 5);
-        let drained: Vec<_> = std::iter::from_fn(|| q.pop()).collect();
+        let drained: Vec<_> = std::iter::from_fn(|| q.pop(0.0)).collect();
         assert_eq!(drained, vec![0, 1, 2, 3, 4]);
     }
 
@@ -309,11 +478,11 @@ mod tests {
     fn interleaved_priorities_stay_fifo() {
         let mut q = PendingQueue::new();
         for i in 0..100u64 {
-            q.push(i, (i % 3) as i32);
+            q.push(i, (i % 3) as i32, 0.0);
         }
         let mut last_by_prio = [None::<u64>; 3];
         let mut prio_seen = Vec::new();
-        while let Some(t) = q.pop() {
+        while let Some(t) = q.pop(0.0) {
             let p = (t % 3) as usize;
             if let Some(prev) = last_by_prio[p] {
                 assert!(t > prev, "FIFO violated within priority {p}");
@@ -325,5 +494,140 @@ mod tests {
         let first_1 = prio_seen.iter().position(|&p| p == 1).unwrap();
         let last_2 = prio_seen.iter().rposition(|&p| p == 2).unwrap();
         assert!(last_2 < first_1);
+    }
+
+    // ---- aging ----
+
+    #[test]
+    fn aging_boost_is_monotone_and_capped() {
+        let a = AgingPolicy::new(0.5, 10);
+        assert_eq!(a.boost(-5.0), 0, "no credit before enqueue");
+        assert_eq!(a.boost(0.0), 0);
+        assert_eq!(a.boost(1.9), 0, "floor: below one point");
+        assert_eq!(a.boost(2.0), 1);
+        let mut prev = 0;
+        for w in 0..200 {
+            let b = a.boost(w as f64);
+            assert!(b >= prev, "boost must be monotone in wait");
+            assert!(b <= 10, "boost must respect the cap");
+            prev = b;
+        }
+        assert_eq!(a.boost(1e9), 10, "cap binds for arbitrarily long waits");
+        assert_eq!(a.effective(-5, 30.0), -5 + 10);
+        // Degenerate slopes never boost.
+        assert_eq!(AgingPolicy::new(0.0, 10).boost(100.0), 0);
+        assert_eq!(AgingPolicy::new(-1.0, 10).boost(100.0), 0);
+        // Saturating cast: absurd slopes cannot overflow.
+        assert_eq!(AgingPolicy::new(1e300, i32::MAX).boost(1e300), i32::MAX as i64);
+    }
+
+    #[test]
+    fn overtake_wait_bounds_the_gap() {
+        let a = AgingPolicy::new(0.5, 100);
+        let w = a.overtake_wait(-5, 10).unwrap();
+        assert!(a.effective(-5, w) > 10, "after w the entry outranks a fresh 10");
+        assert_eq!(a.overtake_wait(10, -5), Some(0.0), "already ahead");
+        // Cap smaller than the gap: never overtakes.
+        assert_eq!(AgingPolicy::new(0.5, 3).overtake_wait(-5, 10), None);
+        assert_eq!(AgingPolicy::new(0.0, 100).overtake_wait(0, 1), None);
+    }
+
+    #[test]
+    fn aged_low_priority_overtakes_fresh_high_priority() {
+        let mut q = PendingQueue::new();
+        q.set_aging(Some(AgingPolicy::new(1.0, 100)));
+        q.push(1, 0, 0.0); // old, low priority
+        q.push(2, 10, 15.0); // fresh, high priority
+        // At t = 16: eff(1) = 0 + 16 = 16 beats eff(2) = 10 + 1 = 11.
+        assert_eq!(q.peek(16.0), Some(1));
+        assert_eq!(q.pop(16.0), Some(1), "aged entry pops first");
+        assert_eq!(q.pop(16.0), Some(2));
+        // Same queue without aging: static priority wins.
+        let mut q = PendingQueue::new();
+        q.push(1, 0, 0.0);
+        q.push(2, 10, 15.0);
+        assert_eq!(q.pop(16.0), Some(2), "no aging: high priority first");
+    }
+
+    #[test]
+    fn aging_cap_stops_the_climb() {
+        let mut q = PendingQueue::new();
+        q.set_aging(Some(AgingPolicy::new(1.0, 3)));
+        q.push(1, 0, 0.0);
+        q.push(2, 10, 0.0);
+        // Even after forever, 0 + 3 < 10 + boost: high priority holds.
+        assert_eq!(q.pop(1e6), Some(2));
+        assert_eq!(q.pop(1e6), Some(1));
+    }
+
+    #[test]
+    fn pop_where_respects_aged_priority() {
+        let mut q = PendingQueue::new();
+        q.set_aging(Some(AgingPolicy::new(1.0, 100)));
+        q.push(1, 0, 0.0); // old, low priority
+        q.push(2, 10, 15.0); // fresh, high priority
+        q.push(3, 10, 15.5);
+        // Scan order at t = 16 is [1, 2, 3]; the bound must count the
+        // aged entry first.
+        assert_eq!(q.iter_ordered(16.0, 10), vec![1, 2, 3]);
+        assert_eq!(q.pop_where(1, 16.0, |t| t != 1), None, "window holds only the aged head");
+        assert_eq!(q.pop_where(10, 16.0, |t| t != 1), Some(2));
+        assert_eq!(q.len(), 2);
+        // At t = 0 relative ordering is static (nobody has credit yet).
+        let mut q = PendingQueue::new();
+        q.set_aging(Some(AgingPolicy::new(1.0, 100)));
+        q.push(1, 0, 0.0);
+        q.push(2, 10, 0.0);
+        assert_eq!(q.iter_ordered(0.0, 10), vec![2, 1]);
+    }
+
+    #[test]
+    fn push_front_roundtrip_preserves_aging_credit() {
+        // Regression: a head-of-line retry must keep its original
+        // enqueue timestamp. Re-stamping would reset the aged entry's
+        // credit and let the fresh high-priority entry overtake it.
+        let mut q = PendingQueue::new();
+        q.set_aging(Some(AgingPolicy::new(1.0, 1000)));
+        q.push(1, 0, 0.0);
+        q.push(2, 5, 8.0);
+        // At t = 10: eff(1) = 10 > eff(2) = 7.
+        let head = q.pop(10.0).unwrap();
+        assert_eq!(head, 1);
+        // Failed placement: back to the front with the ORIGINAL stamp.
+        q.push_front(head, 0, 0.0);
+        assert_eq!(
+            q.pop(10.0),
+            Some(1),
+            "retry keeps its age; a fresh stamp would rank it 0 < 7 and pop 2"
+        );
+        // And the aged order persists across repeated retries.
+        q.push_front(1, 0, 0.0);
+        q.push_front(1, 0, 0.0); // remove + retry churn
+        q.remove(1);
+        assert_eq!(q.pop(10.0), Some(1));
+        assert_eq!(q.pop(10.0), Some(2));
+    }
+
+    #[test]
+    fn aging_off_matches_static_discipline_exactly() {
+        // The same operation sequence against an aging queue with no
+        // policy and the static queue must produce identical orders.
+        let mut with = PendingQueue::new();
+        with.set_aging(None);
+        let mut without = PendingQueue::new();
+        for i in 0..50u64 {
+            let prio = (i % 5) as i32 - 2;
+            with.push(i, prio, i as f64);
+            without.push(i, prio, 0.0);
+        }
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        while let Some(t) = with.pop(1e6) {
+            a.push(t);
+        }
+        while let Some(t) = without.pop(0.0) {
+            b.push(t);
+        }
+        assert_eq!(a, b);
     }
 }

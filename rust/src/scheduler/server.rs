@@ -25,6 +25,7 @@
 //! [`crate::scheduler::lifecycle`].
 
 use crate::cluster::NodeState;
+use crate::placement::Hold;
 use crate::scheduler::accounting::TaskRecord;
 use crate::scheduler::core::{JobMeta, Op, SchedEvent, SchedulerSim, TaskSlot};
 use crate::scheduler::job::{ResourceRequest, TaskId, TaskState};
@@ -69,7 +70,7 @@ impl SchedulerSim {
             if self.cycle_budget == 0 {
                 return Some((Op::Cycle, self.cost.cycle(self.pending.len()) * s));
             }
-            let tid = self.pending.pop().expect("checked non-empty");
+            let tid = self.pending.pop(now).expect("checked non-empty");
             self.cleanups_since_dispatch = 0;
             self.cycle_budget -= 1;
             let node_level =
@@ -79,24 +80,28 @@ impl SchedulerSim {
         // Backfill machinery: only runs while the head of the queue is
         // blocked (otherwise normal dispatch above is work-conserving).
         if self.backfill && self.hol_blocked {
-            // The held node came wholly idle: dispatch the reservation's
+            // A held node came wholly idle: dispatch its reservation's
             // own task out of order, wherever it sits in the queue —
             // without this, a blocked higher-priority head would let the
             // held node idle while the reserved job starves behind it.
-            if let Some(h) = self.ledger.hold() {
+            // With multi-hold every active hold is checked; whichever
+            // reserved node drained first launches first.
+            let holds: Vec<Hold> = self.ledger.holds().to_vec();
+            for h in holds {
                 let ready = self
                     .cluster
                     .node(h.node)
                     .map(|n| n.state() == NodeState::Up && n.is_idle())
                     .unwrap_or(false);
-                if ready {
-                    if self.pending.remove(h.task) {
-                        self.cleanups_since_dispatch = 0;
-                        return Some((Op::Dispatch(h.task), self.cost.dispatch(true) * s));
-                    }
-                    // Hold task no longer pending (cancelled): unfence.
-                    self.ledger.clear_hold(h.task);
+                if !ready {
+                    continue;
                 }
+                if self.pending.remove(h.task) {
+                    self.cleanups_since_dispatch = 0;
+                    return Some((Op::Dispatch(h.task), self.cost.dispatch(true) * s));
+                }
+                // Hold task no longer pending (cancelled): unfence.
+                self.ledger.clear_hold(h.task);
             }
             if let Some(tid) = self.find_backfill(now) {
                 self.cleanups_since_dispatch = 0;
@@ -120,13 +125,16 @@ impl SchedulerSim {
         let engine = &self.engine;
         let cluster = &self.cluster;
         let ledger = &self.ledger;
-        self.pending.pop_where(self.backfill_lookahead, |tid| {
+        self.pending.pop_where(self.backfill_lookahead, now, |tid| {
             let slot = &tasks[tid as usize];
             let (cores, mem_mib) = match slot.spec.request {
                 ResourceRequest::Cores { cores, mem_mib } => (cores, mem_mib),
                 ResourceRequest::WholeNode => return false,
             };
-            let est_end = dispatch_at + startup + slot.spec.duration;
+            // Admission plans from the walltime *estimate*: exact under
+            // WalltimeError::None, noisy otherwise (a real scheduler
+            // only knows the declared walltime).
+            let est_end = dispatch_at + startup + slot.est_duration;
             let res = jobs[slot.record.job as usize].reservation.as_deref();
             engine
                 .peek_cores_where(cluster, res, cores, mem_mib, &|n| {
@@ -151,7 +159,8 @@ impl SchedulerSim {
                     .map(|t| t.record.task)
                     .collect();
                 for tid in ids {
-                    self.pending.push(tid, prio);
+                    self.tasks[tid as usize].enqueued_at = now;
+                    self.pending.push(tid, prio, now);
                 }
             }
             Op::Cycle => {
@@ -211,11 +220,17 @@ impl sim::Actor for SchedulerSim {
                     preemptable: spec.preemptable,
                     submit_t: now,
                 };
-                // Materialize task slots (records in PENDING).
+                // Materialize task slots (records in PENDING). The
+                // walltime estimate is sampled here, once per task, from
+                // the dedicated estimate stream: the declared walltime is
+                // fixed at submission, like a real batch script's.
                 for t in &spec.tasks {
                     let tid = self.tasks.len() as TaskId;
+                    let est_duration = t.duration * self.walltime.factor(&mut self.walltime_rng);
                     self.tasks.push(TaskSlot {
                         spec: t.clone(),
+                        est_duration,
+                        enqueued_at: now,
                         record: TaskRecord {
                             task: tid,
                             job: id,

@@ -19,6 +19,69 @@ use crate::sim::Time;
 use crate::util::rng::Rng;
 use crate::workload::taskgen::TaskGen;
 
+/// Multiplicative walltime-estimate error models.
+///
+/// Real schedulers plan backfill from *user-declared* walltimes, which
+/// are notoriously inaccurate — the reservation literature ("Best of
+/// Both Worlds", arXiv:2008.02223; "Scalable System Scheduling for HPC
+/// and Big Data", arXiv:1705.03102) stresses that backfill quality
+/// lives or dies on them. A model turns the DES's oracle runtime into
+/// the estimate the reservation ledger plans with
+/// ([`crate::scheduler::core::SchedulerSim::with_walltime_error`]); the
+/// simulation still runs every task for its true duration, so holds go
+/// overdue (under-estimates) or fire early (over-estimates) and the
+/// scheduler re-plans instead of stalling.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum WalltimeError {
+    /// Estimates are exact — the idealized-oracle seed behaviour.
+    /// Draws nothing, so existing seeds reproduce bit-for-bit.
+    None,
+    /// `estimate = true × exp(σ·N(0,1))` — heavy-tailed and
+    /// median-unbiased, the shape walltime studies usually report.
+    LogNormal { sigma: f64 },
+    /// `estimate = true × U[1−frac, 1+frac]` — bounded symmetric error.
+    Uniform { frac: f64 },
+}
+
+impl WalltimeError {
+    /// The CLI/config mapping for `--walltime-error σ`: non-positive σ
+    /// is the exact-oracle model.
+    pub fn from_sigma(sigma: f64) -> WalltimeError {
+        if sigma <= 0.0 {
+            WalltimeError::None
+        } else {
+            WalltimeError::LogNormal { sigma }
+        }
+    }
+
+    /// Whether this is the exact-oracle model.
+    pub fn is_none(&self) -> bool {
+        *self == WalltimeError::None
+    }
+
+    /// Sample a multiplicative estimate factor. [`WalltimeError::None`]
+    /// returns exactly `1.0` without consuming randomness; noisy draws
+    /// are floored at 0.05 so a pathological sample cannot produce a
+    /// zero or negative estimate.
+    pub fn factor(&self, rng: &mut Rng) -> f64 {
+        match *self {
+            WalltimeError::None => 1.0,
+            WalltimeError::LogNormal { sigma } => (sigma * rng.normal()).exp().max(0.05),
+            WalltimeError::Uniform { frac } => rng.range_f64(1.0 - frac, 1.0 + frac).max(0.05),
+        }
+    }
+}
+
+impl std::fmt::Display for WalltimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WalltimeError::None => write!(f, "exact"),
+            WalltimeError::LogNormal { sigma } => write!(f, "lognormal({sigma})"),
+            WalltimeError::Uniform { frac } => write!(f, "uniform({frac})"),
+        }
+    }
+}
+
 /// Which contention class a job belongs to.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum JobClass {
@@ -329,6 +392,64 @@ mod tests {
             }
         }
         assert!(ContentionMix::preset("bogus", 16).is_err());
+    }
+
+    #[test]
+    fn walltime_error_from_sigma_mapping() {
+        assert_eq!(WalltimeError::from_sigma(0.0), WalltimeError::None);
+        assert_eq!(WalltimeError::from_sigma(-1.0), WalltimeError::None);
+        assert_eq!(
+            WalltimeError::from_sigma(0.3),
+            WalltimeError::LogNormal { sigma: 0.3 }
+        );
+        assert!(WalltimeError::None.is_none());
+        assert!(!WalltimeError::from_sigma(0.3).is_none());
+    }
+
+    #[test]
+    fn walltime_none_factor_is_exact_and_draws_nothing() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..10 {
+            assert_eq!(WalltimeError::None.factor(&mut a), 1.0);
+        }
+        // The stream was not consumed: both generators still agree.
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn walltime_factors_are_positive_and_centered() {
+        let mut rng = Rng::new(11);
+        for model in [
+            WalltimeError::LogNormal { sigma: 0.5 },
+            WalltimeError::Uniform { frac: 0.4 },
+        ] {
+            let n = 4000;
+            let mut sum = 0.0;
+            for _ in 0..n {
+                let f = model.factor(&mut rng);
+                assert!(f >= 0.05, "{model}: factor {f} below floor");
+                sum += f;
+            }
+            let mean = sum / n as f64;
+            assert!((0.7..1.5).contains(&mean), "{model}: mean factor {mean}");
+        }
+        // Zero-width uniform error is exactly 1 (the noise-free noisy
+        // path the equivalence property leans on).
+        let mut rng = Rng::new(3);
+        for _ in 0..16 {
+            assert_eq!(WalltimeError::Uniform { frac: 0.0 }.factor(&mut rng), 1.0);
+        }
+    }
+
+    #[test]
+    fn walltime_display_labels() {
+        assert_eq!(WalltimeError::None.to_string(), "exact");
+        assert_eq!(
+            WalltimeError::LogNormal { sigma: 0.3 }.to_string(),
+            "lognormal(0.3)"
+        );
+        assert_eq!(WalltimeError::Uniform { frac: 0.2 }.to_string(), "uniform(0.2)");
     }
 
     #[test]

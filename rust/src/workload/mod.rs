@@ -7,7 +7,7 @@ pub mod paper;
 pub mod taskgen;
 pub mod trace;
 
-pub use contention::{Arrival, ClassSpec, ContentionMix, JobClass, Submission};
+pub use contention::{Arrival, ClassSpec, ContentionMix, JobClass, Submission, WalltimeError};
 pub use paper::{paper_workload, PaperCell};
 pub use taskgen::TaskGen;
 pub use trace::Trace;
