@@ -1,0 +1,170 @@
+//! Bench: node-based pool dispatch vs full placement for short jobs.
+//!
+//! The acceptance bar for the pool subsystem (the paper's Figure-1
+//! speedup, measured as jobs-per-second): at 4096 nodes, dispatching a
+//! fleet of short whole-node jobs through the pool's O(1) free list
+//! must beat the full placement engine (index queries + per-core masks
+//! + memory accounting) by ≥ 10×.
+//!
+//! Both paths run the same steady-state loop: half the cluster is kept
+//! occupied, then each "job" acquires a node and releases the oldest
+//! live one — the short-job churn the rapid-launch partition serves.
+//!
+//! ```bash
+//! cargo bench --bench bench_pool                         # full sweep
+//! cargo bench --bench bench_pool -- --max-scale 4096 --max-jobs 10000 --require 10
+//! ```
+//!
+//! `--max-scale N` / `--max-jobs J` truncate the sweep (CI smoke);
+//! `--require X` enforces a ≥X× jobs-per-second speedup at the largest
+//! (scale, jobs) cell actually run, so perf regressions fail PRs.
+
+use llsched::bench::{bench, black_box, section, BenchOpts};
+use llsched::cluster::{Cluster, NodeId};
+use llsched::placement::{PlacementEngine, Strategy};
+use llsched::pool::{NodeDispatcher, NodePool};
+use llsched::scheduler::job::Placement;
+use std::collections::VecDeque;
+use std::time::Duration;
+
+const SCALES: [u32; 2] = [512, 4096];
+const JOB_COUNTS: [usize; 3] = [1_000, 10_000, 100_000];
+
+/// Full-placement path: every job goes through the engine (index
+/// query, whole-node core mask + memory allocation, index delta), the
+/// general scheduler's cost structure.
+fn churn_engine(nodes: u32, jobs: usize) -> usize {
+    let mut cluster = Cluster::tx_green(nodes);
+    let mut engine = PlacementEngine::new(&cluster, Strategy::NodeBased, 1);
+    let mut live: VecDeque<Placement> = VecDeque::new();
+    for _ in 0..nodes / 2 {
+        live.push_back(engine.place_whole(&mut cluster, None).expect("capacity"));
+    }
+    let mut done = 0usize;
+    for _ in 0..jobs {
+        let p = engine.place_whole(&mut cluster, None).expect("capacity");
+        live.push_back(p);
+        let old = live.pop_front().expect("live set non-empty");
+        engine.release(&mut cluster, &old).expect("release");
+        done += 1;
+    }
+    for p in live {
+        engine.release(&mut cluster, &p).expect("drain");
+    }
+    done
+}
+
+/// Node-based pool path: every job is a free-list pop + push.
+fn churn_pool(nodes: u32, jobs: usize) -> usize {
+    let mut pool = NodePool::new(nodes as usize);
+    for id in 0..nodes as NodeId {
+        assert!(pool.lease(id));
+    }
+    let mut disp = NodeDispatcher::new();
+    let mut live: VecDeque<NodeId> = VecDeque::new();
+    for _ in 0..nodes / 2 {
+        live.push_back(disp.launch(&mut pool).expect("capacity"));
+    }
+    let mut done = 0usize;
+    for _ in 0..jobs {
+        let n = disp.launch(&mut pool).expect("capacity");
+        live.push_back(n);
+        let old = live.pop_front().expect("live set non-empty");
+        assert!(disp.release(&mut pool, old));
+        done += 1;
+    }
+    done
+}
+
+/// Parse `--flag value` from argv (panics on malformed input: a bench
+/// invocation error should fail loudly, not silently run the default).
+fn arg_value(args: &[String], flag: &str) -> Option<f64> {
+    args.iter().position(|a| a == flag).map(|i| {
+        args.get(i + 1)
+            .unwrap_or_else(|| panic!("{flag} needs a value"))
+            .parse::<f64>()
+            .unwrap_or_else(|_| panic!("{flag} needs a number"))
+    })
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let max_scale = arg_value(&args, "--max-scale").map(|v| v as u32);
+    let max_jobs = arg_value(&args, "--max-jobs").map(|v| v as usize);
+    let require = arg_value(&args, "--require");
+
+    let opts = BenchOpts {
+        warmup: 1,
+        iters: 5,
+        max_wall: Duration::from_secs(30),
+    };
+    let scales: Vec<u32> = SCALES
+        .iter()
+        .copied()
+        .filter(|&n| max_scale.map(|m| n <= m).unwrap_or(true))
+        .collect();
+    assert!(!scales.is_empty(), "--max-scale below the smallest scale");
+    let job_counts: Vec<usize> = JOB_COUNTS
+        .iter()
+        .copied()
+        .filter(|&j| max_jobs.map(|m| j <= m).unwrap_or(true))
+        .collect();
+    assert!(!job_counts.is_empty(), "--max-jobs below the smallest count");
+
+    let mut speedups: Vec<(u32, usize, f64)> = Vec::new();
+    for &nodes in &scales {
+        section(&format!("{nodes} nodes"));
+        for &jobs in &job_counts {
+            let engine = bench(&format!("engine placement  {jobs} jobs"), opts, |_| {
+                black_box(churn_engine(nodes, jobs))
+            });
+            println!("{}", engine.line());
+            let pool = bench(&format!("pool   dispatch   {jobs} jobs"), opts, |_| {
+                black_box(churn_pool(nodes, jobs))
+            });
+            println!("{}", pool.line());
+            let engine_jps = jobs as f64 / engine.summary.p50.max(1e-12);
+            let pool_jps = jobs as f64 / pool.summary.p50.max(1e-12);
+            let speedup = pool_jps / engine_jps.max(1e-12);
+            println!(
+                "  → {jobs} short jobs: engine {engine_jps:.0} jobs/s, pool {pool_jps:.0} jobs/s, speedup {speedup:.0}x"
+            );
+            speedups.push((nodes, jobs, speedup));
+        }
+    }
+
+    section("acceptance");
+    let largest_scale = *scales.last().expect("non-empty");
+    let largest_jobs = *job_counts.last().expect("non-empty");
+    let mut failed = false;
+    for (nodes, jobs, speedup) in &speedups {
+        // The headline ≥10× bar applies at 4096 nodes; `--require`
+        // additionally enforces the caller's floor at the largest cell
+        // actually run (the stricter of the two wins when both apply).
+        let baseline = if *nodes >= 4096 { Some(10.0) } else { None };
+        let required = if *nodes == largest_scale && *jobs == largest_jobs {
+            require
+        } else {
+            None
+        };
+        let floor = match (baseline, required) {
+            (Some(a), Some(b)) => Some(a.max(b)),
+            (a, None) => a,
+            (None, b) => b,
+        };
+        let verdict = match floor {
+            None => "info".to_string(),
+            Some(f) if *speedup >= f => format!("PASS (≥{f:.0}x required)"),
+            Some(f) => {
+                failed = true;
+                format!("FAIL (≥{f:.0}x required)")
+            }
+        };
+        println!(
+            "node-based dispatch at {nodes:>5} nodes / {jobs:>6} jobs: {speedup:>7.0}x  [{verdict}]"
+        );
+    }
+    if failed {
+        std::process::exit(1);
+    }
+}

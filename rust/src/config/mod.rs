@@ -6,6 +6,7 @@ pub mod presets;
 
 use crate::error::{Error, Result};
 use crate::placement::Strategy;
+use crate::pool::PoolConfig;
 use crate::scheduler::queue::AgingPolicy;
 use parser::Value;
 
@@ -96,6 +97,20 @@ pub struct RunConfig {
     /// log-normal multiplicative error on the estimates backfill plans
     /// from; `0` keeps the DES's exact-oracle estimates.
     pub walltime_error: f64,
+    /// Initial rapid-launch pool size (`pool_size = 8`); `0` disables
+    /// the pool entirely ([`crate::pool`]).
+    pub pool_size: u32,
+    /// Elastic lower bound on the pool (`pool_min = 2`).
+    pub pool_min: u32,
+    /// Elastic upper bound on the pool (`pool_max = 16`); `0` pins the
+    /// pool at `pool_size`.
+    pub pool_max: u32,
+    /// Resize dead-band fraction in `[0, 1)` (`pool_hysteresis = 0.25`).
+    pub pool_hysteresis: f64,
+    /// Preemptive backfill (`preempt_overdue = true`): kill backfilled
+    /// tasks that overstay their walltime estimate once their node's
+    /// hold comes due, instead of waiting for them to vacate.
+    pub preempt_overdue: bool,
 }
 
 impl Default for RunConfig {
@@ -115,6 +130,11 @@ impl Default for RunConfig {
             aging: 0.0,
             aging_cap: 1000,
             walltime_error: 0.0,
+            pool_size: 0,
+            pool_min: 0,
+            pool_max: 0,
+            pool_hysteresis: 0.25,
+            preempt_overdue: false,
         }
     }
 }
@@ -158,6 +178,7 @@ impl RunConfig {
         if self.walltime_error < 0.0 {
             return Err(Error::Config("walltime_error must be >= 0".into()));
         }
+        self.pool_config().validate().map_err(Error::Config)?;
         Ok(())
     }
 
@@ -220,6 +241,29 @@ impl RunConfig {
         if let Some(v) = run.get("walltime_error") {
             c.walltime_error = v.as_float()?;
         }
+        // Pool keys: negative values must be config errors, not wraps.
+        for (key, field) in [
+            ("pool_size", &mut c.pool_size as &mut u32),
+            ("pool_min", &mut c.pool_min),
+            ("pool_max", &mut c.pool_max),
+        ] {
+            if let Some(v) = run.get(key) {
+                let x = v.as_int()?;
+                if !(0..=u32::MAX as i64).contains(&x) {
+                    return Err(Error::Config(format!(
+                        "{key} must be in 0..={}, got {x}",
+                        u32::MAX
+                    )));
+                }
+                *field = x as u32;
+            }
+        }
+        if let Some(v) = run.get("pool_hysteresis") {
+            c.pool_hysteresis = v.as_float()?;
+        }
+        if let Some(v) = run.get("preempt_overdue") {
+            c.preempt_overdue = v.as_bool()?;
+        }
         c.validate()?;
         Ok(c)
     }
@@ -231,6 +275,18 @@ impl RunConfig {
             Some(AgingPolicy::new(self.aging, self.aging_cap))
         } else {
             None
+        }
+    }
+
+    /// The rapid-launch pool configuration this run uses (disabled when
+    /// `pool_size` is 0).
+    pub fn pool_config(&self) -> PoolConfig {
+        PoolConfig {
+            size: self.pool_size as usize,
+            min: self.pool_min as usize,
+            max: self.pool_max as usize,
+            hysteresis: self.pool_hysteresis,
+            ..PoolConfig::disabled()
         }
     }
 
@@ -356,6 +412,45 @@ mod tests {
         assert!(RunConfig::from_value(&bad).is_err());
         let bad = parser::parse("[run]\naging_cap = 5000000000\n").unwrap();
         assert!(RunConfig::from_value(&bad).is_err(), "out of i32 range");
+    }
+
+    #[test]
+    fn pool_keys_parse_with_defaults() {
+        let c = RunConfig::from_value(&parser::parse("[run]\n").unwrap()).unwrap();
+        assert_eq!(c.pool_size, 0);
+        assert_eq!(c.pool_min, 0);
+        assert_eq!(c.pool_max, 0);
+        assert_eq!(c.pool_hysteresis, 0.25);
+        assert!(!c.preempt_overdue);
+        assert!(!c.pool_config().enabled(), "pool off by default");
+        let v = parser::parse(
+            "[run]\npool_size = 8\npool_min = 2\npool_max = 16\n\
+             pool_hysteresis = 0.5\npreempt_overdue = true\n",
+        )
+        .unwrap();
+        let c = RunConfig::from_value(&v).unwrap();
+        assert_eq!(c.pool_size, 8);
+        assert_eq!(c.pool_min, 2);
+        assert_eq!(c.pool_max, 16);
+        assert_eq!(c.pool_hysteresis, 0.5);
+        assert!(c.preempt_overdue);
+        let pc = c.pool_config();
+        assert!(pc.enabled());
+        assert_eq!(pc.effective_max(), 16);
+        assert_eq!(pc.effective_min(), 2);
+    }
+
+    #[test]
+    fn pool_keys_validated() {
+        let bad = parser::parse("[run]\npool_size = -1\n").unwrap();
+        assert!(RunConfig::from_value(&bad).is_err(), "negative size rejected");
+        let bad = parser::parse("[run]\npool_hysteresis = 1.0\n").unwrap();
+        assert!(RunConfig::from_value(&bad).is_err(), "hysteresis < 1 required");
+        let bad = parser::parse("[run]\npool_size = 4\npool_min = 9\npool_max = 8\n").unwrap();
+        assert!(RunConfig::from_value(&bad).is_err(), "min above max rejected");
+        // min/max nonsense is tolerated while the pool is disabled.
+        let ok = parser::parse("[run]\npool_min = 9\npool_max = 8\n").unwrap();
+        assert!(RunConfig::from_value(&ok).is_ok());
     }
 
     #[test]

@@ -70,6 +70,13 @@ pub fn cell(nodes: u32, task: &TaskConfig, mode: Mode, run_idx: usize) -> RunCon
         aging: 0.0,
         aging_cap: 1000,
         walltime_error: 0.0,
+        // The rapid-launch pool and preemptive backfill are contention-
+        // era features; the paper's single-job matrix leaves them off.
+        pool_size: 0,
+        pool_min: 0,
+        pool_max: 0,
+        pool_hysteresis: 0.25,
+        preempt_overdue: false,
     }
 }
 

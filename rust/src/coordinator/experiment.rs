@@ -6,10 +6,11 @@ use crate::cluster::Cluster;
 use crate::config::presets::{self, NODE_SCALES, RUNS_PER_CELL, TASK_CONFIGS};
 use crate::config::Mode;
 use crate::error::{Error, Result};
-use crate::metrics::contention::{per_class, ClassReport};
+use crate::metrics::contention::{per_class, pool_report, ClassReport, PoolReport};
 use crate::metrics::overhead::OverheadPoint;
 use crate::metrics::timeline::UtilizationSeries;
 use crate::placement::Strategy;
+use crate::pool::PoolConfig;
 use crate::scheduler::core::{SchedulerSim, SimOutcome};
 use crate::scheduler::costmodel::CostModel;
 use crate::scheduler::noise::NoiseModel;
@@ -86,7 +87,9 @@ pub fn run_cell(cell: &PaperCell) -> Result<CellResult> {
         .with_backfill(cfg.backfill)
         .with_holds(cfg.holds)
         .with_aging(cfg.aging_policy())
-        .with_walltime_error(WalltimeError::from_sigma(cfg.walltime_error));
+        .with_walltime_error(WalltimeError::from_sigma(cfg.walltime_error))
+        .with_pool(cfg.pool_config())
+        .with_preempt_overdue(cfg.preempt_overdue);
     let agg = aggregation::for_mode(cfg.mode);
     let job = agg.plan(&cell.label(), &cell.workload(), &cell.shape())?;
     let (outcome, job_id) = sim.run_single(job);
@@ -153,18 +156,27 @@ pub struct ContentionOpts {
     pub aging: Option<AgingPolicy>,
     /// Walltime-estimate error model the ledger plans from.
     pub walltime_error: WalltimeError,
+    /// Rapid-launch node pool (disabled = the classic batch-only path,
+    /// bit-for-bit).
+    pub pool: PoolConfig,
+    /// Preemptive backfill: kill overdue backfilled tasks when their
+    /// node's hold comes due.
+    pub preempt_overdue: bool,
     pub seed: u64,
 }
 
 impl ContentionOpts {
     /// The classic (pre-fairness-layer) options: single hold, no aging,
-    /// exact estimates — schedules are bit-for-bit the historical ones.
+    /// exact estimates, no pool — schedules are bit-for-bit the
+    /// historical ones.
     pub fn classic(backfill: bool, seed: u64) -> ContentionOpts {
         ContentionOpts {
             backfill,
             holds: 1,
             aging: None,
             walltime_error: WalltimeError::None,
+            pool: PoolConfig::disabled(),
+            preempt_overdue: false,
             seed,
         }
     }
@@ -192,8 +204,13 @@ pub struct ContentionResult {
     /// Every backfill placed on a held node vacated it by the hold's
     /// planned start (the no-delay invariant, checked from records).
     /// Trivially true under a walltime-error model: delays then are the
-    /// modelled estimate error, not a scheduler bug.
+    /// modelled estimate error, not a scheduler bug — and under
+    /// preemptive backfill, where overdue tasks are killed by design.
     pub holds_respected: bool,
+    /// Rapid-launch pool metrics (`None` when the pool was disabled).
+    pub pool: Option<PoolReport>,
+    /// Overdue backfilled tasks killed for a due hold.
+    pub overdue_preemptions: u64,
     /// Tasks that never finished (should be 0 — arrivals are finite).
     pub unfinished: usize,
 }
@@ -232,7 +249,9 @@ pub fn run_contention_with(
     .with_backfill(opts.backfill)
     .with_holds(opts.holds)
     .with_aging(opts.aging)
-    .with_walltime_error(opts.walltime_error);
+    .with_walltime_error(opts.walltime_error)
+    .with_pool(opts.pool)
+    .with_preempt_overdue(opts.preempt_overdue);
     let mut q = EventQueue::new();
     let subs = mix.generate(seed);
     if subs.is_empty() {
@@ -259,6 +278,7 @@ pub fn run_contention_with(
     // error — expected, not a bug — so the check is skipped.
     let jitter_slack = 5.0;
     let holds_respected = opts.walltime_error != WalltimeError::None
+        || opts.preempt_overdue
         || outcome.backfills.iter().all(|b| {
             let Some(h) = b.hold else {
                 return true;
@@ -276,6 +296,10 @@ pub fn run_contention_with(
         .iter()
         .filter(|r| r.cleanup_t.is_none())
         .count();
+    let pool = outcome
+        .pool
+        .as_ref()
+        .map(|po| pool_report(&outcome.records, po, total_cores, span));
     Ok(ContentionResult {
         mix_name: mix.name.clone(),
         nodes: mix.nodes,
@@ -287,6 +311,8 @@ pub fn run_contention_with(
         backfills: outcome.backfills.len(),
         max_active_holds: outcome.max_active_holds,
         holds_respected,
+        pool,
+        overdue_preemptions: outcome.overdue_preemptions,
         unfinished,
     })
 }
@@ -309,33 +335,63 @@ fn f6(x: f64) -> String {
     }
 }
 
+/// The v1 (PR 3) per-class export schema — emitted, byte-for-byte, for
+/// classic runs (no pool, no preemptive backfill), so downstream
+/// consumers of the historical format never see a silent change.
+const CONTENTION_SCHEMA_V1: [&str; 19] = [
+    "scenario",
+    "nodes",
+    "backfill",
+    "holds",
+    "aging",
+    "walltime_error",
+    "class",
+    "jobs",
+    "tasks",
+    "completed",
+    "median_latency_s",
+    "p95_latency_s",
+    "max_latency_s",
+    "starvation_age_s",
+    "core_seconds",
+    "utilization",
+    "span_s",
+    "backfills",
+    "max_active_holds",
+];
+
+/// The v2 column extension: pool and preemption metrics. Only emitted
+/// when some result in the export actually used those features — the
+/// schema is versioned by feature use, not silently widened.
+const CONTENTION_SCHEMA_V2_EXTRA: [&str; 9] = [
+    "pool_size",
+    "pool_launches",
+    "pool_peak_leased",
+    "pool_grows",
+    "pool_shrinks",
+    "pool_median_latency_s",
+    "pool_utilization",
+    "preempt_overdue",
+    "overdue_preemptions",
+];
+
 /// Per-class contention series as CSV (one row per scenario × class),
 /// mirroring `fig1 --out`: the `contention --out DIR` data dump.
+/// Classic runs export the v1 schema exactly; any pool or preemptive-
+/// backfill use switches the whole document to v2 (v1 columns + the
+/// pool/preemption extension).
 pub fn contention_csv(results: &[ContentionResult]) -> Csv {
-    let mut c = Csv::with_header(&[
-        "scenario",
-        "nodes",
-        "backfill",
-        "holds",
-        "aging",
-        "walltime_error",
-        "class",
-        "jobs",
-        "tasks",
-        "completed",
-        "median_latency_s",
-        "p95_latency_s",
-        "max_latency_s",
-        "starvation_age_s",
-        "core_seconds",
-        "utilization",
-        "span_s",
-        "backfills",
-        "max_active_holds",
-    ]);
+    let extended = results
+        .iter()
+        .any(|r| r.opts.pool.enabled() || r.opts.preempt_overdue);
+    let mut header: Vec<&str> = CONTENTION_SCHEMA_V1.to_vec();
+    if extended {
+        header.extend(CONTENTION_SCHEMA_V2_EXTRA);
+    }
+    let mut c = Csv::with_header(&header);
     for r in results {
         for rep in &r.reports {
-            c.row(&[
+            let mut row = vec![
                 r.mix_name.clone(),
                 r.nodes.to_string(),
                 r.backfill.to_string(),
@@ -355,7 +411,31 @@ pub fn contention_csv(results: &[ContentionResult]) -> Csv {
                 format!("{:.3}", r.span),
                 r.backfills.to_string(),
                 r.max_active_holds.to_string(),
-            ]);
+            ];
+            if extended {
+                row.push(r.opts.pool.size.to_string());
+                match &r.pool {
+                    Some(p) => {
+                        row.push(p.launches.to_string());
+                        row.push(p.peak_leased.to_string());
+                        row.push(p.grows.to_string());
+                        row.push(p.shrinks.to_string());
+                        row.push(f6(p.median_launch_latency));
+                        row.push(f6(p.utilization));
+                    }
+                    None => {
+                        row.push("0".into());
+                        row.push("0".into());
+                        row.push("0".into());
+                        row.push("0".into());
+                        row.push(String::new());
+                        row.push(String::new());
+                    }
+                }
+                row.push(r.opts.preempt_overdue.to_string());
+                row.push(r.overdue_preemptions.to_string());
+            }
+            c.row(&row);
         }
     }
     c
@@ -384,7 +464,7 @@ pub fn contention_json(results: &[ContentionResult]) -> Json {
                         .set("utilization", rep.utilization)
                 })
                 .collect();
-            Json::obj()
+            let mut run = Json::obj()
                 .set("scenario", r.mix_name.clone())
                 .set("nodes", r.nodes)
                 .set("backfill", r.backfill)
@@ -397,8 +477,24 @@ pub fn contention_json(results: &[ContentionResult]) -> Json {
                 .set("backfills", r.backfills)
                 .set("max_active_holds", r.max_active_holds)
                 .set("holds_respected", r.holds_respected)
-                .set("unfinished", r.unfinished)
-                .set("classes", Json::Arr(classes))
+                .set("preempt_overdue", r.opts.preempt_overdue)
+                .set("overdue_preemptions", r.overdue_preemptions)
+                .set("unfinished", r.unfinished);
+            if let Some(p) = &r.pool {
+                run = run.set(
+                    "pool",
+                    Json::obj()
+                        .set("size", r.opts.pool.size)
+                        .set("launches", p.launches)
+                        .set("peak_leased", p.peak_leased)
+                        .set("grows", p.grows)
+                        .set("shrinks", p.shrinks)
+                        .set("median_latency_s", p.median_launch_latency)
+                        .set("p95_latency_s", p.p95_launch_latency)
+                        .set("utilization", p.utilization),
+                );
+            }
+            run.set("classes", Json::Arr(classes))
         })
         .collect();
     Json::obj().set("contention", Json::Arr(runs))
@@ -615,11 +711,10 @@ mod tests {
     fn contention_with_fairness_knobs_runs_end_to_end() {
         let mix = ContentionMix::preset("tiny", 8).unwrap();
         let opts = ContentionOpts {
-            backfill: true,
             holds: 4,
             aging: Some(AgingPolicy::new(0.5, 100)),
             walltime_error: WalltimeError::LogNormal { sigma: 0.3 },
-            seed: 11,
+            ..ContentionOpts::classic(true, 11)
         };
         let res = run_contention_with(&mix, opts).unwrap();
         assert_eq!(res.unfinished, 0, "noisy estimates must not wedge the run");
@@ -655,11 +750,10 @@ mod tests {
         // schedule → same export).
         let mix = ContentionMix::preset("tiny", 8).unwrap();
         let opts = ContentionOpts {
-            backfill: true,
             holds: 2,
             aging: Some(AgingPolicy::new(0.5, 100)),
             walltime_error: WalltimeError::LogNormal { sigma: 0.3 },
-            seed: 42,
+            ..ContentionOpts::classic(true, 42)
         };
         let a = run_contention_with(&mix, opts).unwrap();
         let b = run_contention_with(&mix, opts).unwrap();
@@ -691,6 +785,73 @@ mod tests {
         ] {
             assert!(json_a.contains(key), "json missing {key}: {json_a}");
         }
+    }
+
+    #[test]
+    fn pooled_contention_runs_end_to_end() {
+        let mix = ContentionMix::preset("burst", 16).unwrap();
+        let opts = ContentionOpts {
+            pool: PoolConfig { size: 4, min: 2, max: 8, ..PoolConfig::sized(4) },
+            ..ContentionOpts::classic(true, 9)
+        };
+        let res = run_contention_with(&mix, opts).unwrap();
+        assert_eq!(res.unfinished, 0, "pooled burst drains");
+        let pool = res.pool.as_ref().expect("pool report present");
+        let inter = &res.reports[0];
+        assert_eq!(
+            pool.launches, inter.tasks as u64,
+            "every volley task went through the pool"
+        );
+        assert!(pool.peak_leased >= 4 && pool.peak_leased <= 8);
+        assert!(pool.median_launch_latency.is_finite());
+        // The classic path reports no pool.
+        let classic = run_contention_with(&mix, ContentionOpts::classic(true, 9)).unwrap();
+        assert!(classic.pool.is_none());
+        assert_eq!(classic.unfinished, 0);
+    }
+
+    #[test]
+    fn contention_export_v2_extends_v1_schema() {
+        // A pooled run flips the export to the v2 schema: the v1
+        // columns verbatim, then the pool/preemption extension. The v1
+        // golden test above pins the classic path; this pins v2.
+        let mix = ContentionMix::preset("burst", 16).unwrap();
+        let opts = ContentionOpts {
+            pool: PoolConfig { size: 4, min: 2, max: 8, ..PoolConfig::sized(4) },
+            preempt_overdue: true,
+            ..ContentionOpts::classic(true, 5)
+        };
+        let res = run_contention_with(&mix, opts).unwrap();
+        let csv = contention_csv(std::slice::from_ref(&res));
+        let lines: Vec<&str> = csv.as_str().lines().collect();
+        assert_eq!(
+            lines[0],
+            "scenario,nodes,backfill,holds,aging,walltime_error,class,jobs,tasks,\
+             completed,median_latency_s,p95_latency_s,max_latency_s,starvation_age_s,\
+             core_seconds,utilization,span_s,backfills,max_active_holds,\
+             pool_size,pool_launches,pool_peak_leased,pool_grows,pool_shrinks,\
+             pool_median_latency_s,pool_utilization,preempt_overdue,overdue_preemptions",
+            "v2 golden header"
+        );
+        let header_cols = lines[0].split(',').count();
+        for line in &lines[1..] {
+            assert_eq!(line.split(',').count(), header_cols, "row width matches header");
+        }
+        let json = contention_json(std::slice::from_ref(&res)).to_pretty();
+        for key in ["\"pool\":", "\"launches\":", "\"preempt_overdue\": true"] {
+            assert!(json.contains(key), "json missing {key}");
+        }
+        // A mixed export (one classic + one pooled result) is also v2,
+        // with zero-filled pool columns on the classic rows.
+        let classic = run_contention_with(
+            &ContentionMix::preset("tiny", 8).unwrap(),
+            ContentionOpts::classic(true, 5),
+        )
+        .unwrap();
+        let both = contention_csv(&[classic, res]);
+        let lines: Vec<&str> = both.as_str().lines().collect();
+        assert!(lines[0].ends_with("overdue_preemptions"));
+        assert!(lines[1].contains(",false,0"), "classic rows zero-fill the extension");
     }
 
     #[test]

@@ -8,8 +8,9 @@
 //! * **Substrates** — a deterministic discrete-event simulation engine
 //!   ([`sim`]), a cluster model ([`cluster`]), a pluggable placement
 //!   subsystem over an incremental free-capacity index ([`placement`]),
-//!   and a Slurm-like centralized scheduler ([`scheduler`]) with a
-//!   calibrated cost model.
+//!   an elastic rapid-launch node pool with node-based dispatch
+//!   ([`pool`]), and a Slurm-like centralized scheduler ([`scheduler`])
+//!   with a calibrated cost model.
 //! * **The paper's contribution** — task-aggregation modes ([`aggregation`]):
 //!   per-task (naive baseline), per-core multi-level scheduling
 //!   (LLMapReduce MIMO), and per-node *node-based* scheduling ("triples
@@ -38,6 +39,7 @@ pub mod exec;
 pub mod lltools;
 pub mod metrics;
 pub mod placement;
+pub mod pool;
 pub mod runtime;
 pub mod scheduler;
 pub mod sim;

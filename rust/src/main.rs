@@ -23,6 +23,7 @@ use llsched::error::Result;
 use llsched::metrics::overhead::speedup;
 use llsched::metrics::report;
 use llsched::placement::Strategy;
+use llsched::pool::PoolConfig;
 use llsched::scheduler::queue::AgingPolicy;
 use llsched::util::fmt::dur;
 use llsched::workload::contention::{ContentionMix, WalltimeError};
@@ -69,6 +70,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "run" => cmd_run(args),
         "placement" => cmd_placement(args),
         "contention" => cmd_contention(args),
+        "pool" => cmd_pool(args),
         "spot" => cmd_spot(args),
         "artifacts" => cmd_artifacts(args),
         other => {
@@ -106,7 +108,21 @@ commands:
                             priority by SLOPE points per second waited
                             (0 = off, capped at CAP), --walltime-error
                             plans backfill from log-normal noisy
-                            estimates; --out writes per-class CSV + JSON
+                            estimates; --pool-size K leases K nodes into
+                            the rapid-launch pool (0 = off) with
+                            --pool-min/--pool-max/--pool-hysteresis
+                            elastic bounds; --preempt-overdue kills
+                            backfilled tasks that overstay their
+                            walltime once their hold is due;
+                            --out writes per-class CSV + JSON
+  pool [--preset P] [--nodes N] [--seed S] [--pool-size K]
+       [--pool-min LO] [--pool-max HI] [--pool-hysteresis H]
+       [--preempt-overdue] [--compare] [--out DIR]
+                            run a rapid-launch pool scenario (default
+                            preset: burst — periodic 1000-task short-job
+                            volleys over a batch stream); --compare runs
+                            backfill-only vs pooled and reports the
+                            launch-latency speedup
   spot [--nodes N]          spot-job release-latency comparison
   artifacts                 verify AOT artifacts load and execute
 ";
@@ -299,6 +315,21 @@ fn cmd_placement(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse the shared pool flags into a config (disabled when
+/// `--pool-size` is absent or 0), mirroring the config-file validation.
+fn pool_config_from(args: &Args, default_size: usize) -> Result<PoolConfig> {
+    let size: usize = args.opt_parse("pool-size", default_size)?;
+    let cfg = PoolConfig {
+        size,
+        min: args.opt_parse("pool-min", 0)?,
+        max: args.opt_parse("pool-max", 0)?,
+        hysteresis: args.opt_parse("pool-hysteresis", 0.25)?,
+        ..PoolConfig::disabled()
+    };
+    cfg.validate().map_err(llsched::Error::Config)?;
+    Ok(cfg)
+}
+
 fn cmd_contention(args: &Args) -> Result<()> {
     args.expect_known(&[
         "preset",
@@ -311,6 +342,11 @@ fn cmd_contention(args: &Args) -> Result<()> {
         "aging",
         "aging-cap",
         "walltime-error",
+        "pool-size",
+        "pool-min",
+        "pool-max",
+        "pool-hysteresis",
+        "preempt-overdue",
         "out",
     ])?;
     let nodes: u32 = args.opt_parse("nodes", 32)?;
@@ -319,6 +355,8 @@ fn cmd_contention(args: &Args) -> Result<()> {
     let aging_slope: f64 = args.opt_parse("aging", 0.0)?;
     let aging_cap: i32 = args.opt_parse("aging-cap", 1000)?;
     let sigma: f64 = args.opt_parse("walltime-error", 0.0)?;
+    let pool = pool_config_from(args, 0)?;
+    let preempt_overdue = args.flag("preempt-overdue");
     // Mirror the config-file validation: reject values that would
     // otherwise be silently clamped into a different policy.
     if holds < 1 {
@@ -342,6 +380,8 @@ fn cmd_contention(args: &Args) -> Result<()> {
         holds,
         aging,
         walltime_error: WalltimeError::from_sigma(sigma),
+        pool,
+        preempt_overdue,
         seed,
     };
     let mut results: Vec<ContentionResult> = Vec::new();
@@ -399,6 +439,85 @@ fn cmd_contention(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_pool(args: &Args) -> Result<()> {
+    args.expect_known(&[
+        "preset",
+        "nodes",
+        "seed",
+        "pool-size",
+        "pool-min",
+        "pool-max",
+        "pool-hysteresis",
+        "preempt-overdue",
+        "compare",
+        "out",
+    ])?;
+    let nodes: u32 = args.opt_parse("nodes", 128)?;
+    let seed: u64 = args.opt_parse("seed", 7)?;
+    let preset = args.opt("preset").unwrap_or("burst");
+    let mix = ContentionMix::preset(preset, nodes)?;
+    // Elastic defaults scaled to the cluster: start at a quarter, never
+    // below an eighth, grow up to three quarters of the machine. An
+    // explicitly passed --pool-max caps the *default* size too; only an
+    // explicit size below an explicit max is a user error.
+    let n = nodes as usize;
+    let mut pool = PoolConfig {
+        size: args.opt_parse("pool-size", (n / 4).max(1))?,
+        min: args.opt_parse("pool-min", 0)?,
+        max: args.opt_parse("pool-max", 0)?,
+        hysteresis: args.opt_parse("pool-hysteresis", 0.25)?,
+        ..PoolConfig::disabled()
+    };
+    if pool.min == 0 {
+        pool.min = n / 8;
+    }
+    if pool.max == 0 {
+        pool.max = (3 * n / 4).max(pool.size);
+    }
+    if args.opt("pool-size").is_none() {
+        pool.size = pool.size.min(pool.max);
+        pool.min = pool.min.min(pool.size);
+    }
+    pool.validate().map_err(llsched::Error::Config)?;
+    let preempt_overdue = args.flag("preempt-overdue");
+    let opts = |pool: PoolConfig| ContentionOpts {
+        pool,
+        preempt_overdue,
+        ..ContentionOpts::classic(true, seed)
+    };
+    let mut results: Vec<ContentionResult> = Vec::new();
+    if args.flag("compare") {
+        let baseline = run_contention_with(&mix, opts(PoolConfig::disabled()))?;
+        print_contention(&baseline);
+        let pooled = run_contention_with(&mix, opts(pool))?;
+        print_contention(&pooled);
+        let base_lat = baseline.reports[0].median_launch_latency;
+        let pool_lat = pooled.reports[0].median_launch_latency;
+        if base_lat.is_finite() && pool_lat.is_finite() && pool_lat > 0.0 {
+            println!(
+                "pooled vs backfill-only: short-job median launch latency {} -> {} ({:.1}x)",
+                dur(base_lat),
+                dur(pool_lat),
+                base_lat / pool_lat
+            );
+        }
+        results.push(baseline);
+        results.push(pooled);
+    } else {
+        let res = run_contention_with(&mix, opts(pool))?;
+        print_contention(&res);
+        results.push(res);
+    }
+    if let Some(out) = args.opt("out") {
+        let dir = PathBuf::from(out);
+        std::fs::create_dir_all(&dir)?;
+        contention_csv(&results).save(&dir.join("pool.csv"))?;
+        std::fs::write(dir.join("pool.json"), contention_json(&results).to_pretty())?;
+        println!("(per-class + pool CSV/JSON in {dir:?})");
+    }
+    Ok(())
+}
+
 fn print_contention(res: &ContentionResult) {
     println!(
         "contention {}: {} nodes, backfill {}, holds {}, aging {}, walltime error {}",
@@ -436,7 +555,7 @@ fn print_contention(res: &ContentionResult) {
     }
     println!("{}", table.render());
     println!(
-        "  span {}  cluster util {:.1}%  backfills {}  peak holds {}  holds respected {}  unfinished {}\n",
+        "  span {}  cluster util {:.1}%  backfills {}  peak holds {}  holds respected {}  unfinished {}",
         dur(res.span),
         res.utilization * 100.0,
         res.backfills,
@@ -444,6 +563,21 @@ fn print_contention(res: &ContentionResult) {
         res.holds_respected,
         res.unfinished,
     );
+    if let Some(p) = &res.pool {
+        println!(
+            "  pool: {} launches  peak {} leased  +{} / -{} resize nodes  median lat {}  util {:.1}%",
+            p.launches,
+            p.peak_leased,
+            p.grows,
+            p.shrinks,
+            dur(p.median_launch_latency),
+            p.utilization * 100.0,
+        );
+    }
+    if res.opts.preempt_overdue {
+        println!("  preemptive backfill: {} overdue tasks killed", res.overdue_preemptions);
+    }
+    println!();
 }
 
 fn cmd_spot(args: &Args) -> Result<()> {

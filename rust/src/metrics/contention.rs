@@ -8,6 +8,7 @@
 //! a share of cluster capacity over the run's span.
 
 use crate::scheduler::accounting::TaskRecord;
+use crate::scheduler::core::PoolOutcome;
 use crate::sim::Time;
 use crate::util::stats;
 use crate::workload::contention::{JobClass, JOB_CLASSES};
@@ -132,6 +133,66 @@ pub fn per_class(
     (reports, span)
 }
 
+/// Pool-side summary of one contention run: how the rapid-launch
+/// subsystem performed next to the per-class batch metrics.
+#[derive(Debug, Clone)]
+pub struct PoolReport {
+    /// Tasks launched through the pool's node-based dispatch path.
+    pub launches: u64,
+    /// Nodes taken from batch (leases + drains) across all resizes.
+    pub grows: u64,
+    /// Nodes returned to batch across all resizes.
+    pub shrinks: u64,
+    /// Peak simultaneous lease count.
+    pub peak_leased: usize,
+    /// Median launch latency of pooled tasks (start − submit), seconds.
+    pub median_launch_latency: Time,
+    /// 95th percentile pooled launch latency, seconds.
+    pub p95_launch_latency: Time,
+    /// Core-seconds delivered by pooled tasks as a share of cluster
+    /// capacity over the run span.
+    pub utilization: f64,
+}
+
+/// Compute the pool report for one run: joins the pool's launch log
+/// against the task records (records are dense by task id). `span` is
+/// the same first-submit → last-cleanup window [`per_class`] returns,
+/// so pool utilization is directly comparable to the class shares.
+pub fn pool_report(
+    records: &[TaskRecord],
+    pool: &PoolOutcome,
+    total_cores: u64,
+    span: Time,
+) -> PoolReport {
+    let mut latencies = Vec::new();
+    let mut core_seconds = 0.0;
+    for &tid in &pool.launched_tasks {
+        let Some(r) = records.get(tid as usize) else {
+            continue;
+        };
+        if let Some(start) = r.start_t {
+            latencies.push(start - r.submit_t);
+            if let Some(end) = r.end_t {
+                core_seconds += r.cores as f64 * (end - start).max(0.0);
+            }
+        }
+    }
+    let capacity = total_cores as f64 * span;
+    PoolReport {
+        launches: pool.launches,
+        grows: pool.grows,
+        shrinks: pool.shrinks,
+        peak_leased: pool.peak_leased,
+        median_launch_latency: stats::median(&latencies),
+        p95_launch_latency: stats::percentile(&latencies, 95.0),
+        utilization: if capacity > 0.0 {
+            core_seconds / capacity
+        } else {
+            0.0
+        },
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -198,6 +259,36 @@ mod tests {
         assert!(reports[0].max_launch_latency.is_nan());
         assert_eq!(reports[0].starvation_age, 0.0);
         assert_eq!(reports[0].utilization, 0.0);
+    }
+
+    #[test]
+    fn pool_report_joins_launches_against_records() {
+        // Three records; the pool launched tasks 0 and 2 (task ids are
+        // dense indices into the records).
+        let records = vec![
+            rec(0, 0.0, 1.0, 3.0, 64),  // latency 1, 128 core-s
+            rec(0, 0.0, 50.0, 60.0, 64), // batch-path task, ignored
+            rec(1, 2.0, 5.0, 7.0, 64),  // latency 3, 128 core-s
+        ];
+        let pool = PoolOutcome {
+            launches: 2,
+            launched_tasks: vec![0, 2],
+            grows: 3,
+            shrinks: 1,
+            peak_leased: 2,
+            final_leased: 1,
+            invariant_violated: false,
+        };
+        let r = pool_report(&records, &pool, 128, 10.0);
+        assert_eq!(r.launches, 2);
+        assert_eq!(r.grows, 3);
+        assert_eq!(r.shrinks, 1);
+        assert_eq!(r.peak_leased, 2);
+        assert!((r.median_launch_latency - 2.0).abs() < 1e-9, "median of 1 and 3");
+        assert!((r.utilization - 256.0 / 1280.0).abs() < 1e-9);
+        // Zero-span runs stay safe.
+        let empty = pool_report(&records, &pool, 128, 0.0);
+        assert_eq!(empty.utilization, 0.0);
     }
 
     #[test]

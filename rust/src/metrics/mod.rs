@@ -7,6 +7,6 @@ pub mod overhead;
 pub mod report;
 pub mod timeline;
 
-pub use contention::{per_class, ClassReport};
+pub use contention::{per_class, pool_report, ClassReport, PoolReport};
 pub use overhead::{norm_overhead, speedup, OverheadPoint};
 pub use timeline::UtilizationSeries;

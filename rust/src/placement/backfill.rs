@@ -154,8 +154,27 @@ impl ReservationLedger {
         now: Time,
         for_task: TaskId,
     ) -> Option<(NodeId, Time)> {
+        self.plan_whole_node_where(index, cluster, part, now, for_task, &|_| true)
+    }
+
+    /// [`Self::plan_whole_node`] restricted to nodes passing `allow` —
+    /// a hold must never be planted on a node the batch scheduler has
+    /// ceded (e.g. one leased to the rapid-launch pool, which looks
+    /// idle to the index but will never serve the reservation).
+    pub fn plan_whole_node_where(
+        &self,
+        index: &FreeIndex,
+        cluster: &Cluster,
+        part: u32,
+        now: Time,
+        for_task: TaskId,
+        allow: &dyn Fn(NodeId) -> bool,
+    ) -> Option<(NodeId, Time)> {
         let mut best: Option<(NodeId, Time)> = None;
         for id in index.partition_nodes_iter(part) {
+            if !allow(id) {
+                continue;
+            }
             let up = cluster
                 .node(id)
                 .map(|n| n.state() == NodeState::Up)
@@ -292,6 +311,28 @@ mod tests {
         idx.on_state_change(0, NodeState::Down);
         let l = ReservationLedger::new(2);
         assert_eq!(l.plan_whole_node(&idx, &c, 0, 0.0, 9), Some((1, 0.0)));
+    }
+
+    #[test]
+    fn plan_where_respects_allow() {
+        let c = Cluster::tx_green(3);
+        let idx = FreeIndex::build(&c);
+        let mut l = ReservationLedger::new(3);
+        l.note_start(0, 100.0);
+        l.note_start(1, 40.0);
+        l.note_start(2, 70.0);
+        // The earliest-freeing node (1) is fenced off (e.g. pool-leased):
+        // planning falls through to the next-earliest admissible node.
+        assert_eq!(
+            l.plan_whole_node_where(&idx, &c, 0, 5.0, 9, &|n| n != 1),
+            Some((2, 70.0))
+        );
+        assert_eq!(l.plan_whole_node_where(&idx, &c, 0, 5.0, 9, &|_| false), None);
+        // The unfiltered wrapper matches an always-true filter.
+        assert_eq!(
+            l.plan_whole_node(&idx, &c, 0, 5.0, 9),
+            l.plan_whole_node_where(&idx, &c, 0, 5.0, 9, &|_| true)
+        );
     }
 
     #[test]

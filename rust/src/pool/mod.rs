@@ -1,0 +1,199 @@
+//! The elastic rapid-launch node pool.
+//!
+//! The paper's headline mechanism is a dedicated pool of whole nodes
+//! managed with *node-based* scheduling: large fleets of short jobs
+//! launch and release in O(nodes) work instead of going through full
+//! per-core placement, which is what delivers the "up to 100× faster
+//! scheduler performance" claim. "Best of Both Worlds" (arXiv:2008.02223)
+//! shows the same cluster must serve batch and rapid-launch traffic
+//! simultaneously through a *dynamically sized* partition, and "Scalable
+//! System Scheduling for HPC and Big Data" (arXiv:1705.03102) motivates
+//! bypassing the general scheduler on the hot path.
+//!
+//! This module is that subsystem:
+//!
+//! * [`NodePool`] — membership bookkeeping over the cluster: every node
+//!   is exactly one of **batch** (owned by the general scheduler),
+//!   **leased** (in the pool) or **draining** (earmarked for the pool,
+//!   still finishing batch work). Idle leased nodes sit on a LIFO free
+//!   list, so acquiring and returning a node for a short job is O(1) —
+//!   no `PlacementEngine`, no per-core bookkeeping ([`node_pool`]);
+//! * [`NodeDispatcher`] — the node-based dispatch hot path: pop a node
+//!   off the free list to launch, push it back on release ([`dispatcher`]);
+//! * [`PoolManager`] — the hysteresis controller that elastically
+//!   resizes the pool: grow by draining batch nodes as they go idle
+//!   when pool-queue pressure exceeds free pool capacity, shrink by
+//!   returning drained pool nodes when the queue is empty, with a
+//!   dead band and a cooldown so the partition does not thrash
+//!   ([`manager`]).
+//!
+//! The scheduler integration lives in [`crate::scheduler`]: jobs
+//! classified short-whole-node route to the pool queue at registration,
+//! `Op::Pool*` server operations service it ahead of the batch
+//! machinery, and leased/draining nodes are fenced out of every batch
+//! placement and backfill-hold query through the existing `_where`
+//! filters of the [`crate::placement`] engine.
+
+pub mod dispatcher;
+pub mod manager;
+pub mod node_pool;
+
+pub use dispatcher::NodeDispatcher;
+pub use manager::{PoolManager, Resize};
+pub use node_pool::{Membership, NodePool};
+
+use crate::sim::Time;
+
+/// Whole-node tasks with an estimated duration at or below this route to
+/// the pool by default (seconds). The paper's "short running jobs" are
+/// seconds-to-a-minute; long whole-node work stays on the batch path.
+pub const DEFAULT_SHORT_THRESHOLD: Time = 30.0;
+
+/// Rapid-launch pool configuration, as threaded through config files
+/// (`pool_size = 8`), presets and CLI flags.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PoolConfig {
+    /// Initial lease count; `0` disables the pool entirely (the batch
+    /// scheduler then behaves bit-for-bit as if this subsystem did not
+    /// exist).
+    pub size: usize,
+    /// The manager never shrinks below this many pool-owned nodes.
+    pub min: usize,
+    /// The manager never grows beyond this many pool-owned nodes;
+    /// `0` means "same as `size`" (a fixed, non-elastic pool).
+    pub max: usize,
+    /// Hysteresis dead-band fraction in `[0, 1)`: grow only when the
+    /// pool-queue backlog exceeds free-plus-incoming capacity by more
+    /// than `ceil(hysteresis × owned)` nodes, shrink only when at least
+    /// that many leased nodes idle with an empty queue.
+    pub hysteresis: f64,
+    /// Whole-node tasks with an estimated duration at or below this are
+    /// classified short and routed to the pool.
+    pub short_threshold: Time,
+}
+
+impl PoolConfig {
+    /// The disabled pool (the default everywhere).
+    pub fn disabled() -> PoolConfig {
+        PoolConfig {
+            size: 0,
+            min: 0,
+            max: 0,
+            hysteresis: 0.25,
+            short_threshold: DEFAULT_SHORT_THRESHOLD,
+        }
+    }
+
+    /// An elastic pool starting at `size` leases with default bounds
+    /// (`min = size / 2`, `max = 2 × size`).
+    pub fn sized(size: usize) -> PoolConfig {
+        PoolConfig {
+            size,
+            min: size / 2,
+            max: size * 2,
+            ..PoolConfig::disabled()
+        }
+    }
+
+    /// Whether the pool participates at all.
+    pub fn enabled(&self) -> bool {
+        self.size > 0
+    }
+
+    /// The resolved upper bound (`max`, or `size` when `max` is 0).
+    pub fn effective_max(&self) -> usize {
+        self.max.max(self.size)
+    }
+
+    /// The resolved lower bound (never above the upper bound).
+    pub fn effective_min(&self) -> usize {
+        self.min.min(self.effective_max())
+    }
+
+    /// Range checks shared by the config file and CLI paths.
+    pub fn validate(&self) -> std::result::Result<(), String> {
+        if !(0.0..1.0).contains(&self.hysteresis) {
+            return Err(format!(
+                "pool hysteresis must be in [0, 1), got {}",
+                self.hysteresis
+            ));
+        }
+        if self.short_threshold <= 0.0 {
+            return Err("pool short-job threshold must be > 0".into());
+        }
+        if self.enabled() && self.max != 0 && self.max < self.size {
+            return Err(format!(
+                "pool_max {} below pool_size {} (use pool_max = 0 for a fixed pool)",
+                self.max, self.size
+            ));
+        }
+        if self.enabled() && self.min > self.effective_max() {
+            return Err(format!(
+                "pool_min {} exceeds pool_max {}",
+                self.min,
+                self.effective_max()
+            ));
+        }
+        Ok(())
+    }
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig::disabled()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_config_is_inert_and_valid() {
+        let c = PoolConfig::disabled();
+        assert!(!c.enabled());
+        assert_eq!(c.effective_max(), 0);
+        assert_eq!(c.effective_min(), 0);
+        assert!(c.validate().is_ok());
+        assert_eq!(PoolConfig::default(), c);
+    }
+
+    #[test]
+    fn sized_config_bounds() {
+        let c = PoolConfig::sized(8);
+        assert!(c.enabled());
+        assert_eq!(c.min, 4);
+        assert_eq!(c.effective_max(), 16);
+        assert!(c.validate().is_ok());
+        // max = 0 resolves to size (fixed pool).
+        let fixed = PoolConfig { size: 4, min: 0, max: 0, ..PoolConfig::disabled() };
+        assert_eq!(fixed.effective_max(), 4);
+        assert_eq!(fixed.effective_min(), 0);
+    }
+
+    #[test]
+    fn validation_rejects_bad_knobs() {
+        let mut c = PoolConfig::sized(4);
+        c.hysteresis = 1.0;
+        assert!(c.validate().is_err(), "hysteresis must stay below 1");
+        let mut c = PoolConfig::sized(4);
+        c.hysteresis = -0.1;
+        assert!(c.validate().is_err());
+        let mut c = PoolConfig::sized(4);
+        c.short_threshold = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = PoolConfig::sized(4);
+        c.min = 10;
+        c.max = 8;
+        assert!(c.validate().is_err(), "min above max rejected");
+        let mut c = PoolConfig::sized(8);
+        c.max = 4;
+        assert!(
+            c.validate().is_err(),
+            "an explicit max below size is an error, not a silent override"
+        );
+        // min above max is tolerated while the pool is disabled.
+        let c = PoolConfig { size: 0, min: 10, max: 0, ..PoolConfig::disabled() };
+        assert!(c.validate().is_ok());
+    }
+}

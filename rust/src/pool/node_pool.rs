@@ -1,0 +1,373 @@
+//! Pool membership bookkeeping: batch / leased / draining, plus the
+//! O(1) free list the node-based dispatch path pops.
+//!
+//! The conservation invariant the property suite pins down
+//! (`rust/tests/pool_properties.rs`): at every step, every node is in
+//! exactly one of the three membership states, the counters agree with
+//! the membership table, and the free list holds exactly the idle
+//! leased nodes. All mutators are total — an illegal transition returns
+//! `false` and changes nothing, so a confused caller can never corrupt
+//! the accounting (the scheduler surfaces refusals as an invariant
+//! flag in [`crate::scheduler::core::SimOutcome`]).
+
+use crate::cluster::NodeId;
+
+/// Which side of the partition a node is on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Membership {
+    /// Owned by the general (batch) scheduler.
+    Batch,
+    /// Earmarked for the pool, still finishing batch work; fenced from
+    /// new batch placements, promoted to [`Membership::Leased`] when it
+    /// goes wholly idle.
+    Draining,
+    /// In the pool, serving (or ready to serve) rapid-launch jobs.
+    Leased,
+}
+
+/// The node pool: membership table + idle free list.
+#[derive(Debug, Clone)]
+pub struct NodePool {
+    membership: Vec<Membership>,
+    /// Idle leased nodes, LIFO (pop to launch, push on release).
+    free: Vec<NodeId>,
+    /// `in_free[n]` mirrors free-list membership for O(1) checks.
+    in_free: Vec<bool>,
+    leased: usize,
+    draining: usize,
+    peak_leased: usize,
+}
+
+impl NodePool {
+    /// A pool over `n_nodes` nodes, all initially batch-owned.
+    pub fn new(n_nodes: usize) -> NodePool {
+        NodePool {
+            membership: vec![Membership::Batch; n_nodes],
+            free: Vec::new(),
+            in_free: vec![false; n_nodes],
+            leased: 0,
+            draining: 0,
+            peak_leased: 0,
+        }
+    }
+
+    /// Number of nodes the pool tracks (the whole cluster).
+    pub fn n_nodes(&self) -> usize {
+        self.membership.len()
+    }
+
+    /// Membership of one node.
+    pub fn membership(&self, node: NodeId) -> Membership {
+        self.membership[node as usize]
+    }
+
+    /// Whether `node` belongs to the pool side of the partition (leased
+    /// or draining) — the fence predicate every batch placement query
+    /// applies.
+    pub fn in_pool(&self, node: NodeId) -> bool {
+        self.membership[node as usize] != Membership::Batch
+    }
+
+    /// Whether `node` is currently leased.
+    pub fn is_leased(&self, node: NodeId) -> bool {
+        self.membership[node as usize] == Membership::Leased
+    }
+
+    /// Whether `node` is draining toward the pool.
+    pub fn is_draining(&self, node: NodeId) -> bool {
+        self.membership[node as usize] == Membership::Draining
+    }
+
+    /// Whether any node is pool-owned at all (cheap "is the fence
+    /// active" check for the dispatch hot path).
+    pub fn any_pooled(&self) -> bool {
+        self.leased + self.draining > 0
+    }
+
+    /// Leased nodes.
+    pub fn n_leased(&self) -> usize {
+        self.leased
+    }
+
+    /// Draining nodes.
+    pub fn n_draining(&self) -> usize {
+        self.draining
+    }
+
+    /// Idle leased nodes (free-list length).
+    pub fn n_free(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Leased nodes currently running pool work.
+    pub fn n_busy(&self) -> usize {
+        self.leased - self.free.len()
+    }
+
+    /// Batch-owned nodes.
+    pub fn n_batch(&self) -> usize {
+        self.n_nodes() - self.leased - self.draining
+    }
+
+    /// Peak lease count over the pool's lifetime.
+    pub fn peak_leased(&self) -> usize {
+        self.peak_leased
+    }
+
+    /// Lease an *idle* batch node into the pool (batch → leased; joins
+    /// the free list). The caller is responsible for only leasing nodes
+    /// with no batch work on them.
+    pub fn lease(&mut self, node: NodeId) -> bool {
+        if self.membership[node as usize] != Membership::Batch {
+            return false;
+        }
+        self.membership[node as usize] = Membership::Leased;
+        self.leased += 1;
+        self.free.push(node);
+        self.in_free[node as usize] = true;
+        if self.leased > self.peak_leased {
+            self.peak_leased = self.leased;
+        }
+        true
+    }
+
+    /// Earmark a *busy* batch node for the pool (batch → draining): no
+    /// new batch work lands on it, and [`Self::promote`] moves it into
+    /// the pool once its running batch tasks have released.
+    pub fn begin_drain(&mut self, node: NodeId) -> bool {
+        if self.membership[node as usize] != Membership::Batch {
+            return false;
+        }
+        self.membership[node as usize] = Membership::Draining;
+        self.draining += 1;
+        true
+    }
+
+    /// A draining node went wholly idle: it joins the pool
+    /// (draining → leased, onto the free list).
+    pub fn promote(&mut self, node: NodeId) -> bool {
+        if self.membership[node as usize] != Membership::Draining {
+            return false;
+        }
+        self.membership[node as usize] = Membership::Leased;
+        self.draining -= 1;
+        self.leased += 1;
+        self.free.push(node);
+        self.in_free[node as usize] = true;
+        if self.leased > self.peak_leased {
+            self.peak_leased = self.leased;
+        }
+        true
+    }
+
+    /// Abort a pending drain (draining → batch) — a shrink decision
+    /// arrived before the node ever went idle.
+    pub fn cancel_drain(&mut self, node: NodeId) -> bool {
+        if self.membership[node as usize] != Membership::Draining {
+            return false;
+        }
+        self.membership[node as usize] = Membership::Batch;
+        self.draining -= 1;
+        true
+    }
+
+    /// Pop an idle leased node to run a pool job on (O(1); the node
+    /// stays leased, just off the free list).
+    pub fn acquire(&mut self) -> Option<NodeId> {
+        let node = self.free.pop()?;
+        self.in_free[node as usize] = false;
+        Some(node)
+    }
+
+    /// A pool job on `node` released it: back onto the free list (O(1)).
+    pub fn release_task(&mut self, node: NodeId) -> bool {
+        if self.membership[node as usize] != Membership::Leased || self.in_free[node as usize] {
+            return false;
+        }
+        self.free.push(node);
+        self.in_free[node as usize] = true;
+        true
+    }
+
+    /// Return one drained (idle) pool node to the batch scheduler
+    /// (leased → batch) — the shrink path.
+    pub fn return_free(&mut self) -> Option<NodeId> {
+        let node = self.free.pop()?;
+        self.in_free[node as usize] = false;
+        self.membership[node as usize] = Membership::Batch;
+        self.leased -= 1;
+        Some(node)
+    }
+
+    /// Any draining node, for shrink-time drain cancellation.
+    pub fn any_draining(&self) -> Option<NodeId> {
+        if self.draining == 0 {
+            return None;
+        }
+        self.membership
+            .iter()
+            .position(|&m| m == Membership::Draining)
+            .map(|i| i as NodeId)
+    }
+
+    /// Verify the conservation invariant: membership counts match the
+    /// counters (batch + leased + draining == cluster), and the free
+    /// list holds distinct leased nodes mirrored by `in_free`.
+    pub fn check_conservation(&self) -> std::result::Result<(), String> {
+        let mut leased = 0usize;
+        let mut draining = 0usize;
+        for &m in &self.membership {
+            match m {
+                Membership::Leased => leased += 1,
+                Membership::Draining => draining += 1,
+                Membership::Batch => {}
+            }
+        }
+        if leased != self.leased || draining != self.draining {
+            return Err(format!(
+                "counters ({}, {}) disagree with membership ({leased}, {draining})",
+                self.leased, self.draining
+            ));
+        }
+        if self.free.len() > self.leased {
+            return Err(format!(
+                "{} free entries exceed {} leases",
+                self.free.len(),
+                self.leased
+            ));
+        }
+        let mut seen = vec![false; self.membership.len()];
+        for &n in &self.free {
+            let i = n as usize;
+            if self.membership[i] != Membership::Leased {
+                return Err(format!("free-list node {n} is not leased"));
+            }
+            if seen[i] {
+                return Err(format!("free-list node {n} appears twice"));
+            }
+            seen[i] = true;
+            if !self.in_free[i] {
+                return Err(format!("free-list node {n} not mirrored in in_free"));
+            }
+        }
+        for (i, &f) in self.in_free.iter().enumerate() {
+            if f && !seen[i] {
+                return Err(format!("in_free[{i}] set but node absent from free list"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn checked(p: &NodePool) {
+        p.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn fresh_pool_is_all_batch() {
+        let p = NodePool::new(4);
+        assert_eq!(p.n_batch(), 4);
+        assert_eq!(p.n_leased(), 0);
+        assert_eq!(p.n_draining(), 0);
+        assert!(!p.any_pooled());
+        assert!(!p.in_pool(0));
+        checked(&p);
+    }
+
+    #[test]
+    fn lease_acquire_release_roundtrip() {
+        let mut p = NodePool::new(4);
+        assert!(p.lease(1));
+        assert!(p.lease(2));
+        assert!(!p.lease(1), "double lease refused");
+        assert_eq!(p.n_leased(), 2);
+        assert_eq!(p.n_free(), 2);
+        assert!(p.in_pool(1) && p.is_leased(1));
+        checked(&p);
+        // LIFO: the most recently freed node launches first.
+        assert_eq!(p.acquire(), Some(2));
+        assert_eq!(p.n_busy(), 1);
+        assert!(!p.release_task(3), "release of a batch node refused");
+        assert!(!p.release_task(1), "release of an already-free node refused");
+        assert!(p.release_task(2));
+        assert_eq!(p.n_free(), 2);
+        assert_eq!(p.peak_leased(), 2);
+        checked(&p);
+    }
+
+    #[test]
+    fn acquire_exhausts_then_none() {
+        let mut p = NodePool::new(2);
+        p.lease(0);
+        assert!(p.acquire().is_some());
+        assert!(p.acquire().is_none(), "no idle leased node left");
+        checked(&p);
+    }
+
+    #[test]
+    fn drain_promote_lifecycle() {
+        let mut p = NodePool::new(3);
+        assert!(p.begin_drain(0));
+        assert!(!p.begin_drain(0), "double drain refused");
+        assert!(p.in_pool(0) && p.is_draining(0) && !p.is_leased(0));
+        assert_eq!(p.n_draining(), 1);
+        assert_eq!(p.n_free(), 0, "draining nodes are not dispatchable");
+        assert_eq!(p.any_draining(), Some(0));
+        checked(&p);
+        assert!(p.promote(0));
+        assert!(!p.promote(0), "already leased");
+        assert_eq!(p.n_leased(), 1);
+        assert_eq!(p.n_free(), 1);
+        assert_eq!(p.any_draining(), None);
+        checked(&p);
+    }
+
+    #[test]
+    fn cancel_drain_returns_to_batch() {
+        let mut p = NodePool::new(2);
+        p.begin_drain(1);
+        assert!(p.cancel_drain(1));
+        assert!(!p.cancel_drain(1));
+        assert!(!p.in_pool(1));
+        assert_eq!(p.n_batch(), 2);
+        checked(&p);
+    }
+
+    #[test]
+    fn shrink_returns_free_nodes_only() {
+        let mut p = NodePool::new(3);
+        p.lease(0);
+        p.lease(1);
+        let busy = p.acquire().unwrap();
+        assert_eq!(busy, 1);
+        // Only node 0 idles; shrink returns it, not the busy one.
+        assert_eq!(p.return_free(), Some(0));
+        assert!(!p.in_pool(0));
+        assert_eq!(p.n_leased(), 1);
+        assert_eq!(p.return_free(), None, "busy lease cannot be returned");
+        checked(&p);
+        // The busy node releases and can then be returned.
+        assert!(p.release_task(1));
+        assert_eq!(p.return_free(), Some(1));
+        assert!(!p.any_pooled());
+        checked(&p);
+    }
+
+    #[test]
+    fn peak_tracks_high_water_mark() {
+        let mut p = NodePool::new(4);
+        for n in 0..4 {
+            p.lease(n);
+        }
+        for _ in 0..3 {
+            p.return_free();
+        }
+        assert_eq!(p.n_leased(), 1);
+        assert_eq!(p.peak_leased(), 4);
+        checked(&p);
+    }
+}

@@ -23,6 +23,7 @@
 
 use crate::cluster::{Cluster, NodeId, NodeState};
 use crate::placement::{Hold, PlacementEngine, ReservationLedger, Strategy};
+use crate::pool::{NodeDispatcher, NodePool, PoolConfig, PoolManager, Resize};
 use crate::scheduler::accounting::{JobStats, TaskRecord};
 use crate::scheduler::costmodel::CostModel;
 use crate::scheduler::job::{JobId, JobSpec, Placement, SchedTaskSpec, TaskId};
@@ -68,6 +69,14 @@ pub enum Op {
     Noise(f64),
     /// Preemption signal to one running task.
     PreemptSignal(TaskId),
+    /// Rapid-launch pool dispatch of one short whole-node task (O(1)
+    /// free-list pop; no placement engine, no per-core bookkeeping).
+    PoolDispatch(TaskId),
+    /// Rapid-launch pool release of one finished task (O(1) free-list
+    /// push; constant cost, unlike the array-size-dependent cleanup).
+    PoolRelease(TaskId),
+    /// One hysteresis-driven pool resize pass (lease / drain / return).
+    PoolResize,
 }
 
 /// Per-task live state (record + dispatch bookkeeping).
@@ -84,6 +93,15 @@ pub(crate) struct TaskSlot {
     /// When the task joined the pending queue — preserved across
     /// head-of-line reinsertions so aging credit is never reset.
     pub(crate) enqueued_at: Time,
+    /// The leased node a pool-routed task is running on (`None` for
+    /// every batch-path task; pool tasks never carry a `placement`).
+    pub(crate) pool_node: Option<NodeId>,
+    /// Whether this task was admitted by the backfill scan — the only
+    /// tasks the preempt-overdue policy may kill.
+    pub(crate) backfilled: bool,
+    /// A preempt signal is already queued for this task (guards the
+    /// overdue scan against double-signalling).
+    pub(crate) kill_signalled: bool,
 }
 
 /// Per-job metadata.
@@ -107,12 +125,20 @@ pub struct BusyBreakdown {
     pub cleanup: Time,
     pub noise: Time,
     pub preempt: Time,
+    /// Rapid-launch pool work (dispatch + release + resize).
+    pub pool: Time,
 }
 
 impl BusyBreakdown {
     /// Total server-busy time.
     pub fn total(&self) -> Time {
-        self.register + self.cycle + self.dispatch + self.cleanup + self.noise + self.preempt
+        self.register
+            + self.cycle
+            + self.dispatch
+            + self.cleanup
+            + self.noise
+            + self.preempt
+            + self.pool
     }
 }
 
@@ -186,6 +212,66 @@ pub struct SimOutcome {
     /// overlapping nodes, duplicate tasks). Must stay `false`; checked
     /// by the fairness property suite after every planning pass.
     pub hold_invariant_violated: bool,
+    /// Rapid-launch pool accounting (`None` when the pool is disabled).
+    pub pool: Option<PoolOutcome>,
+    /// Overdue backfilled tasks killed so a due hold could start
+    /// (0 unless `preempt_overdue` is on).
+    pub overdue_preemptions: u64,
+}
+
+/// What the rapid-launch pool did over one run.
+#[derive(Debug, Clone)]
+pub struct PoolOutcome {
+    /// Short whole-node tasks launched through the pool.
+    pub launches: u64,
+    /// The launched tasks, in launch order (per-class pool metrics
+    /// join these against the records).
+    pub launched_tasks: Vec<TaskId>,
+    /// Nodes taken from batch (leases + drains) across all resizes.
+    pub grows: u64,
+    /// Nodes returned to batch across all resizes.
+    pub shrinks: u64,
+    /// Peak simultaneous lease count.
+    pub peak_leased: usize,
+    /// Lease count when the run ended.
+    pub final_leased: usize,
+    /// Whether the pool ever broke its conservation invariant (every
+    /// node exactly one of batch/leased/draining) or a batch placement
+    /// landed on a pool-owned node. Must stay `false`; pinned by
+    /// `rust/tests/pool_properties.rs`.
+    pub invariant_violated: bool,
+}
+
+/// Live state of the rapid-launch pool inside the scheduler.
+#[derive(Debug)]
+pub(crate) struct PoolState {
+    pub(crate) cfg: PoolConfig,
+    pub(crate) nodes: NodePool,
+    pub(crate) dispatcher: NodeDispatcher,
+    pub(crate) manager: PoolManager,
+    /// FIFO of pool-routed tasks waiting for a free leased node.
+    pub(crate) pending: VecDeque<TaskId>,
+    /// Finished pool tasks awaiting their (cheap) release op.
+    pub(crate) completions: VecDeque<TaskId>,
+    /// Tasks launched through the pool, in order.
+    pub(crate) launched: Vec<TaskId>,
+    /// The last grow attempt found no batch node to take; cleared when
+    /// a batch release could have produced a candidate. Gates the
+    /// starving-pool cooldown bypass so it cannot spin.
+    pub(crate) grow_blocked: bool,
+    pub(crate) violated: bool,
+}
+
+impl PoolState {
+    /// The manager's resize decision against the current pressure.
+    pub(crate) fn decision(&self) -> Resize {
+        self.manager.decide(
+            self.pending.len(),
+            self.nodes.n_free(),
+            self.nodes.n_leased(),
+            self.nodes.n_draining(),
+        )
+    }
 }
 
 impl SimOutcome {
@@ -225,6 +311,17 @@ pub struct SchedulerSim {
     /// Peak simultaneous holds + invariant flag (see [`SimOutcome`]).
     pub(crate) max_holds_seen: usize,
     pub(crate) hold_invariant_violated: bool,
+    /// Rapid-launch pool (`None` = disabled; the batch machinery then
+    /// behaves bit-for-bit as if the subsystem did not exist).
+    pub(crate) pool: Option<PoolState>,
+    /// Kill overdue backfilled tasks when their node's hold comes due,
+    /// instead of waiting for them to vacate (off by default).
+    pub(crate) preempt_overdue: bool,
+    pub(crate) overdue_preemptions: u64,
+    /// Backfilled tasks currently running, by node — the overdue scan's
+    /// working set (bounded by live backfills, unlike the append-only
+    /// `backfill_log`). Maintained only while `preempt_overdue` is on.
+    pub(crate) live_backfills: Vec<(TaskId, NodeId)>,
     pub(crate) cost: CostModel,
     pub(crate) noise: NoiseModel,
     pub(crate) task_model: TaskModel,
@@ -289,6 +386,10 @@ impl SchedulerSim {
             walltime_rng: Rng::new(seed ^ 0x5DEE_CE66_D5A6_1C5D),
             max_holds_seen: 0,
             hold_invariant_violated: false,
+            pool: None,
+            preempt_overdue: false,
+            overdue_preemptions: 0,
+            live_backfills: Vec::new(),
             cost,
             noise,
             task_model: TaskModel::default(),
@@ -402,6 +503,56 @@ impl SchedulerSim {
         self.walltime
     }
 
+    /// Install the rapid-launch node pool ([`crate::pool`]): short
+    /// whole-node tasks (estimated duration ≤ the config's threshold)
+    /// route to a dedicated queue served by O(1) node-based dispatch
+    /// over leased nodes, and a hysteresis controller elastically
+    /// resizes the lease set against batch pressure. A disabled config
+    /// (`size = 0`) leaves the scheduler bit-for-bit unchanged — the
+    /// equivalence property in `rust/tests/pool_properties.rs` pins
+    /// this down.
+    pub fn with_pool(mut self, cfg: PoolConfig) -> Self {
+        if cfg.enabled() {
+            let n = self.cluster.n_nodes() as usize;
+            let max = cfg.effective_max().min(n);
+            let min = cfg.effective_min().min(max);
+            self.pool = Some(PoolState {
+                cfg,
+                nodes: NodePool::new(n),
+                dispatcher: NodeDispatcher::new(),
+                manager: PoolManager::new(min, max, cfg.hysteresis),
+                pending: VecDeque::new(),
+                completions: VecDeque::new(),
+                launched: Vec::new(),
+                grow_blocked: false,
+                violated: false,
+            });
+        } else {
+            self.pool = None;
+        }
+        self
+    }
+
+    /// Whether the rapid-launch pool is active.
+    pub fn pool_enabled(&self) -> bool {
+        self.pool.is_some()
+    }
+
+    /// Enable preemptive backfill: when a hold comes due and backfilled
+    /// tasks on its node have overstayed their walltime estimate, kill
+    /// them through the existing preempt path instead of waiting for
+    /// them to vacate. Off by default — it changes schedules, so runs
+    /// opt in via the `preempt_overdue` config key.
+    pub fn with_preempt_overdue(mut self, on: bool) -> Self {
+        self.preempt_overdue = on;
+        self
+    }
+
+    /// Whether preemptive backfill is enabled.
+    pub fn preempt_overdue_enabled(&self) -> bool {
+        self.preempt_overdue
+    }
+
     /// Disable the (possibly large) utilization timeline recording.
     pub fn without_timeline(mut self) -> Self {
         self.record_timeline = false;
@@ -434,8 +585,18 @@ impl SchedulerSim {
     /// cluster moves into the sim at [`Self::new`] and nothing mutates
     /// it between then and here.
     pub fn run(mut self, q: &mut EventQueue<SchedEvent>) -> SimOutcome {
+        self.bootstrap_pool();
         self.prime_noise(q);
         let (final_time, events) = sim::run(&mut self, q);
+        let pool = self.pool.take().map(|p| PoolOutcome {
+            launches: p.dispatcher.launches(),
+            launched_tasks: p.launched,
+            grows: p.manager.grows(),
+            shrinks: p.manager.shrinks(),
+            peak_leased: p.nodes.peak_leased(),
+            final_leased: p.nodes.n_leased(),
+            invariant_violated: p.violated || p.nodes.check_conservation().is_err(),
+        });
         let mut deltas = self.timeline;
         deltas.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("no NaN times"));
         let mut running: i64 = 0;
@@ -459,6 +620,8 @@ impl SchedulerSim {
             backfills: self.backfill_log,
             max_active_holds: self.max_holds_seen,
             hold_invariant_violated: self.hold_invariant_violated,
+            pool,
+            overdue_preemptions: self.overdue_preemptions,
         }
     }
 
@@ -779,6 +942,107 @@ mod tests {
             prev_t = t;
         }
         assert_eq!(out.timeline.last().unwrap().1, 0);
+    }
+
+    #[test]
+    fn pool_dispatches_short_whole_node_jobs() {
+        let cfg = PoolConfig {
+            size: 2,
+            min: 1,
+            max: 3,
+            hysteresis: 0.25,
+            short_threshold: 30.0,
+        };
+        let sim = quiet_sim(4).with_pool(cfg);
+        assert!(sim.pool_enabled());
+        let (out, _) = sim.run_single(uniform_job(8, ResourceRequest::WholeNode, 5.0, 64));
+        assert!(out.records.iter().all(|r| r.state == TaskState::Done));
+        let pool = out.pool.expect("pool outcome present");
+        assert_eq!(pool.launches, 8, "every short task went through the pool");
+        assert_eq!(pool.launched_tasks.len(), 8);
+        assert!(!pool.invariant_violated);
+        assert!(pool.peak_leased >= 2 && pool.peak_leased <= 3);
+        assert!(out.busy.pool > 0.0, "pool work is accounted");
+        assert_eq!(out.busy.dispatch, 0.0, "nothing took the batch path");
+        assert_eq!(out.busy.cleanup, 0.0, "pool releases bypass cleanup");
+        assert_eq!(out.timeline.last().unwrap().1, 0, "cores conserved");
+    }
+
+    #[test]
+    fn pool_disabled_is_bit_for_bit_identical() {
+        let job = || uniform_job(32, ResourceRequest::WholeNode, 5.0, 64);
+        let (plain, _) = quiet_sim(4).run_single(job());
+        let (gated, _) = quiet_sim(4)
+            .with_pool(PoolConfig::disabled())
+            .run_single(job());
+        assert!(gated.pool.is_none());
+        assert_eq!(plain.events_processed, gated.events_processed);
+        for (a, b) in plain.records.iter().zip(&gated.records) {
+            assert_eq!(a.start_t, b.start_t);
+            assert_eq!(a.end_t, b.end_t);
+            assert_eq!(a.cleanup_t, b.cleanup_t);
+            assert_eq!(a.cores, b.cores);
+        }
+    }
+
+    #[test]
+    fn pool_grows_by_draining_busy_batch_nodes() {
+        // 2 nodes; the pool bootstraps with node 0, a long batch task
+        // occupies node 1, then a volley of short jobs forces a grow:
+        // with no idle batch node left, node 1 is earmarked (draining),
+        // keeps its batch task, and joins the pool when it releases.
+        let cfg = PoolConfig {
+            size: 1,
+            min: 1,
+            max: 2,
+            hysteresis: 0.25,
+            short_threshold: 30.0,
+        };
+        let mut sim = quiet_sim(2).with_pool(cfg);
+        let mut q = EventQueue::new();
+        let batch = sim.submit_at(
+            &mut q,
+            0.0,
+            uniform_job(1, ResourceRequest::WholeNode, 50.0, 64),
+        );
+        let volley = sim.submit_at(
+            &mut q,
+            1.0,
+            uniform_job(6, ResourceRequest::WholeNode, 5.0, 64),
+        );
+        let out = sim.run(&mut q);
+        assert!(out.records.iter().all(|r| r.state == TaskState::Done));
+        let pool = out.pool.expect("pool outcome");
+        assert_eq!(pool.launches, 6);
+        assert!(!pool.invariant_violated);
+        assert_eq!(pool.peak_leased, 2, "the drained node joined the pool");
+        assert!(pool.grows >= 2, "bootstrap lease + drain both count");
+        // The batch task ran to completion on the draining node.
+        let b = out.records.iter().find(|r| r.job == batch).unwrap();
+        assert!(b.end_t.unwrap() >= 50.0);
+        // Volley tasks finished on both nodes eventually.
+        let v_done = out.records.iter().filter(|r| r.job == volley).count();
+        assert_eq!(v_done, 6);
+    }
+
+    #[test]
+    fn long_whole_node_jobs_stay_on_the_batch_path() {
+        let cfg = PoolConfig {
+            size: 1,
+            min: 1,
+            max: 1,
+            hysteresis: 0.25,
+            short_threshold: 30.0,
+        };
+        // Duration above the threshold: batch dispatch, around the
+        // leased node (fence), still drains.
+        let sim = quiet_sim(4).with_pool(cfg);
+        let (out, _) = sim.run_single(uniform_job(3, ResourceRequest::WholeNode, 100.0, 64));
+        assert!(out.records.iter().all(|r| r.state == TaskState::Done));
+        let pool = out.pool.expect("pool outcome present");
+        assert_eq!(pool.launches, 0, "long jobs never route to the pool");
+        assert!(!pool.invariant_violated, "batch placements avoided the lease");
+        assert!(out.busy.dispatch > 0.0);
     }
 
     #[test]

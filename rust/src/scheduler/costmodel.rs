@@ -58,6 +58,17 @@ pub struct CostModel {
     pub cleanup_interleave: u32,
     /// Preemption signal cost per scheduling task (spot release path).
     pub preempt_signal: Time,
+    /// Pool dispatch of one short whole-node job: pop the free list,
+    /// notify the node. Bypasses placement and per-core bookkeeping, so
+    /// it is far below [`CostModel::dispatch_core`] — the paper's
+    /// node-based launch-cost structure.
+    pub pool_dispatch: Time,
+    /// Pool release of one finished job: push the node back on the free
+    /// list. Constant — unlike [`CostModel::cleanup`] it does not grow
+    /// with the owning array's size.
+    pub pool_release: Time,
+    /// One pool-resize operation (lease / drain / return bookkeeping).
+    pub pool_resize: Time,
 }
 
 impl CostModel {
@@ -76,6 +87,9 @@ impl CostModel {
             cleanup_per_array_task: 2.15e-6,
             cleanup_interleave: 2,
             preempt_signal: 4e-3,
+            pool_dispatch: 0.3e-3,
+            pool_release: 0.5e-3,
+            pool_resize: 2e-3,
         }
     }
 
@@ -94,6 +108,9 @@ impl CostModel {
             cleanup_per_array_task: 0.0,
             cleanup_interleave: u32::MAX,
             preempt_signal: 0.0,
+            pool_dispatch: 0.0,
+            pool_release: 0.0,
+            pool_resize: 0.0,
         }
     }
 
@@ -156,6 +173,17 @@ mod tests {
         assert_eq!(c.dispatch(true), 0.0);
         assert_eq!(c.cleanup(1 << 20), 0.0);
         assert_eq!(c.cycle(1 << 20), 0.0);
+    }
+
+    #[test]
+    fn pool_path_is_an_order_of_magnitude_cheaper() {
+        let c = CostModel::slurm_like_tx_green();
+        // The paper's cost structure: node-based pool launch + release
+        // must beat full dispatch + cleanup by ≥ 10× per short job.
+        let pooled = c.pool_dispatch + c.pool_release;
+        let batch = c.dispatch(true) + c.cleanup(1000);
+        assert!(batch > 10.0 * pooled, "batch {batch} vs pooled {pooled}");
+        assert!(c.pool_resize < c.dispatch_core, "resize stays cheap");
     }
 
     #[test]

@@ -7,6 +7,9 @@
 //! ([`crate::placement::PlacementEngine`]), so the free-capacity index
 //! is maintained incrementally and dispatch never scans the node table.
 
+use crate::cluster::{NodeId, NodeState};
+use crate::placement::Hold;
+use crate::pool::Resize;
 use crate::scheduler::core::{BackfillEvent, SchedEvent, SchedulerSim};
 use crate::scheduler::job::{JobId, Placement, ResourceRequest, TaskId, TaskState};
 use crate::sim::{EventQueue, Time};
@@ -26,16 +29,26 @@ impl SchedulerSim {
             (slot.spec.request, job.reservation.clone())
         };
         let hold_active = self.backfill && self.ledger.has_holds();
+        // While the rapid-launch pool owns nodes, every batch placement
+        // goes through the filtered queries so leased/draining nodes
+        // are fenced out; with the pool off (or empty) the unfiltered
+        // fast paths below are bit-for-bit the historical behaviour.
+        let pool_fence = self.pool.as_ref().map(|p| p.nodes.any_pooled()).unwrap_or(false);
         let placement = match request {
             ResourceRequest::WholeNode => {
-                if hold_active {
+                if hold_active || pool_fence {
                     // The held node is fenced off for the reservation's
-                    // own task; everyone else picks around it.
+                    // own task; everyone else picks around it — and
+                    // nobody takes a pool-owned node.
                     let ledger = &self.ledger;
+                    let pool = self.pool.as_ref().map(|p| &p.nodes);
                     self.engine.place_whole_where(
                         &mut self.cluster,
                         reservation.as_deref(),
-                        &|n| ledger.allows_whole_node(n, tid),
+                        &|n| {
+                            (!hold_active || ledger.allows_whole_node(n, tid))
+                                && pool.map(|pn| !pn.in_pool(n)).unwrap_or(true)
+                        },
                     )
                 } else {
                     self.engine
@@ -43,19 +56,23 @@ impl SchedulerSim {
                 }
             }
             ResourceRequest::Cores { cores, mem_mib } => {
-                if hold_active {
+                if hold_active || pool_fence {
                     // Admission uses the walltime estimate, exactly as
                     // the backfill scan does (exact when the error
                     // model is off).
                     let est_end =
                         now + self.task_model.startup + self.tasks[tid as usize].est_duration;
                     let ledger = &self.ledger;
+                    let pool = self.pool.as_ref().map(|p| &p.nodes);
                     self.engine.place_cores_where(
                         &mut self.cluster,
                         cores,
                         mem_mib,
                         reservation.as_deref(),
-                        &|n| ledger.allows_backfill(n, est_end),
+                        &|n| {
+                            (!hold_active || ledger.allows_backfill(n, est_end))
+                                && pool.map(|pn| !pn.in_pool(n)).unwrap_or(true)
+                        },
                     )
                 } else {
                     self.engine.place_cores(
@@ -105,6 +122,13 @@ impl SchedulerSim {
         // still draining and joins late.
         let cores = p.mask.count();
         let node = p.node;
+        // A batch placement on a pool-owned node means the fence broke
+        // somewhere: record it for the pool property suite.
+        if let Some(pl) = self.pool.as_mut() {
+            if pl.nodes.in_pool(node) {
+                pl.violated = true;
+            }
+        }
         let late = if self.production && whole_node {
             let frac = self.cluster.n_nodes() as f64 / 512.0;
             let prob = self.task_model.p_node_late * frac * frac;
@@ -172,15 +196,22 @@ impl SchedulerSim {
             .clone();
         let est_end = now + self.task_model.startup + est_duration;
         let ledger = &self.ledger;
+        let pool = self.pool.as_ref().map(|p| &p.nodes);
         let placement = self.engine.place_cores_where(
             &mut self.cluster,
             cores,
             mem_mib,
             reservation.as_deref(),
-            &|n| ledger.allows_backfill(n, est_end),
+            &|n| {
+                ledger.allows_backfill(n, est_end) && pool.map(|pn| !pn.in_pool(n)).unwrap_or(true)
+            },
         );
         match placement {
             Some(p) => {
+                self.tasks[tid as usize].backfilled = true;
+                if self.preempt_overdue {
+                    self.live_backfills.push((tid, p.node));
+                }
                 self.backfill_log.push(BackfillEvent {
                     task: tid,
                     node: p.node,
@@ -256,10 +287,17 @@ impl SchedulerSim {
             let Some(part) = self.engine.index().partition_for(reservation.as_deref()) else {
                 continue;
             };
-            if let Some((node, start)) =
-                self.ledger
-                    .plan_whole_node(self.engine.index(), &self.cluster, part, now, tid)
-            {
+            // Pool-owned nodes look idle to the index but will never
+            // serve a batch reservation: plan around them.
+            let pool = self.pool.as_ref().map(|p| &p.nodes);
+            if let Some((node, start)) = self.ledger.plan_whole_node_where(
+                self.engine.index(),
+                &self.cluster,
+                part,
+                now,
+                tid,
+                &|n| pool.map(|pn| !pn.in_pool(n)).unwrap_or(true),
+            ) {
                 let _ = self.ledger.set_hold(tid, node, start);
             }
         }
@@ -274,20 +312,39 @@ impl SchedulerSim {
 
     /// A running task's occupancy ended: it enters COMPLETING and waits
     /// for the server's cleanup transaction (resources still held).
+    /// Pool tasks queue for the cheap pool release instead of the
+    /// array-size-dependent batch cleanup.
     pub(crate) fn finish_task(&mut self, now: Time, tid: TaskId) {
-        let slot = &mut self.tasks[tid as usize];
-        if slot.record.state != TaskState::Running {
+        if self.tasks[tid as usize].record.state != TaskState::Running {
             return; // stale (e.g. preempted)
         }
-        slot.record.state = TaskState::Completing;
+        self.tasks[tid as usize].record.state = TaskState::Completing;
+        self.end_occupancy(now, tid);
+    }
+
+    /// Shared end-of-occupancy accounting for completion and preemption:
+    /// stamp the end time, return the cores to the running count and
+    /// timeline, and queue the task for its release path (cheap pool
+    /// release for pool tasks, the batch cleanup transaction otherwise).
+    fn end_occupancy(&mut self, now: Time, tid: TaskId) {
+        let slot = &mut self.tasks[tid as usize];
         slot.record.end_t = Some(now);
         let cores = slot.record.cores as u64;
+        let pooled = slot.pool_node.is_some();
         self.running_cores -= cores;
         if self.record_timeline {
             self.timeline.push((now, -(cores as i64)));
         }
-        self.completions.push_back(tid);
-        self.note_backlog();
+        if pooled {
+            self.pool
+                .as_mut()
+                .expect("pool task implies a pool")
+                .completions
+                .push_back(tid);
+        } else {
+            self.completions.push_back(tid);
+            self.note_backlog();
+        }
     }
 
     /// The cleanup transaction completed: release resources, mark DONE.
@@ -301,6 +358,7 @@ impl SchedulerSim {
         );
         slot.record.state = TaskState::Done;
         slot.record.cleanup_t = Some(now);
+        let was_backfilled = slot.backfilled;
         if let Some(p) = slot.placement.take() {
             self.engine
                 .release(&mut self.cluster, &p)
@@ -308,6 +366,20 @@ impl SchedulerSim {
             // Backfill release hook: expected free times update so hold
             // planning sees the node drain.
             self.ledger.note_release(p.node);
+            // Pool hooks: a draining node that just went wholly idle
+            // finishes its batch → pool transition here, and any batch
+            // release may unblock a previously-stalled pool grow.
+            if let Some(pl) = self.pool.as_mut() {
+                pl.grow_blocked = false;
+                if pl.nodes.is_draining(p.node)
+                    && self.cluster.node(p.node).map(|n| n.is_idle()).unwrap_or(false)
+                {
+                    pl.nodes.promote(p.node);
+                }
+            }
+        }
+        if was_backfilled && self.preempt_overdue {
+            self.live_backfills.retain(|&(t, _)| t != tid);
         }
         // Resources freed: head-of-line dispatch may proceed.
         self.hol_blocked = false;
@@ -320,14 +392,13 @@ impl SchedulerSim {
             return; // finished on its own before the signal landed
         }
         slot.record.state = TaskState::Preempted;
-        slot.record.end_t = Some(now);
-        let cores = slot.record.cores as u64;
-        self.running_cores -= cores;
-        if self.record_timeline {
-            self.timeline.push((now, -(cores as i64)));
+        // An overdue-backfill kill is only counted when it actually
+        // lands on a still-running task — a task that finished first
+        // was never preempted, whatever the signal queue says.
+        if slot.kill_signalled {
+            self.overdue_preemptions += 1;
         }
-        self.completions.push_back(tid);
-        self.note_backlog();
+        self.end_occupancy(now, tid);
     }
 
     /// Preempt a whole job: pending tasks are cancelled outright (cheap,
@@ -343,7 +414,7 @@ impl SchedulerSim {
         for tid in ids {
             match self.tasks[tid as usize].record.state {
                 TaskState::Pending => {
-                    if self.pending.remove(tid) {
+                    if self.pending.remove(tid) || self.pool_pending_remove(tid) {
                         let slot = &mut self.tasks[tid as usize];
                         slot.record.state = TaskState::Done;
                         slot.record.start_t = Some(now);
@@ -370,11 +441,260 @@ impl SchedulerSim {
             || !self.completions.is_empty()
             || !self.preempt_q.is_empty()
             || self.running_cores > 0
+            || self
+                .pool
+                .as_ref()
+                .map(|p| !p.pending.is_empty() || !p.completions.is_empty())
+                .unwrap_or(false)
             || self.tasks.iter().any(|t| {
                 matches!(
                     t.record.state,
                     TaskState::Pending | TaskState::Running | TaskState::Completing
                 )
             })
+    }
+
+    // ---- rapid-launch pool glue ----------------------------------------
+    //
+    // The pool subsystem proper lives in `crate::pool`; these methods
+    // are the scheduler-side integration: routing, the O(1) launch and
+    // release effects, the hysteresis resize op, and the preemptive-
+    // backfill scan. Every one of them is a no-op (and unreachable)
+    // while the pool is disabled, which keeps pool-off runs bit-for-bit
+    // identical to the pre-pool scheduler.
+
+    /// Lease the configured initial node set (all nodes are idle before
+    /// the first event, so the bootstrap never needs to drain).
+    pub(crate) fn bootstrap_pool(&mut self) {
+        let Some(p) = self.pool.as_mut() else { return };
+        let want = p.cfg.size.max(p.manager.min).min(p.manager.max);
+        if want == 0 {
+            return;
+        }
+        let ids: Vec<NodeId> = self
+            .engine
+            .index()
+            .partition_nodes_iter(0)
+            .filter(|&n| {
+                self.cluster
+                    .node(n)
+                    .map(|x| x.state() == NodeState::Up && x.is_idle())
+                    .unwrap_or(false)
+            })
+            .take(want)
+            .collect();
+        for n in ids {
+            if p.nodes.lease(n) {
+                p.manager.record_grow(1);
+            }
+        }
+    }
+
+    /// Does this task belong on the pool queue? Whole-node, short by
+    /// declared walltime (the estimate — a real scheduler only knows
+    /// the declared value), and unreserved: the pool leases out of the
+    /// open partition, so reservation-tagged jobs stay on the batch
+    /// path where their fenced nodes live.
+    pub(crate) fn route_to_pool(&self, tid: TaskId) -> bool {
+        let Some(p) = self.pool.as_ref() else {
+            return false;
+        };
+        let slot = &self.tasks[tid as usize];
+        slot.spec.request == ResourceRequest::WholeNode
+            && slot.est_duration <= p.cfg.short_threshold
+            && self.jobs[slot.record.job as usize].reservation.is_none()
+    }
+
+    /// Remove a task from the pool queue (job cancellation path).
+    pub(crate) fn pool_pending_remove(&mut self, tid: TaskId) -> bool {
+        let Some(p) = self.pool.as_mut() else {
+            return false;
+        };
+        if let Some(i) = p.pending.iter().position(|&t| t == tid) {
+            p.pending.remove(i);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Apply a pool dispatch: pop a leased node off the free list and
+    /// start the task on it — no placement engine, no per-core
+    /// bookkeeping, no cluster mutation (the lease fence keeps batch
+    /// off the node).
+    pub(crate) fn pool_launch(&mut self, now: Time, tid: TaskId, q: &mut EventQueue<SchedEvent>) {
+        let node = {
+            let Some(p) = self.pool.as_mut() else { return };
+            match p.dispatcher.launch(&mut p.nodes) {
+                Some(n) => n,
+                None => {
+                    // A shrink raced the dispatch decision: requeue at
+                    // the head so FIFO order is preserved.
+                    p.pending.push_front(tid);
+                    return;
+                }
+            }
+        };
+        let cores = self.engine.index().node_capacity(node);
+        let slot = &mut self.tasks[tid as usize];
+        slot.record.state = TaskState::Running;
+        slot.record.start_t = Some(now);
+        slot.record.cores = cores;
+        slot.pool_node = Some(node);
+        let duration = slot.spec.duration;
+        let jitter = self.rng.normal().abs() * self.task_model.jitter_sigma;
+        let occupancy = self.task_model.startup + duration + jitter;
+        self.running_cores += cores as u64;
+        if self.record_timeline {
+            self.timeline.push((now, cores as i64));
+        }
+        self.pool.as_mut().expect("checked above").launched.push(tid);
+        q.at(now + occupancy, SchedEvent::TaskEnded(tid));
+    }
+
+    /// Apply a pool release: mark the task DONE and push its node back
+    /// on the free list (or complete a pending drain-return). Constant
+    /// cost — the batch cleanup's array-size term never applies.
+    pub(crate) fn finish_pool_release(&mut self, now: Time, tid: TaskId) {
+        let slot = &mut self.tasks[tid as usize];
+        debug_assert!(
+            slot.record.state == TaskState::Completing
+                || slot.record.state == TaskState::Preempted,
+            "pool release of task in state {:?}",
+            slot.record.state
+        );
+        slot.record.state = TaskState::Done;
+        slot.record.cleanup_t = Some(now);
+        let node = slot.pool_node.take();
+        if let Some(p) = self.pool.as_mut() {
+            match node {
+                Some(n) => {
+                    if !p.dispatcher.release(&mut p.nodes, n) {
+                        p.violated = true;
+                    }
+                }
+                None => p.violated = true,
+            }
+        }
+    }
+
+    /// Apply one hysteresis resize pass: grow by leasing idle batch
+    /// nodes (draining busy ones when none are idle), shrink by
+    /// returning drained pool nodes to batch. The decision is
+    /// re-evaluated at apply time — state may have moved since the op
+    /// was scheduled.
+    pub(crate) fn apply_pool_resize(&mut self, now: Time) {
+        let Some(p) = self.pool.as_mut() else { return };
+        let ledger = &self.ledger;
+        let cluster = &self.cluster;
+        let index = self.engine.index();
+        // First batch node (no holds, not pool-owned) in the requested
+        // occupancy state — idle nodes lease immediately, busy ones are
+        // earmarked to drain.
+        let candidate = |nodes: &crate::pool::NodePool, idle: bool| -> Option<NodeId> {
+            index.partition_nodes_iter(0).find(|&n| {
+                !nodes.in_pool(n)
+                    && ledger.hold_on(n).is_none()
+                    && cluster
+                        .node(n)
+                        .map(|x| x.state() == NodeState::Up && x.is_idle() == idle)
+                        .unwrap_or(false)
+            })
+        };
+        match p.decision() {
+            Resize::Grow(k) => {
+                let mut grown = 0usize;
+                for _ in 0..k {
+                    if let Some(n) = candidate(&p.nodes, true) {
+                        if p.nodes.lease(n) {
+                            grown += 1;
+                        }
+                        continue;
+                    }
+                    // No idle batch node: drain a busy one — it joins
+                    // the pool when its running tasks release.
+                    match candidate(&p.nodes, false) {
+                        Some(n) => {
+                            if p.nodes.begin_drain(n) {
+                                grown += 1;
+                            }
+                        }
+                        None => break, // nothing left to take
+                    }
+                }
+                if grown > 0 {
+                    p.manager.record_grow(grown);
+                }
+                // A fruitless grow gates the starving-pool cooldown
+                // bypass until the next batch release.
+                p.grow_blocked = grown == 0;
+            }
+            Resize::Shrink(k) => {
+                let mut shrunk = 0usize;
+                for _ in 0..k {
+                    if p.nodes.return_free().is_some() {
+                        shrunk += 1;
+                    } else if let Some(n) = p.nodes.any_draining() {
+                        // Prefer cancelling a pending drain over
+                        // returning capacity the pool actually uses.
+                        if p.nodes.cancel_drain(n) {
+                            shrunk += 1;
+                        }
+                    } else {
+                        break;
+                    }
+                }
+                if shrunk > 0 {
+                    p.manager.record_shrink(shrunk);
+                    // Returned nodes are batch capacity again: let the
+                    // blocked head retry against a fresh cycle.
+                    self.hol_blocked = false;
+                    self.cycle_budget = 0;
+                }
+            }
+            Resize::Hold => {}
+        }
+        p.manager.note_resize(now);
+        if p.nodes.check_conservation().is_err() {
+            p.violated = true;
+        }
+    }
+
+    /// The preemptive-backfill scan: for every hold that has come due,
+    /// kill backfilled tasks on its node that have overstayed their
+    /// walltime estimate (real schedulers terminate jobs past their
+    /// declared walltime). Signals go through the ordinary preempt path
+    /// — `Op::PreemptSignal`, then cleanup — so the ledger release
+    /// hooks run unchanged. Scans the bounded live-backfill set, not
+    /// the append-only log.
+    pub(crate) fn signal_overdue_backfills(&mut self, now: Time) {
+        if !self.ledger.has_holds() || self.live_backfills.is_empty() {
+            return;
+        }
+        let holds: Vec<Hold> = self.ledger.holds().to_vec();
+        let startup = self.task_model.startup;
+        for h in &holds {
+            if now < h.start {
+                continue;
+            }
+            let mut kills: Vec<TaskId> = Vec::new();
+            for &(task, node) in &self.live_backfills {
+                if node != h.node {
+                    continue;
+                }
+                let slot = &self.tasks[task as usize];
+                if slot.record.state != TaskState::Running || slot.kill_signalled {
+                    continue;
+                }
+                let est_end = slot.record.start_t.unwrap_or(now) + startup + slot.est_duration;
+                if now + 1e-9 >= est_end {
+                    kills.push(task);
+                }
+            }
+            for tid in kills {
+                self.tasks[tid as usize].kill_signalled = true;
+                self.preempt_q.push_back(tid);
+            }
+        }
     }
 }

@@ -26,6 +26,7 @@
 
 use crate::cluster::NodeState;
 use crate::placement::Hold;
+use crate::pool::Resize;
 use crate::scheduler::accounting::TaskRecord;
 use crate::scheduler::core::{JobMeta, Op, SchedEvent, SchedulerSim, TaskSlot};
 use crate::scheduler::job::{ResourceRequest, TaskId, TaskState};
@@ -55,6 +56,29 @@ impl SchedulerSim {
         if let Some(t) = self.preempt_q.pop_front() {
             return Some((Op::PreemptSignal(t), self.cost.preempt_signal * s));
         }
+        // Rapid-launch pool service, ahead of the batch machinery (the
+        // pool is the fast path): releases first (cheap, free nodes for
+        // the next volley), then a due resize, then free-list dispatch.
+        if let Some(p) = self.pool.as_mut() {
+            if let Some(tid) = p.completions.pop_front() {
+                return Some((Op::PoolRelease(tid), self.cost.pool_release * s));
+            }
+            // An empty pool with queued work bypasses the resize
+            // cooldown: with no leases there may be no future event to
+            // re-kick the server once the cooldown expires, and waiting
+            // would strand the queue. `grow_blocked` (set when a grow
+            // found no batch node to take, cleared on the next batch
+            // release) keeps the bypass from spinning on a cluster with
+            // nothing left to lease.
+            let starving = !p.pending.is_empty() && !p.nodes.any_pooled() && !p.grow_blocked;
+            if (p.manager.due(now) || starving) && p.decision() != Resize::Hold {
+                return Some((Op::PoolResize, self.cost.pool_resize * s));
+            }
+            if !p.pending.is_empty() && p.nodes.n_free() > 0 {
+                let tid = p.pending.pop_front().expect("checked non-empty");
+                return Some((Op::PoolDispatch(tid), self.cost.pool_dispatch * s));
+            }
+        }
         let can_dispatch = !self.pending.is_empty() && !self.hol_blocked;
         if !self.completions.is_empty() {
             let must_interleave =
@@ -80,6 +104,16 @@ impl SchedulerSim {
         // Backfill machinery: only runs while the head of the queue is
         // blocked (otherwise normal dispatch above is work-conserving).
         if self.backfill && self.hol_blocked {
+            // Preemptive backfill: a hold that has come due no longer
+            // waits for overdue backfilled tasks on its node — they
+            // overstayed their declared walltime, so they are killed
+            // through the ordinary preempt path (opt-in).
+            if self.preempt_overdue {
+                self.signal_overdue_backfills(now);
+                if let Some(t) = self.preempt_q.pop_front() {
+                    return Some((Op::PreemptSignal(t), self.cost.preempt_signal * s));
+                }
+            }
             // A held node came wholly idle: dispatch its reservation's
             // own task out of order, wherever it sits in the queue —
             // without this, a blocked higher-priority head would let the
@@ -125,6 +159,7 @@ impl SchedulerSim {
         let engine = &self.engine;
         let cluster = &self.cluster;
         let ledger = &self.ledger;
+        let pool = self.pool.as_ref().map(|p| &p.nodes);
         self.pending.pop_where(self.backfill_lookahead, now, |tid| {
             let slot = &tasks[tid as usize];
             let (cores, mem_mib) = match slot.spec.request {
@@ -139,6 +174,7 @@ impl SchedulerSim {
             engine
                 .peek_cores_where(cluster, res, cores, mem_mib, &|n| {
                     ledger.allows_backfill(n, est_end)
+                        && pool.map(|pn| !pn.in_pool(n)).unwrap_or(true)
                 })
                 .is_some()
         })
@@ -160,7 +196,18 @@ impl SchedulerSim {
                     .collect();
                 for tid in ids {
                     self.tasks[tid as usize].enqueued_at = now;
-                    self.pending.push(tid, prio, now);
+                    // Short whole-node tasks route to the rapid-launch
+                    // pool queue (FIFO; one class of work by design);
+                    // everything else takes the batch pending queue.
+                    if self.route_to_pool(tid) {
+                        self.pool
+                            .as_mut()
+                            .expect("routing implies a pool")
+                            .pending
+                            .push_back(tid);
+                    } else {
+                        self.pending.push(tid, prio, now);
+                    }
                 }
             }
             Op::Cycle => {
@@ -188,6 +235,18 @@ impl SchedulerSim {
             Op::PreemptSignal(tid) => {
                 self.busy.preempt += self.cost.preempt_signal * self.op_scale;
                 self.apply_preempt_signal(now, tid);
+            }
+            Op::PoolDispatch(tid) => {
+                self.busy.pool += self.cost.pool_dispatch * self.op_scale;
+                self.pool_launch(now, tid, q);
+            }
+            Op::PoolRelease(tid) => {
+                self.busy.pool += self.cost.pool_release * self.op_scale;
+                self.finish_pool_release(now, tid);
+            }
+            Op::PoolResize => {
+                self.busy.pool += self.cost.pool_resize * self.op_scale;
+                self.apply_pool_resize(now);
             }
         }
     }
@@ -231,6 +290,9 @@ impl sim::Actor for SchedulerSim {
                         spec: t.clone(),
                         est_duration,
                         enqueued_at: now,
+                        pool_node: None,
+                        backfilled: false,
+                        kill_signalled: false,
                         record: TaskRecord {
                             task: tid,
                             job: id,

@@ -251,7 +251,13 @@ impl ContentionMix {
     /// * `default` — a balanced mix: periodic half-machine batch
     ///   arrays under a Poisson stream of small interactive jobs;
     /// * `heavy` — full-machine batch arrays under sustained
-    ///   interactive pressure (the starvation regime).
+    ///   interactive pressure (the starvation regime);
+    /// * `burst` — periodic 1000-task volleys of *short whole-node*
+    ///   jobs over a sustained batch stream: the paper's rapid-launch
+    ///   regime, the scenario the node pool ([`crate::pool`]) exists
+    ///   for. Volley tasks route to the pool when one is enabled and
+    ///   dispatch as ordinary whole-node tasks otherwise, so pooled
+    ///   vs backfill-only launch latency is directly comparable.
     pub fn preset(name: &str, nodes: u32) -> Result<ContentionMix> {
         let nodes = nodes.max(2);
         match name {
@@ -330,8 +336,42 @@ impl ContentionMix {
                     },
                 ],
             }),
+            "burst" => Ok(ContentionMix {
+                name: "burst".into(),
+                nodes,
+                horizon: 400.0,
+                classes: vec![
+                    // Rapid-launch volleys: 1000 short whole-node tasks
+                    // per wave. Short (0.5 s) so the *scheduler*, not
+                    // node capacity, is the bottleneck on the batch
+                    // path — exactly the regime the paper's node-based
+                    // dispatch is built for.
+                    ClassSpec {
+                        class: JobClass::Interactive,
+                        arrival: Arrival::Periodic { gap: 120.0, start: 5.0 },
+                        tasks_per_job: 1000,
+                        request: ResourceRequest::WholeNode,
+                        duration: TaskGen::Constant { seconds: 0.5 },
+                        priority: 10,
+                        lanes: 64,
+                    },
+                    // Sustained quarter-machine batch stream underneath
+                    // (long tasks keep the leases contended, so the
+                    // elastic resize actually has pressure to work
+                    // against).
+                    ClassSpec {
+                        class: JobClass::Batch,
+                        arrival: Arrival::Periodic { gap: 150.0, start: 0.5 },
+                        tasks_per_job: (nodes / 4).max(1) as u64,
+                        request: ResourceRequest::WholeNode,
+                        duration: TaskGen::Constant { seconds: 150.0 },
+                        priority: -5,
+                        lanes: 64,
+                    },
+                ],
+            }),
             other => Err(Error::Config(format!(
-                "unknown contention preset {other:?} (known: tiny, default, heavy)"
+                "unknown contention preset {other:?} (known: tiny, default, heavy, burst)"
             ))),
         }
     }
@@ -384,7 +424,7 @@ mod tests {
 
     #[test]
     fn presets_resolve_and_validate() {
-        for name in ["tiny", "default", "heavy"] {
+        for name in ["tiny", "default", "heavy", "burst"] {
             let mix = ContentionMix::preset(name, 16).unwrap();
             assert_eq!(mix.name, name);
             for sub in mix.generate(7) {
@@ -392,6 +432,36 @@ mod tests {
             }
         }
         assert!(ContentionMix::preset("bogus", 16).is_err());
+    }
+
+    #[test]
+    fn burst_preset_shape() {
+        let mix = ContentionMix::preset("burst", 32).unwrap();
+        let subs = mix.generate(3);
+        let volleys: Vec<_> = subs
+            .iter()
+            .filter(|s| s.class == JobClass::Interactive)
+            .collect();
+        // Horizon 400, gap 120, start 5 → volleys at 5/125/245/365.
+        assert_eq!(volleys.len(), 4);
+        for v in &volleys {
+            assert_eq!(v.spec.array_size(), 1000, "1000-task volleys");
+            assert!(v
+                .spec
+                .tasks
+                .iter()
+                .all(|t| t.request == ResourceRequest::WholeNode && t.duration < 30.0));
+        }
+        // The batch stream is whole-node and long (never pool-eligible).
+        let batch: Vec<_> = subs.iter().filter(|s| s.class == JobClass::Batch).collect();
+        assert!(!batch.is_empty());
+        for b in &batch {
+            assert!(b
+                .spec
+                .tasks
+                .iter()
+                .all(|t| t.request == ResourceRequest::WholeNode && t.duration > 30.0));
+        }
     }
 
     #[test]
