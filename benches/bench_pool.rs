@@ -22,7 +22,7 @@
 use llsched::bench::{bench, black_box, section, BenchOpts};
 use llsched::cluster::{Cluster, NodeId};
 use llsched::placement::{PlacementEngine, Strategy};
-use llsched::pool::{NodeDispatcher, NodePool};
+use llsched::pool::{FleetConfig, NodeDispatcher, NodePool, PoolFleet, ShardConfig};
 use llsched::scheduler::job::Placement;
 use std::collections::VecDeque;
 use std::time::Duration;
@@ -50,6 +50,53 @@ fn churn_engine(nodes: u32, jobs: usize) -> usize {
     }
     for p in live {
         engine.release(&mut cluster, &p).expect("drain");
+    }
+    done
+}
+
+/// Two-shard fleet path: every job is routed by shape (general 0.5 s
+/// vs large 45 s, alternating), then served by its shard's free list —
+/// the sharded-fleet dispatch hot path, measuring what shape routing
+/// and per-shard bookkeeping add over the single pool.
+fn churn_fleet(nodes: u32, jobs: usize) -> usize {
+    let half = (nodes as usize / 2).max(1);
+    let cfg = FleetConfig {
+        shards: vec![
+            ShardConfig::named("general", half, 0, half).unwrap(),
+            ShardConfig::named("large", half, 0, half).unwrap(),
+        ],
+    };
+    let mut fleet = PoolFleet::new(vec![64; nodes as usize], &cfg);
+    for id in 0..nodes as NodeId {
+        let sid = if (id as usize) < half { 0 } else { 1 };
+        assert!(fleet.shards[sid].nodes.lease(id));
+    }
+    let mut live: Vec<VecDeque<NodeId>> = vec![VecDeque::new(), VecDeque::new()];
+    for i in 0..nodes / 2 {
+        let sid = fleet.route(64, if i % 2 == 0 { 0.5 } else { 45.0 }).expect("routed");
+        if let Some(n) = fleet.shards[sid].nodes.acquire() {
+            live[sid].push_back(n);
+        }
+    }
+    let mut done = 0usize;
+    for i in 0..jobs {
+        let est = if i % 2 == 0 { 0.5 } else { 45.0 };
+        let sid = fleet.route(64, est).expect("routed");
+        let sh = &mut fleet.shards[sid];
+        let n = match sh.dispatcher.launch(&mut sh.nodes) {
+            Some(n) => n,
+            None => {
+                let old = live[sid].pop_front().expect("live set non-empty");
+                assert!(sh.dispatcher.release(&mut sh.nodes, old));
+                sh.dispatcher.launch(&mut sh.nodes).expect("freed capacity")
+            }
+        };
+        live[sid].push_back(n);
+        if let Some(old) = live[sid].pop_front() {
+            let sh = &mut fleet.shards[sid];
+            assert!(sh.dispatcher.release(&mut sh.nodes, old));
+        }
+        done += 1;
     }
     done
 }
@@ -123,11 +170,18 @@ fn main() {
                 black_box(churn_pool(nodes, jobs))
             });
             println!("{}", pool.line());
+            let fleet = bench(&format!("fleet  dispatch   {jobs} jobs (2 shards)"), opts, |_| {
+                black_box(churn_fleet(nodes, jobs))
+            });
+            println!("{}", fleet.line());
             let engine_jps = jobs as f64 / engine.summary.p50.max(1e-12);
             let pool_jps = jobs as f64 / pool.summary.p50.max(1e-12);
+            let fleet_jps = jobs as f64 / fleet.summary.p50.max(1e-12);
             let speedup = pool_jps / engine_jps.max(1e-12);
+            let fleet_speedup = fleet_jps / engine_jps.max(1e-12);
             println!(
-                "  → {jobs} short jobs: engine {engine_jps:.0} jobs/s, pool {pool_jps:.0} jobs/s, speedup {speedup:.0}x"
+                "  → {jobs} short jobs: engine {engine_jps:.0} jobs/s, pool {pool_jps:.0} jobs/s \
+                 ({speedup:.0}x), 2-shard fleet {fleet_jps:.0} jobs/s ({fleet_speedup:.0}x)"
             );
             speedups.push((nodes, jobs, speedup));
         }

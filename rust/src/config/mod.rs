@@ -6,7 +6,7 @@ pub mod presets;
 
 use crate::error::{Error, Result};
 use crate::placement::Strategy;
-use crate::pool::PoolConfig;
+use crate::pool::{FleetConfig, JobShape, PoolConfig, ShardConfig};
 use crate::scheduler::queue::AgingPolicy;
 use parser::Value;
 
@@ -111,6 +111,12 @@ pub struct RunConfig {
     /// tasks that overstay their walltime estimate once their node's
     /// hold comes due, instead of waiting for them to vacate.
     pub preempt_overdue: bool,
+    /// Shape-sharded pool fleet
+    /// (`pools = [{shape = "general", size = 8}, ...]`): one
+    /// rapid-launch shard per entry, keyed by a job-shape classifier.
+    /// Mutually exclusive with the legacy `pool_size` keys, which map
+    /// to a one-shard fleet.
+    pub pools: Vec<ShardConfig>,
 }
 
 impl Default for RunConfig {
@@ -135,6 +141,7 @@ impl Default for RunConfig {
             pool_max: 0,
             pool_hysteresis: 0.25,
             preempt_overdue: false,
+            pools: Vec::new(),
         }
     }
 }
@@ -178,7 +185,16 @@ impl RunConfig {
         if self.walltime_error < 0.0 {
             return Err(Error::Config("walltime_error must be >= 0".into()));
         }
+        if !self.pools.is_empty() && (self.pool_size > 0 || self.pool_min > 0 || self.pool_max > 0)
+        {
+            return Err(Error::Config(
+                "pools = [...] and the legacy pool_size/pool_min/pool_max keys are \
+                 mutually exclusive (set per-shard bounds inside the list)"
+                    .into(),
+            ));
+        }
         self.pool_config().validate().map_err(Error::Config)?;
+        self.fleet_config().validate().map_err(Error::Config)?;
         Ok(())
     }
 
@@ -264,6 +280,29 @@ impl RunConfig {
         if let Some(v) = run.get("preempt_overdue") {
             c.preempt_overdue = v.as_bool()?;
         }
+        if let Some(v) = run.get("pools") {
+            // Key *presence* is what conflicts — an explicitly written
+            // legacy knob next to the list must error even when it
+            // restates a default, or it would be silently ignored.
+            for key in ["pool_size", "pool_min", "pool_max", "pool_hysteresis"] {
+                if run.get(key).is_some() {
+                    return Err(Error::Config(format!(
+                        "pools = [...] and the legacy {key} key are mutually exclusive \
+                         (set per-shard bounds inside the list)"
+                    )));
+                }
+            }
+            let Value::Arr(items) = v else {
+                return Err(Error::Config(
+                    "pools must be a list of inline tables: \
+                     pools = [{shape = \"general\", size = 8}, ...]"
+                        .into(),
+                ));
+            };
+            for (i, item) in items.iter().enumerate() {
+                c.pools.push(shard_from_value(item, i)?);
+            }
+        }
         c.validate()?;
         Ok(c)
     }
@@ -279,7 +318,7 @@ impl RunConfig {
     }
 
     /// The rapid-launch pool configuration this run uses (disabled when
-    /// `pool_size` is 0).
+    /// `pool_size` is 0) — the legacy single-pool knobs.
     pub fn pool_config(&self) -> PoolConfig {
         PoolConfig {
             size: self.pool_size as usize,
@@ -288,6 +327,13 @@ impl RunConfig {
             hysteresis: self.pool_hysteresis,
             ..PoolConfig::disabled()
         }
+    }
+
+    /// The pool fleet this run uses: the explicit `pools = [...]` list
+    /// when present, else the legacy `pool_size` keys mapped to a
+    /// one-shard fleet (disabled when `pool_size` is 0 too).
+    pub fn fleet_config(&self) -> FleetConfig {
+        FleetConfig::from_parts(&self.pools, self.pool_config())
     }
 
     /// The placement strategy this run uses: the explicit `placement`
@@ -303,6 +349,79 @@ impl RunConfig {
         let v = parser::parse(&text)?;
         RunConfig::from_value(&v)
     }
+}
+
+/// One `pools = [...]` entry: a named shape (`shape = "general"`) with
+/// optional explicit band overrides (`min_lanes` / `max_lanes` /
+/// `min_walltime` / `max_walltime`), plus the per-shard elastic knobs
+/// (`size` required; `min` / `max` / `hysteresis` optional with the
+/// legacy defaults). With no `shape` key the bands start from the
+/// legacy short-threshold classifier.
+fn shard_from_value(item: &Value, idx: usize) -> Result<ShardConfig> {
+    if !matches!(item, Value::Table(_)) {
+        return Err(Error::Config(format!(
+            "pools[{idx}] must be an inline table like {{shape = \"general\", size = 8}}"
+        )));
+    }
+    let (name, mut shape) = match item.get("shape") {
+        Some(v) => {
+            let s = v.as_str()?;
+            let shape = JobShape::named(s).ok_or_else(|| {
+                Error::Config(format!(
+                    "pools[{idx}]: unknown shape {s:?} (known: general, large, wide, short)"
+                ))
+            })?;
+            (s.to_string(), shape)
+        }
+        None => (
+            format!("shard{idx}"),
+            JobShape::up_to(crate::pool::DEFAULT_SHORT_THRESHOLD),
+        ),
+    };
+    if let Some(v) = item.get("min_lanes") {
+        shape.min_lanes = int_in_range(v, "min_lanes", idx)?;
+    }
+    if let Some(v) = item.get("max_lanes") {
+        shape.max_lanes = int_in_range(v, "max_lanes", idx)?;
+    }
+    if let Some(v) = item.get("min_walltime") {
+        shape.min_walltime = v.as_float()?;
+    }
+    if let Some(v) = item.get("max_walltime") {
+        shape.max_walltime = v.as_float()?;
+    }
+    let size = item
+        .get("size")
+        .ok_or_else(|| Error::Config(format!("pools[{idx}] ({name}): size is required")))?;
+    let pool = PoolConfig {
+        size: int_in_range::<u32>(size, "size", idx)? as usize,
+        min: item
+            .get("min")
+            .map(|v| int_in_range::<u32>(v, "min", idx))
+            .transpose()?
+            .unwrap_or(0) as usize,
+        max: item
+            .get("max")
+            .map(|v| int_in_range::<u32>(v, "max", idx))
+            .transpose()?
+            .unwrap_or(0) as usize,
+        hysteresis: item
+            .get("hysteresis")
+            .map(|v| v.as_float())
+            .transpose()?
+            .unwrap_or(0.25),
+        short_threshold: shape.max_walltime,
+    };
+    Ok(ShardConfig { name, shape, pool })
+}
+
+/// A non-negative integer that fits the target width — negative config
+/// values must be errors, not wraps.
+fn int_in_range<T: TryFrom<i64>>(v: &Value, key: &str, idx: usize) -> Result<T> {
+    let x = v.as_int()?;
+    T::try_from(x).map_err(|_| {
+        Error::Config(format!("pools[{idx}]: {key} must be a non-negative integer, got {x}"))
+    })
 }
 
 #[cfg(test)]
@@ -451,6 +570,84 @@ mod tests {
         // min/max nonsense is tolerated while the pool is disabled.
         let ok = parser::parse("[run]\npool_min = 9\npool_max = 8\n").unwrap();
         assert!(RunConfig::from_value(&ok).is_ok());
+    }
+
+    #[test]
+    fn pools_list_parses_into_a_fleet() {
+        let v = parser::parse(
+            "[run]\npools = [{shape = \"general\", size = 8, min = 2, max = 16}, \
+             {shape = \"large\", size = 4, hysteresis = 0.5}]\n",
+        )
+        .unwrap();
+        let c = RunConfig::from_value(&v).unwrap();
+        assert_eq!(c.pools.len(), 2);
+        assert_eq!(c.pools[0].name, "general");
+        assert_eq!(c.pools[0].pool.size, 8);
+        assert_eq!(c.pools[0].pool.min, 2);
+        assert_eq!(c.pools[0].pool.max, 16);
+        assert_eq!(c.pools[1].name, "large");
+        assert_eq!(c.pools[1].pool.hysteresis, 0.5);
+        assert_eq!(c.pools[1].shape, JobShape::named("large").unwrap());
+        let fleet = c.fleet_config();
+        assert_eq!(fleet.shards.len(), 2);
+        assert!(fleet.validate().is_ok());
+        // Explicit band overrides compose a custom shape.
+        let v = parser::parse(
+            "[run]\npools = [{size = 4, min_lanes = 65, max_walltime = 120}]\n",
+        )
+        .unwrap();
+        let c = RunConfig::from_value(&v).unwrap();
+        assert_eq!(c.pools[0].name, "shard0");
+        assert_eq!(c.pools[0].shape.min_lanes, 65);
+        assert_eq!(c.pools[0].shape.max_walltime, 120.0);
+    }
+
+    #[test]
+    fn pools_list_validated() {
+        // The satellite bug guard end-to-end: overlapping shard shapes
+        // are a config error, not a silent routing ambiguity.
+        let v = parser::parse(
+            "[run]\npools = [{shape = \"general\", size = 4}, {shape = \"general\", size = 2}]\n",
+        )
+        .unwrap();
+        let err = RunConfig::from_value(&v).unwrap_err().to_string();
+        assert!(err.contains("overlap"), "{err}");
+        // Legacy keys and the list are mutually exclusive — all of
+        // them, so no knob is ever silently ignored.
+        // Presence conflicts, not values: even a legacy knob restating
+        // its default is rejected rather than silently ignored.
+        for legacy in [
+            "pool_size = 4",
+            "pool_min = 2",
+            "pool_max = 8",
+            "pool_hysteresis = 0.5",
+            "pool_hysteresis = 0.25",
+        ] {
+            let v = parser::parse(&format!(
+                "[run]\n{legacy}\npools = [{{shape = \"general\", size = 4}}]\n"
+            ))
+            .unwrap();
+            assert!(
+                RunConfig::from_value(&v).is_err(),
+                "{legacy} must conflict with pools = [...]"
+            );
+        }
+        // Missing size, unknown shape, negative size: all errors.
+        let v = parser::parse("[run]\npools = [{shape = \"general\"}]\n").unwrap();
+        assert!(RunConfig::from_value(&v).is_err(), "size required");
+        let v = parser::parse("[run]\npools = [{shape = \"bogus\", size = 2}]\n").unwrap();
+        assert!(RunConfig::from_value(&v).is_err(), "unknown shape");
+        let v = parser::parse("[run]\npools = [{shape = \"general\", size = -1}]\n").unwrap();
+        assert!(RunConfig::from_value(&v).is_err(), "negative size");
+        let v = parser::parse("[run]\npools = [3]\n").unwrap();
+        assert!(RunConfig::from_value(&v).is_err(), "non-table entry");
+        // The legacy keys still map to a one-shard fleet.
+        let v = parser::parse("[run]\npool_size = 4\n").unwrap();
+        let c = RunConfig::from_value(&v).unwrap();
+        let fleet = c.fleet_config();
+        assert_eq!(fleet.shards.len(), 1);
+        assert_eq!(fleet.shards[0].pool.size, 4);
+        assert_eq!(fleet.total_size(), 4);
     }
 
     #[test]

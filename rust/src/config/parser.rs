@@ -2,9 +2,11 @@
 //!
 //! Supports what llsched config files use: `[section]` and
 //! `[section.sub]` headers, `key = value` pairs with string / integer /
-//! float / boolean / homogeneous-array values, `#` comments, and blank
-//! lines. Unsupported TOML (dates, inline tables, multi-line strings) is
-//! rejected with a line-numbered error rather than silently misparsed.
+//! float / boolean / array / inline-table (`{k = v, ...}`) values, `#`
+//! comments, and blank lines. Arrays of inline tables give the pool
+//! fleet its `pools = [{shape = "general", size = 8}, ...]` list
+//! syntax. Unsupported TOML (dates, multi-line strings) is rejected
+//! with a line-numbered error rather than silently misparsed.
 
 use crate::error::{Error, Result};
 
@@ -189,11 +191,37 @@ fn parse_value(s: &str, lineno: usize) -> Result<Value> {
         if inner.is_empty() {
             return Ok(Value::Arr(Vec::new()));
         }
-        let items: Result<Vec<Value>> = inner
-            .split(',')
+        let items: Result<Vec<Value>> = split_top_level(inner, lineno)?
+            .into_iter()
             .map(|it| parse_value(it.trim(), lineno))
             .collect();
         return Ok(Value::Arr(items?));
+    }
+    if s.starts_with('{') {
+        if !s.ends_with('}') {
+            return Err(err(lineno, "unterminated inline table"));
+        }
+        let inner = s[1..s.len() - 1].trim();
+        let mut pairs: Vec<(String, Value)> = Vec::new();
+        if inner.is_empty() {
+            return Ok(Value::Table(pairs));
+        }
+        for part in split_top_level(inner, lineno)? {
+            let part = part.trim();
+            let eq = part
+                .find('=')
+                .ok_or_else(|| err(lineno, "inline table entries are `key = value`"))?;
+            let key = part[..eq].trim().to_string();
+            if key.is_empty() {
+                return Err(err(lineno, "empty key in inline table"));
+            }
+            if pairs.iter().any(|(k, _)| *k == key) {
+                return Err(err(lineno, &format!("duplicate key {key:?} in inline table")));
+            }
+            let value = parse_value(part[eq + 1..].trim(), lineno)?;
+            pairs.push((key, value));
+        }
+        return Ok(Value::Table(pairs));
     }
     if let Ok(i) = s.replace('_', "").parse::<i64>() {
         return Ok(Value::Int(i));
@@ -202,6 +230,36 @@ fn parse_value(s: &str, lineno: usize) -> Result<Value> {
         return Ok(Value::Float(x));
     }
     Err(err(lineno, &format!("cannot parse value {s:?}")))
+}
+
+/// Split on commas at bracket/brace depth zero (outside strings), so
+/// arrays of inline tables — `[{a = 1, b = 2}, {a = 3}]` — split into
+/// whole elements rather than at every comma.
+fn split_top_level(s: &str, lineno: usize) -> Result<Vec<&str>> {
+    let mut parts = Vec::new();
+    let mut depth = 0i32;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' | '{' if !in_str => depth += 1,
+            ']' | '}' if !in_str => depth -= 1,
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+        if depth < 0 {
+            return Err(err(lineno, "unbalanced brackets"));
+        }
+    }
+    if depth != 0 || in_str {
+        return Err(err(lineno, "unbalanced brackets or string"));
+    }
+    parts.push(&s[start..]);
+    Ok(parts)
 }
 
 #[cfg(test)]
@@ -260,6 +318,40 @@ mod tests {
         assert!(parse("s = \"oops\n").is_err());
         assert!(parse("a = [1, 2\n").is_err());
         assert!(parse("a =\n").is_err());
+    }
+
+    #[test]
+    fn inline_tables_and_table_arrays() {
+        let v = parse(
+            "pools = [{shape = \"general\", size = 8, min = 2}, {shape = \"large\", size = 4}]\n",
+        )
+        .unwrap();
+        let Value::Arr(items) = v.get("pools").unwrap() else {
+            panic!("pools is an array");
+        };
+        assert_eq!(items.len(), 2, "commas inside braces do not split elements");
+        assert_eq!(items[0].get("shape").unwrap().as_str().unwrap(), "general");
+        assert_eq!(items[0].get("size").unwrap().as_int().unwrap(), 8);
+        assert_eq!(items[0].get("min").unwrap().as_int().unwrap(), 2);
+        assert_eq!(items[1].get("shape").unwrap().as_str().unwrap(), "large");
+        assert!(items[1].get("min").is_none());
+        // Bare inline tables and empty ones parse too.
+        let v = parse("t = {a = 1, s = \"x, y\"}\ne = {}\n").unwrap();
+        assert_eq!(v.get("t").unwrap().get("a").unwrap().as_int().unwrap(), 1);
+        assert_eq!(
+            v.get("t").unwrap().get("s").unwrap().as_str().unwrap(),
+            "x, y",
+            "commas inside strings do not split"
+        );
+        assert_eq!(v.get("e").unwrap(), &Value::Table(vec![]));
+    }
+
+    #[test]
+    fn malformed_inline_tables_rejected() {
+        assert!(parse("t = {a = 1\n").is_err(), "unterminated");
+        assert!(parse("t = {a}\n").is_err(), "missing `=`");
+        assert!(parse("t = {a = 1, a = 2}\n").is_err(), "duplicate key");
+        assert!(parse("t = [{a = 1}, {b = 2]\n").is_err(), "unbalanced braces");
     }
 
     #[test]

@@ -77,6 +77,7 @@ pub fn cell(nodes: u32, task: &TaskConfig, mode: Mode, run_idx: usize) -> RunCon
         pool_max: 0,
         pool_hysteresis: 0.25,
         preempt_overdue: false,
+        pools: Vec::new(),
     }
 }
 

@@ -10,7 +10,7 @@ use crate::metrics::contention::{per_class, pool_report, ClassReport, PoolReport
 use crate::metrics::overhead::OverheadPoint;
 use crate::metrics::timeline::UtilizationSeries;
 use crate::placement::Strategy;
-use crate::pool::PoolConfig;
+use crate::pool::{FleetConfig, PoolConfig, ShardConfig};
 use crate::scheduler::core::{SchedulerSim, SimOutcome};
 use crate::scheduler::costmodel::CostModel;
 use crate::scheduler::noise::NoiseModel;
@@ -88,7 +88,7 @@ pub fn run_cell(cell: &PaperCell) -> Result<CellResult> {
         .with_holds(cfg.holds)
         .with_aging(cfg.aging_policy())
         .with_walltime_error(WalltimeError::from_sigma(cfg.walltime_error))
-        .with_pool(cfg.pool_config())
+        .with_fleet(cfg.fleet_config())
         .with_preempt_overdue(cfg.preempt_overdue);
     let agg = aggregation::for_mode(cfg.mode);
     let job = agg.plan(&cell.label(), &cell.workload(), &cell.shape())?;
@@ -145,8 +145,9 @@ pub fn run_placement_sweep(
 }
 
 /// Knobs for one contention run: backfill plus the fairness / noise
-/// layer — top-K holds, queue aging, walltime-estimate error.
-#[derive(Debug, Clone, Copy)]
+/// layer — top-K holds, queue aging, walltime-estimate error — and the
+/// rapid-launch pool fleet.
+#[derive(Debug, Clone)]
 pub struct ContentionOpts {
     pub backfill: bool,
     /// Max simultaneous earliest-start holds (K; `1` = the original
@@ -156,9 +157,13 @@ pub struct ContentionOpts {
     pub aging: Option<AgingPolicy>,
     /// Walltime-estimate error model the ledger plans from.
     pub walltime_error: WalltimeError,
-    /// Rapid-launch node pool (disabled = the classic batch-only path,
-    /// bit-for-bit).
+    /// Legacy single rapid-launch pool (disabled = the classic
+    /// batch-only path, bit-for-bit). Ignored when `pools` is
+    /// non-empty.
     pub pool: PoolConfig,
+    /// Shape-sharded pool fleet: one shard per entry. Empty defers to
+    /// the legacy `pool` knob (mapped to a one-shard fleet).
+    pub pools: Vec<ShardConfig>,
     /// Preemptive backfill: kill overdue backfilled tasks when their
     /// node's hold comes due.
     pub preempt_overdue: bool,
@@ -176,9 +181,28 @@ impl ContentionOpts {
             aging: None,
             walltime_error: WalltimeError::None,
             pool: PoolConfig::disabled(),
+            pools: Vec::new(),
             preempt_overdue: false,
             seed,
         }
+    }
+
+    /// The fleet this run installs: the explicit shard list when
+    /// present, else the legacy pool knob as a one-shard fleet.
+    pub fn fleet_config(&self) -> FleetConfig {
+        FleetConfig::from_parts(&self.pools, self.pool)
+    }
+
+    /// Whether any rapid-launch pool participates (allocation-free —
+    /// the export any-passes call this per result).
+    pub fn fleet_enabled(&self) -> bool {
+        !self.pools.is_empty() || self.pool.enabled()
+    }
+
+    /// Whether this run shards the fleet (> 1 shard) — the v3 export
+    /// switch.
+    pub fn fleet_sharded(&self) -> bool {
+        self.pools.len() > 1
     }
 }
 
@@ -237,6 +261,8 @@ pub fn run_contention_with(
     opts: ContentionOpts,
 ) -> Result<ContentionResult> {
     let seed = opts.seed;
+    let fleet = opts.fleet_config();
+    fleet.validate().map_err(Error::Config)?;
     let cluster = Cluster::tx_green(mix.nodes);
     let total_cores = cluster.total_cores();
     let mut sim = SchedulerSim::new(
@@ -250,7 +276,7 @@ pub fn run_contention_with(
     .with_holds(opts.holds)
     .with_aging(opts.aging)
     .with_walltime_error(opts.walltime_error)
-    .with_pool(opts.pool)
+    .with_fleet(fleet)
     .with_preempt_overdue(opts.preempt_overdue);
     let mut q = EventQueue::new();
     let subs = mix.generate(seed);
@@ -375,22 +401,38 @@ const CONTENTION_SCHEMA_V2_EXTRA: [&str; 9] = [
     "overdue_preemptions",
 ];
 
+/// The v3 column extension: fleet sharding. Emitted only when some
+/// result actually ran a multi-shard fleet. Class rows carry the fleet
+/// aggregates in the v2 pool columns with an empty `shard` cell; each
+/// scenario additionally emits one `shard:<name>` row per shard whose
+/// v2 pool columns hold that shard's own launches/peak/grows/shrinks/
+/// latency/utilization.
+const CONTENTION_SCHEMA_V3_EXTRA: [&str; 3] = ["pool_shards", "pool_borrows", "shard"];
+
 /// Per-class contention series as CSV (one row per scenario × class),
 /// mirroring `fig1 --out`: the `contention --out DIR` data dump.
 /// Classic runs export the v1 schema exactly; any pool or preemptive-
 /// backfill use switches the whole document to v2 (v1 columns + the
-/// pool/preemption extension).
+/// pool/preemption extension); any multi-shard fleet switches it to v3
+/// (v2 columns + the shard extension and per-shard rows).
 pub fn contention_csv(results: &[ContentionResult]) -> Csv {
     let extended = results
         .iter()
-        .any(|r| r.opts.pool.enabled() || r.opts.preempt_overdue);
+        .any(|r| r.opts.fleet_enabled() || r.opts.preempt_overdue);
+    let sharded = results.iter().any(|r| r.opts.fleet_sharded());
     let mut header: Vec<&str> = CONTENTION_SCHEMA_V1.to_vec();
     if extended {
         header.extend(CONTENTION_SCHEMA_V2_EXTRA);
     }
+    if sharded {
+        header.extend(CONTENTION_SCHEMA_V3_EXTRA);
+    }
     let mut c = Csv::with_header(&header);
     for r in results {
-        for rep in &r.reports {
+        let fleet = r.opts.fleet_config();
+        // The v1 prefix shared by class rows and shard rows; `stats` is
+        // the ten class-dependent cells (class .. utilization).
+        let prefix = |stats: [String; 10]| -> Vec<String> {
             let mut row = vec![
                 r.mix_name.clone(),
                 r.nodes.to_string(),
@@ -398,6 +440,34 @@ pub fn contention_csv(results: &[ContentionResult]) -> Csv {
                 r.opts.holds.to_string(),
                 aging_label(r.opts.aging),
                 r.opts.walltime_error.to_string(),
+            ];
+            row.extend(stats);
+            row.push(format!("{:.3}", r.span));
+            row.push(r.backfills.to_string());
+            row.push(r.max_active_holds.to_string());
+            row
+        };
+        // The v2 pool extension; `cells` is (launches, peak, grows,
+        // shrinks, median latency, utilization) — fleet aggregates on
+        // class rows, the shard's own numbers on shard rows.
+        let pool_cols = |row: &mut Vec<String>, cells: (u64, usize, u64, u64, f64, f64)| {
+            row.push(fleet.total_size().to_string());
+            row.push(cells.0.to_string());
+            row.push(cells.1.to_string());
+            row.push(cells.2.to_string());
+            row.push(cells.3.to_string());
+            row.push(f6(cells.4));
+            row.push(f6(cells.5));
+            row.push(r.opts.preempt_overdue.to_string());
+            row.push(r.overdue_preemptions.to_string());
+        };
+        let shard_cols = |row: &mut Vec<String>, shard: &str| {
+            row.push(fleet.shards.len().to_string());
+            row.push(r.pool.as_ref().map(|p| p.borrows).unwrap_or(0).to_string());
+            row.push(shard.to_string());
+        };
+        for rep in &r.reports {
+            let mut row = prefix([
                 rep.class.to_string(),
                 rep.jobs.to_string(),
                 rep.tasks.to_string(),
@@ -408,34 +478,62 @@ pub fn contention_csv(results: &[ContentionResult]) -> Csv {
                 f6(rep.starvation_age),
                 format!("{:.3}", rep.core_seconds),
                 f6(rep.utilization),
-                format!("{:.3}", r.span),
-                r.backfills.to_string(),
-                r.max_active_holds.to_string(),
-            ];
+            ]);
             if extended {
-                row.push(r.opts.pool.size.to_string());
                 match &r.pool {
-                    Some(p) => {
-                        row.push(p.launches.to_string());
-                        row.push(p.peak_leased.to_string());
-                        row.push(p.grows.to_string());
-                        row.push(p.shrinks.to_string());
-                        row.push(f6(p.median_launch_latency));
-                        row.push(f6(p.utilization));
-                    }
-                    None => {
-                        row.push("0".into());
-                        row.push("0".into());
-                        row.push("0".into());
-                        row.push("0".into());
-                        row.push(String::new());
-                        row.push(String::new());
-                    }
+                    Some(p) => pool_cols(
+                        &mut row,
+                        (
+                            p.launches,
+                            p.peak_leased,
+                            p.grows,
+                            p.shrinks,
+                            p.median_launch_latency,
+                            p.utilization,
+                        ),
+                    ),
+                    None => pool_cols(&mut row, (0, 0, 0, 0, f64::NAN, f64::NAN)),
                 }
-                row.push(r.opts.preempt_overdue.to_string());
-                row.push(r.overdue_preemptions.to_string());
+            }
+            if sharded {
+                shard_cols(&mut row, "");
             }
             c.row(&row);
+        }
+        // Shard rows only for results that actually sharded, so the
+        // CSV and JSON views of one result always agree (a one-shard
+        // legacy result in a mixed v3 document gets the columns but no
+        // shard rows, matching its JSON which omits `pool.shards`).
+        if sharded && r.opts.fleet_sharded() {
+            if let Some(p) = &r.pool {
+                for sh in &p.shards {
+                    let mut row = prefix([
+                        format!("shard:{}", sh.name),
+                        "0".into(),
+                        sh.launches.to_string(),
+                        sh.completed.to_string(),
+                        f6(sh.median_launch_latency),
+                        f6(sh.p95_launch_latency),
+                        f6(f64::NAN),
+                        f6(f64::NAN),
+                        format!("{:.3}", sh.core_seconds),
+                        f6(sh.utilization),
+                    ]);
+                    pool_cols(
+                        &mut row,
+                        (
+                            sh.launches,
+                            sh.peak_leased,
+                            sh.grows,
+                            sh.shrinks,
+                            sh.median_launch_latency,
+                            sh.utilization,
+                        ),
+                    );
+                    shard_cols(&mut row, &sh.name);
+                    c.row(&row);
+                }
+            }
         }
     }
     c
@@ -481,18 +579,35 @@ pub fn contention_json(results: &[ContentionResult]) -> Json {
                 .set("overdue_preemptions", r.overdue_preemptions)
                 .set("unfinished", r.unfinished);
             if let Some(p) = &r.pool {
-                run = run.set(
-                    "pool",
-                    Json::obj()
-                        .set("size", r.opts.pool.size)
-                        .set("launches", p.launches)
-                        .set("peak_leased", p.peak_leased)
-                        .set("grows", p.grows)
-                        .set("shrinks", p.shrinks)
-                        .set("median_latency_s", p.median_launch_latency)
-                        .set("p95_latency_s", p.p95_launch_latency)
-                        .set("utilization", p.utilization),
-                );
+                let mut pool = Json::obj()
+                    .set("size", r.opts.fleet_config().total_size())
+                    .set("launches", p.launches)
+                    .set("peak_leased", p.peak_leased)
+                    .set("grows", p.grows)
+                    .set("shrinks", p.shrinks)
+                    .set("median_latency_s", p.median_launch_latency)
+                    .set("p95_latency_s", p.p95_launch_latency)
+                    .set("utilization", p.utilization);
+                if p.shards.len() > 1 {
+                    let shards: Vec<Json> = p
+                        .shards
+                        .iter()
+                        .map(|sh| {
+                            Json::obj()
+                                .set("name", sh.name.clone())
+                                .set("launches", sh.launches)
+                                .set("completed", sh.completed)
+                                .set("peak_leased", sh.peak_leased)
+                                .set("grows", sh.grows)
+                                .set("shrinks", sh.shrinks)
+                                .set("median_latency_s", sh.median_launch_latency)
+                                .set("p95_latency_s", sh.p95_launch_latency)
+                                .set("utilization", sh.utilization)
+                        })
+                        .collect();
+                    pool = pool.set("borrows", p.borrows).set("shards", Json::Arr(shards));
+                }
+                run = run.set("pool", pool);
             }
             run.set("classes", Json::Arr(classes))
         })
@@ -755,7 +870,7 @@ mod tests {
             walltime_error: WalltimeError::LogNormal { sigma: 0.3 },
             ..ContentionOpts::classic(true, 42)
         };
-        let a = run_contention_with(&mix, opts).unwrap();
+        let a = run_contention_with(&mix, opts.clone()).unwrap();
         let b = run_contention_with(&mix, opts).unwrap();
         let csv_a = contention_csv(std::slice::from_ref(&a));
         let csv_b = contention_csv(std::slice::from_ref(&b));
@@ -852,6 +967,69 @@ mod tests {
         let lines: Vec<&str> = both.as_str().lines().collect();
         assert!(lines[0].ends_with("overdue_preemptions"));
         assert!(lines[1].contains(",false,0"), "classic rows zero-fill the extension");
+    }
+
+    #[test]
+    fn sharded_fleet_contention_exports_v3_schema() {
+        // A two-shard fleet on the mixed-volley preset: the export
+        // switches to v3 (v2 columns + the shard extension) and emits
+        // one shard row per shard after the class rows.
+        let mix = ContentionMix::preset("burst_mixed", 16).unwrap();
+        let opts = ContentionOpts {
+            pools: vec![
+                ShardConfig::named("general", 4, 2, 10).unwrap(),
+                ShardConfig::named("large", 2, 1, 6).unwrap(),
+            ],
+            ..ContentionOpts::classic(true, 7)
+        };
+        let res = run_contention_with(&mix, opts).unwrap();
+        assert_eq!(res.unfinished, 0, "mixed burst drains");
+        let pool = res.pool.as_ref().expect("pool report");
+        assert_eq!(pool.shards.len(), 2);
+        let inter = &res.reports[0];
+        assert_eq!(
+            pool.launches, inter.tasks as u64,
+            "both volley families went through the fleet"
+        );
+        assert_eq!(
+            pool.shards[0].launches + pool.shards[1].launches,
+            pool.launches,
+            "shard launches partition the fleet's"
+        );
+        assert!(pool.shards.iter().all(|s| s.launches > 0), "both shards served work");
+        let csv = contention_csv(std::slice::from_ref(&res));
+        let lines: Vec<&str> = csv.as_str().lines().collect();
+        assert!(
+            lines[0].ends_with("overdue_preemptions,pool_shards,pool_borrows,shard"),
+            "v3 header extends v2: {}",
+            lines[0]
+        );
+        let header_cols = lines[0].split(',').count();
+        for line in &lines[1..] {
+            assert_eq!(line.split(',').count(), header_cols, "row width matches header");
+        }
+        // Two class rows + two shard rows.
+        assert_eq!(lines.len(), 5);
+        assert!(lines[3].contains("shard:general"), "{}", lines[3]);
+        assert!(lines[4].contains("shard:large"), "{}", lines[4]);
+        assert!(lines[3].ends_with(",general"));
+        assert!(lines[4].ends_with(",large"));
+        let json = contention_json(std::slice::from_ref(&res)).to_pretty();
+        for key in ["\"shards\": [", "\"name\": \"general\"", "\"borrows\":"] {
+            assert!(json.contains(key), "json missing {key}");
+        }
+        // A single-shard run keeps the v2 schema untouched (no shard
+        // columns), so PR 4 consumers never see a silent change.
+        let single = run_contention_with(
+            &ContentionMix::preset("burst", 16).unwrap(),
+            ContentionOpts {
+                pool: PoolConfig { size: 4, min: 2, max: 8, ..PoolConfig::sized(4) },
+                ..ContentionOpts::classic(true, 7)
+            },
+        )
+        .unwrap();
+        let csv = contention_csv(std::slice::from_ref(&single));
+        assert!(csv.as_str().lines().next().unwrap().ends_with("overdue_preemptions"));
     }
 
     #[test]

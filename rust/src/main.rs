@@ -23,7 +23,7 @@ use llsched::error::Result;
 use llsched::metrics::overhead::speedup;
 use llsched::metrics::report;
 use llsched::placement::Strategy;
-use llsched::pool::PoolConfig;
+use llsched::pool::{PoolConfig, ShardConfig};
 use llsched::scheduler::queue::AgingPolicy;
 use llsched::util::fmt::dur;
 use llsched::workload::contention::{ContentionMix, WalltimeError};
@@ -100,29 +100,35 @@ commands:
              [--compare] [--sweep] [--holds K] [--aging SLOPE]
              [--aging-cap CAP] [--walltime-error SIGMA] [--out DIR]
                             run an interactive-vs-batch contention mix
-                            (P: tiny|default|heavy) and report per-class
-                            launch latency + utilization; --compare runs
-                            backfill off vs on; --sweep runs every mix;
-                            --holds reserves for the top-K blocked
-                            whole-node jobs (default 4), --aging boosts
-                            priority by SLOPE points per second waited
-                            (0 = off, capped at CAP), --walltime-error
-                            plans backfill from log-normal noisy
-                            estimates; --pool-size K leases K nodes into
-                            the rapid-launch pool (0 = off) with
+                            (P: tiny|default|heavy|burst|burst_mixed)
+                            and report per-class launch latency +
+                            utilization; --compare runs backfill off vs
+                            on; --sweep runs every mix; --holds reserves
+                            for the top-K blocked whole-node jobs
+                            (default 4), --aging boosts priority by
+                            SLOPE points per second waited (0 = off,
+                            capped at CAP), --walltime-error plans
+                            backfill from log-normal noisy estimates;
+                            --pool-size K leases K nodes into the
+                            rapid-launch pool (0 = off) with
                             --pool-min/--pool-max/--pool-hysteresis
-                            elastic bounds; --preempt-overdue kills
-                            backfilled tasks that overstay their
+                            elastic bounds; --pools
+                            shape:size[:min[:max[:hyst]]],... runs a
+                            shape-sharded fleet instead (shapes:
+                            general|large|wide|short); --preempt-overdue
+                            kills backfilled tasks that overstay their
                             walltime once their hold is due;
                             --out writes per-class CSV + JSON
   pool [--preset P] [--nodes N] [--seed S] [--pool-size K]
        [--pool-min LO] [--pool-max HI] [--pool-hysteresis H]
-       [--preempt-overdue] [--compare] [--out DIR]
+       [--pools SPEC] [--preempt-overdue] [--compare] [--out DIR]
                             run a rapid-launch pool scenario (default
                             preset: burst — periodic 1000-task short-job
-                            volleys over a batch stream); --compare runs
-                            backfill-only vs pooled and reports the
-                            launch-latency speedup
+                            volleys over a batch stream; burst_mixed
+                            interleaves general and large-capacity
+                            volleys for the sharded fleet); --compare
+                            runs backfill-only vs pooled/fleet and
+                            reports the launch-latency speedup
   spot [--nodes N]          spot-job release-latency comparison
   artifacts                 verify AOT artifacts load and execute
 ";
@@ -330,6 +336,59 @@ fn pool_config_from(args: &Args, default_size: usize) -> Result<PoolConfig> {
     Ok(cfg)
 }
 
+/// Parse `--pools shape:size[:min[:max[:hysteresis]]],...` into fleet
+/// shards (named shapes: general, large, wide, short). Mutually
+/// exclusive with the legacy `--pool-size` knob.
+fn pools_from(args: &Args) -> Result<Vec<ShardConfig>> {
+    let Some(spec) = args.opt("pools") else {
+        return Ok(Vec::new());
+    };
+    for legacy in ["pool-size", "pool-min", "pool-max", "pool-hysteresis"] {
+        if args.opt(legacy).is_some() {
+            return Err(llsched::Error::Config(format!(
+                "--pools and the legacy --{legacy} knob are mutually exclusive \
+                 (set per-shard bounds inside the --pools spec)"
+            )));
+        }
+    }
+    let mut shards = Vec::new();
+    for item in spec.split(',').filter(|s| !s.trim().is_empty()) {
+        let parts: Vec<&str> = item.trim().split(':').collect();
+        if parts.len() < 2 || parts.len() > 5 {
+            return Err(llsched::Error::Config(format!(
+                "--pools entry {item:?} must be shape:size[:min[:max[:hysteresis]]]"
+            )));
+        }
+        let parse_n = |s: &str, what: &str| -> Result<usize> {
+            s.parse::<usize>().map_err(|_| {
+                llsched::Error::Config(format!("--pools {item:?}: bad {what} {s:?}"))
+            })
+        };
+        let size = parse_n(parts[1], "size")?;
+        let min = parts.get(2).map(|s| parse_n(s, "min")).transpose()?.unwrap_or(0);
+        let max = parts.get(3).map(|s| parse_n(s, "max")).transpose()?.unwrap_or(0);
+        let mut shard = ShardConfig::named(parts[0], size, min, max).ok_or_else(|| {
+            llsched::Error::Config(format!(
+                "--pools: unknown shape {:?} (known: general, large, wide, short)",
+                parts[0]
+            ))
+        })?;
+        if let Some(h) = parts.get(4) {
+            shard.pool.hysteresis = h.parse::<f64>().map_err(|_| {
+                llsched::Error::Config(format!("--pools {item:?}: bad hysteresis {h:?}"))
+            })?;
+        }
+        shards.push(shard);
+    }
+    if shards.is_empty() {
+        return Err(llsched::Error::Config("--pools needs at least one shard".into()));
+    }
+    llsched::pool::FleetConfig { shards: shards.clone() }
+        .validate()
+        .map_err(llsched::Error::Config)?;
+    Ok(shards)
+}
+
 fn cmd_contention(args: &Args) -> Result<()> {
     args.expect_known(&[
         "preset",
@@ -346,6 +405,7 @@ fn cmd_contention(args: &Args) -> Result<()> {
         "pool-min",
         "pool-max",
         "pool-hysteresis",
+        "pools",
         "preempt-overdue",
         "out",
     ])?;
@@ -356,6 +416,7 @@ fn cmd_contention(args: &Args) -> Result<()> {
     let aging_cap: i32 = args.opt_parse("aging-cap", 1000)?;
     let sigma: f64 = args.opt_parse("walltime-error", 0.0)?;
     let pool = pool_config_from(args, 0)?;
+    let pools = pools_from(args)?;
     let preempt_overdue = args.flag("preempt-overdue");
     // Mirror the config-file validation: reject values that would
     // otherwise be silently clamped into a different policy.
@@ -381,6 +442,7 @@ fn cmd_contention(args: &Args) -> Result<()> {
         aging,
         walltime_error: WalltimeError::from_sigma(sigma),
         pool,
+        pools: pools.clone(),
         preempt_overdue,
         seed,
     };
@@ -448,6 +510,7 @@ fn cmd_pool(args: &Args) -> Result<()> {
         "pool-min",
         "pool-max",
         "pool-hysteresis",
+        "pools",
         "preempt-overdue",
         "compare",
         "out",
@@ -456,6 +519,7 @@ fn cmd_pool(args: &Args) -> Result<()> {
     let seed: u64 = args.opt_parse("seed", 7)?;
     let preset = args.opt("preset").unwrap_or("burst");
     let mix = ContentionMix::preset(preset, nodes)?;
+    let pools = pools_from(args)?;
     // Elastic defaults scaled to the cluster: start at a quarter, never
     // below an eighth, grow up to three quarters of the machine. An
     // explicitly passed --pool-max caps the *default* size too; only an
@@ -480,16 +544,21 @@ fn cmd_pool(args: &Args) -> Result<()> {
     }
     pool.validate().map_err(llsched::Error::Config)?;
     let preempt_overdue = args.flag("preempt-overdue");
-    let opts = |pool: PoolConfig| ContentionOpts {
+    let opts = |pool: PoolConfig, pools: Vec<ShardConfig>| ContentionOpts {
         pool,
+        pools,
         preempt_overdue,
         ..ContentionOpts::classic(true, seed)
     };
     let mut results: Vec<ContentionResult> = Vec::new();
     if args.flag("compare") {
-        let baseline = run_contention_with(&mix, opts(PoolConfig::disabled()))?;
+        let baseline = run_contention_with(&mix, opts(PoolConfig::disabled(), Vec::new()))?;
         print_contention(&baseline);
-        let pooled = run_contention_with(&mix, opts(pool))?;
+        let pooled = if pools.is_empty() {
+            run_contention_with(&mix, opts(pool, Vec::new()))?
+        } else {
+            run_contention_with(&mix, opts(PoolConfig::disabled(), pools))?
+        };
         print_contention(&pooled);
         let base_lat = baseline.reports[0].median_launch_latency;
         let pool_lat = pooled.reports[0].median_launch_latency;
@@ -504,7 +573,11 @@ fn cmd_pool(args: &Args) -> Result<()> {
         results.push(baseline);
         results.push(pooled);
     } else {
-        let res = run_contention_with(&mix, opts(pool))?;
+        let res = if pools.is_empty() {
+            run_contention_with(&mix, opts(pool, Vec::new()))?
+        } else {
+            run_contention_with(&mix, opts(PoolConfig::disabled(), pools))?
+        };
         print_contention(&res);
         results.push(res);
     }
@@ -573,6 +646,21 @@ fn print_contention(res: &ContentionResult) {
             dur(p.median_launch_latency),
             p.utilization * 100.0,
         );
+        if p.shards.len() > 1 {
+            println!("  fleet: {} shards, {} cross-shard borrows", p.shards.len(), p.borrows);
+            for sh in &p.shards {
+                println!(
+                    "    shard {:<8} {} launches  peak {} leased  +{} / -{}  median lat {}  p95 {}",
+                    sh.name,
+                    sh.launches,
+                    sh.peak_leased,
+                    sh.grows,
+                    sh.shrinks,
+                    dur(sh.median_launch_latency),
+                    dur(sh.p95_launch_latency),
+                );
+            }
+        }
     }
     if res.opts.preempt_overdue {
         println!("  preemptive backfill: {} overdue tasks killed", res.overdue_preemptions);

@@ -8,7 +8,7 @@
 //! a share of cluster capacity over the run's span.
 
 use crate::scheduler::accounting::TaskRecord;
-use crate::scheduler::core::PoolOutcome;
+use crate::scheduler::core::{PoolOutcome, ShardOutcome};
 use crate::sim::Time;
 use crate::util::stats;
 use crate::workload::contention::{JobClass, JOB_CLASSES};
@@ -134,17 +134,22 @@ pub fn per_class(
 }
 
 /// Pool-side summary of one contention run: how the rapid-launch
-/// subsystem performed next to the per-class batch metrics.
+/// subsystem performed next to the per-class batch metrics. Scalar
+/// fields aggregate over the fleet; [`Self::shards`] carries the
+/// per-shard split (one entry per shard, in shard-config order).
 #[derive(Debug, Clone)]
 pub struct PoolReport {
-    /// Tasks launched through the pool's node-based dispatch path.
+    /// Tasks launched through the fleet's node-based dispatch path.
     pub launches: u64,
     /// Nodes taken from batch (leases + drains) across all resizes.
     pub grows: u64,
     /// Nodes returned to batch across all resizes.
     pub shrinks: u64,
-    /// Peak simultaneous lease count.
+    /// True fleet-wide peak of simultaneous leases (shards peaking at
+    /// different times do not add up).
     pub peak_leased: usize,
+    /// Free nodes transferred between sibling shards by the rebalancer.
+    pub borrows: u64,
     /// Median launch latency of pooled tasks (start − submit), seconds.
     pub median_launch_latency: Time,
     /// 95th percentile pooled launch latency, seconds.
@@ -152,21 +157,41 @@ pub struct PoolReport {
     /// Core-seconds delivered by pooled tasks as a share of cluster
     /// capacity over the run span.
     pub utilization: f64,
+    /// Per-shard reports (the v3 export's `shard:` rows).
+    pub shards: Vec<ShardReport>,
 }
 
-/// Compute the pool report for one run: joins the pool's launch log
-/// against the task records (records are dense by task id). `span` is
-/// the same first-submit → last-cleanup window [`per_class`] returns,
-/// so pool utilization is directly comparable to the class shares.
-pub fn pool_report(
-    records: &[TaskRecord],
-    pool: &PoolOutcome,
-    total_cores: u64,
-    span: Time,
-) -> PoolReport {
+/// One shard's slice of a [`PoolReport`].
+#[derive(Debug, Clone)]
+pub struct ShardReport {
+    /// Shard name from the fleet config.
+    pub name: String,
+    /// Tasks launched through this shard.
+    pub launches: u64,
+    /// Launched tasks that reached DONE.
+    pub completed: usize,
+    /// Nodes this shard took from batch across all resizes.
+    pub grows: u64,
+    /// Nodes this shard returned to batch across all resizes.
+    pub shrinks: u64,
+    /// Peak simultaneous lease count of this shard.
+    pub peak_leased: usize,
+    /// Median launch latency of this shard's tasks, seconds.
+    pub median_launch_latency: Time,
+    /// 95th percentile launch latency of this shard's tasks, seconds.
+    pub p95_launch_latency: Time,
+    /// Core-seconds this shard's tasks delivered.
+    pub core_seconds: f64,
+    /// Those core-seconds as a share of cluster capacity over the span.
+    pub utilization: f64,
+}
+
+/// Latency/throughput join of one launch log against the task records.
+fn join_launches(records: &[TaskRecord], launched: &[u64]) -> (Vec<Time>, f64, usize) {
     let mut latencies = Vec::new();
     let mut core_seconds = 0.0;
-    for &tid in &pool.launched_tasks {
+    let mut completed = 0usize;
+    for &tid in launched {
         let Some(r) = records.get(tid as usize) else {
             continue;
         };
@@ -176,13 +201,58 @@ pub fn pool_report(
                 core_seconds += r.cores as f64 * (end - start).max(0.0);
             }
         }
+        if r.cleanup_t.is_some() {
+            completed += 1;
+        }
     }
+    (latencies, core_seconds, completed)
+}
+
+/// Compute one shard's report.
+fn shard_report(
+    records: &[TaskRecord],
+    shard: &ShardOutcome,
+    total_cores: u64,
+    span: Time,
+) -> ShardReport {
+    let (latencies, core_seconds, completed) = join_launches(records, &shard.launched_tasks);
+    let capacity = total_cores as f64 * span;
+    ShardReport {
+        name: shard.name.clone(),
+        launches: shard.launches,
+        completed,
+        grows: shard.grows,
+        shrinks: shard.shrinks,
+        peak_leased: shard.peak_leased,
+        median_launch_latency: stats::median(&latencies),
+        p95_launch_latency: stats::percentile(&latencies, 95.0),
+        core_seconds,
+        utilization: if capacity > 0.0 {
+            core_seconds / capacity
+        } else {
+            0.0
+        },
+    }
+}
+
+/// Compute the pool report for one run: joins the fleet's launch log
+/// against the task records (records are dense by task id). `span` is
+/// the same first-submit → last-cleanup window [`per_class`] returns,
+/// so pool utilization is directly comparable to the class shares.
+pub fn pool_report(
+    records: &[TaskRecord],
+    pool: &PoolOutcome,
+    total_cores: u64,
+    span: Time,
+) -> PoolReport {
+    let (latencies, core_seconds, _) = join_launches(records, &pool.launched_tasks);
     let capacity = total_cores as f64 * span;
     PoolReport {
         launches: pool.launches,
         grows: pool.grows,
         shrinks: pool.shrinks,
         peak_leased: pool.peak_leased,
+        borrows: pool.borrows,
         median_launch_latency: stats::median(&latencies),
         p95_launch_latency: stats::percentile(&latencies, 95.0),
         utilization: if capacity > 0.0 {
@@ -190,6 +260,11 @@ pub fn pool_report(
         } else {
             0.0
         },
+        shards: pool
+            .shards
+            .iter()
+            .map(|s| shard_report(records, s, total_cores, span))
+            .collect(),
     }
 }
 
@@ -277,6 +352,8 @@ mod tests {
             shrinks: 1,
             peak_leased: 2,
             final_leased: 1,
+            borrows: 0,
+            shards: vec![],
             invariant_violated: false,
         };
         let r = pool_report(&records, &pool, 128, 10.0);
@@ -286,9 +363,65 @@ mod tests {
         assert_eq!(r.peak_leased, 2);
         assert!((r.median_launch_latency - 2.0).abs() < 1e-9, "median of 1 and 3");
         assert!((r.utilization - 256.0 / 1280.0).abs() < 1e-9);
+        assert!(r.shards.is_empty());
         // Zero-span runs stay safe.
         let empty = pool_report(&records, &pool, 128, 0.0);
         assert_eq!(empty.utilization, 0.0);
+    }
+
+    #[test]
+    fn shard_reports_split_the_fleet_join() {
+        let records = vec![
+            rec(0, 0.0, 1.0, 3.0, 64),  // general: latency 1
+            rec(0, 0.0, 3.0, 5.0, 64),  // general: latency 3
+            rec(1, 2.0, 7.0, 17.0, 64), // large: latency 5
+        ];
+        let pool = PoolOutcome {
+            launches: 3,
+            launched_tasks: vec![0, 1, 2],
+            grows: 2,
+            shrinks: 1,
+            peak_leased: 3,
+            final_leased: 2,
+            borrows: 1,
+            shards: vec![
+                ShardOutcome {
+                    name: "general".into(),
+                    launches: 2,
+                    launched_tasks: vec![0, 1],
+                    grows: 1,
+                    shrinks: 1,
+                    peak_leased: 2,
+                    final_leased: 1,
+                },
+                ShardOutcome {
+                    name: "large".into(),
+                    launches: 1,
+                    launched_tasks: vec![2],
+                    grows: 1,
+                    shrinks: 0,
+                    peak_leased: 1,
+                    final_leased: 1,
+                },
+            ],
+            invariant_violated: false,
+        };
+        let r = pool_report(&records, &pool, 128, 20.0);
+        assert_eq!(r.borrows, 1);
+        assert_eq!(r.shards.len(), 2);
+        let g = &r.shards[0];
+        assert_eq!(g.name, "general");
+        assert_eq!(g.launches, 2);
+        assert_eq!(g.completed, 2);
+        assert!((g.median_launch_latency - 2.0).abs() < 1e-9);
+        assert!((g.core_seconds - 2.0 * 2.0 * 64.0).abs() < 1e-9);
+        let l = &r.shards[1];
+        assert_eq!(l.launches, 1);
+        assert!((l.median_launch_latency - 5.0).abs() < 1e-9);
+        assert!((l.core_seconds - 640.0).abs() < 1e-9);
+        assert!((l.utilization - 640.0 / (128.0 * 20.0)).abs() < 1e-9);
+        // Aggregate latency covers both shards' tasks.
+        assert!((r.median_launch_latency - 3.0).abs() < 1e-9, "median of 1, 3, 5");
     }
 
     #[test]

@@ -1,0 +1,638 @@
+//! The shape-sharded pool fleet: several rapid-launch pools, each keyed
+//! by a [`JobShape`], sharing one cluster under a single conservation
+//! invariant.
+//!
+//! PR 4's single pool serves one undifferentiated short-job stream; on
+//! a real mixed partition (CPU-core launches next to GPU/exclusive
+//! launches — "Best of Both Worlds", arXiv:2008.02223) that lets one
+//! shape starve the other behind its FIFO. [`PoolFleet`] holds one
+//! [`Shard`] per shape — each with its own [`NodePool`],
+//! [`NodeDispatcher`], [`PoolManager`] and pending queue — and adds the
+//! fleet-level mechanics the shards cannot provide alone:
+//!
+//! * **routing** — [`PoolFleet::route`] sends a task to the unique
+//!   shard whose shape matches (shapes are validated pairwise-disjoint
+//!   by [`FleetConfig::validate`], so first-match is the only match);
+//! * **rebalancing** — a growing shard first *borrows* free nodes from
+//!   sibling shards ([`PoolFleet::borrow_into`]) before it leases idle
+//!   batch nodes or drains busy ones, so a volley in one shape class
+//!   reuses capacity another class just finished with instead of
+//!   raiding batch;
+//! * **drain forecasting** — each shard tracks when its busy leases are
+//!   expected to free ([`PoolFleet::earliest_release_estimate`]), which
+//!   backfill hold planning borrows when every batch candidate node is
+//!   pool-fenced;
+//! * **conservation** — [`PoolFleet::check_conservation`]: every node
+//!   is in exactly one shard or batch-owned, never two shards at once.
+
+use crate::cluster::NodeId;
+use crate::pool::node_pool::NodePool;
+use crate::pool::shape::JobShape;
+use crate::pool::{NodeDispatcher, PoolConfig, PoolManager, Resize};
+use crate::scheduler::job::TaskId;
+use crate::sim::Time;
+use std::collections::VecDeque;
+
+/// Dense shard index inside one fleet (carried by `Op::Pool*` server
+/// operations as a `u32`).
+pub type ShardId = usize;
+
+/// Configuration of one shard: a name (for exports and errors), the
+/// shape it serves, and the elastic pool knobs it runs under.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardConfig {
+    pub name: String,
+    pub shape: JobShape,
+    pub pool: PoolConfig,
+}
+
+impl ShardConfig {
+    /// A shard from a named shape with explicit size bounds.
+    pub fn named(name: &str, size: usize, min: usize, max: usize) -> Option<ShardConfig> {
+        let shape = JobShape::named(name)?;
+        Some(ShardConfig {
+            name: name.to_string(),
+            shape,
+            pool: PoolConfig {
+                size,
+                min,
+                max,
+                short_threshold: shape.max_walltime,
+                ..PoolConfig::disabled()
+            },
+        })
+    }
+}
+
+/// The fleet configuration: an ordered list of shard configs. Empty
+/// means the subsystem is disabled entirely.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FleetConfig {
+    pub shards: Vec<ShardConfig>,
+}
+
+impl FleetConfig {
+    /// The disabled fleet.
+    pub fn disabled() -> FleetConfig {
+        FleetConfig { shards: Vec::new() }
+    }
+
+    /// The backward-compatible mapping from the legacy `pool_size` keys:
+    /// one shard named `pool` whose shape is the old short-threshold
+    /// classifier. A disabled [`PoolConfig`] maps to the disabled fleet.
+    pub fn single(cfg: PoolConfig) -> FleetConfig {
+        if !cfg.enabled() {
+            return FleetConfig::disabled();
+        }
+        FleetConfig {
+            shards: vec![ShardConfig {
+                name: "pool".into(),
+                shape: JobShape::up_to(cfg.short_threshold),
+                pool: cfg,
+            }],
+        }
+    }
+
+    /// The shared explicit-list-else-legacy precedence rule (one source
+    /// of truth for config files and the CLI): a non-empty shard list
+    /// wins; otherwise the legacy single-pool knob maps via
+    /// [`Self::single`].
+    pub fn from_parts(pools: &[ShardConfig], legacy: PoolConfig) -> FleetConfig {
+        if !pools.is_empty() {
+            FleetConfig { shards: pools.to_vec() }
+        } else {
+            FleetConfig::single(legacy)
+        }
+    }
+
+    /// Whether any shard participates.
+    pub fn enabled(&self) -> bool {
+        !self.shards.is_empty()
+    }
+
+    /// Sum of initial shard sizes (the `pool_size` export column).
+    pub fn total_size(&self) -> usize {
+        self.shards.iter().map(|s| s.pool.size).sum()
+    }
+
+    /// Validate every shard and — the bug guard — reject overlapping
+    /// shard shapes: two shards claiming the same job would make
+    /// routing depend on declaration order, which is exactly the kind
+    /// of silent misconfiguration that strands one workload class.
+    pub fn validate(&self) -> std::result::Result<(), String> {
+        for s in &self.shards {
+            if s.pool.size == 0 {
+                return Err(format!("shard {:?} has size 0 (drop it instead)", s.name));
+            }
+            s.shape
+                .validate()
+                .map_err(|e| format!("shard {:?}: {e}", s.name))?;
+            s.pool
+                .validate()
+                .map_err(|e| format!("shard {:?}: {e}", s.name))?;
+        }
+        for (i, a) in self.shards.iter().enumerate() {
+            for b in &self.shards[i + 1..] {
+                if a.name == b.name {
+                    return Err(format!("duplicate shard name {:?}", a.name));
+                }
+                if a.shape.overlaps(&b.shape) {
+                    return Err(format!(
+                        "shards {:?} ({}) and {:?} ({}) claim overlapping job shapes; \
+                         shard shapes must be disjoint so routing is unambiguous",
+                        a.name, a.shape, b.name, b.shape
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One live shard: its own membership table, dispatcher, controller and
+/// FIFO of tasks waiting for a free leased node.
+#[derive(Debug)]
+pub struct Shard {
+    pub name: String,
+    pub shape: JobShape,
+    pub cfg: PoolConfig,
+    pub nodes: NodePool,
+    pub dispatcher: NodeDispatcher,
+    pub manager: PoolManager,
+    /// FIFO of pool-routed tasks waiting for a free leased node.
+    pub pending: VecDeque<TaskId>,
+    /// Tasks launched through this shard, in launch order.
+    pub launched: Vec<TaskId>,
+    /// The last grow attempt found nothing to take (no sibling-free
+    /// node, no batch node); cleared when a release could have produced
+    /// a candidate. Gates the starving-shard cooldown bypass.
+    pub grow_blocked: bool,
+    /// Busy leases and when each is expected to free (launch walltime
+    /// estimate) — the shard's drain forecast.
+    busy_until: Vec<(NodeId, Time)>,
+}
+
+impl Shard {
+    /// Nodes this shard owns (leased + draining).
+    pub fn owned(&self) -> usize {
+        self.nodes.n_leased() + self.nodes.n_draining()
+    }
+
+    /// The manager's resize decision against the shard's own pressure.
+    pub fn decision(&self) -> Resize {
+        self.manager.decide(
+            self.pending.len(),
+            self.nodes.n_free(),
+            self.nodes.n_leased(),
+            self.nodes.n_draining(),
+        )
+    }
+}
+
+/// The shard registry plus fleet-level accounting.
+#[derive(Debug)]
+pub struct PoolFleet {
+    pub shards: Vec<Shard>,
+    /// Node → core capacity (from the placement index), for the
+    /// capacity-class side of shape matching.
+    capacity: Vec<u32>,
+    /// Tasks launched through any shard, in fleet-wide launch order.
+    pub launched: Vec<TaskId>,
+    /// Cross-shard transfers performed by the rebalancer.
+    borrows: u64,
+    /// True fleet-wide high-water mark of simultaneous leases
+    /// (refreshed by [`Self::note_peak`] after every lease-changing
+    /// step; NOT the sum of per-shard peaks, which can overstate when
+    /// shards peak at different times).
+    peak_leased: usize,
+    /// Sticky invariant flag (set by the scheduler glue on any refused
+    /// transition or fence breach).
+    pub violated: bool,
+}
+
+impl PoolFleet {
+    /// Build the fleet over a cluster of `capacity.len()` nodes. Shard
+    /// bounds are clamped to the cluster size, like the single pool's
+    /// were.
+    pub fn new(capacity: Vec<u32>, cfg: &FleetConfig) -> PoolFleet {
+        let n = capacity.len();
+        let shards = cfg
+            .shards
+            .iter()
+            .map(|sc| {
+                let max = sc.pool.effective_max().min(n);
+                let min = sc.pool.effective_min().min(max);
+                Shard {
+                    name: sc.name.clone(),
+                    shape: sc.shape,
+                    cfg: sc.pool,
+                    nodes: NodePool::new(n),
+                    dispatcher: NodeDispatcher::new(),
+                    manager: PoolManager::new(min, max, sc.pool.hysteresis),
+                    pending: VecDeque::new(),
+                    launched: Vec::new(),
+                    grow_blocked: false,
+                    busy_until: Vec::new(),
+                }
+            })
+            .collect();
+        PoolFleet {
+            shards,
+            capacity,
+            launched: Vec::new(),
+            borrows: 0,
+            peak_leased: 0,
+            violated: false,
+        }
+    }
+
+    /// Refresh the fleet-wide lease high-water mark. The scheduler glue
+    /// calls this after every step that can add leases (bootstrap,
+    /// resize, drain promotion); borrows are net-zero and need no call.
+    pub fn note_peak(&mut self) {
+        let cur: usize = self.shards.iter().map(|s| s.nodes.n_leased()).sum();
+        if cur > self.peak_leased {
+            self.peak_leased = cur;
+        }
+    }
+
+    /// The fleet-wide simultaneous-lease peak.
+    pub fn peak_leased(&self) -> usize {
+        self.peak_leased
+    }
+
+    /// Number of nodes the fleet spans.
+    pub fn n_nodes(&self) -> usize {
+        self.capacity.len()
+    }
+
+    /// Core capacity of one node.
+    pub fn capacity(&self, node: NodeId) -> u32 {
+        self.capacity[node as usize]
+    }
+
+    /// The shard a task of this width and walltime estimate routes to.
+    /// Shapes are disjoint by validation, so the first match is the
+    /// only match.
+    pub fn route(&self, lanes: u32, est_walltime: Time) -> Option<ShardId> {
+        self.shards
+            .iter()
+            .position(|s| s.shape.matches(lanes, est_walltime))
+    }
+
+    /// Whether any shard owns `node` — the union fence every batch
+    /// placement, backfill and hold query applies.
+    pub fn in_pool(&self, node: NodeId) -> bool {
+        self.shards.iter().any(|s| s.nodes.in_pool(node))
+    }
+
+    /// The shard owning `node`, if any.
+    pub fn owner(&self, node: NodeId) -> Option<ShardId> {
+        self.shards.iter().position(|s| s.nodes.in_pool(node))
+    }
+
+    /// Whether any node is pool-owned at all (cheap fence-active check).
+    pub fn any_pooled(&self) -> bool {
+        self.shards.iter().any(|s| s.nodes.any_pooled())
+    }
+
+    /// Cross-shard transfers performed so far.
+    pub fn borrows(&self) -> u64 {
+        self.borrows
+    }
+
+    /// Record a launch: per-shard and fleet-wide launch logs plus the
+    /// shard's drain-forecast entry.
+    pub fn note_launch(&mut self, sid: ShardId, node: NodeId, est_end: Time, task: TaskId) {
+        let sh = &mut self.shards[sid];
+        sh.launched.push(task);
+        sh.busy_until.push((node, est_end));
+        self.launched.push(task);
+    }
+
+    /// Record a release: drop the drain-forecast entry.
+    pub fn note_release(&mut self, sid: ShardId, node: NodeId) {
+        self.shards[sid].busy_until.retain(|&(n, _)| n != node);
+    }
+
+    /// The rebalancer's first grow source: transfer one free node from
+    /// a sibling shard into `into`. A sibling donates only when it has
+    /// no backlog of its own, a free node that fits the receiver's
+    /// capacity class and passes `allow` (the scheduler fences out
+    /// nodes carrying reservation holds — a planted forecast hold must
+    /// not be whisked to another shard), and stays at or above its
+    /// floor afterwards — otherwise the donation would just bounce back
+    /// on the donor's next resize.
+    pub fn borrow_into(
+        &mut self,
+        into: ShardId,
+        allow: &dyn Fn(NodeId) -> bool,
+    ) -> Option<NodeId> {
+        let shape = self.shards[into].shape;
+        let mut pick: Option<(ShardId, NodeId)> = None;
+        for (did, donor) in self.shards.iter().enumerate() {
+            if did == into || !donor.pending.is_empty() || donor.owned() <= donor.manager.min {
+                continue;
+            }
+            if let Some(&n) = donor
+                .nodes
+                .free_nodes()
+                .iter()
+                .rev()
+                .find(|&&n| shape.node_fits(self.capacity[n as usize]) && allow(n))
+            {
+                pick = Some((did, n));
+                break;
+            }
+        }
+        let (did, node) = pick?;
+        if !self.shards[did].nodes.return_node(node) {
+            self.violated = true;
+            return None;
+        }
+        if !self.shards[into].nodes.lease(node) {
+            self.violated = true;
+            return None;
+        }
+        self.borrows += 1;
+        Some(node)
+    }
+
+    /// The fleet's drain forecast: the pooled node expected to return
+    /// to batch soonest, and when. Only shards that *can* actually give
+    /// a node back are considered: no backlog of their own (a
+    /// backlogged shard keeps its nodes) and above their `min` floor
+    /// (a shard pinned at its floor never shrinks, so forecasting its
+    /// nodes would plant a permanently-overdue hold). A qualifying
+    /// shard with an idle lease could shrink it on its next resize pass
+    /// (estimate: now), otherwise its earliest-ending busy lease bounds
+    /// the release. `None` when no shard qualifies — the hold is
+    /// skipped, exactly the pre-fleet behaviour.
+    pub fn earliest_release_estimate(&self, now: Time) -> Option<(NodeId, Time)> {
+        let mut best: Option<(NodeId, Time)> = None;
+        for sh in &self.shards {
+            if !sh.pending.is_empty() || sh.owned() <= sh.manager.min {
+                continue;
+            }
+            let cand = if sh.nodes.n_free() > 0 {
+                sh.nodes.free_nodes().last().map(|&n| (n, now))
+            } else {
+                sh.busy_until
+                    .iter()
+                    .min_by(|a, b| a.1.partial_cmp(&b.1).expect("no NaN estimates"))
+                    .map(|&(n, t)| (n, t.max(now)))
+            };
+            if let Some((n, t)) = cand {
+                let better = best.map(|(_, bt)| t < bt).unwrap_or(true);
+                if better {
+                    best = Some((n, t));
+                }
+            }
+        }
+        best
+    }
+
+    /// The fleet-wide conservation invariant: every shard's own
+    /// bookkeeping is consistent, and no node is owned by two shards at
+    /// once (so each node is in exactly one shard or batch).
+    pub fn check_conservation(&self) -> std::result::Result<(), String> {
+        let mut owner: Vec<Option<usize>> = vec![None; self.capacity.len()];
+        for (sid, sh) in self.shards.iter().enumerate() {
+            sh.nodes
+                .check_conservation()
+                .map_err(|e| format!("shard {:?}: {e}", sh.name))?;
+            for n in 0..self.capacity.len() as NodeId {
+                if sh.nodes.in_pool(n) {
+                    if let Some(prev) = owner[n as usize] {
+                        return Err(format!(
+                            "node {n} owned by shards {:?} and {:?} at once",
+                            self.shards[prev].name, sh.name
+                        ));
+                    }
+                    owner[n as usize] = Some(sid);
+                }
+            }
+            for &(n, _) in &sh.busy_until {
+                if !sh.nodes.is_leased(n) {
+                    return Err(format!(
+                        "shard {:?} forecasts busy node {n} it does not lease",
+                        sh.name
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_shard_cfg() -> FleetConfig {
+        FleetConfig {
+            shards: vec![
+                ShardConfig::named("general", 2, 1, 4).unwrap(),
+                ShardConfig::named("large", 2, 1, 4).unwrap(),
+            ],
+        }
+    }
+
+    fn fleet(n: usize, cfg: &FleetConfig) -> PoolFleet {
+        PoolFleet::new(vec![64; n], cfg)
+    }
+
+    #[test]
+    fn single_mapping_reproduces_the_legacy_classifier() {
+        let legacy = PoolConfig { size: 4, min: 2, max: 8, ..PoolConfig::disabled() };
+        let f = FleetConfig::single(legacy);
+        assert_eq!(f.shards.len(), 1);
+        assert_eq!(f.shards[0].pool, legacy);
+        assert_eq!(f.shards[0].shape, JobShape::up_to(legacy.short_threshold));
+        assert_eq!(f.total_size(), 4);
+        assert!(f.validate().is_ok());
+        assert!(!FleetConfig::single(PoolConfig::disabled()).enabled());
+    }
+
+    #[test]
+    fn overlapping_shard_shapes_are_rejected() {
+        // The satellite bug guard: nothing used to stop two shards from
+        // claiming the same job.
+        let cfg = FleetConfig {
+            shards: vec![
+                ShardConfig::named("general", 2, 1, 4).unwrap(),
+                ShardConfig {
+                    name: "also-general".into(),
+                    shape: JobShape::named("general").unwrap(),
+                    pool: PoolConfig { size: 2, ..PoolConfig::sized(2) },
+                },
+            ],
+        };
+        let err = cfg.validate().unwrap_err();
+        assert!(err.contains("overlap"), "{err}");
+        // Disjoint shapes pass; duplicate names and zero sizes fail.
+        assert!(two_shard_cfg().validate().is_ok());
+        let mut dup = two_shard_cfg();
+        dup.shards[1].name = "general".into();
+        assert!(dup.validate().unwrap_err().contains("duplicate"));
+        let mut zero = two_shard_cfg();
+        zero.shards[0].pool.size = 0;
+        assert!(zero.validate().unwrap_err().contains("size 0"));
+    }
+
+    #[test]
+    fn routing_is_shape_keyed_and_unambiguous() {
+        let f = fleet(8, &two_shard_cfg());
+        assert_eq!(f.route(64, 0.5), Some(0), "rapid narrow job → general");
+        assert_eq!(f.route(64, 45.0), Some(1), "heavy short job → large");
+        assert_eq!(f.route(64, 120.0), None, "too long for any shard");
+        assert_eq!(f.route(64, 2.0), Some(0), "boundary belongs to general");
+    }
+
+    #[test]
+    fn borrowing_prefers_idle_siblings_and_respects_floors() {
+        let mut f = fleet(8, &two_shard_cfg());
+        // Shard 1 owns three free nodes (floor 1); shard 0 owns none.
+        for n in [0, 1, 2] {
+            assert!(f.shards[1].nodes.lease(n));
+        }
+        assert_eq!(f.borrow_into(0, &|_| true), Some(2), "LIFO top transfers first");
+        assert_eq!(f.borrows(), 1);
+        assert!(f.shards[0].nodes.is_leased(2));
+        assert!(!f.shards[1].nodes.in_pool(2));
+        f.check_conservation().unwrap();
+        // Donor at its floor refuses; backlogged donor refuses.
+        assert_eq!(f.borrow_into(0, &|_| true), Some(1));
+        assert_eq!(f.borrow_into(0, &|_| true), None, "donor at min keeps its last node");
+        f.shards[1].nodes.lease(3);
+        f.shards[1].pending.push_back(7);
+        assert_eq!(f.borrow_into(0, &|_| true), None, "backlogged donor keeps its nodes");
+        f.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn borrowing_skips_disallowed_nodes() {
+        // The scheduler passes a hold fence: a node carrying a planted
+        // (forecast) reservation hold must not be whisked to a sibling.
+        let mut f = fleet(8, &two_shard_cfg());
+        for n in [0, 1, 2] {
+            assert!(f.shards[1].nodes.lease(n));
+        }
+        assert_eq!(f.borrow_into(0, &|n| n != 2), Some(1), "held LIFO top skipped");
+        assert_eq!(f.borrow_into(0, &|n| n != 2), Some(0));
+        assert_eq!(f.borrow_into(0, &|n| n != 2), None, "only the held node is left");
+        assert_eq!(f.borrows(), 2);
+        f.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn borrowing_respects_capacity_class() {
+        // Node 0 is narrow (64 cores), node 1 wide (128). A wide shard
+        // only borrows nodes that fit its jobs.
+        let cfg = FleetConfig {
+            shards: vec![
+                ShardConfig::named("general", 1, 0, 4).unwrap(),
+                ShardConfig::named("wide", 1, 0, 4).unwrap(),
+            ],
+        };
+        let mut f = PoolFleet::new(vec![64, 128], &cfg);
+        assert!(f.shards[0].nodes.lease(0));
+        assert!(f.shards[0].nodes.lease(1));
+        assert_eq!(f.borrow_into(1, &|_| true), Some(1), "only the 128-core node fits");
+        assert_eq!(f.borrow_into(1, &|_| true), None, "the 64-core node never transfers");
+        f.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn fleet_peak_tracks_simultaneous_leases_not_shard_sums() {
+        let mut f = fleet(8, &two_shard_cfg());
+        // Shard 0 peaks at 3 leases, shrinks to 0, then shard 1 peaks
+        // at 2: the true fleet peak is 3, not 5.
+        for n in [0, 1, 2] {
+            f.shards[0].nodes.lease(n);
+        }
+        f.note_peak();
+        while f.shards[0].nodes.return_free().is_some() {}
+        f.note_peak();
+        f.shards[1].nodes.lease(3);
+        f.shards[1].nodes.lease(4);
+        f.note_peak();
+        assert_eq!(f.peak_leased(), 3);
+        let shard_sum: usize = f.shards.iter().map(|s| s.nodes.peak_leased()).sum();
+        assert_eq!(shard_sum, 5, "per-shard peaks would overstate");
+        f.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn release_estimate_tracks_the_soonest_freeing_shard() {
+        // Floors at 0 so both shards are above min and may give nodes
+        // back; the floor rule itself is pinned below.
+        let cfg = FleetConfig {
+            shards: vec![
+                ShardConfig::named("general", 1, 0, 4).unwrap(),
+                ShardConfig::named("large", 1, 0, 4).unwrap(),
+            ],
+        };
+        let mut f = fleet(4, &cfg);
+        assert_eq!(f.earliest_release_estimate(5.0), None, "empty fleet");
+        // Shard 0: node 0 busy until 40; shard 1: node 1 busy until 12.
+        f.shards[0].nodes.lease(0);
+        f.shards[0].nodes.acquire();
+        f.note_launch(0, 0, 40.0, 1);
+        f.shards[1].nodes.lease(1);
+        f.shards[1].nodes.acquire();
+        f.note_launch(1, 1, 12.0, 2);
+        assert_eq!(f.earliest_release_estimate(5.0), Some((1, 12.0)));
+        // A backlogged shard is excluded even if it frees soonest.
+        f.shards[1].pending.push_back(9);
+        assert_eq!(f.earliest_release_estimate(5.0), Some((0, 40.0)));
+        f.shards[1].pending.clear();
+        // A free (idle) lease beats every busy forecast.
+        f.note_release(1, 1);
+        f.shards[1].nodes.release_task(1);
+        assert_eq!(f.earliest_release_estimate(5.0), Some((1, 5.0)));
+        // Past estimates clamp to now.
+        f.shards[0].busy_until[0].1 = 1.0;
+        f.shards[1].nodes.acquire();
+        f.note_launch(1, 1, 100.0, 3);
+        assert_eq!(f.earliest_release_estimate(5.0), Some((0, 5.0)));
+        f.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn release_estimate_skips_shards_pinned_at_their_floor() {
+        // A shard at owned == min never shrinks: forecasting its nodes
+        // would plant a hold that can never become ready.
+        let cfg = FleetConfig {
+            shards: vec![
+                ShardConfig::named("general", 1, 1, 4).unwrap(),
+                ShardConfig::named("large", 2, 0, 4).unwrap(),
+            ],
+        };
+        let mut f = fleet(4, &cfg);
+        f.shards[0].nodes.lease(0); // at its floor, idle
+        assert_eq!(
+            f.earliest_release_estimate(5.0),
+            None,
+            "pinned shard's free lease is not a release candidate"
+        );
+        f.shards[1].nodes.lease(1);
+        f.shards[1].nodes.acquire();
+        f.note_launch(1, 1, 30.0, 4);
+        assert_eq!(
+            f.earliest_release_estimate(5.0),
+            Some((1, 30.0)),
+            "only the above-floor shard forecasts"
+        );
+        f.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn conservation_catches_double_ownership() {
+        let mut f = fleet(4, &two_shard_cfg());
+        f.shards[0].nodes.lease(2);
+        f.check_conservation().unwrap();
+        f.shards[1].nodes.lease(2);
+        assert!(f.check_conservation().is_err(), "node 2 owned twice");
+    }
+}

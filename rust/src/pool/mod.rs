@@ -25,7 +25,13 @@
 //!   when pool-queue pressure exceeds free pool capacity, shrink by
 //!   returning drained pool nodes when the queue is empty, with a
 //!   dead band and a cooldown so the partition does not thrash
-//!   ([`manager`]).
+//!   ([`manager`]);
+//! * [`JobShape`] / [`PoolFleet`] — the shape-sharded fleet layer:
+//!   several pools keyed by capacity class + walltime, each shard with
+//!   its own membership table, dispatcher and controller, plus a
+//!   fleet-level rebalancer (sibling-free → lease-idle → drain-busy),
+//!   a drain forecast for pool-aware hold planning, and one fleet-wide
+//!   conservation invariant ([`shape`], [`fleet`]).
 //!
 //! The scheduler integration lives in [`crate::scheduler`]: jobs
 //! classified short-whole-node route to the pool queue at registration,
@@ -35,12 +41,16 @@
 //! filters of the [`crate::placement`] engine.
 
 pub mod dispatcher;
+pub mod fleet;
 pub mod manager;
 pub mod node_pool;
+pub mod shape;
 
 pub use dispatcher::NodeDispatcher;
+pub use fleet::{FleetConfig, PoolFleet, Shard, ShardConfig, ShardId};
 pub use manager::{PoolManager, Resize};
 pub use node_pool::{Membership, NodePool};
+pub use shape::JobShape;
 
 use crate::sim::Time;
 

@@ -199,6 +199,32 @@ impl NodePool {
         Some(node)
     }
 
+    /// The idle leased nodes, in free-list (LIFO push) order — read by
+    /// the fleet rebalancer to pick a capacity-fitting donation.
+    pub fn free_nodes(&self) -> &[NodeId] {
+        &self.free
+    }
+
+    /// Return one *specific* idle leased node to batch (leased → batch)
+    /// — the cross-shard transfer path: the fleet hands the node
+    /// straight to a sibling shard's `lease`. Refused unless the node
+    /// is leased and idle.
+    pub fn return_node(&mut self, node: NodeId) -> bool {
+        if self.membership[node as usize] != Membership::Leased || !self.in_free[node as usize] {
+            return false;
+        }
+        let i = self
+            .free
+            .iter()
+            .position(|&n| n == node)
+            .expect("in_free mirrors the free list");
+        self.free.swap_remove(i);
+        self.in_free[node as usize] = false;
+        self.membership[node as usize] = Membership::Batch;
+        self.leased -= 1;
+        true
+    }
+
     /// Any draining node, for shrink-time drain cancellation.
     pub fn any_draining(&self) -> Option<NodeId> {
         if self.draining == 0 {
@@ -354,6 +380,27 @@ mod tests {
         assert!(p.release_task(1));
         assert_eq!(p.return_free(), Some(1));
         assert!(!p.any_pooled());
+        checked(&p);
+    }
+
+    #[test]
+    fn return_node_transfers_specific_free_leases() {
+        let mut p = NodePool::new(4);
+        p.lease(0);
+        p.lease(1);
+        p.lease(2);
+        assert_eq!(p.free_nodes(), &[0, 1, 2]);
+        // A busy lease and a batch node both refuse.
+        let busy = p.acquire().unwrap();
+        assert_eq!(busy, 2);
+        assert!(!p.return_node(2), "busy lease refused");
+        assert!(!p.return_node(3), "batch node refused");
+        // A specific idle lease (not the LIFO top) returns cleanly.
+        assert!(p.return_node(0));
+        assert!(!p.in_pool(0));
+        assert_eq!(p.n_leased(), 2);
+        assert_eq!(p.n_free(), 1);
+        assert!(!p.return_node(0), "already batch");
         checked(&p);
     }
 

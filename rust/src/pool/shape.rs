@@ -1,0 +1,197 @@
+//! Job-shape classification for the sharded pool fleet.
+//!
+//! Real rapid-launch partitions serve *heterogeneous* short workloads
+//! side by side — CPU-core launches next to GPU/exclusive launches
+//! ("Best of Both Worlds", arXiv:2008.02223) — and a single
+//! undifferentiated pool lets one shape starve the other. The fleet
+//! ([`crate::pool::fleet`]) therefore keys its shards by [`JobShape`]:
+//! a rectangular classifier over **capacity class** (the task's
+//! requested parallel width, `lanes`) and **walltime** (the declared
+//! estimate). A whole-node task routes to the shard whose shape matches
+//! it; shard shapes are validated pairwise-disjoint at config time so
+//! routing is unambiguous ("Scalable System Scheduling for HPC and Big
+//! Data", arXiv:1705.03102, partitions workloads the same way).
+
+use crate::sim::Time;
+
+/// A rectangular job classifier: lanes in `[min_lanes, max_lanes]` and
+/// walltime estimate in `(min_walltime, max_walltime]`. The half-open
+/// walltime band makes adjacent shards (e.g. `(0, 2]` and `(2, 60]`)
+/// exactly disjoint at the boundary.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct JobShape {
+    /// Smallest requested parallel width this shard serves (inclusive).
+    /// Doubles as the shard's node capacity class: grow/bootstrap only
+    /// lease nodes with at least this many cores.
+    pub min_lanes: u32,
+    /// Largest requested parallel width (inclusive); `u32::MAX` is
+    /// unbounded.
+    pub max_lanes: u32,
+    /// Exclusive lower walltime bound, seconds.
+    pub min_walltime: Time,
+    /// Inclusive upper walltime bound, seconds.
+    pub max_walltime: Time,
+}
+
+impl JobShape {
+    /// The legacy single-pool classifier: any width, walltime in
+    /// `(0, threshold]` — exactly PR 4's `est_duration <= threshold`
+    /// test (estimates are strictly positive by construction).
+    pub fn up_to(threshold: Time) -> JobShape {
+        JobShape {
+            min_lanes: 0,
+            max_lanes: u32::MAX,
+            min_walltime: 0.0,
+            max_walltime: threshold,
+        }
+    }
+
+    /// Named shapes for config files and the CLI (`shape = "general"`):
+    ///
+    /// * `general` — narrow rapid launches: lanes ≤ 64, walltime ≤ 2 s;
+    /// * `large` — heavier short jobs (the "GPU-ish" batch-of-one
+    ///   style): any width, walltime in (2, 60] s;
+    /// * `wide` — wide-node capacity class: lanes ≥ 65, walltime ≤ 2 s
+    ///   (pairs with `general`, not with `large`).
+    pub fn named(name: &str) -> Option<JobShape> {
+        match name {
+            "general" => Some(JobShape {
+                min_lanes: 0,
+                max_lanes: 64,
+                min_walltime: 0.0,
+                max_walltime: 2.0,
+            }),
+            "large" => Some(JobShape {
+                min_lanes: 0,
+                max_lanes: u32::MAX,
+                min_walltime: 2.0,
+                max_walltime: 60.0,
+            }),
+            "wide" => Some(JobShape {
+                min_lanes: 65,
+                max_lanes: u32::MAX,
+                min_walltime: 0.0,
+                max_walltime: 2.0,
+            }),
+            "short" => Some(JobShape::up_to(crate::pool::DEFAULT_SHORT_THRESHOLD)),
+            _ => None,
+        }
+    }
+
+    /// Whether a task of the given width and walltime estimate belongs
+    /// to this shard.
+    pub fn matches(&self, lanes: u32, est_walltime: Time) -> bool {
+        lanes >= self.min_lanes
+            && lanes <= self.max_lanes
+            && est_walltime > self.min_walltime
+            && est_walltime <= self.max_walltime
+    }
+
+    /// Whether a node of `capacity` cores can serve this shard's jobs
+    /// (the capacity-class side of the classifier: a shard for wide
+    /// jobs must not lease narrow nodes).
+    pub fn node_fits(&self, capacity: u32) -> bool {
+        capacity >= self.min_lanes
+    }
+
+    /// Whether two shapes claim any common job — the bug guard: two
+    /// shards with overlapping shapes would make routing order-dependent,
+    /// so fleet validation rejects them outright.
+    pub fn overlaps(&self, other: &JobShape) -> bool {
+        let lanes = self.min_lanes.max(other.min_lanes) <= self.max_lanes.min(other.max_lanes);
+        let wall =
+            self.min_walltime.max(other.min_walltime) < self.max_walltime.min(other.max_walltime);
+        lanes && wall
+    }
+
+    /// Structural sanity: non-empty bands.
+    pub fn validate(&self) -> std::result::Result<(), String> {
+        if self.min_lanes > self.max_lanes {
+            return Err(format!(
+                "shape lanes band [{}, {}] is empty",
+                self.min_lanes, self.max_lanes
+            ));
+        }
+        if !(self.max_walltime > self.min_walltime) || self.min_walltime < 0.0 {
+            return Err(format!(
+                "shape walltime band ({}, {}] is empty or negative",
+                self.min_walltime, self.max_walltime
+            ));
+        }
+        Ok(())
+    }
+}
+
+impl std::fmt::Display for JobShape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.max_lanes == u32::MAX {
+            write!(f, "lanes {}+", self.min_lanes)?;
+        } else {
+            write!(f, "lanes {}..={}", self.min_lanes, self.max_lanes)?;
+        }
+        write!(f, " x walltime ({}, {}]s", self.min_walltime, self.max_walltime)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn legacy_shape_matches_threshold_rule() {
+        let s = JobShape::up_to(30.0);
+        assert!(s.matches(64, 0.5));
+        assert!(s.matches(1, 30.0), "boundary is inclusive");
+        assert!(!s.matches(64, 30.1));
+        assert!(s.node_fits(1) && s.node_fits(64));
+        assert!(s.validate().is_ok());
+    }
+
+    #[test]
+    fn named_shapes_resolve_and_partition() {
+        let g = JobShape::named("general").unwrap();
+        let l = JobShape::named("large").unwrap();
+        let w = JobShape::named("wide").unwrap();
+        assert!(JobShape::named("bogus").is_none());
+        // The burst_mixed families route unambiguously.
+        assert!(g.matches(64, 0.5) && !l.matches(64, 0.5));
+        assert!(l.matches(64, 45.0) && !g.matches(64, 45.0));
+        assert!(g.matches(64, 2.0) && !l.matches(64, 2.0), "2 s is general's boundary");
+        // The capacity-class shape takes wide jobs general refuses.
+        assert!(w.matches(128, 0.5) && !g.matches(128, 0.5));
+        assert!(!w.node_fits(64) && w.node_fits(128), "wide shard leases wide nodes only");
+        // Disjoint pairs do not overlap; large/wide genuinely do.
+        assert!(!g.overlaps(&l) && !l.overlaps(&g));
+        assert!(!g.overlaps(&w) && !w.overlaps(&g));
+        assert!(l.overlaps(&w));
+    }
+
+    #[test]
+    fn overlap_is_two_dimensional() {
+        let a = JobShape { min_lanes: 0, max_lanes: 64, min_walltime: 0.0, max_walltime: 10.0 };
+        // Same walltime band, disjoint lanes: no overlap.
+        let b = JobShape { min_lanes: 65, max_lanes: 128, ..a };
+        assert!(!a.overlaps(&b));
+        // Same lanes, adjacent walltime bands: the shared boundary point
+        // belongs to the lower band only, so no overlap.
+        let c = JobShape { min_walltime: 10.0, max_walltime: 20.0, ..a };
+        assert!(!a.overlaps(&c) && !c.overlaps(&a));
+        // Genuine intersection in both dimensions.
+        let d = JobShape { min_lanes: 32, max_lanes: 128, min_walltime: 5.0, max_walltime: 15.0 };
+        assert!(a.overlaps(&d) && d.overlaps(&a));
+    }
+
+    #[test]
+    fn degenerate_shapes_rejected() {
+        let mut s = JobShape::up_to(30.0);
+        s.min_lanes = 10;
+        s.max_lanes = 5;
+        assert!(s.validate().is_err(), "empty lanes band");
+        let mut s = JobShape::up_to(30.0);
+        s.min_walltime = 30.0;
+        assert!(s.validate().is_err(), "empty walltime band");
+        let mut s = JobShape::up_to(30.0);
+        s.min_walltime = -1.0;
+        assert!(s.validate().is_err(), "negative walltime bound");
+    }
+}

@@ -23,7 +23,7 @@
 
 use crate::cluster::{Cluster, NodeId, NodeState};
 use crate::placement::{Hold, PlacementEngine, ReservationLedger, Strategy};
-use crate::pool::{NodeDispatcher, NodePool, PoolConfig, PoolManager, Resize};
+use crate::pool::{FleetConfig, PoolConfig, PoolFleet};
 use crate::scheduler::accounting::{JobStats, TaskRecord};
 use crate::scheduler::costmodel::CostModel;
 use crate::scheduler::job::{JobId, JobSpec, Placement, SchedTaskSpec, TaskId};
@@ -69,14 +69,17 @@ pub enum Op {
     Noise(f64),
     /// Preemption signal to one running task.
     PreemptSignal(TaskId),
-    /// Rapid-launch pool dispatch of one short whole-node task (O(1)
-    /// free-list pop; no placement engine, no per-core bookkeeping).
-    PoolDispatch(TaskId),
-    /// Rapid-launch pool release of one finished task (O(1) free-list
-    /// push; constant cost, unlike the array-size-dependent cleanup).
-    PoolRelease(TaskId),
-    /// One hysteresis-driven pool resize pass (lease / drain / return).
-    PoolResize,
+    /// Rapid-launch pool dispatch of one short whole-node task through
+    /// the given fleet shard (O(1) free-list pop; no placement engine,
+    /// no per-core bookkeeping).
+    PoolDispatch(u32, TaskId),
+    /// Rapid-launch pool release of one finished task back to its shard
+    /// (O(1) free-list push; constant cost, unlike the
+    /// array-size-dependent cleanup).
+    PoolRelease(u32, TaskId),
+    /// One hysteresis-driven resize pass of the given fleet shard
+    /// (borrow / lease / drain / return).
+    PoolResize(u32),
 }
 
 /// Per-task live state (record + dispatch bookkeeping).
@@ -93,9 +96,10 @@ pub(crate) struct TaskSlot {
     /// When the task joined the pending queue — preserved across
     /// head-of-line reinsertions so aging credit is never reset.
     pub(crate) enqueued_at: Time,
-    /// The leased node a pool-routed task is running on (`None` for
-    /// every batch-path task; pool tasks never carry a `placement`).
-    pub(crate) pool_node: Option<NodeId>,
+    /// The fleet shard and leased node a pool-routed task is running on
+    /// (`None` for every batch-path task; pool tasks never carry a
+    /// `placement`).
+    pub(crate) pool_node: Option<(u32, NodeId)>,
     /// Whether this task was admitted by the backfill scan — the only
     /// tasks the preempt-overdue policy may kill.
     pub(crate) backfilled: bool,
@@ -219,59 +223,64 @@ pub struct SimOutcome {
     pub overdue_preemptions: u64,
 }
 
-/// What the rapid-launch pool did over one run.
+/// What the rapid-launch pool fleet did over one run. The scalar fields
+/// aggregate over the shards (one-shard fleets report exactly the PR 4
+/// single-pool numbers); [`Self::shards`] carries the per-shard split.
 #[derive(Debug, Clone)]
 pub struct PoolOutcome {
-    /// Short whole-node tasks launched through the pool.
+    /// Short whole-node tasks launched through any shard.
     pub launches: u64,
-    /// The launched tasks, in launch order (per-class pool metrics
-    /// join these against the records).
+    /// The launched tasks, in fleet-wide launch order (per-class pool
+    /// metrics join these against the records).
     pub launched_tasks: Vec<TaskId>,
     /// Nodes taken from batch (leases + drains) across all resizes.
     pub grows: u64,
     /// Nodes returned to batch across all resizes.
     pub shrinks: u64,
-    /// Peak simultaneous lease count.
+    /// True fleet-wide peak of simultaneous leases (shards peaking at
+    /// different times do not add up; per-shard peaks are in
+    /// [`Self::shards`]).
     pub peak_leased: usize,
     /// Lease count when the run ended.
     pub final_leased: usize,
-    /// Whether the pool ever broke its conservation invariant (every
-    /// node exactly one of batch/leased/draining) or a batch placement
-    /// landed on a pool-owned node. Must stay `false`; pinned by
-    /// `rust/tests/pool_properties.rs`.
+    /// Free nodes transferred between sibling shards by the fleet
+    /// rebalancer (0 for a one-shard fleet).
+    pub borrows: u64,
+    /// Per-shard accounting, in shard-config order.
+    pub shards: Vec<ShardOutcome>,
+    /// Whether the fleet ever broke its conservation invariant (every
+    /// node in exactly one shard or batch) or a batch placement landed
+    /// on a pool-owned node. Must stay `false`; pinned by
+    /// `rust/tests/pool_properties.rs` and `rust/tests/fleet_properties.rs`.
     pub invariant_violated: bool,
 }
 
-/// Live state of the rapid-launch pool inside the scheduler.
-#[derive(Debug)]
-pub(crate) struct PoolState {
-    pub(crate) cfg: PoolConfig,
-    pub(crate) nodes: NodePool,
-    pub(crate) dispatcher: NodeDispatcher,
-    pub(crate) manager: PoolManager,
-    /// FIFO of pool-routed tasks waiting for a free leased node.
-    pub(crate) pending: VecDeque<TaskId>,
-    /// Finished pool tasks awaiting their (cheap) release op.
-    pub(crate) completions: VecDeque<TaskId>,
-    /// Tasks launched through the pool, in order.
-    pub(crate) launched: Vec<TaskId>,
-    /// The last grow attempt found no batch node to take; cleared when
-    /// a batch release could have produced a candidate. Gates the
-    /// starving-pool cooldown bypass so it cannot spin.
-    pub(crate) grow_blocked: bool,
-    pub(crate) violated: bool,
+/// One shard's slice of a [`PoolOutcome`].
+#[derive(Debug, Clone)]
+pub struct ShardOutcome {
+    /// Shard name from the fleet config.
+    pub name: String,
+    /// Tasks launched through this shard.
+    pub launches: u64,
+    /// The launched tasks, in this shard's launch order.
+    pub launched_tasks: Vec<TaskId>,
+    /// Nodes this shard took from batch across all resizes.
+    pub grows: u64,
+    /// Nodes this shard returned to batch across all resizes.
+    pub shrinks: u64,
+    /// Peak simultaneous lease count of this shard.
+    pub peak_leased: usize,
+    /// Lease count when the run ended.
+    pub final_leased: usize,
 }
 
-impl PoolState {
-    /// The manager's resize decision against the current pressure.
-    pub(crate) fn decision(&self) -> Resize {
-        self.manager.decide(
-            self.pending.len(),
-            self.nodes.n_free(),
-            self.nodes.n_leased(),
-            self.nodes.n_draining(),
-        )
-    }
+/// Live state of the rapid-launch pool fleet inside the scheduler.
+#[derive(Debug)]
+pub(crate) struct PoolState {
+    pub(crate) fleet: PoolFleet,
+    /// Finished pool tasks awaiting their (cheap) release op, tagged
+    /// with the shard that launched them.
+    pub(crate) completions: VecDeque<(u32, TaskId)>,
 }
 
 impl SimOutcome {
@@ -503,7 +512,8 @@ impl SchedulerSim {
         self.walltime
     }
 
-    /// Install the rapid-launch node pool ([`crate::pool`]): short
+    /// Install the rapid-launch node pool ([`crate::pool`]) as a
+    /// one-shard fleet — the backward-compatible entry point: short
     /// whole-node tasks (estimated duration ≤ the config's threshold)
     /// route to a dedicated queue served by O(1) node-based dispatch
     /// over leased nodes, and a hysteresis controller elastically
@@ -511,21 +521,28 @@ impl SchedulerSim {
     /// (`size = 0`) leaves the scheduler bit-for-bit unchanged — the
     /// equivalence property in `rust/tests/pool_properties.rs` pins
     /// this down.
-    pub fn with_pool(mut self, cfg: PoolConfig) -> Self {
+    pub fn with_pool(self, cfg: PoolConfig) -> Self {
+        self.with_fleet(FleetConfig::single(cfg))
+    }
+
+    /// Install a shape-sharded pool fleet ([`crate::pool::fleet`]):
+    /// several rapid-launch shards keyed by job shape (capacity class +
+    /// walltime), each with its own membership table, dispatcher and
+    /// hysteresis controller, sharing one fleet-wide conservation
+    /// invariant and a cross-shard rebalancer. An empty config disables
+    /// the subsystem entirely. The config is expected to be validated
+    /// ([`FleetConfig::validate`]) by the caller — config and CLI
+    /// boundaries do; the debug assertion catches test mistakes.
+    pub fn with_fleet(mut self, cfg: FleetConfig) -> Self {
+        debug_assert!(cfg.validate().is_ok(), "invalid fleet config: {:?}", cfg.validate());
         if cfg.enabled() {
             let n = self.cluster.n_nodes() as usize;
-            let max = cfg.effective_max().min(n);
-            let min = cfg.effective_min().min(max);
+            let capacity: Vec<u32> = (0..n as NodeId)
+                .map(|i| self.engine.index().node_capacity(i))
+                .collect();
             self.pool = Some(PoolState {
-                cfg,
-                nodes: NodePool::new(n),
-                dispatcher: NodeDispatcher::new(),
-                manager: PoolManager::new(min, max, cfg.hysteresis),
-                pending: VecDeque::new(),
+                fleet: PoolFleet::new(capacity, &cfg),
                 completions: VecDeque::new(),
-                launched: Vec::new(),
-                grow_blocked: false,
-                violated: false,
             });
         } else {
             self.pool = None;
@@ -588,14 +605,36 @@ impl SchedulerSim {
         self.bootstrap_pool();
         self.prime_noise(q);
         let (final_time, events) = sim::run(&mut self, q);
-        let pool = self.pool.take().map(|p| PoolOutcome {
-            launches: p.dispatcher.launches(),
-            launched_tasks: p.launched,
-            grows: p.manager.grows(),
-            shrinks: p.manager.shrinks(),
-            peak_leased: p.nodes.peak_leased(),
-            final_leased: p.nodes.n_leased(),
-            invariant_violated: p.violated || p.nodes.check_conservation().is_err(),
+        let pool = self.pool.take().map(|p| {
+            let f = p.fleet;
+            let invariant_violated = f.violated || f.check_conservation().is_err();
+            let borrows = f.borrows();
+            let peak_leased = f.peak_leased();
+            let launched_tasks = f.launched;
+            let shards: Vec<ShardOutcome> = f
+                .shards
+                .into_iter()
+                .map(|s| ShardOutcome {
+                    name: s.name,
+                    launches: s.dispatcher.launches(),
+                    launched_tasks: s.launched,
+                    grows: s.manager.grows(),
+                    shrinks: s.manager.shrinks(),
+                    peak_leased: s.nodes.peak_leased(),
+                    final_leased: s.nodes.n_leased(),
+                })
+                .collect();
+            PoolOutcome {
+                launches: shards.iter().map(|s| s.launches).sum(),
+                launched_tasks,
+                grows: shards.iter().map(|s| s.grows).sum(),
+                shrinks: shards.iter().map(|s| s.shrinks).sum(),
+                peak_leased,
+                final_leased: shards.iter().map(|s| s.final_leased).sum(),
+                borrows,
+                shards,
+                invariant_violated,
+            }
         });
         let mut deltas = self.timeline;
         deltas.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("no NaN times"));

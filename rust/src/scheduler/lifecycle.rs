@@ -29,11 +29,12 @@ impl SchedulerSim {
             (slot.spec.request, job.reservation.clone())
         };
         let hold_active = self.backfill && self.ledger.has_holds();
-        // While the rapid-launch pool owns nodes, every batch placement
+        // While the rapid-launch fleet owns nodes, every batch placement
         // goes through the filtered queries so leased/draining nodes
-        // are fenced out; with the pool off (or empty) the unfiltered
-        // fast paths below are bit-for-bit the historical behaviour.
-        let pool_fence = self.pool.as_ref().map(|p| p.nodes.any_pooled()).unwrap_or(false);
+        // (of every shard) are fenced out; with the fleet off (or empty)
+        // the unfiltered fast paths below are bit-for-bit the historical
+        // behaviour.
+        let pool_fence = self.pool.as_ref().map(|p| p.fleet.any_pooled()).unwrap_or(false);
         let placement = match request {
             ResourceRequest::WholeNode => {
                 if hold_active || pool_fence {
@@ -41,7 +42,7 @@ impl SchedulerSim {
                     // own task; everyone else picks around it — and
                     // nobody takes a pool-owned node.
                     let ledger = &self.ledger;
-                    let pool = self.pool.as_ref().map(|p| &p.nodes);
+                    let pool = self.pool.as_ref().map(|p| &p.fleet);
                     self.engine.place_whole_where(
                         &mut self.cluster,
                         reservation.as_deref(),
@@ -63,7 +64,7 @@ impl SchedulerSim {
                     let est_end =
                         now + self.task_model.startup + self.tasks[tid as usize].est_duration;
                     let ledger = &self.ledger;
-                    let pool = self.pool.as_ref().map(|p| &p.nodes);
+                    let pool = self.pool.as_ref().map(|p| &p.fleet);
                     self.engine.place_cores_where(
                         &mut self.cluster,
                         cores,
@@ -125,8 +126,8 @@ impl SchedulerSim {
         // A batch placement on a pool-owned node means the fence broke
         // somewhere: record it for the pool property suite.
         if let Some(pl) = self.pool.as_mut() {
-            if pl.nodes.in_pool(node) {
-                pl.violated = true;
+            if pl.fleet.in_pool(node) {
+                pl.fleet.violated = true;
             }
         }
         let late = if self.production && whole_node {
@@ -196,7 +197,7 @@ impl SchedulerSim {
             .clone();
         let est_end = now + self.task_model.startup + est_duration;
         let ledger = &self.ledger;
-        let pool = self.pool.as_ref().map(|p| &p.nodes);
+        let pool = self.pool.as_ref().map(|p| &p.fleet);
         let placement = self.engine.place_cores_where(
             &mut self.cluster,
             cores,
@@ -287,18 +288,63 @@ impl SchedulerSim {
             let Some(part) = self.engine.index().partition_for(reservation.as_deref()) else {
                 continue;
             };
-            // Pool-owned nodes look idle to the index but will never
-            // serve a batch reservation: plan around them.
-            let pool = self.pool.as_ref().map(|p| &p.nodes);
-            if let Some((node, start)) = self.ledger.plan_whole_node_where(
+            // Pool-owned nodes look idle to the index but do not serve
+            // batch reservations while leased: plan around them.
+            let pool = self.pool.as_ref().map(|p| &p.fleet);
+            let planned = self.ledger.plan_whole_node_where(
                 self.engine.index(),
                 &self.cluster,
                 part,
                 now,
                 tid,
-                &|n| pool.map(|pn| !pn.in_pool(n)).unwrap_or(true),
-            ) {
-                let _ = self.ledger.set_hold(tid, node, start);
+                &|n| pool.map(|fl| !fl.in_pool(n)).unwrap_or(true),
+            );
+            match planned {
+                Some((node, start)) => {
+                    let _ = self.ledger.set_hold(tid, node, start);
+                }
+                None => {
+                    // Planning found no admissible node. When the pool
+                    // fence is what is binding — an unfenced re-plan
+                    // *would* find a node, and that node is pool-owned
+                    // — borrow the start estimate from the fleet's
+                    // drain forecast instead of skipping the hold
+                    // entirely (the PR 4 behaviour, which left the
+                    // blocked job unprotected until a shrink happened
+                    // by chance). Any other failure cause (every node
+                    // down, or fenced by *other tasks'* holds) keeps
+                    // the PR 4 no-hold outcome, so the next planning
+                    // pass stays free to take a real batch candidate
+                    // the moment one appears. A forecast hold stays
+                    // fenced off from batch placement until the owning
+                    // shard actually returns the node (the hold-ready
+                    // check in `pick_next` skips still-pooled nodes).
+                    let pool_bound = match self.pool.as_ref() {
+                        Some(p) if p.fleet.any_pooled() => self
+                            .ledger
+                            .plan_whole_node_where(
+                                self.engine.index(),
+                                &self.cluster,
+                                part,
+                                now,
+                                tid,
+                                &|_| true,
+                            )
+                            .map(|(n, _)| p.fleet.in_pool(n))
+                            .unwrap_or(false),
+                        _ => false,
+                    };
+                    let forecast = if pool_bound {
+                        self.pool
+                            .as_ref()
+                            .and_then(|p| p.fleet.earliest_release_estimate(now))
+                    } else {
+                        None
+                    };
+                    if let Some((node, at)) = forecast {
+                        let _ = self.ledger.set_hold(tid, node, at.max(now));
+                    }
+                }
             }
         }
         if self.ledger.holds().len() > self.max_holds_seen {
@@ -330,17 +376,17 @@ impl SchedulerSim {
         let slot = &mut self.tasks[tid as usize];
         slot.record.end_t = Some(now);
         let cores = slot.record.cores as u64;
-        let pooled = slot.pool_node.is_some();
+        let pooled = slot.pool_node.map(|(sid, _)| sid);
         self.running_cores -= cores;
         if self.record_timeline {
             self.timeline.push((now, -(cores as i64)));
         }
-        if pooled {
+        if let Some(sid) = pooled {
             self.pool
                 .as_mut()
                 .expect("pool task implies a pool")
                 .completions
-                .push_back(tid);
+                .push_back((sid, tid));
         } else {
             self.completions.push_back(tid);
             self.note_backlog();
@@ -368,13 +414,19 @@ impl SchedulerSim {
             self.ledger.note_release(p.node);
             // Pool hooks: a draining node that just went wholly idle
             // finishes its batch → pool transition here, and any batch
-            // release may unblock a previously-stalled pool grow.
+            // release may unblock a previously-stalled grow on any
+            // shard.
             if let Some(pl) = self.pool.as_mut() {
-                pl.grow_blocked = false;
-                if pl.nodes.is_draining(p.node)
-                    && self.cluster.node(p.node).map(|n| n.is_idle()).unwrap_or(false)
-                {
-                    pl.nodes.promote(p.node);
+                for sh in pl.fleet.shards.iter_mut() {
+                    sh.grow_blocked = false;
+                }
+                let owner = pl.fleet.owner(p.node);
+                if let Some(sid) = owner {
+                    let idle = self.cluster.node(p.node).map(|n| n.is_idle()).unwrap_or(false);
+                    let sh = &mut pl.fleet.shards[sid];
+                    if sh.nodes.is_draining(p.node) && idle && sh.nodes.promote(p.node) {
+                        pl.fleet.note_peak();
+                    }
                 }
             }
         }
@@ -444,7 +496,10 @@ impl SchedulerSim {
             || self
                 .pool
                 .as_ref()
-                .map(|p| !p.pending.is_empty() || !p.completions.is_empty())
+                .map(|p| {
+                    !p.completions.is_empty()
+                        || p.fleet.shards.iter().any(|s| !s.pending.is_empty())
+                })
                 .unwrap_or(false)
             || self.tasks.iter().any(|t| {
                 matches!(
@@ -454,83 +509,122 @@ impl SchedulerSim {
             })
     }
 
-    // ---- rapid-launch pool glue ----------------------------------------
+    // ---- rapid-launch fleet glue ---------------------------------------
     //
-    // The pool subsystem proper lives in `crate::pool`; these methods
-    // are the scheduler-side integration: routing, the O(1) launch and
-    // release effects, the hysteresis resize op, and the preemptive-
-    // backfill scan. Every one of them is a no-op (and unreachable)
-    // while the pool is disabled, which keeps pool-off runs bit-for-bit
-    // identical to the pre-pool scheduler.
+    // The pool subsystem proper lives in `crate::pool` (the sharded
+    // fleet in `crate::pool::fleet`); these methods are the
+    // scheduler-side integration: shape routing, the O(1) launch and
+    // release effects, the per-shard hysteresis resize op with the
+    // fleet rebalancer, and the preemptive-backfill scan. Every one of
+    // them is a no-op (and unreachable) while the fleet is disabled,
+    // which keeps pool-off runs bit-for-bit identical to the pre-pool
+    // scheduler.
 
-    /// Lease the configured initial node set (all nodes are idle before
-    /// the first event, so the bootstrap never needs to drain).
+    /// Lease each shard's configured initial node set (all nodes are
+    /// idle before the first event, so the bootstrap never needs to
+    /// drain). Shards with the narrowest capacity demand lease *last*
+    /// and every shard prefers the narrowest nodes that fit it, so a
+    /// catch-all shard cannot absorb the scarce wide nodes a
+    /// higher-`min_lanes` shard needs.
     pub(crate) fn bootstrap_pool(&mut self) {
         let Some(p) = self.pool.as_mut() else { return };
-        let want = p.cfg.size.max(p.manager.min).min(p.manager.max);
-        if want == 0 {
-            return;
-        }
-        let ids: Vec<NodeId> = self
-            .engine
-            .index()
-            .partition_nodes_iter(0)
-            .filter(|&n| {
-                self.cluster
-                    .node(n)
-                    .map(|x| x.state() == NodeState::Up && x.is_idle())
-                    .unwrap_or(false)
-            })
-            .take(want)
+        let mut plans: Vec<(usize, usize, crate::pool::JobShape)> = p
+            .fleet
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(sid, sh)| (sid, sh.cfg.size.max(sh.manager.min).min(sh.manager.max), sh.shape))
             .collect();
-        for n in ids {
-            if p.nodes.lease(n) {
-                p.manager.record_grow(1);
+        plans.sort_by(|a, b| b.2.min_lanes.cmp(&a.2.min_lanes));
+        for (sid, want, shape) in plans {
+            if want == 0 {
+                continue;
+            }
+            let mut ids: Vec<NodeId> = {
+                let fl = &p.fleet;
+                self.engine
+                    .index()
+                    .partition_nodes_iter(0)
+                    .filter(|&n| {
+                        !fl.in_pool(n)
+                            && shape.node_fits(fl.capacity(n))
+                            && self
+                                .cluster
+                                .node(n)
+                                .map(|x| x.state() == NodeState::Up && x.is_idle())
+                                .unwrap_or(false)
+                    })
+                    .collect()
+            };
+            // Narrowest fitting nodes first (stable: id order on ties,
+            // so homogeneous clusters behave exactly as before).
+            ids.sort_by_key(|&n| p.fleet.capacity(n));
+            ids.truncate(want);
+            let sh = &mut p.fleet.shards[sid];
+            for n in ids {
+                if sh.nodes.lease(n) {
+                    sh.manager.record_grow(1);
+                }
             }
         }
+        p.fleet.note_peak();
     }
 
-    /// Does this task belong on the pool queue? Whole-node, short by
-    /// declared walltime (the estimate — a real scheduler only knows
-    /// the declared value), and unreserved: the pool leases out of the
-    /// open partition, so reservation-tagged jobs stay on the batch
-    /// path where their fenced nodes live.
-    pub(crate) fn route_to_pool(&self, tid: TaskId) -> bool {
-        let Some(p) = self.pool.as_ref() else {
-            return false;
-        };
+    /// The shard this task belongs on, if any: whole-node, unreserved
+    /// (the fleet leases out of the open partition, so reservation-
+    /// tagged jobs stay on the batch path where their fenced nodes
+    /// live), and matching exactly one shard's shape over (lanes,
+    /// declared walltime estimate — a real scheduler only knows the
+    /// declared value).
+    pub(crate) fn route_to_pool(&self, tid: TaskId) -> Option<usize> {
+        let p = self.pool.as_ref()?;
         let slot = &self.tasks[tid as usize];
-        slot.spec.request == ResourceRequest::WholeNode
-            && slot.est_duration <= p.cfg.short_threshold
-            && self.jobs[slot.record.job as usize].reservation.is_none()
+        if slot.spec.request != ResourceRequest::WholeNode
+            || self.jobs[slot.record.job as usize].reservation.is_some()
+        {
+            return None;
+        }
+        p.fleet.route(slot.spec.lanes, slot.est_duration)
     }
 
-    /// Remove a task from the pool queue (job cancellation path).
+    /// Remove a task from any shard's pending queue (job cancellation
+    /// path).
     pub(crate) fn pool_pending_remove(&mut self, tid: TaskId) -> bool {
         let Some(p) = self.pool.as_mut() else {
             return false;
         };
-        if let Some(i) = p.pending.iter().position(|&t| t == tid) {
-            p.pending.remove(i);
-            true
-        } else {
-            false
+        for sh in p.fleet.shards.iter_mut() {
+            if let Some(i) = sh.pending.iter().position(|&t| t == tid) {
+                sh.pending.remove(i);
+                return true;
+            }
         }
+        false
     }
 
-    /// Apply a pool dispatch: pop a leased node off the free list and
-    /// start the task on it — no placement engine, no per-core
-    /// bookkeeping, no cluster mutation (the lease fence keeps batch
-    /// off the node).
-    pub(crate) fn pool_launch(&mut self, now: Time, tid: TaskId, q: &mut EventQueue<SchedEvent>) {
+    /// Apply a pool dispatch on one shard: pop a leased node off the
+    /// shard's free list and start the task on it — no placement
+    /// engine, no per-core bookkeeping, no cluster mutation (the lease
+    /// fence keeps batch off the node).
+    pub(crate) fn pool_launch(
+        &mut self,
+        now: Time,
+        sid: u32,
+        tid: TaskId,
+        q: &mut EventQueue<SchedEvent>,
+    ) {
         let node = {
             let Some(p) = self.pool.as_mut() else { return };
-            match p.dispatcher.launch(&mut p.nodes) {
+            let Some(sh) = p.fleet.shards.get_mut(sid as usize) else {
+                p.fleet.violated = true;
+                return;
+            };
+            match sh.dispatcher.launch(&mut sh.nodes) {
                 Some(n) => n,
                 None => {
                     // A shrink raced the dispatch decision: requeue at
                     // the head so FIFO order is preserved.
-                    p.pending.push_front(tid);
+                    sh.pending.push_front(tid);
                     return;
                 }
             }
@@ -540,22 +634,29 @@ impl SchedulerSim {
         slot.record.state = TaskState::Running;
         slot.record.start_t = Some(now);
         slot.record.cores = cores;
-        slot.pool_node = Some(node);
+        slot.pool_node = Some((sid, node));
         let duration = slot.spec.duration;
+        let est_end = now + self.task_model.startup + slot.est_duration;
         let jitter = self.rng.normal().abs() * self.task_model.jitter_sigma;
         let occupancy = self.task_model.startup + duration + jitter;
         self.running_cores += cores as u64;
         if self.record_timeline {
             self.timeline.push((now, cores as i64));
         }
-        self.pool.as_mut().expect("checked above").launched.push(tid);
+        self.pool
+            .as_mut()
+            .expect("checked above")
+            .fleet
+            .note_launch(sid as usize, node, est_end, tid);
         q.at(now + occupancy, SchedEvent::TaskEnded(tid));
     }
 
     /// Apply a pool release: mark the task DONE and push its node back
-    /// on the free list (or complete a pending drain-return). Constant
-    /// cost — the batch cleanup's array-size term never applies.
-    pub(crate) fn finish_pool_release(&mut self, now: Time, tid: TaskId) {
+    /// on its shard's free list (or complete a pending drain-return).
+    /// Constant cost — the batch cleanup's array-size term never
+    /// applies. A sibling shard's stalled grow may now have a borrow
+    /// candidate, so its `grow_blocked` latch clears.
+    pub(crate) fn finish_pool_release(&mut self, now: Time, sid: u32, tid: TaskId) {
         let slot = &mut self.tasks[tid as usize];
         debug_assert!(
             slot.record.state == TaskState::Completing
@@ -565,79 +666,145 @@ impl SchedulerSim {
         );
         slot.record.state = TaskState::Done;
         slot.record.cleanup_t = Some(now);
-        let node = slot.pool_node.take();
+        let home = slot.pool_node.take();
         if let Some(p) = self.pool.as_mut() {
-            match node {
-                Some(n) => {
-                    if !p.dispatcher.release(&mut p.nodes, n) {
-                        p.violated = true;
+            match home {
+                Some((s, n)) if s == sid && (sid as usize) < p.fleet.shards.len() => {
+                    let sh = &mut p.fleet.shards[sid as usize];
+                    if !sh.dispatcher.release(&mut sh.nodes, n) {
+                        p.fleet.violated = true;
+                    }
+                    p.fleet.note_release(sid as usize, n);
+                    for (i, sh) in p.fleet.shards.iter_mut().enumerate() {
+                        if i != sid as usize {
+                            sh.grow_blocked = false;
+                        }
                     }
                 }
-                None => p.violated = true,
+                _ => p.fleet.violated = true,
             }
         }
     }
 
-    /// Apply one hysteresis resize pass: grow by leasing idle batch
-    /// nodes (draining busy ones when none are idle), shrink by
-    /// returning drained pool nodes to batch. The decision is
-    /// re-evaluated at apply time — state may have moved since the op
-    /// was scheduled.
-    pub(crate) fn apply_pool_resize(&mut self, now: Time) {
-        let Some(p) = self.pool.as_mut() else { return };
+    /// Apply one hysteresis resize pass on one shard. Grow sources, in
+    /// rebalancer order: **sibling-free** (borrow an idle lease from a
+    /// shard with no backlog), **lease-idle** (an idle batch node of
+    /// the shard's capacity class), **drain-busy** (earmark the busy
+    /// batch node the ledger's expected-completion table says frees
+    /// soonest — not the lowest id — so the shard starts serving as
+    /// early as possible). Shrink returns drained shard nodes to batch.
+    /// The decision is re-evaluated at apply time — state may have
+    /// moved since the op was scheduled.
+    pub(crate) fn apply_pool_resize(&mut self, now: Time, sid: u32) {
         let ledger = &self.ledger;
         let cluster = &self.cluster;
         let index = self.engine.index();
-        // First batch node (no holds, not pool-owned) in the requested
-        // occupancy state — idle nodes lease immediately, busy ones are
-        // earmarked to drain.
-        let candidate = |nodes: &crate::pool::NodePool, idle: bool| -> Option<NodeId> {
-            index.partition_nodes_iter(0).find(|&n| {
-                !nodes.in_pool(n)
-                    && ledger.hold_on(n).is_none()
-                    && cluster
-                        .node(n)
-                        .map(|x| x.state() == NodeState::Up && x.is_idle() == idle)
-                        .unwrap_or(false)
-            })
-        };
-        match p.decision() {
+        let Some(p) = self.pool.as_mut() else { return };
+        let sid = sid as usize;
+        if sid >= p.fleet.shards.len() {
+            return;
+        }
+        let shape = p.fleet.shards[sid].shape;
+        match p.fleet.shards[sid].decision() {
             Resize::Grow(k) => {
                 let mut grown = 0usize;
+                let mut acquired = 0usize;
                 for _ in 0..k {
-                    if let Some(n) = candidate(&p.nodes, true) {
-                        if p.nodes.lease(n) {
+                    // 1) Borrow a free node from a sibling shard
+                    // (never one carrying a reservation hold — a
+                    // planted forecast hold must stay with its shard).
+                    if p.fleet.borrow_into(sid, &|n| ledger.hold_on(n).is_none()).is_some() {
+                        acquired += 1;
+                        continue;
+                    }
+                    // 2) Lease an idle batch node of the right capacity
+                    // class (no holds, not owned by any shard). The
+                    // *narrowest* fitting node wins (lowest id on ties,
+                    // so homogeneous clusters keep the historical
+                    // order) — wide nodes stay available for shards
+                    // that actually need them.
+                    let idle_cand: Option<NodeId> = {
+                        let fl = &p.fleet;
+                        let mut best: Option<(NodeId, u32)> = None;
+                        for n in index.partition_nodes_iter(0) {
+                            let fits = !fl.in_pool(n)
+                                && ledger.hold_on(n).is_none()
+                                && shape.node_fits(fl.capacity(n))
+                                && cluster
+                                    .node(n)
+                                    .map(|x| x.state() == NodeState::Up && x.is_idle())
+                                    .unwrap_or(false);
+                            if !fits {
+                                continue;
+                            }
+                            let cap = fl.capacity(n);
+                            if best.map(|(_, bc)| cap < bc).unwrap_or(true) {
+                                best = Some((n, cap));
+                            }
+                        }
+                        best.map(|(n, _)| n)
+                    };
+                    if let Some(n) = idle_cand {
+                        if p.fleet.shards[sid].nodes.lease(n) {
                             grown += 1;
+                            acquired += 1;
                         }
                         continue;
                     }
-                    // No idle batch node: drain a busy one — it joins
-                    // the pool when its running tasks release.
-                    match candidate(&p.nodes, false) {
+                    // 3) No idle batch node: drain the busy one
+                    // expected to free soonest — it joins the shard
+                    // when its running tasks release.
+                    let drain_cand: Option<NodeId> = {
+                        let fl = &p.fleet;
+                        let mut best: Option<(NodeId, Time)> = None;
+                        for n in index.partition_nodes_iter(0) {
+                            if fl.in_pool(n)
+                                || ledger.hold_on(n).is_some()
+                                || !shape.node_fits(fl.capacity(n))
+                            {
+                                continue;
+                            }
+                            let busy = cluster
+                                .node(n)
+                                .map(|x| x.state() == NodeState::Up && !x.is_idle())
+                                .unwrap_or(false);
+                            if !busy {
+                                continue;
+                            }
+                            let frees_at = ledger.expected_free(n, now);
+                            if best.map(|(_, t)| frees_at < t).unwrap_or(true) {
+                                best = Some((n, frees_at));
+                            }
+                        }
+                        best.map(|(n, _)| n)
+                    };
+                    match drain_cand {
                         Some(n) => {
-                            if p.nodes.begin_drain(n) {
+                            if p.fleet.shards[sid].nodes.begin_drain(n) {
                                 grown += 1;
+                                acquired += 1;
                             }
                         }
                         None => break, // nothing left to take
                     }
                 }
                 if grown > 0 {
-                    p.manager.record_grow(grown);
+                    p.fleet.shards[sid].manager.record_grow(grown);
                 }
-                // A fruitless grow gates the starving-pool cooldown
-                // bypass until the next batch release.
-                p.grow_blocked = grown == 0;
+                // A fruitless grow gates the starving-shard cooldown
+                // bypass until the next batch or sibling release.
+                p.fleet.shards[sid].grow_blocked = acquired == 0;
             }
             Resize::Shrink(k) => {
                 let mut shrunk = 0usize;
+                let sh = &mut p.fleet.shards[sid];
                 for _ in 0..k {
-                    if p.nodes.return_free().is_some() {
+                    if sh.nodes.return_free().is_some() {
                         shrunk += 1;
-                    } else if let Some(n) = p.nodes.any_draining() {
+                    } else if let Some(n) = sh.nodes.any_draining() {
                         // Prefer cancelling a pending drain over
-                        // returning capacity the pool actually uses.
-                        if p.nodes.cancel_drain(n) {
+                        // returning capacity the shard actually uses.
+                        if sh.nodes.cancel_drain(n) {
                             shrunk += 1;
                         }
                     } else {
@@ -645,7 +812,7 @@ impl SchedulerSim {
                     }
                 }
                 if shrunk > 0 {
-                    p.manager.record_shrink(shrunk);
+                    sh.manager.record_shrink(shrunk);
                     // Returned nodes are batch capacity again: let the
                     // blocked head retry against a fresh cycle.
                     self.hol_blocked = false;
@@ -654,9 +821,10 @@ impl SchedulerSim {
             }
             Resize::Hold => {}
         }
-        p.manager.note_resize(now);
-        if p.nodes.check_conservation().is_err() {
-            p.violated = true;
+        p.fleet.shards[sid].manager.note_resize(now);
+        p.fleet.note_peak();
+        if p.fleet.check_conservation().is_err() {
+            p.fleet.violated = true;
         }
     }
 

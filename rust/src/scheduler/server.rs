@@ -56,27 +56,36 @@ impl SchedulerSim {
         if let Some(t) = self.preempt_q.pop_front() {
             return Some((Op::PreemptSignal(t), self.cost.preempt_signal * s));
         }
-        // Rapid-launch pool service, ahead of the batch machinery (the
+        // Rapid-launch fleet service, ahead of the batch machinery (the
         // pool is the fast path): releases first (cheap, free nodes for
-        // the next volley), then a due resize, then free-list dispatch.
+        // the next volley), then any shard's due resize, then free-list
+        // dispatch shard by shard. With one shard this is exactly the
+        // PR 4 single-pool service order.
         if let Some(p) = self.pool.as_mut() {
-            if let Some(tid) = p.completions.pop_front() {
-                return Some((Op::PoolRelease(tid), self.cost.pool_release * s));
+            if let Some((sid, tid)) = p.completions.pop_front() {
+                return Some((Op::PoolRelease(sid, tid), self.cost.pool_release * s));
             }
-            // An empty pool with queued work bypasses the resize
+            // An empty shard with queued work bypasses the resize
             // cooldown: with no leases there may be no future event to
             // re-kick the server once the cooldown expires, and waiting
             // would strand the queue. `grow_blocked` (set when a grow
-            // found no batch node to take, cleared on the next batch
-            // release) keeps the bypass from spinning on a cluster with
-            // nothing left to lease.
-            let starving = !p.pending.is_empty() && !p.nodes.any_pooled() && !p.grow_blocked;
-            if (p.manager.due(now) || starving) && p.decision() != Resize::Hold {
-                return Some((Op::PoolResize, self.cost.pool_resize * s));
+            // found nothing to take — no sibling-free node, no batch
+            // node — and cleared on the next batch or sibling release)
+            // keeps the bypass from spinning on a cluster with nothing
+            // left to lease.
+            for (sid, sh) in p.fleet.shards.iter().enumerate() {
+                let starving =
+                    !sh.pending.is_empty() && !sh.nodes.any_pooled() && !sh.grow_blocked;
+                if (sh.manager.due(now) || starving) && sh.decision() != Resize::Hold {
+                    return Some((Op::PoolResize(sid as u32), self.cost.pool_resize * s));
+                }
             }
-            if !p.pending.is_empty() && p.nodes.n_free() > 0 {
-                let tid = p.pending.pop_front().expect("checked non-empty");
-                return Some((Op::PoolDispatch(tid), self.cost.pool_dispatch * s));
+            for (sid, sh) in p.fleet.shards.iter_mut().enumerate() {
+                if !sh.pending.is_empty() && sh.nodes.n_free() > 0 {
+                    let tid = sh.pending.pop_front().expect("checked non-empty");
+                    let cost = self.cost.pool_dispatch * s;
+                    return Some((Op::PoolDispatch(sid as u32, tid), cost));
+                }
             }
         }
         let can_dispatch = !self.pending.is_empty() && !self.hol_blocked;
@@ -119,14 +128,23 @@ impl SchedulerSim {
             // without this, a blocked higher-priority head would let the
             // held node idle while the reserved job starves behind it.
             // With multi-hold every active hold is checked; whichever
-            // reserved node drained first launches first.
+            // reserved node drained first launches first. A hold planted
+            // on a still-pool-owned node (the fleet's drain forecast
+            // path) is not ready: the node looks idle to the cluster
+            // model but the batch fence keeps placement off it until
+            // the owning shard actually returns it.
             let holds: Vec<Hold> = self.ledger.holds().to_vec();
             for h in holds {
                 let ready = self
                     .cluster
                     .node(h.node)
                     .map(|n| n.state() == NodeState::Up && n.is_idle())
-                    .unwrap_or(false);
+                    .unwrap_or(false)
+                    && self
+                        .pool
+                        .as_ref()
+                        .map(|p| !p.fleet.in_pool(h.node))
+                        .unwrap_or(true);
                 if !ready {
                     continue;
                 }
@@ -159,7 +177,7 @@ impl SchedulerSim {
         let engine = &self.engine;
         let cluster = &self.cluster;
         let ledger = &self.ledger;
-        let pool = self.pool.as_ref().map(|p| &p.nodes);
+        let pool = self.pool.as_ref().map(|p| &p.fleet);
         self.pending.pop_where(self.backfill_lookahead, now, |tid| {
             let slot = &tasks[tid as usize];
             let (cores, mem_mib) = match slot.spec.request {
@@ -196,13 +214,16 @@ impl SchedulerSim {
                     .collect();
                 for tid in ids {
                     self.tasks[tid as usize].enqueued_at = now;
-                    // Short whole-node tasks route to the rapid-launch
-                    // pool queue (FIFO; one class of work by design);
-                    // everything else takes the batch pending queue.
-                    if self.route_to_pool(tid) {
+                    // Short whole-node tasks route to the shard whose
+                    // shape matches them (FIFO per shard; one class of
+                    // work per shard by design); everything else takes
+                    // the batch pending queue.
+                    if let Some(sid) = self.route_to_pool(tid) {
                         self.pool
                             .as_mut()
                             .expect("routing implies a pool")
+                            .fleet
+                            .shards[sid]
                             .pending
                             .push_back(tid);
                     } else {
@@ -236,17 +257,17 @@ impl SchedulerSim {
                 self.busy.preempt += self.cost.preempt_signal * self.op_scale;
                 self.apply_preempt_signal(now, tid);
             }
-            Op::PoolDispatch(tid) => {
+            Op::PoolDispatch(sid, tid) => {
                 self.busy.pool += self.cost.pool_dispatch * self.op_scale;
-                self.pool_launch(now, tid, q);
+                self.pool_launch(now, sid, tid, q);
             }
-            Op::PoolRelease(tid) => {
+            Op::PoolRelease(sid, tid) => {
                 self.busy.pool += self.cost.pool_release * self.op_scale;
-                self.finish_pool_release(now, tid);
+                self.finish_pool_release(now, sid, tid);
             }
-            Op::PoolResize => {
+            Op::PoolResize(sid) => {
                 self.busy.pool += self.cost.pool_resize * self.op_scale;
-                self.apply_pool_resize(now);
+                self.apply_pool_resize(now, sid);
             }
         }
     }

@@ -257,7 +257,16 @@ impl ContentionMix {
     ///   regime, the scenario the node pool ([`crate::pool`]) exists
     ///   for. Volley tasks route to the pool when one is enabled and
     ///   dispatch as ordinary whole-node tasks otherwise, so pooled
-    ///   vs backfill-only launch latency is directly comparable.
+    ///   vs backfill-only launch latency is directly comparable;
+    /// * `burst_mixed` — interleaved volleys of two *shapes* of
+    ///   rapid-launch work over the batch stream: big waves of 0.5 s
+    ///   "general" tasks and waves of 45 s "large-capacity" tasks, with
+    ///   the submission order alternating per round (large-first at one
+    ///   round, general-first at the next). In one merged FIFO each
+    ///   shape periodically queues behind the other — exactly the
+    ///   mutual head-of-line blocking the shape-sharded fleet
+    ///   ([`crate::pool::fleet`]) removes, which is what the per-class
+    ///   p95 regression in `rust/tests/fleet_properties.rs` measures.
     pub fn preset(name: &str, nodes: u32) -> Result<ContentionMix> {
         let nodes = nodes.max(2);
         match name {
@@ -370,8 +379,65 @@ impl ContentionMix {
                     },
                 ],
             }),
+            "burst_mixed" => {
+                // The two rapid-launch families. Durations sit on either
+                // side of the "general" shape's 2 s boundary, so a
+                // `general` + `large` fleet routes them to distinct
+                // shards while one merged pool serves both FIFO.
+                let general = |at: Time| ClassSpec {
+                    class: JobClass::Interactive,
+                    arrival: Arrival::Burst { at, count: 1 },
+                    tasks_per_job: 6 * nodes as u64,
+                    request: ResourceRequest::WholeNode,
+                    duration: TaskGen::Constant { seconds: 0.5 },
+                    priority: 10,
+                    lanes: 64,
+                };
+                let large = |at: Time| ClassSpec {
+                    class: JobClass::Interactive,
+                    arrival: Arrival::Burst { at, count: 1 },
+                    tasks_per_job: (nodes / 4).max(1) as u64,
+                    request: ResourceRequest::WholeNode,
+                    duration: TaskGen::Constant { seconds: 45.0 },
+                    priority: 8,
+                    lanes: 64,
+                };
+                Ok(ContentionMix {
+                    name: "burst_mixed".into(),
+                    nodes,
+                    horizon: 400.0,
+                    // Same-instant volleys whose submission order
+                    // alternates per round (class listing order breaks
+                    // arrival-time ties): large-first at t = 5 and 245,
+                    // general-first at t = 125 and 365. A merged FIFO
+                    // head-of-line-blocks whichever family comes second;
+                    // per-shard queues never do.
+                    classes: vec![
+                        large(5.0),
+                        general(5.0),
+                        general(125.0),
+                        large(125.0),
+                        large(245.0),
+                        general(245.0),
+                        general(365.0),
+                        large(365.0),
+                        // The long batch stream underneath keeps the
+                        // leases contended, like `burst`.
+                        ClassSpec {
+                            class: JobClass::Batch,
+                            arrival: Arrival::Periodic { gap: 150.0, start: 0.5 },
+                            tasks_per_job: (nodes / 4).max(1) as u64,
+                            request: ResourceRequest::WholeNode,
+                            duration: TaskGen::Constant { seconds: 150.0 },
+                            priority: -5,
+                            lanes: 64,
+                        },
+                    ],
+                })
+            }
             other => Err(Error::Config(format!(
-                "unknown contention preset {other:?} (known: tiny, default, heavy, burst)"
+                "unknown contention preset {other:?} \
+                 (known: tiny, default, heavy, burst, burst_mixed)"
             ))),
         }
     }
@@ -424,7 +490,7 @@ mod tests {
 
     #[test]
     fn presets_resolve_and_validate() {
-        for name in ["tiny", "default", "heavy", "burst"] {
+        for name in ["tiny", "default", "heavy", "burst", "burst_mixed"] {
             let mix = ContentionMix::preset(name, 16).unwrap();
             assert_eq!(mix.name, name);
             for sub in mix.generate(7) {
@@ -432,6 +498,54 @@ mod tests {
             }
         }
         assert!(ContentionMix::preset("bogus", 16).is_err());
+    }
+
+    #[test]
+    fn burst_mixed_interleaves_families_with_alternating_order() {
+        let mix = ContentionMix::preset("burst_mixed", 32).unwrap();
+        let subs = mix.generate(3);
+        // Rounds at 5/125/245/365, one general + one large volley each.
+        let volleys: Vec<_> = subs
+            .iter()
+            .filter(|s| s.class == JobClass::Interactive)
+            .collect();
+        assert_eq!(volleys.len(), 8);
+        fn dur(s: &Submission) -> f64 {
+            s.spec.tasks[0].duration
+        }
+        for v in &volleys {
+            assert!(v.spec.tasks.iter().all(|t| t.request == ResourceRequest::WholeNode));
+            let d = dur(v);
+            assert!(
+                (d - 0.5).abs() < 1e-9 || (d - 45.0).abs() < 1e-9,
+                "volley durations are exactly the two families, got {d}"
+            );
+        }
+        // The general family is the big wave; the large one is heavier
+        // per task but smaller.
+        let big: Vec<_> = volleys.iter().filter(|v| dur(v) < 1.0).collect();
+        let heavy: Vec<_> = volleys.iter().filter(|v| dur(v) > 1.0).collect();
+        assert_eq!(big.len(), 4);
+        assert_eq!(heavy.len(), 4);
+        assert!(big.iter().all(|v| v.spec.array_size() == 6 * 32));
+        assert!(heavy.iter().all(|v| v.spec.array_size() == 8));
+        // Alternating same-instant order: large first at 5 and 245,
+        // general first at 125 and 365 (generation sort is stable).
+        let order_at = |t: f64| -> Vec<f64> {
+            subs.iter()
+                .filter(|s| s.class == JobClass::Interactive && (s.at - t).abs() < 1e-9)
+                .map(dur)
+                .collect()
+        };
+        assert_eq!(order_at(5.0), vec![45.0, 0.5]);
+        assert_eq!(order_at(125.0), vec![0.5, 45.0]);
+        assert_eq!(order_at(245.0), vec![45.0, 0.5]);
+        assert_eq!(order_at(365.0), vec![0.5, 45.0]);
+        // The batch stream stays long and whole-node (never
+        // pool-eligible under the general/large shapes).
+        for b in subs.iter().filter(|s| s.class == JobClass::Batch) {
+            assert!(b.spec.tasks.iter().all(|t| t.duration > 60.0));
+        }
     }
 
     #[test]

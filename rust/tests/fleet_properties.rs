@@ -1,0 +1,659 @@
+//! Properties of the shape-sharded pool fleet, from the shard registry
+//! up through the scheduler end-to-end.
+//!
+//! Five families of invariants pin the fleet down:
+//!
+//! 1. **Fleet-wide conservation** — under fuzzed multi-shard churn
+//!    (lease/drain/promote/dispatch/release) *and* cross-shard
+//!    rebalancing, every node is in exactly one shard or batch, every
+//!    shard's own bookkeeping stays consistent, and borrows never
+//!    create double ownership.
+//! 2. **One-shard equivalence** — a one-shard fleet configured through
+//!    the `pools = [...]` list syntax reproduces the legacy
+//!    `pool_size`-keyed single pool bit-for-bit (same records, same
+//!    event counts) across fuzzed seeds: the fleet layer adds nothing
+//!    to the single-pool schedule.
+//! 3. **No cross-shard leak** — end-to-end on the mixed-volley
+//!    scenario, every task launched by a shard matches that shard's
+//!    shape, no batch placement lands on any pooled node, and the
+//!    conservation flag stays clean. A heterogeneous-cluster variant
+//!    checks the capacity-class fence: a wide shard only ever serves
+//!    its jobs from wide nodes.
+//! 4. **Sharding wins** — on `burst_mixed` at 128 nodes, the two-shard
+//!    fleet beats the equivalent single merged pool on p95 launch
+//!    latency for *both* volley families (the acceptance regression):
+//!    merged FIFO head-of-line-blocks whichever family arrives second,
+//!    shard queues never do.
+//! 5. **The PR 4 follow-up satellites** — pool-aware hold planning
+//!    (a fully pool-fenced cluster still plans a hold, from the fleet's
+//!    drain forecast) and drain-candidate selection by expected free
+//!    time (the grow path drains the busy node that frees soonest, not
+//!    the lowest id).
+
+use llsched::cluster::{Cluster, NodeId};
+use llsched::config::{parser, RunConfig};
+use llsched::pool::{FleetConfig, JobShape, PoolConfig, PoolFleet, ShardConfig};
+use llsched::scheduler::core::{SchedulerSim, SimOutcome, TaskModel};
+use llsched::scheduler::costmodel::CostModel;
+use llsched::scheduler::job::{ComputeBatch, JobSpec, ResourceRequest, SchedTaskSpec, TaskState};
+use llsched::scheduler::noise::NoiseModel;
+use llsched::sim::EventQueue;
+use llsched::testing::prop::forall;
+use llsched::util::stats;
+use llsched::workload::contention::{ContentionMix, JobClass};
+
+fn quiet_sim_on(cluster: Cluster, seed: u64) -> SchedulerSim {
+    SchedulerSim::new(
+        cluster,
+        CostModel::slurm_like_tx_green(),
+        NoiseModel::dedicated(),
+        seed,
+    )
+    .with_task_model(TaskModel {
+        startup: 0.0,
+        jitter_sigma: 0.0,
+        p_node_late: 0.0,
+        late_range: (0.0, 0.0),
+    })
+    .with_server_speed(1.0)
+    .with_backfill(true)
+}
+
+fn quiet_sim(nodes: u32, seed: u64) -> SchedulerSim {
+    quiet_sim_on(Cluster::tx_green(nodes), seed)
+}
+
+fn job(name: &str, n_tasks: usize, request: ResourceRequest, duration: f64, lanes: u32) -> JobSpec {
+    JobSpec {
+        name: name.into(),
+        tasks: vec![
+            SchedTaskSpec {
+                request,
+                duration,
+                batch: ComputeBatch { count: 1, each: duration },
+                lanes,
+            };
+            n_tasks
+        ],
+        reservation: None,
+        priority: 0,
+        preemptable: false,
+    }
+}
+
+/// Property 1: fleet-wide conservation under fuzzed multi-shard churn
+/// and rebalancing, applied the way the scheduler applies it (borrow →
+/// lease idle → drain busy; shrink from the free list, else cancel
+/// drains).
+#[test]
+fn conservation_under_fuzzed_multi_shard_churn() {
+    forall("fleet conservation under churn", 40, |g| {
+        let n = 3 + g.usize(0, 29);
+        // Mixed capacities so the capacity-class fence is exercised.
+        let capacity: Vec<u32> = (0..n).map(|i| if i % 3 == 0 { 128 } else { 64 }).collect();
+        let shard = |name: &str, g: &mut llsched::testing::prop::Gen| {
+            let size = 1 + g.usize(0, 3);
+            let max = size + g.usize(0, n);
+            ShardConfig::named(name, size, g.usize(0, size), max).unwrap()
+        };
+        let cfg = FleetConfig {
+            shards: vec![shard("general", g), shard("large", g)],
+        };
+        cfg.validate().map_err(|e| format!("cfg invalid: {e}"))?;
+        let mut fleet = PoolFleet::new(capacity.clone(), &cfg);
+        // Random cluster occupancy decides lease-vs-drain below.
+        let cluster_busy: Vec<bool> = (0..n).map(|_| g.chance(0.4)).collect();
+        let mut queued = [g.usize(0, 20), g.usize(0, 20)];
+        let mut busy: Vec<(usize, NodeId)> = Vec::new();
+        for step in 0..200 {
+            let sid = g.usize(0, 1);
+            match g.usize(0, 6) {
+                0 => queued[sid] = queued[sid].saturating_add(g.usize(0, 8)),
+                1 => {
+                    let sh = &mut fleet.shards[sid];
+                    if let Some(node) = sh.dispatcher.launch(&mut sh.nodes) {
+                        queued[sid] = queued[sid].saturating_sub(1);
+                        fleet.note_launch(sid, node, step as f64 + 5.0, step as u64);
+                        busy.push((sid, node));
+                    }
+                }
+                2 => {
+                    if !busy.is_empty() {
+                        let (osid, node) = busy.remove(g.usize(0, busy.len() - 1));
+                        let sh = &mut fleet.shards[osid];
+                        if !sh.dispatcher.release(&mut sh.nodes, node) {
+                            return Err(format!("step {step}: release of lease {node} refused"));
+                        }
+                        fleet.note_release(osid, node);
+                    }
+                }
+                3 => {
+                    if let Some(node) = fleet.shards[sid].nodes.any_draining() {
+                        fleet.shards[sid].nodes.promote(node);
+                    }
+                }
+                4 => {
+                    fleet.borrow_into(sid, &|_| true);
+                }
+                _ => {
+                    let decision = {
+                        let sh = &fleet.shards[sid];
+                        sh.manager.decide(
+                            queued[sid],
+                            sh.nodes.n_free(),
+                            sh.nodes.n_leased(),
+                            sh.nodes.n_draining(),
+                        )
+                    };
+                    match decision {
+                        llsched::pool::Resize::Grow(k) => {
+                            for _ in 0..k {
+                                if fleet.borrow_into(sid, &|_| true).is_some() {
+                                    continue;
+                                }
+                                let shape = fleet.shards[sid].shape;
+                                let cand = (0..n as NodeId).find(|&id| {
+                                    !fleet.in_pool(id)
+                                        && shape.node_fits(capacity[id as usize])
+                                });
+                                match cand {
+                                    Some(id) => {
+                                        if cluster_busy[id as usize] {
+                                            fleet.shards[sid].nodes.begin_drain(id);
+                                        } else {
+                                            fleet.shards[sid].nodes.lease(id);
+                                        }
+                                    }
+                                    None => break,
+                                }
+                            }
+                        }
+                        llsched::pool::Resize::Shrink(k) => {
+                            for _ in 0..k {
+                                if fleet.shards[sid].nodes.return_free().is_none() {
+                                    if let Some(d) = fleet.shards[sid].nodes.any_draining() {
+                                        fleet.shards[sid].nodes.cancel_drain(d);
+                                    } else {
+                                        break;
+                                    }
+                                }
+                            }
+                        }
+                        llsched::pool::Resize::Hold => {}
+                    }
+                }
+            }
+            fleet
+                .check_conservation()
+                .map_err(|e| format!("step {step}: {e}"))?;
+            let pooled: usize = fleet
+                .shards
+                .iter()
+                .map(|s| s.nodes.n_leased() + s.nodes.n_draining())
+                .sum();
+            let batch = (0..n as NodeId).filter(|&id| !fleet.in_pool(id)).count();
+            if pooled + batch != n {
+                return Err(format!("step {step}: shards + batch do not partition the cluster"));
+            }
+            // The capacity-class fence: no shard owns a node too narrow
+            // for its jobs.
+            for sh in &fleet.shards {
+                for id in 0..n as NodeId {
+                    if sh.nodes.in_pool(id) && !sh.shape.node_fits(capacity[id as usize]) {
+                        return Err(format!(
+                            "step {step}: shard {} owns too-narrow node {id}",
+                            sh.name
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Property 2: a one-shard fleet written in the `pools = [...]` list
+/// syntax schedules bit-for-bit like the legacy `pool_size` keys, from
+/// config text all the way through the scheduler, across fuzzed
+/// workloads and seeds.
+#[test]
+fn one_shard_fleet_matches_legacy_pool_keys_bit_for_bit() {
+    forall("one-shard fleet equivalence", 10, |g| {
+        let nodes = 2 + g.usize(0, 3) as u32;
+        let seed = g.int(0, u64::MAX - 1);
+        let size = 1 + g.usize(0, 2);
+        let max = size + g.usize(0, 3);
+        // The same elastic pool, written both ways. The list entry
+        // reproduces the legacy shape (walltime ≤ 30 s, any lanes).
+        let legacy = parser::parse(&format!(
+            "[run]\npool_size = {size}\npool_min = 0\npool_max = {max}\n"
+        ))
+        .map_err(|e| e.to_string())?;
+        let listed = parser::parse(&format!(
+            "[run]\npools = [{{shape = \"short\", size = {size}, max = {max}}}]\n"
+        ))
+        .map_err(|e| e.to_string())?;
+        let legacy_fleet = RunConfig::from_value(&legacy)
+            .map_err(|e| e.to_string())?
+            .fleet_config();
+        let listed_fleet = RunConfig::from_value(&listed)
+            .map_err(|e| e.to_string())?
+            .fleet_config();
+        if legacy_fleet.shards.len() != 1 || listed_fleet.shards.len() != 1 {
+            return Err("both configs must resolve to one shard".into());
+        }
+        // A mixed workload: pool-eligible volleys, long whole-node
+        // batch work, and core-level backfill bait.
+        let mut subs: Vec<(f64, JobSpec)> = vec![
+            (
+                0.5,
+                job("volley", 4 + g.usize(0, 12), ResourceRequest::WholeNode, g.f64(1.0, 20.0), 64),
+            ),
+            (
+                1.0 + g.f64(0.0, 3.0),
+                job("batch", 1 + g.usize(0, nodes as usize), ResourceRequest::WholeNode, g.f64(40.0, 80.0), 64),
+            ),
+        ];
+        for i in 0..3 + g.usize(0, 6) {
+            let cores = 1u32 << g.int(0, 4);
+            subs.push((
+                2.0 + i as f64,
+                job(
+                    &format!("small-{i}"),
+                    1,
+                    ResourceRequest::Cores { cores, mem_mib: 0 },
+                    g.f64(1.0, 10.0),
+                    cores,
+                ),
+            ));
+        }
+        let run = |fleet: FleetConfig| -> SimOutcome {
+            let mut sim = quiet_sim(nodes, seed).with_fleet(fleet);
+            let mut q = EventQueue::new();
+            for (at, spec) in &subs {
+                sim.submit_at(&mut q, *at, spec.clone());
+            }
+            sim.run(&mut q)
+        };
+        let a = run(legacy_fleet);
+        let b = run(listed_fleet);
+        if a.records.len() != b.records.len() {
+            return Err("record count diverged".into());
+        }
+        for (x, y) in a.records.iter().zip(&b.records) {
+            if x.state != y.state
+                || x.start_t != y.start_t
+                || x.end_t != y.end_t
+                || x.cleanup_t != y.cleanup_t
+                || x.cores != y.cores
+            {
+                return Err(format!("task {} diverged: {x:?} vs {y:?}", x.task));
+            }
+        }
+        if a.events_processed != b.events_processed {
+            return Err("event count diverged".into());
+        }
+        let (pa, pb) = (a.pool.expect("pool on"), b.pool.expect("pool on"));
+        if pa.launches != pb.launches
+            || pa.grows != pb.grows
+            || pa.shrinks != pb.shrinks
+            || pa.peak_leased != pb.peak_leased
+        {
+            return Err("pool accounting diverged".into());
+        }
+        if pa.invariant_violated || pb.invariant_violated {
+            return Err("conservation broken".into());
+        }
+        Ok(())
+    });
+}
+
+/// The shard configuration the acceptance regression uses at `nodes`:
+/// a general rapid-launch shard and a large-capacity shard. Floors
+/// equal the initial sizes so each family keeps a warm node set
+/// between volleys — the floor doubles as the anti-poaching bound the
+/// rebalancer respects, which is exactly what one merged FIFO cannot
+/// provide (a large-first volley soaks the shared warm set and the
+/// general wave starts cold).
+fn two_shard_fleet(nodes: usize) -> FleetConfig {
+    FleetConfig {
+        shards: vec![
+            ShardConfig {
+                name: "general".into(),
+                shape: JobShape::named("general").unwrap(),
+                pool: PoolConfig {
+                    size: nodes / 4,
+                    min: nodes / 4,
+                    max: nodes * 3 / 4,
+                    ..PoolConfig::disabled()
+                },
+            },
+            ShardConfig {
+                name: "large".into(),
+                shape: JobShape::named("large").unwrap(),
+                pool: PoolConfig {
+                    size: nodes / 16,
+                    min: nodes / 16,
+                    max: nodes / 4,
+                    ..PoolConfig::disabled()
+                },
+            },
+        ],
+    }
+}
+
+/// The "equivalent single merged pool": one shard whose shape is the
+/// union band and whose size/min/max are the shard sums (max clamped
+/// to the machine).
+fn merged_fleet(nodes: usize) -> FleetConfig {
+    FleetConfig {
+        shards: vec![ShardConfig {
+            name: "merged".into(),
+            shape: JobShape {
+                min_lanes: 0,
+                max_lanes: u32::MAX,
+                min_walltime: 0.0,
+                max_walltime: 60.0,
+            },
+            pool: PoolConfig {
+                size: nodes / 4 + nodes / 16,
+                min: nodes / 4 + nodes / 16,
+                max: nodes,
+                ..PoolConfig::disabled()
+            },
+        }],
+    }
+}
+
+/// Run `burst_mixed` through the scheduler directly and split launch
+/// latencies by volley family (job durations identify the family:
+/// 0.5 s = general, 45 s = large).
+fn run_mixed(nodes: u32, seed: u64, fleet: FleetConfig) -> (SimOutcome, Vec<f64>, Vec<f64>) {
+    let mix = ContentionMix::preset("burst_mixed", nodes).unwrap();
+    let subs = mix.generate(seed);
+    let mut sim = quiet_sim(nodes, seed).with_fleet(fleet);
+    let mut q = EventQueue::new();
+    let mut durations: Vec<f64> = Vec::new();
+    for sub in &subs {
+        durations.push(sub.spec.tasks[0].duration);
+        sim.submit_at(&mut q, sub.at, sub.spec.clone());
+    }
+    let out = sim.run(&mut q);
+    let mut general = Vec::new();
+    let mut large = Vec::new();
+    for r in &out.records {
+        let d = durations[r.job as usize];
+        let Some(start) = r.start_t else { continue };
+        let lat = start - r.submit_t;
+        if (d - 0.5).abs() < 1e-9 {
+            general.push(lat);
+        } else if (d - 45.0).abs() < 1e-9 {
+            large.push(lat);
+        }
+    }
+    (out, general, large)
+}
+
+/// Property 3: no cross-shard leak on the mixed scenario — every shard
+/// launch matches the shard's shape, the fleet conservation flag stays
+/// clean, and both families drain.
+#[test]
+fn mixed_volleys_route_to_their_shards_without_leaks() {
+    for seed in [3u64, 17, 29] {
+        let nodes = 32u32;
+        let (out, general, large) = run_mixed(nodes, seed, two_shard_fleet(nodes as usize));
+        assert!(
+            out.records.iter().all(|r| r.state == TaskState::Done),
+            "seed {seed}: all tasks drain"
+        );
+        let pool = out.pool.as_ref().expect("fleet on");
+        assert!(!pool.invariant_violated, "seed {seed}: conservation/fence broken");
+        assert!(!out.hold_invariant_violated, "seed {seed}");
+        assert_eq!(pool.shards.len(), 2);
+        assert_eq!(
+            pool.shards[0].launches as usize,
+            general.len(),
+            "seed {seed}: every general task went through the general shard"
+        );
+        assert_eq!(
+            pool.shards[1].launches as usize,
+            large.len(),
+            "seed {seed}: every large task went through the large shard"
+        );
+        assert_eq!(
+            pool.launches,
+            pool.shards.iter().map(|s| s.launches).sum::<u64>()
+        );
+        // Batch stream stayed on the batch path (150 s > every shape).
+        assert!(pool.launched_tasks.len() == (general.len() + large.len()));
+    }
+}
+
+/// Property 3b, capacity classes: on a heterogeneous cluster a wide
+/// shard (min_lanes 65) serves its jobs from wide nodes only.
+#[test]
+fn wide_shard_only_leases_wide_nodes() {
+    // Nodes 0-1: 128 cores; nodes 2-5: 64 cores.
+    let cluster = Cluster::heterogeneous(&[(2, 128, 192 * 1024), (4, 64, 192 * 1024)]);
+    let fleet = FleetConfig {
+        shards: vec![
+            ShardConfig::named("wide", 1, 1, 2).unwrap(),
+            ShardConfig::named("general", 2, 1, 4).unwrap(),
+        ],
+    };
+    let mut sim = quiet_sim_on(cluster, 7).with_fleet(fleet);
+    let mut q = EventQueue::new();
+    sim.submit_at(&mut q, 0.5, job("wide", 3, ResourceRequest::WholeNode, 0.5, 128));
+    sim.submit_at(&mut q, 0.5, job("narrow", 6, ResourceRequest::WholeNode, 0.5, 64));
+    let out = sim.run(&mut q);
+    assert!(out.records.iter().all(|r| r.state == TaskState::Done));
+    let pool = out.pool.expect("fleet on");
+    assert!(!pool.invariant_violated);
+    assert_eq!(pool.shards[0].launches, 3, "wide jobs through the wide shard");
+    assert_eq!(pool.shards[1].launches, 6, "narrow jobs through the general shard");
+    // The capacity-class fence end-to-end: every wide launch ran on a
+    // 128-core node (pool launches take the whole node).
+    for &tid in &pool.shards[0].launched_tasks {
+        assert_eq!(
+            out.records[tid as usize].cores, 128,
+            "wide task {tid} ran on a narrow node"
+        );
+    }
+}
+
+/// Property 4 + the acceptance regression: at 128 nodes, the two-shard
+/// fleet strictly beats the equivalent single merged pool on p95 launch
+/// latency for *both* volley families of `burst_mixed`. The mechanism:
+/// the preset alternates which family is submitted first each round, so
+/// one merged FIFO head-of-line-blocks the second family every round —
+/// the general wave waits while larges soak the warm leases, and the
+/// larges wait behind the whole general wave — while per-shard queues
+/// and warm floors isolate both.
+#[test]
+fn sharded_fleet_beats_merged_pool_on_per_class_p95() {
+    let nodes = 128u32;
+    let seed = 11;
+    let (sh_out, sh_general, sh_large) = run_mixed(nodes, seed, two_shard_fleet(nodes as usize));
+    let (mg_out, mg_general, mg_large) = run_mixed(nodes, seed, merged_fleet(nodes as usize));
+    for (label, out) in [("sharded", &sh_out), ("merged", &mg_out)] {
+        assert!(
+            out.records.iter().all(|r| r.state == TaskState::Done),
+            "{label}: all tasks drain"
+        );
+        assert!(!out.pool.as_ref().unwrap().invariant_violated, "{label}");
+    }
+    assert_eq!(sh_general.len(), mg_general.len(), "same general population");
+    assert_eq!(sh_large.len(), mg_large.len(), "same large population");
+    let p95 = |xs: &[f64]| stats::percentile(xs, 95.0);
+    let (sg, mg) = (p95(&sh_general), p95(&mg_general));
+    let (sl, ml) = (p95(&sh_large), p95(&mg_large));
+    assert!(
+        sg < mg,
+        "general p95: sharded {sg:.3}s must beat merged {mg:.3}s"
+    );
+    assert!(
+        sl < ml,
+        "large p95: sharded {sl:.3}s must beat merged {ml:.3}s"
+    );
+    // The fleet actually sharded the work.
+    let pool = sh_out.pool.as_ref().unwrap();
+    assert_eq!(pool.shards.len(), 2);
+    assert!(pool.shards.iter().all(|s| s.launches > 0));
+}
+
+/// Satellite: pool-aware hold planning. With every node leased, a
+/// blocked whole-node batch job used to get *no* hold at all (planning
+/// found no admissible node and gave up); now the hold's start estimate
+/// is borrowed from the fleet's drain forecast, and the job dispatches
+/// promptly once the shard shrinks.
+#[test]
+fn fully_fenced_cluster_still_plans_holds_from_the_drain_forecast() {
+    let cfg = PoolConfig {
+        size: 2,
+        min: 0,
+        max: 2,
+        ..PoolConfig::disabled()
+    };
+    let mut sim = quiet_sim(2, 5).with_pool(cfg);
+    let mut q = EventQueue::new();
+    // Both nodes leased at bootstrap; two 25 s pool jobs occupy them.
+    sim.submit_at(&mut q, 0.0, job("pool", 2, ResourceRequest::WholeNode, 25.0, 64));
+    // A long whole-node batch job blocks behind the fully-fenced
+    // cluster at t = 1.
+    sim.submit_at(&mut q, 1.0, job("held", 1, ResourceRequest::WholeNode, 100.0, 64));
+    let out = sim.run(&mut q);
+    assert!(out.records.iter().all(|r| r.state == TaskState::Done));
+    assert!(
+        out.max_active_holds >= 1,
+        "the blocked job must hold a reservation even though every \
+         candidate node is pool-fenced (PR 4 skipped it)"
+    );
+    assert!(!out.hold_invariant_violated);
+    let pool = out.pool.as_ref().unwrap();
+    assert!(!pool.invariant_violated);
+    assert!(pool.shrinks > 0, "the idle shard gave its nodes back");
+    // The held job starts once the pool jobs drain (~25 s) and the
+    // shard returns a node — not at 0, and without waiting for any
+    // longer fallback.
+    let held = out
+        .records
+        .iter()
+        .find(|r| r.cores == 64 && r.end_t.unwrap() - r.start_t.unwrap() > 90.0)
+        .expect("held job ran");
+    let start = held.start_t.unwrap();
+    assert!(
+        (24.0..40.0).contains(&start),
+        "held job started at {start}, expected shortly after the pool drained"
+    );
+}
+
+/// Satellite: drain-candidate selection by expected free time. Two busy
+/// batch nodes (one freeing at ~41 s, one at ~101 s); the grow path
+/// must earmark the one that frees soonest, so the backlogged shard
+/// starts serving decades earlier than the old lowest-id rule would.
+#[test]
+fn grow_drains_the_node_expected_to_free_soonest() {
+    let cfg = PoolConfig {
+        size: 1,
+        min: 1,
+        max: 2,
+        ..PoolConfig::disabled()
+    };
+    let mut sim = quiet_sim(3, 9).with_pool(cfg);
+    let mut q = EventQueue::new();
+    // Node 0 is leased at bootstrap. Two batch jobs occupy the rest:
+    // the 100 s job lands on node 1 (first fit), the 40 s job on node 2.
+    sim.submit_at(&mut q, 0.0, job("slow", 1, ResourceRequest::WholeNode, 100.0, 64));
+    sim.submit_at(&mut q, 0.2, job("fast", 1, ResourceRequest::WholeNode, 40.0, 64));
+    // A volley of 20 s pool jobs forces a grow with no idle batch node:
+    // the drain candidate decides when the second node joins.
+    sim.submit_at(&mut q, 1.0, job("volley", 6, ResourceRequest::WholeNode, 20.0, 64));
+    let out = sim.run(&mut q);
+    assert!(out.records.iter().all(|r| r.state == TaskState::Done));
+    let pool = out.pool.as_ref().unwrap();
+    assert!(!pool.invariant_violated);
+    assert!(pool.grows >= 2, "bootstrap lease + drain both count");
+    // With the expected-free-time rule the 40 s node (node 2) is
+    // drained and joins at ~41 s; six 20 s jobs then finish by ~81 s.
+    // The old lowest-id rule drained the 100 s node and finished after
+    // ~101 s.
+    let volley_last_end = out
+        .records
+        .iter()
+        .filter(|r| {
+            let d = r.end_t.unwrap() - r.start_t.unwrap();
+            (19.0..21.0).contains(&d)
+        })
+        .map(|r| r.end_t.unwrap())
+        .fold(f64::NEG_INFINITY, f64::max);
+    assert!(
+        volley_last_end < 95.0,
+        "volley drained at {volley_last_end}; draining the slow node would have \
+         pushed it past 100 s"
+    );
+    // Both batch jobs ran undisturbed to completion.
+    for (name_dur, lo) in [(100.0, 100.0), (40.0, 40.0)] {
+        assert!(
+            out.records.iter().any(|r| {
+                let d = r.end_t.unwrap() - r.start_t.unwrap();
+                (d - name_dur).abs() < 1.0 && r.end_t.unwrap() >= lo
+            }),
+            "batch job of {name_dur}s completed normally"
+        );
+    }
+}
+
+/// The borrow path end-to-end: a shard whose volley outgrows its leases
+/// borrows the sibling's idle nodes (sibling queue empty, above its
+/// floor) instead of draining busy batch nodes.
+#[test]
+fn growing_shard_borrows_idle_sibling_nodes() {
+    let nodes = 8u32;
+    let fleet = FleetConfig {
+        shards: vec![
+            // The donor: 4 warm leases, floor 1, nothing to do.
+            ShardConfig {
+                name: "general".into(),
+                shape: JobShape::named("general").unwrap(),
+                pool: PoolConfig { size: 4, min: 1, max: 6, ..PoolConfig::disabled() },
+            },
+            // The receiver: 1 warm lease, a 6-task volley incoming.
+            ShardConfig {
+                name: "large".into(),
+                shape: JobShape::named("large").unwrap(),
+                pool: PoolConfig { size: 1, min: 1, max: 6, ..PoolConfig::disabled() },
+            },
+        ],
+    };
+    let mut sim = quiet_sim(nodes, 3).with_fleet(fleet);
+    let mut q = EventQueue::new();
+    // Batch work occupies the three unleased nodes, so the only grow
+    // sources are the sibling's idle leases (and useless long drains).
+    sim.submit_at(&mut q, 0.0, job("batch", 3, ResourceRequest::WholeNode, 300.0, 64));
+    sim.submit_at(&mut q, 1.0, job("largevolley", 6, ResourceRequest::WholeNode, 10.0, 64));
+    let out = sim.run(&mut q);
+    assert!(out.records.iter().all(|r| r.state == TaskState::Done));
+    let pool = out.pool.as_ref().unwrap();
+    assert!(!pool.invariant_violated);
+    assert!(
+        pool.borrows >= 1,
+        "the large shard must borrow sibling-free nodes (got {} borrows)",
+        pool.borrows
+    );
+    assert_eq!(pool.shards[1].launches, 6, "volley served by the large shard");
+    // The volley never waits for the 300 s batch nodes: with borrowed
+    // capacity it drains well before any drain could deliver.
+    let volley_last_end = out
+        .records
+        .iter()
+        .filter(|r| {
+            let d = r.end_t.unwrap() - r.start_t.unwrap();
+            (9.0..11.0).contains(&d)
+        })
+        .map(|r| r.end_t.unwrap())
+        .fold(f64::NEG_INFINITY, f64::max);
+    assert!(
+        volley_last_end < 60.0,
+        "volley drained at {volley_last_end}: borrowing should beat any 300 s drain"
+    );
+}
