@@ -2,7 +2,7 @@
 //!
 //! The acceptance bar for the placement subsystem: indexed placement
 //! beats the O(N) scan by ≥10× for single-task dispatch at 4096 nodes.
-//! Three measurements per scale (512 / 4096 / 16384 nodes):
+//! Three measurements per scale (512 / 4096 / 16384 / 65536 nodes):
 //!
 //!  1. single-task core-level dispatch on a nearly-full cluster — the
 //!     worst case for first-fit scans (the fitting node is the last);
@@ -24,9 +24,15 @@
 use llsched::bench::{bench, black_box, fmt_secs, section, BenchOpts};
 use llsched::cluster::Cluster;
 use llsched::placement::{FreeIndex, PlacementEngine, Strategy};
+use llsched::util::json::Json;
 use std::time::Duration;
 
-const SCALES: [u32; 3] = [512, 4096, 16384];
+const SCALES: [u32; 4] = [512, 4096, 16384, 65_536];
+
+/// Above this scale the O(N²) scan-based machine fill is skipped (it
+/// would take minutes at 65,536 nodes); the indexed fill still runs, so
+/// the large-scale cells report absolute indexed throughput only.
+const MAX_SCAN_FILL: u32 = 16_384;
 
 /// Cluster with every node but the last fully allocated.
 fn near_full(nodes: u32) -> Cluster {
@@ -86,6 +92,7 @@ fn main() {
         max_wall: Duration::from_secs(30),
     };
     let mut dispatch_speedups = Vec::new();
+    let mut rows: Vec<Json> = Vec::new();
 
     let scales: Vec<u32> = SCALES
         .iter()
@@ -154,17 +161,41 @@ fn main() {
             iters: 3,
             max_wall: Duration::from_secs(30),
         };
-        let scan_fill = bench(&format!("scan  fill {nodes} whole nodes"), fill_opts, |_| {
-            black_box(fill_scan(nodes))
-        });
-        println!("{}", scan_fill.line());
+        let scan_fill_p50 = if nodes <= MAX_SCAN_FILL {
+            let scan_fill = bench(&format!("scan  fill {nodes} whole nodes"), fill_opts, |_| {
+                black_box(fill_scan(nodes))
+            });
+            println!("{}", scan_fill.line());
+            Some(scan_fill.summary.p50)
+        } else {
+            println!("scan  fill {nodes} whole nodes: skipped (O(N²) scan above {MAX_SCAN_FILL} nodes)");
+            None
+        };
         let index_fill = bench(&format!("index fill {nodes} whole nodes"), fill_opts, |_| {
             black_box(fill_indexed(nodes))
         });
         println!("{}", index_fill.line());
-        println!(
-            "  → machine fill: speedup {:.0}x",
-            scan_fill.summary.p50 / index_fill.summary.p50.max(1e-12)
+        let fill_rate = nodes as f64 / index_fill.summary.p50.max(1e-12);
+        match scan_fill_p50 {
+            Some(p50) => println!(
+                "  → machine fill: speedup {:.0}x (indexed {fill_rate:.0} placements/s)",
+                p50 / index_fill.summary.p50.max(1e-12)
+            ),
+            None => println!("  → machine fill: indexed {fill_rate:.0} placements/s"),
+        }
+        rows.push(
+            Json::obj()
+                .set("nodes", nodes)
+                .set("dispatch_speedup", speedup)
+                .set(
+                    "whole_node_lookup_speedup",
+                    scan_idle.summary.p50 / index_idle.summary.p50.max(1e-12),
+                )
+                .set("indexed_fill_placements_per_s", fill_rate)
+                .set(
+                    "scan_fill_wall_s",
+                    scan_fill_p50.map(Json::Num).unwrap_or(Json::Null),
+                ),
         );
     }
 
@@ -191,6 +222,17 @@ fn main() {
             }
         };
         println!("single-task dispatch at {nodes:>6} nodes: {speedup:>8.0}x  [{verdict}]");
+    }
+
+    let report = Json::obj()
+        .set("bench", "bench_placement")
+        .set("command", std::env::args().collect::<Vec<_>>().join(" "))
+        .set("scales", Json::Arr(rows))
+        .set("passed", !failed);
+    if let Err(e) = std::fs::write("BENCH_placement.json", report.to_pretty()) {
+        eprintln!("warning: could not write BENCH_placement.json: {e}");
+    } else {
+        println!("\nwrote BENCH_placement.json");
     }
     if failed {
         std::process::exit(1);

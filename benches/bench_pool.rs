@@ -18,17 +18,51 @@
 //! `--max-scale N` / `--max-jobs J` truncate the sweep (CI smoke);
 //! `--require X` enforces a ≥X× jobs-per-second speedup at the largest
 //! (scale, jobs) cell actually run, so perf regressions fail PRs.
+//!
+//! On top of the dispatch microbenches, the **scheduler-trace section**
+//! drives the full event-driven scheduler (submit → register → pool
+//! dispatch → completion → release) over a short-job trace and measures
+//! end-to-end simulated jobs per wall-clock second. The shipping
+//! wake-driven hot path runs the full trace — up to 1M jobs × 10 tasks
+//! (10M tasks) at 65,536 nodes on the untruncated sweep — against the
+//! pre-PR hot path (polled dispatch loop + the O(arena) legacy register
+//! scan). The legacy path is quadratic in trace length, so it is
+//! measured at two capped sizes and projected to the full trace with an
+//! exact `a·N + b·N²` fit; the reported speedup is *conservative* — the
+//! quadratic term only grows with N, so the true legacy slowdown at the
+//! full trace is at least the projected one. Results land in
+//! `BENCH_pool.json` at the crate root.
 
 use llsched::bench::{bench, black_box, section, BenchOpts};
 use llsched::cluster::{Cluster, NodeId};
 use llsched::placement::{PlacementEngine, Strategy};
-use llsched::pool::{FleetConfig, NodeDispatcher, NodePool, PoolFleet, ShardConfig};
-use llsched::scheduler::job::Placement;
+use llsched::pool::{FleetConfig, NodeDispatcher, NodePool, PoolConfig, PoolFleet, ShardConfig};
+use llsched::scheduler::core::{SchedulerSim, TaskModel};
+use llsched::scheduler::costmodel::CostModel;
+use llsched::scheduler::job::{
+    ComputeBatch, JobSpec, Placement, ResourceRequest, SchedTaskSpec, TaskState,
+};
+use llsched::scheduler::noise::NoiseModel;
+use llsched::scheduler::HotPath;
+use llsched::sim::EventQueue;
+use llsched::util::json::Json;
 use std::collections::VecDeque;
 use std::time::Duration;
 
 const SCALES: [u32; 2] = [512, 4096];
 const JOB_COUNTS: [usize; 3] = [1_000, 10_000, 100_000];
+
+/// Scheduler-trace cells: (cluster nodes, jobs). Each job is a 10-task
+/// whole-node array of 0.5 s tasks, so the last cell is the 10M-task /
+/// 65,536-node trace the event-calendar hot path is sized for.
+const SIM_POINTS: [(u32, usize); 3] = [(512, 5_000), (4_096, 30_000), (65_536, 1_000_000)];
+
+/// Tasks per trace job (whole-node, pool-routed).
+const TRACE_TASKS_PER_JOB: usize = 10;
+
+/// Largest trace the quadratic legacy path is actually run at; beyond
+/// this its cost is projected from the fit (see the module docs).
+const LEGACY_CAPS: [usize; 2] = [10_000, 30_000];
 
 /// Full-placement path: every job goes through the engine (index
 /// query, whole-node core mask + memory allocation, index delta), the
@@ -123,6 +157,84 @@ fn churn_pool(nodes: u32, jobs: usize) -> usize {
     done
 }
 
+/// One trace job: a short whole-node array the fleet routes to the
+/// rapid-launch pool (duration well under the 30 s short threshold).
+fn trace_job() -> JobSpec {
+    JobSpec {
+        name: "trace".into(),
+        tasks: vec![
+            SchedTaskSpec {
+                request: ResourceRequest::WholeNode,
+                duration: 0.5,
+                batch: ComputeBatch { count: 1, each: 0.5 },
+                lanes: 64,
+            };
+            TRACE_TASKS_PER_JOB
+        ],
+        reservation: None,
+        priority: 0,
+        preemptable: false,
+    }
+}
+
+/// Drive the full scheduler over `jobs` trace jobs and return completed
+/// tasks. Arrivals every 0.6 s of virtual time stay just above the
+/// per-job server cost (0.5 s registration + ~8 ms of pool ops), so the
+/// server runs near saturation without unbounded queue growth — the
+/// steady-state regime where hot-path cost per event dominates.
+fn trace_sim(nodes: u32, jobs: usize, hp: HotPath, legacy: bool) -> usize {
+    let mut sim = SchedulerSim::new(
+        Cluster::tx_green(nodes),
+        CostModel::slurm_like_tx_green(),
+        NoiseModel::dedicated(),
+        42,
+    )
+    .with_task_model(TaskModel {
+        startup: 0.0,
+        jitter_sigma: 0.0,
+        p_node_late: 0.0,
+        late_range: (0.0, 0.0),
+    })
+    .with_placement(Strategy::NodeBased)
+    .with_backfill(true)
+    .with_pool(PoolConfig { size: 64, min: 32, max: 256, ..PoolConfig::disabled() })
+    .with_hot_path(hp)
+    .with_legacy_register(legacy)
+    .without_timeline();
+    let mut q = EventQueue::new();
+    for j in 0..jobs {
+        sim.submit_at(&mut q, 0.1 + 0.6 * j as f64, trace_job());
+    }
+    let out = sim.run(&mut q);
+    let done = out
+        .records
+        .iter()
+        .filter(|r| r.state == TaskState::Done)
+        .count();
+    assert_eq!(done, jobs * TRACE_TASKS_PER_JOB, "trace did not drain");
+    let pool = out.pool.expect("trace runs with the pool on");
+    assert_eq!(pool.launches as usize, done, "every trace task is pool-routed");
+    done
+}
+
+/// Project the legacy runtime at `n` jobs from two capped measurements
+/// via an exact `t(N) = a·N + b·N²` fit (the legacy register scan is
+/// linear in arena size per job, so total cost is quadratic in trace
+/// length). `b` is clamped at 0 so noise can only make the projection
+/// *kinder* to the legacy path.
+fn project_quadratic(p1: (usize, f64), p2: (usize, f64), n: usize) -> f64 {
+    let (n1, t1) = (p1.0 as f64, p1.1);
+    let (n2, t2) = (p2.0 as f64, p2.1);
+    if (n1 - n2).abs() < 0.5 {
+        return t1 / n1 * n as f64;
+    }
+    let b = ((t2 / n2) - (t1 / n1)) / (n2 - n1);
+    let b = b.max(0.0);
+    let a = (t1 / n1 - b * n1).max(0.0);
+    let x = n as f64;
+    a * x + b * x * x
+}
+
 /// Parse `--flag value` from argv (panics on malformed input: a bench
 /// invocation error should fail loudly, not silently run the default).
 fn arg_value(args: &[String], flag: &str) -> Option<f64> {
@@ -159,6 +271,7 @@ fn main() {
     assert!(!job_counts.is_empty(), "--max-jobs below the smallest count");
 
     let mut speedups: Vec<(u32, usize, f64)> = Vec::new();
+    let mut dispatch_rows: Vec<Json> = Vec::new();
     for &nodes in &scales {
         section(&format!("{nodes} nodes"));
         for &jobs in &job_counts {
@@ -184,7 +297,88 @@ fn main() {
                  ({speedup:.0}x), 2-shard fleet {fleet_jps:.0} jobs/s ({fleet_speedup:.0}x)"
             );
             speedups.push((nodes, jobs, speedup));
+            dispatch_rows.push(
+                Json::obj()
+                    .set("nodes", nodes)
+                    .set("jobs", jobs)
+                    .set("engine_jobs_per_s", engine_jps)
+                    .set("pool_jobs_per_s", pool_jps)
+                    .set("fleet_jobs_per_s", fleet_jps)
+                    .set("speedup", speedup),
+            );
         }
+    }
+
+    // ── Scheduler-trace section: the event-calendar hot path end to
+    // end, wake-driven vs the pre-PR (polled + legacy-register) loop.
+    let mut trace_rows: Vec<Json> = Vec::new();
+    let mut trace_checks: Vec<(u32, usize, f64, bool)> = Vec::new();
+    for &(nodes, cell_jobs) in &SIM_POINTS {
+        if max_scale.map(|m| nodes > m).unwrap_or(false) {
+            continue;
+        }
+        let jobs = max_jobs.map(|m| cell_jobs.min(m)).unwrap_or(cell_jobs);
+        let tasks = jobs * TRACE_TASKS_PER_JOB;
+        section(&format!("scheduler trace: {nodes} nodes, {jobs} jobs ({tasks} tasks)"));
+        let trace_opts = BenchOpts {
+            warmup: 0,
+            iters: if jobs >= 100_000 { 1 } else { 3 },
+            max_wall: Duration::from_secs(600),
+        };
+        let wake = bench(&format!("wake-driven trace {jobs} jobs"), trace_opts, |_| {
+            black_box(trace_sim(nodes, jobs, HotPath::WakeDriven, false))
+        });
+        println!("{}", wake.line());
+        let wake_jps = jobs as f64 / wake.summary.p50.max(1e-12);
+
+        // The legacy path at its caps (full trace when it fits).
+        let mut caps: Vec<usize> = LEGACY_CAPS.iter().map(|&c| c.min(jobs)).collect();
+        caps.dedup();
+        let mut legacy_pts: Vec<(usize, f64)> = Vec::new();
+        for &cap in &caps {
+            let legacy = bench(
+                &format!("legacy (polled+scan) trace {cap} jobs"),
+                trace_opts,
+                |_| black_box(trace_sim(nodes, cap, HotPath::Polled, true)),
+            );
+            println!("{}", legacy.line());
+            legacy_pts.push((cap, legacy.summary.p50));
+        }
+        let projected = jobs > *caps.last().expect("non-empty caps");
+        let legacy_time = if projected {
+            project_quadratic(legacy_pts[0], *legacy_pts.last().expect("caps"), jobs)
+        } else {
+            legacy_pts.last().expect("caps").1
+        };
+        let legacy_jps = jobs as f64 / legacy_time.max(1e-12);
+        let speedup = wake_jps / legacy_jps.max(1e-12);
+        println!(
+            "  → {jobs} jobs ({tasks} tasks): wake-driven {wake_jps:.0} jobs/s, \
+             pre-PR {legacy_jps:.0} jobs/s{} ({speedup:.1}x)",
+            if projected { " [projected]" } else { "" }
+        );
+        trace_rows.push(
+            Json::obj()
+                .set("nodes", nodes)
+                .set("jobs", jobs)
+                .set("tasks", tasks)
+                .set("wake_driven_jobs_per_s", wake_jps)
+                .set("legacy_jobs_per_s", legacy_jps)
+                .set("legacy_projected", projected)
+                .set(
+                    "legacy_measured_points",
+                    Json::Arr(
+                        legacy_pts
+                            .iter()
+                            .map(|&(n, t)| {
+                                Json::obj().set("jobs", n).set("wall_s", t)
+                            })
+                            .collect(),
+                    ),
+                )
+                .set("speedup", speedup),
+        );
+        trace_checks.push((nodes, jobs, speedup, projected));
     }
 
     section("acceptance");
@@ -217,6 +411,37 @@ fn main() {
         println!(
             "node-based dispatch at {nodes:>5} nodes / {jobs:>6} jobs: {speedup:>7.0}x  [{verdict}]"
         );
+    }
+    // The hot-path bar: at the 65,536-node / 10M-task trace the
+    // wake-driven loop must beat the pre-PR hot path ≥ 5× on jobs/sec.
+    // Smaller (CI-truncated) cells are informational — at those sizes
+    // the legacy quadratic term barely shows.
+    for (nodes, jobs, speedup, projected) in &trace_checks {
+        let floor = if *nodes >= 65_536 { Some(5.0) } else { None };
+        let verdict = match floor {
+            None => "info".to_string(),
+            Some(f) if *speedup >= f => format!("PASS (≥{f:.0}x required)"),
+            Some(f) => {
+                failed = true;
+                format!("FAIL (≥{f:.0}x required)")
+            }
+        };
+        println!(
+            "wake-driven trace at {nodes:>5} nodes / {jobs:>7} jobs: {speedup:>7.1}x{}  [{verdict}]",
+            if *projected { " (projected baseline)" } else { "" }
+        );
+    }
+
+    let report = Json::obj()
+        .set("bench", "bench_pool")
+        .set("command", std::env::args().collect::<Vec<_>>().join(" "))
+        .set("dispatch", Json::Arr(dispatch_rows))
+        .set("trace", Json::Arr(trace_rows))
+        .set("passed", !failed);
+    if let Err(e) = std::fs::write("BENCH_pool.json", report.to_pretty()) {
+        eprintln!("warning: could not write BENCH_pool.json: {e}");
+    } else {
+        println!("\nwrote BENCH_pool.json");
     }
     if failed {
         std::process::exit(1);

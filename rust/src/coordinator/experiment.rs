@@ -11,7 +11,7 @@ use crate::metrics::overhead::OverheadPoint;
 use crate::metrics::timeline::UtilizationSeries;
 use crate::placement::Strategy;
 use crate::pool::{FleetConfig, PoolConfig, ShardConfig};
-use crate::scheduler::core::{SchedulerSim, SimOutcome};
+use crate::scheduler::core::{HotPath, SchedulerSim, SimOutcome};
 use crate::scheduler::costmodel::CostModel;
 use crate::scheduler::noise::NoiseModel;
 use crate::scheduler::queue::AgingPolicy;
@@ -167,6 +167,10 @@ pub struct ContentionOpts {
     /// Preemptive backfill: kill overdue backfilled tasks when their
     /// node's hold comes due.
     pub preempt_overdue: bool,
+    /// Dispatch-loop discipline: wake-driven (default) or the
+    /// historical polled loop — same schedule either way (pinned by
+    /// `rust/tests/event_equivalence.rs`), different per-pick cost.
+    pub hot_path: HotPath,
     pub seed: u64,
 }
 
@@ -183,6 +187,7 @@ impl ContentionOpts {
             pool: PoolConfig::disabled(),
             pools: Vec::new(),
             preempt_overdue: false,
+            hot_path: HotPath::default(),
             seed,
         }
     }
@@ -277,7 +282,8 @@ pub fn run_contention_with(
     .with_aging(opts.aging)
     .with_walltime_error(opts.walltime_error)
     .with_fleet(fleet)
-    .with_preempt_overdue(opts.preempt_overdue);
+    .with_preempt_overdue(opts.preempt_overdue)
+    .with_hot_path(opts.hot_path);
     let mut q = EventQueue::new();
     let subs = mix.generate(seed);
     if subs.is_empty() {

@@ -444,6 +444,7 @@ fn cmd_contention(args: &Args) -> Result<()> {
         pool,
         pools: pools.clone(),
         preempt_overdue,
+        hot_path: llsched::scheduler::HotPath::default(),
         seed,
     };
     let mut results: Vec<ContentionResult> = Vec::new();

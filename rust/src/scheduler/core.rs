@@ -49,6 +49,12 @@ pub enum SchedEvent {
     NoiseLarge,
     /// Preemption of a (spot) job is requested.
     Preempt(JobId),
+    /// A fleet shard's resize cooldown expired (wake-driven hot path).
+    /// Scheduled by every resize apply; the handler only marks the
+    /// shard for attention — the decision itself still happens inside
+    /// `pick_next` at the next natural server op boundary, so the
+    /// schedule is bit-for-bit the polled one.
+    ShardWake(u32),
 }
 
 /// Operations the server can be busy with.
@@ -118,6 +124,51 @@ pub struct JobMeta {
     pub priority: i32,
     pub preemptable: bool,
     pub submit_t: Time,
+    /// First task id of this job's contiguous task-slot range (tasks
+    /// are materialized in one block at registration, so `Register`
+    /// iterates `first_task..first_task + task_count` instead of
+    /// scanning the whole task arena).
+    pub first_task: TaskId,
+    /// Number of task slots in the range.
+    pub task_count: u32,
+}
+
+impl JobMeta {
+    /// Inert filler for never-registered job ids (arena slots must stay
+    /// dense; a placeholder is cheaper than an `Option` on every read).
+    pub(crate) fn placeholder() -> JobMeta {
+        JobMeta {
+            id: 0,
+            name: String::new(),
+            array_size: 0,
+            reservation: None,
+            priority: 0,
+            preemptable: false,
+            submit_t: 0.0,
+            first_task: 0,
+            task_count: 0,
+        }
+    }
+}
+
+/// Which dispatch-loop discipline `pick_next` runs.
+///
+/// * [`HotPath::Polled`] — the historical discipline: every pick scans
+///   all fleet shards for due resizes and re-runs the hold/backfill
+///   scans unconditionally.
+/// * [`HotPath::WakeDriven`] — the event-calendar discipline: shard
+///   cooldown expiries arrive as [`SchedEvent::ShardWake`] events and
+///   state transitions mark dirty flags, so a pick skips shards and
+///   backfill scans that provably cannot act. The *schedule* is
+///   bit-for-bit identical (pinned by `rust/tests/event_equivalence.rs`);
+///   only the per-pick work shrinks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum HotPath {
+    /// Scan everything on every pick (pre-event-calendar behaviour).
+    Polled,
+    /// Skip work unless a wake event or dirty flag says it can matter.
+    #[default]
+    WakeDriven,
 }
 
 /// How much server time went to each class of work.
@@ -281,6 +332,33 @@ pub(crate) struct PoolState {
     /// Finished pool tasks awaiting their (cheap) release op, tagged
     /// with the shard that launched them.
     pub(crate) completions: VecDeque<(u32, TaskId)>,
+    /// Wake-driven dirty flags, one per shard: set at every state
+    /// transition that could change the shard's resize decision or let
+    /// a dispatch proceed; cleared by `pick_next` once a pick finds
+    /// nothing to do for the shard. `Polled` mode ignores them.
+    pub(crate) attention: Vec<bool>,
+    /// Outstanding [`SchedEvent::ShardWake`] events per shard. A shard
+    /// whose wake is still in flight may become due *at the same
+    /// instant* as another event that pops first; the counter keeps the
+    /// due check live over exactly that window so wake-driven picks see
+    /// what polled picks see.
+    pub(crate) wakes_pending: Vec<u32>,
+}
+
+impl PoolState {
+    #[inline]
+    pub(crate) fn mark(&mut self, sid: usize) {
+        if let Some(a) = self.attention.get_mut(sid) {
+            *a = true;
+        }
+    }
+
+    #[inline]
+    pub(crate) fn mark_all(&mut self) {
+        for a in self.attention.iter_mut() {
+            *a = true;
+        }
+    }
 }
 
 impl SimOutcome {
@@ -336,6 +414,25 @@ pub struct SchedulerSim {
     pub(crate) task_model: TaskModel,
     pub(crate) rng: Rng,
     pub(crate) production: bool,
+
+    /// Dispatch-loop discipline (see [`HotPath`]).
+    pub(crate) hot_path: HotPath,
+    /// Wake-driven gate on the hold-ready and backfill-admission scans:
+    /// set at every transition that can create a ready hold or an
+    /// admissible backfill; cleared once both scans come up empty.
+    pub(crate) backfill_dirty: bool,
+    /// Scratch buffer for hold iteration in `pick_next` /
+    /// `signal_overdue_backfills` — reused across picks so the hot loop
+    /// never allocates (the two sites run sequentially, never nested).
+    pub(crate) hold_scratch: Vec<Hold>,
+    /// Tasks not yet DONE (counting PENDING, RUNNING and COMPLETING) —
+    /// keeps `has_outstanding_work` O(1) instead of scanning the arena.
+    pub(crate) not_done: usize,
+    /// Bench-only compatibility switch: reproduce the pre-arena
+    /// `Register` that scanned every task slot per job instead of
+    /// walking the job's contiguous range. Never enabled outside
+    /// `benches/` and the equivalence suite.
+    pub(crate) legacy_register: bool,
 
     pub(crate) specs: Vec<Option<JobSpec>>, // consumed at Submit
     pub(crate) jobs: Vec<JobMeta>,
@@ -404,6 +501,11 @@ impl SchedulerSim {
             task_model: TaskModel::default(),
             rng,
             production,
+            hot_path: HotPath::default(),
+            backfill_dirty: true,
+            hold_scratch: Vec::new(),
+            not_done: 0,
+            legacy_register: false,
             op_scale,
             specs: Vec::new(),
             jobs: Vec::new(),
@@ -540,13 +642,41 @@ impl SchedulerSim {
             let capacity: Vec<u32> = (0..n as NodeId)
                 .map(|i| self.engine.index().node_capacity(i))
                 .collect();
+            let fleet = PoolFleet::new(capacity, &cfg);
+            let n_shards = fleet.shards.len();
             self.pool = Some(PoolState {
-                fleet: PoolFleet::new(capacity, &cfg),
+                fleet,
                 completions: VecDeque::new(),
+                // Every shard starts dirty: the bootstrap lease happens
+                // before the first event, so the first pick must look.
+                attention: vec![true; n_shards],
+                wakes_pending: vec![0; n_shards],
             });
         } else {
             self.pool = None;
         }
+        self
+    }
+
+    /// Select the dispatch-loop discipline (see [`HotPath`]). The
+    /// default is [`HotPath::WakeDriven`]; `Polled` keeps the historical
+    /// scan-everything loop for the equivalence suite and benchmarks.
+    pub fn with_hot_path(mut self, hp: HotPath) -> Self {
+        self.hot_path = hp;
+        self
+    }
+
+    /// The active dispatch-loop discipline.
+    pub fn hot_path(&self) -> HotPath {
+        self.hot_path
+    }
+
+    /// Bench-only: reproduce the pre-arena O(tasks) per-job `Register`
+    /// scan (the schedule is unchanged — only the modelled server walks
+    /// a longer data structure). Used by `benches/bench_pool.rs` to
+    /// measure the arena speedup and by the equivalence suite.
+    pub fn with_legacy_register(mut self, on: bool) -> Self {
+        self.legacy_register = on;
         self
     }
 
@@ -602,6 +732,12 @@ impl SchedulerSim {
     /// cluster moves into the sim at [`Self::new`] and nothing mutates
     /// it between then and here.
     pub fn run(mut self, q: &mut EventQueue<SchedEvent>) -> SimOutcome {
+        // The full workload is known up front: size the job and task
+        // arenas once so the op path never grows a Vec mid-run (a 10M
+        // task trace would otherwise pay ~24 doubling copies).
+        let n_tasks: usize = self.specs.iter().flatten().map(|s| s.tasks.len()).sum();
+        self.jobs.reserve(self.specs.len());
+        self.tasks.reserve(n_tasks);
         self.bootstrap_pool();
         self.prime_noise(q);
         let (final_time, events) = sim::run(&mut self, q);
@@ -693,7 +829,8 @@ impl SchedulerSim {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::scheduler::job::{ComputeBatch, ResourceRequest, TaskState};
+    use crate::scheduler::accounting::TaskRecord;
+    use crate::scheduler::job::{ComputeBatch, ResourceRequest, TaskId, TaskState};
 
     fn uniform_job(
         n_tasks: usize,
@@ -1082,6 +1219,71 @@ mod tests {
         assert_eq!(pool.launches, 0, "long jobs never route to the pool");
         assert!(!pool.invariant_violated, "batch placements avoided the lease");
         assert!(out.busy.dispatch > 0.0);
+    }
+
+    /// Hand-materialize a pending whole-node task slot (unit-level
+    /// fixture for `pick_next` tests that bypass the submit path).
+    fn pending_whole_node_slot(tid: TaskId) -> TaskSlot {
+        TaskSlot {
+            spec: SchedTaskSpec {
+                request: ResourceRequest::WholeNode,
+                duration: 50.0,
+                batch: ComputeBatch { count: 1, each: 50.0 },
+                lanes: 64,
+            },
+            est_duration: 50.0,
+            enqueued_at: 0.0,
+            pool_node: None,
+            backfilled: false,
+            kill_signalled: false,
+            record: TaskRecord {
+                task: tid,
+                job: 0,
+                state: TaskState::Pending,
+                submit_t: 0.0,
+                start_t: None,
+                end_t: None,
+                cleanup_t: None,
+                cores: 0,
+            },
+            placement: None,
+            priority: 0,
+        }
+    }
+
+    #[test]
+    fn multi_hold_ready_scan_dispatches_and_unfences_without_cloning() {
+        // Two active holds while the head is blocked: task 0's hold is
+        // stale (the task was cancelled, so it is no longer pending) and
+        // must be unfenced; task 1's node drained, so it dispatches out
+        // of order. Exercises the scratch-buffer hold iteration that
+        // replaced the per-pick `holds().to_vec()` clone.
+        let mut sim = quiet_sim(2).with_backfill(true).with_holds(2);
+        sim.jobs.push(JobMeta::placeholder());
+        sim.tasks.push(pending_whole_node_slot(0));
+        sim.tasks.push(pending_whole_node_slot(1));
+        sim.pending.push(1, 0, 0.0);
+        sim.hol_blocked = true;
+        assert!(sim.ledger.set_hold(0, 0, 0.0));
+        assert!(sim.ledger.set_hold(1, 1, 0.0));
+
+        let picked = sim.pick_next(0.0);
+        match picked {
+            Some((Op::Dispatch(tid), _)) => assert_eq!(tid, 1, "ready hold's own task"),
+            other => panic!("expected hold-ready dispatch, got {other:?}"),
+        }
+        assert!(sim.ledger.hold_for(0).is_none(), "stale hold unfenced");
+        assert!(sim.ledger.hold_for(1).is_some(), "dispatch leaves the hold to start_running");
+        assert!(sim.hold_scratch.capacity() >= 2, "scratch buffer retained for reuse");
+
+        // Nothing left to pick: the second pass clears the now-stale
+        // hold 1 (its task left the queue) and, in wake-driven mode,
+        // drops the backfill dirty flag once both scans come up empty.
+        assert!(sim.pick_next(0.0).is_none());
+        assert!(!sim.ledger.has_holds());
+        assert!(!sim.backfill_dirty, "empty scans clear the gate");
+        // A third pick is gated off entirely and stays consistent.
+        assert!(sim.pick_next(0.0).is_none());
     }
 
     #[test]

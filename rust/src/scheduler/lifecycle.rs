@@ -8,7 +8,6 @@
 //! is maintained incrementally and dispatch never scans the node table.
 
 use crate::cluster::{NodeId, NodeState};
-use crate::placement::Hold;
 use crate::pool::Resize;
 use crate::scheduler::core::{BackfillEvent, SchedEvent, SchedulerSim};
 use crate::scheduler::job::{JobId, Placement, ResourceRequest, TaskId, TaskState};
@@ -101,6 +100,8 @@ impl SchedulerSim {
                 self.pending.push_front(tid, prio, enqueued_at);
                 self.cycle_budget = 0; // a fresh cycle rescans when unblocked
                 self.hol_blocked = true;
+                // Fresh block, fresh holds: the backfill scans must run.
+                self.backfill_dirty = true;
             }
         }
     }
@@ -164,6 +165,8 @@ impl SchedulerSim {
         self.running_cores += cores as u64;
         self.ledger.note_start(node, expected_end);
         self.ledger.clear_hold(tid);
+        // A cleared hold loosens the admission fences: rescan.
+        self.backfill_dirty = true;
         if self.record_timeline {
             self.timeline.push((start, cores as i64));
         }
@@ -402,6 +405,8 @@ impl SchedulerSim {
             "cleanup of task in state {:?}",
             slot.record.state
         );
+        // PREEMPTED already left the outstanding set at the signal.
+        let was_completing = slot.record.state == TaskState::Completing;
         slot.record.state = TaskState::Done;
         slot.record.cleanup_t = Some(now);
         let was_backfilled = slot.backfilled;
@@ -433,8 +438,17 @@ impl SchedulerSim {
         if was_backfilled && self.preempt_overdue {
             self.live_backfills.retain(|&(t, _)| t != tid);
         }
-        // Resources freed: head-of-line dispatch may proceed.
+        if was_completing {
+            self.not_done -= 1;
+        }
+        // Resources freed: head-of-line dispatch may proceed — and a
+        // freed node can ready a hold or open a backfill window, and
+        // every shard's `grow_blocked` latch cleared above.
         self.hol_blocked = false;
+        self.backfill_dirty = true;
+        if let Some(p) = self.pool.as_mut() {
+            p.mark_all();
+        }
     }
 
     /// A preemption signal landed on a (possibly already finished) task.
@@ -450,6 +464,7 @@ impl SchedulerSim {
         if slot.kill_signalled {
             self.overdue_preemptions += 1;
         }
+        self.not_done -= 1; // RUNNING → PREEMPTED leaves the outstanding set
         self.end_occupancy(now, tid);
     }
 
@@ -457,13 +472,14 @@ impl SchedulerSim {
     /// no server involvement beyond the dequeue); running tasks queue a
     /// preemption signal through the server.
     pub(crate) fn preempt_job(&mut self, now: Time, job: JobId) {
-        let ids: Vec<TaskId> = self
-            .tasks
-            .iter()
-            .filter(|t| t.record.job == job)
-            .map(|t| t.record.task)
-            .collect();
-        for tid in ids {
+        // The job's slots are one contiguous arena range — no
+        // whole-arena scan. A preempt can land before the job exists
+        // (count 0 placeholder): nothing to do then.
+        let (first, count) = match self.jobs.get(job as usize) {
+            Some(m) if m.task_count > 0 => (m.first_task, m.task_count),
+            _ => return,
+        };
+        for tid in first..first + count as TaskId {
             match self.tasks[tid as usize].record.state {
                 TaskState::Pending => {
                     if self.pending.remove(tid) || self.pool_pending_remove(tid) {
@@ -472,8 +488,12 @@ impl SchedulerSim {
                         slot.record.start_t = Some(now);
                         slot.record.end_t = Some(now);
                         slot.record.cleanup_t = Some(now);
-                        // A cancelled task must not keep a node fenced.
+                        self.not_done -= 1;
+                        // A cancelled task must not keep a node fenced —
+                        // and a vanished hold/queue entry re-opens the
+                        // backfill scans.
                         self.ledger.clear_hold(tid);
+                        self.backfill_dirty = true;
                     }
                 }
                 TaskState::Running => self.preempt_q.push_back(tid),
@@ -501,12 +521,10 @@ impl SchedulerSim {
                         || p.fleet.shards.iter().any(|s| !s.pending.is_empty())
                 })
                 .unwrap_or(false)
-            || self.tasks.iter().any(|t| {
-                matches!(
-                    t.record.state,
-                    TaskState::Pending | TaskState::Running | TaskState::Completing
-                )
-            })
+            // Live counter over {PENDING, RUNNING, COMPLETING} — the
+            // historical whole-arena scan made every noise arrival
+            // O(tasks).
+            || self.not_done > 0
     }
 
     // ---- rapid-launch fleet glue ---------------------------------------
@@ -593,13 +611,22 @@ impl SchedulerSim {
         let Some(p) = self.pool.as_mut() else {
             return false;
         };
-        for sh in p.fleet.shards.iter_mut() {
+        let mut found: Option<usize> = None;
+        for (sid, sh) in p.fleet.shards.iter_mut().enumerate() {
             if let Some(i) = sh.pending.iter().position(|&t| t == tid) {
                 sh.pending.remove(i);
-                return true;
+                found = Some(sid);
+                break;
             }
         }
-        false
+        match found {
+            Some(sid) => {
+                // A shorter queue can flip the shard's resize decision.
+                p.mark(sid);
+                true
+            }
+            None => false,
+        }
     }
 
     /// Apply a pool dispatch on one shard: pop a leased node off the
@@ -625,6 +652,7 @@ impl SchedulerSim {
                     // A shrink raced the dispatch decision: requeue at
                     // the head so FIFO order is preserved.
                     sh.pending.push_front(tid);
+                    p.mark(sid as usize);
                     return;
                 }
             }
@@ -643,11 +671,10 @@ impl SchedulerSim {
         if self.record_timeline {
             self.timeline.push((now, cores as i64));
         }
-        self.pool
-            .as_mut()
-            .expect("checked above")
-            .fleet
-            .note_launch(sid as usize, node, est_end, tid);
+        let p = self.pool.as_mut().expect("checked above");
+        p.fleet.note_launch(sid as usize, node, est_end, tid);
+        // The free list shrank: the shard's next decision may differ.
+        p.mark(sid as usize);
         q.at(now + occupancy, SchedEvent::TaskEnded(tid));
     }
 
@@ -664,8 +691,12 @@ impl SchedulerSim {
             "pool release of task in state {:?}",
             slot.record.state
         );
+        let was_completing = slot.record.state == TaskState::Completing;
         slot.record.state = TaskState::Done;
         slot.record.cleanup_t = Some(now);
+        if was_completing {
+            self.not_done -= 1;
+        }
         let home = slot.pool_node.take();
         if let Some(p) = self.pool.as_mut() {
             match home {
@@ -680,6 +711,9 @@ impl SchedulerSim {
                             sh.grow_blocked = false;
                         }
                     }
+                    // A freed lease can serve this shard's next
+                    // dispatch and un-stalls every sibling's grow.
+                    p.mark_all();
                 }
                 _ => p.fleet.violated = true,
             }
@@ -695,7 +729,19 @@ impl SchedulerSim {
     /// early as possible). Shrink returns drained shard nodes to batch.
     /// The decision is re-evaluated at apply time — state may have
     /// moved since the op was scheduled.
-    pub(crate) fn apply_pool_resize(&mut self, now: Time, sid: u32) {
+    ///
+    /// Every apply (including a no-op `Hold`) restarts the cooldown and
+    /// schedules a [`SchedEvent::ShardWake`] for its expiry, so the
+    /// wake-driven hot path never needs to poll `due()` across all
+    /// shards — the calendar tells it exactly when a shard can next
+    /// become due. The wake is scheduled in *both* hot-path modes to
+    /// keep the two event streams identical.
+    pub(crate) fn apply_pool_resize(
+        &mut self,
+        now: Time,
+        sid: u32,
+        q: &mut EventQueue<SchedEvent>,
+    ) {
         let ledger = &self.ledger;
         let cluster = &self.cluster;
         let index = self.engine.index();
@@ -826,6 +872,14 @@ impl SchedulerSim {
         if p.fleet.check_conservation().is_err() {
             p.fleet.violated = true;
         }
+        let cooldown = p.fleet.shards[sid].manager.cooldown;
+        p.wakes_pending[sid] += 1;
+        // A resize can move nodes between batch and any shard (borrows
+        // touch the donor; `any_pooled` gates fleet-wide fences), so
+        // every shard — and the batch backfill scans — re-evaluate.
+        p.mark_all();
+        self.backfill_dirty = true;
+        q.at(now + cooldown, SchedEvent::ShardWake(sid as u32));
     }
 
     /// The preemptive-backfill scan: for every hold that has come due,
@@ -839,13 +893,20 @@ impl SchedulerSim {
         if !self.ledger.has_holds() || self.live_backfills.is_empty() {
             return;
         }
-        let holds: Vec<Hold> = self.ledger.holds().to_vec();
+        // Same reused scratch buffer as the hold-ready scan in
+        // `pick_next` (the two run sequentially, never nested) — this
+        // scan fires on every blocked pick under `preempt_overdue`, so
+        // a per-call clone would be hot-loop garbage.
+        let mut holds = std::mem::take(&mut self.hold_scratch);
+        holds.clear();
+        holds.extend_from_slice(self.ledger.holds());
         let startup = self.task_model.startup;
+        let mut kills: Vec<TaskId> = Vec::new();
         for h in &holds {
             if now < h.start {
                 continue;
             }
-            let mut kills: Vec<TaskId> = Vec::new();
+            kills.clear();
             for &(task, node) in &self.live_backfills {
                 if node != h.node {
                     continue;
@@ -859,10 +920,11 @@ impl SchedulerSim {
                     kills.push(task);
                 }
             }
-            for tid in kills {
+            for &tid in &kills {
                 self.tasks[tid as usize].kill_signalled = true;
                 self.preempt_q.push_back(tid);
             }
         }
+        self.hold_scratch = holds;
     }
 }

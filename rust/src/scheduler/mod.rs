@@ -31,7 +31,7 @@ pub mod queue;
 pub mod server;
 
 pub use accounting::{JobStats, TaskRecord};
-pub use self::core::{SchedEvent, SchedulerSim, SimOutcome};
+pub use self::core::{HotPath, SchedEvent, SchedulerSim, SimOutcome};
 pub use costmodel::CostModel;
 pub use job::{ComputeBatch, JobId, JobSpec, ResourceRequest, SchedTaskSpec, TaskId, TaskState};
 pub use queue::{AgingPolicy, PendingQueue};

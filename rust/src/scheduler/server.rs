@@ -25,10 +25,9 @@
 //! [`crate::scheduler::lifecycle`].
 
 use crate::cluster::NodeState;
-use crate::placement::Hold;
 use crate::pool::Resize;
 use crate::scheduler::accounting::TaskRecord;
-use crate::scheduler::core::{JobMeta, Op, SchedEvent, SchedulerSim, TaskSlot};
+use crate::scheduler::core::{HotPath, JobMeta, Op, SchedEvent, SchedulerSim, TaskSlot};
 use crate::scheduler::job::{ResourceRequest, TaskId, TaskState};
 use crate::sim::{self, EventQueue, Time};
 
@@ -61,6 +60,7 @@ impl SchedulerSim {
         // the next volley), then any shard's due resize, then free-list
         // dispatch shard by shard. With one shard this is exactly the
         // PR 4 single-pool service order.
+        let wake_driven = self.hot_path == HotPath::WakeDriven;
         if let Some(p) = self.pool.as_mut() {
             if let Some((sid, tid)) = p.completions.pop_front() {
                 return Some((Op::PoolRelease(sid, tid), self.cost.pool_release * s));
@@ -73,18 +73,41 @@ impl SchedulerSim {
             // node — and cleared on the next batch or sibling release)
             // keeps the bypass from spinning on a cluster with nothing
             // left to lease.
+            //
+            // Wake-driven skip rule: a shard is evaluated only while its
+            // attention flag is set (every relevant state transition
+            // sets it) — except that an in-flight cooldown wake whose
+            // instant has arrived keeps the due check live, because a
+            // lower-seq event at the exact expiry instant pops first and
+            // must see the shard due, just as a polled pick would.
             for (sid, sh) in p.fleet.shards.iter().enumerate() {
+                if wake_driven
+                    && !p.attention[sid]
+                    && !(p.wakes_pending[sid] > 0 && sh.manager.due(now))
+                {
+                    continue;
+                }
                 let starving =
                     !sh.pending.is_empty() && !sh.nodes.any_pooled() && !sh.grow_blocked;
                 if (sh.manager.due(now) || starving) && sh.decision() != Resize::Hold {
                     return Some((Op::PoolResize(sid as u32), self.cost.pool_resize * s));
                 }
             }
-            for (sid, sh) in p.fleet.shards.iter_mut().enumerate() {
+            // No shard had a resize to run: a shard with no dispatchable
+            // work either has nothing to do at all now, so its attention
+            // flag drops until the next transition or wake re-marks it.
+            for sid in 0..p.fleet.shards.len() {
+                if wake_driven && !p.attention[sid] {
+                    continue;
+                }
+                let sh = &mut p.fleet.shards[sid];
                 if !sh.pending.is_empty() && sh.nodes.n_free() > 0 {
                     let tid = sh.pending.pop_front().expect("checked non-empty");
                     let cost = self.cost.pool_dispatch * s;
                     return Some((Op::PoolDispatch(sid as u32, tid), cost));
+                }
+                if wake_driven {
+                    p.attention[sid] = false;
                 }
             }
         }
@@ -123,6 +146,20 @@ impl SchedulerSim {
                     return Some((Op::PreemptSignal(t), self.cost.preempt_signal * s));
                 }
             }
+            // Wake-driven gate: hold readiness is purely state-driven
+            // (a node drains, a hold is planted or cleared, a pool
+            // lease returns) and a backfill admission window only
+            // *shrinks* as the clock advances, so once both scans come
+            // up empty nothing can become admissible until a marked
+            // transition sets `backfill_dirty` again. Aging is the one
+            // exception — it reorders the lookahead window with time —
+            // so an installed aging policy keeps the scans unconditional.
+            let scan = self.hot_path == HotPath::Polled
+                || self.backfill_dirty
+                || self.aging.is_some();
+            if !scan {
+                return None;
+            }
             // A held node came wholly idle: dispatch its reservation's
             // own task out of order, wherever it sits in the queue —
             // without this, a blocked higher-priority head would let the
@@ -133,8 +170,16 @@ impl SchedulerSim {
             // path) is not ready: the node looks idle to the cluster
             // model but the batch fence keeps placement off it until
             // the owning shard actually returns it.
-            let holds: Vec<Hold> = self.ledger.holds().to_vec();
-            for h in holds {
+            //
+            // The holds are iterated out of a reused scratch buffer (the
+            // ledger cannot be borrowed across `pending.remove`), so the
+            // hot loop never allocates — the historical code cloned the
+            // hold list on every blocked pick.
+            let mut holds = std::mem::take(&mut self.hold_scratch);
+            holds.clear();
+            holds.extend_from_slice(self.ledger.holds());
+            let mut picked: Option<TaskId> = None;
+            for h in &holds {
                 let ready = self
                     .cluster
                     .node(h.node)
@@ -149,16 +194,23 @@ impl SchedulerSim {
                     continue;
                 }
                 if self.pending.remove(h.task) {
-                    self.cleanups_since_dispatch = 0;
-                    return Some((Op::Dispatch(h.task), self.cost.dispatch(true) * s));
+                    picked = Some(h.task);
+                    break;
                 }
                 // Hold task no longer pending (cancelled): unfence.
                 self.ledger.clear_hold(h.task);
+            }
+            self.hold_scratch = holds;
+            if let Some(task) = picked {
+                self.cleanups_since_dispatch = 0;
+                return Some((Op::Dispatch(task), self.cost.dispatch(true) * s));
             }
             if let Some(tid) = self.find_backfill(now) {
                 self.cleanups_since_dispatch = 0;
                 return Some((Op::Backfill(tid), self.cost.dispatch(false) * s));
             }
+            // Both scans empty: gate them off until state moves again.
+            self.backfill_dirty = false;
         }
         None
     }
@@ -205,29 +257,33 @@ impl SchedulerSim {
                 self.busy.register +=
                     self.cost.submit(self.jobs[job as usize].array_size) * self.op_scale;
                 // Materialized at Submit; now they become schedulable.
+                // The job's slots are one contiguous arena range, so
+                // registration walks exactly its own tasks. (The state
+                // check stays: a preempt can cancel a task between
+                // materialization and registration completing.)
                 let prio = self.jobs[job as usize].priority;
-                let ids: Vec<TaskId> = self
-                    .tasks
-                    .iter()
-                    .filter(|t| t.record.job == job && t.record.state == TaskState::Pending)
-                    .map(|t| t.record.task)
-                    .collect();
-                for tid in ids {
-                    self.tasks[tid as usize].enqueued_at = now;
-                    // Short whole-node tasks route to the shard whose
-                    // shape matches them (FIFO per shard; one class of
-                    // work per shard by design); everything else takes
-                    // the batch pending queue.
-                    if let Some(sid) = self.route_to_pool(tid) {
-                        self.pool
-                            .as_mut()
-                            .expect("routing implies a pool")
-                            .fleet
-                            .shards[sid]
-                            .pending
-                            .push_back(tid);
-                    } else {
-                        self.pending.push(tid, prio, now);
+                if self.legacy_register {
+                    // Bench-only: the pre-arena whole-arena scan, kept
+                    // so the speedup is measurable against the same
+                    // schedule (`SchedulerSim::with_legacy_register`).
+                    let ids: Vec<TaskId> = self
+                        .tasks
+                        .iter()
+                        .filter(|t| t.record.job == job && t.record.state == TaskState::Pending)
+                        .map(|t| t.record.task)
+                        .collect();
+                    for tid in ids {
+                        self.enqueue_registered(now, tid, prio);
+                    }
+                } else {
+                    let (first, count) = {
+                        let m = &self.jobs[job as usize];
+                        (m.first_task, m.task_count)
+                    };
+                    for tid in first..first + count as TaskId {
+                        if self.tasks[tid as usize].record.state == TaskState::Pending {
+                            self.enqueue_registered(now, tid, prio);
+                        }
                     }
                 }
             }
@@ -267,8 +323,24 @@ impl SchedulerSim {
             }
             Op::PoolResize(sid) => {
                 self.busy.pool += self.cost.pool_resize * self.op_scale;
-                self.apply_pool_resize(now, sid);
+                self.apply_pool_resize(now, sid, q);
             }
+        }
+    }
+
+    /// Enqueue one freshly-registered task: short whole-node tasks
+    /// route to the shard whose shape matches them (FIFO per shard; one
+    /// class of work per shard by design); everything else takes the
+    /// batch pending queue.
+    fn enqueue_registered(&mut self, now: Time, tid: TaskId, prio: i32) {
+        self.tasks[tid as usize].enqueued_at = now;
+        if let Some(sid) = self.route_to_pool(tid) {
+            let p = self.pool.as_mut().expect("routing implies a pool");
+            p.fleet.shards[sid].pending.push_back(tid);
+            p.mark(sid);
+        } else {
+            self.pending.push(tid, prio, now);
+            self.backfill_dirty = true;
         }
     }
 }
@@ -299,6 +371,10 @@ impl sim::Actor for SchedulerSim {
                     priority: spec.priority,
                     preemptable: spec.preemptable,
                     submit_t: now,
+                    // Task slots are materialized as one contiguous
+                    // arena block right below.
+                    first_task: self.tasks.len() as TaskId,
+                    task_count: spec.tasks.len() as u32,
                 };
                 // Materialize task slots (records in PENDING). The
                 // walltime estimate is sampled here, once per task, from
@@ -328,9 +404,12 @@ impl sim::Actor for SchedulerSim {
                         priority: spec.priority,
                     });
                 }
-                while self.jobs.len() <= id as usize {
-                    // placeholder ordering safety (ids are dense by construction)
-                    self.jobs.push(meta.clone());
+                self.not_done += spec.tasks.len();
+                // Ids are dense by construction; the resize covers the
+                // (test-only) case of out-of-order first submissions
+                // without cloning real metadata into filler slots.
+                if self.jobs.len() <= id as usize {
+                    self.jobs.resize_with(id as usize + 1, JobMeta::placeholder);
                 }
                 self.jobs[id as usize] = meta;
                 // Registration is server work.
@@ -386,6 +465,20 @@ impl sim::Actor for SchedulerSim {
             SchedEvent::Preempt(job) => {
                 self.preempt_job(now, job);
                 self.kick(now, q);
+            }
+            SchedEvent::ShardWake(sid) => {
+                // Cooldown expiry marker. It only re-arms the shard's
+                // attention flag — it never kicks the server, so no
+                // resize happens at an instant the polled discipline
+                // would not also have acted on (the decision still
+                // waits for the next natural op boundary). This keeps
+                // the wake-driven schedule bit-for-bit the polled one.
+                if let Some(p) = self.pool.as_mut() {
+                    if let Some(w) = p.wakes_pending.get_mut(sid as usize) {
+                        *w = w.saturating_sub(1);
+                    }
+                    p.mark(sid as usize);
+                }
             }
         }
     }

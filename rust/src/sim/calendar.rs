@@ -1,0 +1,237 @@
+//! Brown-style calendar queue: the alternative [`super::EventQueue`]
+//! backend for dense event sets.
+//!
+//! Events hash into `nbuckets` buckets of `width` seconds by
+//! `floor(t / width) mod nbuckets`; a "year" is one sweep of all
+//! buckets (`nbuckets × width` seconds). Pop scans forward from the
+//! bucket of the last popped event, taking the earliest `(time, seq)`
+//! entry that belongs to the bucket's *current* year; when a whole year
+//! is empty (a sparse calendar), it falls back to a direct global
+//! minimum scan. On resize the queue rebuilds with the bucket count
+//! sized to the live population and the width sized to the live time
+//! span, keeping expected bucket occupancy (and therefore expected pop
+//! cost) constant.
+//!
+//! Determinism: ordering is the total order `(time, seq)` — exactly the
+//! binary heap's — so both backends replay identical schedules; the
+//! equivalence tests in [`super::event`] and `rust/tests/` pin this.
+
+use super::event::Scheduled;
+use super::Time;
+use crate::util::slab::SlabKey;
+
+const MIN_BUCKETS: usize = 64;
+const MAX_BUCKETS: usize = 1 << 20;
+const MIN_WIDTH: Time = 1e-9;
+
+#[derive(Debug)]
+pub(super) struct CalendarQueue<E> {
+    buckets: Vec<Vec<Scheduled<E>>>,
+    /// Always a power of two (cheap modulo is not assumed; correctness
+    /// only needs consistency between push and pop).
+    nbuckets: usize,
+    width: Time,
+    /// Global serial (`floor(t / width)`) of the last popped event's
+    /// bucket-year; pops resume scanning here.
+    cur_serial: u64,
+    len: usize,
+}
+
+impl<E> CalendarQueue<E> {
+    pub(super) fn new() -> Self {
+        CalendarQueue {
+            buckets: (0..MIN_BUCKETS).map(|_| Vec::new()).collect(),
+            nbuckets: MIN_BUCKETS,
+            width: 1.0,
+            cur_serial: 0,
+            len: 0,
+        }
+    }
+
+    #[inline]
+    fn serial(&self, t: Time) -> u64 {
+        (t / self.width) as u64
+    }
+
+    /// Strict `(time, seq)` order — the FIFO-stable total order.
+    #[inline]
+    fn before(a: &Scheduled<E>, b: &Scheduled<E>) -> bool {
+        a.time < b.time || (a.time == b.time && a.seq < b.seq)
+    }
+
+    pub(super) fn push(&mut self, entry: Scheduled<E>) {
+        if self.len + 1 > 4 * self.nbuckets && self.nbuckets < MAX_BUCKETS {
+            self.rebuild();
+        }
+        let s = self.serial(entry.time);
+        // Defensive: a push earlier than the scan cursor (cannot happen
+        // through EventQueue, which clamps to `now`) must rewind the
+        // cursor or the entry would only be found by the sparse
+        // fallback.
+        if s < self.cur_serial {
+            self.cur_serial = s;
+        }
+        let b = (s % self.nbuckets as u64) as usize;
+        self.buckets[b].push(entry);
+        self.len += 1;
+    }
+
+    pub(super) fn pop_min(&mut self) -> Option<Scheduled<E>> {
+        let (b, i) = self.find_min()?;
+        let entry = self.buckets[b].swap_remove(i);
+        self.cur_serial = self.serial(entry.time);
+        self.len -= 1;
+        if self.len < self.nbuckets / 8 && self.nbuckets > MIN_BUCKETS {
+            self.rebuild();
+        }
+        Some(entry)
+    }
+
+    pub(super) fn peek_min(&self) -> Option<(Time, Option<SlabKey>)> {
+        let (b, i) = self.find_min()?;
+        let e = &self.buckets[b][i];
+        Some((e.time, e.token))
+    }
+
+    /// Locate the minimum entry: year-scan from the cursor, then the
+    /// sparse global fallback. Returns `(bucket, index)`.
+    fn find_min(&self) -> Option<(usize, usize)> {
+        if self.len == 0 {
+            return None;
+        }
+        let nb = self.nbuckets as u64;
+        for s in self.cur_serial..self.cur_serial + nb {
+            let b = (s % nb) as usize;
+            if self.buckets[b].is_empty() {
+                continue;
+            }
+            let mut best: Option<usize> = None;
+            for (i, e) in self.buckets[b].iter().enumerate() {
+                // Entries from future years share the bucket; only this
+                // year's entries are candidates.
+                if self.serial(e.time) != s {
+                    continue;
+                }
+                let better = match best {
+                    None => true,
+                    Some(j) => Self::before(e, &self.buckets[b][j]),
+                };
+                if better {
+                    best = Some(i);
+                }
+            }
+            if let Some(i) = best {
+                return Some((b, i));
+            }
+        }
+        // Sparse calendar: nothing within a full year of the cursor.
+        let mut pos: Option<(usize, usize)> = None;
+        for (b, bucket) in self.buckets.iter().enumerate() {
+            for (i, e) in bucket.iter().enumerate() {
+                let better = match pos {
+                    None => true,
+                    Some((pb, pi)) => Self::before(e, &self.buckets[pb][pi]),
+                };
+                if better {
+                    pos = Some((b, i));
+                }
+            }
+        }
+        pos
+    }
+
+    /// Resize to the live population: `nbuckets ≈ len/2` (so ~2 entries
+    /// per bucket) and `width = span/nbuckets` (so the live span is one
+    /// year and the year-scan never walks far).
+    fn rebuild(&mut self) {
+        let old = std::mem::take(&mut self.buckets);
+        let all: Vec<Scheduled<E>> = old.into_iter().flatten().collect();
+        self.nbuckets = (all.len() / 2).next_power_of_two().clamp(MIN_BUCKETS, MAX_BUCKETS);
+        let (mut min_t, mut max_t) = (f64::INFINITY, f64::NEG_INFINITY);
+        for e in &all {
+            min_t = min_t.min(e.time);
+            max_t = max_t.max(e.time);
+        }
+        let span = (max_t - min_t).max(0.0);
+        self.width = (span / self.nbuckets as f64).max(MIN_WIDTH);
+        self.buckets = (0..self.nbuckets).map(|_| Vec::new()).collect();
+        self.cur_serial = if all.is_empty() { 0 } else { self.serial(min_t) };
+        self.len = 0;
+        for e in all {
+            let s = self.serial(e.time);
+            let b = (s % self.nbuckets as u64) as usize;
+            self.buckets[b].push(e);
+            self.len += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(time: Time, seq: u64) -> Scheduled<u64> {
+        Scheduled { time, seq, event: seq, token: None }
+    }
+
+    #[test]
+    fn pops_in_total_order_across_rebuilds() {
+        let mut c = CalendarQueue::new();
+        // Push enough to force several grow rebuilds, in shuffled order.
+        let n = 3000u64;
+        for i in 0..n {
+            let t = ((i * 7919) % n) as f64 * 0.01;
+            c.push(entry(t, i));
+        }
+        let mut last = (f64::NEG_INFINITY, 0u64);
+        let mut popped = 0;
+        while let Some(e) = c.pop_min() {
+            assert!(
+                e.time > last.0 || (e.time == last.0 && e.seq > last.1),
+                "order violated: {:?} after {:?}",
+                (e.time, e.seq),
+                last
+            );
+            last = (e.time, e.seq);
+            popped += 1;
+        }
+        assert_eq!(popped, n);
+    }
+
+    #[test]
+    fn sparse_fallback_finds_far_future_events() {
+        let mut c = CalendarQueue::new();
+        c.push(entry(0.5, 1));
+        c.push(entry(1e6, 2)); // far outside the initial 64-second year
+        assert_eq!(c.pop_min().unwrap().seq, 1);
+        assert_eq!(c.peek_min().unwrap().0, 1e6);
+        assert_eq!(c.pop_min().unwrap().seq, 2);
+        assert!(c.pop_min().is_none());
+    }
+
+    #[test]
+    fn same_instant_is_seq_ordered() {
+        let mut c = CalendarQueue::new();
+        for i in (0..50u64).rev() {
+            c.push(entry(7.25, i));
+        }
+        let order: Vec<u64> = std::iter::from_fn(|| c.pop_min().map(|e| e.seq)).collect();
+        let mut expect: Vec<u64> = (0..50).collect();
+        expect.sort_unstable();
+        assert_eq!(order, expect);
+    }
+
+    #[test]
+    fn interleaved_push_pop_keeps_cursor_consistent() {
+        let mut c = CalendarQueue::new();
+        c.push(entry(10.0, 1));
+        assert_eq!(c.pop_min().unwrap().seq, 1);
+        // New work at the same instant as the last pop (EventQueue
+        // clamps to now): must be found even though the cursor already
+        // sits in that serial.
+        c.push(entry(10.0, 2));
+        c.push(entry(10.1, 3));
+        assert_eq!(c.pop_min().unwrap().seq, 2);
+        assert_eq!(c.pop_min().unwrap().seq, 3);
+    }
+}

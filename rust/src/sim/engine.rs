@@ -27,11 +27,9 @@ pub fn run_until<A: Actor>(
     horizon: Time,
 ) -> (Time, u64) {
     let mut processed: u64 = 0;
-    while let Some(t) = q.peek_time() {
-        if t > horizon {
-            break;
-        }
-        let ev = q.pop().expect("peeked event vanished");
+    // `pop_if_until` coalesces the peek + horizon check + pop triple
+    // into one queue operation (and skips lazily-cancelled wakes).
+    while let Some(ev) = q.pop_if_until(horizon) {
         actor.handle(ev.time, ev.event, q);
         processed += 1;
     }
@@ -99,7 +97,9 @@ mod tests {
     }
 
     struct Server {
-        waiting: Vec<u32>,
+        // VecDeque, not Vec: `remove(0)` on a Vec is O(n) per departure
+        // and the idiom tends to leak from test actors into real ones.
+        waiting: std::collections::VecDeque<u32>,
         busy: bool,
         served: Vec<u32>,
         service_time: Time,
@@ -111,14 +111,14 @@ mod tests {
         fn handle(&mut self, _now: Time, ev: QueueEv, q: &mut EventQueue<QueueEv>) {
             match ev {
                 QueueEv::Arrive(id) => {
-                    self.waiting.push(id);
+                    self.waiting.push_back(id);
                     if !self.busy {
                         self.busy = true;
                         q.after(self.service_time, QueueEv::Depart);
                     }
                 }
                 QueueEv::Depart => {
-                    let id = self.waiting.remove(0);
+                    let id = self.waiting.pop_front().expect("depart without waiter");
                     self.served.push(id);
                     if self.waiting.is_empty() {
                         self.busy = false;
@@ -133,7 +133,7 @@ mod tests {
     #[test]
     fn queueing_conservation() {
         let mut s = Server {
-            waiting: vec![],
+            waiting: std::collections::VecDeque::new(),
             busy: false,
             served: vec![],
             service_time: 1.0,

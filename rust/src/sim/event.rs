@@ -1,7 +1,24 @@
 //! Event calendar: a time-ordered priority queue with stable FIFO
-//! tie-breaking for events scheduled at the same virtual instant.
+//! tie-breaking, cancellable wake tokens, and a pluggable backend.
+//!
+//! Two backends share one façade, selected at construction:
+//!
+//! * [`QueueBackend::Binary`] — the classic binary heap (default);
+//! * [`QueueBackend::Calendar`] — a Brown-style calendar queue
+//!   ([`super::calendar`]), bucketed by time for O(1)-amortized holds
+//!   on dense event sets.
+//!
+//! Wake tokens ([`WakeToken`]) are cancellable/reschedulable timer
+//! handles. Cancellation is *lazy*: the entry stays in the backend but
+//! its generation-checked slab slot ([`crate::util::slab::Slab`]) is
+//! retired, and both [`EventQueue::pop`] and [`EventQueue::peek_time`]
+//! skip such stale entries. A token held after its event fired (or was
+//! cancelled) is a stale generation — every later `cancel` on it is a
+//! detected no-op, never a hit on an unrelated reused slot.
 
+use super::calendar::CalendarQueue;
 use super::Time;
+use crate::util::slab::{Slab, SlabKey};
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
@@ -12,6 +29,8 @@ pub struct Scheduled<E> {
     pub time: Time,
     pub seq: u64,
     pub event: E,
+    /// Wake-token slot, when scheduled through [`EventQueue::at_token`].
+    pub(super) token: Option<SlabKey>,
 }
 
 impl<E> PartialEq for Scheduled<E> {
@@ -38,13 +57,70 @@ impl<E> Ord for Scheduled<E> {
     }
 }
 
+/// Which priority-queue implementation backs the calendar.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum QueueBackend {
+    /// `std::collections::BinaryHeap` — O(log n) push/pop, the seed
+    /// implementation and the reference for equivalence tests.
+    #[default]
+    Binary,
+    /// Bucketed calendar queue — events hash into time buckets of
+    /// adaptive width, amortizing pops toward O(1) on dense calendars.
+    Calendar,
+}
+
+/// A cancellable/reschedulable handle to one scheduled event.
+///
+/// Obtained from [`EventQueue::at_token`] / [`EventQueue::after_token`].
+/// The handle is `Copy`; staleness (fired, cancelled, or rescheduled)
+/// is detected through the slab generation, so holding — or dropping —
+/// an outdated token is always safe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WakeToken(SlabKey);
+
+#[derive(Debug)]
+enum Store<E> {
+    Binary(BinaryHeap<Scheduled<E>>),
+    Calendar(CalendarQueue<E>),
+}
+
+impl<E> Store<E> {
+    fn push(&mut self, entry: Scheduled<E>) {
+        match self {
+            Store::Binary(h) => h.push(entry),
+            Store::Calendar(c) => c.push(entry),
+        }
+    }
+
+    fn pop_min(&mut self) -> Option<Scheduled<E>> {
+        match self {
+            Store::Binary(h) => h.pop(),
+            Store::Calendar(c) => c.pop_min(),
+        }
+    }
+
+    /// `(time, token)` of the earliest entry, stale or not.
+    fn peek_min(&self) -> Option<(Time, Option<SlabKey>)> {
+        match self {
+            Store::Binary(h) => h.peek().map(|e| (e.time, e.token)),
+            Store::Calendar(c) => c.peek_min(),
+        }
+    }
+}
+
 /// The event calendar.
 #[derive(Debug)]
 pub struct EventQueue<E> {
-    heap: BinaryHeap<Scheduled<E>>,
+    store: Store<E>,
     seq: u64,
     now: Time,
     scheduled_total: u64,
+    /// Entries that are still due to fire (excludes lazily-cancelled
+    /// wake entries that still sit in the backend).
+    live: usize,
+    /// Generation-checked wake slots; an entry whose key is no longer
+    /// in the slab is stale and gets skipped on pop/peek.
+    tokens: Slab<()>,
 }
 
 impl<E> Default for EventQueue<E> {
@@ -54,13 +130,31 @@ impl<E> Default for EventQueue<E> {
 }
 
 impl<E> EventQueue<E> {
-    /// Empty calendar at time 0.
+    /// Empty calendar at time 0, on the default (binary-heap) backend.
     pub fn new() -> Self {
+        Self::with_backend(QueueBackend::Binary)
+    }
+
+    /// Empty calendar at time 0 on an explicit backend.
+    pub fn with_backend(backend: QueueBackend) -> Self {
         EventQueue {
-            heap: BinaryHeap::new(),
+            store: match backend {
+                QueueBackend::Binary => Store::Binary(BinaryHeap::new()),
+                QueueBackend::Calendar => Store::Calendar(CalendarQueue::new()),
+            },
             seq: 0,
             now: 0.0,
             scheduled_total: 0,
+            live: 0,
+            tokens: Slab::new(),
+        }
+    }
+
+    /// Which backend this calendar runs on.
+    pub fn backend(&self) -> QueueBackend {
+        match self.store {
+            Store::Binary(_) => QueueBackend::Binary,
+            Store::Calendar(_) => QueueBackend::Calendar,
         }
     }
 
@@ -69,18 +163,25 @@ impl<E> EventQueue<E> {
         self.now
     }
 
-    /// Schedule `event` at absolute time `at`. Times in the past are
-    /// clamped to `now` (the event fires "immediately"), which keeps actor
-    /// code free of time bookkeeping bugs.
-    pub fn at(&mut self, at: Time, event: E) {
+    fn push_entry(&mut self, at: Time, event: E, token: Option<SlabKey>) {
+        // Times in the past are clamped to `now` (the event fires
+        // "immediately"), which keeps actor code free of time
+        // bookkeeping bugs.
         let t = if at < self.now { self.now } else { at };
         self.seq += 1;
         self.scheduled_total += 1;
-        self.heap.push(Scheduled {
+        self.live += 1;
+        self.store.push(Scheduled {
             time: t,
             seq: self.seq,
             event,
+            token,
         });
+    }
+
+    /// Schedule `event` at absolute time `at`.
+    pub fn at(&mut self, at: Time, event: E) {
+        self.push_entry(at, event, None);
     }
 
     /// Schedule `event` after a relative delay.
@@ -89,30 +190,123 @@ impl<E> EventQueue<E> {
         self.at(self.now + delay, event);
     }
 
-    /// Pop the earliest event, advancing the clock to its timestamp.
+    /// Schedule `event` at absolute time `at` and return a cancellable
+    /// handle to it.
+    pub fn at_token(&mut self, at: Time, event: E) -> WakeToken {
+        let key = self.tokens.insert(());
+        self.push_entry(at, event, Some(key));
+        WakeToken(key)
+    }
+
+    /// Schedule `event` after a relative delay, with a cancellable
+    /// handle.
+    pub fn after_token(&mut self, delay: Time, event: E) -> WakeToken {
+        debug_assert!(delay >= 0.0, "negative delay");
+        self.at_token(self.now + delay, event)
+    }
+
+    /// Cancel the event behind `tok`. Returns `true` if it was still
+    /// pending; `false` if it already fired, was cancelled, or was
+    /// rescheduled (stale generation — a detected no-op). The backend
+    /// entry is dropped lazily on the next pop/peek that reaches it.
+    pub fn cancel(&mut self, tok: WakeToken) -> bool {
+        if self.tokens.remove(tok.0).is_some() {
+            self.live -= 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Move a pending wake to a new time (earlier or later), returning
+    /// the replacement handle. If `tok` already fired or was cancelled,
+    /// this degenerates to a fresh [`Self::at_token`].
+    pub fn reschedule(&mut self, tok: WakeToken, at: Time, event: E) -> WakeToken {
+        self.cancel(tok);
+        self.at_token(at, event)
+    }
+
+    /// Whether the event behind `tok` is still pending.
+    pub fn token_pending(&self, tok: WakeToken) -> bool {
+        self.tokens.contains(tok.0)
+    }
+
+    /// Pop the earliest live event, advancing the clock to its
+    /// timestamp. Lazily discards cancelled wake entries on the way.
     pub fn pop(&mut self) -> Option<Scheduled<E>> {
-        let ev = self.heap.pop()?;
-        debug_assert!(ev.time >= self.now, "time went backwards");
-        self.now = ev.time;
-        Some(ev)
+        self.pop_if_until(f64::INFINITY)
     }
 
-    /// Peek the next event time without popping.
-    pub fn peek_time(&self) -> Option<Time> {
-        self.heap.peek().map(|e| e.time)
+    /// The peek/pop coalescing fast path: pop the earliest live event
+    /// only if it is due at or before `horizon`. One call replaces the
+    /// `peek_time` + bound check + `pop` triple in the engine loop, and
+    /// stale-entry skipping happens exactly once, here.
+    pub fn pop_if_until(&mut self, horizon: Time) -> Option<Scheduled<E>> {
+        loop {
+            let (time, token) = self.store.peek_min()?;
+            if let Some(key) = token {
+                if !self.tokens.contains(key) {
+                    // Lazily-cancelled wake: drop and keep looking.
+                    let _ = self.store.pop_min();
+                    continue;
+                }
+            }
+            if time > horizon {
+                return None;
+            }
+            let ev = self.store.pop_min().expect("peeked entry vanished");
+            if let Some(key) = ev.token {
+                // Retire the slot: the token has fired, so any handle
+                // still held for it goes stale now.
+                self.tokens.remove(key);
+            }
+            self.live -= 1;
+            debug_assert!(ev.time >= self.now, "time went backwards");
+            self.now = ev.time;
+            return Some(ev);
+        }
     }
 
-    /// Number of pending events.
+    /// Same-timestamp coalescing: pop the next live event only if it is
+    /// scheduled at exactly `t`. Lets a handler drain the whole run of
+    /// simultaneous events it is part of without bouncing through the
+    /// engine loop.
+    pub fn pop_if_at(&mut self, t: Time) -> Option<Scheduled<E>> {
+        match self.peek_time() {
+            Some(pt) if pt == t => self.pop_if_until(t),
+            _ => None,
+        }
+    }
+
+    /// Peek the next live event time without popping it. Takes `&mut`
+    /// because cancelled wake entries encountered at the front are
+    /// discarded here (otherwise a cancelled timer would fence the
+    /// horizon check in `run_until`).
+    pub fn peek_time(&mut self) -> Option<Time> {
+        loop {
+            let (time, token) = self.store.peek_min()?;
+            if let Some(key) = token {
+                if !self.tokens.contains(key) {
+                    let _ = self.store.pop_min();
+                    continue;
+                }
+            }
+            return Some(time);
+        }
+    }
+
+    /// Number of pending live events (cancelled wakes excluded).
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.live
     }
 
-    /// True if no events are pending.
+    /// True if no live events are pending.
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.live == 0
     }
 
-    /// Total events ever scheduled (engine throughput accounting).
+    /// Total events ever scheduled (engine throughput accounting;
+    /// includes later-cancelled wakes).
     pub fn scheduled_total(&self) -> u64 {
         self.scheduled_total
     }
@@ -134,12 +328,14 @@ mod tests {
 
     #[test]
     fn same_time_is_fifo() {
-        let mut q = EventQueue::new();
-        for i in 0..100 {
-            q.at(5.0, i);
+        for backend in [QueueBackend::Binary, QueueBackend::Calendar] {
+            let mut q = EventQueue::with_backend(backend);
+            for i in 0..100 {
+                q.at(5.0, i);
+            }
+            let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|e| e.event)).collect();
+            assert_eq!(order, (0..100).collect::<Vec<_>>(), "{backend:?}");
         }
-        let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|e| e.event)).collect();
-        assert_eq!(order, (0..100).collect::<Vec<_>>());
     }
 
     #[test]
@@ -184,5 +380,156 @@ mod tests {
         q.pop();
         assert_eq!(q.len(), 1);
         assert_eq!(q.scheduled_total(), 2);
+    }
+
+    #[test]
+    fn wake_cancel_before_fire() {
+        let mut q = EventQueue::new();
+        q.at(1.0, "keep");
+        let tok = q.at_token(2.0, "cancelled");
+        q.at(3.0, "also-keep");
+        assert!(q.token_pending(tok));
+        assert!(q.cancel(tok), "first cancel hits");
+        assert!(!q.token_pending(tok));
+        assert!(!q.cancel(tok), "second cancel is a detected no-op");
+        assert_eq!(q.len(), 2);
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|e| e.event)).collect();
+        assert_eq!(order, vec!["keep", "also-keep"]);
+        assert_eq!(q.now(), 3.0, "cancelled wake never advanced the clock");
+    }
+
+    #[test]
+    fn wake_reschedule_moves_earlier() {
+        let mut q = EventQueue::new();
+        let tok = q.at_token(10.0, "wake");
+        q.at(5.0, "mid");
+        let tok = q.reschedule(tok, 3.0, "wake");
+        assert!(q.token_pending(tok));
+        assert_eq!(q.len(), 2, "old entry is dead, not counted");
+        let e = q.pop().unwrap();
+        assert_eq!((e.time, e.event), (3.0, "wake"));
+        assert!(!q.token_pending(tok), "fired token goes stale");
+        let e = q.pop().unwrap();
+        assert_eq!((e.time, e.event), (5.0, "mid"));
+        assert!(q.pop().is_none(), "the original t=10 entry was skipped");
+    }
+
+    #[test]
+    fn wake_reschedule_moves_later() {
+        let mut q = EventQueue::new();
+        let tok = q.at_token(2.0, "wake");
+        q.at(5.0, "mid");
+        let tok = q.reschedule(tok, 8.0, "wake");
+        assert_eq!(q.peek_time(), Some(5.0), "stale front entry pruned by peek");
+        let order: Vec<(Time, &str)> =
+            std::iter::from_fn(|| q.pop().map(|e| (e.time, e.event))).collect();
+        assert_eq!(order, vec![(5.0, "mid"), (8.0, "wake")]);
+        assert!(!q.token_pending(tok));
+    }
+
+    #[test]
+    fn wake_fire_then_stale_handle_is_ignored() {
+        // "Fire after owner drop": the owner lost interest but never
+        // cancelled; the token fires normally, and the retained handle
+        // is stale from then on — even after the slot is recycled.
+        let mut q = EventQueue::new();
+        let old = q.at_token(1.0, 1u32);
+        assert_eq!(q.pop().unwrap().event, 1);
+        assert!(!q.cancel(old), "fired token cannot be cancelled");
+        // The freed slot is recycled for a new token at a new generation.
+        let newer = q.at_token(2.0, 2u32);
+        assert!(!q.cancel(old), "stale generation never cancels the new wake");
+        assert!(q.token_pending(newer));
+        assert_eq!(q.pop().unwrap().event, 2);
+    }
+
+    #[test]
+    fn cancelled_wake_at_front_does_not_fence_peek() {
+        let mut q = EventQueue::new();
+        let tok = q.at_token(1.0, "wake");
+        q.at(4.0, "real");
+        q.cancel(tok);
+        // peek must see through the dead entry, or run_until would stop
+        // at a horizon the dead entry straddles.
+        assert_eq!(q.peek_time(), Some(4.0));
+        assert_eq!(q.pop().unwrap().event, "real");
+    }
+
+    #[test]
+    fn pop_if_until_respects_horizon() {
+        let mut q = EventQueue::new();
+        q.at(1.0, "a");
+        q.at(2.0, "b");
+        q.at(3.0, "c");
+        assert_eq!(q.pop_if_until(2.0).unwrap().event, "a");
+        assert_eq!(q.pop_if_until(2.0).unwrap().event, "b");
+        assert!(q.pop_if_until(2.0).is_none(), "c is past the horizon");
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.now(), 2.0);
+    }
+
+    #[test]
+    fn pop_if_at_drains_simultaneous_runs_only() {
+        let mut q = EventQueue::new();
+        q.at(1.0, "x1");
+        q.at(1.0, "x2");
+        q.at(2.0, "y");
+        let first = q.pop().unwrap();
+        assert_eq!(first.event, "x1");
+        // Coalesce the rest of the t=1 run.
+        assert_eq!(q.pop_if_at(first.time).unwrap().event, "x2");
+        assert!(q.pop_if_at(first.time).is_none(), "t=2 is a new instant");
+        assert_eq!(q.pop().unwrap().event, "y");
+    }
+
+    #[test]
+    fn calendar_backend_matches_binary_on_random_workload() {
+        // Deterministic LCG; interleaved pushes/pops, including wakes
+        // cancelled on both queues identically.
+        let mut seed: u64 = 0x9E3779B97F4A7C15;
+        let mut rand = move || {
+            seed = seed
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            (seed >> 33) as f64 / (1u64 << 31) as f64
+        };
+        let mut bin = EventQueue::with_backend(QueueBackend::Binary);
+        let mut cal = EventQueue::with_backend(QueueBackend::Calendar);
+        let mut toks: Vec<(WakeToken, WakeToken)> = Vec::new();
+        for i in 0..5000u32 {
+            let r = rand();
+            if r < 0.55 {
+                let t = bin.now() + rand() * 50.0;
+                if rand() < 0.25 {
+                    toks.push((bin.at_token(t, i), cal.at_token(t, i)));
+                } else {
+                    bin.at(t, i);
+                    cal.at(t, i);
+                }
+            } else if r < 0.65 && !toks.is_empty() {
+                let (tb, tc) = toks.swap_remove((rand() * toks.len() as f64) as usize);
+                assert_eq!(bin.cancel(tb), cal.cancel(tc));
+            } else {
+                let (a, b) = (bin.pop(), cal.pop());
+                match (a, b) {
+                    (None, None) => {}
+                    (Some(x), Some(y)) => {
+                        assert_eq!(x.time, y.time);
+                        assert_eq!(x.event, y.event);
+                    }
+                    (x, y) => panic!("backend divergence: {x:?} vs {y:?}"),
+                }
+            }
+            assert_eq!(bin.len(), cal.len());
+        }
+        loop {
+            match (bin.pop(), cal.pop()) {
+                (None, None) => break,
+                (Some(x), Some(y)) => {
+                    assert_eq!((x.time, x.event), (y.time, y.event));
+                }
+                (x, y) => panic!("drain divergence: {x:?} vs {y:?}"),
+            }
+        }
     }
 }

@@ -11,11 +11,12 @@
 //! own event enum; unit tests in this module exercise the engine with toy
 //! actors.
 
+mod calendar;
 pub mod engine;
 pub mod event;
 
 pub use engine::{run, run_until, Actor};
-pub use event::{EventQueue, Scheduled};
+pub use event::{EventQueue, QueueBackend, Scheduled, WakeToken};
 
 /// Virtual time, in seconds. `f64` gives microsecond resolution over the
 /// multi-hour horizons the paper measures, with cheap arithmetic.

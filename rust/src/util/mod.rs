@@ -6,4 +6,5 @@ pub mod csv;
 pub mod fmt;
 pub mod json;
 pub mod rng;
+pub mod slab;
 pub mod stats;

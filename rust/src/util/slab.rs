@@ -1,0 +1,213 @@
+//! A generation-checked slab: stable integer keys, O(1) insert/remove,
+//! and ABA-safe key validation.
+//!
+//! Slots are recycled through a free list, but every recycle bumps the
+//! slot's generation, so a key that outlives its value is *detected*
+//! (`get`/`remove` return `None`) instead of silently aliasing the new
+//! occupant. This is the storage discipline the event calendar's wake
+//! tokens ride on ([`crate::sim::EventQueue`]): a timer handle held past
+//! its firing is a stale generation, never a dangling index.
+
+/// A generation-checked handle into a [`Slab`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SlabKey {
+    index: u32,
+    gen: u32,
+}
+
+impl SlabKey {
+    /// The dense slot index (stable for the key's lifetime).
+    pub fn index(&self) -> u32 {
+        self.index
+    }
+
+    /// The slot generation this key was minted under.
+    pub fn generation(&self) -> u32 {
+        self.gen
+    }
+}
+
+#[derive(Debug)]
+enum Entry<T> {
+    /// Free slot; `gen` is the generation the *next* occupant will get.
+    Vacant { gen: u32 },
+    Occupied { gen: u32, value: T },
+}
+
+/// The slab arena.
+#[derive(Debug)]
+pub struct Slab<T> {
+    entries: Vec<Entry<T>>,
+    free: Vec<u32>,
+    len: usize,
+}
+
+impl<T> Default for Slab<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> Slab<T> {
+    /// An empty slab.
+    pub fn new() -> Slab<T> {
+        Slab { entries: Vec::new(), free: Vec::new(), len: 0 }
+    }
+
+    /// An empty slab with room for `cap` values before reallocating.
+    pub fn with_capacity(cap: usize) -> Slab<T> {
+        Slab { entries: Vec::with_capacity(cap), free: Vec::new(), len: 0 }
+    }
+
+    /// Number of live values.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True if no values are live.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Insert a value, reusing a free slot when one exists.
+    pub fn insert(&mut self, value: T) -> SlabKey {
+        self.len += 1;
+        if let Some(index) = self.free.pop() {
+            let gen = match self.entries[index as usize] {
+                Entry::Vacant { gen } => gen,
+                Entry::Occupied { .. } => unreachable!("free list points at occupied slot"),
+            };
+            self.entries[index as usize] = Entry::Occupied { gen, value };
+            return SlabKey { index, gen };
+        }
+        let index = self.entries.len() as u32;
+        self.entries.push(Entry::Occupied { gen: 0, value });
+        SlabKey { index, gen: 0 }
+    }
+
+    /// Whether `key` still addresses a live value (same slot *and* same
+    /// generation).
+    pub fn contains(&self, key: SlabKey) -> bool {
+        matches!(
+            self.entries.get(key.index as usize),
+            Some(Entry::Occupied { gen, .. }) if *gen == key.gen
+        )
+    }
+
+    /// Borrow the value behind `key`, if the key is still live.
+    pub fn get(&self, key: SlabKey) -> Option<&T> {
+        match self.entries.get(key.index as usize) {
+            Some(Entry::Occupied { gen, value }) if *gen == key.gen => Some(value),
+            _ => None,
+        }
+    }
+
+    /// Mutably borrow the value behind `key`, if the key is still live.
+    pub fn get_mut(&mut self, key: SlabKey) -> Option<&mut T> {
+        match self.entries.get_mut(key.index as usize) {
+            Some(Entry::Occupied { gen, value }) if *gen == key.gen => Some(value),
+            _ => None,
+        }
+    }
+
+    /// Remove and return the value behind `key`. A stale key (already
+    /// removed, or its slot recycled) returns `None` and changes
+    /// nothing — double-free becomes a visible no-op.
+    pub fn remove(&mut self, key: SlabKey) -> Option<T> {
+        match self.entries.get_mut(key.index as usize) {
+            Some(entry @ Entry::Occupied { .. }) => {
+                let matches = matches!(entry, Entry::Occupied { gen, .. } if *gen == key.gen);
+                if !matches {
+                    return None;
+                }
+                // Bump the generation on vacancy so every old key to
+                // this slot is dead from here on.
+                let next_gen = key.gen.wrapping_add(1);
+                let old = std::mem::replace(entry, Entry::Vacant { gen: next_gen });
+                self.free.push(key.index);
+                self.len -= 1;
+                match old {
+                    Entry::Occupied { value, .. } => Some(value),
+                    Entry::Vacant { .. } => unreachable!("matched occupied above"),
+                }
+            }
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_get_remove_roundtrip() {
+        let mut s = Slab::new();
+        let a = s.insert("a");
+        let b = s.insert("b");
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.get(a), Some(&"a"));
+        assert_eq!(s.get(b), Some(&"b"));
+        assert_eq!(s.remove(a), Some("a"));
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.get(a), None);
+        assert!(s.contains(b));
+        assert!(!s.contains(a));
+    }
+
+    #[test]
+    fn double_remove_is_a_no_op() {
+        let mut s = Slab::new();
+        let k = s.insert(7);
+        assert_eq!(s.remove(k), Some(7));
+        assert_eq!(s.remove(k), None, "second remove is detected, not UB");
+        assert_eq!(s.len(), 0);
+    }
+
+    #[test]
+    fn recycled_slot_kills_the_old_key() {
+        let mut s = Slab::new();
+        let old = s.insert("old");
+        assert_eq!(s.remove(old), Some("old"));
+        let new = s.insert("new");
+        // Same slot, new generation: the stale key must not alias.
+        assert_eq!(new.index(), old.index());
+        assert_ne!(new.generation(), old.generation());
+        assert_eq!(s.get(old), None);
+        assert_eq!(s.remove(old), None);
+        assert_eq!(s.get(new), Some(&"new"));
+    }
+
+    #[test]
+    fn get_mut_updates_in_place() {
+        let mut s = Slab::with_capacity(4);
+        let k = s.insert(1u64);
+        *s.get_mut(k).unwrap() += 41;
+        assert_eq!(s.get(k), Some(&42));
+    }
+
+    #[test]
+    fn heavy_churn_keeps_len_consistent() {
+        let mut s = Slab::new();
+        let mut keys = Vec::new();
+        for round in 0..10 {
+            for i in 0..100u32 {
+                keys.push(s.insert(round * 1000 + i));
+            }
+            // Remove every other key; all survivors stay addressable.
+            let mut kept = Vec::new();
+            for (i, k) in keys.drain(..).enumerate() {
+                if i % 2 == 0 {
+                    assert!(s.remove(k).is_some());
+                } else {
+                    kept.push(k);
+                }
+            }
+            for &k in &kept {
+                assert!(s.contains(k));
+            }
+            keys = kept;
+        }
+        assert_eq!(s.len(), keys.len());
+    }
+}

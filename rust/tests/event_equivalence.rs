@@ -1,0 +1,319 @@
+//! Schedule-equivalence suite for the event-calendar hot path.
+//!
+//! The wake-driven dispatch loop (per-shard wake events + dirty sets),
+//! the ranged arena `Register`, and the calendar event-queue backend
+//! are all pure performance mechanisms: none of them may change a
+//! single scheduling decision. This suite pins that down:
+//!
+//! 1. **Polled vs wake-driven, preset level** — on three contention
+//!    presets (`burst`, `burst_mixed`, `heavy`) with the rapid-launch
+//!    fleet enabled, both hot paths agree on span, per-class latency
+//!    quantiles, backfill counts, and the full pool ledger.
+//! 2. **Polled vs wake-driven, fuzzed** — 12 generated workloads
+//!    (random node counts, job mixes, pool shapes, hold depths, aging
+//!    on/off, preemptive backfill on/off) produce bit-for-bit identical
+//!    task records, event counts, busy breakdowns, and pool outcomes.
+//! 3. **Binary-heap vs calendar queue** — the same workload driven
+//!    through either [`QueueBackend`] yields identical schedules.
+//! 4. **Ranged vs legacy `Register`** — the arena task-range walk and
+//!    the historical full-arena filter scan enqueue the same tasks in
+//!    the same order, so outcomes match exactly.
+
+use llsched::cluster::Cluster;
+use llsched::coordinator::experiment::{run_contention_with, ContentionOpts};
+use llsched::pool::{PoolConfig, ShardConfig};
+use llsched::scheduler::core::{SchedulerSim, SimOutcome, TaskModel};
+use llsched::scheduler::costmodel::CostModel;
+use llsched::scheduler::job::{ComputeBatch, JobSpec, ResourceRequest, SchedTaskSpec};
+use llsched::scheduler::noise::NoiseModel;
+use llsched::scheduler::queue::AgingPolicy;
+use llsched::scheduler::HotPath;
+use llsched::sim::{EventQueue, QueueBackend};
+use llsched::testing::prop::forall;
+use llsched::workload::contention::ContentionMix;
+
+fn quiet_sim(nodes: u32, seed: u64) -> SchedulerSim {
+    SchedulerSim::new(
+        Cluster::tx_green(nodes),
+        CostModel::slurm_like_tx_green(),
+        NoiseModel::dedicated(),
+        seed,
+    )
+    .with_task_model(TaskModel {
+        startup: 0.0,
+        jitter_sigma: 0.0,
+        p_node_late: 0.0,
+        late_range: (0.0, 0.0),
+    })
+    .with_server_speed(1.0)
+    .with_backfill(true)
+}
+
+fn job(
+    name: &str,
+    n_tasks: usize,
+    request: ResourceRequest,
+    duration: f64,
+    priority: i32,
+) -> JobSpec {
+    let lanes = match request {
+        ResourceRequest::WholeNode => 64,
+        ResourceRequest::Cores { cores, .. } => cores,
+    };
+    JobSpec {
+        name: name.into(),
+        tasks: vec![
+            SchedTaskSpec {
+                request,
+                duration,
+                batch: ComputeBatch { count: 1, each: duration },
+                lanes,
+            };
+            n_tasks
+        ],
+        reservation: None,
+        priority,
+        preemptable: false,
+    }
+}
+
+/// A fuzzed workload: one long batch job plus a stream of small jobs,
+/// some whole-node (pool-routable), some core-level.
+fn fuzzed_subs(g: &mut llsched::testing::prop::Gen, nodes: u32) -> Vec<(f64, JobSpec)> {
+    let mut subs: Vec<(f64, JobSpec)> = vec![(
+        0.3 + 2.0 * g.usize(0, 4) as f64,
+        job(
+            "batch",
+            1 + g.usize(0, nodes as usize),
+            ResourceRequest::WholeNode,
+            g.f64(20.0, 60.0),
+            0,
+        ),
+    )];
+    let n_small = 6 + g.usize(0, 14);
+    for i in 0..n_small {
+        let whole = g.usize(0, 2) > 0;
+        let request = if whole {
+            ResourceRequest::WholeNode
+        } else {
+            ResourceRequest::Cores { cores: 1u32 << g.int(0, 5), mem_mib: 0 }
+        };
+        subs.push((
+            0.8 + 1.1 * i as f64,
+            job(
+                &format!("small-{i}"),
+                1 + g.usize(0, 3),
+                request,
+                g.f64(0.5, if whole { 6.0 } else { 12.0 }),
+                g.int(0, 10) as i32,
+            ),
+        ));
+    }
+    subs
+}
+
+fn run_with(
+    mut sim: SchedulerSim,
+    subs: &[(f64, JobSpec)],
+    backend: QueueBackend,
+) -> SimOutcome {
+    let mut q = EventQueue::with_backend(backend);
+    for (at, spec) in subs {
+        sim.submit_at(&mut q, *at, spec.clone());
+    }
+    sim.run(&mut q)
+}
+
+/// Assert two outcomes are the same schedule, bit for bit.
+fn assert_same_schedule(a: &SimOutcome, b: &SimOutcome, what: &str) -> Result<(), String> {
+    if a.records.len() != b.records.len() {
+        return Err(format!("{what}: record count diverged"));
+    }
+    for (x, y) in a.records.iter().zip(&b.records) {
+        if x.state != y.state
+            || x.start_t != y.start_t
+            || x.end_t != y.end_t
+            || x.cleanup_t != y.cleanup_t
+            || x.cores != y.cores
+        {
+            return Err(format!("{what}: task {} diverged: {x:?} vs {y:?}", x.task));
+        }
+    }
+    if a.backfills.len() != b.backfills.len() {
+        return Err(format!("{what}: backfill count diverged"));
+    }
+    if a.events_processed != b.events_processed {
+        return Err(format!(
+            "{what}: event count diverged ({} vs {})",
+            a.events_processed, b.events_processed
+        ));
+    }
+    if a.final_time != b.final_time {
+        return Err(format!("{what}: final time diverged"));
+    }
+    if a.busy.total() != b.busy.total()
+        || a.busy.register != b.busy.register
+        || a.busy.dispatch != b.busy.dispatch
+        || a.busy.cleanup != b.busy.cleanup
+        || a.busy.pool != b.busy.pool
+    {
+        return Err(format!(
+            "{what}: busy breakdown diverged: {:?} vs {:?}",
+            a.busy, b.busy
+        ));
+    }
+    match (&a.pool, &b.pool) {
+        (None, None) => {}
+        (Some(p), Some(q)) => {
+            if p.launches != q.launches
+                || p.launched_tasks != q.launched_tasks
+                || p.grows != q.grows
+                || p.shrinks != q.shrinks
+                || p.peak_leased != q.peak_leased
+                || p.final_leased != q.final_leased
+                || p.borrows != q.borrows
+            {
+                return Err(format!("{what}: pool ledger diverged"));
+            }
+        }
+        _ => return Err(format!("{what}: pool presence diverged")),
+    }
+    if a.overdue_preemptions != b.overdue_preemptions {
+        return Err(format!("{what}: preemption count diverged"));
+    }
+    Ok(())
+}
+
+/// Equivalence 1: three presets through the contention entry point,
+/// fleet on, both hot paths — identical results end to end.
+#[test]
+fn wake_driven_matches_polled_on_presets() {
+    for (preset, nodes, seed) in [("burst", 64u32, 11u64), ("burst_mixed", 16, 7), ("heavy", 32, 3)]
+    {
+        let mix = ContentionMix::preset(preset, nodes).unwrap();
+        let opts_for = |hp: HotPath| {
+            let mut o = if preset == "burst_mixed" {
+                ContentionOpts {
+                    pools: vec![
+                        ShardConfig::named("general", 4, 2, 10).unwrap(),
+                        ShardConfig::named("large", 2, 1, 6).unwrap(),
+                    ],
+                    ..ContentionOpts::classic(true, seed)
+                }
+            } else {
+                ContentionOpts {
+                    pool: PoolConfig { size: 4, min: 2, max: 8, ..PoolConfig::sized(4) },
+                    holds: 2,
+                    ..ContentionOpts::classic(true, seed)
+                }
+            };
+            o.hot_path = hp;
+            o
+        };
+        let polled = run_contention_with(&mix, opts_for(HotPath::Polled)).unwrap();
+        let woken = run_contention_with(&mix, opts_for(HotPath::WakeDriven)).unwrap();
+        assert_eq!(polled.span, woken.span, "{preset}: span diverged");
+        assert_eq!(polled.backfills, woken.backfills, "{preset}: backfills diverged");
+        assert_eq!(polled.unfinished, woken.unfinished, "{preset}: unfinished diverged");
+        assert_eq!(
+            polled.max_active_holds, woken.max_active_holds,
+            "{preset}: hold peak diverged"
+        );
+        assert_eq!(
+            polled.overdue_preemptions, woken.overdue_preemptions,
+            "{preset}: preemptions diverged"
+        );
+        for (a, b) in polled.reports.iter().zip(&woken.reports) {
+            assert_eq!(
+                a.median_launch_latency, b.median_launch_latency,
+                "{preset}: median latency diverged"
+            );
+            assert_eq!(
+                a.p95_launch_latency, b.p95_launch_latency,
+                "{preset}: p95 latency diverged"
+            );
+            assert_eq!(a.core_seconds, b.core_seconds, "{preset}: core-seconds diverged");
+            assert_eq!(a.completed, b.completed, "{preset}: completions diverged");
+        }
+        let (pp, wp) = (polled.pool.as_ref().unwrap(), woken.pool.as_ref().unwrap());
+        assert_eq!(pp.launches, wp.launches, "{preset}: pool launches diverged");
+        assert_eq!(pp.grows, wp.grows, "{preset}: pool grows diverged");
+        assert_eq!(pp.shrinks, wp.shrinks, "{preset}: pool shrinks diverged");
+        assert_eq!(pp.peak_leased, wp.peak_leased, "{preset}: pool peak diverged");
+        assert_eq!(pp.borrows, wp.borrows, "{preset}: pool borrows diverged");
+        assert_eq!(
+            pp.median_launch_latency, wp.median_launch_latency,
+            "{preset}: pool latency diverged"
+        );
+    }
+}
+
+/// Equivalence 2: 12 fuzzed workloads, polled vs wake-driven — the
+/// schedules are bit-for-bit identical, including the event count (the
+/// wake events are scheduled in both modes so the streams match).
+#[test]
+fn wake_driven_matches_polled_fuzzed() {
+    forall("wake-driven equivalence", 12, |g| {
+        let nodes = 2 + g.usize(0, 6) as u32;
+        let seed = g.int(0, u64::MAX - 1);
+        let subs = fuzzed_subs(g, nodes);
+        let max = 1 + g.usize(0, (nodes as usize).saturating_sub(1).max(1));
+        let min = g.usize(0, max.min(2));
+        let pool = PoolConfig { size: max.min(2), min, max, ..PoolConfig::sized(max) };
+        let holds = 1 + g.usize(0, 2);
+        let aging = if g.usize(0, 2) == 0 {
+            Some(AgingPolicy::new(0.5, 100))
+        } else {
+            None
+        };
+        let preempt = g.usize(0, 3) == 0;
+        let build = |hp: HotPath| {
+            quiet_sim(nodes, seed)
+                .with_pool(pool)
+                .with_holds(holds)
+                .with_aging(aging.clone())
+                .with_preempt_overdue(preempt)
+                .with_hot_path(hp)
+        };
+        let polled = run_with(build(HotPath::Polled), &subs, QueueBackend::Binary);
+        let woken = run_with(build(HotPath::WakeDriven), &subs, QueueBackend::Binary);
+        assert_same_schedule(&polled, &woken, "polled vs wake-driven")
+    });
+}
+
+/// Equivalence 3: the calendar-queue backend is a drop-in replacement
+/// for the binary heap — same schedule, same event count.
+#[test]
+fn calendar_backend_matches_binary_heap() {
+    forall("calendar backend equivalence", 8, |g| {
+        let nodes = 2 + g.usize(0, 5) as u32;
+        let seed = g.int(0, u64::MAX - 1);
+        let subs = fuzzed_subs(g, nodes);
+        let pool = PoolConfig { size: 2, min: 1, max: nodes as usize, ..PoolConfig::sized(2) };
+        let build = || quiet_sim(nodes, seed).with_pool(pool).with_holds(2);
+        let heap = run_with(build(), &subs, QueueBackend::Binary);
+        let cal = run_with(build(), &subs, QueueBackend::Calendar);
+        assert_same_schedule(&heap, &cal, "binary vs calendar")
+    });
+}
+
+/// Equivalence 4: the ranged arena `Register` walk enqueues exactly
+/// what the legacy full-arena filter scan did.
+#[test]
+fn ranged_register_matches_legacy_scan() {
+    forall("ranged register equivalence", 8, |g| {
+        let nodes = 2 + g.usize(0, 5) as u32;
+        let seed = g.int(0, u64::MAX - 1);
+        let subs = fuzzed_subs(g, nodes);
+        let pool = PoolConfig { size: 2, min: 1, max: nodes as usize, ..PoolConfig::sized(2) };
+        let build = |legacy: bool| {
+            quiet_sim(nodes, seed)
+                .with_pool(pool)
+                .with_holds(2)
+                .with_legacy_register(legacy)
+        };
+        let old = run_with(build(true), &subs, QueueBackend::Binary);
+        let new = run_with(build(false), &subs, QueueBackend::Binary);
+        assert_same_schedule(&old, &new, "legacy vs ranged register")
+    });
+}
