@@ -117,6 +117,18 @@ pub struct RunConfig {
     /// Mutually exclusive with the legacy `pool_size` keys, which map
     /// to a one-shard fleet.
     pub pools: Vec<ShardConfig>,
+    /// Per-node mean time between failures in seconds
+    /// (`fault_mtbf = 7200`); `0` disables MTBF node churn
+    /// ([`crate::fault`]).
+    pub fault_mtbf: f64,
+    /// Mean time to recovery once a node fails (`fault_mttr = 30`).
+    pub fault_mttr: f64,
+    /// Probability a task is a straggler (`fault_straggler_prob = 0.05`);
+    /// `0` disables straggler slowdowns.
+    pub fault_straggler_prob: f64,
+    /// Actual-runtime multiplier on stragglers
+    /// (`fault_straggler_factor = 4.0`).
+    pub fault_straggler_factor: f64,
 }
 
 impl Default for RunConfig {
@@ -142,6 +154,10 @@ impl Default for RunConfig {
             pool_hysteresis: 0.25,
             preempt_overdue: false,
             pools: Vec::new(),
+            fault_mtbf: 0.0,
+            fault_mttr: 30.0,
+            fault_straggler_prob: 0.0,
+            fault_straggler_factor: 1.0,
         }
     }
 }
@@ -195,6 +211,7 @@ impl RunConfig {
         }
         self.pool_config().validate().map_err(Error::Config)?;
         self.fleet_config().validate().map_err(Error::Config)?;
+        self.fault_config().validate().map_err(Error::Config)?;
         Ok(())
     }
 
@@ -280,6 +297,18 @@ impl RunConfig {
         if let Some(v) = run.get("preempt_overdue") {
             c.preempt_overdue = v.as_bool()?;
         }
+        if let Some(v) = run.get("fault_mtbf") {
+            c.fault_mtbf = v.as_float()?;
+        }
+        if let Some(v) = run.get("fault_mttr") {
+            c.fault_mttr = v.as_float()?;
+        }
+        if let Some(v) = run.get("fault_straggler_prob") {
+            c.fault_straggler_prob = v.as_float()?;
+        }
+        if let Some(v) = run.get("fault_straggler_factor") {
+            c.fault_straggler_factor = v.as_float()?;
+        }
         if let Some(v) = run.get("pools") {
             // Key *presence* is what conflicts — an explicitly written
             // legacy knob next to the list must error even when it
@@ -334,6 +363,21 @@ impl RunConfig {
     /// one-shard fleet (disabled when `pool_size` is 0 too).
     pub fn fleet_config(&self) -> FleetConfig {
         FleetConfig::from_parts(&self.pools, self.pool_config())
+    }
+
+    /// The fault-injection config this run uses (disabled when every
+    /// `fault_*` key is at its default). The planning horizon is a
+    /// generous multiple of `T_job` so churn covers the whole run even
+    /// under heavy scheduler overhead.
+    pub fn fault_config(&self) -> crate::fault::FaultConfig {
+        crate::fault::FaultConfig {
+            mtbf: self.fault_mtbf,
+            mttr: self.fault_mttr,
+            straggler_prob: self.fault_straggler_prob,
+            straggler_factor: self.fault_straggler_factor,
+            horizon: self.job_time * 20.0,
+            ..crate::fault::FaultConfig::disabled()
+        }
     }
 
     /// The placement strategy this run uses: the explicit `placement`
@@ -557,6 +601,34 @@ mod tests {
         assert!(pc.enabled());
         assert_eq!(pc.effective_max(), 16);
         assert_eq!(pc.effective_min(), 2);
+    }
+
+    #[test]
+    fn fault_keys_parse_and_validate() {
+        let c = RunConfig::from_value(&parser::parse("[run]\n").unwrap()).unwrap();
+        assert_eq!(c.fault_mtbf, 0.0);
+        assert_eq!(c.fault_mttr, 30.0);
+        assert_eq!(c.fault_straggler_prob, 0.0);
+        assert!(!c.fault_config().enabled(), "faults off by default");
+        let v = parser::parse(
+            "[run]\nfault_mtbf = 7200\nfault_mttr = 45\n\
+             fault_straggler_prob = 0.05\nfault_straggler_factor = 4.0\n",
+        )
+        .unwrap();
+        let c = RunConfig::from_value(&v).unwrap();
+        let fc = c.fault_config();
+        assert!(fc.enabled());
+        assert_eq!(fc.mtbf, 7200.0);
+        assert_eq!(fc.mttr, 45.0);
+        assert_eq!(fc.straggler_prob, 0.05);
+        assert_eq!(fc.straggler_factor, 4.0);
+        assert!(fc.horizon > c.job_time, "horizon covers the run");
+        let bad = parser::parse("[run]\nfault_mtbf = -1\n").unwrap();
+        assert!(RunConfig::from_value(&bad).is_err(), "negative mtbf rejected");
+        let bad = parser::parse("[run]\nfault_mtbf = 100\nfault_mttr = 0\n").unwrap();
+        assert!(RunConfig::from_value(&bad).is_err(), "zero mttr rejected");
+        let bad = parser::parse("[run]\nfault_straggler_prob = 1.5\n").unwrap();
+        assert!(RunConfig::from_value(&bad).is_err(), "prob > 1 rejected");
     }
 
     #[test]

@@ -78,6 +78,12 @@ pub fn cell(nodes: u32, task: &TaskConfig, mode: Mode, run_idx: usize) -> RunCon
         pool_hysteresis: 0.25,
         preempt_overdue: false,
         pools: Vec::new(),
+        // Fault injection stays off in the paper matrix; the churn
+        // presets ([`crate::fault::scenario`]) opt in explicitly.
+        fault_mtbf: 0.0,
+        fault_mttr: 30.0,
+        fault_straggler_prob: 0.0,
+        fault_straggler_factor: 1.0,
     }
 }
 

@@ -6,6 +6,8 @@ use crate::cluster::Cluster;
 use crate::config::presets::{self, NODE_SCALES, RUNS_PER_CELL, TASK_CONFIGS};
 use crate::config::Mode;
 use crate::error::{Error, Result};
+use crate::fault::metrics::FaultOutcome;
+use crate::fault::FaultConfig;
 use crate::metrics::contention::{per_class, pool_report, ClassReport, PoolReport};
 use crate::metrics::overhead::OverheadPoint;
 use crate::metrics::timeline::UtilizationSeries;
@@ -89,7 +91,8 @@ pub fn run_cell(cell: &PaperCell) -> Result<CellResult> {
         .with_aging(cfg.aging_policy())
         .with_walltime_error(WalltimeError::from_sigma(cfg.walltime_error))
         .with_fleet(cfg.fleet_config())
-        .with_preempt_overdue(cfg.preempt_overdue);
+        .with_preempt_overdue(cfg.preempt_overdue)
+        .with_faults(cfg.fault_config());
     let agg = aggregation::for_mode(cfg.mode);
     let job = agg.plan(&cell.label(), &cell.workload(), &cell.shape())?;
     let (outcome, job_id) = sim.run_single(job);
@@ -171,6 +174,9 @@ pub struct ContentionOpts {
     /// historical polled loop — same schedule either way (pinned by
     /// `rust/tests/event_equivalence.rs`), different per-pick cost.
     pub hot_path: HotPath,
+    /// Fault & churn injection (disabled = the historical fault-free
+    /// path, bit-for-bit — pinned by `rust/tests/fault_properties.rs`).
+    pub fault: FaultConfig,
     pub seed: u64,
 }
 
@@ -188,6 +194,7 @@ impl ContentionOpts {
             pools: Vec::new(),
             preempt_overdue: false,
             hot_path: HotPath::default(),
+            fault: FaultConfig::disabled(),
             seed,
         }
     }
@@ -208,6 +215,11 @@ impl ContentionOpts {
     /// switch.
     pub fn fleet_sharded(&self) -> bool {
         self.pools.len() > 1
+    }
+
+    /// Whether fault injection participates — the v4 export switch.
+    pub fn fault_enabled(&self) -> bool {
+        self.fault.enabled()
     }
 }
 
@@ -240,7 +252,12 @@ pub struct ContentionResult {
     pub pool: Option<PoolReport>,
     /// Overdue backfilled tasks killed for a due hold.
     pub overdue_preemptions: u64,
-    /// Tasks that never finished (should be 0 — arrivals are finite).
+    /// Fault & churn outcome: counters plus the deterministic audit
+    /// log (`None` when fault injection was disabled).
+    pub fault: Option<FaultOutcome>,
+    /// Tasks that never finished (should be 0 — arrivals are finite,
+    /// though a churn run that permanently loses capacity may strand
+    /// tail tasks).
     pub unfinished: usize,
 }
 
@@ -283,7 +300,8 @@ pub fn run_contention_with(
     .with_walltime_error(opts.walltime_error)
     .with_fleet(fleet)
     .with_preempt_overdue(opts.preempt_overdue)
-    .with_hot_path(opts.hot_path);
+    .with_hot_path(opts.hot_path)
+    .with_faults(opts.fault.clone());
     let mut q = EventQueue::new();
     let subs = mix.generate(seed);
     if subs.is_empty() {
@@ -345,6 +363,7 @@ pub fn run_contention_with(
         holds_respected,
         pool,
         overdue_preemptions: outcome.overdue_preemptions,
+        fault: outcome.fault,
         unfinished,
     })
 }
@@ -415,23 +434,43 @@ const CONTENTION_SCHEMA_V2_EXTRA: [&str; 9] = [
 /// latency/utilization.
 const CONTENTION_SCHEMA_V3_EXTRA: [&str; 3] = ["pool_shards", "pool_borrows", "shard"];
 
+/// The v4 column extension: fault & churn counters. Emitted only when
+/// some result actually ran with fault injection enabled; fault-free
+/// rows in a mixed v4 document zero-fill the counters and leave the
+/// means empty (the NaN convention of [`f6`]).
+const CONTENTION_SCHEMA_V4_EXTRA: [&str; 8] = [
+    "node_failures",
+    "node_recoveries",
+    "tasks_killed",
+    "tasks_requeued",
+    "tasks_lost",
+    "work_lost_core_s",
+    "mean_requeue_delay_s",
+    "mean_recovery_s",
+];
+
 /// Per-class contention series as CSV (one row per scenario × class),
 /// mirroring `fig1 --out`: the `contention --out DIR` data dump.
 /// Classic runs export the v1 schema exactly; any pool or preemptive-
 /// backfill use switches the whole document to v2 (v1 columns + the
 /// pool/preemption extension); any multi-shard fleet switches it to v3
-/// (v2 columns + the shard extension and per-shard rows).
+/// (v2 columns + the shard extension and per-shard rows); any fault-
+/// injected run switches it to v4 (+ the churn counter extension).
 pub fn contention_csv(results: &[ContentionResult]) -> Csv {
     let extended = results
         .iter()
         .any(|r| r.opts.fleet_enabled() || r.opts.preempt_overdue);
     let sharded = results.iter().any(|r| r.opts.fleet_sharded());
+    let faulted = results.iter().any(|r| r.opts.fault_enabled());
     let mut header: Vec<&str> = CONTENTION_SCHEMA_V1.to_vec();
     if extended {
         header.extend(CONTENTION_SCHEMA_V2_EXTRA);
     }
     if sharded {
         header.extend(CONTENTION_SCHEMA_V3_EXTRA);
+    }
+    if faulted {
+        header.extend(CONTENTION_SCHEMA_V4_EXTRA);
     }
     let mut c = Csv::with_header(&header);
     for r in results {
@@ -472,6 +511,29 @@ pub fn contention_csv(results: &[ContentionResult]) -> Csv {
             row.push(r.pool.as_ref().map(|p| p.borrows).unwrap_or(0).to_string());
             row.push(shard.to_string());
         };
+        // The v4 churn extension: run-level counters, identical on
+        // every row of the scenario (zero-filled / empty on fault-free
+        // rows in a mixed document).
+        let fault_cols = |row: &mut Vec<String>| match &r.fault {
+            Some(f) => {
+                row.push(f.stats.node_failures.to_string());
+                row.push(f.stats.node_recoveries.to_string());
+                row.push(f.stats.tasks_killed.to_string());
+                row.push(f.stats.tasks_requeued.to_string());
+                row.push(f.stats.tasks_lost.to_string());
+                row.push(format!("{:.3}", f.stats.work_lost_core_s));
+                row.push(f6(f.stats.mean_requeue_delay()));
+                row.push(f6(f.stats.mean_recovery()));
+            }
+            None => {
+                for _ in 0..5 {
+                    row.push("0".into());
+                }
+                row.push("0.000".into());
+                row.push(String::new());
+                row.push(String::new());
+            }
+        };
         for rep in &r.reports {
             let mut row = prefix([
                 rep.class.to_string(),
@@ -503,6 +565,9 @@ pub fn contention_csv(results: &[ContentionResult]) -> Csv {
             }
             if sharded {
                 shard_cols(&mut row, "");
+            }
+            if faulted {
+                fault_cols(&mut row);
             }
             c.row(&row);
         }
@@ -537,6 +602,9 @@ pub fn contention_csv(results: &[ContentionResult]) -> Csv {
                         ),
                     );
                     shard_cols(&mut row, &sh.name);
+                    if faulted {
+                        fault_cols(&mut row);
+                    }
                     c.row(&row);
                 }
             }
@@ -614,6 +682,21 @@ pub fn contention_json(results: &[ContentionResult]) -> Json {
                     pool = pool.set("borrows", p.borrows).set("shards", Json::Arr(shards));
                 }
                 run = run.set("pool", pool);
+            }
+            if let Some(f) = &r.fault {
+                let fault = Json::obj()
+                    .set("node_failures", f.stats.node_failures)
+                    .set("node_recoveries", f.stats.node_recoveries)
+                    .set("reclaim_waves", f.stats.reclaim_waves)
+                    .set("drains", f.stats.drains)
+                    .set("tasks_killed", f.stats.tasks_killed)
+                    .set("tasks_requeued", f.stats.tasks_requeued)
+                    .set("tasks_lost", f.stats.tasks_lost)
+                    .set("work_lost_core_s", f.stats.work_lost_core_s)
+                    .set("mean_requeue_delay_s", f.stats.mean_requeue_delay())
+                    .set("mean_recovery_s", f.stats.mean_recovery())
+                    .set("audit_records", f.audit.len());
+                run = run.set("fault", fault);
             }
             run.set("classes", Json::Arr(classes))
         })
@@ -1036,6 +1119,85 @@ mod tests {
         .unwrap();
         let csv = contention_csv(std::slice::from_ref(&single));
         assert!(csv.as_str().lines().next().unwrap().ends_with("overdue_preemptions"));
+    }
+
+    #[test]
+    fn faulted_contention_exports_v4_schema() {
+        // A churn run flips the export to v4: the prior columns
+        // verbatim, then the fault counter extension. A deterministic
+        // maintenance drain keeps the scenario graceful (no kills), so
+        // the test pins the schema without depending on kill timing.
+        let mix = ContentionMix::preset("tiny", 8).unwrap();
+        let fault = FaultConfig {
+            drain_times: vec![50.0],
+            drain_count: 1,
+            drain_hold: 100.0,
+            horizon: 100_000.0,
+            ..FaultConfig::disabled()
+        };
+        let opts = ContentionOpts {
+            fault: fault.clone(),
+            ..ContentionOpts::classic(true, 13)
+        };
+        let res = run_contention_with(&mix, opts).unwrap();
+        assert_eq!(res.unfinished, 0, "graceful drain strands nothing");
+        let f = res.fault.as_ref().expect("fault outcome present");
+        assert_eq!(f.stats.drains, 1);
+        assert_eq!(f.stats.node_recoveries, 1, "drained node comes back");
+        assert_eq!(f.stats.tasks_killed, 0, "drains are graceful");
+        assert!(!f.audit.is_empty(), "audit log records the drain");
+        let csv = contention_csv(std::slice::from_ref(&res));
+        let lines: Vec<&str> = csv.as_str().lines().collect();
+        assert_eq!(
+            lines[0],
+            "scenario,nodes,backfill,holds,aging,walltime_error,class,jobs,tasks,\
+             completed,median_latency_s,p95_latency_s,max_latency_s,starvation_age_s,\
+             core_seconds,utilization,span_s,backfills,max_active_holds,\
+             node_failures,node_recoveries,tasks_killed,tasks_requeued,tasks_lost,\
+             work_lost_core_s,mean_requeue_delay_s,mean_recovery_s",
+            "v4 golden header (fault-only run: v1 + v4 extension)"
+        );
+        let header_cols = lines[0].split(',').count();
+        for line in &lines[1..] {
+            assert_eq!(line.split(',').count(), header_cols, "row width matches header");
+        }
+        // Two identical runs export byte-for-byte identically — the
+        // audit-replay contract seen through the CSV lens.
+        let again = run_contention_with(
+            &mix,
+            ContentionOpts {
+                fault,
+                ..ContentionOpts::classic(true, 13)
+            },
+        )
+        .unwrap();
+        let csv_b = contention_csv(std::slice::from_ref(&again));
+        assert_eq!(csv.as_str(), csv_b.as_str(), "faulted export must be deterministic");
+        assert_eq!(
+            f.audit.to_text(),
+            again.fault.as_ref().unwrap().audit.to_text(),
+            "audit logs replay bit-for-bit"
+        );
+        let json = contention_json(std::slice::from_ref(&res)).to_pretty();
+        for key in ["\"fault\":", "\"drains\": 1", "\"audit_records\":"] {
+            assert!(json.contains(key), "json missing {key}");
+        }
+        // A mixed export (fault-free + faulted) zero-fills the fault
+        // columns on the fault-free rows.
+        let classic = run_contention_with(
+            &ContentionMix::preset("tiny", 8).unwrap(),
+            ContentionOpts::classic(true, 13),
+        )
+        .unwrap();
+        assert!(classic.fault.is_none());
+        let both = contention_csv(&[classic, res]);
+        let lines: Vec<&str> = both.as_str().lines().collect();
+        assert!(lines[0].ends_with("mean_recovery_s"));
+        assert!(
+            lines[1].ends_with(",0,0,0,0,0,0.000,,"),
+            "fault-free rows zero-fill the v4 extension: {}",
+            lines[1]
+        );
     }
 
     #[test]

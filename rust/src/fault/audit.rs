@@ -1,0 +1,262 @@
+//! The deterministic fault audit log.
+//!
+//! Every scheduling-relevant churn event is recorded as an
+//! [`AuditRecord`] — `(time, seq, event, reason)` — in the exact order
+//! the scheduler applied it. Because the fault plan is materialized up
+//! front from a seeded stream and the event queue breaks time ties by
+//! FIFO seq, the log is a pure function of `(config, seed)`: re-run
+//! the same scenario and [`AuditLog::to_text`] is byte-identical.
+//! [`AuditLog::replay_diff`] is the verifier — it compares two logs
+//! record by record and names the first divergence, which is how both
+//! the `churn --replay` CLI path and the replay-determinism property
+//! test check the contract.
+//!
+//! The text format is one record per line,
+//! `seq<TAB>time<TAB>event<TAB>reason`, with time printed at fixed
+//! 9-decimal precision so formatting can never mask (or invent) a
+//! divergence. See `docs/audit-log.md` for the full contract.
+
+use crate::cluster::NodeId;
+use crate::scheduler::TaskId;
+use crate::sim::Time;
+use std::fmt;
+
+/// What happened. Node ids and task ids are the scheduler's own.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AuditEvent {
+    /// Node went down hard.
+    NodeFailed { node: NodeId },
+    /// Node came back up.
+    NodeRecovered { node: NodeId },
+    /// Node entered a maintenance drain.
+    NodeDrained { node: NodeId },
+    /// A pooled lease on `node` was torn down because the node left
+    /// service; `shard` is the owning shard.
+    PoolEvicted { node: NodeId, shard: usize },
+    /// A backfill reservation hold on `node` for `task` was cleared.
+    HoldCleared { node: NodeId, task: TaskId },
+    /// Running `task` on `node` was killed.
+    TaskKilled { task: TaskId, node: NodeId },
+    /// Killed task requeued for attempt `attempt`.
+    TaskRequeued { task: TaskId, attempt: u32 },
+    /// Killed task exhausted its retries after `attempts` tries.
+    TaskLost { task: TaskId, attempts: u32 },
+    /// Spot reclamation wave `wave` fired, taking `nodes` nodes.
+    ReclaimWave { wave: u32, nodes: usize },
+}
+
+/// Why it happened.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultReason {
+    /// Drawn from the per-node MTBF process.
+    Mtbf,
+    /// Taken by a spot/preemptible reclamation wave.
+    SpotReclaim,
+    /// Scheduled maintenance.
+    Maintenance,
+    /// The node's downtime or drain window ended.
+    Recovery,
+    /// Collateral of a node-level event (kills, evictions, hold
+    /// clears triggered by a failure).
+    Cascade,
+    /// The retry policy ran out of attempts.
+    RetryExhausted,
+}
+
+impl fmt::Display for FaultReason {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            FaultReason::Mtbf => "mtbf",
+            FaultReason::SpotReclaim => "spot_reclaim",
+            FaultReason::Maintenance => "maintenance",
+            FaultReason::Recovery => "recovery",
+            FaultReason::Cascade => "cascade",
+            FaultReason::RetryExhausted => "retry_exhausted",
+        };
+        f.write_str(s)
+    }
+}
+
+impl fmt::Display for AuditEvent {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AuditEvent::NodeFailed { node } => write!(f, "node_failed node={node}"),
+            AuditEvent::NodeRecovered { node } => write!(f, "node_recovered node={node}"),
+            AuditEvent::NodeDrained { node } => write!(f, "node_drained node={node}"),
+            AuditEvent::PoolEvicted { node, shard } => {
+                write!(f, "pool_evicted node={node} shard={shard}")
+            }
+            AuditEvent::HoldCleared { node, task } => {
+                write!(f, "hold_cleared node={node} task={task}")
+            }
+            AuditEvent::TaskKilled { task, node } => {
+                write!(f, "task_killed task={task} node={node}")
+            }
+            AuditEvent::TaskRequeued { task, attempt } => {
+                write!(f, "task_requeued task={task} attempt={attempt}")
+            }
+            AuditEvent::TaskLost { task, attempts } => {
+                write!(f, "task_lost task={task} attempts={attempts}")
+            }
+            AuditEvent::ReclaimWave { wave, nodes } => {
+                write!(f, "reclaim_wave wave={wave} nodes={nodes}")
+            }
+        }
+    }
+}
+
+/// One audit-log line: when, in what order, what, and why.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AuditRecord {
+    /// Simulation time the scheduler applied the event.
+    pub time: Time,
+    /// Application order; assigned by the log, strictly increasing.
+    pub seq: u64,
+    pub event: AuditEvent,
+    pub reason: FaultReason,
+}
+
+impl fmt::Display for AuditRecord {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}\t{:.9}\t{}\t{}",
+            self.seq, self.time, self.event, self.reason
+        )
+    }
+}
+
+/// Append-only record of everything the fault layer did this run.
+#[derive(Debug, Clone, Default)]
+pub struct AuditLog {
+    records: Vec<AuditRecord>,
+    next_seq: u64,
+}
+
+impl AuditLog {
+    pub fn new() -> AuditLog {
+        AuditLog::default()
+    }
+
+    /// Append an event; the log assigns the seq.
+    pub fn push(&mut self, time: Time, event: AuditEvent, reason: FaultReason) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.records.push(AuditRecord {
+            time,
+            seq,
+            event,
+            reason,
+        });
+    }
+
+    pub fn records(&self) -> &[AuditRecord] {
+        &self.records
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Canonical text form: one record per line, trailing newline iff
+    /// non-empty. This exact string is what the replay-determinism
+    /// contract pins byte for byte.
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        for r in &self.records {
+            out.push_str(&r.to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// The replay verifier: `None` when the logs agree record for
+    /// record, else a human-readable description of the first
+    /// divergence.
+    pub fn replay_diff(a: &AuditLog, b: &AuditLog) -> Option<String> {
+        for (i, (ra, rb)) in a.records.iter().zip(b.records.iter()).enumerate() {
+            if ra != rb {
+                return Some(format!(
+                    "audit logs diverge at record {i}:\n  a: {ra}\n  b: {rb}"
+                ));
+            }
+        }
+        if a.records.len() != b.records.len() {
+            return Some(format!(
+                "audit logs diverge in length: a has {} records, b has {}",
+                a.records.len(),
+                b.records.len()
+            ));
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> AuditLog {
+        let mut log = AuditLog::new();
+        log.push(1.5, AuditEvent::NodeFailed { node: 3 }, FaultReason::Mtbf);
+        log.push(
+            1.5,
+            AuditEvent::TaskKilled { task: 7, node: 3 },
+            FaultReason::Cascade,
+        );
+        log.push(
+            9.25,
+            AuditEvent::NodeRecovered { node: 3 },
+            FaultReason::Recovery,
+        );
+        log
+    }
+
+    #[test]
+    fn seq_is_strictly_increasing_and_text_is_stable() {
+        let log = sample();
+        for (i, r) in log.records().iter().enumerate() {
+            assert_eq!(r.seq, i as u64);
+        }
+        let text = log.to_text();
+        assert_eq!(
+            text,
+            "0\t1.500000000\tnode_failed node=3\tmtbf\n\
+             1\t1.500000000\ttask_killed task=7 node=3\tcascade\n\
+             2\t9.250000000\tnode_recovered node=3\trecovery\n"
+        );
+        assert_eq!(text, sample().to_text());
+    }
+
+    #[test]
+    fn replay_diff_catches_divergence_and_length() {
+        let a = sample();
+        let b = sample();
+        assert_eq!(AuditLog::replay_diff(&a, &b), None);
+
+        let mut c = sample();
+        c.push(
+            10.0,
+            AuditEvent::TaskRequeued { task: 7, attempt: 1 },
+            FaultReason::Cascade,
+        );
+        let d = AuditLog::replay_diff(&a, &c).expect("length divergence");
+        assert!(d.contains("length"), "got: {d}");
+
+        let mut e = AuditLog::new();
+        e.push(1.5, AuditEvent::NodeFailed { node: 4 }, FaultReason::Mtbf);
+        let d = AuditLog::replay_diff(&a, &e).expect("record divergence");
+        assert!(d.contains("record 0"), "got: {d}");
+    }
+
+    #[test]
+    fn empty_log_renders_empty() {
+        let log = AuditLog::new();
+        assert!(log.is_empty());
+        assert_eq!(log.to_text(), "");
+    }
+}

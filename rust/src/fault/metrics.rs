@@ -1,0 +1,82 @@
+//! Counters and derived metrics for fault/churn runs.
+//!
+//! [`FaultStats`] is the raw tally the scheduler increments as it
+//! applies churn events; [`FaultOutcome`] pairs it with the audit log
+//! and rides out on the simulation outcome so the experiment layer can
+//! export v4 contention columns (see `docs/scenarios.md`).
+
+use super::audit::AuditLog;
+
+/// Raw churn tallies, incremented inline by the scheduler.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct FaultStats {
+    /// Nodes taken down hard (MTBF + reclamation, counted per node).
+    pub node_failures: u64,
+    /// Nodes returned to service.
+    pub node_recoveries: u64,
+    /// Spot reclamation waves fired.
+    pub reclaim_waves: u64,
+    /// Maintenance drains started.
+    pub drains: u64,
+    /// Running tasks killed by a node failure.
+    pub tasks_killed: u64,
+    /// Killed tasks put back on the queue.
+    pub tasks_requeued: u64,
+    /// Killed tasks that exhausted their retries.
+    pub tasks_lost: u64,
+    /// Core-seconds of completed-but-wasted work on killed tasks.
+    pub work_lost_core_s: f64,
+    /// Sum over restarted tasks of (restart time − kill time).
+    pub requeue_delay_s: f64,
+    /// Restarts counted into `requeue_delay_s`.
+    pub requeue_n: u64,
+    /// Sum over recoveries of (up time − down time).
+    pub recovery_s: f64,
+    /// Recoveries counted into `recovery_s`.
+    pub recovery_n: u64,
+}
+
+impl FaultStats {
+    /// Mean kill-to-restart latency, `NaN` when nothing restarted.
+    pub fn mean_requeue_delay(&self) -> f64 {
+        if self.requeue_n == 0 {
+            f64::NAN
+        } else {
+            self.requeue_delay_s / self.requeue_n as f64
+        }
+    }
+
+    /// Mean node downtime, `NaN` when nothing recovered.
+    pub fn mean_recovery(&self) -> f64 {
+        if self.recovery_n == 0 {
+            f64::NAN
+        } else {
+            self.recovery_s / self.recovery_n as f64
+        }
+    }
+}
+
+/// What a faulty run hands back: the tallies plus the replayable log.
+#[derive(Debug, Clone, Default)]
+pub struct FaultOutcome {
+    pub stats: FaultStats,
+    pub audit: AuditLog,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn means_handle_empty_and_nonempty() {
+        let mut s = FaultStats::default();
+        assert!(s.mean_requeue_delay().is_nan());
+        assert!(s.mean_recovery().is_nan());
+        s.requeue_delay_s = 6.0;
+        s.requeue_n = 3;
+        s.recovery_s = 20.0;
+        s.recovery_n = 4;
+        assert_eq!(s.mean_requeue_delay(), 2.0);
+        assert_eq!(s.mean_recovery(), 5.0);
+    }
+}

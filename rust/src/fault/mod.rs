@@ -1,0 +1,470 @@
+//! Fault injection: node failures, spot reclamation, drains, stragglers.
+//!
+//! Production clusters lose nodes mid-run. This module plans *when* and
+//! *how* nodes churn — per-node MTBF failure processes, spot/preemptible
+//! reclamation waves, scheduled maintenance drains, and per-task
+//! straggler slowdowns — entirely up front, from a dedicated seeded RNG
+//! stream. The scheduler consumes the resulting [`FaultPlan`] as
+//! ordinary pre-scheduled events, so a faulty run is exactly as
+//! deterministic as a healthy one: same `(config, seed)` in, same
+//! schedule and same audit log out (see [`crate::fault::audit`]).
+//!
+//! The plan's RNG stream is salted ([`FAULT_STREAM_SALT`]) and forked
+//! per node, so enabling faults never perturbs the placement, walltime,
+//! or workload streams — and a disabled [`FaultConfig`] draws nothing
+//! at all, which is what makes the fault-off bit-for-bit equivalence
+//! pin in `rust/tests/fault_properties.rs` possible.
+
+pub mod audit;
+pub mod metrics;
+pub mod scenario;
+
+use crate::cluster::NodeId;
+use crate::sim::Time;
+use crate::util::rng::{Rng, SplitMix64};
+
+/// Salt XORed into the run seed to derive the fault stream, so fault
+/// draws never overlap the scheduler/placement/walltime streams.
+pub const FAULT_STREAM_SALT: u64 = 0xA076_1D64_78BD_642F;
+
+/// Shortest node downtime the planner will emit; keeps Fail/Recover
+/// pairs strictly ordered even for tiny MTTR draws.
+const MIN_DOWNTIME: f64 = 1e-3;
+
+/// How killed tasks come back: up to `max_retries` requeues with
+/// exponential backoff.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    /// Requeue a killed task at most this many times before declaring
+    /// it lost.
+    pub max_retries: u32,
+    /// Base requeue delay in seconds; attempt `k` waits
+    /// `backoff * 2^k`.
+    pub backoff: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_retries: 3,
+            backoff: 1.0,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Delay before the next requeue after `retries` prior attempts.
+    /// The exponent is clamped so pathological retry counts cannot
+    /// overflow into infinity.
+    pub fn delay(&self, retries: u32) -> f64 {
+        self.backoff * f64::powi(2.0, retries.min(20) as i32)
+    }
+}
+
+/// Everything the fault planner needs: which churn processes are on
+/// and how hard they hit. A default config is fully disabled.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultConfig {
+    /// Mean time between failures per node, seconds; `0.0` disables
+    /// MTBF failures.
+    pub mtbf: f64,
+    /// Mean time to recovery once a node has failed, seconds.
+    pub mttr: f64,
+    /// Times at which spot-reclamation waves fire.
+    pub reclaim_times: Vec<Time>,
+    /// Nodes reclaimed per wave.
+    pub reclaim_count: usize,
+    /// Seconds after the wave before reclaimed nodes return;
+    /// `<= 0.0` means they never come back.
+    pub reclaim_hold: f64,
+    /// Times at which maintenance drains start.
+    pub drain_times: Vec<Time>,
+    /// Nodes drained per maintenance window.
+    pub drain_count: usize,
+    /// Seconds a drained node stays out before recovering;
+    /// `<= 0.0` means it never comes back.
+    pub drain_hold: f64,
+    /// Probability a task is a straggler.
+    pub straggler_prob: f64,
+    /// Actual-runtime multiplier applied to stragglers (their walltime
+    /// *estimate* keeps the declared duration, so stragglers overrun).
+    pub straggler_factor: f64,
+    /// Planning horizon: no fault event is generated at or beyond it.
+    pub horizon: Time,
+    /// Requeue policy for tasks killed by a fault.
+    pub retry: RetryPolicy,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig::disabled()
+    }
+}
+
+impl FaultConfig {
+    /// The no-faults config: plans nothing, draws nothing.
+    pub fn disabled() -> FaultConfig {
+        FaultConfig {
+            mtbf: 0.0,
+            mttr: 30.0,
+            reclaim_times: Vec::new(),
+            reclaim_count: 0,
+            reclaim_hold: 0.0,
+            drain_times: Vec::new(),
+            drain_count: 0,
+            drain_hold: 0.0,
+            straggler_prob: 0.0,
+            straggler_factor: 1.0,
+            horizon: 0.0,
+            retry: RetryPolicy::default(),
+        }
+    }
+
+    /// True when any churn process would generate work.
+    pub fn enabled(&self) -> bool {
+        self.mtbf > 0.0
+            || (!self.reclaim_times.is_empty() && self.reclaim_count > 0)
+            || (!self.drain_times.is_empty() && self.drain_count > 0)
+            || self.straggler_prob > 0.0
+    }
+
+    /// Reject configs the planner cannot honor.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.mtbf < 0.0 || !self.mtbf.is_finite() {
+            return Err(format!("fault mtbf must be finite and >= 0, got {}", self.mtbf));
+        }
+        if self.mtbf > 0.0 && (self.mttr <= 0.0 || !self.mttr.is_finite()) {
+            return Err(format!("fault mttr must be finite and > 0, got {}", self.mttr));
+        }
+        if !(0.0..=1.0).contains(&self.straggler_prob) {
+            return Err(format!(
+                "straggler_prob must be in [0, 1], got {}",
+                self.straggler_prob
+            ));
+        }
+        if self.straggler_prob > 0.0 && self.straggler_factor < 1.0 {
+            return Err(format!(
+                "straggler_factor must be >= 1, got {}",
+                self.straggler_factor
+            ));
+        }
+        if self.enabled() && self.horizon <= 0.0 {
+            return Err("fault horizon must be > 0 when faults are enabled".into());
+        }
+        Ok(())
+    }
+}
+
+/// One planned churn event, resolved to a concrete node or wave.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PlannedFault {
+    /// Node goes down hard; running work on it is killed.
+    Fail(NodeId),
+    /// Node comes back up.
+    Recover(NodeId),
+    /// Spot reclamation wave `w` fires (members live in
+    /// [`FaultPlan::wave`]).
+    ReclaimWave(u32),
+    /// Node enters a maintenance drain (finishes its work, takes no
+    /// more).
+    Drain(NodeId),
+}
+
+/// The fully materialized churn timetable for one run.
+///
+/// Generated once before the simulation starts; the scheduler turns
+/// each `(time, PlannedFault)` row into a pre-scheduled event. Events
+/// are sorted by time with generation order as the tie-break, which
+/// the event queue's FIFO seq ordering then preserves — the source of
+/// the replay-determinism contract.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    /// The config this plan was drawn from.
+    pub cfg: FaultConfig,
+    /// Time-sorted churn timetable.
+    pub events: Vec<(Time, PlannedFault)>,
+    /// Members of each reclamation wave, indexed by wave id.
+    waves: Vec<Vec<NodeId>>,
+    /// Seed of the fault stream; also keys the straggler hash.
+    fault_seed: u64,
+}
+
+impl FaultPlan {
+    /// Draw the full churn timetable for `n_nodes` nodes from the
+    /// fault stream of `seed`.
+    pub fn generate(cfg: &FaultConfig, n_nodes: u32, seed: u64) -> FaultPlan {
+        let fault_seed = seed ^ FAULT_STREAM_SALT;
+        let mut rng = Rng::new(fault_seed);
+        let mut events: Vec<(Time, PlannedFault)> = Vec::new();
+        let mut waves: Vec<Vec<NodeId>> = Vec::new();
+
+        // Per-node MTBF process: alternating up-gap / down-time draws
+        // from a per-node forked stream, so adding nodes never
+        // perturbs earlier nodes' draws.
+        if cfg.mtbf > 0.0 && cfg.horizon > 0.0 {
+            for node in 0..n_nodes {
+                let mut nrng = rng.fork();
+                let mut t = nrng.exponential(1.0 / cfg.mtbf);
+                while t < cfg.horizon {
+                    events.push((t, PlannedFault::Fail(node)));
+                    let down = nrng.exponential(1.0 / cfg.mttr).max(MIN_DOWNTIME);
+                    let up_at = t + down;
+                    if up_at >= cfg.horizon {
+                        break;
+                    }
+                    events.push((up_at, PlannedFault::Recover(node)));
+                    t = up_at + nrng.exponential(1.0 / cfg.mtbf);
+                }
+            }
+        }
+
+        // Reclamation waves: each picks `reclaim_count` distinct nodes
+        // by partial shuffle; members recover together after the hold.
+        if cfg.reclaim_count > 0 {
+            for &at in &cfg.reclaim_times {
+                if at <= 0.0 || at >= cfg.horizon {
+                    continue;
+                }
+                let members = pick_nodes(&mut rng, n_nodes, cfg.reclaim_count);
+                let wave = waves.len() as u32;
+                events.push((at, PlannedFault::ReclaimWave(wave)));
+                if cfg.reclaim_hold > 0.0 {
+                    let back = at + cfg.reclaim_hold;
+                    if back < cfg.horizon {
+                        for &m in &members {
+                            events.push((back, PlannedFault::Recover(m)));
+                        }
+                    }
+                }
+                waves.push(members);
+            }
+        }
+
+        // Maintenance drains: graceful — running work finishes, the
+        // node just stops taking new work until it recovers.
+        if cfg.drain_count > 0 {
+            for &at in &cfg.drain_times {
+                if at <= 0.0 || at >= cfg.horizon {
+                    continue;
+                }
+                let members = pick_nodes(&mut rng, n_nodes, cfg.drain_count);
+                for &m in &members {
+                    events.push((at, PlannedFault::Drain(m)));
+                }
+                if cfg.drain_hold > 0.0 {
+                    let back = at + cfg.drain_hold;
+                    if back < cfg.horizon {
+                        for &m in &members {
+                            events.push((back, PlannedFault::Recover(m)));
+                        }
+                    }
+                }
+            }
+        }
+
+        // Stable sort: equal times keep generation order, which the
+        // event queue's FIFO tie-break then preserves at run time.
+        events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        FaultPlan {
+            cfg: cfg.clone(),
+            events,
+            waves,
+            fault_seed,
+        }
+    }
+
+    /// Members of reclamation wave `w`.
+    pub fn wave(&self, w: u32) -> &[NodeId] {
+        &self.waves[w as usize]
+    }
+
+    /// Number of reclamation waves planned.
+    pub fn n_waves(&self) -> usize {
+        self.waves.len()
+    }
+
+    /// Straggler slowdown for one task: `straggler_factor` with
+    /// probability `straggler_prob`, else `1.0`. A pure hash of
+    /// `(fault_seed, task)` — no stream state — so the factor of task
+    /// `t` never depends on how many other tasks were submitted.
+    pub fn straggler_factor(&self, task: u64) -> f64 {
+        if self.cfg.straggler_prob <= 0.0 || self.cfg.straggler_factor <= 1.0 {
+            return 1.0;
+        }
+        let key = self.fault_seed ^ task.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let h = SplitMix64::new(key).next_u64();
+        // Map the top 53 bits onto [0, 1) exactly like `Rng::f64`.
+        let u = (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        if u < self.cfg.straggler_prob {
+            self.cfg.straggler_factor
+        } else {
+            1.0
+        }
+    }
+}
+
+/// Pick `count` distinct node ids by partial Fisher-Yates over a
+/// scratch identity vector.
+fn pick_nodes(rng: &mut Rng, n_nodes: u32, count: usize) -> Vec<NodeId> {
+    let mut ids: Vec<NodeId> = (0..n_nodes).collect();
+    let take = count.min(ids.len());
+    let mut out = Vec::with_capacity(take);
+    for i in 0..take {
+        let j = i + rng.below((ids.len() - i) as u64) as usize;
+        ids.swap(i, j);
+        out.push(ids[i]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mtbf_cfg() -> FaultConfig {
+        FaultConfig {
+            mtbf: 100.0,
+            mttr: 10.0,
+            horizon: 1000.0,
+            ..FaultConfig::disabled()
+        }
+    }
+
+    #[test]
+    fn disabled_plan_is_empty() {
+        let plan = FaultPlan::generate(&FaultConfig::disabled(), 64, 42);
+        assert!(plan.events.is_empty());
+        assert_eq!(plan.n_waves(), 0);
+        assert_eq!(plan.straggler_factor(7), 1.0);
+    }
+
+    #[test]
+    fn plan_is_deterministic() {
+        let cfg = mtbf_cfg();
+        let a = FaultPlan::generate(&cfg, 32, 1234);
+        let b = FaultPlan::generate(&cfg, 32, 1234);
+        assert_eq!(a.events, b.events);
+        let c = FaultPlan::generate(&cfg, 32, 1235);
+        assert_ne!(a.events, c.events);
+    }
+
+    #[test]
+    fn events_sorted_and_within_horizon() {
+        let mut cfg = mtbf_cfg();
+        cfg.reclaim_times = vec![50.0, 500.0, 2000.0];
+        cfg.reclaim_count = 4;
+        cfg.reclaim_hold = 60.0;
+        cfg.drain_times = vec![300.0];
+        cfg.drain_count = 2;
+        cfg.drain_hold = 100.0;
+        let plan = FaultPlan::generate(&cfg, 32, 7);
+        assert!(!plan.events.is_empty());
+        for w in plan.events.windows(2) {
+            assert!(w[0].0 <= w[1].0);
+        }
+        for &(t, _) in &plan.events {
+            assert!(t > 0.0 && t < cfg.horizon);
+        }
+        // The 2000.0 wave is beyond the horizon and must be dropped.
+        assert_eq!(plan.n_waves(), 2);
+        for w in 0..plan.n_waves() {
+            let members = plan.wave(w as u32);
+            assert_eq!(members.len(), 4);
+            let mut uniq = members.to_vec();
+            uniq.sort_unstable();
+            uniq.dedup();
+            assert_eq!(uniq.len(), members.len(), "wave members must be distinct");
+        }
+    }
+
+    #[test]
+    fn fail_recover_pairs_alternate_per_node() {
+        let plan = FaultPlan::generate(&mtbf_cfg(), 8, 99);
+        for node in 0..8u32 {
+            let mut down = false;
+            for &(_, ev) in &plan.events {
+                match ev {
+                    PlannedFault::Fail(n) if n == node => {
+                        assert!(!down, "double fail without recover on node {node}");
+                        down = true;
+                    }
+                    PlannedFault::Recover(n) if n == node => {
+                        assert!(down, "recover while up on node {node}");
+                        down = false;
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn adding_nodes_preserves_earlier_node_schedules() {
+        let cfg = mtbf_cfg();
+        let small = FaultPlan::generate(&cfg, 4, 5);
+        let large = FaultPlan::generate(&cfg, 8, 5);
+        let only_small = |plan: &FaultPlan| -> Vec<(Time, PlannedFault)> {
+            plan.events
+                .iter()
+                .filter(|(_, ev)| match ev {
+                    PlannedFault::Fail(n) | PlannedFault::Recover(n) | PlannedFault::Drain(n) => {
+                        *n < 4
+                    }
+                    PlannedFault::ReclaimWave(_) => false,
+                })
+                .cloned()
+                .collect()
+        };
+        assert_eq!(only_small(&small), only_small(&large));
+    }
+
+    #[test]
+    fn straggler_hash_is_stable_and_hits_rate() {
+        let mut cfg = FaultConfig::disabled();
+        cfg.straggler_prob = 0.2;
+        cfg.straggler_factor = 4.0;
+        cfg.horizon = 100.0;
+        let plan = FaultPlan::generate(&cfg, 4, 11);
+        let mut hits = 0;
+        for t in 0..10_000u64 {
+            let f = plan.straggler_factor(t);
+            assert_eq!(f, plan.straggler_factor(t), "hash must be pure");
+            assert!(f == 1.0 || f == 4.0);
+            if f == 4.0 {
+                hits += 1;
+            }
+        }
+        let rate = hits as f64 / 10_000.0;
+        assert!((rate - 0.2).abs() < 0.03, "straggler rate {rate} far from 0.2");
+    }
+
+    #[test]
+    fn retry_backoff_doubles_and_clamps() {
+        let r = RetryPolicy {
+            max_retries: 3,
+            backoff: 2.0,
+        };
+        assert_eq!(r.delay(0), 2.0);
+        assert_eq!(r.delay(1), 4.0);
+        assert_eq!(r.delay(2), 8.0);
+        assert!(r.delay(1000).is_finite());
+    }
+
+    #[test]
+    fn validate_rejects_bad_configs() {
+        let mut cfg = FaultConfig::disabled();
+        assert!(cfg.validate().is_ok());
+        cfg.mtbf = -1.0;
+        assert!(cfg.validate().is_err());
+        cfg.mtbf = 10.0;
+        cfg.mttr = 0.0;
+        assert!(cfg.validate().is_err());
+        cfg.mttr = 5.0;
+        cfg.horizon = 0.0;
+        assert!(cfg.validate().is_err());
+        cfg.horizon = 100.0;
+        assert!(cfg.validate().is_ok());
+        cfg.straggler_prob = 1.5;
+        assert!(cfg.validate().is_err());
+    }
+}

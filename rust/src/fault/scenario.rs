@@ -1,0 +1,184 @@
+//! Named churn scenarios: a workload mix paired with a fault plan.
+//!
+//! The `churn` CLI subcommand runs these end to end; the full cookbook
+//! (exact invocations, what each preset exercises, how to read the
+//! output) lives in `docs/scenarios.md`. Each preset pairs a
+//! [`ContentionMix`] with a [`FaultConfig`] whose horizon matches the
+//! mix, so churn keeps hitting the cluster for as long as work arrives.
+
+use super::{FaultConfig, RetryPolicy};
+use crate::error::{Error, Result};
+use crate::scheduler::job::ResourceRequest;
+use crate::spot::SPOT_PRIORITY;
+use crate::workload::contention::{Arrival, ClassSpec, ContentionMix, JobClass};
+use crate::workload::taskgen::TaskGen;
+
+/// A named churn scenario: what runs and what breaks.
+#[derive(Debug, Clone)]
+pub struct ChurnScenario {
+    pub name: String,
+    pub mix: ContentionMix,
+    pub fault: FaultConfig,
+}
+
+/// Preset names, in registry order (kept in sync with
+/// `docs/scenarios.md` by the CI docs-drift lane).
+pub const CHURN_PRESETS: [&str; 4] = ["churn_mtbf", "churn_reclaim", "churn_drain", "churn_full"];
+
+impl ChurnScenario {
+    /// Resolve a churn preset scaled to `nodes`:
+    ///
+    /// * `churn_mtbf` — the `tiny` contention mix under a per-node
+    ///   MTBF failure process (a handful of hard failures per run,
+    ///   ~30 s repairs). The baseline recover-and-requeue scenario.
+    /// * `churn_reclaim` — the `burst` rapid-launch mix with a
+    ///   low-priority spot filler class (at [`SPOT_PRIORITY`], reviving
+    ///   `spot/mod.rs`'s release-latency regime) and two reclamation
+    ///   waves that each yank an eighth of the machine mid-volley; the
+    ///   pool fleet must evict dead leases and re-grow past them.
+    /// * `churn_drain` — the `default` mix under rolling maintenance
+    ///   drains (graceful: running work finishes, drained nodes take
+    ///   no new work until their window ends).
+    /// * `churn_full` — everything at once on the `burst` mix: MTBF
+    ///   failures, one reclamation wave, one drain window, and 5%
+    ///   stragglers running 4× their declared walltime (which drives
+    ///   the `preempt_overdue` path when it is enabled).
+    pub fn preset(name: &str, nodes: u32) -> Result<ChurnScenario> {
+        let nodes = nodes.max(2);
+        match name {
+            "churn_mtbf" => {
+                let mix = ContentionMix::preset("tiny", nodes)?;
+                let fault = FaultConfig {
+                    // Scaled so the whole cluster sees a few failures
+                    // per 150 s horizon regardless of node count.
+                    mtbf: 30.0 * nodes as f64,
+                    mttr: 30.0,
+                    horizon: mix.horizon,
+                    retry: RetryPolicy {
+                        max_retries: 3,
+                        backoff: 1.0,
+                    },
+                    ..FaultConfig::disabled()
+                };
+                Ok(ChurnScenario::checked("churn_mtbf", mix, fault))
+            }
+            "churn_reclaim" => {
+                let mut mix = ContentionMix::preset("burst", nodes)?;
+                mix.name = "churn_reclaim".into();
+                mix.classes.push(spot_filler(nodes));
+                let fault = FaultConfig {
+                    reclaim_times: vec![60.0, 200.0],
+                    reclaim_count: (nodes / 8).max(1) as usize,
+                    reclaim_hold: 90.0,
+                    horizon: mix.horizon,
+                    retry: RetryPolicy {
+                        max_retries: 4,
+                        backoff: 0.5,
+                    },
+                    ..FaultConfig::disabled()
+                };
+                Ok(ChurnScenario::checked("churn_reclaim", mix, fault))
+            }
+            "churn_drain" => {
+                let mix = ContentionMix::preset("default", nodes)?;
+                let fault = FaultConfig {
+                    drain_times: vec![100.0, 300.0],
+                    drain_count: (nodes / 8).max(1) as usize,
+                    drain_hold: 120.0,
+                    horizon: mix.horizon,
+                    ..FaultConfig::disabled()
+                };
+                Ok(ChurnScenario::checked("churn_drain", mix, fault))
+            }
+            "churn_full" => {
+                let mut mix = ContentionMix::preset("burst", nodes)?;
+                mix.name = "churn_full".into();
+                mix.classes.push(spot_filler(nodes));
+                let fault = FaultConfig {
+                    mtbf: 60.0 * nodes as f64,
+                    mttr: 45.0,
+                    reclaim_times: vec![150.0],
+                    reclaim_count: (nodes / 8).max(1) as usize,
+                    reclaim_hold: 100.0,
+                    drain_times: vec![250.0],
+                    drain_count: (nodes / 16).max(1) as usize,
+                    drain_hold: 80.0,
+                    straggler_prob: 0.05,
+                    straggler_factor: 4.0,
+                    horizon: mix.horizon,
+                    retry: RetryPolicy {
+                        max_retries: 3,
+                        backoff: 1.0,
+                    },
+                };
+                Ok(ChurnScenario::checked("churn_full", mix, fault))
+            }
+            other => Err(Error::Config(format!(
+                "unknown churn preset {other:?} (known: churn_mtbf, churn_reclaim, \
+                 churn_drain, churn_full)"
+            ))),
+        }
+    }
+
+    fn checked(name: &str, mix: ContentionMix, fault: FaultConfig) -> ChurnScenario {
+        debug_assert!(fault.validate().is_ok(), "preset {name} fails validation");
+        ChurnScenario {
+            name: name.into(),
+            mix,
+            fault,
+        }
+    }
+}
+
+/// The spot-class revival: a steady stream of preemptible whole-node
+/// filler at [`SPOT_PRIORITY`], the `spot/mod.rs` regime — it soaks
+/// idle capacity between volleys and is first in line to die when a
+/// reclamation wave takes its node.
+fn spot_filler(nodes: u32) -> ClassSpec {
+    ClassSpec {
+        class: JobClass::Batch,
+        arrival: Arrival::Periodic {
+            gap: 40.0,
+            start: 2.0,
+        },
+        tasks_per_job: (nodes / 8).max(1) as u64,
+        request: ResourceRequest::WholeNode,
+        duration: TaskGen::Constant { seconds: 90.0 },
+        priority: SPOT_PRIORITY,
+        lanes: 64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_presets_resolve_and_validate() {
+        for name in CHURN_PRESETS {
+            let s = ChurnScenario::preset(name, 32).expect(name);
+            assert_eq!(s.name, name);
+            assert!(s.fault.enabled(), "{name} must enable some churn");
+            assert!(s.fault.validate().is_ok(), "{name} must validate");
+            assert_eq!(s.fault.horizon, s.mix.horizon, "{name} horizon mismatch");
+        }
+    }
+
+    #[test]
+    fn unknown_preset_lists_known_names() {
+        let err = ChurnScenario::preset("nope", 8).unwrap_err().to_string();
+        for name in CHURN_PRESETS {
+            assert!(err.contains(name), "error must list {name}: {err}");
+        }
+    }
+
+    #[test]
+    fn reclaim_presets_carry_the_spot_class() {
+        let s = ChurnScenario::preset("churn_reclaim", 16).unwrap();
+        assert!(
+            s.mix.classes.iter().any(|c| c.priority == SPOT_PRIORITY),
+            "churn_reclaim must include the spot filler class"
+        );
+        assert!(s.fault.reclaim_count >= 1);
+    }
+}

@@ -20,7 +20,9 @@
 //!   [`spot`].
 //! * **Workloads & metrics** — the paper's Table I/II benchmark matrix
 //!   ([`workload`]), utilization timelines, overhead metrics and
-//!   paper-style reports ([`metrics`]).
+//!   paper-style reports ([`metrics`]), plus a fault-injection and
+//!   churn layer ([`fault`]) with a deterministic audit log so failure
+//!   scenarios replay bit-for-bit from a seed.
 //! * **Real execution** — a PJRT runtime ([`runtime`]) that loads the
 //!   AOT-compiled JAX/Pallas artifacts, and a pinned-thread executor
 //!   ([`exec`]) so scheduled tasks can run *real* compute payloads.
@@ -36,6 +38,7 @@ pub mod config;
 pub mod coordinator;
 pub mod error;
 pub mod exec;
+pub mod fault;
 pub mod lltools;
 pub mod metrics;
 pub mod placement;

@@ -20,6 +20,9 @@ use llsched::coordinator::experiment::{
 };
 use llsched::config::{Mode, RunConfig};
 use llsched::error::Result;
+use llsched::fault::audit::AuditLog;
+use llsched::fault::scenario::ChurnScenario;
+use llsched::fault::FaultConfig;
 use llsched::metrics::overhead::speedup;
 use llsched::metrics::report;
 use llsched::placement::Strategy;
@@ -71,6 +74,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "placement" => cmd_placement(args),
         "contention" => cmd_contention(args),
         "pool" => cmd_pool(args),
+        "churn" => cmd_churn(args),
         "spot" => cmd_spot(args),
         "artifacts" => cmd_artifacts(args),
         other => {
@@ -129,6 +133,22 @@ commands:
                             volleys for the sharded fleet); --compare
                             runs backfill-only vs pooled/fleet and
                             reports the launch-latency speedup
+  churn [--preset P] [--nodes N] [--seed S] [--no-pool] [--replay]
+        [--out DIR]
+                            run a failure & churn scenario (P:
+                            churn_mtbf|churn_reclaim|churn_drain|
+                            churn_full, default churn_full): node
+                            failures, spot reclamation waves,
+                            maintenance drains, and stragglers over a
+                            contention mix, with the rapid-launch pool
+                            fleet on by default (--no-pool for the
+                            batch-only path); --replay re-runs the same
+                            (config, seed) and verifies the audit logs
+                            match bit-for-bit; --out writes per-class
+                            CSV/JSON plus the deterministic audit log
+                            (audit.log); see docs/scenarios.md for the
+                            cookbook and docs/audit-log.md for the
+                            record format
   spot [--nodes N]          spot-job release-latency comparison
   artifacts                 verify AOT artifacts load and execute
 ";
@@ -445,6 +465,7 @@ fn cmd_contention(args: &Args) -> Result<()> {
         pools: pools.clone(),
         preempt_overdue,
         hot_path: llsched::scheduler::HotPath::default(),
+        fault: FaultConfig::disabled(),
         seed,
     };
     let mut results: Vec<ContentionResult> = Vec::new();
@@ -592,6 +613,68 @@ fn cmd_pool(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_churn(args: &Args) -> Result<()> {
+    args.expect_known(&["preset", "nodes", "seed", "no-pool", "replay", "out"])?;
+    let nodes: u32 = args.opt_parse("nodes", 32)?;
+    let seed: u64 = args.opt_parse("seed", 7)?;
+    let preset = args.opt("preset").unwrap_or("churn_full");
+    let scenario = ChurnScenario::preset(preset, nodes)?;
+    // The pool fleet is on by default — churn is where its eviction and
+    // re-grow paths earn their keep — with the same cluster-scaled
+    // elastic bounds `pool` uses: quarter / eighth / three quarters.
+    let pool = if args.flag("no-pool") {
+        PoolConfig::disabled()
+    } else {
+        let n = nodes.max(2) as usize;
+        PoolConfig {
+            size: (n / 4).max(1),
+            min: (n / 8).min((n / 4).max(1)),
+            max: (3 * n / 4).max((n / 4).max(1)),
+            ..PoolConfig::disabled()
+        }
+    };
+    pool.validate().map_err(llsched::Error::Config)?;
+    let opts = ContentionOpts {
+        pool,
+        fault: scenario.fault.clone(),
+        ..ContentionOpts::classic(true, seed)
+    };
+    let res = run_contention_with(&scenario.mix, opts.clone())?;
+    print_contention(&res);
+    let audit = |r: &ContentionResult| -> AuditLog {
+        r.fault.as_ref().map(|f| f.audit.clone()).unwrap_or_default()
+    };
+    if args.flag("replay") {
+        // Deterministic replay: the same (config, seed) must reproduce
+        // the run — and its audit log — bit for bit.
+        let replayed = run_contention_with(&scenario.mix, opts)?;
+        match AuditLog::replay_diff(&audit(&res), &audit(&replayed)) {
+            None => println!(
+                "replay: OK — {} audit records reproduced bit-for-bit",
+                audit(&res).len()
+            ),
+            Some(diff) => {
+                return Err(llsched::Error::Config(format!(
+                    "replay diverged (this is a determinism bug): {diff}"
+                )))
+            }
+        }
+    }
+    if let Some(out) = args.opt("out") {
+        let dir = PathBuf::from(out);
+        std::fs::create_dir_all(&dir)?;
+        let results = [res];
+        contention_csv(&results).save(&dir.join("contention.csv"))?;
+        std::fs::write(
+            dir.join("contention.json"),
+            contention_json(&results).to_pretty(),
+        )?;
+        std::fs::write(dir.join("audit.log"), audit(&results[0]).to_text())?;
+        println!("(per-class CSV/JSON + audit log in {dir:?})");
+    }
+    Ok(())
+}
+
 fn print_contention(res: &ContentionResult) {
     println!(
         "contention {}: {} nodes, backfill {}, holds {}, aging {}, walltime error {}",
@@ -665,6 +748,22 @@ fn print_contention(res: &ContentionResult) {
     }
     if res.opts.preempt_overdue {
         println!("  preemptive backfill: {} overdue tasks killed", res.overdue_preemptions);
+    }
+    if let Some(f) = &res.fault {
+        let s = &f.stats;
+        println!(
+            "  churn: {} failures / {} recoveries  {} reclaim waves  {} drains  \
+             killed {}  requeued {}  lost {}  work lost {:.0} core-s",
+            s.node_failures,
+            s.node_recoveries,
+            s.reclaim_waves,
+            s.drains,
+            s.tasks_killed,
+            s.tasks_requeued,
+            s.tasks_lost,
+            s.work_lost_core_s,
+        );
+        println!("  audit: {} records (replayable; see docs/audit-log.md)", f.audit.len());
     }
     println!();
 }

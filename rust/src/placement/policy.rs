@@ -6,7 +6,7 @@
 //! and releases resources, so the index is maintained incrementally and
 //! can never drift from the cluster.
 
-use crate::cluster::{Cluster, NodeId};
+use crate::cluster::{Cluster, NodeId, NodeState};
 use crate::error::Result;
 use crate::placement::free_index::FreeIndex;
 use crate::placement::Strategy;
@@ -321,6 +321,20 @@ impl PlacementEngine {
         let free = cluster.node(p.node)?.free_cores();
         self.index.on_delta(p.node, free);
         Ok(())
+    }
+
+    /// Flip a node's lifecycle state and keep the index in sync: a
+    /// non-`Up` node leaves the fit-query buckets at once, a recovering
+    /// node re-enters with its cached free count (allocations survive a
+    /// state flip, so the cache is still correct). This is the fault
+    /// layer's fencing primitive. Returns `false` for an unknown node.
+    pub fn set_node_state(&mut self, cluster: &mut Cluster, node: NodeId, state: NodeState) -> bool {
+        let Ok(n) = cluster.node_mut(node) else {
+            return false;
+        };
+        n.set_state(state);
+        self.index.on_state_change(node, state);
+        true
     }
 }
 

@@ -225,6 +225,37 @@ impl NodePool {
         true
     }
 
+    /// Force `node` out of the pool whatever its state — the fault
+    /// path (a leased node died or was reclaimed; there is no graceful
+    /// drain to wait for). An idle lease leaves the free list, a busy
+    /// lease just drops its membership (the running task is the
+    /// caller's problem), a draining node loses its earmark. Returns
+    /// `false` for batch nodes (nothing to evict).
+    pub fn evict(&mut self, node: NodeId) -> bool {
+        match self.membership[node as usize] {
+            Membership::Batch => false,
+            Membership::Leased => {
+                if self.in_free[node as usize] {
+                    let i = self
+                        .free
+                        .iter()
+                        .position(|&n| n == node)
+                        .expect("in_free mirrors the free list");
+                    self.free.swap_remove(i);
+                    self.in_free[node as usize] = false;
+                }
+                self.membership[node as usize] = Membership::Batch;
+                self.leased -= 1;
+                true
+            }
+            Membership::Draining => {
+                self.membership[node as usize] = Membership::Batch;
+                self.draining -= 1;
+                true
+            }
+        }
+    }
+
     /// Any draining node, for shrink-time drain cancellation.
     pub fn any_draining(&self) -> Option<NodeId> {
         if self.draining == 0 {
@@ -359,6 +390,58 @@ mod tests {
         assert!(p.cancel_drain(1));
         assert!(!p.cancel_drain(1));
         assert!(!p.in_pool(1));
+        assert_eq!(p.n_batch(), 2);
+        checked(&p);
+    }
+
+    #[test]
+    fn evict_idle_lease_leaves_free_list() {
+        let mut p = NodePool::new(4);
+        p.lease(1);
+        p.lease(2);
+        assert!(p.evict(1), "idle lease evicted");
+        assert!(!p.in_pool(1));
+        assert_eq!(p.n_leased(), 1);
+        assert_eq!(p.n_free(), 1, "evicted node left the free list");
+        checked(&p);
+        // The evicted node is batch again and can be re-leased — the
+        // fleet's re-grow path after the node recovers.
+        assert!(p.lease(1));
+        assert_eq!(p.n_leased(), 2);
+        checked(&p);
+    }
+
+    #[test]
+    fn evict_busy_lease_drops_membership_only() {
+        let mut p = NodePool::new(3);
+        p.lease(0);
+        assert_eq!(p.acquire(), Some(0), "node 0 goes busy");
+        assert!(p.evict(0), "busy lease evicted");
+        assert_eq!(p.n_leased(), 0);
+        assert_eq!(p.n_free(), 0);
+        assert!(!p.in_pool(0));
+        checked(&p);
+        // The kill already tore the task down; a stray release of the
+        // now-batch node must be refused, not corrupt the accounting.
+        assert!(!p.release_task(0), "release after evict refused");
+        checked(&p);
+    }
+
+    #[test]
+    fn evict_draining_node_loses_earmark() {
+        let mut p = NodePool::new(2);
+        p.begin_drain(1);
+        assert!(p.evict(1), "draining node evicted");
+        assert_eq!(p.n_draining(), 0);
+        assert!(!p.in_pool(1));
+        assert!(!p.promote(1), "promote after evict refused");
+        checked(&p);
+    }
+
+    #[test]
+    fn evict_batch_node_is_a_no_op() {
+        let mut p = NodePool::new(2);
+        assert!(!p.evict(0), "nothing to evict");
         assert_eq!(p.n_batch(), 2);
         checked(&p);
     }

@@ -22,6 +22,9 @@
 //! behaviour reported in the paper's §III.B.
 
 use crate::cluster::{Cluster, NodeId, NodeState};
+use crate::fault::audit::AuditLog;
+use crate::fault::metrics::{FaultOutcome, FaultStats};
+use crate::fault::{FaultConfig, FaultPlan, PlannedFault};
 use crate::placement::{Hold, PlacementEngine, ReservationLedger, Strategy};
 use crate::pool::{FleetConfig, PoolConfig, PoolFleet};
 use crate::scheduler::accounting::{JobStats, TaskRecord};
@@ -55,6 +58,15 @@ pub enum SchedEvent {
     /// `pick_next` at the next natural server op boundary, so the
     /// schedule is bit-for-bit the polled one.
     ShardWake(u32),
+    /// A planned churn event (node failure / recovery / reclamation
+    /// wave / maintenance drain) reaches the scheduler. Pre-scheduled
+    /// at [`SchedulerSim::run`] from the materialized
+    /// [`crate::fault::FaultPlan`]; the payload is always one of the
+    /// fault [`Op`] variants.
+    Fault(Op),
+    /// A fault-killed task's retry backoff expired: put it back on the
+    /// queue.
+    Requeue(TaskId),
 }
 
 /// Operations the server can be busy with.
@@ -86,6 +98,17 @@ pub enum Op {
     /// One hysteresis-driven resize pass of the given fleet shard
     /// (borrow / lease / drain / return).
     PoolResize(u32),
+    /// A node goes down hard: running tasks die, holds clear, pooled
+    /// leases are evicted, the node leaves the placement index.
+    NodeFail(NodeId),
+    /// A down/draining node returns to service.
+    NodeRecover(NodeId),
+    /// A spot reclamation wave fires: every node in the plan's wave
+    /// fails at once (the `spot/` release regime at node granularity).
+    ReclaimWave(u32),
+    /// A maintenance drain starts: the node stops taking new work but
+    /// running tasks finish.
+    DrainNode(NodeId),
 }
 
 /// Per-task live state (record + dispatch bookkeeping).
@@ -112,6 +135,15 @@ pub(crate) struct TaskSlot {
     /// A preempt signal is already queued for this task (guards the
     /// overdue scan against double-signalling).
     pub(crate) kill_signalled: bool,
+    /// How many times this task has been requeued after a fault kill.
+    pub(crate) retries: u32,
+    /// The node whose failure killed this task (`Some` from the moment
+    /// the failure marks it until the kill is fully accounted — or
+    /// cleared if the task's natural completion raced the kill signal).
+    pub(crate) fault_node: Option<NodeId>,
+    /// When the fault kill landed; consumed by the next launch to
+    /// measure kill-to-restart latency (`NAN` = no pending restart).
+    pub(crate) killed_at: Time,
 }
 
 /// Per-job metadata.
@@ -182,6 +214,8 @@ pub struct BusyBreakdown {
     pub preempt: Time,
     /// Rapid-launch pool work (dispatch + release + resize).
     pub pool: Time,
+    /// Fault-event handling (failures, recoveries, reclaims, drains).
+    pub fault: Time,
 }
 
 impl BusyBreakdown {
@@ -194,6 +228,7 @@ impl BusyBreakdown {
             + self.noise
             + self.preempt
             + self.pool
+            + self.fault
     }
 }
 
@@ -272,6 +307,10 @@ pub struct SimOutcome {
     /// Overdue backfilled tasks killed so a due hold could start
     /// (0 unless `preempt_overdue` is on).
     pub overdue_preemptions: u64,
+    /// Churn tallies + the deterministic audit log (`None` when fault
+    /// injection is disabled — fault-off runs carry no trace of the
+    /// subsystem, pinned by `rust/tests/fault_properties.rs`).
+    pub fault: Option<FaultOutcome>,
 }
 
 /// What the rapid-launch pool fleet did over one run. The scalar fields
@@ -414,6 +453,23 @@ pub struct SchedulerSim {
     pub(crate) task_model: TaskModel,
     pub(crate) rng: Rng,
     pub(crate) production: bool,
+    /// The construction seed, kept so [`Self::with_faults`] can derive
+    /// the fault plan's salted stream no matter when it is called.
+    pub(crate) seed: u64,
+
+    /// Fault-injection config ([`Self::with_faults`]; disabled by
+    /// default, in which case none of the fault state below is touched).
+    pub(crate) fault_cfg: FaultConfig,
+    /// The materialized churn schedule (`None` = fault injection off).
+    pub(crate) fault_plan: Option<FaultPlan>,
+    /// Fault ops awaiting the server (served before all other work).
+    pub(crate) fault_q: VecDeque<Op>,
+    pub(crate) fault_stats: FaultStats,
+    /// The deterministic audit log (see [`crate::fault::audit`]).
+    pub(crate) audit: AuditLog,
+    /// Per-node time it went out of service (`NAN` = in service);
+    /// recovery turns the difference into downtime metrics.
+    pub(crate) down_since: Vec<Time>,
 
     /// Dispatch-loop discipline (see [`HotPath`]).
     pub(crate) hot_path: HotPath,
@@ -480,6 +536,7 @@ impl SchedulerSim {
             seed ^ 0x9E37_79B9_7F4A_7C15,
         );
         let ledger = ReservationLedger::new(cluster.n_nodes() as usize);
+        let n_nodes = cluster.n_nodes() as usize;
         SchedulerSim {
             cluster,
             engine,
@@ -501,6 +558,13 @@ impl SchedulerSim {
             task_model: TaskModel::default(),
             rng,
             production,
+            seed,
+            fault_cfg: FaultConfig::disabled(),
+            fault_plan: None,
+            fault_q: VecDeque::new(),
+            fault_stats: FaultStats::default(),
+            audit: AuditLog::new(),
+            down_since: vec![f64::NAN; n_nodes],
             hot_path: HotPath::default(),
             backfill_dirty: true,
             hold_scratch: Vec::new(),
@@ -700,6 +764,31 @@ impl SchedulerSim {
         self.preempt_overdue
     }
 
+    /// Install a fault-injection plan ([`crate::fault`]): per-node MTBF
+    /// failures, spot reclamation waves, maintenance drains and
+    /// straggler stretch, all materialized up front from this sim's
+    /// seed on a dedicated salted stream. A disabled config draws
+    /// nothing and schedules nothing, so fault-off runs are bit-for-bit
+    /// the fault-free scheduler (pinned by
+    /// `rust/tests/fault_properties.rs`). The config is expected to be
+    /// validated by the caller; the debug assertion catches test
+    /// mistakes.
+    pub fn with_faults(mut self, cfg: FaultConfig) -> Self {
+        debug_assert!(cfg.validate().is_ok(), "invalid fault config: {:?}", cfg.validate());
+        self.fault_plan = if cfg.enabled() {
+            Some(FaultPlan::generate(&cfg, self.cluster.n_nodes(), self.seed))
+        } else {
+            None
+        };
+        self.fault_cfg = cfg;
+        self
+    }
+
+    /// Whether fault injection is active.
+    pub fn faults_enabled(&self) -> bool {
+        self.fault_plan.is_some()
+    }
+
     /// Disable the (possibly large) utilization timeline recording.
     pub fn without_timeline(mut self) -> Self {
         self.record_timeline = false;
@@ -740,6 +829,20 @@ impl SchedulerSim {
         self.tasks.reserve(n_tasks);
         self.bootstrap_pool();
         self.prime_noise(q);
+        // The churn schedule is materialized: turn it into events now,
+        // after all submissions, so fault events at a tied time always
+        // pop after the submissions planned for that instant.
+        if let Some(plan) = self.fault_plan.as_ref() {
+            for &(t, pf) in &plan.events {
+                let op = match pf {
+                    PlannedFault::Fail(n) => Op::NodeFail(n),
+                    PlannedFault::Recover(n) => Op::NodeRecover(n),
+                    PlannedFault::ReclaimWave(w) => Op::ReclaimWave(w),
+                    PlannedFault::Drain(n) => Op::DrainNode(n),
+                };
+                q.at(t, SchedEvent::Fault(op));
+            }
+        }
         let (final_time, events) = sim::run(&mut self, q);
         let pool = self.pool.take().map(|p| {
             let f = p.fleet;
@@ -783,6 +886,14 @@ impl SchedulerSim {
                 (t, running as u64)
             })
             .collect();
+        let fault = if self.fault_cfg.enabled() {
+            Some(FaultOutcome {
+                stats: self.fault_stats,
+                audit: self.audit,
+            })
+        } else {
+            None
+        };
         SimOutcome {
             records: self.tasks.into_iter().map(|t| t.record).collect(),
             jobs: self.jobs,
@@ -797,6 +908,7 @@ impl SchedulerSim {
             hold_invariant_violated: self.hold_invariant_violated,
             pool,
             overdue_preemptions: self.overdue_preemptions,
+            fault,
         }
     }
 
@@ -1236,6 +1348,9 @@ mod tests {
             pool_node: None,
             backfilled: false,
             kill_signalled: false,
+            retries: 0,
+            fault_node: None,
+            killed_at: f64::NAN,
             record: TaskRecord {
                 task: tid,
                 job: 0,

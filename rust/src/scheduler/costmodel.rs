@@ -69,6 +69,10 @@ pub struct CostModel {
     pub pool_release: Time,
     /// One pool-resize operation (lease / drain / return bookkeeping).
     pub pool_resize: Time,
+    /// Handling one fault event (node state flip, hold/lease teardown,
+    /// kill fan-out bookkeeping). Node failures are rare but their
+    /// handling still serializes through the scheduler server.
+    pub fault_handle: Time,
 }
 
 impl CostModel {
@@ -90,6 +94,7 @@ impl CostModel {
             pool_dispatch: 0.3e-3,
             pool_release: 0.5e-3,
             pool_resize: 2e-3,
+            fault_handle: 2e-3,
         }
     }
 
@@ -111,6 +116,7 @@ impl CostModel {
             pool_dispatch: 0.0,
             pool_release: 0.0,
             pool_resize: 0.0,
+            fault_handle: 0.0,
         }
     }
 

@@ -8,6 +8,7 @@
 //! is maintained incrementally and dispatch never scans the node table.
 
 use crate::cluster::{NodeId, NodeState};
+use crate::fault::audit::{AuditEvent, FaultReason};
 use crate::pool::Resize;
 use crate::scheduler::core::{BackfillEvent, SchedEvent, SchedulerSim};
 use crate::scheduler::job::{JobId, Placement, ResourceRequest, TaskId, TaskState};
@@ -144,6 +145,7 @@ impl SchedulerSim {
             0.0
         };
         let start = now + late;
+        self.note_restart(now, tid);
         let slot = &mut self.tasks[tid as usize];
         slot.record.state = TaskState::Running;
         slot.record.start_t = Some(start);
@@ -397,7 +399,10 @@ impl SchedulerSim {
     }
 
     /// The cleanup transaction completed: release resources, mark DONE.
-    pub(crate) fn finish_cleanup(&mut self, now: Time, tid: TaskId) {
+    /// Fault-killed tasks leave here into the retry path: their record
+    /// is stamped like any finished task's, then the requeue (if the
+    /// retry policy grants one) resets it when the backoff expires.
+    pub(crate) fn finish_cleanup(&mut self, now: Time, tid: TaskId, q: &mut EventQueue<SchedEvent>) {
         let slot = &mut self.tasks[tid as usize];
         debug_assert!(
             slot.record.state == TaskState::Completing
@@ -449,6 +454,18 @@ impl SchedulerSim {
         if let Some(p) = self.pool.as_mut() {
             p.mark_all();
         }
+        if self.tasks[tid as usize].fault_node.is_some() {
+            if was_completing {
+                // The natural completion raced the kill signal: the
+                // task finished its work before the failure's signal
+                // landed, so there is nothing to retry.
+                let slot = &mut self.tasks[tid as usize];
+                slot.fault_node = None;
+                slot.killed_at = f64::NAN;
+            } else {
+                self.schedule_retry(now, tid, q);
+            }
+        }
     }
 
     /// A preemption signal landed on a (possibly already finished) task.
@@ -464,7 +481,20 @@ impl SchedulerSim {
         if slot.kill_signalled {
             self.overdue_preemptions += 1;
         }
+        // Same landed-only rule for fault kills: the killed/lost work
+        // tallies and the audit record are written here, where the kill
+        // demonstrably took a running task down.
+        let killed_on = slot.fault_node;
+        let started = slot.record.start_t;
+        let cores = slot.record.cores;
         self.not_done -= 1; // RUNNING → PREEMPTED leaves the outstanding set
+        if let Some(node) = killed_on {
+            self.fault_stats.tasks_killed += 1;
+            let ran = (now - started.unwrap_or(now)).max(0.0);
+            self.fault_stats.work_lost_core_s += ran * cores as f64;
+            self.audit
+                .push(now, AuditEvent::TaskKilled { task: tid, node }, FaultReason::Cascade);
+        }
         self.end_occupancy(now, tid);
     }
 
@@ -512,6 +542,7 @@ impl SchedulerSim {
         !self.pending.is_empty()
             || !self.completions.is_empty()
             || !self.preempt_q.is_empty()
+            || !self.fault_q.is_empty()
             || self.running_cores > 0
             || self
                 .pool
@@ -658,6 +689,7 @@ impl SchedulerSim {
             }
         };
         let cores = self.engine.index().node_capacity(node);
+        self.note_restart(now, tid);
         let slot = &mut self.tasks[tid as usize];
         slot.record.state = TaskState::Running;
         slot.record.start_t = Some(now);
@@ -926,5 +958,296 @@ impl SchedulerSim {
             }
         }
         self.hold_scratch = holds;
+    }
+
+    // ---- fault & churn layer -------------------------------------------
+    //
+    // The plan itself (what breaks when) lives in `crate::fault`; these
+    // methods are the scheduler-side application of one planned event,
+    // run as server ops off the fault queue. Every mutation flows
+    // through the existing machinery — kills take the preempt path,
+    // releases the cleanup path, evictions the pool mutators — so the
+    // fault layer adds no second bookkeeping scheme to keep consistent.
+    // All of it is unreachable while fault injection is off, which
+    // keeps fault-off runs bit-for-bit identical (pinned by
+    // `rust/tests/fault_properties.rs`).
+
+    /// A node goes down hard. Running tasks on it (batch or pooled) are
+    /// marked and killed through the preempt path, its pooled lease is
+    /// evicted, any reservation hold fencing it is void, and the node
+    /// leaves the placement index until its recovery event.
+    pub(crate) fn apply_node_fail(
+        &mut self,
+        now: Time,
+        node: NodeId,
+        reason: FaultReason,
+        q: &mut EventQueue<SchedEvent>,
+    ) {
+        match self.cluster.node(node).map(|n| n.state()) {
+            Ok(NodeState::Up) | Ok(NodeState::Draining) => {}
+            // Unknown node, or already down: overlapping failure
+            // processes (MTBF + reclaim) are idempotent.
+            _ => return,
+        }
+        self.fault_stats.node_failures += 1;
+        self.audit.push(now, AuditEvent::NodeFailed { node }, reason);
+        // 1) Mark running tasks for the kill *before* the lease
+        // teardown detaches pool tasks from the node.
+        let mut kills: Vec<TaskId> = Vec::new();
+        for slot in self.tasks.iter_mut() {
+            if slot.record.state != TaskState::Running {
+                continue;
+            }
+            let on_node = slot.placement.as_ref().map(|p| p.node == node).unwrap_or(false)
+                || slot.pool_node.map(|(_, n)| n == node).unwrap_or(false);
+            if on_node && slot.fault_node.is_none() {
+                slot.fault_node = Some(node);
+                slot.killed_at = now;
+                kills.push(slot.record.task);
+            }
+        }
+        // 2) Pool membership teardown (evict the lease, reroute queued
+        // completions, wake the owning shard so it can re-grow).
+        self.pool_evict(now, node, q);
+        // 3) Fence the node out of placement. De-indexing is immediate;
+        // later releases of placements still held on the dead node stay
+        // safe — the index only updates its cached free count for a
+        // de-indexed node, and re-inserts with the final value at
+        // recovery.
+        self.engine.set_node_state(&mut self.cluster, node, NodeState::Down);
+        self.down_since[node as usize] = now;
+        // 4) A reservation hold fencing the dead node is void.
+        let held = self.ledger.hold_on(node).map(|h| h.task);
+        if let Some(task) = held {
+            self.ledger.clear_hold(task);
+            self.audit
+                .push(now, AuditEvent::HoldCleared { node, task }, FaultReason::Cascade);
+        }
+        // 5) Kill the marked tasks through the ordinary preempt path
+        // (signal op → PREEMPTED → cleanup → retry policy).
+        for tid in kills {
+            self.preempt_q.push_back(tid);
+        }
+        // Holds moved and fences changed: the scans must re-run.
+        self.backfill_dirty = true;
+        if let Some(p) = self.pool.as_mut() {
+            p.mark_all();
+        }
+    }
+
+    /// A down or draining node returns to service: back into the
+    /// placement index (with its still-cached free count — allocations
+    /// survive downtime until their cleanup releases them), and every
+    /// blocked consumer of capacity gets another look.
+    pub(crate) fn apply_node_recover(&mut self, now: Time, node: NodeId) {
+        match self.cluster.node(node).map(|n| n.state()) {
+            Ok(NodeState::Down) | Ok(NodeState::Draining) => {}
+            _ => return, // unknown node, or already back up
+        }
+        self.engine.set_node_state(&mut self.cluster, node, NodeState::Up);
+        self.fault_stats.node_recoveries += 1;
+        let since = self.down_since[node as usize];
+        if since.is_finite() {
+            self.fault_stats.recovery_s += (now - since).max(0.0);
+            self.fault_stats.recovery_n += 1;
+            self.down_since[node as usize] = f64::NAN;
+        }
+        self.audit
+            .push(now, AuditEvent::NodeRecovered { node }, FaultReason::Recovery);
+        // Fresh capacity: the blocked head retries against a fresh
+        // cycle, the backfill scans re-run, and every shard may have a
+        // grow candidate again.
+        self.hol_blocked = false;
+        self.cycle_budget = 0;
+        self.backfill_dirty = true;
+        if let Some(p) = self.pool.as_mut() {
+            for sh in p.fleet.shards.iter_mut() {
+                sh.grow_blocked = false;
+            }
+            p.mark_all();
+        }
+    }
+
+    /// A spot reclamation wave: every node in the plan's wave fails at
+    /// this instant, in plan order (deterministic — the audit log
+    /// records the wave header, then each node's failure cascade).
+    pub(crate) fn apply_reclaim_wave(
+        &mut self,
+        now: Time,
+        wave: u32,
+        q: &mut EventQueue<SchedEvent>,
+    ) {
+        let members: Vec<NodeId> = match self.fault_plan.as_ref() {
+            Some(plan) if (wave as usize) < plan.n_waves() => plan.wave(wave).to_vec(),
+            _ => return,
+        };
+        self.fault_stats.reclaim_waves += 1;
+        self.audit.push(
+            now,
+            AuditEvent::ReclaimWave { wave, nodes: members.len() },
+            FaultReason::SpotReclaim,
+        );
+        for node in members {
+            self.apply_node_fail(now, node, FaultReason::SpotReclaim, q);
+        }
+    }
+
+    /// A maintenance drain starts: graceful — running work finishes and
+    /// releases normally, but the node takes no new work (out of the
+    /// index) and a pooled lease ends now, since the shard must not
+    /// dispatch onto a node leaving service.
+    pub(crate) fn apply_drain_node(
+        &mut self,
+        now: Time,
+        node: NodeId,
+        q: &mut EventQueue<SchedEvent>,
+    ) {
+        match self.cluster.node(node).map(|n| n.state()) {
+            Ok(NodeState::Up) => {}
+            _ => return, // down or already draining: nothing to start
+        }
+        self.fault_stats.drains += 1;
+        self.audit
+            .push(now, AuditEvent::NodeDrained { node }, FaultReason::Maintenance);
+        self.pool_evict(now, node, q);
+        self.engine.set_node_state(&mut self.cluster, node, NodeState::Draining);
+        self.down_since[node as usize] = now;
+        let held = self.ledger.hold_on(node).map(|h| h.task);
+        if let Some(task) = held {
+            self.ledger.clear_hold(task);
+            self.audit
+                .push(now, AuditEvent::HoldCleared { node, task }, FaultReason::Cascade);
+        }
+        self.backfill_dirty = true;
+        if let Some(p) = self.pool.as_mut() {
+            p.mark_all();
+        }
+    }
+
+    /// Tear down a node's pool lease because the node is leaving
+    /// service. Pool tasks bound to the lease are detached first —
+    /// running ones will release through the batch cleanup queue
+    /// (killed or not), and completions already queued for the O(1)
+    /// shard release are rerouted there too, since after the eviction
+    /// the shard no longer owns the node and the shard release would be
+    /// a conservation violation. Returns `false` if no shard owned the
+    /// node.
+    fn pool_evict(&mut self, now: Time, node: NodeId, q: &mut EventQueue<SchedEvent>) -> bool {
+        let Some(sid) = self.pool.as_ref().and_then(|p| p.fleet.owner(node)) else {
+            return false;
+        };
+        let mut reroute: Vec<TaskId> = Vec::new();
+        for slot in self.tasks.iter_mut() {
+            if slot.pool_node.map(|(_, n)| n == node).unwrap_or(false) {
+                slot.pool_node = None;
+                if slot.record.state == TaskState::Completing {
+                    reroute.push(slot.record.task);
+                }
+            }
+        }
+        if !reroute.is_empty() {
+            if let Some(p) = self.pool.as_mut() {
+                p.completions.retain(|&(_, t)| !reroute.contains(&t));
+            }
+            for t in reroute {
+                self.completions.push_back(t);
+            }
+            self.note_backlog();
+        }
+        let p = self.pool.as_mut().expect("owner implies a pool");
+        if !p.fleet.shards[sid].nodes.evict(node) {
+            p.fleet.violated = true;
+        }
+        p.fleet.note_release(sid, node);
+        // The fleet lost capacity: clear every grow latch and schedule
+        // the evicted shard's wake so its manager can re-grow past the
+        // dead node (the same wake pattern as a resize apply).
+        for sh in p.fleet.shards.iter_mut() {
+            sh.grow_blocked = false;
+        }
+        let cooldown = p.fleet.shards[sid].manager.cooldown;
+        p.wakes_pending[sid] += 1;
+        p.mark_all();
+        q.at(now + cooldown, SchedEvent::ShardWake(sid as u32));
+        self.audit.push(
+            now,
+            AuditEvent::PoolEvicted { node, shard: sid },
+            FaultReason::Cascade,
+        );
+        true
+    }
+
+    /// A launch landing on a task with a pending restart stamp closes
+    /// the kill-to-restart latency measurement. No-op (NaN stamp) for
+    /// every task that was never fault-killed.
+    pub(crate) fn note_restart(&mut self, now: Time, tid: TaskId) {
+        let killed_at = self.tasks[tid as usize].killed_at;
+        if killed_at.is_finite() {
+            self.fault_stats.requeue_delay_s += (now - killed_at).max(0.0);
+            self.fault_stats.requeue_n += 1;
+            self.tasks[tid as usize].killed_at = f64::NAN;
+        }
+    }
+
+    /// The retry-policy decision for one fault-killed task, taken at
+    /// its cleanup: requeue after exponential backoff, or declare it
+    /// lost once the attempts are spent.
+    fn schedule_retry(&mut self, now: Time, tid: TaskId, q: &mut EventQueue<SchedEvent>) {
+        let retries = {
+            let slot = &mut self.tasks[tid as usize];
+            slot.fault_node = None;
+            slot.retries
+        };
+        if retries >= self.fault_cfg.retry.max_retries {
+            self.tasks[tid as usize].killed_at = f64::NAN;
+            self.fault_stats.tasks_lost += 1;
+            self.audit.push(
+                now,
+                AuditEvent::TaskLost { task: tid, attempts: retries },
+                FaultReason::RetryExhausted,
+            );
+            return;
+        }
+        q.at(now + self.fault_cfg.retry.delay(retries), SchedEvent::Requeue(tid));
+    }
+
+    /// A retry backoff expired: reset the task's record to PENDING and
+    /// put it back on the queue it belongs to — the same routing as a
+    /// fresh registration, so a short whole-node task returns to its
+    /// shard and everything else to the batch queue.
+    pub(crate) fn requeue_task(&mut self, now: Time, tid: TaskId) {
+        let prio = {
+            let slot = &mut self.tasks[tid as usize];
+            debug_assert_eq!(slot.record.state, TaskState::Done, "requeue of live task");
+            if slot.record.state != TaskState::Done {
+                return;
+            }
+            slot.retries += 1;
+            slot.record.state = TaskState::Pending;
+            slot.record.start_t = None;
+            slot.record.end_t = None;
+            slot.record.cleanup_t = None;
+            slot.record.cores = 0;
+            slot.backfilled = false;
+            slot.kill_signalled = false;
+            slot.enqueued_at = now;
+            slot.priority
+        };
+        self.not_done += 1;
+        self.fault_stats.tasks_requeued += 1;
+        let attempt = self.tasks[tid as usize].retries;
+        self.audit.push(
+            now,
+            AuditEvent::TaskRequeued { task: tid, attempt },
+            FaultReason::Cascade,
+        );
+        if let Some(sid) = self.route_to_pool(tid) {
+            let p = self.pool.as_mut().expect("routing implies a pool");
+            p.fleet.shards[sid].pending.push_back(tid);
+            p.mark(sid);
+        } else {
+            self.pending.push(tid, prio, now);
+            self.backfill_dirty = true;
+        }
     }
 }

@@ -25,6 +25,7 @@
 //! [`crate::scheduler::lifecycle`].
 
 use crate::cluster::NodeState;
+use crate::fault::audit::FaultReason;
 use crate::pool::Resize;
 use crate::scheduler::accounting::TaskRecord;
 use crate::scheduler::core::{HotPath, JobMeta, Op, SchedEvent, SchedulerSim, TaskSlot};
@@ -49,6 +50,12 @@ impl SchedulerSim {
     /// interleave) → dispatches (cycle-batched) → backfill.
     pub(crate) fn pick_next(&mut self, now: Time) -> Option<(Op, Time)> {
         let s = self.op_scale;
+        // Fault events outrank everything: a dead node must stop taking
+        // work before any dispatch decision looks at it. The queue is
+        // empty in every fault-off run, so this adds nothing there.
+        if let Some(op) = self.fault_q.pop_front() {
+            return Some((op, self.cost.fault_handle * s));
+        }
         if let Some(demand) = self.noise_q.pop_front() {
             return Some((Op::Noise(demand), demand * s));
         }
@@ -304,7 +311,7 @@ impl SchedulerSim {
             Op::Cleanup(tid) => {
                 let array = self.jobs[self.tasks[tid as usize].record.job as usize].array_size;
                 self.busy.cleanup += self.cost.cleanup(array) * self.op_scale;
-                self.finish_cleanup(now, tid);
+                self.finish_cleanup(now, tid, q);
             }
             Op::Noise(d) => {
                 self.busy.noise += d * self.op_scale;
@@ -324,6 +331,22 @@ impl SchedulerSim {
             Op::PoolResize(sid) => {
                 self.busy.pool += self.cost.pool_resize * self.op_scale;
                 self.apply_pool_resize(now, sid, q);
+            }
+            Op::NodeFail(node) => {
+                self.busy.fault += self.cost.fault_handle * self.op_scale;
+                self.apply_node_fail(now, node, FaultReason::Mtbf, q);
+            }
+            Op::NodeRecover(node) => {
+                self.busy.fault += self.cost.fault_handle * self.op_scale;
+                self.apply_node_recover(now, node);
+            }
+            Op::ReclaimWave(w) => {
+                self.busy.fault += self.cost.fault_handle * self.op_scale;
+                self.apply_reclaim_wave(now, w, q);
+            }
+            Op::DrainNode(node) => {
+                self.busy.fault += self.cost.fault_handle * self.op_scale;
+                self.apply_drain_node(now, node, q);
             }
         }
     }
@@ -383,13 +406,30 @@ impl sim::Actor for SchedulerSim {
                 for t in &spec.tasks {
                     let tid = self.tasks.len() as TaskId;
                     let est_duration = t.duration * self.walltime.factor(&mut self.walltime_rng);
+                    // Straggler stretch (fault layer): the *actual*
+                    // occupancy runs longer, while the declared walltime
+                    // — and hence `est_duration` above — keeps the
+                    // submitted value. The factor is a pure hash of
+                    // (fault seed, task id): no stream draws, so
+                    // straggler-off runs are bit-for-bit unchanged.
+                    let mut spec_t = t.clone();
+                    if let Some(plan) = self.fault_plan.as_ref() {
+                        let f = plan.straggler_factor(tid);
+                        if f > 1.0 {
+                            spec_t.duration *= f;
+                            spec_t.batch.each *= f;
+                        }
+                    }
                     self.tasks.push(TaskSlot {
-                        spec: t.clone(),
+                        spec: spec_t,
                         est_duration,
                         enqueued_at: now,
                         pool_node: None,
                         backfilled: false,
                         kill_signalled: false,
+                        retries: 0,
+                        fault_node: None,
+                        killed_at: f64::NAN,
                         record: TaskRecord {
                             task: tid,
                             job: id,
@@ -479,6 +519,14 @@ impl sim::Actor for SchedulerSim {
                     }
                     p.mark(sid as usize);
                 }
+            }
+            SchedEvent::Fault(op) => {
+                self.fault_q.push_back(op);
+                self.kick(now, q);
+            }
+            SchedEvent::Requeue(tid) => {
+                self.requeue_task(now, tid);
+                self.kick(now, q);
             }
         }
     }

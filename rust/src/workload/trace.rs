@@ -1,29 +1,65 @@
 //! Trace record / replay.
 //!
-//! A trace is the per-task `(task_id, duration)` list of a workload plus
-//! the measured `(start, end)` once run. Traces serialize to CSV so runs
-//! can be archived in `results/` and replayed as Explicit workloads —
-//! the substitution for the paper's production scheduler logs.
+//! A trace is the per-task list of a workload plus the measured
+//! schedule once run. Traces serialize to CSV so runs can be archived
+//! in `results/` and replayed as Explicit workloads — the substitution
+//! for the paper's production scheduler logs.
+//!
+//! The format is versioned by header:
+//!
+//! * **v1** — `task_id,duration`: the original shape. Parsed forever;
+//!   arrival defaults to `0.0` and class to `batch`.
+//! * **v2** — `task_id,duration,arrival_s,class`: adds the submit time
+//!   and job class ([`JobClass`]), which churn replays need — a killed
+//!   task's retry schedule only makes sense relative to when it
+//!   arrived, and per-class latency splits need the class to survive
+//!   the round trip.
+//!
+//! [`Trace::to_csv`] emits v1 when every row is at the v2 defaults
+//! (so archived v1 traces round-trip byte-for-byte) and v2 otherwise.
+//! Parsing is strict in both versions: unknown headers, out-of-order
+//! ids, non-positive durations, negative arrivals, unknown classes,
+//! and rows with missing *or extra* fields are all hard errors — a
+//! malformed archive must fail loudly, not replay a different workload.
 
 use crate::aggregation::plan::Workload;
 use crate::error::{Error, Result};
+use crate::workload::contention::JobClass;
 use std::path::Path;
 
-/// A recorded workload trace.
+const HEADER_V1: &str = "task_id,duration";
+const HEADER_V2: &str = "task_id,duration,arrival_s,class";
+
+/// A recorded workload trace. The three vectors are parallel, one
+/// entry per task.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Trace {
     /// Per-task durations (seconds).
     pub durations: Vec<f64>,
+    /// Per-task submit times (seconds; all `0.0` for v1 traces).
+    pub arrivals: Vec<f64>,
+    /// Per-task job class (all [`JobClass::Batch`] for v1 traces).
+    pub classes: Vec<JobClass>,
 }
 
 impl Trace {
+    /// A v1-shaped trace: durations only, arrivals zero, class batch.
+    pub fn new(durations: Vec<f64>) -> Trace {
+        let n = durations.len();
+        Trace {
+            durations,
+            arrivals: vec![0.0; n],
+            classes: vec![JobClass::Batch; n],
+        }
+    }
+
     /// Capture a (materialized) workload as a trace.
     pub fn from_workload(w: &Workload) -> Trace {
         let durations = match w {
             Workload::Uniform { count, duration } => vec![*duration; *count as usize],
             Workload::Explicit(v) => v.clone(),
         };
-        Trace { durations }
+        Trace::new(durations)
     }
 
     /// Replay as a workload.
@@ -31,53 +67,103 @@ impl Trace {
         Workload::Explicit(self.durations.clone())
     }
 
-    /// Serialize as CSV (`task_id,duration`).
-    pub fn to_csv(&self) -> String {
-        let mut s = String::from("task_id,duration\n");
-        for (i, d) in self.durations.iter().enumerate() {
-            s.push_str(&format!("{i},{d}\n"));
-        }
-        s
+    /// Whether any row carries v2-only data (a non-zero arrival or a
+    /// non-batch class) — the serialization version switch.
+    pub fn needs_v2(&self) -> bool {
+        self.arrivals.iter().any(|&a| a != 0.0)
+            || self.classes.iter().any(|&c| c != JobClass::Batch)
     }
 
-    /// Parse from CSV produced by [`Self::to_csv`].
-    pub fn from_csv(text: &str) -> Result<Trace> {
-        let mut durations = Vec::new();
-        for (i, line) in text.lines().enumerate() {
-            if i == 0 {
-                if line.trim() != "task_id,duration" {
-                    return Err(Error::Config(format!("bad trace header {line:?}")));
-                }
-                continue;
+    /// Serialize as CSV: v1 (`task_id,duration`) when every row is at
+    /// the v2 defaults, else v2 (`task_id,duration,arrival_s,class`).
+    pub fn to_csv(&self) -> String {
+        if self.needs_v2() {
+            let mut s = String::from(HEADER_V2);
+            s.push('\n');
+            for (i, d) in self.durations.iter().enumerate() {
+                s.push_str(&format!(
+                    "{i},{d},{},{}\n",
+                    self.arrivals[i],
+                    class_label(self.classes[i])
+                ));
             }
+            s
+        } else {
+            let mut s = String::from(HEADER_V1);
+            s.push('\n');
+            for (i, d) in self.durations.iter().enumerate() {
+                s.push_str(&format!("{i},{d}\n"));
+            }
+            s
+        }
+    }
+
+    /// Parse from CSV produced by [`Self::to_csv`], either version.
+    pub fn from_csv(text: &str) -> Result<Trace> {
+        let mut lines = text.lines().enumerate();
+        let v2 = match lines.next() {
+            Some((_, h)) if h.trim() == HEADER_V1 => false,
+            Some((_, h)) if h.trim() == HEADER_V2 => true,
+            Some((_, h)) => {
+                return Err(Error::Config(format!("bad trace header {h:?}")))
+            }
+            None => return Err(Error::Config("empty trace".into())),
+        };
+        let want = if v2 { 4 } else { 2 };
+        let mut t = Trace::new(Vec::new());
+        for (i, line) in lines {
             if line.trim().is_empty() {
                 continue;
             }
-            let mut parts = line.split(',');
-            let id: usize = parts
-                .next()
-                .and_then(|p| p.trim().parse().ok())
-                .ok_or_else(|| Error::Config(format!("trace line {}: bad id", i + 1)))?;
-            let d: f64 = parts
-                .next()
-                .and_then(|p| p.trim().parse().ok())
-                .ok_or_else(|| Error::Config(format!("trace line {}: bad duration", i + 1)))?;
-            if id != durations.len() {
+            let parts: Vec<&str> = line.split(',').collect();
+            if parts.len() != want {
+                return Err(Error::Config(format!(
+                    "trace line {}: expected {} fields, got {}",
+                    i + 1,
+                    want,
+                    parts.len()
+                )));
+            }
+            let id: usize = parts[0]
+                .trim()
+                .parse()
+                .map_err(|_| Error::Config(format!("trace line {}: bad id", i + 1)))?;
+            let d: f64 = parts[1]
+                .trim()
+                .parse()
+                .map_err(|_| Error::Config(format!("trace line {}: bad duration", i + 1)))?;
+            if id != t.durations.len() {
                 return Err(Error::Config(format!(
                     "trace line {}: id {} out of order",
                     i + 1,
                     id
                 )));
             }
-            if d <= 0.0 {
+            if !(d > 0.0) || !d.is_finite() {
                 return Err(Error::Config(format!(
                     "trace line {}: non-positive duration",
                     i + 1
                 )));
             }
-            durations.push(d);
+            let (arrival, class) = if v2 {
+                let a: f64 = parts[2].trim().parse().map_err(|_| {
+                    Error::Config(format!("trace line {}: bad arrival", i + 1))
+                })?;
+                if !(a >= 0.0) || !a.is_finite() {
+                    return Err(Error::Config(format!(
+                        "trace line {}: negative arrival",
+                        i + 1
+                    )));
+                }
+                (a, parse_class(parts[2 + 1].trim(), i + 1)?)
+            } else {
+                (0.0, JobClass::Batch)
+            };
+            t.durations.push(d);
+            t.arrivals.push(arrival);
+            t.classes.push(class);
         }
-        Ok(Trace { durations })
+        Ok(t)
     }
 
     /// Save to a file.
@@ -96,15 +182,60 @@ impl Trace {
     }
 }
 
+fn class_label(c: JobClass) -> &'static str {
+    match c {
+        JobClass::Interactive => "interactive",
+        JobClass::Batch => "batch",
+    }
+}
+
+fn parse_class(s: &str, line: usize) -> Result<JobClass> {
+    match s {
+        "interactive" => Ok(JobClass::Interactive),
+        "batch" => Ok(JobClass::Batch),
+        other => Err(Error::Config(format!(
+            "trace line {line}: unknown class {other:?} (known: interactive, batch)"
+        ))),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
-    fn roundtrip_csv() {
-        let t = Trace { durations: vec![1.0, 2.5, 3.0] };
-        let parsed = Trace::from_csv(&t.to_csv()).unwrap();
+    fn roundtrip_csv_v1() {
+        let t = Trace::new(vec![1.0, 2.5, 3.0]);
+        let csv = t.to_csv();
+        assert!(csv.starts_with("task_id,duration\n"), "defaults stay v1: {csv}");
+        let parsed = Trace::from_csv(&csv).unwrap();
         assert_eq!(parsed, t);
+    }
+
+    #[test]
+    fn roundtrip_csv_v2() {
+        let t = Trace {
+            durations: vec![1.0, 2.5],
+            arrivals: vec![0.0, 10.5],
+            classes: vec![JobClass::Interactive, JobClass::Batch],
+        };
+        let csv = t.to_csv();
+        assert!(
+            csv.starts_with("task_id,duration,arrival_s,class\n"),
+            "non-default rows switch to v2: {csv}"
+        );
+        assert!(csv.contains("0,1,0,interactive\n"), "{csv}");
+        assert!(csv.contains("1,2.5,10.5,batch\n"), "{csv}");
+        let parsed = Trace::from_csv(&csv).unwrap();
+        assert_eq!(parsed, t);
+    }
+
+    #[test]
+    fn v1_parses_with_v2_defaults() {
+        let t = Trace::from_csv("task_id,duration\n0,4.0\n1,2.0\n").unwrap();
+        assert_eq!(t.durations, vec![4.0, 2.0]);
+        assert_eq!(t.arrivals, vec![0.0, 0.0]);
+        assert_eq!(t.classes, vec![JobClass::Batch, JobClass::Batch]);
     }
 
     #[test]
@@ -118,14 +249,41 @@ mod tests {
     #[test]
     fn bad_csv_rejected() {
         assert!(Trace::from_csv("nope\n").is_err());
+        assert!(Trace::from_csv("").is_err(), "empty input rejected");
         assert!(Trace::from_csv("task_id,duration\n0,abc\n").is_err());
         assert!(Trace::from_csv("task_id,duration\n5,1.0\n").is_err(), "out of order");
         assert!(Trace::from_csv("task_id,duration\n0,-1.0\n").is_err());
+        assert!(Trace::from_csv("task_id,duration\n0,NaN\n").is_err(), "NaN rejected");
+    }
+
+    #[test]
+    fn malformed_rows_rejected_not_truncated() {
+        // The v1 parser used to silently ignore extra fields; both
+        // versions now pin the exact field count.
+        let extra = "task_id,duration\n0,1.0,99.0\n";
+        let err = Trace::from_csv(extra).unwrap_err().to_string();
+        assert!(err.contains("expected 2 fields"), "got: {err}");
+        let missing = "task_id,duration,arrival_s,class\n0,1.0,5.0\n";
+        let err = Trace::from_csv(missing).unwrap_err().to_string();
+        assert!(err.contains("expected 4 fields"), "got: {err}");
+        // v2 field-level errors.
+        assert!(
+            Trace::from_csv("task_id,duration,arrival_s,class\n0,1.0,x,batch\n").is_err(),
+            "bad arrival"
+        );
+        assert!(
+            Trace::from_csv("task_id,duration,arrival_s,class\n0,1.0,-2.0,batch\n").is_err(),
+            "negative arrival"
+        );
+        let err = Trace::from_csv("task_id,duration,arrival_s,class\n0,1.0,2.0,urgent\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown class"), "got: {err}");
     }
 
     #[test]
     fn file_roundtrip() {
-        let t = Trace { durations: vec![0.5, 1.5] };
+        let t = Trace::new(vec![0.5, 1.5]);
         let p = std::env::temp_dir().join("llsched_trace_test/t.csv");
         t.save(&p).unwrap();
         assert_eq!(Trace::load(&p).unwrap(), t);
