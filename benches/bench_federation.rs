@@ -1,0 +1,124 @@
+//! Bench: federated-gateway saturation vs a single scheduler.
+//!
+//! The acceptance bar for the federation subsystem: a fleet of 4
+//! independent schedulers (32 nodes each) behind the submission gateway
+//! must sustain **≥ 3×** the submission rate of one scheduler of the
+//! same per-partition size before its p95 launch latency crosses the
+//! knee. "Sustain" and "knee" are exactly the `federate --compare`
+//! definitions — this bench runs the same
+//! [`run_federation`](llsched::coordinator::experiment::run_federation)
+//! sweep and pins its `rate_gain` as the acceptance number.
+//!
+//! ```bash
+//! cargo bench --bench bench_federation                  # full sweep
+//! cargo bench --bench bench_federation -- --max-rate 16 --jobs 200 --require 0
+//! ```
+//!
+//! `--max-rate R` / `--jobs J` truncate the sweep (CI smoke); `--require X`
+//! overrides the ≥3× floor (0 disables it — the truncated grid cannot
+//! resolve the knee). Results land in `BENCH_federation.json` at the
+//! crate root.
+
+use llsched::bench::section;
+use llsched::coordinator::experiment::{run_federation, FederationSweepOpts};
+use llsched::util::json::Json;
+
+/// Parse `--flag value` from argv (panics on malformed input: a bench
+/// invocation error should fail loudly, not silently run the default).
+fn arg_value(args: &[String], flag: &str) -> Option<f64> {
+    args.iter().position(|a| a == flag).map(|i| {
+        args.get(i + 1)
+            .unwrap_or_else(|| panic!("{flag} needs a value"))
+            .parse::<f64>()
+            .unwrap_or_else(|_| panic!("{flag} needs a number"))
+    })
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let max_rate = arg_value(&args, "--max-rate");
+    let jobs = arg_value(&args, "--jobs").map(|v| v as usize);
+    let require = arg_value(&args, "--require").unwrap_or(3.0);
+
+    let mut opts = FederationSweepOpts::default();
+    if let Some(m) = max_rate {
+        opts.rates.retain(|&r| r <= m);
+        assert!(!opts.rates.is_empty(), "--max-rate below the smallest rate");
+    }
+    if let Some(j) = jobs {
+        opts.jobs = j;
+    }
+    let (instances, nodes) = (opts.instances, opts.nodes);
+
+    section(&format!(
+        "federation saturation sweep: 1 x {nodes} nodes vs {instances} x {nodes} nodes, \
+         {} jobs/point, task {}s, knee {}s",
+        opts.jobs, opts.task_s, opts.knee_s
+    ));
+    let t0 = std::time::Instant::now();
+    let sweep = run_federation(opts).expect("sweep runs");
+    let wall = t0.elapsed().as_secs_f64();
+    for pt in &sweep.points {
+        println!(
+            "rate {:>5.1} jobs/s: single p95 {:>8.2}s   federated p95 {:>8.2}s",
+            pt.rate, pt.single_p95, pt.federated_p95
+        );
+    }
+    println!(
+        "  → single saturates at {} jobs/s, federated at {} jobs/s \
+         (gain {:.1}x; sweep wall time {wall:.1}s)",
+        sweep.single_saturation, sweep.federated_saturation, sweep.rate_gain
+    );
+
+    section("acceptance");
+    let mut failed = false;
+    let verdict = if require <= 0.0 {
+        "info (no floor)".to_string()
+    } else if sweep.rate_gain.is_finite() && sweep.rate_gain >= require {
+        format!("PASS (≥{require:.0}x required)")
+    } else {
+        failed = true;
+        format!("FAIL (≥{require:.0}x required)")
+    };
+    println!(
+        "federated sustained-rate gain at {instances} x {nodes} nodes: {:.1}x  [{verdict}]",
+        sweep.rate_gain
+    );
+
+    let report = Json::obj()
+        .set("bench", "bench_federation")
+        .set("command", std::env::args().collect::<Vec<_>>().join(" "))
+        .set("instances", sweep.opts.instances)
+        .set("nodes_per_instance", sweep.opts.nodes)
+        .set("jobs_per_point", sweep.opts.jobs)
+        .set("task_s", sweep.opts.task_s)
+        .set("knee_s", sweep.opts.knee_s)
+        .set(
+            "points",
+            Json::Arr(
+                sweep
+                    .points
+                    .iter()
+                    .map(|pt| {
+                        Json::obj()
+                            .set("rate_jobs_per_s", pt.rate)
+                            .set("single_p95_s", pt.single_p95)
+                            .set("federated_p95_s", pt.federated_p95)
+                    })
+                    .collect(),
+            ),
+        )
+        .set("single_saturation_jobs_per_s", sweep.single_saturation)
+        .set("federated_saturation_jobs_per_s", sweep.federated_saturation)
+        .set("rate_gain", sweep.rate_gain)
+        .set("sweep_wall_s", wall)
+        .set("passed", !failed);
+    if let Err(e) = std::fs::write("BENCH_federation.json", report.to_pretty()) {
+        eprintln!("warning: could not write BENCH_federation.json: {e}");
+    } else {
+        println!("\nwrote BENCH_federation.json");
+    }
+    if failed {
+        std::process::exit(1);
+    }
+}

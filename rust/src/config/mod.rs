@@ -129,6 +129,12 @@ pub struct RunConfig {
     /// Actual-runtime multiplier on stragglers
     /// (`fault_straggler_factor = 4.0`).
     pub fault_straggler_factor: f64,
+    /// Scheduler federation
+    /// (`federation = {instances = 4, batch = 8, steal_threshold = 64}`):
+    /// run the workload through a gateway over N independent scheduler
+    /// instances, each owning a disjoint cluster partition
+    /// ([`crate::federation`]). `None` = the classic single scheduler.
+    pub federation: Option<crate::federation::FederationConfig>,
 }
 
 impl Default for RunConfig {
@@ -158,6 +164,7 @@ impl Default for RunConfig {
             fault_mttr: 30.0,
             fault_straggler_prob: 0.0,
             fault_straggler_factor: 1.0,
+            federation: None,
         }
     }
 }
@@ -212,6 +219,15 @@ impl RunConfig {
         self.pool_config().validate().map_err(Error::Config)?;
         self.fleet_config().validate().map_err(Error::Config)?;
         self.fault_config().validate().map_err(Error::Config)?;
+        if let Some(fed) = &self.federation {
+            fed.validate().map_err(Error::Config)?;
+            if self.nodes as usize % fed.instances != 0 {
+                return Err(Error::Config(format!(
+                    "federation.instances ({}) must divide nodes ({}) into equal partitions",
+                    fed.instances, self.nodes
+                )));
+            }
+        }
         Ok(())
     }
 
@@ -308,6 +324,9 @@ impl RunConfig {
         }
         if let Some(v) = run.get("fault_straggler_factor") {
             c.fault_straggler_factor = v.as_float()?;
+        }
+        if let Some(v) = run.get("federation") {
+            c.federation = Some(federation_from_value(v)?);
         }
         if let Some(v) = run.get("pools") {
             // Key *presence* is what conflicts — an explicitly written
@@ -457,6 +476,39 @@ fn shard_from_value(item: &Value, idx: usize) -> Result<ShardConfig> {
         short_threshold: shape.max_walltime,
     };
     Ok(ShardConfig { name, shape, pool })
+}
+
+/// The `federation = {instances = 4, batch = 8, steal_threshold = 64}`
+/// inline table: all keys optional, defaults from
+/// [`crate::federation::FederationConfig`]. `flush` (seconds) tunes the
+/// gateway's flush/steal cadence.
+fn federation_from_value(v: &Value) -> Result<crate::federation::FederationConfig> {
+    if !matches!(v, Value::Table(_)) {
+        return Err(Error::Config(
+            "federation must be an inline table like \
+             federation = {instances = 4, batch = 8, steal_threshold = 64}"
+                .into(),
+        ));
+    }
+    let mut fed = crate::federation::FederationConfig::default();
+    for (key, field) in [
+        ("instances", &mut fed.instances as &mut usize),
+        ("batch", &mut fed.batch),
+        ("steal_threshold", &mut fed.steal_threshold),
+    ] {
+        if let Some(x) = v.get(key) {
+            let x = x.as_int()?;
+            *field = usize::try_from(x).map_err(|_| {
+                Error::Config(format!(
+                    "federation.{key} must be a non-negative integer, got {x}"
+                ))
+            })?;
+        }
+    }
+    if let Some(x) = v.get("flush") {
+        fed.flush_interval = x.as_float()?;
+    }
+    Ok(fed)
 }
 
 /// A non-negative integer that fits the target width — negative config
@@ -720,6 +772,41 @@ mod tests {
         assert_eq!(fleet.shards.len(), 1);
         assert_eq!(fleet.shards[0].pool.size, 4);
         assert_eq!(fleet.total_size(), 4);
+    }
+
+    #[test]
+    fn federation_table_parses_and_validates() {
+        let c = RunConfig::from_value(&parser::parse("[run]\n").unwrap()).unwrap();
+        assert!(c.federation.is_none(), "federation off by default");
+        let v = parser::parse(
+            "[run]\nnodes = 128\n\
+             federation = {instances = 4, batch = 16, steal_threshold = 32}\n",
+        )
+        .unwrap();
+        let c = RunConfig::from_value(&v).unwrap();
+        let fed = c.federation.expect("federation table parsed");
+        assert_eq!(fed.instances, 4);
+        assert_eq!(fed.batch, 16);
+        assert_eq!(fed.steal_threshold, 32);
+        assert_eq!(fed.flush_interval, 1.0, "default cadence");
+        // Partial tables keep the remaining defaults.
+        let v = parser::parse("[run]\nnodes = 64\nfederation = {instances = 2}\n").unwrap();
+        let fed = RunConfig::from_value(&v).unwrap().federation.unwrap();
+        assert_eq!(fed.instances, 2);
+        assert_eq!(fed.batch, crate::federation::FederationConfig::default().batch);
+        // Bad values are config errors, not wraps or panics.
+        let bad = parser::parse("[run]\nfederation = {instances = 0}\n").unwrap();
+        assert!(RunConfig::from_value(&bad).is_err(), "zero instances rejected");
+        let bad = parser::parse("[run]\nfederation = {instances = -2}\n").unwrap();
+        assert!(RunConfig::from_value(&bad).is_err(), "negative rejected");
+        let bad = parser::parse("[run]\nfederation = 4\n").unwrap();
+        assert!(RunConfig::from_value(&bad).is_err(), "non-table rejected");
+        let bad =
+            parser::parse("[run]\nnodes = 30\nfederation = {instances = 4}\n").unwrap();
+        assert!(
+            RunConfig::from_value(&bad).is_err(),
+            "instances must divide nodes into equal partitions"
+        );
     }
 
     #[test]

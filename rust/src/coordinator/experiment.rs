@@ -8,19 +8,22 @@ use crate::config::Mode;
 use crate::error::{Error, Result};
 use crate::fault::metrics::FaultOutcome;
 use crate::fault::FaultConfig;
+use crate::federation::{FederationConfig, FederationOutcome, Gateway};
 use crate::metrics::contention::{per_class, pool_report, ClassReport, PoolReport};
 use crate::metrics::overhead::OverheadPoint;
 use crate::metrics::timeline::UtilizationSeries;
 use crate::placement::Strategy;
 use crate::pool::{FleetConfig, PoolConfig, ShardConfig};
-use crate::scheduler::core::{HotPath, SchedulerSim, SimOutcome};
+use crate::scheduler::core::{HotPath, SchedulerSim, SimOutcome, TaskModel};
 use crate::scheduler::costmodel::CostModel;
 use crate::scheduler::noise::NoiseModel;
 use crate::scheduler::queue::AgingPolicy;
+use crate::scheduler::{ComputeBatch, JobSpec, ResourceRequest, SchedTaskSpec};
 use crate::sim::EventQueue;
 use crate::util::csv::Csv;
 use crate::util::json::Json;
-use crate::workload::contention::{ContentionMix, JobClass, WalltimeError};
+use crate::util::stats;
+use crate::workload::contention::{ContentionMix, JobClass, Submission, WalltimeError, JOB_CLASSES};
 use crate::workload::paper::PaperCell;
 
 /// Result of one benchmark run (one cell, one repetition).
@@ -259,6 +262,23 @@ pub struct ContentionResult {
     /// though a churn run that permanently loses capacity may strand
     /// tail tasks).
     pub unfinished: usize,
+    /// Federation rollup (`None` for classic single-scheduler runs —
+    /// the v5 export switch).
+    pub federation: Option<FederationRunSummary>,
+}
+
+/// The federated slice of one contention run: the gateway knobs plus
+/// the fleet-level counters the v5 export columns carry. The full
+/// per-instance detail lives in [`crate::federation::FederationOutcome`].
+#[derive(Debug, Clone)]
+pub struct FederationRunSummary {
+    pub config: FederationConfig,
+    /// Jobs migrated between instances by the steal pass.
+    pub steals: u64,
+    /// Batch flushes across all instances.
+    pub batches: u64,
+    /// Aggregate p95 launch latency over all gateway jobs, seconds.
+    pub p95_latency: f64,
 }
 
 /// Run one contention mix with the classic single-hold options — the
@@ -365,6 +385,331 @@ pub fn run_contention_with(
         overdue_preemptions: outcome.overdue_preemptions,
         fault: outcome.fault,
         unfinished,
+        federation: None,
+    })
+}
+
+/// Run one contention mix through a federated fleet: `fed.instances`
+/// independent schedulers, each owning `mix.nodes / instances` of the
+/// machine, behind the submission gateway ([`crate::federation`]). The
+/// per-class reports are computed from the *gateway's* job table —
+/// launch latency is gateway submit → first task start on the final
+/// owner, so batching delay and steal hops are charged to the fleet,
+/// exactly what a client observes. With `instances = 1` and `batch = 1`
+/// the result matches [`run_contention_with`] bit-for-bit (pinned by
+/// `rust/tests/federation_properties.rs`).
+pub fn run_contention_federated(
+    mix: &ContentionMix,
+    opts: ContentionOpts,
+    fed: FederationConfig,
+) -> Result<ContentionResult> {
+    fed.validate().map_err(Error::Config)?;
+    if mix.nodes as usize % fed.instances != 0 {
+        return Err(Error::Config(format!(
+            "federation.instances ({}) must divide the mix's nodes ({})",
+            fed.instances, mix.nodes
+        )));
+    }
+    let per_nodes = mix.nodes / fed.instances as u32;
+    let fleet = opts.fleet_config();
+    fleet.validate().map_err(Error::Config)?;
+    let total_cores = Cluster::tx_green(mix.nodes).total_cores();
+    let sims: Vec<SchedulerSim> = (0..fed.instances)
+        .map(|i| {
+            SchedulerSim::new(
+                Cluster::tx_green(per_nodes),
+                CostModel::slurm_like_tx_green(),
+                NoiseModel::dedicated(),
+                opts.seed.wrapping_add(i as u64),
+            )
+            .with_placement(Strategy::NodeBased)
+            .with_backfill(opts.backfill)
+            .with_holds(opts.holds)
+            .with_aging(opts.aging)
+            .with_walltime_error(opts.walltime_error)
+            .with_fleet(opts.fleet_config())
+            .with_preempt_overdue(opts.preempt_overdue)
+            .with_hot_path(opts.hot_path)
+            .with_faults(opts.fault.clone())
+        })
+        .collect();
+    let subs = mix.generate(opts.seed);
+    if subs.is_empty() {
+        return Err(Error::Infeasible(format!(
+            "contention mix {:?} generated no submissions",
+            mix.name
+        )));
+    }
+    let out = Gateway::new(fed, sims).run(subs);
+    let reports = federation_class_reports(&out, total_cores);
+    let utilization: f64 = reports.iter().map(|r| r.utilization).sum();
+    Ok(ContentionResult {
+        mix_name: mix.name.clone(),
+        nodes: mix.nodes,
+        backfill: opts.backfill,
+        span: out.span,
+        utilization,
+        backfills: out.outcomes.iter().map(|o| o.backfills.len()).sum(),
+        max_active_holds: out
+            .outcomes
+            .iter()
+            .map(|o| o.max_active_holds)
+            .max()
+            .unwrap_or(0),
+        // The no-delay invariant is a per-instance property pinned by
+        // the backfill suites; the fleet rollup does not re-derive it.
+        holds_respected: true,
+        // Per-instance pool detail lives in the raw outcomes; the fleet
+        // rollup does not merge pool reports across partitions.
+        pool: None,
+        overdue_preemptions: out.outcomes.iter().map(|o| o.overdue_preemptions).sum(),
+        fault: None,
+        unfinished: out.unfinished,
+        federation: Some(FederationRunSummary {
+            config: out.config,
+            steals: out.steals,
+            batches: out.batches,
+            p95_latency: out.latency.p95,
+        }),
+        opts,
+    })
+}
+
+/// Per-class reports from the gateway's job table (class latency is the
+/// end-to-end gateway latency, not any single instance's view).
+fn federation_class_reports(out: &FederationOutcome, total_cores: u64) -> Vec<ClassReport> {
+    let capacity = total_cores as f64 * out.span;
+    JOB_CLASSES
+        .iter()
+        .map(|&class| {
+            let mut latencies = Vec::new();
+            let mut jobs = 0usize;
+            let mut tasks = 0usize;
+            let mut completed = 0usize;
+            let mut core_seconds = 0.0;
+            let mut starvation_age: f64 = 0.0;
+            for j in out.jobs.iter().filter(|j| j.class == class) {
+                jobs += 1;
+                tasks += j.tasks;
+                completed += j.completed;
+                core_seconds += j.core_seconds;
+                if j.latency.is_finite() {
+                    latencies.push(j.latency);
+                } else {
+                    starvation_age = starvation_age.max((out.final_time - j.submit_t).max(0.0));
+                }
+            }
+            let max_launch_latency = if latencies.is_empty() {
+                f64::NAN
+            } else {
+                latencies.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+            };
+            ClassReport {
+                class,
+                jobs,
+                tasks,
+                completed,
+                median_launch_latency: stats::median(&latencies),
+                p95_launch_latency: stats::percentile(&latencies, 95.0),
+                max_launch_latency,
+                starvation_age,
+                core_seconds,
+                utilization: if capacity > 0.0 {
+                    core_seconds / capacity
+                } else {
+                    0.0
+                },
+            }
+        })
+        .collect()
+}
+
+/// Options for the federation rate sweep ([`run_federation`]).
+#[derive(Debug, Clone)]
+pub struct FederationSweepOpts {
+    /// Partitions in the federated fleet.
+    pub instances: usize,
+    /// Nodes *per partition*; the single-scheduler baseline is one
+    /// instance of exactly this size, so the sweep isolates what the
+    /// gateway + extra partitions buy over one scheduler of the same
+    /// per-partition scale.
+    pub nodes: u32,
+    /// Submission rates to sweep, jobs/second, ascending.
+    pub rates: Vec<f64>,
+    /// Jobs injected per swept point.
+    pub jobs: usize,
+    /// Duration of each (single, whole-node) task, seconds.
+    pub task_s: f64,
+    /// The saturation knee: a configuration "sustains" a rate while its
+    /// p95 launch latency stays at or below this, seconds.
+    pub knee_s: f64,
+    pub batch: usize,
+    pub steal_threshold: usize,
+    pub seed: u64,
+}
+
+impl Default for FederationSweepOpts {
+    /// The default grid brackets both knees: one 32-node scheduler of
+    /// 2 s whole-node jobs caps out at 16 jobs/s (node-bound), the
+    /// 4-partition fleet at 64 jobs/s — so the sweep resolves a 4×
+    /// sustained-rate gain with overloaded points on both sides.
+    fn default() -> Self {
+        FederationSweepOpts {
+            instances: 4,
+            nodes: 32,
+            rates: vec![2.0, 4.0, 8.0, 12.0, 16.0, 24.0, 32.0, 48.0, 64.0],
+            jobs: 2000,
+            task_s: 2.0,
+            knee_s: 15.0,
+            batch: 8,
+            steal_threshold: 64,
+            seed: 42,
+        }
+    }
+}
+
+/// One swept submission rate: p95 launch latency under a single
+/// scheduler vs the federated fleet.
+#[derive(Debug, Clone, Copy)]
+pub struct RatePoint {
+    pub rate: f64,
+    pub single_p95: f64,
+    pub federated_p95: f64,
+}
+
+/// Result of [`run_federation`]: the latency-vs-rate curves and the
+/// saturation points they imply.
+#[derive(Debug)]
+pub struct FederationSweep {
+    pub opts: FederationSweepOpts,
+    pub points: Vec<RatePoint>,
+    /// Highest swept rate the single scheduler sustains (p95 ≤ knee);
+    /// 0.0 if it never does.
+    pub single_saturation: f64,
+    /// Highest swept rate the federated fleet sustains.
+    pub federated_saturation: f64,
+    /// `federated_saturation / single_saturation` (NaN if the single
+    /// scheduler saturates before the first swept point).
+    pub rate_gain: f64,
+}
+
+/// A deterministic open-loop stream: `jobs` single-task whole-node
+/// interactive jobs at a fixed `rate` (job k arrives at `k / rate`).
+/// Whole-node tasks make capacity exact — one instance of N nodes runs
+/// at most N tasks at once — so the saturation knee is a property of
+/// scheduling, not of workload noise.
+fn uniform_stream(rate: f64, jobs: usize, task_s: f64) -> Vec<Submission> {
+    (0..jobs)
+        .map(|k| Submission {
+            at: k as f64 / rate,
+            class: JobClass::Interactive,
+            spec: JobSpec {
+                name: format!("rate-{k}"),
+                tasks: vec![SchedTaskSpec {
+                    request: ResourceRequest::WholeNode,
+                    duration: task_s,
+                    batch: ComputeBatch {
+                        count: 1,
+                        each: task_s,
+                    },
+                    lanes: 1,
+                }],
+                reservation: None,
+                priority: 10,
+                preemptable: false,
+            },
+        })
+        .collect()
+}
+
+/// Build one sweep participant: a fleet of `instances` schedulers of
+/// `nodes` each behind a gateway (pass `instances = 1` for the single-
+/// scheduler baseline — same measurement path, so the two curves are
+/// directly comparable). The node-noise knobs are zeroed so each
+/// partition's capacity is exactly `nodes / task_s` jobs per second and
+/// the knee measures scheduling, not startup jitter.
+fn sweep_fleet(opts: &FederationSweepOpts, instances: usize) -> (FederationConfig, Vec<SchedulerSim>) {
+    let fed = FederationConfig {
+        instances,
+        batch: opts.batch,
+        flush_interval: FederationConfig::default().flush_interval,
+        steal_threshold: opts.steal_threshold,
+    };
+    let sims = (0..instances)
+        .map(|i| {
+            SchedulerSim::new(
+                Cluster::tx_green(opts.nodes),
+                CostModel::slurm_like_tx_green(),
+                NoiseModel::dedicated(),
+                opts.seed.wrapping_add(i as u64),
+            )
+            .with_placement(Strategy::NodeBased)
+            .with_backfill(true)
+            .with_task_model(TaskModel {
+                startup: 0.0,
+                jitter_sigma: 0.0,
+                p_node_late: 0.0,
+                late_range: (0.0, 0.0),
+            })
+            .with_server_speed(1.0)
+        })
+        .collect();
+    (fed, sims)
+}
+
+/// The launch-latency-vs-submission-rate experiment behind
+/// `llsched federate --compare`: sweep an open-loop job stream over a
+/// single scheduler and over a federated fleet of `instances`
+/// partitions of the same per-partition size, record the p95 launch
+/// latency at each rate, and report where each configuration's knee
+/// sits. The acceptance claim of `benches/bench_federation.rs` — the
+/// fleet sustains ≥ 3× the single scheduler's rate — is this sweep's
+/// `rate_gain`.
+pub fn run_federation(opts: FederationSweepOpts) -> Result<FederationSweep> {
+    if opts.rates.is_empty() {
+        return Err(Error::Config("federation sweep needs at least one rate".into()));
+    }
+    if opts.jobs == 0 || opts.task_s <= 0.0 {
+        return Err(Error::Config(
+            "federation sweep needs jobs > 0 and task_s > 0".into(),
+        ));
+    }
+    let mut points = Vec::with_capacity(opts.rates.len());
+    for &rate in &opts.rates {
+        if !(rate > 0.0) {
+            return Err(Error::Config(format!("swept rate must be > 0, got {rate}")));
+        }
+        let subs = uniform_stream(rate, opts.jobs, opts.task_s);
+        let (fed1, sims1) = sweep_fleet(&opts, 1);
+        let single = Gateway::new(fed1, sims1).run(subs.clone());
+        let (fedn, simsn) = sweep_fleet(&opts, opts.instances);
+        let federated = Gateway::new(fedn, simsn).run(subs);
+        points.push(RatePoint {
+            rate,
+            single_p95: single.latency.p95,
+            federated_p95: federated.latency.p95,
+        });
+    }
+    let sustained = |p95: fn(&RatePoint) -> f64| -> f64 {
+        points
+            .iter()
+            .filter(|pt| p95(pt).is_finite() && p95(pt) <= opts.knee_s)
+            .map(|pt| pt.rate)
+            .fold(0.0, f64::max)
+    };
+    let single_saturation = sustained(|pt| pt.single_p95);
+    let federated_saturation = sustained(|pt| pt.federated_p95);
+    let rate_gain = if single_saturation > 0.0 {
+        federated_saturation / single_saturation
+    } else {
+        f64::NAN
+    };
+    Ok(FederationSweep {
+        opts,
+        points,
+        single_saturation,
+        federated_saturation,
+        rate_gain,
     })
 }
 
@@ -449,19 +794,34 @@ const CONTENTION_SCHEMA_V4_EXTRA: [&str; 8] = [
     "mean_recovery_s",
 ];
 
+/// The v5 column extension: scheduler federation. Emitted only when
+/// some result actually ran through the gateway; single-scheduler rows
+/// in a mixed v5 document zero-fill the counters and leave the latency
+/// empty (the NaN convention of [`f6`]).
+const CONTENTION_SCHEMA_V5_EXTRA: [&str; 6] = [
+    "fed_instances",
+    "fed_batch",
+    "fed_steal_threshold",
+    "fed_batches",
+    "fed_steals",
+    "fed_p95_latency_s",
+];
+
 /// Per-class contention series as CSV (one row per scenario × class),
 /// mirroring `fig1 --out`: the `contention --out DIR` data dump.
 /// Classic runs export the v1 schema exactly; any pool or preemptive-
 /// backfill use switches the whole document to v2 (v1 columns + the
 /// pool/preemption extension); any multi-shard fleet switches it to v3
 /// (v2 columns + the shard extension and per-shard rows); any fault-
-/// injected run switches it to v4 (+ the churn counter extension).
+/// injected run switches it to v4 (+ the churn counter extension); any
+/// federated run switches it to v5 (+ the gateway extension).
 pub fn contention_csv(results: &[ContentionResult]) -> Csv {
     let extended = results
         .iter()
         .any(|r| r.opts.fleet_enabled() || r.opts.preempt_overdue);
     let sharded = results.iter().any(|r| r.opts.fleet_sharded());
     let faulted = results.iter().any(|r| r.opts.fault_enabled());
+    let federated = results.iter().any(|r| r.federation.is_some());
     let mut header: Vec<&str> = CONTENTION_SCHEMA_V1.to_vec();
     if extended {
         header.extend(CONTENTION_SCHEMA_V2_EXTRA);
@@ -471,6 +831,9 @@ pub fn contention_csv(results: &[ContentionResult]) -> Csv {
     }
     if faulted {
         header.extend(CONTENTION_SCHEMA_V4_EXTRA);
+    }
+    if federated {
+        header.extend(CONTENTION_SCHEMA_V5_EXTRA);
     }
     let mut c = Csv::with_header(&header);
     for r in results {
@@ -534,6 +897,25 @@ pub fn contention_csv(results: &[ContentionResult]) -> Csv {
                 row.push(String::new());
             }
         };
+        // The v5 gateway extension: run-level knobs and counters,
+        // identical on every row of the scenario (zero-filled / empty
+        // on single-scheduler rows in a mixed document).
+        let fed_cols = |row: &mut Vec<String>| match &r.federation {
+            Some(fed) => {
+                row.push(fed.config.instances.to_string());
+                row.push(fed.config.batch.to_string());
+                row.push(fed.config.steal_threshold.to_string());
+                row.push(fed.batches.to_string());
+                row.push(fed.steals.to_string());
+                row.push(f6(fed.p95_latency));
+            }
+            None => {
+                for _ in 0..5 {
+                    row.push("0".into());
+                }
+                row.push(String::new());
+            }
+        };
         for rep in &r.reports {
             let mut row = prefix([
                 rep.class.to_string(),
@@ -568,6 +950,9 @@ pub fn contention_csv(results: &[ContentionResult]) -> Csv {
             }
             if faulted {
                 fault_cols(&mut row);
+            }
+            if federated {
+                fed_cols(&mut row);
             }
             c.row(&row);
         }
@@ -604,6 +989,9 @@ pub fn contention_csv(results: &[ContentionResult]) -> Csv {
                     shard_cols(&mut row, &sh.name);
                     if faulted {
                         fault_cols(&mut row);
+                    }
+                    if federated {
+                        fed_cols(&mut row);
                     }
                     c.row(&row);
                 }
@@ -697,6 +1085,17 @@ pub fn contention_json(results: &[ContentionResult]) -> Json {
                     .set("mean_recovery_s", f.stats.mean_recovery())
                     .set("audit_records", f.audit.len());
                 run = run.set("fault", fault);
+            }
+            if let Some(fed) = &r.federation {
+                let federation = Json::obj()
+                    .set("instances", fed.config.instances)
+                    .set("batch", fed.config.batch)
+                    .set("steal_threshold", fed.config.steal_threshold)
+                    .set("flush_interval_s", fed.config.flush_interval)
+                    .set("batches", fed.batches)
+                    .set("steals", fed.steals)
+                    .set("p95_latency_s", fed.p95_latency);
+                run = run.set("federation", federation);
             }
             run.set("classes", Json::Arr(classes))
         })
@@ -1198,6 +1597,151 @@ mod tests {
             "fault-free rows zero-fill the v4 extension: {}",
             lines[1]
         );
+    }
+
+    #[test]
+    fn federated_contention_runs_end_to_end() {
+        // Two partitions of 4 nodes behind the gateway over the tiny
+        // mix: every job drains on some instance and the per-class
+        // rollup balances, with the fleet summary attached.
+        let mix = ContentionMix::preset("tiny", 8).unwrap();
+        let fed = FederationConfig {
+            instances: 2,
+            batch: 4,
+            flush_interval: 1.0,
+            steal_threshold: 4,
+        };
+        let res = run_contention_federated(&mix, ContentionOpts::classic(true, 11), fed).unwrap();
+        assert_eq!(res.unfinished, 0, "federated tiny mix drains");
+        assert_eq!(res.reports.len(), 2);
+        let inter = &res.reports[0];
+        let batch = &res.reports[1];
+        assert_eq!(inter.class, JobClass::Interactive);
+        assert_eq!(batch.class, JobClass::Batch);
+        assert!(inter.tasks > 0 && batch.tasks > 0);
+        assert_eq!(inter.completed, inter.tasks);
+        assert_eq!(batch.completed, batch.tasks);
+        assert!(res.span > 0.0);
+        assert!(res.utilization > 0.0 && res.utilization <= 1.0);
+        let summary = res.federation.as_ref().expect("federation summary present");
+        assert_eq!(summary.config.instances, 2);
+        assert!(summary.batches >= 2, "both instances saw flushes");
+        assert!(summary.p95_latency.is_finite());
+        // The partition count must divide the machine.
+        let bad = run_contention_federated(
+            &mix,
+            ContentionOpts::classic(true, 11),
+            FederationConfig {
+                instances: 3,
+                ..FederationConfig::default()
+            },
+        );
+        assert!(bad.is_err(), "3 instances cannot split 8 nodes");
+    }
+
+    #[test]
+    fn federated_contention_exports_v5_schema() {
+        // A federated run flips the export to v5: the v1 columns
+        // verbatim, then the gateway extension. Two identical runs
+        // serialize byte-for-byte (the gateway is deterministic).
+        let mix = ContentionMix::preset("tiny", 8).unwrap();
+        let fed = FederationConfig {
+            instances: 2,
+            batch: 4,
+            flush_interval: 1.0,
+            steal_threshold: 4,
+        };
+        let a = run_contention_federated(&mix, ContentionOpts::classic(true, 42), fed).unwrap();
+        let b = run_contention_federated(&mix, ContentionOpts::classic(true, 42), fed).unwrap();
+        let csv_a = contention_csv(std::slice::from_ref(&a));
+        let csv_b = contention_csv(std::slice::from_ref(&b));
+        assert_eq!(csv_a.as_str(), csv_b.as_str(), "federated export must be deterministic");
+        let lines: Vec<&str> = csv_a.as_str().lines().collect();
+        assert_eq!(
+            lines[0],
+            "scenario,nodes,backfill,holds,aging,walltime_error,class,jobs,tasks,\
+             completed,median_latency_s,p95_latency_s,max_latency_s,starvation_age_s,\
+             core_seconds,utilization,span_s,backfills,max_active_holds,\
+             fed_instances,fed_batch,fed_steal_threshold,fed_batches,fed_steals,\
+             fed_p95_latency_s",
+            "v5 golden header (federated-only run: v1 + v5 extension)"
+        );
+        let header_cols = lines[0].split(',').count();
+        for line in &lines[1..] {
+            assert_eq!(line.split(',').count(), header_cols, "row width matches header");
+        }
+        let json = contention_json(std::slice::from_ref(&a)).to_pretty();
+        for key in [
+            "\"federation\":",
+            "\"instances\": 2",
+            "\"steal_threshold\": 4",
+            "\"p95_latency_s\":",
+        ] {
+            assert!(json.contains(key), "json missing {key}");
+        }
+        // A mixed export (single-scheduler + federated) zero-fills the
+        // gateway columns on the single-scheduler rows.
+        let classic = run_contention_with(&mix, ContentionOpts::classic(true, 42)).unwrap();
+        assert!(classic.federation.is_none());
+        let both = contention_csv(&[classic, a]);
+        let lines: Vec<&str> = both.as_str().lines().collect();
+        assert!(lines[0].ends_with("fed_p95_latency_s"));
+        assert!(
+            lines[1].ends_with(",0,0,0,0,0,"),
+            "single-scheduler rows zero-fill the v5 extension: {}",
+            lines[1]
+        );
+    }
+
+    #[test]
+    fn federation_sweep_structure_and_determinism() {
+        // A miniature rate sweep: one point per requested rate, both
+        // curves populated, saturation picked from the swept set, and
+        // the whole sweep bit-for-bit reproducible. (Performance claims
+        // — the ≥ 3× sustained-rate gain — live in
+        // `benches/bench_federation.rs`, not here.)
+        let opts = FederationSweepOpts {
+            instances: 2,
+            nodes: 4,
+            rates: vec![1.0, 2.0],
+            jobs: 20,
+            task_s: 0.5,
+            knee_s: 30.0,
+            batch: 2,
+            steal_threshold: 8,
+            seed: 7,
+        };
+        let a = run_federation(opts.clone()).unwrap();
+        assert_eq!(a.points.len(), 2);
+        for (pt, &rate) in a.points.iter().zip(&opts.rates) {
+            assert_eq!(pt.rate, rate);
+            assert!(pt.single_p95.is_finite(), "single curve populated at {rate}");
+            assert!(pt.federated_p95.is_finite(), "federated curve populated at {rate}");
+        }
+        for sat in [a.single_saturation, a.federated_saturation] {
+            assert!(
+                sat == 0.0 || opts.rates.contains(&sat),
+                "saturation {sat} must come from the swept set"
+            );
+        }
+        let b = run_federation(opts).unwrap();
+        for (x, y) in a.points.iter().zip(&b.points) {
+            assert_eq!(x.single_p95.to_bits(), y.single_p95.to_bits());
+            assert_eq!(x.federated_p95.to_bits(), y.federated_p95.to_bits());
+        }
+        assert_eq!(a.single_saturation, b.single_saturation);
+        assert_eq!(a.federated_saturation, b.federated_saturation);
+        // Degenerate sweeps are rejected up front.
+        assert!(run_federation(FederationSweepOpts {
+            rates: vec![],
+            ..FederationSweepOpts::default()
+        })
+        .is_err());
+        assert!(run_federation(FederationSweepOpts {
+            rates: vec![-1.0],
+            ..FederationSweepOpts::default()
+        })
+        .is_err());
     }
 
     #[test]

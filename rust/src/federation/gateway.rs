@@ -1,0 +1,509 @@
+//! The federation gateway: batched ingestion, deterministic routing,
+//! lock-step advancement and cross-scheduler work stealing.
+
+use std::collections::VecDeque;
+
+use crate::scheduler::{JobId, JobSpec, SchedEvent, SchedulerSim};
+use crate::sim::{self, EventQueue, Time};
+use crate::workload::contention::Submission;
+
+use super::outcome::{FederationOutcome, InstanceReport, JobReport, LatencySummary};
+use super::FederationConfig;
+
+/// One scheduler instance behind the gateway: the sim, its private
+/// event calendar, the gateway-side submission buffer and counters.
+struct Instance {
+    sim: SchedulerSim,
+    q: EventQueue<SchedEvent>,
+    /// Gateway job indices buffered here, not yet injected.
+    buf: Vec<usize>,
+    /// Tasks across the buffered jobs (so routing sees buffered load).
+    buf_tasks: usize,
+    /// Gateway job indices currently owned here, oldest first — the
+    /// steal pass scans from the front and drops entries the moment a
+    /// withdrawal is refused (a refused job has started work and can
+    /// never become fully pending again).
+    candidates: VecDeque<usize>,
+    routed: u64,
+    batches: u64,
+    stolen_in: u64,
+    stolen_out: u64,
+    pending_peak: usize,
+    /// DES events processed across all lock-step windows.
+    events: u64,
+}
+
+/// One gateway job: the retained spec (for steal re-submission), its
+/// gateway arrival, and where it currently lives.
+struct GatewayJob {
+    spec: JobSpec,
+    class: crate::workload::contention::JobClass,
+    submit_t: Time,
+    /// Current owning instance.
+    owner: usize,
+    /// Job id *within* the owner (re-assigned on every steal).
+    inst_job: JobId,
+    steals: u32,
+}
+
+/// The submission gateway over a fleet of independent schedulers.
+///
+/// Construct with the per-partition sims (each already configured over
+/// its own disjoint cluster), then [`Gateway::run`] a time-sorted
+/// submission stream to completion. See the module docs for the
+/// lock-step discipline.
+pub struct Gateway {
+    cfg: FederationConfig,
+    insts: Vec<Instance>,
+    jobs: Vec<GatewayJob>,
+    /// Round-robin cursor breaking least-backlog ties.
+    rr: usize,
+    steals: u64,
+    batches: u64,
+}
+
+impl Gateway {
+    /// Build a gateway over the given instances. `cfg.instances` must
+    /// match the number of sims (the config names the fleet shape; the
+    /// sims are the fleet).
+    pub fn new(cfg: FederationConfig, sims: Vec<SchedulerSim>) -> Gateway {
+        assert!(!sims.is_empty(), "gateway needs at least one instance");
+        assert_eq!(
+            cfg.instances,
+            sims.len(),
+            "federation.instances must match the sims provided"
+        );
+        let insts = sims
+            .into_iter()
+            .map(|sim| Instance {
+                sim,
+                q: EventQueue::new(),
+                buf: Vec::new(),
+                buf_tasks: 0,
+                candidates: VecDeque::new(),
+                routed: 0,
+                batches: 0,
+                stolen_in: 0,
+                stolen_out: 0,
+                pending_peak: 0,
+                events: 0,
+            })
+            .collect();
+        Gateway {
+            cfg,
+            insts,
+            jobs: Vec::new(),
+            rr: 0,
+            steals: 0,
+            batches: 0,
+        }
+    }
+
+    /// Drive the fleet over a time-sorted submission stream until every
+    /// instance's calendar drains, then assemble the rollup.
+    pub fn run(mut self, subs: Vec<Submission>) -> FederationOutcome {
+        debug_assert!(
+            subs.windows(2).all(|w| w[0].at <= w[1].at),
+            "submissions must be time-sorted"
+        );
+        for inst in &mut self.insts {
+            inst.sim.prepare(&mut inst.q);
+        }
+        self.jobs.reserve(subs.len());
+        let mut tick = self.cfg.flush_interval;
+        let mut si = 0;
+        while si < subs.len() {
+            let t_sub = subs[si].at;
+            if t_sub < tick {
+                // Submission boundary: advance strictly before the
+                // arrival instant, then inject — so the new Submit
+                // events play at their true time, after everything that
+                // already happened and before anything later.
+                self.advance_all(t_sub);
+                while si < subs.len() && subs[si].at == t_sub {
+                    let sub = subs[si].clone();
+                    self.route(sub, t_sub);
+                    si += 1;
+                }
+            } else {
+                self.boundary_tick(tick);
+                tick += self.cfg.flush_interval;
+            }
+        }
+        // Drain: keep ticking (flushing stragglers, stealing across the
+        // shrinking backlogs) until every calendar is empty and every
+        // buffer flushed.
+        loop {
+            self.boundary_tick(tick);
+            let live = self.insts.iter_mut().any(|i| i.q.peek_time().is_some());
+            if !live && self.insts.iter().all(|i| i.buf.is_empty()) {
+                break;
+            }
+            tick += self.cfg.flush_interval;
+        }
+        self.finish()
+    }
+
+    /// One flush tick: advance everyone strictly before the tick, flush
+    /// all buffers, then rebalance.
+    fn boundary_tick(&mut self, t: Time) {
+        self.advance_all(t);
+        for i in 0..self.insts.len() {
+            self.flush(i, t);
+        }
+        self.steal_pass(t);
+    }
+
+    /// Advance every instance strictly up to `t` (lock-step window).
+    fn advance_all(&mut self, t: Time) {
+        for inst in &mut self.insts {
+            let (_, n) = sim::run_until_before(&mut inst.sim, &mut inst.q, t);
+            inst.events += n;
+            let depth = inst.sim.pending_depth();
+            if depth > inst.pending_peak {
+                inst.pending_peak = depth;
+            }
+        }
+    }
+
+    /// Route one submission: least backlog (queued + buffered tasks),
+    /// round-robin cursor on ties. Flushes the target's buffer early
+    /// when it reaches the batch size.
+    fn route(&mut self, sub: Submission, now: Time) {
+        let n = self.insts.len();
+        let mut best = self.rr % n;
+        let mut best_load = usize::MAX;
+        for k in 0..n {
+            let i = (self.rr + k) % n;
+            let load = self.insts[i].sim.pending_depth() + self.insts[i].buf_tasks;
+            if load < best_load {
+                best_load = load;
+                best = i;
+            }
+        }
+        self.rr = (best + 1) % n;
+        let idx = self.jobs.len();
+        let buf_tasks = sub.spec.tasks.len();
+        self.jobs.push(GatewayJob {
+            spec: sub.spec,
+            class: sub.class,
+            submit_t: sub.at,
+            owner: best,
+            inst_job: 0,
+            steals: 0,
+        });
+        let inst = &mut self.insts[best];
+        inst.routed += 1;
+        inst.buf.push(idx);
+        inst.buf_tasks += buf_tasks;
+        if inst.buf.len() >= self.cfg.batch {
+            self.flush(best, now);
+        }
+    }
+
+    /// Inject instance `i`'s buffered jobs at time `t` as one batch.
+    fn flush(&mut self, i: usize, t: Time) {
+        if self.insts[i].buf.is_empty() {
+            return;
+        }
+        let buf = std::mem::take(&mut self.insts[i].buf);
+        self.insts[i].buf_tasks = 0;
+        for idx in buf {
+            let spec = self.jobs[idx].spec.clone();
+            let inst = &mut self.insts[i];
+            let id = inst.sim.submit_at(&mut inst.q, t, spec);
+            self.jobs[idx].inst_job = id;
+            inst.candidates.push_back(idx);
+        }
+        self.insts[i].batches += 1;
+        self.batches += 1;
+    }
+
+    /// One steal pass at a tick boundary: while the deepest backlog
+    /// exceeds the threshold and meaningfully exceeds the shallowest,
+    /// migrate one still-queued job from the former to the latter.
+    /// Depths are tracked locally across the pass (a resubmitted job's
+    /// tasks only enter the receiver's queues after its Register op),
+    /// so one pass converges instead of dog-piling a single receiver.
+    fn steal_pass(&mut self, t: Time) {
+        let n = self.insts.len();
+        if n < 2 {
+            return;
+        }
+        let mut depths: Vec<usize> = self
+            .insts
+            .iter()
+            .map(|i| i.sim.pending_depth() + i.buf_tasks)
+            .collect();
+        loop {
+            let (donor, &dmax) = depths
+                .iter()
+                .enumerate()
+                .max_by_key(|&(i, &d)| (d, std::cmp::Reverse(i)))
+                .expect("non-empty fleet");
+            let (recv, &dmin) = depths
+                .iter()
+                .enumerate()
+                .min_by_key(|&(i, &d)| (d, i))
+                .expect("non-empty fleet");
+            if dmax <= self.cfg.steal_threshold || dmax - dmin < 2 {
+                break;
+            }
+            match self.steal_one(donor, recv, t) {
+                Some(moved_tasks) => {
+                    depths[donor] = depths[donor].saturating_sub(moved_tasks);
+                    depths[recv] += moved_tasks;
+                }
+                None => break,
+            }
+        }
+    }
+
+    /// Migrate the oldest stealable job from `donor` to `recv`. Returns
+    /// the number of tasks moved, or `None` when the donor has no
+    /// withdrawable job left. Refused candidates (already started,
+    /// mid-dispatch, or finished) are dropped permanently — a job that
+    /// has touched a node never becomes fully pending again.
+    fn steal_one(&mut self, donor: usize, recv: usize, t: Time) -> Option<usize> {
+        while let Some(idx) = self.insts[donor].candidates.pop_front() {
+            if self.jobs[idx].owner != donor {
+                continue; // stale entry from an earlier migration
+            }
+            let inst_job = self.jobs[idx].inst_job;
+            if !self.insts[donor].sim.withdraw_job(t, inst_job) {
+                continue;
+            }
+            let spec = self.jobs[idx].spec.clone();
+            let moved = spec.tasks.len();
+            let inst = &mut self.insts[recv];
+            let id = inst.sim.submit_at(&mut inst.q, t, spec);
+            inst.candidates.push_back(idx);
+            inst.stolen_in += 1;
+            self.insts[donor].stolen_out += 1;
+            self.jobs[idx].owner = recv;
+            self.jobs[idx].inst_job = id;
+            self.jobs[idx].steals += 1;
+            self.steals += 1;
+            return Some(moved);
+        }
+        None
+    }
+
+    /// Finish every instance and roll the fleet up.
+    fn finish(self) -> FederationOutcome {
+        let Gateway {
+            cfg,
+            insts,
+            jobs,
+            steals,
+            batches,
+            ..
+        } = self;
+        let mut outcomes = Vec::with_capacity(insts.len());
+        let mut inst_stats = Vec::with_capacity(insts.len());
+        for (i, inst) in insts.into_iter().enumerate() {
+            let final_time = inst.q.now();
+            let out = inst.sim.finish(final_time, inst.events);
+            inst_stats.push((
+                i,
+                inst.routed,
+                inst.batches,
+                inst.stolen_in,
+                inst.stolen_out,
+                inst.pending_peak,
+                inst.events,
+                final_time,
+            ));
+            outcomes.push(out);
+        }
+        let mut reports = Vec::with_capacity(jobs.len());
+        let mut first_submit = f64::INFINITY;
+        let mut last_cleanup: f64 = 0.0;
+        let mut unfinished = 0usize;
+        for gj in &jobs {
+            let out = &outcomes[gj.owner];
+            let meta = &out.jobs[gj.inst_job as usize];
+            let (first, count) = (meta.first_task, meta.task_count as usize);
+            let mut first_start = f64::INFINITY;
+            let mut job_cleanup = f64::NAN;
+            let mut completed = 0usize;
+            let mut core_seconds = 0.0;
+            for tid in first..first + count as u64 {
+                let r = &out.records[tid as usize];
+                if let Some(s) = r.start_t {
+                    first_start = first_start.min(s);
+                    if let Some(e) = r.end_t {
+                        core_seconds += r.cores as f64 * (e - s).max(0.0);
+                    }
+                }
+                if let Some(c) = r.cleanup_t {
+                    completed += 1;
+                    job_cleanup = if job_cleanup.is_nan() { c } else { job_cleanup.max(c) };
+                }
+            }
+            unfinished += count - completed;
+            first_submit = first_submit.min(gj.submit_t);
+            if job_cleanup.is_finite() {
+                last_cleanup = last_cleanup.max(job_cleanup);
+            }
+            reports.push(JobReport {
+                class: gj.class,
+                submit_t: gj.submit_t,
+                latency: if first_start.is_finite() {
+                    first_start - gj.submit_t
+                } else {
+                    f64::NAN
+                },
+                last_cleanup: job_cleanup,
+                owner: gj.owner,
+                steals: gj.steals,
+                tasks: count,
+                completed,
+                core_seconds,
+            });
+        }
+        let instances: Vec<InstanceReport> = inst_stats
+            .into_iter()
+            .map(
+                |(i, routed, inst_batches, stolen_in, stolen_out, pending_peak, events, ft)| {
+                    let lats: Vec<f64> = reports
+                        .iter()
+                        .filter(|j| j.owner == i)
+                        .map(|j| j.latency)
+                        .collect();
+                    InstanceReport {
+                        instance: i,
+                        jobs: reports.iter().filter(|j| j.owner == i).count(),
+                        routed,
+                        batches: inst_batches,
+                        stolen_in,
+                        stolen_out,
+                        pending_peak,
+                        latency: LatencySummary::of(&lats),
+                        events,
+                        final_time: ft,
+                    }
+                },
+            )
+            .collect();
+        let all_lats: Vec<f64> = reports.iter().map(|j| j.latency).collect();
+        let final_time = outcomes.iter().map(|o| o.final_time).fold(0.0, f64::max);
+        let span = if first_submit.is_finite() && last_cleanup > first_submit {
+            last_cleanup - first_submit
+        } else {
+            0.0
+        };
+        FederationOutcome {
+            config: cfg,
+            latency: LatencySummary::of(&all_lats),
+            jobs: reports,
+            instances,
+            steals,
+            batches,
+            final_time,
+            span,
+            unfinished,
+            outcomes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::placement::Strategy;
+    use crate::scheduler::costmodel::CostModel;
+    use crate::scheduler::noise::NoiseModel;
+    use crate::workload::contention::ContentionMix;
+
+    fn quiet_sim(nodes: u32, seed: u64) -> SchedulerSim {
+        SchedulerSim::new(
+            Cluster::tx_green(nodes),
+            CostModel::slurm_like_tx_green(),
+            NoiseModel::dedicated(),
+            seed,
+        )
+        .with_placement(Strategy::NodeBased)
+        .with_backfill(true)
+    }
+
+    fn fleet(cfg: FederationConfig, nodes_each: u32, seed: u64) -> Gateway {
+        let sims = (0..cfg.instances)
+            .map(|i| quiet_sim(nodes_each, seed.wrapping_add(i as u64)))
+            .collect();
+        Gateway::new(cfg, sims)
+    }
+
+    #[test]
+    fn federated_tiny_mix_drains_and_conserves_jobs() {
+        let mix = ContentionMix::preset("tiny", 8).unwrap();
+        let subs = mix.generate(7);
+        let n_jobs = subs.len();
+        let cfg = FederationConfig {
+            instances: 2,
+            batch: 4,
+            steal_threshold: 4,
+            ..FederationConfig::default()
+        };
+        let out = fleet(cfg, 4, 7).run(subs);
+        assert_eq!(out.jobs.len(), n_jobs, "every job accounted once");
+        assert_eq!(out.unfinished, 0, "fleet drains completely");
+        assert!(out.jobs.iter().all(|j| j.completed == j.tasks));
+        assert!(out.jobs.iter().all(|j| j.latency.is_finite() && j.latency >= 0.0));
+        let owned: usize = out.instances.iter().map(|r| r.jobs).sum();
+        assert_eq!(owned, n_jobs, "ownership partitions the jobs");
+        let routed: u64 = out.instances.iter().map(|r| r.routed).sum();
+        assert_eq!(routed as usize, n_jobs);
+        assert_eq!(
+            out.instances.iter().map(|r| r.stolen_in).sum::<u64>(),
+            out.instances.iter().map(|r| r.stolen_out).sum::<u64>(),
+            "steals balance"
+        );
+        assert!(out.batches >= 1);
+        assert!(out.latency.n == n_jobs);
+        assert!(out.span > 0.0);
+    }
+
+    #[test]
+    fn round_robin_breaks_least_backlog_ties() {
+        // Simultaneous identical jobs on an idle fleet must spread
+        // round-robin: every instance ends up owning some.
+        let mix = ContentionMix::preset("tiny", 8).unwrap();
+        let subs = mix.generate(11);
+        let cfg = FederationConfig {
+            instances: 4,
+            batch: 1,
+            steal_threshold: usize::MAX, // isolate routing from stealing
+            ..FederationConfig::default()
+        };
+        let out = fleet(cfg, 2, 11).run(subs);
+        assert_eq!(out.steals, 0, "threshold disables stealing");
+        assert!(
+            out.instances.iter().all(|r| r.routed > 0),
+            "routing spreads across the fleet: {:?}",
+            out.instances.iter().map(|r| r.routed).collect::<Vec<_>>()
+        );
+        assert_eq!(out.unfinished, 0);
+    }
+
+    #[test]
+    fn determinism_same_seed_same_rollup() {
+        let mix = ContentionMix::preset("tiny", 8).unwrap();
+        let cfg = FederationConfig {
+            instances: 2,
+            batch: 2,
+            steal_threshold: 2,
+            ..FederationConfig::default()
+        };
+        let a = fleet(cfg, 4, 3).run(mix.generate(3));
+        let b = fleet(cfg, 4, 3).run(mix.generate(3));
+        assert_eq!(a.steals, b.steals);
+        assert_eq!(a.batches, b.batches);
+        assert_eq!(a.final_time, b.final_time);
+        for (x, y) in a.jobs.iter().zip(&b.jobs) {
+            assert_eq!(x.owner, y.owner);
+            assert_eq!(x.latency.to_bits(), y.latency.to_bits());
+        }
+    }
+}

@@ -1,0 +1,128 @@
+//! Scheduler federation: N independent [`SchedulerSim`] instances, each
+//! owning a disjoint cluster partition, behind a submission [`Gateway`].
+//!
+//! The paper's core observation is that one centralized scheduler server
+//! serializes registration, dispatch and cleanup — and collapses when a
+//! large array of short tasks lands on it. Aggregation (the paper's
+//! contribution) attacks the *per-job* cost; federation attacks the
+//! *fleet* ceiling: once a single server saturates, the only way to
+//! accept a higher submission rate is to run several schedulers side by
+//! side and split the machine between them.
+//!
+//! The design here mirrors how sites actually deploy that idea:
+//!
+//! * **Disjoint partitions** — each instance owns its own cluster,
+//!   placement index, pending queues and (optionally) rapid-launch pool
+//!   fleet. Nothing is shared; an instance is exactly the single-
+//!   scheduler simulation from [`crate::scheduler`].
+//! * **Batched ingestion** — the gateway buffers incoming submissions
+//!   per instance and injects them in batches (configurable size and
+//!   flush cadence), the way a submit front-end amortizes RPC overhead.
+//! * **Deterministic routing** — least-backlog (queued + buffered
+//!   tasks) with a round-robin cursor breaking ties, so a quiet fleet
+//!   degrades to pure round-robin and every run replays bit-for-bit.
+//! * **Work stealing** — when a partition's pending depth exceeds the
+//!   configured threshold, whole still-queued jobs are withdrawn
+//!   through the preempt-safe requeue path
+//!   ([`crate::scheduler::SchedulerSim::withdraw_job`]) and resubmitted
+//!   to the shallowest instance, where they re-route through that
+//!   instance's own shape router.
+//!
+//! Instances advance in **lock-step** on a shared virtual clock: the
+//! gateway runs every instance strictly up to the next boundary
+//! (submission arrival or flush tick) with
+//! [`crate::sim::run_until_before`], injects that boundary's work, and
+//! only then lets the instant play out. With one instance and batch
+//! size 1 the gateway is a pass-through: the schedule is bit-for-bit
+//! the direct [`SchedulerSim::run`] schedule (pinned by
+//! `rust/tests/federation_properties.rs`).
+//!
+//! [`SchedulerSim`]: crate::scheduler::SchedulerSim
+//! [`SchedulerSim::run`]: crate::scheduler::SchedulerSim::run
+
+pub mod gateway;
+pub mod outcome;
+
+pub use gateway::Gateway;
+pub use outcome::{FederationOutcome, InstanceReport, JobReport, LatencySummary};
+
+use crate::sim::Time;
+
+/// Federation knobs (the `federation = { … }` config table).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FederationConfig {
+    /// Scheduler instances behind the gateway (each owns a disjoint
+    /// partition).
+    pub instances: usize,
+    /// Submissions buffered per instance before an early flush (1 =
+    /// inject every submission the instant it arrives).
+    pub batch: usize,
+    /// Flush/steal cadence, virtual seconds: every tick the gateway
+    /// flushes all buffers and runs one steal pass.
+    pub flush_interval: Time,
+    /// Pending-depth (queued tasks) above which an instance becomes a
+    /// steal donor.
+    pub steal_threshold: usize,
+}
+
+impl Default for FederationConfig {
+    fn default() -> Self {
+        FederationConfig {
+            instances: 4,
+            batch: 8,
+            flush_interval: 1.0,
+            steal_threshold: 64,
+        }
+    }
+}
+
+impl FederationConfig {
+    /// A pass-through gateway: one instance, no batching. The
+    /// configuration under which the gateway must reproduce the direct
+    /// scheduler bit-for-bit.
+    pub fn passthrough() -> FederationConfig {
+        FederationConfig {
+            instances: 1,
+            batch: 1,
+            ..FederationConfig::default()
+        }
+    }
+
+    /// Validate the knobs (mirrors the config layer's error style).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.instances == 0 {
+            return Err("federation.instances must be >= 1".into());
+        }
+        if self.batch == 0 {
+            return Err("federation.batch must be >= 1".into());
+        }
+        if !(self.flush_interval > 0.0) {
+            return Err("federation.flush_interval must be > 0".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_validates() {
+        assert!(FederationConfig::default().validate().is_ok());
+        assert!(FederationConfig::passthrough().validate().is_ok());
+    }
+
+    #[test]
+    fn degenerate_knobs_are_rejected() {
+        let mut c = FederationConfig::default();
+        c.instances = 0;
+        assert!(c.validate().is_err());
+        let mut c = FederationConfig::default();
+        c.batch = 0;
+        assert!(c.validate().is_err());
+        let mut c = FederationConfig::default();
+        c.flush_interval = 0.0;
+        assert!(c.validate().is_err());
+    }
+}

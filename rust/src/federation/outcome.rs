@@ -1,0 +1,144 @@
+//! Fleet-wide rollup of one federated run: per-instance and aggregate
+//! launch-latency quantiles, routing/steal counters, and the raw
+//! per-instance [`SimOutcome`]s for anyone who needs the full records.
+
+use crate::scheduler::SimOutcome;
+use crate::sim::Time;
+use crate::util::stats;
+use crate::workload::contention::JobClass;
+
+use super::FederationConfig;
+
+/// Launch-latency quantiles over one population (NaN when empty,
+/// matching the report conventions elsewhere).
+#[derive(Debug, Clone, Copy)]
+pub struct LatencySummary {
+    /// Samples (jobs that actually started).
+    pub n: usize,
+    pub median: f64,
+    pub p95: f64,
+    pub max: f64,
+}
+
+impl LatencySummary {
+    /// Summarize a latency sample set; NaN entries (never-started jobs)
+    /// are excluded from the quantiles but not from anything else.
+    pub fn of(xs: &[f64]) -> LatencySummary {
+        let clean: Vec<f64> = xs.iter().copied().filter(|x| x.is_finite()).collect();
+        LatencySummary {
+            n: clean.len(),
+            median: stats::median(&clean),
+            p95: stats::percentile(&clean, 95.0),
+            max: stats::max(&clean),
+        }
+    }
+}
+
+/// One gateway job, as seen end-to-end: where it finally ran and how
+/// long the *user* waited (gateway submit → first task start on the
+/// final owner — batching delay and steal hops included, exactly the
+/// latency a client of the fleet observes).
+#[derive(Debug, Clone)]
+pub struct JobReport {
+    pub class: JobClass,
+    /// When the job hit the gateway (virtual time).
+    pub submit_t: Time,
+    /// Gateway submit → first task start on the final owner; NaN if no
+    /// task ever started.
+    pub latency: Time,
+    /// Latest task cleanup, for span accounting (NaN if none finished).
+    pub last_cleanup: Time,
+    /// Final owning instance (after any steals).
+    pub owner: usize,
+    /// Times this job was stolen between instances.
+    pub steals: u32,
+    /// Scheduling tasks in the job.
+    pub tasks: usize,
+    /// Tasks that reached cleanup on the final owner.
+    pub completed: usize,
+    /// Delivered core-seconds on the final owner.
+    pub core_seconds: f64,
+}
+
+/// Per-instance slice of the rollup.
+#[derive(Debug, Clone)]
+pub struct InstanceReport {
+    pub instance: usize,
+    /// Jobs this instance finally owned (post-steal).
+    pub jobs: usize,
+    /// Jobs initially routed here by the gateway.
+    pub routed: u64,
+    /// Batch flushes injected into this instance.
+    pub batches: u64,
+    pub stolen_in: u64,
+    pub stolen_out: u64,
+    /// Peak pending depth (queued tasks) observed at window boundaries.
+    pub pending_peak: usize,
+    /// Latency quantiles over the jobs this instance finally owned.
+    pub latency: LatencySummary,
+    /// DES events this instance processed across all lock-step windows.
+    pub events: u64,
+    /// The instance's final virtual clock.
+    pub final_time: Time,
+}
+
+/// Everything measured from one federated run.
+#[derive(Debug)]
+pub struct FederationOutcome {
+    /// The knobs the gateway ran with.
+    pub config: FederationConfig,
+    /// One report per gateway job, in gateway-arrival order.
+    pub jobs: Vec<JobReport>,
+    /// One report per instance, in instance order.
+    pub instances: Vec<InstanceReport>,
+    /// Aggregate launch-latency quantiles over all jobs.
+    pub latency: LatencySummary,
+    /// Jobs migrated between instances by the steal pass.
+    pub steals: u64,
+    /// Batch flushes across all instances.
+    pub batches: u64,
+    /// Latest final clock across the instances.
+    pub final_time: Time,
+    /// First gateway submit → last cleanup anywhere, seconds.
+    pub span: Time,
+    /// Tasks that never reached cleanup on their final owner (0 for a
+    /// fully drained fleet).
+    pub unfinished: usize,
+    /// The raw per-instance outcomes (instance order), for consumers
+    /// that need full records — e.g. the per-class contention rollup.
+    pub outcomes: Vec<SimOutcome>,
+}
+
+impl FederationOutcome {
+    /// Latency quantiles restricted to one class.
+    pub fn class_latency(&self, class: JobClass) -> LatencySummary {
+        let xs: Vec<f64> = self
+            .jobs
+            .iter()
+            .filter(|j| j.class == class)
+            .map(|j| j.latency)
+            .collect();
+        LatencySummary::of(&xs)
+    }
+
+    /// Total delivered core-seconds across the fleet.
+    pub fn core_seconds(&self) -> f64 {
+        self.jobs.iter().map(|j| j.core_seconds).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_summary_skips_never_started_jobs() {
+        let s = LatencySummary::of(&[1.0, 3.0, f64::NAN, 2.0]);
+        assert_eq!(s.n, 3);
+        assert_eq!(s.median, 2.0);
+        assert_eq!(s.max, 3.0);
+        let empty = LatencySummary::of(&[f64::NAN]);
+        assert_eq!(empty.n, 0);
+        assert!(empty.median.is_nan() && empty.p95.is_nan() && empty.max.is_nan());
+    }
+}

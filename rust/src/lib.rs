@@ -39,6 +39,7 @@ pub mod coordinator;
 pub mod error;
 pub mod exec;
 pub mod fault;
+pub mod federation;
 pub mod lltools;
 pub mod metrics;
 pub mod placement;

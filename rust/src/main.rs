@@ -15,11 +15,13 @@
 
 use llsched::coordinator::cli::Args;
 use llsched::coordinator::experiment::{
-    contention_csv, contention_json, fig2_label, median_runs, run_contention_with, run_matrix,
-    run_placement_sweep, ContentionOpts, ContentionResult, ExperimentOpts,
+    contention_csv, contention_json, fig2_label, median_runs, run_contention_federated,
+    run_contention_with, run_federation, run_matrix, run_placement_sweep, ContentionOpts,
+    ContentionResult, ExperimentOpts, FederationSweepOpts,
 };
 use llsched::config::{Mode, RunConfig};
 use llsched::error::Result;
+use llsched::federation::FederationConfig;
 use llsched::fault::audit::AuditLog;
 use llsched::fault::scenario::ChurnScenario;
 use llsched::fault::FaultConfig;
@@ -75,6 +77,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "contention" => cmd_contention(args),
         "pool" => cmd_pool(args),
         "churn" => cmd_churn(args),
+        "federate" => cmd_federate(args),
         "spot" => cmd_spot(args),
         "artifacts" => cmd_artifacts(args),
         other => {
@@ -149,6 +152,26 @@ commands:
                             (audit.log); see docs/scenarios.md for the
                             cookbook and docs/audit-log.md for the
                             record format
+  federate [--instances N] [--nodes N] [--batch B] [--steal-threshold T]
+           [--flush F] [--preset P] [--seed S] [--compare]
+           [--sweep-rate R1,R2,...] [--jobs J] [--task-time T]
+           [--knee K] [--out DIR]
+                            run a contention mix through a federated
+                            fleet: N independent schedulers (default
+                            4), each owning nodes/N of the machine,
+                            behind a batching submission gateway
+                            (--batch jobs per flush, every --flush
+                            seconds) with cross-scheduler work stealing
+                            once a partition's pending depth passes
+                            --steal-threshold; --compare instead sweeps
+                            an open-loop stream of --jobs whole-node
+                            jobs of --task-time seconds over a single
+                            scheduler vs the fleet at each --sweep-rate
+                            jobs/s and reports where each saturates
+                            (p95 launch latency past --knee seconds)
+                            plus the sustained-rate gain; --out writes
+                            the v5 per-class CSV/JSON (or the sweep
+                            JSON under --compare)
   spot [--nodes N]          spot-job release-latency comparison
   artifacts                 verify AOT artifacts load and execute
 ";
@@ -671,6 +694,150 @@ fn cmd_churn(args: &Args) -> Result<()> {
         )?;
         std::fs::write(dir.join("audit.log"), audit(&results[0]).to_text())?;
         println!("(per-class CSV/JSON + audit log in {dir:?})");
+    }
+    Ok(())
+}
+
+fn cmd_federate(args: &Args) -> Result<()> {
+    args.expect_known(&[
+        "instances",
+        "nodes",
+        "batch",
+        "steal-threshold",
+        "flush",
+        "preset",
+        "seed",
+        "compare",
+        "sweep-rate",
+        "jobs",
+        "task-time",
+        "knee",
+        "out",
+    ])?;
+    let instances: usize = args.opt_parse("instances", 4)?;
+    let nodes: u32 = args.opt_parse("nodes", 128)?;
+    let seed: u64 = args.opt_parse("seed", 7)?;
+    let fed = FederationConfig {
+        instances,
+        batch: args.opt_parse("batch", 8)?,
+        flush_interval: args.opt_parse("flush", 1.0)?,
+        steal_threshold: args.opt_parse("steal-threshold", 64)?,
+    };
+    fed.validate().map_err(llsched::Error::Config)?;
+    if nodes as usize % instances != 0 {
+        return Err(llsched::Error::Config(format!(
+            "--instances ({instances}) must divide --nodes ({nodes}) into equal partitions"
+        )));
+    }
+    if args.flag("compare") {
+        // Launch latency vs submission rate: one scheduler owning a
+        // single partition vs the federated fleet of `instances`
+        // partitions of the same size, swept until each saturates.
+        let rates = match args.opt("sweep-rate") {
+            Some(spec) => spec
+                .split(',')
+                .filter(|s| !s.trim().is_empty())
+                .map(|s| {
+                    s.trim().parse::<f64>().map_err(|_| {
+                        llsched::Error::Config(format!("--sweep-rate: bad rate {s:?}"))
+                    })
+                })
+                .collect::<Result<Vec<f64>>>()?,
+            None => FederationSweepOpts::default().rates,
+        };
+        let opts = FederationSweepOpts {
+            instances,
+            nodes: nodes / instances as u32,
+            rates,
+            jobs: args.opt_parse("jobs", 2000)?,
+            task_s: args.opt_parse("task-time", 2.0)?,
+            knee_s: args.opt_parse("knee", 15.0)?,
+            batch: fed.batch,
+            steal_threshold: fed.steal_threshold,
+            seed,
+        };
+        println!(
+            "federation rate sweep: {instances} x {} nodes vs 1 x {} nodes, \
+             {} jobs/point, task {}s, knee {}s\n",
+            opts.nodes, opts.nodes, opts.jobs, opts.task_s, opts.knee_s
+        );
+        let sweep = run_federation(opts)?;
+        let mut table = llsched::util::fmt::Table::new(vec![
+            "rate (jobs/s)",
+            "single p95",
+            "federated p95",
+        ]);
+        for pt in &sweep.points {
+            table.row(vec![
+                format!("{}", pt.rate),
+                dur(pt.single_p95),
+                dur(pt.federated_p95),
+            ]);
+        }
+        println!("{}", table.render());
+        println!(
+            "  single scheduler sustains {} jobs/s; federated fleet sustains {} jobs/s ({})",
+            sweep.single_saturation,
+            sweep.federated_saturation,
+            if sweep.rate_gain.is_finite() {
+                format!("{:.1}x", sweep.rate_gain)
+            } else {
+                "n/a".to_string()
+            }
+        );
+        if let Some(out) = args.opt("out") {
+            let dir = PathBuf::from(out);
+            std::fs::create_dir_all(&dir)?;
+            let points: Vec<llsched::util::json::Json> = sweep
+                .points
+                .iter()
+                .map(|pt| {
+                    llsched::util::json::Json::obj()
+                        .set("rate_jobs_per_s", pt.rate)
+                        .set("single_p95_s", pt.single_p95)
+                        .set("federated_p95_s", pt.federated_p95)
+                })
+                .collect();
+            let json = llsched::util::json::Json::obj()
+                .set("instances", sweep.opts.instances)
+                .set("nodes_per_instance", sweep.opts.nodes)
+                .set("knee_s", sweep.opts.knee_s)
+                .set("points", llsched::util::json::Json::Arr(points))
+                .set("single_saturation_jobs_per_s", sweep.single_saturation)
+                .set("federated_saturation_jobs_per_s", sweep.federated_saturation)
+                .set("rate_gain", sweep.rate_gain);
+            std::fs::write(dir.join("federate.json"), json.to_pretty())?;
+            println!("(sweep JSON in {dir:?})");
+        }
+    } else {
+        let preset = args.opt("preset").unwrap_or("default");
+        let mix = ContentionMix::preset(preset, nodes)?;
+        let res = run_contention_federated(&mix, ContentionOpts::classic(true, seed), fed)?;
+        print_contention(&res);
+        if let Some(f) = &res.federation {
+            println!(
+                "  federation: {} instances  batch {} / {}s flush  steal threshold {}  \
+                 batches {}  steals {}  fleet p95 {}",
+                f.config.instances,
+                f.config.batch,
+                f.config.flush_interval,
+                f.config.steal_threshold,
+                f.batches,
+                f.steals,
+                dur(f.p95_latency),
+            );
+        }
+        if let Some(out) = args.opt("out") {
+            let dir = PathBuf::from(out);
+            std::fs::create_dir_all(&dir)?;
+            let results = [res];
+            contention_csv(&results).save(&dir.join("contention.csv"))?;
+            std::fs::write(
+                dir.join("contention.json"),
+                contention_json(&results).to_pretty(),
+            )?;
+            println!("(per-class CSV/JSON in {dir:?})");
+        }
     }
     Ok(())
 }

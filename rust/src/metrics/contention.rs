@@ -186,15 +186,19 @@ pub struct ShardReport {
     pub utilization: f64,
 }
 
-/// Latency/throughput join of one launch log against the task records.
-fn join_launches(records: &[TaskRecord], launched: &[u64]) -> (Vec<Time>, f64, usize) {
+/// Latency/throughput join over the pool-launched records: every record
+/// tagged with a `pool_shard` matching `shard` (`None` = any shard).
+/// The per-task attribution lives on the records themselves — the fleet
+/// keeps only counters and a bounded recent-launch ring.
+fn join_launches(records: &[TaskRecord], shard: Option<u32>) -> (Vec<Time>, f64, usize) {
     let mut latencies = Vec::new();
     let mut core_seconds = 0.0;
     let mut completed = 0usize;
-    for &tid in launched {
-        let Some(r) = records.get(tid as usize) else {
+    for r in records {
+        let Some(s) = r.pool_shard else { continue };
+        if shard.is_some_and(|want| want != s) {
             continue;
-        };
+        }
         if let Some(start) = r.start_t {
             latencies.push(start - r.submit_t);
             if let Some(end) = r.end_t {
@@ -208,14 +212,16 @@ fn join_launches(records: &[TaskRecord], launched: &[u64]) -> (Vec<Time>, f64, u
     (latencies, core_seconds, completed)
 }
 
-/// Compute one shard's report.
+/// Compute one shard's report (`sid` is the shard's dense fleet index,
+/// matching the `pool_shard` record tags).
 fn shard_report(
     records: &[TaskRecord],
     shard: &ShardOutcome,
+    sid: u32,
     total_cores: u64,
     span: Time,
 ) -> ShardReport {
-    let (latencies, core_seconds, completed) = join_launches(records, &shard.launched_tasks);
+    let (latencies, core_seconds, completed) = join_launches(records, Some(sid));
     let capacity = total_cores as f64 * span;
     ShardReport {
         name: shard.name.clone(),
@@ -235,17 +241,17 @@ fn shard_report(
     }
 }
 
-/// Compute the pool report for one run: joins the fleet's launch log
-/// against the task records (records are dense by task id). `span` is
-/// the same first-submit → last-cleanup window [`per_class`] returns,
-/// so pool utilization is directly comparable to the class shares.
+/// Compute the pool report for one run: joins the records' `pool_shard`
+/// launch tags against the fleet counters. `span` is the same
+/// first-submit → last-cleanup window [`per_class`] returns, so pool
+/// utilization is directly comparable to the class shares.
 pub fn pool_report(
     records: &[TaskRecord],
     pool: &PoolOutcome,
     total_cores: u64,
     span: Time,
 ) -> PoolReport {
-    let (latencies, core_seconds, _) = join_launches(records, &pool.launched_tasks);
+    let (latencies, core_seconds, _) = join_launches(records, None);
     let capacity = total_cores as f64 * span;
     PoolReport {
         launches: pool.launches,
@@ -263,7 +269,8 @@ pub fn pool_report(
         shards: pool
             .shards
             .iter()
-            .map(|s| shard_report(records, s, total_cores, span))
+            .enumerate()
+            .map(|(sid, s)| shard_report(records, s, sid as u32, total_cores, span))
             .collect(),
     }
 }
@@ -283,6 +290,15 @@ mod tests {
             end_t: Some(end),
             cleanup_t: Some(end + 1.0),
             cores,
+            pool_shard: None,
+        }
+    }
+
+    /// `rec` tagged as launched through pool shard `sid`.
+    fn pooled(sid: u32, job: u64, submit: f64, start: f64, end: f64, cores: u32) -> TaskRecord {
+        TaskRecord {
+            pool_shard: Some(sid),
+            ..rec(job, submit, start, end, cores)
         }
     }
 
@@ -338,16 +354,16 @@ mod tests {
 
     #[test]
     fn pool_report_joins_launches_against_records() {
-        // Three records; the pool launched tasks 0 and 2 (task ids are
-        // dense indices into the records).
+        // Three records; two carry pool-launch tags, the middle one is a
+        // batch-path task and stays out of the join.
         let records = vec![
-            rec(0, 0.0, 1.0, 3.0, 64),  // latency 1, 128 core-s
-            rec(0, 0.0, 50.0, 60.0, 64), // batch-path task, ignored
-            rec(1, 2.0, 5.0, 7.0, 64),  // latency 3, 128 core-s
+            pooled(0, 0, 0.0, 1.0, 3.0, 64), // latency 1, 128 core-s
+            rec(0, 0.0, 50.0, 60.0, 64),     // batch-path task, ignored
+            pooled(0, 1, 2.0, 5.0, 7.0, 64), // latency 3, 128 core-s
         ];
         let pool = PoolOutcome {
             launches: 2,
-            launched_tasks: vec![0, 2],
+            recent_launches: vec![0, 2],
             grows: 3,
             shrinks: 1,
             peak_leased: 2,
@@ -372,13 +388,13 @@ mod tests {
     #[test]
     fn shard_reports_split_the_fleet_join() {
         let records = vec![
-            rec(0, 0.0, 1.0, 3.0, 64),  // general: latency 1
-            rec(0, 0.0, 3.0, 5.0, 64),  // general: latency 3
-            rec(1, 2.0, 7.0, 17.0, 64), // large: latency 5
+            pooled(0, 0, 0.0, 1.0, 3.0, 64),  // general: latency 1
+            pooled(0, 0, 0.0, 3.0, 5.0, 64),  // general: latency 3
+            pooled(1, 1, 2.0, 7.0, 17.0, 64), // large: latency 5
         ];
         let pool = PoolOutcome {
             launches: 3,
-            launched_tasks: vec![0, 1, 2],
+            recent_launches: vec![0, 1, 2],
             grows: 2,
             shrinks: 1,
             peak_leased: 3,
@@ -388,7 +404,6 @@ mod tests {
                 ShardOutcome {
                     name: "general".into(),
                     launches: 2,
-                    launched_tasks: vec![0, 1],
                     grows: 1,
                     shrinks: 1,
                     peak_leased: 2,
@@ -397,7 +412,6 @@ mod tests {
                 ShardOutcome {
                     name: "large".into(),
                     launches: 1,
-                    launched_tasks: vec![2],
                     grows: 1,
                     shrinks: 0,
                     peak_leased: 1,

@@ -37,6 +37,12 @@ use std::collections::VecDeque;
 /// operations as a `u32`).
 pub type ShardId = usize;
 
+/// Capacity of the fleet's recent-launch debug ring. Launch *counts*
+/// are plain counters; the ring only keeps the most recent task ids for
+/// post-mortem inspection, so a 10M-task trace no longer accumulates
+/// 10M-entry launch logs.
+pub const LAUNCH_RING_CAP: usize = 1024;
+
 /// Configuration of one shard: a name (for exports and errors), the
 /// shape it serves, and the elastic pool knobs it runs under.
 #[derive(Debug, Clone, PartialEq)]
@@ -161,15 +167,19 @@ pub struct Shard {
     pub manager: PoolManager,
     /// FIFO of pool-routed tasks waiting for a free leased node.
     pub pending: VecDeque<TaskId>,
-    /// Tasks launched through this shard, in launch order.
-    pub launched: Vec<TaskId>,
+    /// Tasks launched through this shard (counter, not a log — the old
+    /// append-only `Vec<TaskId>` leaked without bound).
+    pub launches: u64,
     /// The last grow attempt found nothing to take (no sibling-free
     /// node, no batch node); cleared when a release could have produced
     /// a candidate. Gates the starving-shard cooldown bypass.
     pub grow_blocked: bool,
-    /// Busy leases and when each is expected to free (launch walltime
-    /// estimate) — the shard's drain forecast.
-    busy_until: Vec<(NodeId, Time)>,
+    /// Per-node drain forecast, indexed by `NodeId`: `Some(t)` while a
+    /// launch occupies the node and is expected to free it at `t`.
+    /// Node-indexed so a release is O(1) — the old `Vec<(NodeId, Time)>`
+    /// paid an O(n) `retain` per release, quadratic across a busy
+    /// shard's drain.
+    busy_until: Vec<Option<Time>>,
 }
 
 impl Shard {
@@ -187,6 +197,17 @@ impl Shard {
             self.nodes.n_draining(),
         )
     }
+
+    /// Materialized drain forecast as `(node, est_end)` pairs, node
+    /// ascending — a test/diagnostics hook; the hot path only ever
+    /// indexes or scans the per-node slots directly.
+    pub fn busy_forecast(&self) -> Vec<(NodeId, Time)> {
+        self.busy_until
+            .iter()
+            .enumerate()
+            .filter_map(|(n, t)| t.map(|t| (n as NodeId, t)))
+            .collect()
+    }
 }
 
 /// The shard registry plus fleet-level accounting.
@@ -196,8 +217,11 @@ pub struct PoolFleet {
     /// Node → core capacity (from the placement index), for the
     /// capacity-class side of shape matching.
     capacity: Vec<u32>,
-    /// Tasks launched through any shard, in fleet-wide launch order.
-    pub launched: Vec<TaskId>,
+    /// Tasks launched through any shard (counter, not a log).
+    launches: u64,
+    /// The last [`LAUNCH_RING_CAP`] launched task ids, oldest first —
+    /// the bounded debugging window that replaces the unbounded log.
+    recent_launches: VecDeque<TaskId>,
     /// Cross-shard transfers performed by the rebalancer.
     borrows: u64,
     /// True fleet-wide high-water mark of simultaneous leases
@@ -230,16 +254,17 @@ impl PoolFleet {
                     dispatcher: NodeDispatcher::new(),
                     manager: PoolManager::new(min, max, sc.pool.hysteresis),
                     pending: VecDeque::new(),
-                    launched: Vec::new(),
+                    launches: 0,
                     grow_blocked: false,
-                    busy_until: Vec::new(),
+                    busy_until: vec![None; n],
                 }
             })
             .collect();
         PoolFleet {
             shards,
             capacity,
-            launched: Vec::new(),
+            launches: 0,
+            recent_launches: VecDeque::new(),
             borrows: 0,
             peak_leased: 0,
             violated: false,
@@ -301,18 +326,34 @@ impl PoolFleet {
         self.borrows
     }
 
-    /// Record a launch: per-shard and fleet-wide launch logs plus the
-    /// shard's drain-forecast entry.
-    pub fn note_launch(&mut self, sid: ShardId, node: NodeId, est_end: Time, task: TaskId) {
-        let sh = &mut self.shards[sid];
-        sh.launched.push(task);
-        sh.busy_until.push((node, est_end));
-        self.launched.push(task);
+    /// Fleet-wide launch count.
+    pub fn launches(&self) -> u64 {
+        self.launches
     }
 
-    /// Record a release: drop the drain-forecast entry.
+    /// The most recent launches (≤ [`LAUNCH_RING_CAP`]), oldest first.
+    pub fn recent_launches(&self) -> &VecDeque<TaskId> {
+        &self.recent_launches
+    }
+
+    /// Record a launch: bump the per-shard and fleet-wide counters,
+    /// remember the task in the capped debug ring, and set the node's
+    /// drain-forecast slot.
+    pub fn note_launch(&mut self, sid: ShardId, node: NodeId, est_end: Time, task: TaskId) {
+        let sh = &mut self.shards[sid];
+        sh.launches += 1;
+        sh.busy_until[node as usize] = Some(est_end);
+        self.launches += 1;
+        if self.recent_launches.len() == LAUNCH_RING_CAP {
+            self.recent_launches.pop_front();
+        }
+        self.recent_launches.push_back(task);
+    }
+
+    /// Record a release: clear the node's drain-forecast slot. O(1) by
+    /// node index.
     pub fn note_release(&mut self, sid: ShardId, node: NodeId) {
-        self.shards[sid].busy_until.retain(|&(n, _)| n != node);
+        self.shards[sid].busy_until[node as usize] = None;
     }
 
     /// The rebalancer's first grow source: transfer one free node from
@@ -379,8 +420,10 @@ impl PoolFleet {
             } else {
                 sh.busy_until
                     .iter()
+                    .enumerate()
+                    .filter_map(|(n, t)| t.map(|t| (n as NodeId, t)))
                     .min_by(|a, b| a.1.partial_cmp(&b.1).expect("no NaN estimates"))
-                    .map(|&(n, t)| (n, t.max(now)))
+                    .map(|(n, t)| (n, t.max(now)))
             };
             if let Some((n, t)) = cand {
                 let better = best.map(|(_, bt)| t < bt).unwrap_or(true);
@@ -412,8 +455,8 @@ impl PoolFleet {
                     owner[n as usize] = Some(sid);
                 }
             }
-            for &(n, _) in &sh.busy_until {
-                if !sh.nodes.is_leased(n) {
+            for (n, t) in sh.busy_until.iter().enumerate() {
+                if t.is_some() && !sh.nodes.is_leased(n as NodeId) {
                     return Err(format!(
                         "shard {:?} forecasts busy node {n} it does not lease",
                         sh.name
@@ -591,8 +634,9 @@ mod tests {
         f.note_release(1, 1);
         f.shards[1].nodes.release_task(1);
         assert_eq!(f.earliest_release_estimate(5.0), Some((1, 5.0)));
-        // Past estimates clamp to now.
-        f.shards[0].busy_until[0].1 = 1.0;
+        // Past estimates clamp to now (re-launching on node 0 overwrites
+        // its forecast slot in place).
+        f.note_launch(0, 0, 1.0, 1);
         f.shards[1].nodes.acquire();
         f.note_launch(1, 1, 100.0, 3);
         assert_eq!(f.earliest_release_estimate(5.0), Some((0, 5.0)));
@@ -625,6 +669,51 @@ mod tests {
             "only the above-floor shard forecasts"
         );
         f.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn launch_accounting_is_counters_plus_capped_ring() {
+        // Launch-count-equivalence regression: the launch log used to be
+        // two append-only Vecs — pure leak at 10M launches. Counters
+        // must keep the exact totals while the debug ring stays bounded
+        // and holds only the most recent launches.
+        let mut f = fleet(4, &two_shard_cfg());
+        f.shards[0].nodes.lease(0);
+        let total = LAUNCH_RING_CAP as u64 + 7;
+        for t in 0..total {
+            f.note_launch(0, 0, 1.0, t);
+            f.note_release(0, 0);
+        }
+        assert_eq!(f.launches(), total, "fleet counter counts every launch");
+        assert_eq!(f.shards[0].launches, total, "shard counter counts every launch");
+        assert_eq!(f.shards[1].launches, 0);
+        assert_eq!(f.recent_launches().len(), LAUNCH_RING_CAP, "ring stays capped");
+        assert_eq!(*f.recent_launches().front().unwrap(), 7, "oldest entries evicted");
+        assert_eq!(*f.recent_launches().back().unwrap(), total - 1);
+        f.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn release_clears_only_its_own_forecast_slot() {
+        // The node-indexed forecast must behave exactly like the old
+        // list under launch/release churn: a release drops one node's
+        // entry, a re-launch overwrites in place.
+        let mut f = fleet(4, &two_shard_cfg());
+        for n in [0, 1, 2] {
+            f.shards[0].nodes.lease(n);
+            f.shards[0].nodes.acquire();
+        }
+        f.note_launch(0, 0, 10.0, 100);
+        f.note_launch(0, 1, 20.0, 101);
+        f.note_launch(0, 2, 30.0, 102);
+        assert_eq!(f.shards[0].busy_forecast(), vec![(0, 10.0), (1, 20.0), (2, 30.0)]);
+        f.note_release(0, 1);
+        assert_eq!(f.shards[0].busy_forecast(), vec![(0, 10.0), (2, 30.0)]);
+        f.note_launch(0, 0, 15.0, 103);
+        assert_eq!(f.shards[0].busy_forecast(), vec![(0, 15.0), (2, 30.0)]);
+        f.note_release(0, 0);
+        f.note_release(0, 2);
+        assert!(f.shards[0].busy_forecast().is_empty());
     }
 
     #[test]

@@ -22,6 +22,11 @@ pub struct TaskRecord {
     pub cleanup_t: Option<Time>,
     /// Cores the task occupied while running.
     pub cores: u32,
+    /// The pool-fleet shard this task launched through, if it took the
+    /// node-based dispatch path (`None` for batch-placed tasks). The
+    /// durable per-task launch attribution — the fleet itself keeps only
+    /// counters and a bounded recent-launch ring.
+    pub pool_shard: Option<u32>,
 }
 
 impl TaskRecord {
@@ -99,6 +104,7 @@ mod tests {
             end_t: Some(end),
             cleanup_t: Some(cleanup),
             cores: 1,
+            pool_shard: None,
         }
     }
 

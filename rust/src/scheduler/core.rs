@@ -320,9 +320,11 @@ pub struct SimOutcome {
 pub struct PoolOutcome {
     /// Short whole-node tasks launched through any shard.
     pub launches: u64,
-    /// The launched tasks, in fleet-wide launch order (per-class pool
-    /// metrics join these against the records).
-    pub launched_tasks: Vec<TaskId>,
+    /// The most recent launched tasks, oldest first, capped at
+    /// [`crate::pool::fleet::LAUNCH_RING_CAP`] — a debugging window, not
+    /// a log (the per-task attribution the metrics join lives on each
+    /// record's `pool_shard` tag).
+    pub recent_launches: Vec<TaskId>,
     /// Nodes taken from batch (leases + drains) across all resizes.
     pub grows: u64,
     /// Nodes returned to batch across all resizes.
@@ -352,8 +354,6 @@ pub struct ShardOutcome {
     pub name: String,
     /// Tasks launched through this shard.
     pub launches: u64,
-    /// The launched tasks, in this shard's launch order.
-    pub launched_tasks: Vec<TaskId>,
     /// Nodes this shard took from batch across all resizes.
     pub grows: u64,
     /// Nodes this shard returned to batch across all resizes.
@@ -821,9 +821,23 @@ impl SchedulerSim {
     /// cluster moves into the sim at [`Self::new`] and nothing mutates
     /// it between then and here.
     pub fn run(mut self, q: &mut EventQueue<SchedEvent>) -> SimOutcome {
-        // The full workload is known up front: size the job and task
-        // arenas once so the op path never grows a Vec mid-run (a 10M
-        // task trace would otherwise pay ~24 doubling copies).
+        self.prepare(q);
+        let (final_time, events) = sim::run(&mut self, q);
+        self.finish(final_time, events)
+    }
+
+    /// Stage the run: size the arenas, bootstrap the pool fleet, prime
+    /// the noise process, and materialize the fault schedule into
+    /// events. [`Self::run`] calls this itself; the federation gateway
+    /// calls it once per instance before driving the instances in
+    /// lock-step with [`sim::run_until_before`], submitting more work
+    /// between windows. Call exactly once, after the up-front
+    /// submissions and before the first event is popped.
+    pub fn prepare(&mut self, q: &mut EventQueue<SchedEvent>) {
+        // The up-front workload is known: size the job and task arenas
+        // once so the op path never grows a Vec mid-run (a 10M task
+        // trace would otherwise pay ~24 doubling copies). Late
+        // gateway-routed submissions still append normally.
         let n_tasks: usize = self.specs.iter().flatten().map(|s| s.tasks.len()).sum();
         self.jobs.reserve(self.specs.len());
         self.tasks.reserve(n_tasks);
@@ -843,20 +857,26 @@ impl SchedulerSim {
                 q.at(t, SchedEvent::Fault(op));
             }
         }
-        let (final_time, events) = sim::run(&mut self, q);
+    }
+
+    /// Assemble the [`SimOutcome`] once the event loop has drained (or
+    /// the caller stopped driving it). `final_time` and `events` are
+    /// what the engine loop returned — for a lock-step federation
+    /// instance, the last window's clock and the summed per-window
+    /// event counts.
+    pub fn finish(mut self, final_time: Time, events: u64) -> SimOutcome {
         let pool = self.pool.take().map(|p| {
             let f = p.fleet;
             let invariant_violated = f.violated || f.check_conservation().is_err();
             let borrows = f.borrows();
             let peak_leased = f.peak_leased();
-            let launched_tasks = f.launched;
+            let recent_launches: Vec<TaskId> = f.recent_launches().iter().copied().collect();
             let shards: Vec<ShardOutcome> = f
                 .shards
                 .into_iter()
                 .map(|s| ShardOutcome {
                     name: s.name,
                     launches: s.dispatcher.launches(),
-                    launched_tasks: s.launched,
                     grows: s.manager.grows(),
                     shrinks: s.manager.shrinks(),
                     peak_leased: s.nodes.peak_leased(),
@@ -865,7 +885,7 @@ impl SchedulerSim {
                 .collect();
             PoolOutcome {
                 launches: shards.iter().map(|s| s.launches).sum(),
-                launched_tasks,
+                recent_launches,
                 grows: shards.iter().map(|s| s.grows).sum(),
                 shrinks: shards.iter().map(|s| s.shrinks).sum(),
                 peak_leased,
@@ -1247,7 +1267,12 @@ mod tests {
         assert!(out.records.iter().all(|r| r.state == TaskState::Done));
         let pool = out.pool.expect("pool outcome present");
         assert_eq!(pool.launches, 8, "every short task went through the pool");
-        assert_eq!(pool.launched_tasks.len(), 8);
+        assert_eq!(pool.recent_launches.len(), 8, "small run fits the debug ring");
+        assert_eq!(
+            out.records.iter().filter(|r| r.pool_shard.is_some()).count(),
+            8,
+            "every record carries its pool-launch tag"
+        );
         assert!(!pool.invariant_violated);
         assert!(pool.peak_leased >= 2 && pool.peak_leased <= 3);
         assert!(out.busy.pool > 0.0, "pool work is accounted");
@@ -1360,6 +1385,7 @@ mod tests {
                 end_t: None,
                 cleanup_t: None,
                 cores: 0,
+                pool_shard: None,
             },
             placement: None,
             priority: 0,

@@ -532,6 +532,64 @@ impl SchedulerSim {
         }
     }
 
+    /// Withdraw a job for cross-scheduler migration: succeed only when
+    /// every task is still parked in a queue (nothing has touched a
+    /// node, no dispatch op is in flight), and then cancel the whole
+    /// job through the same path [`Self::preempt_job`] uses for pending
+    /// tasks. Returns `false` — and changes nothing — if the job has
+    /// not materialized yet, any task already started, or any task is
+    /// mid-dispatch (`Pending`-state but popped from its queue: the
+    /// membership check below is what makes the withdrawal atomic — all
+    /// tasks leave, or none do). The federation gateway calls this
+    /// between lock-step windows and resubmits the withdrawn spec to
+    /// another instance; the donor's records keep the withdrawn tasks
+    /// as zero-length completions at `now`.
+    pub fn withdraw_job(&mut self, now: Time, job: JobId) -> bool {
+        let (first, count) = match self.jobs.get(job as usize) {
+            Some(m) if m.task_count > 0 => (m.first_task, m.task_count),
+            _ => return false,
+        };
+        let all_queued = (first..first + count as TaskId).all(|tid| {
+            self.tasks[tid as usize].record.state == TaskState::Pending
+                && (self.pending.contains(tid)
+                    || self
+                        .pool
+                        .as_ref()
+                        .is_some_and(|p| {
+                            p.fleet.shards.iter().any(|sh| sh.pending.contains(&tid))
+                        }))
+        });
+        if !all_queued {
+            return false;
+        }
+        for tid in first..first + count as TaskId {
+            let removed = self.pending.remove(tid) || self.pool_pending_remove(tid);
+            debug_assert!(removed, "pending task {tid} missing from every queue");
+            let slot = &mut self.tasks[tid as usize];
+            slot.record.state = TaskState::Done;
+            slot.record.start_t = Some(now);
+            slot.record.end_t = Some(now);
+            slot.record.cleanup_t = Some(now);
+            self.not_done -= 1;
+            self.ledger.clear_hold(tid);
+            self.backfill_dirty = true;
+        }
+        true
+    }
+
+    /// Total tasks queued but not yet launched: the batch pending queue
+    /// plus every pool shard's FIFO. The federation gateway reads this
+    /// as each instance's backlog for least-loaded routing and the
+    /// steal trigger.
+    pub fn pending_depth(&self) -> usize {
+        let pool: usize = self
+            .pool
+            .as_ref()
+            .map(|p| p.fleet.shards.iter().map(|s| s.pending.len()).sum())
+            .unwrap_or(0);
+        self.pending.len() + pool
+    }
+
     pub(crate) fn note_backlog(&mut self) {
         if self.completions.len() > self.max_completion_backlog {
             self.max_completion_backlog = self.completions.len();
@@ -694,6 +752,7 @@ impl SchedulerSim {
         slot.record.state = TaskState::Running;
         slot.record.start_t = Some(now);
         slot.record.cores = cores;
+        slot.record.pool_shard = Some(sid);
         slot.pool_node = Some((sid, node));
         let duration = slot.spec.duration;
         let est_end = now + self.task_model.startup + slot.est_duration;

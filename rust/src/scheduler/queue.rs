@@ -133,6 +133,16 @@ impl PendingQueue {
     /// Put a task back at the *front* of its priority bucket (head-of-line
     /// retry after a failed placement). `enqueued_at` must be the entry's
     /// original enqueue time so the retry keeps its aging credit.
+    ///
+    /// With aging on, the re-entry is inserted *in stamp order* rather
+    /// than blindly at the front: a backfill-race requeue can carry a
+    /// younger stamp than the bucket's current head (`pop_where` extracts
+    /// from the middle), and a plain front insert would break the
+    /// oldest-first invariant `best_front`/`scan_order` rely on —
+    /// the acknowledged aging-order hole. The common case (the retry is
+    /// the oldest entry) still lands at the front. Without aging, order
+    /// within a bucket carries no priority meaning, so the historical
+    /// plain front insert is kept bit-for-bit.
     pub fn push_front(&mut self, task: TaskId, priority: i32, enqueued_at: Time) {
         self.len += 1;
         let e = Entry {
@@ -142,7 +152,20 @@ impl PendingQueue {
             enqueued_at,
         };
         match self.buckets.binary_search_by(|(p, _)| priority.cmp(p)) {
-            Ok(i) => self.buckets[i].1.push_front(e),
+            Ok(i) => {
+                let q = &mut self.buckets[i].1;
+                if self.aging.is_some() {
+                    // First slot whose stamp is not older — the retry
+                    // goes ahead of every same-or-younger entry. The
+                    // bucket is non-decreasing in `enqueued_at` (this
+                    // insert rule plus monotone `push` stamps), so a
+                    // binary search is sound.
+                    let pos = q.partition_point(|x| x.enqueued_at < enqueued_at);
+                    q.insert(pos, e);
+                } else {
+                    q.push_front(e);
+                }
+            }
             Err(i) => {
                 let mut q = VecDeque::new();
                 q.push_back(e);
@@ -188,13 +211,12 @@ impl PendingQueue {
     /// `(bucket, position)` pairs in dispatch order — effective priority
     /// descending, higher static priority then FIFO on ties — at most
     /// `max` of them. A k-way merge over bucket cursors: within a bucket
-    /// entries sit oldest-first (head-of-line retries re-enter at the
-    /// front with their original stamp, so a rare backfill-race requeue
-    /// may transiently front a younger entry — the discipline is exact
-    /// everywhere else), so effective priority never increases along a
-    /// cursor and the merge order is globally correct. With no aging
-    /// this degenerates to the static bucket-then-FIFO walk, taken as a
-    /// merge-free fast path.
+    /// entries sit oldest-first (head-of-line retries re-enter in stamp
+    /// order via [`PendingQueue::push_front`]'s ordered insert, so even
+    /// a backfill-race requeue cannot front a younger entry), so
+    /// effective priority never increases along a cursor and the merge
+    /// order is globally correct. With no aging this degenerates to the
+    /// static bucket-then-FIFO walk, taken as a merge-free fast path.
     fn scan_order(&self, now: Time, max: usize) -> Vec<(usize, usize)> {
         if self.aging.is_none() {
             let mut out = Vec::new();
@@ -248,7 +270,22 @@ impl PendingQueue {
         let bi = self.best_front(now)?;
         let e = self.buckets[bi].1.pop_front().expect("best bucket is non-empty");
         self.len -= 1;
+        self.prune(bi);
         Some(e.task)
+    }
+
+    /// Drop bucket `bi` if its deque emptied, so `best_front` and
+    /// `scan_order` never walk dead buckets (a workload with many
+    /// distinct priorities would otherwise accumulate them forever).
+    fn prune(&mut self, bi: usize) {
+        if self.buckets[bi].1.is_empty() {
+            self.buckets.remove(bi);
+        }
+    }
+
+    /// Number of live priority buckets (test / diagnostics hook).
+    pub fn bucket_count(&self) -> usize {
+        self.buckets.len()
     }
 
     /// Pop the first task (effective-priority dispatch order at `now`)
@@ -270,6 +307,7 @@ impl PendingQueue {
             if pred(task) {
                 let _ = self.buckets[bi].1.remove(pos);
                 self.len -= 1;
+                self.prune(bi);
                 return Some(task);
             }
         }
@@ -287,14 +325,25 @@ impl PendingQueue {
 
     /// Remove an arbitrary task (job cancellation); O(n).
     pub fn remove(&mut self, task: TaskId) -> bool {
-        for (_, q) in self.buckets.iter_mut() {
-            if let Some(pos) = q.iter().position(|e| e.task == task) {
-                q.remove(pos);
+        for bi in 0..self.buckets.len() {
+            if let Some(pos) = self.buckets[bi].1.iter().position(|e| e.task == task) {
+                self.buckets[bi].1.remove(pos);
                 self.len -= 1;
+                self.prune(bi);
                 return true;
             }
         }
         false
+    }
+
+    /// Whether the task is currently queued; O(n). The withdraw path
+    /// uses this to prove a job is wholly parked in queues (a task can
+    /// be `Pending`-state yet *out* of every queue while its dispatch
+    /// op is in flight — such a job must not be withdrawn).
+    pub fn contains(&self, task: TaskId) -> bool {
+        self.buckets
+            .iter()
+            .any(|(_, q)| q.iter().any(|e| e.task == task))
     }
 
     pub fn len(&self) -> usize {
@@ -606,6 +655,60 @@ mod tests {
         q.remove(1);
         assert_eq!(q.pop(10.0), Some(1));
         assert_eq!(q.pop(10.0), Some(2));
+    }
+
+    #[test]
+    fn requeue_then_scan_keeps_global_dispatch_order() {
+        // Regression for the aging-order hole: a backfill-race requeue
+        // (`pop_where` extracts from the middle, the placement fails,
+        // `push_front` puts it back) used to land the younger entry at
+        // the bucket front, breaking the oldest-first invariant that
+        // `best_front` and `scan_order`'s k-way merge rely on.
+        let mut q = PendingQueue::new();
+        q.set_aging(Some(AgingPolicy::new(1.0, 100)));
+        q.push(1, 0, 0.0); // old entry, lots of aging credit
+        q.push(2, 0, 8.0); // younger sibling in the same bucket
+        // Backfill pulls the younger entry out of the middle…
+        assert_eq!(q.pop_where(10, 8.0, |t| t == 2), Some(2));
+        // …fails to place it, and requeues it head-of-line.
+        q.push_front(2, 0, 8.0);
+        q.push(3, 3, 6.0); // a third bucket to force a real merge
+        // At t = 10: eff(1) = 0+10, eff(3) = 3+4, eff(2) = 0+2.
+        // The broken front insert hid 1 behind 2, yielding [3, 2, 1]
+        // and popping 3 first.
+        assert_eq!(q.iter_ordered(10.0, 10), vec![1, 3, 2]);
+        assert_eq!(q.pop(10.0), Some(1));
+        assert_eq!(q.pop(10.0), Some(3));
+        assert_eq!(q.pop(10.0), Some(2));
+    }
+
+    #[test]
+    fn emptied_buckets_are_pruned() {
+        // Every removal path (`pop`, `pop_where`, `remove`) must drop a
+        // bucket when it empties; a workload cycling through many
+        // distinct priorities would otherwise leave `best_front` and
+        // `scan_order` walking dead buckets forever.
+        let mut q = PendingQueue::new();
+        for p in 0..32 {
+            q.push(p as u64, p, 0.0);
+        }
+        assert_eq!(q.bucket_count(), 32);
+        // pop drains the highest bucket and prunes it.
+        assert_eq!(q.pop(0.0), Some(31));
+        assert_eq!(q.bucket_count(), 31);
+        // pop_where extracting a bucket's only entry prunes it too.
+        assert_eq!(q.pop_where(64, 0.0, |t| t == 5), Some(5));
+        assert_eq!(q.bucket_count(), 30);
+        // remove (cancellation) likewise.
+        assert!(q.remove(17));
+        assert_eq!(q.bucket_count(), 29);
+        // A multi-entry bucket survives until its last entry leaves.
+        q.push(100, 0, 1.0);
+        assert_eq!(q.bucket_count(), 29);
+        assert_eq!(q.pop(1.0), Some(30));
+        while q.pop(1.0).is_some() {}
+        assert_eq!(q.bucket_count(), 0, "drained queue holds no buckets");
+        assert!(q.is_empty());
     }
 
     #[test]

@@ -439,6 +439,7 @@ impl sim::Actor for SchedulerSim {
                             end_t: None,
                             cleanup_t: None,
                             cores: 0,
+                            pool_shard: None,
                         },
                         placement: None,
                         priority: spec.priority,

@@ -36,6 +36,31 @@ pub fn run_until<A: Actor>(
     (q.now(), processed)
 }
 
+/// Run until the calendar is empty or the next event is at or past
+/// `horizon`. Unlike [`run_until`], events at exactly `horizon` are
+/// *not* processed — the caller owns the boundary instant. The
+/// federation gateway leans on this: each instance advances to just
+/// before a batch boundary, the gateway injects that boundary's
+/// submissions, and only then does the instant play out — so injected
+/// events take the low FIFO sequence numbers at the boundary exactly as
+/// if they had been submitted up front.
+pub fn run_until_before<A: Actor>(
+    actor: &mut A,
+    q: &mut EventQueue<A::Event>,
+    horizon: Time,
+) -> (Time, u64) {
+    let mut processed: u64 = 0;
+    while let Some(t) = q.peek_time() {
+        if t >= horizon {
+            break;
+        }
+        let ev = q.pop().expect("peeked event is live");
+        actor.handle(ev.time, ev.event, q);
+        processed += 1;
+    }
+    (q.now(), processed)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -87,6 +112,23 @@ mod tests {
         // events at 0.0, 1.5, 3.0 processed; 4.5 not.
         assert_eq!(n, 3);
         assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn strict_horizon_excludes_the_boundary_instant() {
+        let mut a = PingPong {
+            count: 0,
+            limit: 100,
+            times: vec![],
+        };
+        let mut q = EventQueue::new();
+        q.at(0.0, ());
+        let (_, n) = run_until_before(&mut a, &mut q, 3.0);
+        // events at 0.0 and 1.5 processed; the one at 3.0 stays queued.
+        assert_eq!(n, 2);
+        assert_eq!(q.len(), 1);
+        let (_, m) = run_until(&mut a, &mut q, 3.0);
+        assert_eq!(m, 1, "the boundary event survives for an inclusive run");
     }
 
     /// M/D/1-style sanity check: Poisson-ish arrivals into a fixed-rate

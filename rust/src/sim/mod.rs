@@ -15,7 +15,7 @@ mod calendar;
 pub mod engine;
 pub mod event;
 
-pub use engine::{run, run_until, Actor};
+pub use engine::{run, run_until, run_until_before, Actor};
 pub use event::{EventQueue, QueueBackend, Scheduled, WakeToken};
 
 /// Virtual time, in seconds. `f64` gives microsecond resolution over the

@@ -135,6 +135,7 @@ fn assert_same_schedule(a: &SimOutcome, b: &SimOutcome, what: &str) -> Result<()
             || x.end_t != y.end_t
             || x.cleanup_t != y.cleanup_t
             || x.cores != y.cores
+            || x.pool_shard != y.pool_shard
         {
             return Err(format!("{what}: task {} diverged: {x:?} vs {y:?}", x.task));
         }
@@ -166,7 +167,7 @@ fn assert_same_schedule(a: &SimOutcome, b: &SimOutcome, what: &str) -> Result<()
         (None, None) => {}
         (Some(p), Some(q)) => {
             if p.launches != q.launches
-                || p.launched_tasks != q.launched_tasks
+                || p.recent_launches != q.recent_launches
                 || p.grows != q.grows
                 || p.shrinks != q.shrinks
                 || p.peak_leased != q.peak_leased

@@ -1,0 +1,271 @@
+//! Property suite for the federation gateway (`llsched::federation`).
+//!
+//! 1. **Pass-through equivalence** — a gateway over a single instance
+//!    with batch size 1 is a pure pass-through: the schedule it produces
+//!    is bit-for-bit the schedule the same sim produces when driven
+//!    directly (same task records, event count, final clock). The
+//!    lock-step `run_until_before` discipline earns its keep here: an
+//!    injected Submit plays exactly as if it had been queued up front.
+//! 2. **Conservation under stealing, fuzzed** — random fleets, batch
+//!    sizes, steal thresholds and job streams: no job is ever lost or
+//!    duplicated across migrations; every job completes exactly once on
+//!    its final owner; steal counters balance.
+//! 3. **Stealing improves tail latency** — 4 × 128-node partitions with
+//!    a skewed mix (three partitions pinned by long whole-machine jobs,
+//!    then a burst of short jobs): work stealing must cut the short-job
+//!    p95 launch latency at least in half vs the same fleet with
+//!    stealing disabled.
+
+use llsched::cluster::Cluster;
+use llsched::federation::{FederationConfig, Gateway};
+use llsched::placement::Strategy;
+use llsched::scheduler::core::{SchedulerSim, SimOutcome};
+use llsched::scheduler::costmodel::CostModel;
+use llsched::scheduler::job::{ComputeBatch, JobSpec, ResourceRequest, SchedTaskSpec};
+use llsched::scheduler::noise::NoiseModel;
+use llsched::sim::EventQueue;
+use llsched::testing::prop::{forall, Gen};
+use llsched::workload::contention::{ContentionMix, JobClass, Submission};
+
+fn quiet_sim(nodes: u32, seed: u64) -> SchedulerSim {
+    SchedulerSim::new(
+        Cluster::tx_green(nodes),
+        CostModel::slurm_like_tx_green(),
+        NoiseModel::dedicated(),
+        seed,
+    )
+    .with_placement(Strategy::NodeBased)
+    .with_backfill(true)
+}
+
+fn fleet(cfg: FederationConfig, nodes_each: u32, seed: u64) -> Gateway {
+    let sims = (0..cfg.instances)
+        .map(|i| quiet_sim(nodes_each, seed.wrapping_add(i as u64)))
+        .collect();
+    Gateway::new(cfg, sims)
+}
+
+fn job(name: &str, tasks: usize, request: ResourceRequest, duration: f64) -> JobSpec {
+    let lanes = match request {
+        ResourceRequest::WholeNode => 64,
+        ResourceRequest::Cores { cores, .. } => cores,
+    };
+    JobSpec {
+        name: name.into(),
+        tasks: vec![
+            SchedTaskSpec {
+                request,
+                duration,
+                batch: ComputeBatch { count: 1, each: duration },
+                lanes,
+            };
+            tasks
+        ],
+        reservation: None,
+        priority: 0,
+        preemptable: false,
+    }
+}
+
+/// Compare two schedules bit for bit (the pass-through contract).
+fn assert_same_schedule(a: &SimOutcome, b: &SimOutcome) -> Result<(), String> {
+    if a.records.len() != b.records.len() {
+        return Err("record count diverged".into());
+    }
+    for (x, y) in a.records.iter().zip(&b.records) {
+        if x.state != y.state
+            || x.start_t != y.start_t
+            || x.end_t != y.end_t
+            || x.cleanup_t != y.cleanup_t
+            || x.cores != y.cores
+            || x.pool_shard != y.pool_shard
+        {
+            return Err(format!("task {} diverged: {x:?} vs {y:?}", x.task));
+        }
+    }
+    if a.events_processed != b.events_processed {
+        return Err(format!(
+            "event count diverged ({} vs {})",
+            a.events_processed, b.events_processed
+        ));
+    }
+    if a.final_time != b.final_time {
+        return Err(format!(
+            "final time diverged ({} vs {})",
+            a.final_time, b.final_time
+        ));
+    }
+    Ok(())
+}
+
+/// Property 1: N = 1, batch = 1 gateway ≡ driving the sim directly.
+#[test]
+fn single_instance_gateway_is_a_passthrough() {
+    for (preset, nodes, seed) in [("tiny", 8u32, 7u64), ("tiny", 8, 42), ("default", 16, 3)] {
+        let mix = ContentionMix::preset(preset, nodes).unwrap();
+        let subs = mix.generate(seed);
+
+        let mut sim = quiet_sim(nodes, seed);
+        let mut q = EventQueue::new();
+        for sub in &subs {
+            sim.submit_at(&mut q, sub.at, sub.spec.clone());
+        }
+        let direct = sim.run(&mut q);
+
+        let out = fleet(FederationConfig::passthrough(), nodes, seed).run(subs);
+        assert_eq!(out.steals, 0, "{preset}/{seed}: nothing to steal from yourself");
+        assert_same_schedule(&direct, &out.outcomes[0])
+            .unwrap_or_else(|e| panic!("{preset}/{seed}: {e}"));
+    }
+}
+
+/// A fuzzed submission stream sized to one partition: every job fits a
+/// `nodes_each`-node instance, so any instance can own any job and the
+/// steal pass is always free to migrate.
+fn fuzzed_stream(g: &mut Gen, nodes_each: u32) -> Vec<Submission> {
+    let n = 8 + g.usize(0, 24);
+    let mut t = 0.0;
+    let mut subs = Vec::with_capacity(n);
+    for i in 0..n {
+        t += g.f64(0.05, 2.5);
+        let whole = g.usize(0, 2) > 0;
+        let request = if whole {
+            ResourceRequest::WholeNode
+        } else {
+            ResourceRequest::Cores { cores: 1u32 << g.int(0, 5), mem_mib: 0 }
+        };
+        let tasks = 1 + g.usize(0, (nodes_each as usize).saturating_sub(1));
+        subs.push(Submission {
+            at: t,
+            class: if i % 2 == 0 { JobClass::Interactive } else { JobClass::Batch },
+            spec: job(
+                &format!("fuzz-{i}"),
+                tasks,
+                request,
+                g.f64(0.2, if whole { 6.0 } else { 15.0 }),
+            ),
+        });
+    }
+    subs
+}
+
+/// Property 2: across random fleets and steal traffic, jobs are
+/// conserved — each completes exactly once, on exactly one instance.
+#[test]
+fn stealing_conserves_jobs_fuzzed() {
+    forall("steal conservation", 12, |g| {
+        let instances = 2 + g.usize(0, 2);
+        let nodes_each = 2 + g.usize(0, 4) as u32;
+        let cfg = FederationConfig {
+            instances,
+            batch: 1 + g.usize(0, 7),
+            flush_interval: [0.5, 1.0][g.usize(0, 1)],
+            steal_threshold: g.usize(0, 6),
+        };
+        let subs = fuzzed_stream(g, nodes_each);
+        let n_jobs = subs.len();
+        let n_tasks: usize = subs.iter().map(|s| s.spec.tasks.len()).sum();
+        let seed = g.int(0, u64::MAX - 1);
+        let out = fleet(cfg, nodes_each, seed).run(subs);
+
+        if out.jobs.len() != n_jobs {
+            return Err(format!("{} jobs in, {} reported", n_jobs, out.jobs.len()));
+        }
+        if out.unfinished != 0 {
+            return Err(format!("{} tasks never finished", out.unfinished));
+        }
+        let reported_tasks: usize = out.jobs.iter().map(|j| j.tasks).sum();
+        if reported_tasks != n_tasks {
+            return Err(format!("{n_tasks} tasks in, {reported_tasks} reported"));
+        }
+        for (i, j) in out.jobs.iter().enumerate() {
+            if j.completed != j.tasks {
+                return Err(format!("job {i}: {}/{} tasks completed", j.completed, j.tasks));
+            }
+            if j.owner >= instances {
+                return Err(format!("job {i}: owner {} out of range", j.owner));
+            }
+            if !(j.latency.is_finite() && j.latency >= 0.0) {
+                return Err(format!("job {i}: bad latency {}", j.latency));
+            }
+        }
+        let owned: usize = out.instances.iter().map(|r| r.jobs).sum();
+        if owned != n_jobs {
+            return Err(format!("ownership double-counts: {owned} vs {n_jobs}"));
+        }
+        let stolen_in: u64 = out.instances.iter().map(|r| r.stolen_in).sum();
+        let stolen_out: u64 = out.instances.iter().map(|r| r.stolen_out).sum();
+        if stolen_in != stolen_out || stolen_in != out.steals {
+            return Err(format!(
+                "steal counters diverge: in {stolen_in}, out {stolen_out}, total {}",
+                out.steals
+            ));
+        }
+        let hops: u64 = out.jobs.iter().map(|j| j.steals as u64).sum();
+        if hops != out.steals {
+            return Err(format!("per-job hops {hops} vs fleet steals {}", out.steals));
+        }
+        Ok(())
+    });
+}
+
+/// The skewed mix for property 3: three of four partitions pinned by a
+/// whole-machine 300 s job, then 160 one-second single-node jobs in one
+/// burst. Least-backlog routing can't see the pinned machines (their
+/// tasks are *running*, not pending), so without stealing ~3/4 of the
+/// burst waits out the blockers.
+fn skewed_mix(nodes_each: u32) -> Vec<Submission> {
+    let mut subs = Vec::new();
+    for b in 0..3 {
+        subs.push(Submission {
+            at: 0.0,
+            class: JobClass::Batch,
+            spec: job(
+                &format!("blocker-{b}"),
+                nodes_each as usize,
+                ResourceRequest::WholeNode,
+                300.0,
+            ),
+        });
+    }
+    for k in 0..160 {
+        subs.push(Submission {
+            at: 30.0,
+            class: JobClass::Interactive,
+            spec: job(&format!("short-{k}"), 1, ResourceRequest::WholeNode, 1.0),
+        });
+    }
+    subs
+}
+
+/// Property 3: on the skewed mix, enabling work stealing at 4 × 128
+/// nodes cuts the short-job p95 launch latency at least in half.
+#[test]
+fn stealing_improves_skewed_p95() {
+    let nodes_each = 128;
+    let run = |steal_threshold: usize| {
+        let cfg = FederationConfig {
+            instances: 4,
+            batch: 1,
+            flush_interval: 1.0,
+            steal_threshold,
+        };
+        fleet(cfg, nodes_each, 17).run(skewed_mix(nodes_each))
+    };
+    let stolen = run(4);
+    let pinned = run(usize::MAX);
+    assert_eq!(pinned.steals, 0, "threshold MAX disables stealing");
+    assert!(stolen.steals > 0, "skew must trigger steals");
+    assert_eq!(stolen.unfinished, 0);
+    assert_eq!(pinned.unfinished, 0);
+    let p95_stolen = stolen.class_latency(JobClass::Interactive).p95;
+    let p95_pinned = pinned.class_latency(JobClass::Interactive).p95;
+    assert!(
+        p95_stolen.is_finite() && p95_pinned.is_finite(),
+        "both runs must start their shorts ({p95_stolen} vs {p95_pinned})"
+    );
+    assert!(
+        p95_stolen <= p95_pinned / 2.0,
+        "stealing must at least halve the skewed p95: {p95_stolen:.1}s vs {p95_pinned:.1}s"
+    );
+}
