@@ -8,10 +8,18 @@
 //!  D. Task-duration skew — node-based max-lane duration under
 //!     log-normal and bimodal distributions (where per-node aggregation
 //!     pays an imbalance cost the constant-time benchmark hides).
+//!
+//! ```bash
+//! cargo bench --bench bench_ablation             # all four sections
+//! cargo bench --bench bench_ablation -- --quick  # CI smoke: skip the
+//!                                                # 512-node sweeps (B, C)
+//! ```
+//!
+//! Results land in `BENCH_ablation.json` at the crate root.
 
 use llsched::aggregation::plan::{Aggregator, ClusterShape};
 use llsched::aggregation::{for_mode, NodeBased};
-use llsched::bench::section;
+use llsched::bench::{has_flag, section, write_artifact};
 use llsched::cluster::Cluster;
 use llsched::config::presets::TASK_CONFIGS;
 use llsched::config::Mode;
@@ -19,6 +27,7 @@ use llsched::scheduler::core::{SchedulerSim, TaskModel};
 use llsched::scheduler::costmodel::CostModel;
 use llsched::scheduler::noise::NoiseModel;
 use llsched::util::fmt::count;
+use llsched::util::json::Json;
 use llsched::workload::paper::PaperCell;
 use llsched::workload::taskgen::TaskGen;
 
@@ -43,12 +52,16 @@ fn quiet_run(nodes: u32, cost: CostModel, job: llsched::scheduler::job::JobSpec)
 }
 
 fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = has_flag(&args, "--quick");
+
     section("A. aggregation granularity (8 nodes, t=30s, T_job=240s)");
     let cell = PaperCell::new(8, TASK_CONFIGS[2], Mode::NodeBased, 0);
     println!(
         "{:<12} {:>16} {:>10} {:>14}",
         "mode", "sched tasks", "runtime", "release span"
     );
+    let mut granularity: Vec<Json> = Vec::new();
     for mode in [Mode::PerTask, Mode::MultiLevel, Mode::NodeBased] {
         let shape = ClusterShape { nodes: 8, cores_per_node: 64, task_mem_mib: 256 };
         let job = for_mode(mode).plan("abl", &cell.workload(), &shape).unwrap();
@@ -61,42 +74,68 @@ fn main() {
             runtime,
             release
         );
+        granularity.push(
+            Json::obj()
+                .set("mode", mode.short())
+                .set("sched_tasks", n)
+                .set("runtime_s", runtime)
+                .set("release_span_s", release),
+        );
     }
 
-    section("B. cleanup array-size coefficient sweep (512 nodes, M*, t=60)");
-    println!("{:<16} {:>12} {:>12}", "coeff (µs/task)", "runtime", "vs paper 2768s");
-    for coeff_us in [0.0, 1.0, 2.15, 4.0, 8.0] {
-        let mut cost = CostModel::slurm_like_tx_green();
-        cost.cleanup_per_array_task = coeff_us * 1e-6;
-        let cell = PaperCell::new(512, TASK_CONFIGS[3], Mode::MultiLevel, 0);
-        let shape = cell.shape();
-        let job = for_mode(Mode::MultiLevel)
-            .plan("abl", &cell.workload(), &shape)
-            .unwrap();
-        let (runtime, _) = quiet_run(512, cost, job);
-        println!("{:<16} {:>11.0}s {:>12.2}x", coeff_us, runtime, runtime / 2768.0);
-    }
+    let mut cleanup_coeff: Vec<Json> = Vec::new();
+    let mut interleave_rows: Vec<Json> = Vec::new();
+    if quick {
+        section("B/C. 512-node M* sweeps — skipped (--quick)");
+    } else {
+        section("B. cleanup array-size coefficient sweep (512 nodes, M*, t=60)");
+        println!("{:<16} {:>12} {:>12}", "coeff (µs/task)", "runtime", "vs paper 2768s");
+        for coeff_us in [0.0, 1.0, 2.15, 4.0, 8.0] {
+            let mut cost = CostModel::slurm_like_tx_green();
+            cost.cleanup_per_array_task = coeff_us * 1e-6;
+            let cell = PaperCell::new(512, TASK_CONFIGS[3], Mode::MultiLevel, 0);
+            let shape = cell.shape();
+            let job = for_mode(Mode::MultiLevel)
+                .plan("abl", &cell.workload(), &shape)
+                .unwrap();
+            let (runtime, _) = quiet_run(512, cost, job);
+            println!("{:<16} {:>11.0}s {:>12.2}x", coeff_us, runtime, runtime / 2768.0);
+            cleanup_coeff.push(
+                Json::obj()
+                    .set("coeff_us_per_task", coeff_us)
+                    .set("runtime_s", runtime)
+                    .set("vs_paper_2768s", runtime / 2768.0),
+            );
+        }
 
-    section("C. cleanup/dispatch interleave (512 nodes, M*, t=60)");
-    println!("{:<14} {:>12} {:>18}", "interleave", "runtime", "dispatch starved?");
-    for interleave in [1u32, 2, 8, 64, u32::MAX] {
-        let mut cost = CostModel::slurm_like_tx_green();
-        cost.cleanup_interleave = interleave;
-        let cell = PaperCell::new(512, TASK_CONFIGS[3], Mode::MultiLevel, 0);
-        let job = for_mode(Mode::MultiLevel)
-            .plan("abl", &cell.workload(), &cell.shape())
-            .unwrap();
-        let (runtime, _) = quiet_run(512, cost, job);
-        println!(
-            "{:<14} {:>11.0}s {:>18}",
-            if interleave == u32::MAX {
+        section("C. cleanup/dispatch interleave (512 nodes, M*, t=60)");
+        println!("{:<14} {:>12} {:>18}", "interleave", "runtime", "dispatch starved?");
+        for interleave in [1u32, 2, 8, 64, u32::MAX] {
+            let mut cost = CostModel::slurm_like_tx_green();
+            cost.cleanup_interleave = interleave;
+            let cell = PaperCell::new(512, TASK_CONFIGS[3], Mode::MultiLevel, 0);
+            let job = for_mode(Mode::MultiLevel)
+                .plan("abl", &cell.workload(), &cell.shape())
+                .unwrap();
+            let (runtime, _) = quiet_run(512, cost, job);
+            let label = if interleave == u32::MAX {
                 "∞ (no cleanup pri)".to_string()
             } else {
                 interleave.to_string()
-            },
-            runtime,
-            if runtime > 1000.0 { "yes" } else { "no" }
-        );
+            };
+            println!(
+                "{:<14} {:>11.0}s {:>18}",
+                label,
+                runtime,
+                if runtime > 1000.0 { "yes" } else { "no" }
+            );
+            interleave_rows.push(
+                Json::obj()
+                    .set("interleave", label)
+                    .set("runtime_s", runtime)
+                    .set("starved", runtime > 1000.0),
+            );
+        }
     }
 
     section("D. task-duration skew and node-based lane imbalance (32 nodes)");
@@ -106,6 +145,7 @@ fn main() {
     );
     let shape = ClusterShape { nodes: 32, cores_per_node: 64, task_mem_mib: 256 };
     let n_tasks = 32 * 64 * 8;
+    let mut skew: Vec<Json> = Vec::new();
     for (name, gen) in [
         ("constant 30s", TaskGen::Constant { seconds: 30.0 }),
         ("lognormal median 30s σ=0.5", TaskGen::LogNormal { median: 30.0, sigma: 0.5 }),
@@ -117,8 +157,25 @@ fn main() {
         let mean_work = w.total_work() / (32.0 * 64.0);
         let max_dur = job.tasks.iter().map(|t| t.duration).fold(0.0, f64::max);
         println!("{:<34} {:>13.1}s {:>15.1}s", name, mean_work, max_dur);
+        skew.push(
+            Json::obj()
+                .set("distribution", name)
+                .set("mean_lane_s", mean_work)
+                .set("max_lane_runtime_s", max_dur),
+        );
     }
     println!("\nconstant-time tasks (the paper's benchmark) have zero imbalance;");
     println!("skewed workloads pay a max-lane premium — the trade node-based");
     println!("scheduling accepts for its 64x scheduler-load reduction.");
+
+    let artifact = Json::obj()
+        .set("bench", "bench_ablation")
+        .set("command", std::env::args().collect::<Vec<_>>().join(" "))
+        .set("quick", quick)
+        .set("granularity", Json::Arr(granularity))
+        .set("cleanup_coeff", Json::Arr(cleanup_coeff))
+        .set("interleave", Json::Arr(interleave_rows))
+        .set("skew", Json::Arr(skew))
+        .set("passed", true);
+    write_artifact("BENCH_ablation.json", &artifact);
 }

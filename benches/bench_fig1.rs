@@ -1,20 +1,33 @@
 //! Bench: regenerate Fig 1 (normalized overhead vs task time, median of
 //! three runs per cell, both scheduling modes, all scales).
+//!
+//! ```bash
+//! cargo bench --bench bench_fig1                        # full matrix
+//! cargo bench --bench bench_fig1 -- --max-nodes 32 --runs 1   # CI smoke
+//! ```
+//!
+//! Results land in `BENCH_fig1.json` at the crate root: one row per
+//! matrix point plus the paper's two structural claims about the
+//! figure (evaluated over whatever slice of the matrix actually ran).
 
+use llsched::bench::{arg_value, write_artifact};
 use llsched::coordinator::experiment::{run_matrix, ExperimentOpts};
 use llsched::metrics::report;
+use llsched::util::json::Json;
 
 fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
     let opts = ExperimentOpts {
         include_na: false,
-        max_nodes: 512,
-        runs: 3,
+        max_nodes: arg_value(&args, "--max-nodes").map(|v| v as u32).unwrap_or(512),
+        runs: arg_value(&args, "--runs").map(|v| v as usize).unwrap_or(3),
         dt: 1.0,
     };
     let t0 = std::time::Instant::now();
     let (points, _) = run_matrix(&opts, |_| {}).expect("matrix runs");
     println!(
-        "Fig 1 — normalized overhead (runtime - T_job)/T_job, medians of 3 ({} cells, {:.1}s wall)\n",
+        "Fig 1 — normalized overhead (runtime - T_job)/T_job, medians of {} ({} cells, {:.1}s wall)\n",
+        opts.runs,
         points.len(),
         t0.elapsed().as_secs_f64()
     );
@@ -22,6 +35,7 @@ fn main() {
         "{:<8} {:>8} {:>6} {:>16} {:>15}",
         "nodes", "t (s)", "mode", "median runtime", "norm overhead"
     );
+    let mut rows: Vec<Json> = Vec::new();
     for p in &points {
         println!(
             "{:<8} {:>8} {:>6} {:>15.1}s {:>15.4}",
@@ -30,6 +44,14 @@ fn main() {
             p.mode.short(),
             p.median_runtime(),
             p.norm_overhead()
+        );
+        rows.push(
+            Json::obj()
+                .set("nodes", p.nodes)
+                .set("task_time_s", p.task_time)
+                .set("mode", p.mode.short())
+                .set("median_runtime_s", p.median_runtime())
+                .set("norm_overhead", p.norm_overhead()),
         );
     }
     println!("\n{}", report::fig1_plot(&points));
@@ -51,4 +73,20 @@ fn main() {
         .filter(|p| p.mode == llsched::config::Mode::MultiLevel)
         .all(|p| p.norm_overhead() > 0.10);
     println!("multi-level cells all above 10%: {multi_over_10pct} (paper: all)");
+
+    let artifact = Json::obj()
+        .set("bench", "bench_fig1")
+        .set("command", std::env::args().collect::<Vec<_>>().join(" "))
+        .set("max_nodes", opts.max_nodes)
+        .set("runs", opts.runs)
+        .set("points", Json::Arr(rows))
+        .set(
+            "claims",
+            Json::obj()
+                .set("node_based_under_10pct", node_based_under_10pct)
+                .set("node_based_total", node_based_total)
+                .set("multi_all_over_10pct", multi_over_10pct),
+        )
+        .set("passed", true);
+    write_artifact("BENCH_fig1.json", &artifact);
 }

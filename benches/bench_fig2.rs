@@ -1,15 +1,27 @@
 //! Bench: regenerate Fig 2 (system utilization over time, median runs)
 //! and report the derived utilization metrics the paper discusses:
 //! time-to-100%, peak utilization, and mean utilization while active.
+//!
+//! ```bash
+//! cargo bench --bench bench_fig2                        # full matrix
+//! cargo bench --bench bench_fig2 -- --max-nodes 32 --runs 1   # CI smoke
+//! ```
+//!
+//! Results land in `BENCH_fig2.json` at the crate root: one row per
+//! median run plus the figure's structural claims (evaluated over
+//! whatever slice of the matrix actually ran).
 
+use llsched::bench::{arg_value, write_artifact};
 use llsched::coordinator::experiment::{fig2_label, median_runs, run_matrix, ExperimentOpts};
 use llsched::metrics::report;
+use llsched::util::json::Json;
 
 fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
     let opts = ExperimentOpts {
         include_na: false,
-        max_nodes: 512,
-        runs: 3,
+        max_nodes: arg_value(&args, "--max-nodes").map(|v| v as u32).unwrap_or(512),
+        runs: arg_value(&args, "--runs").map(|v| v as usize).unwrap_or(3),
         dt: 1.0,
     };
     let t0 = std::time::Instant::now();
@@ -24,6 +36,7 @@ fn main() {
         "{:<14} {:>10} {:>14} {:>12} {:>12}",
         "run", "peak util", "t to 100%", "mean active", "area (s)"
     );
+    let mut rows: Vec<Json> = Vec::new();
     for r in &med {
         let u = &r.utilization;
         println!(
@@ -35,6 +48,17 @@ fn main() {
                 .unwrap_or_else(|| "never".into()),
             u.mean_while_active() * 100.0,
             u.area()
+        );
+        rows.push(
+            Json::obj()
+                .set("run", fig2_label(&r.cell))
+                .set("peak_util", u.peak())
+                .set(
+                    "t_to_full_s",
+                    u.time_to_reach(1.0).map(Json::from).unwrap_or(Json::Null),
+                )
+                .set("mean_active_util", u.mean_while_active())
+                .set("area_s", u.area()),
         );
     }
     // ASCII rendering for the headline cells (512 nodes, t=60).
@@ -65,4 +89,20 @@ fn main() {
     println!(
         "N* runs filling the machine in <30s: {n_fast_fill}/{n_total} (paper: 'almost instantly')"
     );
+
+    let artifact = Json::obj()
+        .set("bench", "bench_fig2")
+        .set("command", std::env::args().collect::<Vec<_>>().join(" "))
+        .set("max_nodes", opts.max_nodes)
+        .set("runs", opts.runs)
+        .set("median_runs", Json::Arr(rows))
+        .set(
+            "claims",
+            Json::obj()
+                .set("m512_never_full", m512_never_full)
+                .set("n_fast_fill", n_fast_fill)
+                .set("n_total", n_total),
+        )
+        .set("passed", true);
+    write_artifact("BENCH_fig2.json", &artifact);
 }

@@ -1,22 +1,36 @@
 //! Microbenchmarks of the hot paths (§Perf L3): DES event queue,
 //! scheduler event throughput, aggregation planning, script generation,
 //! pending-queue ops, and — when artifacts exist — PJRT step latency.
+//!
+//! ```bash
+//! cargo bench --bench bench_micro             # full sweep
+//! cargo bench --bench bench_micro -- --quick  # CI smoke: skip the
+//!                                             # heavy DES cell + PJRT
+//! ```
+//!
+//! Results land in `BENCH_micro.json` at the crate root (the uniform
+//! bench artifact pattern; see `benches/bench_pool.rs`).
 
 use llsched::aggregation::plan::{Aggregator, ClusterShape, Workload};
 use llsched::aggregation::script::build_scripts;
 use llsched::aggregation::{MultiLevel, NodeBased};
-use llsched::bench::{bench, black_box, section, BenchOpts};
+use llsched::bench::{bench, black_box, has_flag, result_row, section, write_artifact, BenchOpts};
 use llsched::cluster::Cluster;
+use llsched::config::presets::TASK_CONFIGS;
 use llsched::config::Mode;
 use llsched::coordinator::experiment::run_cell;
-use llsched::config::presets::TASK_CONFIGS;
 use llsched::scheduler::queue::PendingQueue;
 use llsched::sim::EventQueue;
+use llsched::util::json::Json;
 use llsched::workload::paper::PaperCell;
 use std::time::Duration;
 
 fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = has_flag(&args, "--quick");
     let opts = BenchOpts { warmup: 1, iters: 5, max_wall: Duration::from_secs(30) };
+    let mut rows: Vec<Json> = Vec::new();
+    let mut extras = Json::obj();
 
     section("DES event queue");
     let r = bench("event_queue push+pop 1M", opts, |i| {
@@ -31,26 +45,31 @@ fn main() {
         sum
     });
     println!("{}", r.line());
-    println!(
-        "  → {:.1} M events/s",
-        2.0 / r.summary.p50.max(1e-12) // 1M push + 1M pop
-    );
+    let m_events_per_s = 2.0 / r.summary.p50.max(1e-12); // 1M push + 1M pop
+    println!("  → {m_events_per_s:.1} M events/s");
+    rows.push(result_row("event_queue", &r));
+    extras = extras.set("event_queue_m_events_per_s", m_events_per_s);
 
-    section("scheduler DES throughput (512-node M* cell, the heaviest)");
-    let cell = PaperCell::new(512, TASK_CONFIGS[3], Mode::MultiLevel, 0);
-    let mut events = 0u64;
-    let heavy_opts = BenchOpts { warmup: 0, iters: 3, max_wall: Duration::from_secs(60) };
-    let r = bench("run_cell 512n/60s/M*", heavy_opts, |_| {
-        let res = run_cell(&cell).expect("runs");
-        events = res.events;
-        res.runtime
-    });
-    println!("{}", r.line());
-    println!(
-        "  → {} events, {:.2} M events/s",
-        events,
-        events as f64 / r.summary.p50.max(1e-12) / 1e6
-    );
+    if quick {
+        section("scheduler DES throughput — skipped (--quick)");
+    } else {
+        section("scheduler DES throughput (512-node M* cell, the heaviest)");
+        let cell = PaperCell::new(512, TASK_CONFIGS[3], Mode::MultiLevel, 0);
+        let mut events = 0u64;
+        let heavy_opts = BenchOpts { warmup: 0, iters: 3, max_wall: Duration::from_secs(60) };
+        let r = bench("run_cell 512n/60s/M*", heavy_opts, |_| {
+            let res = run_cell(&cell).expect("runs");
+            events = res.events;
+            res.runtime
+        });
+        println!("{}", r.line());
+        let des_m_events_per_s = events as f64 / r.summary.p50.max(1e-12) / 1e6;
+        println!("  → {events} events, {des_m_events_per_s:.2} M events/s");
+        rows.push(result_row("scheduler_des", &r));
+        extras = extras
+            .set("scheduler_des_events", events)
+            .set("scheduler_des_m_events_per_s", des_m_events_per_s);
+    }
 
     section("aggregation planning (7.9M-task workload)");
     let shape = ClusterShape { nodes: 512, cores_per_node: 64, task_mem_mib: 256 };
@@ -59,21 +78,25 @@ fn main() {
         black_box(MultiLevel.plan("b", &w, &shape).unwrap().array_size())
     });
     println!("{}", r.line());
+    rows.push(result_row("aggregation", &r));
     let r = bench("NodeBased.plan 512 tasks", opts, |_| {
         black_box(NodeBased::default().plan("b", &w, &shape).unwrap().array_size())
     });
     println!("{}", r.line());
+    rows.push(result_row("aggregation", &r));
 
     section("script generation (512 nodes × 64 lanes)");
     let r = bench("build_scripts 7.9M tasks", opts, |_| {
         black_box(build_scripts(7_864_320, 512, 64, 1).len())
     });
     println!("{}", r.line());
+    rows.push(result_row("scripts", &r));
     let scripts = build_scripts(7_864_320, 512, 64, 1);
     let r = bench("render one node script", opts, |_| {
         black_box(scripts[0].render("./sim_task").len())
     });
     println!("{}", r.line());
+    rows.push(result_row("scripts", &r));
 
     section("pending queue (32768 tasks)");
     let r = bench("push+pop 32768", opts, |_| {
@@ -88,6 +111,7 @@ fn main() {
         n
     });
     println!("{}", r.line());
+    rows.push(result_row("pending_queue", &r));
 
     section("cluster placement search (512 nodes)");
     let cluster = Cluster::tx_green(512);
@@ -95,30 +119,47 @@ fn main() {
         black_box(cluster.find_idle_nodes(512, None).len())
     });
     println!("{}", r.line());
+    rows.push(result_row("placement", &r));
     let r = bench("find_core_slots(32768)", opts, |_| {
         black_box(cluster.find_core_slots(32_768, 64, None).len())
     });
     println!("{}", r.line());
+    rows.push(result_row("placement", &r));
 
-    section("PJRT runtime (requires `make artifacts`)");
-    match llsched::runtime::find_artifacts_dir() {
-        Some(dir) => {
-            let rt =
-                llsched::runtime::Runtime::load(&dir.join("simstep_8x32x32.hlo.txt")).unwrap();
-            let state = vec![0.5f32; rt.artifact.elements()];
-            let rt_opts = BenchOpts { warmup: 3, iters: 20, max_wall: Duration::from_secs(20) };
-            let r = bench("simstep_8x32x32 step (4 scan iters)", rt_opts, |_| {
-                black_box(rt.step(&state).unwrap().1)
-            });
-            println!("{}", r.line());
-            let rt = llsched::runtime::Runtime::load(&dir.join("simstep_1x128x128.hlo.txt"))
-                .unwrap();
-            let state = vec![0.5f32; rt.artifact.elements()];
-            let r = bench("simstep_1x128x128 step (4 scan iters)", rt_opts, |_| {
-                black_box(rt.step(&state).unwrap().1)
-            });
-            println!("{}", r.line());
+    if quick {
+        section("PJRT runtime — skipped (--quick)");
+    } else {
+        section("PJRT runtime (requires `make artifacts`)");
+        match llsched::runtime::find_artifacts_dir() {
+            Some(dir) => {
+                let rt =
+                    llsched::runtime::Runtime::load(&dir.join("simstep_8x32x32.hlo.txt")).unwrap();
+                let state = vec![0.5f32; rt.artifact.elements()];
+                let rt_opts = BenchOpts { warmup: 3, iters: 20, max_wall: Duration::from_secs(20) };
+                let r = bench("simstep_8x32x32 step (4 scan iters)", rt_opts, |_| {
+                    black_box(rt.step(&state).unwrap().1)
+                });
+                println!("{}", r.line());
+                rows.push(result_row("pjrt", &r));
+                let rt = llsched::runtime::Runtime::load(&dir.join("simstep_1x128x128.hlo.txt"))
+                    .unwrap();
+                let state = vec![0.5f32; rt.artifact.elements()];
+                let r = bench("simstep_1x128x128 step (4 scan iters)", rt_opts, |_| {
+                    black_box(rt.step(&state).unwrap().1)
+                });
+                println!("{}", r.line());
+                rows.push(result_row("pjrt", &r));
+            }
+            None => println!("  artifacts/ not found — skipped"),
         }
-        None => println!("  artifacts/ not found — skipped"),
     }
+
+    let report = Json::obj()
+        .set("bench", "bench_micro")
+        .set("command", std::env::args().collect::<Vec<_>>().join(" "))
+        .set("quick", quick)
+        .set("results", Json::Arr(rows))
+        .set("derived", extras)
+        .set("passed", true);
+    write_artifact("BENCH_micro.json", &report);
 }

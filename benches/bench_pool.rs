@@ -33,7 +33,7 @@
 //! full trace is at least the projected one. Results land in
 //! `BENCH_pool.json` at the crate root.
 
-use llsched::bench::{bench, black_box, section, BenchOpts};
+use llsched::bench::{arg_value, bench, black_box, section, write_artifact, BenchOpts};
 use llsched::cluster::{Cluster, NodeId};
 use llsched::placement::{PlacementEngine, Strategy};
 use llsched::pool::{FleetConfig, NodeDispatcher, NodePool, PoolConfig, PoolFleet, ShardConfig};
@@ -235,17 +235,6 @@ fn project_quadratic(p1: (usize, f64), p2: (usize, f64), n: usize) -> f64 {
     a * x + b * x * x
 }
 
-/// Parse `--flag value` from argv (panics on malformed input: a bench
-/// invocation error should fail loudly, not silently run the default).
-fn arg_value(args: &[String], flag: &str) -> Option<f64> {
-    args.iter().position(|a| a == flag).map(|i| {
-        args.get(i + 1)
-            .unwrap_or_else(|| panic!("{flag} needs a value"))
-            .parse::<f64>()
-            .unwrap_or_else(|_| panic!("{flag} needs a number"))
-    })
-}
-
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let max_scale = arg_value(&args, "--max-scale").map(|v| v as u32);
@@ -438,11 +427,7 @@ fn main() {
         .set("dispatch", Json::Arr(dispatch_rows))
         .set("trace", Json::Arr(trace_rows))
         .set("passed", !failed);
-    if let Err(e) = std::fs::write("BENCH_pool.json", report.to_pretty()) {
-        eprintln!("warning: could not write BENCH_pool.json: {e}");
-    } else {
-        println!("\nwrote BENCH_pool.json");
-    }
+    write_artifact("BENCH_pool.json", &report);
     if failed {
         std::process::exit(1);
     }

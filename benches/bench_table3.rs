@@ -4,26 +4,38 @@
 //! `examples/paper_tables.rs`); this bench also reports the simulator's
 //! own throughput (DES events/second) per cell, which is the §Perf L3
 //! metric.
+//!
+//! ```bash
+//! cargo bench --bench bench_table3                      # all scales
+//! cargo bench --bench bench_table3 -- --max-nodes 32    # CI smoke
+//! ```
+//!
+//! Results land in `BENCH_table3.json` at the crate root.
 
-use llsched::bench::{bench, section, BenchOpts};
+use llsched::bench::{arg_value, bench, section, write_artifact, BenchOpts};
 use llsched::config::presets::{is_paper_na, NODE_SCALES, TASK_CONFIGS};
 use llsched::config::Mode;
 use llsched::coordinator::experiment::run_cell;
+use llsched::util::json::Json;
 use llsched::workload::paper::PaperCell;
 use std::time::Duration;
 
 fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let max_nodes = arg_value(&args, "--max-nodes").map(|v| v as u32).unwrap_or(u32::MAX);
     section("Table III — runtime per cell (simulated) + DES throughput");
     println!(
         "{:<16} {:>10} {:>12} {:>12} {:>14}",
         "cell", "runtime", "overhead", "sim events", "events/sec"
     );
-    for &nodes in &NODE_SCALES {
+    let mut rows: Vec<Json> = Vec::new();
+    for &nodes in NODE_SCALES.iter().filter(|&&n| n <= max_nodes) {
         for task in &TASK_CONFIGS {
             for mode in [Mode::MultiLevel, Mode::NodeBased] {
+                let label = format!("{}n/{}s/{}", nodes, task.task_time, mode.short());
                 if is_paper_na(nodes, task, mode) {
-                    let label = format!("{}n/{}s/{}", nodes, task.task_time, mode.short());
                     println!("{:<16} {:>10}", label, "N/A");
+                    rows.push(Json::obj().set("cell", label.as_str()).set("na", true));
                     continue;
                 }
                 let cell = PaperCell::new(nodes, *task, mode, 0);
@@ -41,15 +53,31 @@ fn main() {
                     },
                 );
                 let wall = r.summary.mean;
+                let events_per_s = events as f64 / wall.max(1e-9);
                 println!(
                     "{:<16} {:>9.0}s {:>11.0}s {:>12} {:>14.0}",
                     cell.label(),
                     runtime,
                     overhead,
                     events,
-                    events as f64 / wall.max(1e-9)
+                    events_per_s
+                );
+                rows.push(
+                    Json::obj()
+                        .set("cell", cell.label())
+                        .set("runtime_s", runtime)
+                        .set("overhead_s", overhead)
+                        .set("events", events)
+                        .set("wall_s", wall)
+                        .set("events_per_s", events_per_s),
                 );
             }
         }
     }
+    let artifact = Json::obj()
+        .set("bench", "bench_table3")
+        .set("command", std::env::args().collect::<Vec<_>>().join(" "))
+        .set("cells", Json::Arr(rows))
+        .set("passed", true);
+    write_artifact("BENCH_table3.json", &artifact);
 }

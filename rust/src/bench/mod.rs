@@ -4,6 +4,7 @@
 //!-clock budgets, and a uniform report format used by every bench binary
 //! under `benches/`.
 
+use crate::util::json::Json;
 use crate::util::stats::Summary;
 use std::time::{Duration, Instant};
 
@@ -105,6 +106,44 @@ pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// Parse `--flag value` from argv (panics on malformed input: a bench
+/// invocation error should fail loudly, not silently run the default).
+pub fn arg_value(args: &[String], flag: &str) -> Option<f64> {
+    args.iter().position(|a| a == flag).map(|i| {
+        args.get(i + 1)
+            .unwrap_or_else(|| panic!("{flag} needs a value"))
+            .parse::<f64>()
+            .unwrap_or_else(|_| panic!("{flag} needs a number"))
+    })
+}
+
+/// Whether a bare `--flag` switch is present in argv.
+pub fn has_flag(args: &[String], flag: &str) -> bool {
+    args.iter().any(|a| a == flag)
+}
+
+/// One measurement as a `BENCH_*.json` artifact row (times in seconds).
+pub fn result_row(section: &str, r: &BenchResult) -> Json {
+    Json::obj()
+        .set("section", section)
+        .set("name", r.name.as_str())
+        .set("mean_s", r.summary.mean)
+        .set("p50_s", r.summary.p50)
+        .set("iters", r.summary.n)
+}
+
+/// Write a `BENCH_*.json` report at the crate root — the uniform bench
+/// artifact pattern (`bench`, `command`, result sections, `passed`).
+/// Failure to write is a warning, not an error: the measurements on
+/// stdout are the primary output.
+pub fn write_artifact(path: &str, report: &Json) {
+    if let Err(e) = std::fs::write(path, report.to_pretty()) {
+        eprintln!("warning: could not write {path}: {e}");
+    } else {
+        println!("\nwrote {path}");
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -138,6 +177,25 @@ mod tests {
         let line = r.line();
         assert!(line.contains("fmt"));
         assert!(line.contains("n="));
+    }
+
+    #[test]
+    fn argv_helpers_parse() {
+        let args: Vec<String> =
+            ["--max-nodes", "64", "--quick"].iter().map(|s| s.to_string()).collect();
+        assert_eq!(arg_value(&args, "--max-nodes"), Some(64.0));
+        assert_eq!(arg_value(&args, "--runs"), None);
+        assert!(has_flag(&args, "--quick"));
+        assert!(!has_flag(&args, "--verbose"));
+    }
+
+    #[test]
+    fn result_row_carries_summary() {
+        let r = bench("rowed", BenchOpts::default(), |_| 1 + 1);
+        let row = result_row("sec", &r).to_pretty();
+        assert!(row.contains("\"section\": \"sec\""));
+        assert!(row.contains("\"name\": \"rowed\""));
+        assert!(row.contains("\"p50_s\":"));
     }
 
     #[test]

@@ -135,6 +135,11 @@ pub struct RunConfig {
     /// instances, each owning a disjoint cluster partition
     /// ([`crate::federation`]). `None` = the classic single scheduler.
     pub federation: Option<crate::federation::FederationConfig>,
+    /// Flight-recorder ring capacity in events (`trace_cap = 65536`):
+    /// trace scheduler decisions into a bounded ring for the Perfetto /
+    /// decision-log exporters ([`crate::obs`]). `0` (the default)
+    /// leaves the recorder out entirely — zero overhead.
+    pub trace_cap: usize,
 }
 
 impl Default for RunConfig {
@@ -165,6 +170,7 @@ impl Default for RunConfig {
             fault_straggler_prob: 0.0,
             fault_straggler_factor: 1.0,
             federation: None,
+            trace_cap: 0,
         }
     }
 }
@@ -327,6 +333,15 @@ impl RunConfig {
         }
         if let Some(v) = run.get("federation") {
             c.federation = Some(federation_from_value(v)?);
+        }
+        if let Some(v) = run.get("trace_cap") {
+            // Range-check before the usize cast: a negative capacity
+            // must be a config error, not a wrap to a huge ring.
+            let cap = v.as_int()?;
+            if cap < 0 {
+                return Err(Error::Config(format!("trace_cap must be >= 0, got {cap}")));
+            }
+            c.trace_cap = cap as usize;
         }
         if let Some(v) = run.get("pools") {
             // Key *presence* is what conflicts — an explicitly written
@@ -681,6 +696,16 @@ mod tests {
         assert!(RunConfig::from_value(&bad).is_err(), "zero mttr rejected");
         let bad = parser::parse("[run]\nfault_straggler_prob = 1.5\n").unwrap();
         assert!(RunConfig::from_value(&bad).is_err(), "prob > 1 rejected");
+    }
+
+    #[test]
+    fn trace_cap_key_parses_and_validates() {
+        let c = RunConfig::from_value(&parser::parse("[run]\n").unwrap()).unwrap();
+        assert_eq!(c.trace_cap, 0, "recorder off by default");
+        let v = parser::parse("[run]\ntrace_cap = 65536\n").unwrap();
+        assert_eq!(RunConfig::from_value(&v).unwrap().trace_cap, 65536);
+        let bad = parser::parse("[run]\ntrace_cap = -1\n").unwrap();
+        assert!(RunConfig::from_value(&bad).is_err(), "negative cap rejected");
     }
 
     #[test]

@@ -84,6 +84,9 @@ pub fn cell(nodes: u32, task: &TaskConfig, mode: Mode, run_idx: usize) -> RunCon
         fault_mttr: 30.0,
         fault_straggler_prob: 0.0,
         fault_straggler_factor: 1.0,
+        // The flight recorder is opt-in tooling; the paper matrix runs
+        // with the recorder (and its exporters) fully absent.
+        trace_cap: 0,
     }
 }
 

@@ -12,6 +12,7 @@ use crate::federation::{FederationConfig, FederationOutcome, Gateway};
 use crate::metrics::contention::{per_class, pool_report, ClassReport, PoolReport};
 use crate::metrics::overhead::OverheadPoint;
 use crate::metrics::timeline::UtilizationSeries;
+use crate::obs::{Obs, ObsSnapshot, Subsystem};
 use crate::placement::Strategy;
 use crate::pool::{FleetConfig, PoolConfig, ShardConfig};
 use crate::scheduler::core::{HotPath, SchedulerSim, SimOutcome, TaskModel};
@@ -48,6 +49,9 @@ pub struct CellResult {
     pub placement: Strategy,
     /// DES events processed (engine throughput accounting).
     pub events: u64,
+    /// Flight-recorder snapshot (`None` unless the config set
+    /// `trace_cap > 0`).
+    pub obs: Option<ObsSnapshot>,
 }
 
 /// Options for matrix runs.
@@ -87,7 +91,7 @@ pub fn run_cell(cell: &PaperCell) -> Result<CellResult> {
         NoiseModel::production()
     };
     let placement = cfg.placement_strategy();
-    let sim = SchedulerSim::new(cluster, CostModel::slurm_like_tx_green(), noise, cfg.seed)
+    let mut sim = SchedulerSim::new(cluster, CostModel::slurm_like_tx_green(), noise, cfg.seed)
         .with_placement(placement)
         .with_backfill(cfg.backfill)
         .with_holds(cfg.holds)
@@ -96,6 +100,9 @@ pub fn run_cell(cell: &PaperCell) -> Result<CellResult> {
         .with_fleet(cfg.fleet_config())
         .with_preempt_overdue(cfg.preempt_overdue)
         .with_faults(cfg.fault_config());
+    if cfg.trace_cap > 0 {
+        sim = sim.with_recorder(Box::new(Obs::new(cfg.trace_cap)));
+    }
     let agg = aggregation::for_mode(cfg.mode);
     let job = agg.plan(&cell.label(), &cell.workload(), &cell.shape())?;
     let (outcome, job_id) = sim.run_single(job);
@@ -127,6 +134,7 @@ fn summarize(
         unusable_in_production: outcome.unusable_in_production(),
         placement,
         events: outcome.events_processed,
+        obs: outcome.obs.clone(),
         cell,
     })
 }
@@ -180,6 +188,14 @@ pub struct ContentionOpts {
     /// Fault & churn injection (disabled = the historical fault-free
     /// path, bit-for-bit — pinned by `rust/tests/fault_properties.rs`).
     pub fault: FaultConfig,
+    /// Flight-recorder ring capacity, in events. `0` (the default)
+    /// leaves the recorder out entirely — the dispatch hot path keeps
+    /// its historical shape (pinned by `rust/tests/obs_properties.rs`).
+    pub trace_cap: usize,
+    /// Self-profile the dispatch loop (host-side `pick_next` timing).
+    /// Only meaningful with `trace_cap > 0`; wall-clock, so excluded
+    /// from the byte-determinism guarantees.
+    pub trace_profile: bool,
     pub seed: u64,
 }
 
@@ -198,8 +214,24 @@ impl ContentionOpts {
             preempt_overdue: false,
             hot_path: HotPath::default(),
             fault: FaultConfig::disabled(),
+            trace_cap: 0,
+            trace_profile: false,
             seed,
         }
+    }
+
+    /// Build the flight recorder this run asks for (`None` when
+    /// `trace_cap` is 0). `pid` labels the recorder's process lane in
+    /// merged/federated exports.
+    fn recorder(&self, pid: u32) -> Option<Box<Obs>> {
+        if self.trace_cap == 0 {
+            return None;
+        }
+        let mut obs = Obs::new(self.trace_cap).with_pid(pid);
+        if self.trace_profile {
+            obs = obs.with_profiling();
+        }
+        Some(Box::new(obs))
     }
 
     /// The fleet this run installs: the explicit shard list when
@@ -265,6 +297,9 @@ pub struct ContentionResult {
     /// Federation rollup (`None` for classic single-scheduler runs —
     /// the v5 export switch).
     pub federation: Option<FederationRunSummary>,
+    /// Flight-recorder snapshot (`None` when `opts.trace_cap == 0` —
+    /// the v6 export switch).
+    pub obs: Option<ObsSnapshot>,
 }
 
 /// The federated slice of one contention run: the gateway knobs plus
@@ -322,6 +357,9 @@ pub fn run_contention_with(
     .with_preempt_overdue(opts.preempt_overdue)
     .with_hot_path(opts.hot_path)
     .with_faults(opts.fault.clone());
+    if let Some(obs) = opts.recorder(0) {
+        sim = sim.with_recorder(obs);
+    }
     let mut q = EventQueue::new();
     let subs = mix.generate(seed);
     if subs.is_empty() {
@@ -386,6 +424,7 @@ pub fn run_contention_with(
         fault: outcome.fault,
         unfinished,
         federation: None,
+        obs: outcome.obs,
     })
 }
 
@@ -416,7 +455,7 @@ pub fn run_contention_federated(
     let total_cores = Cluster::tx_green(mix.nodes).total_cores();
     let sims: Vec<SchedulerSim> = (0..fed.instances)
         .map(|i| {
-            SchedulerSim::new(
+            let mut sim = SchedulerSim::new(
                 Cluster::tx_green(per_nodes),
                 CostModel::slurm_like_tx_green(),
                 NoiseModel::dedicated(),
@@ -430,7 +469,11 @@ pub fn run_contention_federated(
             .with_fleet(opts.fleet_config())
             .with_preempt_overdue(opts.preempt_overdue)
             .with_hot_path(opts.hot_path)
-            .with_faults(opts.fault.clone())
+            .with_faults(opts.fault.clone());
+            if let Some(obs) = opts.recorder(i as u32) {
+                sim = sim.with_recorder(obs);
+            }
+            sim
         })
         .collect();
     let subs = mix.generate(opts.seed);
@@ -440,7 +483,14 @@ pub fn run_contention_federated(
             mix.name
         )));
     }
-    let out = Gateway::new(fed, sims).run(subs);
+    // The gateway's own recorder takes the process lane after the last
+    // instance, so merged exports keep one lane per actor.
+    let gw_pid = fed.instances as u32;
+    let mut gw = Gateway::new(fed, sims);
+    if let Some(obs) = opts.recorder(gw_pid) {
+        gw = gw.with_recorder(obs);
+    }
+    let out = gw.run(subs);
     let reports = federation_class_reports(&out, total_cores);
     let utilization: f64 = reports.iter().map(|r| r.utilization).sum();
     Ok(ContentionResult {
@@ -471,6 +521,7 @@ pub fn run_contention_federated(
             batches: out.batches,
             p95_latency: out.latency.p95,
         }),
+        obs: out.obs,
         opts,
     })
 }
@@ -807,6 +858,19 @@ const CONTENTION_SCHEMA_V5_EXTRA: [&str; 6] = [
     "fed_p95_latency_s",
 ];
 
+/// The v6 column extension: flight-recorder counters. Emitted only when
+/// some result actually ran with the recorder on (`trace_cap > 0`);
+/// recorder-off rows in a mixed v6 document zero-fill every cell.
+const CONTENTION_SCHEMA_V6_EXTRA: [&str; 7] = [
+    "obs_events",
+    "obs_dropped",
+    "obs_sched_events",
+    "obs_backfill_events",
+    "obs_pool_events",
+    "obs_fault_events",
+    "obs_fed_events",
+];
+
 /// Per-class contention series as CSV (one row per scenario × class),
 /// mirroring `fig1 --out`: the `contention --out DIR` data dump.
 /// Classic runs export the v1 schema exactly; any pool or preemptive-
@@ -814,7 +878,8 @@ const CONTENTION_SCHEMA_V5_EXTRA: [&str; 6] = [
 /// pool/preemption extension); any multi-shard fleet switches it to v3
 /// (v2 columns + the shard extension and per-shard rows); any fault-
 /// injected run switches it to v4 (+ the churn counter extension); any
-/// federated run switches it to v5 (+ the gateway extension).
+/// federated run switches it to v5 (+ the gateway extension); any
+/// recorder-on run switches it to v6 (+ the flight-recorder counters).
 pub fn contention_csv(results: &[ContentionResult]) -> Csv {
     let extended = results
         .iter()
@@ -822,6 +887,7 @@ pub fn contention_csv(results: &[ContentionResult]) -> Csv {
     let sharded = results.iter().any(|r| r.opts.fleet_sharded());
     let faulted = results.iter().any(|r| r.opts.fault_enabled());
     let federated = results.iter().any(|r| r.federation.is_some());
+    let traced = results.iter().any(|r| r.obs.is_some());
     let mut header: Vec<&str> = CONTENTION_SCHEMA_V1.to_vec();
     if extended {
         header.extend(CONTENTION_SCHEMA_V2_EXTRA);
@@ -834,6 +900,9 @@ pub fn contention_csv(results: &[ContentionResult]) -> Csv {
     }
     if federated {
         header.extend(CONTENTION_SCHEMA_V5_EXTRA);
+    }
+    if traced {
+        header.extend(CONTENTION_SCHEMA_V6_EXTRA);
     }
     let mut c = Csv::with_header(&header);
     for r in results {
@@ -916,6 +985,24 @@ pub fn contention_csv(results: &[ContentionResult]) -> Csv {
                 row.push(String::new());
             }
         };
+        // The v6 flight-recorder extension: run-level counters (total
+        // recorded, ring drops, per-subsystem rollup), identical on
+        // every row of the scenario (zero-filled on recorder-off rows
+        // in a mixed document).
+        let obs_cols = |row: &mut Vec<String>| match &r.obs {
+            Some(o) => {
+                row.push(o.total_events().to_string());
+                row.push(o.dropped.to_string());
+                for sub in Subsystem::ALL {
+                    row.push(o.registry.subsystem_total(sub).to_string());
+                }
+            }
+            None => {
+                for _ in 0..7 {
+                    row.push("0".into());
+                }
+            }
+        };
         for rep in &r.reports {
             let mut row = prefix([
                 rep.class.to_string(),
@@ -953,6 +1040,9 @@ pub fn contention_csv(results: &[ContentionResult]) -> Csv {
             }
             if federated {
                 fed_cols(&mut row);
+            }
+            if traced {
+                obs_cols(&mut row);
             }
             c.row(&row);
         }
@@ -992,6 +1082,9 @@ pub fn contention_csv(results: &[ContentionResult]) -> Csv {
                     }
                     if federated {
                         fed_cols(&mut row);
+                    }
+                    if traced {
+                        obs_cols(&mut row);
                     }
                     c.row(&row);
                 }
@@ -1096,6 +1189,20 @@ pub fn contention_json(results: &[ContentionResult]) -> Json {
                     .set("steals", fed.steals)
                     .set("p95_latency_s", fed.p95_latency);
                 run = run.set("federation", federation);
+            }
+            if let Some(o) = &r.obs {
+                let subsystems = Subsystem::ALL.iter().fold(Json::obj(), |acc, &sub| {
+                    acc.set(sub.name(), o.registry.subsystem_total(sub))
+                });
+                run = run.set(
+                    "obs",
+                    Json::obj()
+                        .set("trace_cap", r.opts.trace_cap)
+                        .set("events", o.total_events())
+                        .set("retained", o.events.len())
+                        .set("dropped", o.dropped)
+                        .set("subsystems", subsystems),
+                );
             }
             run.set("classes", Json::Arr(classes))
         })
@@ -1689,6 +1796,69 @@ mod tests {
         assert!(
             lines[1].ends_with(",0,0,0,0,0,"),
             "single-scheduler rows zero-fill the v5 extension: {}",
+            lines[1]
+        );
+    }
+
+    #[test]
+    fn traced_contention_exports_v6_schema() {
+        // A recorder-on run flips the export to v6: the v1 columns
+        // verbatim, then the flight-recorder counters. Two identical
+        // runs serialize byte-for-byte (the recorder is deterministic
+        // and observes without steering).
+        let mix = ContentionMix::preset("tiny", 8).unwrap();
+        let opts = || ContentionOpts {
+            trace_cap: 4096,
+            ..ContentionOpts::classic(true, 42)
+        };
+        let a = run_contention_with(&mix, opts()).unwrap();
+        let b = run_contention_with(&mix, opts()).unwrap();
+        let obs = a.obs.as_ref().expect("recorder-on run carries a snapshot");
+        assert!(obs.total_events() > 0, "a tiny mix still records decisions");
+        assert_eq!(
+            obs.total_events(),
+            obs.events.len() as u64 + obs.dropped,
+            "registry total = retained + dropped"
+        );
+        let csv_a = contention_csv(std::slice::from_ref(&a));
+        let csv_b = contention_csv(std::slice::from_ref(&b));
+        assert_eq!(csv_a.as_str(), csv_b.as_str(), "traced export must be deterministic");
+        let lines: Vec<&str> = csv_a.as_str().lines().collect();
+        assert_eq!(
+            lines[0],
+            "scenario,nodes,backfill,holds,aging,walltime_error,class,jobs,tasks,\
+             completed,median_latency_s,p95_latency_s,max_latency_s,starvation_age_s,\
+             core_seconds,utilization,span_s,backfills,max_active_holds,\
+             obs_events,obs_dropped,obs_sched_events,obs_backfill_events,\
+             obs_pool_events,obs_fault_events,obs_fed_events",
+            "v6 golden header (traced-only run: v1 + v6 extension)"
+        );
+        let header_cols = lines[0].split(',').count();
+        for line in &lines[1..] {
+            assert_eq!(line.split(',').count(), header_cols, "row width matches header");
+        }
+        let json = contention_json(std::slice::from_ref(&a)).to_pretty();
+        for key in [
+            "\"obs\":",
+            "\"trace_cap\": 4096",
+            "\"subsystems\":",
+            "\"scheduler\":",
+        ] {
+            assert!(json.contains(key), "json missing {key}");
+        }
+        // The recorder observes; it never steers. The recorder-off run
+        // with the same seed must produce the identical schedule.
+        let classic = run_contention_with(&mix, ContentionOpts::classic(true, 42)).unwrap();
+        assert!(classic.obs.is_none());
+        assert_eq!(a.span.to_bits(), classic.span.to_bits(), "recorder must not steer");
+        // A mixed export (recorder-off + recorder-on) zero-fills the
+        // recorder columns on the recorder-off rows.
+        let both = contention_csv(&[classic, a]);
+        let lines: Vec<&str> = both.as_str().lines().collect();
+        assert!(lines[0].ends_with("obs_fed_events"));
+        assert!(
+            lines[1].ends_with(",0,0,0,0,0,0,0"),
+            "recorder-off rows zero-fill the v6 extension: {}",
             lines[1]
         );
     }

@@ -3,6 +3,7 @@
 
 use std::collections::VecDeque;
 
+use crate::obs::{Obs, ObsSnapshot, TraceKind};
 use crate::scheduler::{JobId, JobSpec, SchedEvent, SchedulerSim};
 use crate::sim::{self, EventQueue, Time};
 use crate::workload::contention::Submission;
@@ -60,6 +61,9 @@ pub struct Gateway {
     rr: usize,
     steals: u64,
     batches: u64,
+    /// Gateway-side flight recorder (routing, flushes, steal traffic).
+    /// `None` keeps every trace site down to a single branch.
+    obs: Option<Box<Obs>>,
 }
 
 impl Gateway {
@@ -96,6 +100,23 @@ impl Gateway {
             rr: 0,
             steals: 0,
             batches: 0,
+            obs: None,
+        }
+    }
+
+    /// Install a gateway-side flight recorder. Per-instance recorders
+    /// are installed on the sims before construction; [`Gateway::run`]
+    /// merges every part into one fleet-wide snapshot on the outcome.
+    pub fn with_recorder(mut self, obs: Box<Obs>) -> Gateway {
+        self.obs = Some(obs);
+        self
+    }
+
+    /// Record one gateway flight-recorder event (no-op when off).
+    #[inline]
+    fn trace(&mut self, kind: TraceKind, unit: u32, id: u64, t: Time, detail: i64) {
+        if let Some(o) = self.obs.as_mut() {
+            o.record(kind, unit, id, t, detail);
         }
     }
 
@@ -192,6 +213,7 @@ impl Gateway {
             inst_job: 0,
             steals: 0,
         });
+        self.trace(TraceKind::GatewayRoute, best as u32, idx as u64, now, best_load as i64);
         let inst = &mut self.insts[best];
         inst.routed += 1;
         inst.buf.push(idx);
@@ -208,6 +230,7 @@ impl Gateway {
         }
         let buf = std::mem::take(&mut self.insts[i].buf);
         self.insts[i].buf_tasks = 0;
+        let flushed = buf.len();
         for idx in buf {
             let spec = self.jobs[idx].spec.clone();
             let inst = &mut self.insts[i];
@@ -217,6 +240,8 @@ impl Gateway {
         }
         self.insts[i].batches += 1;
         self.batches += 1;
+        let batch_ord = self.insts[i].batches;
+        self.trace(TraceKind::GatewayFlush, i as u32, batch_ord, t, flushed as i64);
     }
 
     /// One steal pass at a tick boundary: while the deepest backlog
@@ -271,6 +296,7 @@ impl Gateway {
             }
             let inst_job = self.jobs[idx].inst_job;
             if !self.insts[donor].sim.withdraw_job(t, inst_job) {
+                self.trace(TraceKind::StealRefused, donor as u32, idx as u64, t, recv as i64);
                 continue;
             }
             let spec = self.jobs[idx].spec.clone();
@@ -284,6 +310,7 @@ impl Gateway {
             self.jobs[idx].inst_job = id;
             self.jobs[idx].steals += 1;
             self.steals += 1;
+            self.trace(TraceKind::StealAttempt, donor as u32, idx as u64, t, recv as i64);
             return Some(moved);
         }
         None
@@ -297,8 +324,16 @@ impl Gateway {
             jobs,
             steals,
             batches,
+            mut obs,
             ..
         } = self;
+        if let Some(o) = obs.as_mut() {
+            // Steal-hop distribution is a fleet-level fact, so the
+            // gateway's registry owns it.
+            for gj in &jobs {
+                o.registry.steal_hops.observe(f64::from(gj.steals));
+            }
+        }
         let mut outcomes = Vec::with_capacity(insts.len());
         let mut inst_stats = Vec::with_capacity(insts.len());
         for (i, inst) in insts.into_iter().enumerate() {
@@ -393,6 +428,20 @@ impl Gateway {
         } else {
             0.0
         };
+        // Merge the gateway recorder with every per-instance snapshot
+        // into one fleet-wide, time-ordered view. `None` when nothing
+        // in the fleet recorded.
+        let gateway_snap = obs.map(|o| o.snapshot());
+        let mut parts: Vec<&ObsSnapshot> = Vec::new();
+        if let Some(s) = gateway_snap.as_ref() {
+            parts.push(s);
+        }
+        parts.extend(outcomes.iter().filter_map(|o| o.obs.as_ref()));
+        let obs = if parts.is_empty() {
+            None
+        } else {
+            Some(ObsSnapshot::merge(parts))
+        };
         FederationOutcome {
             config: cfg,
             latency: LatencySummary::of(&all_lats),
@@ -404,6 +453,7 @@ impl Gateway {
             span,
             unfinished,
             outcomes,
+            obs,
         }
     }
 }

@@ -2,6 +2,7 @@
 //! launch-latency quantiles, routing/steal counters, and the raw
 //! per-instance [`SimOutcome`]s for anyone who needs the full records.
 
+use crate::obs::ObsSnapshot;
 use crate::scheduler::SimOutcome;
 use crate::sim::Time;
 use crate::util::stats;
@@ -107,6 +108,10 @@ pub struct FederationOutcome {
     /// The raw per-instance outcomes (instance order), for consumers
     /// that need full records — e.g. the per-class contention rollup.
     pub outcomes: Vec<SimOutcome>,
+    /// Fleet-wide flight-recorder snapshot: the gateway's own recorder
+    /// merged with every per-instance one, time-ordered. `None` when
+    /// nothing in the fleet recorded.
+    pub obs: Option<ObsSnapshot>,
 }
 
 impl FederationOutcome {

@@ -20,9 +20,11 @@
 //!   [`spot`].
 //! * **Workloads & metrics** — the paper's Table I/II benchmark matrix
 //!   ([`workload`]), utilization timelines, overhead metrics and
-//!   paper-style reports ([`metrics`]), plus a fault-injection and
+//!   paper-style reports ([`metrics`]), a fault-injection and
 //!   churn layer ([`fault`]) with a deterministic audit log so failure
-//!   scenarios replay bit-for-bit from a seed.
+//!   scenarios replay bit-for-bit from a seed, and a scheduler flight
+//!   recorder ([`obs`]) tracing individual dispatch decisions into
+//!   Perfetto-loadable exports.
 //! * **Real execution** — a PJRT runtime ([`runtime`]) that loads the
 //!   AOT-compiled JAX/Pallas artifacts, and a pinned-thread executor
 //!   ([`exec`]) so scheduled tasks can run *real* compute payloads.
@@ -42,6 +44,7 @@ pub mod fault;
 pub mod federation;
 pub mod lltools;
 pub mod metrics;
+pub mod obs;
 pub mod placement;
 pub mod pool;
 pub mod runtime;

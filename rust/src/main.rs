@@ -27,6 +27,7 @@ use llsched::fault::scenario::ChurnScenario;
 use llsched::fault::FaultConfig;
 use llsched::metrics::overhead::speedup;
 use llsched::metrics::report;
+use llsched::obs::{decision_log, perfetto_json, profile_lines, Subsystem};
 use llsched::placement::Strategy;
 use llsched::pool::{PoolConfig, ShardConfig};
 use llsched::scheduler::queue::AgingPolicy;
@@ -78,6 +79,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "pool" => cmd_pool(args),
         "churn" => cmd_churn(args),
         "federate" => cmd_federate(args),
+        "trace" => cmd_trace(args),
         "spot" => cmd_spot(args),
         "artifacts" => cmd_artifacts(args),
         other => {
@@ -172,6 +174,28 @@ commands:
                             plus the sustained-rate gain; --out writes
                             the v5 per-class CSV/JSON (or the sweep
                             JSON under --compare)
+  trace [--preset P] [--nodes N] [--seed S] [--instances I]
+        [--trace-cap N] [--trace-filter SUB] [--trace-out DIR]
+        [--format F] [--profile] [--no-pool]
+                            run one scenario with the scheduler flight
+                            recorder on and export the decision trace:
+                            P is any contention or churn preset
+                            (default burst); --instances > 1 runs the
+                            scenario through the federated gateway
+                            fleet; the ring keeps the latest
+                            --trace-cap records (default 65536);
+                            --trace-filter keeps one subsystem
+                            (scheduler|backfill|pool|fault|federation);
+                            --format perfetto|log|both (default both)
+                            writes trace.json (Chrome/Perfetto trace
+                            viewer format) and trace.log (plain-text
+                            decision log) under --trace-out (default
+                            results); --profile additionally times
+                            pick_next on the host and reports it
+                            against the cost model's simulated charge;
+                            --no-pool traces the batch-only path; see
+                            docs/observability.md for the event
+                            vocabulary
   spot [--nodes N]          spot-job release-latency comparison
   artifacts                 verify AOT artifacts load and execute
 ";
@@ -324,6 +348,14 @@ fn cmd_run(args: &Args) -> Result<()> {
     println!("  release span   {}", dur(res.release_span));
     println!("  peak util      {:.1}%", res.utilization.peak() * 100.0);
     println!("  busy stretch   {}", dur(res.longest_busy_stretch));
+    if let Some(o) = &res.obs {
+        println!(
+            "  trace          {} events recorded ({} retained, {} dropped)",
+            o.total_events(),
+            o.events.len(),
+            o.dropped
+        );
+    }
     Ok(())
 }
 
@@ -489,6 +521,8 @@ fn cmd_contention(args: &Args) -> Result<()> {
         preempt_overdue,
         hot_path: llsched::scheduler::HotPath::default(),
         fault: FaultConfig::disabled(),
+        trace_cap: 0,
+        trace_profile: false,
         seed,
     };
     let mut results: Vec<ContentionResult> = Vec::new();
@@ -695,6 +729,117 @@ fn cmd_churn(args: &Args) -> Result<()> {
         std::fs::write(dir.join("audit.log"), audit(&results[0]).to_text())?;
         println!("(per-class CSV/JSON + audit log in {dir:?})");
     }
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    args.expect_known(&[
+        "preset",
+        "nodes",
+        "seed",
+        "instances",
+        "trace-cap",
+        "trace-filter",
+        "trace-out",
+        "format",
+        "profile",
+        "no-pool",
+    ])?;
+    let nodes: u32 = args.opt_parse("nodes", 32)?;
+    let seed: u64 = args.opt_parse("seed", 7)?;
+    let instances: usize = args.opt_parse("instances", 1)?;
+    if instances == 0 {
+        return Err(llsched::Error::Config("instances must be >= 1".into()));
+    }
+    let trace_cap: usize = args.opt_parse("trace-cap", 65_536)?;
+    if trace_cap == 0 {
+        return Err(llsched::Error::Config(
+            "trace-cap must be >= 1 (the recorder is the point of `trace`)".into(),
+        ));
+    }
+    let filter = match args.opt("trace-filter") {
+        Some(s) => Some(Subsystem::parse(s).ok_or_else(|| {
+            llsched::Error::Config(format!(
+                "unknown --trace-filter {s:?} (one of scheduler|backfill|pool|fault|federation)"
+            ))
+        })?),
+        None => None,
+    };
+    let format = args.opt("format").unwrap_or("both");
+    if !["perfetto", "log", "both"].contains(&format) {
+        return Err(llsched::Error::Config(format!(
+            "unknown --format {format:?} (one of perfetto|log|both)"
+        )));
+    }
+    let preset = args.opt("preset").unwrap_or("burst");
+    let (mix, fault) = if preset.starts_with("churn_") {
+        let scenario = ChurnScenario::preset(preset, nodes)?;
+        (scenario.mix, scenario.fault)
+    } else {
+        (ContentionMix::preset(preset, nodes)?, FaultConfig::disabled())
+    };
+    // Pool fleet on by default — the pool subsystem is worth tracing —
+    // with `pool`'s cluster-scaled elastic bounds over the partition
+    // each scheduler actually owns (nodes/instances of the machine).
+    let pool = if args.flag("no-pool") {
+        PoolConfig::disabled()
+    } else {
+        let n = (nodes as usize / instances).max(2);
+        PoolConfig {
+            size: (n / 4).max(1),
+            min: (n / 8).min((n / 4).max(1)),
+            max: (3 * n / 4).max((n / 4).max(1)),
+            ..PoolConfig::disabled()
+        }
+    };
+    pool.validate().map_err(llsched::Error::Config)?;
+    let opts = ContentionOpts {
+        pool,
+        fault,
+        trace_cap,
+        trace_profile: args.flag("profile"),
+        ..ContentionOpts::classic(true, seed)
+    };
+    let res = if instances > 1 {
+        run_contention_federated(
+            &mix,
+            opts,
+            FederationConfig {
+                instances,
+                ..FederationConfig::default()
+            },
+        )?
+    } else {
+        run_contention_with(&mix, opts)?
+    };
+    print_contention(&res);
+    let snap = res.obs.as_ref().expect("a trace run always carries a recorder");
+    println!(
+        "flight recorder: {} decision(s) recorded, {} retained in the ring, {} dropped",
+        snap.total_events(),
+        snap.events.len(),
+        snap.dropped
+    );
+    for sub in Subsystem::ALL {
+        let n = snap.subsystem_events(sub);
+        if n > 0 {
+            println!("  {:<12} {n}", sub.name());
+        }
+    }
+    if let Some(p) = &snap.profile {
+        for line in profile_lines(p) {
+            println!("  {line}");
+        }
+    }
+    let dir = PathBuf::from(args.opt("trace-out").unwrap_or("results"));
+    std::fs::create_dir_all(&dir)?;
+    if matches!(format, "perfetto" | "both") {
+        std::fs::write(dir.join("trace.json"), perfetto_json(snap, filter).to_pretty())?;
+    }
+    if matches!(format, "log" | "both") {
+        std::fs::write(dir.join("trace.log"), decision_log(snap, filter))?;
+    }
+    println!("(trace exports in {dir:?})");
     Ok(())
 }
 

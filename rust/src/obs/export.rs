@@ -1,0 +1,179 @@
+//! Exporters for flight-recorder snapshots: Chrome-trace/Perfetto
+//! JSON, a plain-text decision log, and the self-profiling report.
+//!
+//! Both exports are deterministic functions of the snapshot — stable
+//! field order, stable event order, no wall-clock anywhere — so
+//! same-seed runs produce byte-identical files (pinned by
+//! `rust/tests/obs_properties.rs`).
+
+use super::{ObsSnapshot, ProfileAccum, Subsystem, TraceEvent};
+use crate::util::json::Json;
+
+fn keep(ev: &TraceEvent, filter: Option<Subsystem>) -> bool {
+    filter.is_none_or(|f| ev.kind.subsystem() == f)
+}
+
+/// Render a snapshot as Chrome-trace/Perfetto JSON (the "JSON object
+/// format"): one instant event per record (`ph: "i"`, thread-scoped),
+/// `ts` in microseconds of simulated time, `pid` = federation
+/// instance, `tid` = subsystem, with unit/id/detail/host_ns in `args`.
+/// Process/thread-name metadata events come first so Perfetto labels
+/// the tracks.
+pub fn perfetto_json(snap: &ObsSnapshot, filter: Option<Subsystem>) -> Json {
+    let kept: Vec<&TraceEvent> = snap.events.iter().filter(|e| keep(e, filter)).collect();
+
+    let mut pids: Vec<u32> = kept.iter().map(|e| e.pid).collect();
+    pids.sort_unstable();
+    pids.dedup();
+    let mut tracks: Vec<(u32, Subsystem)> =
+        kept.iter().map(|e| (e.pid, e.kind.subsystem())).collect();
+    tracks.sort_unstable_by_key(|&(pid, sub)| (pid, sub.index()));
+    tracks.dedup();
+
+    let mut events: Vec<Json> = Vec::with_capacity(kept.len() + pids.len() + tracks.len());
+    for pid in &pids {
+        events.push(
+            Json::obj()
+                .set("name", "process_name")
+                .set("ph", "M")
+                .set("pid", u64::from(*pid))
+                .set("args", Json::obj().set("name", format!("instance {pid}"))),
+        );
+    }
+    for (pid, sub) in &tracks {
+        events.push(
+            Json::obj()
+                .set("name", "thread_name")
+                .set("ph", "M")
+                .set("pid", u64::from(*pid))
+                .set("tid", sub.index() as u64)
+                .set("args", Json::obj().set("name", sub.name())),
+        );
+    }
+    for ev in kept {
+        events.push(
+            Json::obj()
+                .set("name", ev.kind.name())
+                .set("ph", "i")
+                .set("s", "t")
+                .set("ts", ev.t * 1e6)
+                .set("pid", u64::from(ev.pid))
+                .set("tid", ev.kind.subsystem().index() as u64)
+                .set(
+                    "args",
+                    Json::obj()
+                        .set("unit", u64::from(ev.unit))
+                        .set("id", ev.id)
+                        .set("detail", ev.detail)
+                        .set("host_ns", ev.host_ns),
+                ),
+        );
+    }
+
+    Json::obj()
+        .set("displayTimeUnit", "ms")
+        .set("traceEvents", Json::Arr(events))
+        .set(
+            "metadata",
+            Json::obj()
+                .set("recorded", snap.total_events())
+                .set("dropped", snap.dropped)
+                .set("exported", kept_count(snap, filter)),
+        )
+}
+
+fn kept_count(snap: &ObsSnapshot, filter: Option<Subsystem>) -> u64 {
+    snap.events.iter().filter(|e| keep(e, filter)).count() as u64
+}
+
+/// Render a snapshot as a human-readable decision log, one line per
+/// record, oldest first:
+///
+/// ```text
+/// [    1.234567] p0  pool       pool_dispatch   unit=3          id=1042     detail=17 host_ns=52000
+/// ```
+pub fn decision_log(snap: &ObsSnapshot, filter: Option<Subsystem>) -> String {
+    let mut out = String::new();
+    for ev in snap.events.iter().filter(|e| keep(e, filter)) {
+        let unit =
+            if ev.unit == u32::MAX { "-".to_string() } else { ev.unit.to_string() };
+        out.push_str(&format!(
+            "[{:>12.6}] p{:<2} {:<10} {:<15} unit={:<10} id={:<8} detail={} host_ns={}\n",
+            ev.t,
+            ev.pid,
+            ev.kind.subsystem().name(),
+            ev.kind.name(),
+            unit,
+            ev.id,
+            ev.detail,
+            ev.host_ns,
+        ));
+    }
+    if snap.dropped > 0 {
+        out.push_str(&format!(
+            "# ring dropped {} older record(s); raise --trace-cap to keep more\n",
+            snap.dropped
+        ));
+    }
+    out
+}
+
+/// The self-profiling report: host-side `pick_next` cost against the
+/// cost model's simulated charge for the same decisions.
+pub fn profile_lines(p: &ProfileAccum) -> Vec<String> {
+    let host_s = p.host_ns as f64 / 1e9;
+    let ratio = if host_s > 0.0 { p.sim_cost_s / host_s } else { f64::NAN };
+    vec![
+        format!("pick_next invocations     {}", p.picks),
+        format!("host time in pick_next    {:.3} ms total, {:.0} ns mean", host_s * 1e3, p.mean_host_ns()),
+        format!("simulated charge picked   {:.6} s", p.sim_cost_s),
+        format!("simulated-vs-host ratio   {:.1}x", ratio),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{Obs, TraceKind};
+
+    fn sample() -> ObsSnapshot {
+        let mut o = Obs::new(16);
+        o.record(TraceKind::Pick, 2, 7, 0.5, 1200);
+        o.record(TraceKind::PoolDispatch, 0, 8, 1.0, 3);
+        o.record(TraceKind::GatewayFlush, 1, 1, 1.5, 4);
+        o.snapshot()
+    }
+
+    #[test]
+    fn perfetto_export_has_metadata_and_instants() {
+        let s = sample();
+        let text = perfetto_json(&s, None).to_pretty();
+        assert!(text.contains("\"traceEvents\""));
+        assert!(text.contains("\"process_name\""));
+        assert!(text.contains("\"thread_name\""));
+        assert!(text.contains("\"pool_dispatch\""));
+        assert!(text.contains("\"host_ns\""));
+        // Deterministic: same snapshot renders the same bytes.
+        assert_eq!(text, perfetto_json(&s, None).to_pretty());
+    }
+
+    #[test]
+    fn filter_keeps_one_subsystem() {
+        let s = sample();
+        let text = perfetto_json(&s, Some(Subsystem::Pool)).to_pretty();
+        assert!(text.contains("pool_dispatch"));
+        assert!(!text.contains("gateway_flush"));
+        let log = decision_log(&s, Some(Subsystem::Federation));
+        assert_eq!(log.lines().count(), 1);
+        assert!(log.contains("gateway_flush"));
+    }
+
+    #[test]
+    fn decision_log_reports_drops() {
+        let mut o = Obs::new(1);
+        o.record(TraceKind::Pick, 0, 1, 0.0, 0);
+        o.record(TraceKind::Pick, 0, 2, 1.0, 0);
+        let log = decision_log(&o.snapshot(), None);
+        assert!(log.contains("dropped 1 older record"));
+    }
+}

@@ -1,0 +1,245 @@
+//! The scheduler flight recorder: structured decision tracing, a
+//! metrics registry, and dispatch-loop self-profiling.
+//!
+//! The paper's headline quantity is *scheduler overhead* — the latency
+//! the scheduler itself adds — but outcome quantiles can't say *why* a
+//! given job waited. This layer records the individual decisions: the
+//! `pick_next` branch taken, where a register routed, each backfill
+//! admission/rejection with its reason, hold planning and clearing,
+//! preemptions, pool dispatch/release/resize, fault-cascade steps, and
+//! gateway routing/flush/steal traffic — into a bounded pre-allocated
+//! ring ([`TraceRing`]) with per-kind counters and fixed-bucket
+//! histograms ([`Registry`]) alongside.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Off is free.** The recorder lives behind `Option<Box<Obs>>`;
+//!    with `None` every observation site is a single branch on the
+//!    option, so recorder-off schedules and hot-path timings are the
+//!    pre-PR ones (pinned by `event_equivalence` and the PR 6 bench
+//!    bars).
+//! 2. **On is invisible.** The recorder only observes — it draws no
+//!    randomness and feeds nothing back — so recorder-on schedules are
+//!    bit-for-bit the recorder-off ones (pinned by
+//!    `rust/tests/obs_properties.rs`).
+//! 3. **Deterministic bytes.** Host timestamps come from an injected
+//!    [`MonoClock`] counter, never the wall clock, so same-seed trace
+//!    exports are byte-identical. The only wall-clock numbers live in
+//!    the opt-in self-profiling mode ([`ProfileAccum`]) and stay out
+//!    of the ring and the determinism-pinned exports.
+
+mod export;
+mod registry;
+mod trace;
+
+pub use export::{decision_log, perfetto_json, profile_lines};
+pub use registry::{
+    Histogram, Registry, DECISION_LATENCY_BOUNDS, QUEUE_DEPTH_BOUNDS, STEAL_HOPS_BOUNDS,
+};
+pub use trace::{MonoClock, Subsystem, TraceEvent, TraceKind, TraceRing};
+
+use crate::sim::Time;
+
+/// Self-profiling accumulator: host-side wall time spent inside
+/// `pick_next` against the cost model's simulated charge for the same
+/// decisions. Opt-in (`--profile`) because wall-clock numbers are the
+/// one thing that may differ between same-seed runs.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ProfileAccum {
+    /// `pick_next` invocations timed (including empty picks).
+    pub picks: u64,
+    /// Total host nanoseconds inside `pick_next`.
+    pub host_ns: u64,
+    /// Total simulated server charge (seconds) for the picked ops.
+    pub sim_cost_s: f64,
+}
+
+impl ProfileAccum {
+    /// Mean host nanoseconds per `pick_next` invocation.
+    pub fn mean_host_ns(&self) -> f64 {
+        if self.picks == 0 {
+            0.0
+        } else {
+            self.host_ns as f64 / self.picks as f64
+        }
+    }
+}
+
+/// The flight recorder attached to one scheduler (or one gateway).
+#[derive(Debug, Clone)]
+pub struct Obs {
+    ring: TraceRing,
+    /// Counters + histograms, bumped alongside the ring.
+    pub registry: Registry,
+    clock: MonoClock,
+    pid: u32,
+    profile: Option<ProfileAccum>,
+}
+
+impl Obs {
+    /// A recorder whose ring holds at most `cap` records, stamped with
+    /// a fresh deterministic clock (1 µs per recorded event).
+    pub fn new(cap: usize) -> Obs {
+        Obs {
+            ring: TraceRing::new(cap),
+            registry: Registry::new(),
+            clock: MonoClock::new(0, 1_000),
+            pid: 0,
+            profile: None,
+        }
+    }
+
+    /// Tag every record with a federation instance id (the Perfetto
+    /// process; gateways record under `instances`, one past the last).
+    pub fn with_pid(mut self, pid: u32) -> Obs {
+        self.pid = pid;
+        self
+    }
+
+    /// Enable dispatch-loop self-profiling (wall-clock; opt-in).
+    pub fn with_profiling(mut self) -> Obs {
+        self.profile = Some(ProfileAccum::default());
+        self
+    }
+
+    /// Whether self-profiling is on.
+    pub fn profiling(&self) -> bool {
+        self.profile.is_some()
+    }
+
+    /// Record one decision: bump its counter, stamp it with the
+    /// deterministic host clock, append to the ring.
+    #[inline]
+    pub fn record(&mut self, kind: TraceKind, unit: u32, id: u64, t: Time, detail: i64) {
+        let host_ns = self.clock.tick();
+        self.registry.note_kind(kind);
+        self.ring.push(TraceEvent { kind, pid: self.pid, unit, id, t, host_ns, detail });
+    }
+
+    /// Accumulate one timed `pick_next` invocation (no-op unless
+    /// profiling is on).
+    #[inline]
+    pub fn profile_pick(&mut self, host_ns: u64, sim_cost_s: f64) {
+        if let Some(p) = self.profile.as_mut() {
+            p.picks += 1;
+            p.host_ns += host_ns;
+            p.sim_cost_s += sim_cost_s;
+        }
+    }
+
+    /// Freeze the recorder into an immutable snapshot.
+    pub fn snapshot(self) -> ObsSnapshot {
+        let Obs { ring, registry, profile, .. } = self;
+        let dropped = ring.dropped();
+        ObsSnapshot { events: ring.into_ordered(), dropped, registry, profile }
+    }
+}
+
+/// An immutable recorder snapshot: the surviving ring window (oldest
+/// first), the drop counter, and the metrics registry. This is what
+/// `SimOutcome` carries and what the exporters consume.
+#[derive(Debug, Clone)]
+pub struct ObsSnapshot {
+    /// The ring's surviving window, oldest first.
+    pub events: Vec<TraceEvent>,
+    /// Records overwritten because the ring was full.
+    pub dropped: u64,
+    /// Counters + histograms for everything recorded (including
+    /// overwritten records).
+    pub registry: Registry,
+    /// Self-profiling totals, when profiling was on.
+    pub profile: Option<ProfileAccum>,
+}
+
+impl ObsSnapshot {
+    /// Total decisions recorded (ring window + dropped).
+    pub fn total_events(&self) -> u64 {
+        self.registry.total()
+    }
+
+    /// Decisions recorded for one subsystem.
+    pub fn subsystem_events(&self, sub: Subsystem) -> u64 {
+        self.registry.subsystem_total(sub)
+    }
+
+    /// Subsystems with at least one recorded decision.
+    pub fn subsystems_seen(&self) -> Vec<Subsystem> {
+        Subsystem::ALL.into_iter().filter(|s| self.subsystem_events(*s) > 0).collect()
+    }
+
+    /// Merge per-instance snapshots (already pid-tagged at recorder
+    /// construction) into one fleet snapshot: events interleaved in
+    /// deterministic `(sim time, pid, host_ns)` order, registries
+    /// summed, profiles summed when any part carried one.
+    pub fn merge<'a>(parts: impl IntoIterator<Item = &'a ObsSnapshot>) -> ObsSnapshot {
+        let mut events: Vec<TraceEvent> = Vec::new();
+        let mut dropped = 0;
+        let mut registry = Registry::new();
+        let mut profile: Option<ProfileAccum> = None;
+        for part in parts {
+            events.extend_from_slice(&part.events);
+            dropped += part.dropped;
+            registry.merge_from(&part.registry);
+            if let Some(p) = part.profile {
+                let acc = profile.get_or_insert_with(ProfileAccum::default);
+                acc.picks += p.picks;
+                acc.host_ns += p.host_ns;
+                acc.sim_cost_s += p.sim_cost_s;
+            }
+        }
+        events.sort_by(|a, b| {
+            a.t.partial_cmp(&b.t)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.pid.cmp(&b.pid))
+                .then(a.host_ns.cmp(&b.host_ns))
+        });
+        ObsSnapshot { events, dropped, registry, profile }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_bumps_ring_and_registry_together() {
+        let mut o = Obs::new(8);
+        o.record(TraceKind::Pick, 2, 17, 1.5, 42);
+        o.record(TraceKind::PoolDispatch, 0, 18, 2.0, 3);
+        let s = o.snapshot();
+        assert_eq!(s.events.len(), 2);
+        assert_eq!(s.total_events(), 2);
+        assert_eq!(s.subsystem_events(Subsystem::Scheduler), 1);
+        assert_eq!(s.subsystem_events(Subsystem::Pool), 1);
+        assert_eq!(s.events[0].host_ns, 0);
+        assert_eq!(s.events[1].host_ns, 1_000, "injected clock, not wall time");
+        assert_eq!(s.subsystems_seen(), vec![Subsystem::Scheduler, Subsystem::Pool]);
+    }
+
+    #[test]
+    fn dropped_records_still_count() {
+        let mut o = Obs::new(2);
+        for i in 0..5 {
+            o.record(TraceKind::Pick, 0, i, i as f64, 0);
+        }
+        let s = o.snapshot();
+        assert_eq!(s.events.len(), 2);
+        assert_eq!(s.dropped, 3);
+        assert_eq!(s.total_events(), 5, "counters survive ring overwrites");
+        assert_eq!(s.events.len() as u64 + s.dropped, s.total_events());
+    }
+
+    #[test]
+    fn merge_interleaves_by_time_then_pid() {
+        let mut a = Obs::new(8).with_pid(1);
+        let mut b = Obs::new(8).with_pid(0);
+        a.record(TraceKind::Pick, 0, 1, 2.0, 0);
+        a.record(TraceKind::Pick, 0, 2, 5.0, 0);
+        b.record(TraceKind::GatewayRoute, 1, 3, 2.0, 0);
+        let (sa, sb) = (a.snapshot(), b.snapshot());
+        let m = ObsSnapshot::merge([&sa, &sb]);
+        let order: Vec<(f64, u32)> = m.events.iter().map(|e| (e.t, e.pid)).collect();
+        assert_eq!(order, vec![(2.0, 0), (2.0, 1), (5.0, 1)]);
+        assert_eq!(m.total_events(), 3);
+    }
+}

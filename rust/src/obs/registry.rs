@@ -1,0 +1,200 @@
+//! The metrics registry: named monotonic counters (one per
+//! [`TraceKind`], qualified by subsystem) and fixed-bucket histograms
+//! for the quantities the paper's overhead story turns on — queue
+//! depth at decision time, per-decision simulated latency, and
+//! steal-hop counts in federated runs.
+//!
+//! Everything here is plain integer/float arithmetic over
+//! pre-allocated fixed-size storage: no strings on the hot path, no
+//! hashing, no allocation after construction.
+
+use super::trace::{Subsystem, TraceKind};
+
+/// Upper bounds for the queue-depth histogram (pending batch tasks at
+/// each `pick_next` decision); the last bucket is implicit +inf.
+pub const QUEUE_DEPTH_BOUNDS: &[f64] =
+    &[0.0, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0, 512.0, 1024.0];
+
+/// Upper bounds (seconds of simulated server charge) for the
+/// decision-latency histogram.
+pub const DECISION_LATENCY_BOUNDS: &[f64] = &[1e-6, 1e-5, 1e-4, 1e-3, 1e-2, 1e-1, 1.0];
+
+/// Upper bounds for the steal-hops histogram (times a federated job
+/// migrated before starting).
+pub const STEAL_HOPS_BOUNDS: &[f64] = &[0.0, 1.0, 2.0, 3.0, 4.0, 8.0];
+
+/// A fixed-bucket histogram: `bounds` are inclusive upper edges, with
+/// one extra overflow bucket for values above the last edge.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub name: &'static str,
+    bounds: &'static [f64],
+    counts: Vec<u64>,
+    /// Observations recorded.
+    pub n: u64,
+    /// Sum of observed values (for means).
+    pub sum: f64,
+}
+
+impl Histogram {
+    /// A zeroed histogram over `bounds` (plus the overflow bucket).
+    pub fn new(name: &'static str, bounds: &'static [f64]) -> Histogram {
+        Histogram { name, bounds, counts: vec![0; bounds.len() + 1], n: 0, sum: 0.0 }
+    }
+
+    /// Record one observation.
+    #[inline]
+    pub fn observe(&mut self, v: f64) {
+        self.n += 1;
+        self.sum += v;
+        let i = self.bounds.iter().position(|&b| v <= b).unwrap_or(self.bounds.len());
+        self.counts[i] += 1;
+    }
+
+    /// `(upper_edge, count)` per bucket, overflow edge = +inf.
+    pub fn buckets(&self) -> impl Iterator<Item = (f64, u64)> + '_ {
+        self.bounds
+            .iter()
+            .copied()
+            .chain(std::iter::once(f64::INFINITY))
+            .zip(self.counts.iter().copied())
+    }
+
+    /// Fold another histogram (same bounds) into this one.
+    pub fn merge_from(&mut self, other: &Histogram) {
+        debug_assert_eq!(self.bounds.len(), other.bounds.len(), "merging mismatched histograms");
+        for (mine, theirs) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *mine += theirs;
+        }
+        self.n += other.n;
+        self.sum += other.sum;
+    }
+}
+
+/// The per-recorder registry: one monotonic counter per trace kind
+/// (auto-bumped by `Obs::record`) plus the three standing histograms.
+#[derive(Debug, Clone)]
+pub struct Registry {
+    kind_counts: [u64; TraceKind::COUNT],
+    /// Pending batch-queue depth at each traced `pick_next` decision.
+    pub queue_depth: Histogram,
+    /// Simulated server charge (seconds) per traced decision.
+    pub decision_latency: Histogram,
+    /// Steal migrations per federated job (observed at rollup).
+    pub steal_hops: Histogram,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry {
+            kind_counts: [0; TraceKind::COUNT],
+            queue_depth: Histogram::new("queue_depth", QUEUE_DEPTH_BOUNDS),
+            decision_latency: Histogram::new("decision_latency_s", DECISION_LATENCY_BOUNDS),
+            steal_hops: Histogram::new("steal_hops", STEAL_HOPS_BOUNDS),
+        }
+    }
+
+    /// Bump the counter for one recorded kind.
+    #[inline]
+    pub(crate) fn note_kind(&mut self, kind: TraceKind) {
+        self.kind_counts[kind.index()] += 1;
+    }
+
+    /// Events recorded for one kind.
+    pub fn counter(&self, kind: TraceKind) -> u64 {
+        self.kind_counts[kind.index()]
+    }
+
+    /// Events recorded across all kinds.
+    pub fn total(&self) -> u64 {
+        self.kind_counts.iter().sum()
+    }
+
+    /// Events recorded for one subsystem.
+    pub fn subsystem_total(&self, sub: Subsystem) -> u64 {
+        TraceKind::ALL
+            .into_iter()
+            .filter(|k| k.subsystem() == sub)
+            .map(|k| self.counter(k))
+            .sum()
+    }
+
+    /// Every non-zero counter as `("subsystem.kind", value)`, in
+    /// declaration order (deterministic for export).
+    pub fn counters(&self) -> Vec<(String, u64)> {
+        TraceKind::ALL
+            .into_iter()
+            .filter(|k| self.counter(*k) > 0)
+            .map(|k| (format!("{}.{}", k.subsystem().name(), k.name()), self.counter(k)))
+            .collect()
+    }
+
+    /// The standing histograms, in declaration order.
+    pub fn histograms(&self) -> [&Histogram; 3] {
+        [&self.queue_depth, &self.decision_latency, &self.steal_hops]
+    }
+
+    /// Fold another registry into this one (federated rollups).
+    pub fn merge_from(&mut self, other: &Registry) {
+        for (mine, theirs) in self.kind_counts.iter_mut().zip(other.kind_counts.iter()) {
+            *mine += theirs;
+        }
+        self.queue_depth.merge_from(&other.queue_depth);
+        self.decision_latency.merge_from(&other.decision_latency);
+        self.steal_hops.merge_from(&other.steal_hops);
+    }
+}
+
+impl Default for Registry {
+    fn default() -> Registry {
+        Registry::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_and_overflow() {
+        let mut h = Histogram::new("t", &[1.0, 10.0]);
+        for v in [0.5, 1.0, 5.0, 100.0] {
+            h.observe(v);
+        }
+        let b: Vec<(f64, u64)> = h.buckets().collect();
+        assert_eq!(b.len(), 3);
+        assert_eq!(b[0], (1.0, 2), "0.5 and the inclusive edge 1.0");
+        assert_eq!(b[1], (10.0, 1));
+        assert_eq!(b[2].1, 1, "100.0 lands in the overflow bucket");
+        assert!(b[2].0.is_infinite());
+        assert_eq!(h.n, 4);
+    }
+
+    #[test]
+    fn registry_counters_roll_up_by_subsystem() {
+        let mut r = Registry::new();
+        r.note_kind(TraceKind::Pick);
+        r.note_kind(TraceKind::Pick);
+        r.note_kind(TraceKind::PoolDispatch);
+        assert_eq!(r.counter(TraceKind::Pick), 2);
+        assert_eq!(r.subsystem_total(Subsystem::Scheduler), 2);
+        assert_eq!(r.subsystem_total(Subsystem::Pool), 1);
+        assert_eq!(r.total(), 3);
+        let names: Vec<String> = r.counters().into_iter().map(|(n, _)| n).collect();
+        assert_eq!(names, vec!["scheduler.pick".to_string(), "pool.pool_dispatch".to_string()]);
+    }
+
+    #[test]
+    fn merge_sums_everything() {
+        let mut a = Registry::new();
+        let mut b = Registry::new();
+        a.note_kind(TraceKind::StealAttempt);
+        b.note_kind(TraceKind::StealAttempt);
+        a.steal_hops.observe(2.0);
+        b.steal_hops.observe(3.0);
+        a.merge_from(&b);
+        assert_eq!(a.counter(TraceKind::StealAttempt), 2);
+        assert_eq!(a.steal_hops.n, 2);
+        assert_eq!(a.steal_hops.sum, 5.0);
+    }
+}

@@ -1,0 +1,333 @@
+//! The structured trace ring: typed decision records in a bounded,
+//! pre-allocated buffer.
+//!
+//! Every record carries the decision kind, the federation instance it
+//! came from (`pid`), a subsystem-specific unit (shard, node, or
+//! `pick_next` branch code), the job/task id, the simulated time, and
+//! a host-side timestamp drawn from a monotonic counter injected at
+//! construction — never the wall clock — so same-seed traces are
+//! byte-identical across runs (pinned by
+//! `rust/tests/obs_properties.rs`). The opt-in self-profiling mode is
+//! the one place wall-clock time exists, and it stays outside the ring.
+
+/// The subsystem a trace event belongs to (the Perfetto "thread").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Subsystem {
+    /// The server op loop: `pick_next` branches and register routing.
+    Scheduler,
+    /// EASY backfill: admissions, rejections, hold planning/clearing,
+    /// and overdue-backfill preemptions.
+    Backfill,
+    /// The rapid-launch pool fleet: dispatches, releases, resizes.
+    Pool,
+    /// The churn layer: failure / recovery / reclaim / drain cascades.
+    Fault,
+    /// The submission gateway: routing, flushes, work stealing.
+    Federation,
+}
+
+impl Subsystem {
+    /// Every subsystem, in display order.
+    pub const ALL: [Subsystem; 5] = [
+        Subsystem::Scheduler,
+        Subsystem::Backfill,
+        Subsystem::Pool,
+        Subsystem::Fault,
+        Subsystem::Federation,
+    ];
+
+    /// Stable lowercase name (the `--trace-filter` vocabulary).
+    pub fn name(self) -> &'static str {
+        match self {
+            Subsystem::Scheduler => "scheduler",
+            Subsystem::Backfill => "backfill",
+            Subsystem::Pool => "pool",
+            Subsystem::Fault => "fault",
+            Subsystem::Federation => "federation",
+        }
+    }
+
+    /// Position in [`Self::ALL`] (the Perfetto thread id).
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Parse a `--trace-filter` value.
+    pub fn parse(s: &str) -> Option<Subsystem> {
+        Subsystem::ALL.into_iter().find(|sub| sub.name() == s)
+    }
+}
+
+/// The decision vocabulary: every kind of record the flight recorder
+/// can hold, each belonging to exactly one [`Subsystem`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceKind {
+    /// One `pick_next` decision (or a `Submit`-scheduled `Register`):
+    /// `unit` is the branch code in service-discipline order
+    /// (0 register, 1 cycle, 2 dispatch, 3 backfill, 4 cleanup,
+    /// 5 noise, 6 preempt-signal, 7 pool-dispatch, 8 pool-release,
+    /// 9 pool-resize, 10–13 fault ops), `detail` the simulated charge
+    /// in nanoseconds.
+    Pick,
+    /// A registered task routed to its queue: `unit` is the shard id
+    /// (`u32::MAX` = the batch pending queue), `detail` 1 for pool,
+    /// 0 for batch.
+    RegisterRoute,
+    /// A backfill admission placed: `unit` the node, `detail` the hold
+    /// task fencing that node (−1 when unheld).
+    BackfillAdmit,
+    /// A backfill admission failed at placement: `detail` 0 = raced a
+    /// hold change, 1 = whole-node task reached the backfill path.
+    BackfillReject,
+    /// An earliest-start reservation planted: `unit` the fenced node,
+    /// `detail` 0 = planned from the free-time table, 1 = borrowed
+    /// from the pool fleet's drain forecast.
+    HoldPlan,
+    /// A hold released because its task started: `unit` the node.
+    HoldClear,
+    /// A preemption signal landed on a running task: `unit` the fault
+    /// node (`u32::MAX` for non-fault preemptions), `detail` 1 when it
+    /// was an overdue-backfill kill.
+    Preempt,
+    /// An O(1) pool launch: `unit` the shard, `detail` the node.
+    PoolDispatch,
+    /// An O(1) pool release: `unit` the shard, `detail` the node
+    /// (−1 when the lease was already gone).
+    PoolRelease,
+    /// A shard resize applied: `detail` is +grown / −shrunk / 0 hold.
+    PoolResize,
+    /// One step of a fault cascade: `unit` the node (or wave), `id`
+    /// the kill count (or shard), `detail` 0 fail / 1 recover /
+    /// 2 reclaim-wave / 3 drain / 4 pool-evict.
+    FaultCascade,
+    /// The gateway routed a submission: `unit` the chosen instance,
+    /// `id` the gateway job index, `detail` the winning backlog depth.
+    GatewayRoute,
+    /// The gateway flushed one instance's buffer: `unit` the instance,
+    /// `id` its batch ordinal, `detail` the jobs injected.
+    GatewayFlush,
+    /// A work-steal migrated a job: `unit` the donor instance, `id`
+    /// the gateway job index, `detail` the receiving instance.
+    StealAttempt,
+    /// A steal candidate refused withdrawal (already started): `unit`
+    /// the donor, `id` the gateway job index, `detail` the receiver.
+    StealRefused,
+}
+
+impl TraceKind {
+    /// Number of kinds (sizing for per-kind counters).
+    pub const COUNT: usize = 15;
+
+    /// Every kind, in declaration order (indexable by [`Self::index`]).
+    pub const ALL: [TraceKind; TraceKind::COUNT] = [
+        TraceKind::Pick,
+        TraceKind::RegisterRoute,
+        TraceKind::BackfillAdmit,
+        TraceKind::BackfillReject,
+        TraceKind::HoldPlan,
+        TraceKind::HoldClear,
+        TraceKind::Preempt,
+        TraceKind::PoolDispatch,
+        TraceKind::PoolRelease,
+        TraceKind::PoolResize,
+        TraceKind::FaultCascade,
+        TraceKind::GatewayRoute,
+        TraceKind::GatewayFlush,
+        TraceKind::StealAttempt,
+        TraceKind::StealRefused,
+    ];
+
+    /// Position in [`Self::ALL`].
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Stable snake_case name (the exporter vocabulary).
+    pub fn name(self) -> &'static str {
+        match self {
+            TraceKind::Pick => "pick",
+            TraceKind::RegisterRoute => "register_route",
+            TraceKind::BackfillAdmit => "backfill_admit",
+            TraceKind::BackfillReject => "backfill_reject",
+            TraceKind::HoldPlan => "hold_plan",
+            TraceKind::HoldClear => "hold_clear",
+            TraceKind::Preempt => "preempt",
+            TraceKind::PoolDispatch => "pool_dispatch",
+            TraceKind::PoolRelease => "pool_release",
+            TraceKind::PoolResize => "pool_resize",
+            TraceKind::FaultCascade => "fault_cascade",
+            TraceKind::GatewayRoute => "gateway_route",
+            TraceKind::GatewayFlush => "gateway_flush",
+            TraceKind::StealAttempt => "steal_attempt",
+            TraceKind::StealRefused => "steal_refused",
+        }
+    }
+
+    /// The subsystem this kind belongs to.
+    pub fn subsystem(self) -> Subsystem {
+        match self {
+            TraceKind::Pick | TraceKind::RegisterRoute => Subsystem::Scheduler,
+            TraceKind::BackfillAdmit
+            | TraceKind::BackfillReject
+            | TraceKind::HoldPlan
+            | TraceKind::HoldClear
+            | TraceKind::Preempt => Subsystem::Backfill,
+            TraceKind::PoolDispatch | TraceKind::PoolRelease | TraceKind::PoolResize => {
+                Subsystem::Pool
+            }
+            TraceKind::FaultCascade => Subsystem::Fault,
+            TraceKind::GatewayRoute
+            | TraceKind::GatewayFlush
+            | TraceKind::StealAttempt
+            | TraceKind::StealRefused => Subsystem::Federation,
+        }
+    }
+}
+
+/// One flight-recorder record. 48 bytes, `Copy`, no heap.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceEvent {
+    pub kind: TraceKind,
+    /// Federation instance (0 for standalone runs; the gateway records
+    /// under `instances` — one past the last instance).
+    pub pid: u32,
+    /// Subsystem-specific unit: shard, node, instance, or branch code
+    /// (`u32::MAX` = not applicable / the batch queue).
+    pub unit: u32,
+    /// The job/task the decision was about (kind-specific).
+    pub id: u64,
+    /// Simulated time of the decision.
+    pub t: f64,
+    /// Deterministic host-side timestamp from the injected
+    /// [`MonoClock`] — a per-recorder sequence, not the wall clock.
+    pub host_ns: u64,
+    /// Kind-specific payload (see [`TraceKind`]).
+    pub detail: i64,
+}
+
+/// The deterministic "host clock": a monotonic counter advanced by a
+/// fixed step per recorded event. Injected at recorder construction so
+/// trace bytes never depend on the machine the sim ran on.
+#[derive(Debug, Clone, Copy)]
+pub struct MonoClock {
+    next: u64,
+    step: u64,
+}
+
+impl MonoClock {
+    /// A clock starting at `start` nanoseconds, advancing `step`
+    /// nanoseconds per tick.
+    pub fn new(start: u64, step: u64) -> MonoClock {
+        MonoClock { next: start, step: step.max(1) }
+    }
+
+    /// The next timestamp (and advance).
+    pub fn tick(&mut self) -> u64 {
+        let t = self.next;
+        self.next = self.next.wrapping_add(self.step);
+        t
+    }
+}
+
+/// A bounded, pre-allocated ring of trace records. Overwrites the
+/// oldest record when full and counts what it dropped — a flight
+/// recorder keeps the *latest* window, and the drop counter makes
+/// truncation visible instead of silent.
+#[derive(Debug, Clone)]
+pub struct TraceRing {
+    buf: Vec<TraceEvent>,
+    /// Oldest record's index once the ring has wrapped.
+    head: usize,
+    cap: usize,
+    dropped: u64,
+}
+
+impl TraceRing {
+    /// A ring holding at most `cap` records (clamped to ≥ 1), with the
+    /// full capacity allocated up front so recording never reallocates.
+    pub fn new(cap: usize) -> TraceRing {
+        let cap = cap.max(1);
+        TraceRing { buf: Vec::with_capacity(cap), head: 0, cap, dropped: 0 }
+    }
+
+    /// Append a record, overwriting the oldest when full.
+    #[inline]
+    pub fn push(&mut self, ev: TraceEvent) {
+        if self.buf.len() < self.cap {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.head] = ev;
+            self.head = (self.head + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    /// Records currently held (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Whether nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Records overwritten because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Consume the ring into oldest-first order.
+    pub fn into_ordered(self) -> Vec<TraceEvent> {
+        let TraceRing { mut buf, head, .. } = self;
+        buf.rotate_left(head);
+        buf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(i: u64) -> TraceEvent {
+        TraceEvent {
+            kind: TraceKind::Pick,
+            pid: 0,
+            unit: 0,
+            id: i,
+            t: i as f64,
+            host_ns: i,
+            detail: 0,
+        }
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_counts_drops() {
+        let mut r = TraceRing::new(3);
+        for i in 0..5 {
+            r.push(ev(i));
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.dropped(), 2);
+        let ids: Vec<u64> = r.into_ordered().iter().map(|e| e.id).collect();
+        assert_eq!(ids, vec![2, 3, 4], "oldest-first, latest window kept");
+    }
+
+    #[test]
+    fn every_kind_has_a_distinct_index_and_a_subsystem() {
+        for (i, k) in TraceKind::ALL.into_iter().enumerate() {
+            assert_eq!(k.index(), i);
+            assert!(Subsystem::ALL.contains(&k.subsystem()));
+        }
+        for s in Subsystem::ALL {
+            assert_eq!(Subsystem::parse(s.name()), Some(s));
+        }
+        assert_eq!(Subsystem::parse("nope"), None);
+    }
+
+    #[test]
+    fn mono_clock_is_a_pure_counter() {
+        let mut c = MonoClock::new(100, 50);
+        assert_eq!((c.tick(), c.tick(), c.tick()), (100, 150, 200));
+    }
+}

@@ -25,6 +25,7 @@ use crate::cluster::{Cluster, NodeId, NodeState};
 use crate::fault::audit::AuditLog;
 use crate::fault::metrics::{FaultOutcome, FaultStats};
 use crate::fault::{FaultConfig, FaultPlan, PlannedFault};
+use crate::obs::{Obs, ObsSnapshot, TraceKind};
 use crate::placement::{Hold, PlacementEngine, ReservationLedger, Strategy};
 use crate::pool::{FleetConfig, PoolConfig, PoolFleet};
 use crate::scheduler::accounting::{JobStats, TaskRecord};
@@ -311,6 +312,10 @@ pub struct SimOutcome {
     /// injection is disabled — fault-off runs carry no trace of the
     /// subsystem, pinned by `rust/tests/fault_properties.rs`).
     pub fault: Option<FaultOutcome>,
+    /// Flight-recorder snapshot (`None` unless a recorder was installed
+    /// with [`SchedulerSim::with_recorder`] — recorder-off runs carry no
+    /// trace of the subsystem, pinned by `rust/tests/obs_properties.rs`).
+    pub obs: Option<ObsSnapshot>,
 }
 
 /// What the rapid-launch pool fleet did over one run. The scalar fields
@@ -517,6 +522,9 @@ pub struct SchedulerSim {
     pub(crate) timeline: Vec<(Time, i64)>,
     pub(crate) record_timeline: bool,
     pub(crate) max_completion_backlog: usize,
+    /// Flight recorder (`None` = off; every observation site is then a
+    /// single branch on this option, so the hot path is unchanged).
+    pub(crate) obs: Option<Box<Obs>>,
 }
 
 impl SchedulerSim {
@@ -589,6 +597,7 @@ impl SchedulerSim {
             timeline: Vec::new(),
             record_timeline: true,
             max_completion_backlog: 0,
+            obs: None,
         }
     }
 
@@ -789,10 +798,32 @@ impl SchedulerSim {
         self.fault_plan.is_some()
     }
 
-    /// Disable the (possibly large) utilization timeline recording.
+    /// Disable the (possibly large) utilization timeline recording and
+    /// drop anything already buffered. Every delta push site — batch
+    /// start, occupancy end, and the pool launch path — is gated on the
+    /// flag, so a disabled run finishes with a provably empty timeline
+    /// (regression-pinned by `rust/tests/obs_properties.rs`).
     pub fn without_timeline(mut self) -> Self {
         self.record_timeline = false;
+        self.timeline = Vec::new();
         self
+    }
+
+    /// Install a flight recorder ([`crate::obs`]): a bounded trace ring
+    /// of typed decision records plus the metrics registry, snapshotted
+    /// into [`SimOutcome::obs`] when the run finishes. The recorder
+    /// only observes — it draws no randomness and feeds nothing back —
+    /// so recorder-on schedules are bit-for-bit the recorder-off ones,
+    /// and without one every observation site is a single branch on an
+    /// `Option` (both pinned by `rust/tests/obs_properties.rs`).
+    pub fn with_recorder(mut self, obs: Box<Obs>) -> Self {
+        self.obs = Some(obs);
+        self
+    }
+
+    /// Whether a flight recorder is installed.
+    pub fn recorder_enabled(&self) -> bool {
+        self.obs.is_some()
     }
 
     /// Fix the per-run server-speed factor (tests use 1.0 for exact
@@ -914,6 +945,7 @@ impl SchedulerSim {
         } else {
             None
         };
+        let obs = self.obs.take().map(|o| o.snapshot());
         SimOutcome {
             records: self.tasks.into_iter().map(|t| t.record).collect(),
             jobs: self.jobs,
@@ -929,6 +961,17 @@ impl SchedulerSim {
             pool,
             overdue_preemptions: self.overdue_preemptions,
             fault,
+            obs,
+        }
+    }
+
+    /// Record one flight-recorder event. A single branch on the
+    /// recorder option when off — the observation sites in the op loop
+    /// and lifecycle stay free for recorder-less runs.
+    #[inline]
+    pub(crate) fn trace(&mut self, kind: TraceKind, unit: u32, id: u64, t: Time, detail: i64) {
+        if let Some(o) = self.obs.as_mut() {
+            o.record(kind, unit, id, t, detail);
         }
     }
 

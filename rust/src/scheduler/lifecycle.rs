@@ -9,6 +9,7 @@
 
 use crate::cluster::{NodeId, NodeState};
 use crate::fault::audit::{AuditEvent, FaultReason};
+use crate::obs::TraceKind;
 use crate::pool::Resize;
 use crate::scheduler::core::{BackfillEvent, SchedEvent, SchedulerSim};
 use crate::scheduler::job::{JobId, Placement, ResourceRequest, TaskId, TaskState};
@@ -166,6 +167,9 @@ impl SchedulerSim {
         };
         self.running_cores += cores as u64;
         self.ledger.note_start(node, expected_end);
+        if self.obs.is_some() && self.ledger.hold_for(tid).is_some() {
+            self.trace(TraceKind::HoldClear, node, tid, start, 0);
+        }
         self.ledger.clear_hold(tid);
         // A cleared hold loosens the admission fences: rescan.
         self.backfill_dirty = true;
@@ -193,6 +197,7 @@ impl SchedulerSim {
                 let prio = self.tasks[tid as usize].priority;
                 let enqueued_at = self.tasks[tid as usize].enqueued_at;
                 self.pending.push_front(tid, prio, enqueued_at);
+                self.trace(TraceKind::BackfillReject, u32::MAX, tid, now, 1);
                 return;
             }
         };
@@ -214,17 +219,16 @@ impl SchedulerSim {
         );
         match placement {
             Some(p) => {
+                let node = p.node;
+                let hold = self.ledger.hold_on(node);
                 self.tasks[tid as usize].backfilled = true;
                 if self.preempt_overdue {
-                    self.live_backfills.push((tid, p.node));
+                    self.live_backfills.push((tid, node));
                 }
-                self.backfill_log.push(BackfillEvent {
-                    task: tid,
-                    node: p.node,
-                    time: now,
-                    hold: self.ledger.hold_on(p.node),
-                });
+                self.backfill_log.push(BackfillEvent { task: tid, node, time: now, hold });
                 self.start_running(now, tid, p, false, q);
+                let fencing = hold.map(|h| h.task as i64).unwrap_or(-1);
+                self.trace(TraceKind::BackfillAdmit, node, tid, now, fencing);
             }
             None => {
                 // Admission raced a hold change; requeue at the front of
@@ -232,6 +236,7 @@ impl SchedulerSim {
                 let prio = self.tasks[tid as usize].priority;
                 let enqueued_at = self.tasks[tid as usize].enqueued_at;
                 self.pending.push_front(tid, prio, enqueued_at);
+                self.trace(TraceKind::BackfillReject, u32::MAX, tid, now, 0);
             }
         }
     }
@@ -307,6 +312,7 @@ impl SchedulerSim {
             match planned {
                 Some((node, start)) => {
                     let _ = self.ledger.set_hold(tid, node, start);
+                    self.trace(TraceKind::HoldPlan, node, tid, now, 0);
                 }
                 None => {
                     // Planning found no admissible node. When the pool
@@ -348,6 +354,7 @@ impl SchedulerSim {
                     };
                     if let Some((node, at)) = forecast {
                         let _ = self.ledger.set_hold(tid, node, at.max(now));
+                        self.trace(TraceKind::HoldPlan, node, tid, now, 1);
                     }
                 }
             }
@@ -478,7 +485,8 @@ impl SchedulerSim {
         // An overdue-backfill kill is only counted when it actually
         // lands on a still-running task — a task that finished first
         // was never preempted, whatever the signal queue says.
-        if slot.kill_signalled {
+        let overdue_kill = slot.kill_signalled;
+        if overdue_kill {
             self.overdue_preemptions += 1;
         }
         // Same landed-only rule for fault kills: the killed/lost work
@@ -495,6 +503,13 @@ impl SchedulerSim {
             self.audit
                 .push(now, AuditEvent::TaskKilled { task: tid, node }, FaultReason::Cascade);
         }
+        self.trace(
+            TraceKind::Preempt,
+            killed_on.unwrap_or(u32::MAX),
+            tid,
+            now,
+            i64::from(overdue_kill),
+        );
         self.end_occupancy(now, tid);
     }
 
@@ -766,6 +781,7 @@ impl SchedulerSim {
         p.fleet.note_launch(sid as usize, node, est_end, tid);
         // The free list shrank: the shard's next decision may differ.
         p.mark(sid as usize);
+        self.trace(TraceKind::PoolDispatch, sid, tid, now, i64::from(node));
         q.at(now + occupancy, SchedEvent::TaskEnded(tid));
     }
 
@@ -809,6 +825,8 @@ impl SchedulerSim {
                 _ => p.fleet.violated = true,
             }
         }
+        let freed = home.map(|(_, n)| i64::from(n)).unwrap_or(-1);
+        self.trace(TraceKind::PoolRelease, sid, tid, now, freed);
     }
 
     /// Apply one hysteresis resize pass on one shard. Grow sources, in
@@ -842,6 +860,7 @@ impl SchedulerSim {
             return;
         }
         let shape = p.fleet.shards[sid].shape;
+        let mut delta: i64 = 0;
         match p.fleet.shards[sid].decision() {
             Resize::Grow(k) => {
                 let mut grown = 0usize;
@@ -928,6 +947,7 @@ impl SchedulerSim {
                 if grown > 0 {
                     p.fleet.shards[sid].manager.record_grow(grown);
                 }
+                delta = grown as i64;
                 // A fruitless grow gates the starving-shard cooldown
                 // bypass until the next batch or sibling release.
                 p.fleet.shards[sid].grow_blocked = acquired == 0;
@@ -948,6 +968,7 @@ impl SchedulerSim {
                         break;
                     }
                 }
+                delta = -(shrunk as i64);
                 if shrunk > 0 {
                     sh.manager.record_shrink(shrunk);
                     // Returned nodes are batch capacity again: let the
@@ -970,6 +991,7 @@ impl SchedulerSim {
         // every shard — and the batch backfill scans — re-evaluate.
         p.mark_all();
         self.backfill_dirty = true;
+        self.trace(TraceKind::PoolResize, sid as u32, delta.unsigned_abs(), now, delta);
         q.at(now + cooldown, SchedEvent::ShardWake(sid as u32));
     }
 
@@ -1065,6 +1087,7 @@ impl SchedulerSim {
                 kills.push(slot.record.task);
             }
         }
+        self.trace(TraceKind::FaultCascade, node, kills.len() as u64, now, 0);
         // 2) Pool membership teardown (evict the lease, reroute queued
         // completions, wake the owning shard so it can re-grow).
         self.pool_evict(now, node, q);
@@ -1113,6 +1136,7 @@ impl SchedulerSim {
         }
         self.audit
             .push(now, AuditEvent::NodeRecovered { node }, FaultReason::Recovery);
+        self.trace(TraceKind::FaultCascade, node, 0, now, 1);
         // Fresh capacity: the blocked head retries against a fresh
         // cycle, the backfill scans re-run, and every shard may have a
         // grow candidate again.
@@ -1146,6 +1170,7 @@ impl SchedulerSim {
             AuditEvent::ReclaimWave { wave, nodes: members.len() },
             FaultReason::SpotReclaim,
         );
+        self.trace(TraceKind::FaultCascade, wave, members.len() as u64, now, 2);
         for node in members {
             self.apply_node_fail(now, node, FaultReason::SpotReclaim, q);
         }
@@ -1168,6 +1193,7 @@ impl SchedulerSim {
         self.fault_stats.drains += 1;
         self.audit
             .push(now, AuditEvent::NodeDrained { node }, FaultReason::Maintenance);
+        self.trace(TraceKind::FaultCascade, node, 0, now, 3);
         self.pool_evict(now, node, q);
         self.engine.set_node_state(&mut self.cluster, node, NodeState::Draining);
         self.down_since[node as usize] = now;
@@ -1233,6 +1259,7 @@ impl SchedulerSim {
             AuditEvent::PoolEvicted { node, shard: sid },
             FaultReason::Cascade,
         );
+        self.trace(TraceKind::FaultCascade, node, sid as u64, now, 4);
         true
     }
 

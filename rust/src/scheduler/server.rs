@@ -26,11 +26,34 @@
 
 use crate::cluster::NodeState;
 use crate::fault::audit::FaultReason;
+use crate::obs::TraceKind;
 use crate::pool::Resize;
 use crate::scheduler::accounting::TaskRecord;
 use crate::scheduler::core::{HotPath, JobMeta, Op, SchedEvent, SchedulerSim, TaskSlot};
 use crate::scheduler::job::{ResourceRequest, TaskId, TaskState};
 use crate::sim::{self, EventQueue, Time};
+
+/// The `(branch-code, subject-id)` pair a picked op contributes to its
+/// `Pick` trace record. Codes follow the service-discipline order and
+/// are part of the exporter vocabulary (see `docs/observability.md`).
+fn op_trace_key(op: &Op) -> (u32, u64) {
+    match *op {
+        Op::Register(j) => (0, j),
+        Op::Cycle => (1, 0),
+        Op::Dispatch(t) => (2, t),
+        Op::Backfill(t) => (3, t),
+        Op::Cleanup(t) => (4, t),
+        Op::Noise(_) => (5, 0),
+        Op::PreemptSignal(t) => (6, t),
+        Op::PoolDispatch(_, t) => (7, t),
+        Op::PoolRelease(_, t) => (8, t),
+        Op::PoolResize(s) => (9, u64::from(s)),
+        Op::NodeFail(n) => (10, u64::from(n)),
+        Op::NodeRecover(n) => (11, u64::from(n)),
+        Op::ReclaimWave(w) => (12, u64::from(w)),
+        Op::DrainNode(n) => (13, u64::from(n)),
+    }
+}
 
 impl SchedulerSim {
     /// If the server is idle, pick the next operation and start it.
@@ -38,11 +61,43 @@ impl SchedulerSim {
         if self.server_busy {
             return;
         }
-        if let Some((op, cost)) = self.pick_next(now) {
+        let picked = if self.obs.is_some() {
+            self.pick_next_traced(now)
+        } else {
+            self.pick_next(now)
+        };
+        if let Some((op, cost)) = picked {
             self.server_busy = true;
             self.busy_since = now;
             q.after(cost, SchedEvent::ServerDone(op));
         }
+    }
+
+    /// `pick_next` under the flight recorder: the branch taken becomes
+    /// a `Pick` record, the decision feeds the queue-depth and
+    /// decision-latency histograms, and in self-profiling mode the
+    /// invocation's host-side time accumulates against the cost model's
+    /// simulated charge. The recorder only observes — it draws no
+    /// randomness and changes no decision — so recorder-on schedules
+    /// are bit-for-bit the recorder-off ones (pinned by
+    /// `rust/tests/obs_properties.rs`).
+    fn pick_next_traced(&mut self, now: Time) -> Option<(Op, Time)> {
+        let profiling = self.obs.as_ref().is_some_and(|o| o.profiling());
+        let t0 = if profiling { Some(std::time::Instant::now()) } else { None };
+        let depth = self.pending.len();
+        let picked = self.pick_next(now);
+        let obs = self.obs.as_mut().expect("traced pick implies a recorder");
+        if let Some(t0) = t0 {
+            let sim_cost = picked.map(|(_, c)| c).unwrap_or(0.0);
+            obs.profile_pick(t0.elapsed().as_nanos() as u64, sim_cost);
+        }
+        if let Some((op, cost)) = picked {
+            obs.registry.queue_depth.observe(depth as f64);
+            obs.registry.decision_latency.observe(cost);
+            let (branch, id) = op_trace_key(&op);
+            obs.record(TraceKind::Pick, branch, id, now, (cost * 1e9) as i64);
+        }
+        picked
     }
 
     /// Work-conserving service discipline (see module docs):
@@ -357,13 +412,18 @@ impl SchedulerSim {
     /// batch pending queue.
     fn enqueue_registered(&mut self, now: Time, tid: TaskId, prio: i32) {
         self.tasks[tid as usize].enqueued_at = now;
-        if let Some(sid) = self.route_to_pool(tid) {
-            let p = self.pool.as_mut().expect("routing implies a pool");
-            p.fleet.shards[sid].pending.push_back(tid);
-            p.mark(sid);
-        } else {
-            self.pending.push(tid, prio, now);
-            self.backfill_dirty = true;
+        match self.route_to_pool(tid) {
+            Some(sid) => {
+                let p = self.pool.as_mut().expect("routing implies a pool");
+                p.fleet.shards[sid].pending.push_back(tid);
+                p.mark(sid);
+                self.trace(TraceKind::RegisterRoute, sid as u32, tid, now, 1);
+            }
+            None => {
+                self.pending.push(tid, prio, now);
+                self.backfill_dirty = true;
+                self.trace(TraceKind::RegisterRoute, u32::MAX, tid, now, 0);
+            }
         }
     }
 }
@@ -453,10 +513,13 @@ impl sim::Actor for SchedulerSim {
                     self.jobs.resize_with(id as usize + 1, JobMeta::placeholder);
                 }
                 self.jobs[id as usize] = meta;
-                // Registration is server work.
+                // Registration is server work. It bypasses `pick_next`
+                // (the op is scheduled directly), so its Pick record —
+                // branch code 0 — is emitted here.
                 let cost = self.cost.submit(spec.array_size());
                 self.server_busy = true;
                 self.busy_since = now;
+                self.trace(TraceKind::Pick, 0, id, now, (cost * self.op_scale * 1e9) as i64);
                 q.after(cost * self.op_scale, SchedEvent::ServerDone(Op::Register(id)));
             }
             SchedEvent::ServerDone(op) => {

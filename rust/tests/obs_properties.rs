@@ -1,0 +1,361 @@
+//! Flight-recorder property suite.
+//!
+//! The recorder ([`llsched::obs`]) promises three things, in order:
+//!
+//! 1. **Off is free.** With `trace_cap = 0` no recorder exists and the
+//!    outcome carries no snapshot — the schedule is the historical one
+//!    (the bit-for-bit pin is `rust/tests/event_equivalence.rs`; here
+//!    we pin the absence of the snapshot and of timeline recording
+//!    under `without_timeline`).
+//! 2. **On is invisible.** The recorder only observes — recorder-on
+//!    runs produce the identical schedule, span, per-class quantiles,
+//!    pool ledger, and fault counters as recorder-off runs of the same
+//!    seed.
+//! 3. **Deterministic bytes.** Same-seed recorder-on runs export
+//!    byte-identical Perfetto JSON and decision logs, across every
+//!    churn preset and through the federated gateway.
+
+use llsched::cluster::Cluster;
+use llsched::coordinator::experiment::{
+    run_contention_federated, run_contention_with, ContentionOpts,
+};
+use llsched::fault::scenario::ChurnScenario;
+use llsched::fault::FaultConfig;
+use llsched::federation::FederationConfig;
+use llsched::obs::{decision_log, perfetto_json, Subsystem, TraceKind};
+use llsched::pool::PoolConfig;
+use llsched::scheduler::core::SchedulerSim;
+use llsched::scheduler::costmodel::CostModel;
+use llsched::scheduler::job::{ComputeBatch, JobSpec, ResourceRequest, SchedTaskSpec};
+use llsched::scheduler::noise::NoiseModel;
+use llsched::sim::EventQueue;
+use llsched::workload::contention::ContentionMix;
+
+const CHURN_PRESETS: [&str; 4] = ["churn_mtbf", "churn_reclaim", "churn_drain", "churn_full"];
+
+/// The `churn`/`trace` commands' cluster-scaled elastic pool defaults.
+fn pooled(nodes: u32) -> PoolConfig {
+    let n = nodes.max(2) as usize;
+    PoolConfig {
+        size: (n / 4).max(1),
+        min: (n / 8).min((n / 4).max(1)),
+        max: (3 * n / 4).max((n / 4).max(1)),
+        ..PoolConfig::disabled()
+    }
+}
+
+/// Property 2: the recorder observes, it never steers. A pooled burst
+/// run and a pooled churn run must produce the identical schedule with
+/// the recorder on and off.
+#[test]
+fn recorder_on_never_steers_the_schedule() {
+    for (preset, nodes, seed) in [("burst", 32u32, 7u64), ("churn_full", 32, 11)] {
+        let (mix, fault) = if preset.starts_with("churn_") {
+            let sc = ChurnScenario::preset(preset, nodes).unwrap();
+            (sc.mix, sc.fault)
+        } else {
+            (
+                ContentionMix::preset(preset, nodes).unwrap(),
+                FaultConfig::disabled(),
+            )
+        };
+        let opts = |cap: usize| ContentionOpts {
+            pool: pooled(nodes),
+            fault: fault.clone(),
+            trace_cap: cap,
+            ..ContentionOpts::classic(true, seed)
+        };
+        let off = run_contention_with(&mix, opts(0)).unwrap();
+        let on = run_contention_with(&mix, opts(1 << 16)).unwrap();
+        assert!(off.obs.is_none(), "{preset}: trace_cap 0 must not record");
+        let snap = on.obs.as_ref().expect("recorder-on run carries a snapshot");
+        assert!(snap.total_events() > 0, "{preset}: a pooled run records decisions");
+        assert_eq!(off.span.to_bits(), on.span.to_bits(), "{preset}: span diverged");
+        assert_eq!(off.backfills, on.backfills, "{preset}: backfills diverged");
+        assert_eq!(off.unfinished, on.unfinished, "{preset}: unfinished diverged");
+        assert_eq!(
+            off.max_active_holds, on.max_active_holds,
+            "{preset}: hold peak diverged"
+        );
+        assert_eq!(
+            off.overdue_preemptions, on.overdue_preemptions,
+            "{preset}: preemptions diverged"
+        );
+        for (a, b) in off.reports.iter().zip(&on.reports) {
+            assert_eq!(
+                a.median_launch_latency.to_bits(),
+                b.median_launch_latency.to_bits(),
+                "{preset}: median latency diverged"
+            );
+            assert_eq!(
+                a.p95_launch_latency.to_bits(),
+                b.p95_launch_latency.to_bits(),
+                "{preset}: p95 latency diverged"
+            );
+            assert_eq!(
+                a.core_seconds.to_bits(),
+                b.core_seconds.to_bits(),
+                "{preset}: core-seconds diverged"
+            );
+            assert_eq!(a.completed, b.completed, "{preset}: completions diverged");
+        }
+        let (po, pn) = (off.pool.as_ref().unwrap(), on.pool.as_ref().unwrap());
+        assert_eq!(po.launches, pn.launches, "{preset}: pool launches diverged");
+        assert_eq!(po.grows, pn.grows, "{preset}: pool grows diverged");
+        assert_eq!(po.shrinks, pn.shrinks, "{preset}: pool shrinks diverged");
+        assert_eq!(po.peak_leased, pn.peak_leased, "{preset}: pool peak diverged");
+        match (&off.fault, &on.fault) {
+            (None, None) => {}
+            (Some(a), Some(b)) => {
+                assert_eq!(a.stats.node_failures, b.stats.node_failures);
+                assert_eq!(a.stats.tasks_killed, b.stats.tasks_killed);
+                assert_eq!(a.stats.tasks_requeued, b.stats.tasks_requeued);
+            }
+            _ => panic!("{preset}: fault outcome presence diverged"),
+        }
+    }
+}
+
+/// Property 3: same-seed exports are byte-identical — across all four
+/// churn presets and through the federated gateway.
+#[test]
+fn same_seed_trace_exports_are_byte_identical() {
+    for preset in CHURN_PRESETS {
+        let sc = ChurnScenario::preset(preset, 32).unwrap();
+        let opts = || ContentionOpts {
+            pool: pooled(32),
+            fault: sc.fault.clone(),
+            trace_cap: 8192,
+            ..ContentionOpts::classic(true, 5)
+        };
+        let a = run_contention_with(&sc.mix, opts()).unwrap().obs.unwrap();
+        let b = run_contention_with(&sc.mix, opts()).unwrap().obs.unwrap();
+        assert_eq!(
+            perfetto_json(&a, None).to_pretty(),
+            perfetto_json(&b, None).to_pretty(),
+            "{preset}: perfetto bytes diverged"
+        );
+        assert_eq!(
+            decision_log(&a, None),
+            decision_log(&b, None),
+            "{preset}: decision-log bytes diverged"
+        );
+    }
+    let mix = ContentionMix::preset("burst", 32).unwrap();
+    let fed = FederationConfig {
+        instances: 2,
+        ..FederationConfig::default()
+    };
+    let opts = || ContentionOpts {
+        pool: pooled(16),
+        trace_cap: 8192,
+        ..ContentionOpts::classic(true, 9)
+    };
+    let a = run_contention_federated(&mix, opts(), fed).unwrap().obs.unwrap();
+    let b = run_contention_federated(&mix, opts(), fed).unwrap().obs.unwrap();
+    assert_eq!(
+        perfetto_json(&a, None).to_pretty(),
+        perfetto_json(&b, None).to_pretty(),
+        "federated: perfetto bytes diverged"
+    );
+    assert_eq!(
+        decision_log(&a, None),
+        decision_log(&b, None),
+        "federated: decision-log bytes diverged"
+    );
+}
+
+/// The acceptance scenario: a recorder-on federated burst run exports a
+/// Perfetto-shaped document with events from at least four subsystems,
+/// one process lane per instance plus one for the gateway.
+#[test]
+fn federated_burst_trace_covers_four_subsystems() {
+    let mix = ContentionMix::preset("burst", 64).unwrap();
+    let fed = FederationConfig {
+        instances: 2,
+        ..FederationConfig::default()
+    };
+    let opts = ContentionOpts {
+        pool: pooled(32),
+        trace_cap: 1 << 16,
+        ..ContentionOpts::classic(true, 7)
+    };
+    let res = run_contention_federated(&mix, opts, fed).unwrap();
+    let snap = res.obs.as_ref().expect("traced federated run carries a snapshot");
+    let seen = snap.subsystems_seen();
+    for sub in [
+        Subsystem::Scheduler,
+        Subsystem::Backfill,
+        Subsystem::Pool,
+        Subsystem::Federation,
+    ] {
+        assert!(seen.contains(&sub), "missing {sub:?} events; saw {seen:?}");
+    }
+    assert!(seen.len() >= 4, "expected >= 4 subsystems, saw {seen:?}");
+    // Instance lanes 0 and 1, gateway lane 2.
+    for pid in 0..=2u32 {
+        assert!(
+            snap.events.iter().any(|e| e.pid == pid),
+            "no events on process lane {pid}"
+        );
+    }
+    let text = perfetto_json(snap, None).to_pretty();
+    assert!(text.starts_with('{'), "perfetto export is one JSON object");
+    for key in [
+        "\"traceEvents\":",
+        "\"process_name\"",
+        "\"thread_name\"",
+        "\"ph\": \"i\"",
+        "\"metadata\":",
+    ] {
+        assert!(text.contains(key), "perfetto export missing {key}");
+    }
+    // A subsystem filter keeps exactly that subsystem's vocabulary.
+    let pool_only = decision_log(snap, Some(Subsystem::Pool));
+    assert!(pool_only.contains("pool_dispatch"), "pool filter keeps pool events");
+    assert!(
+        !pool_only.contains("gateway_route") && !pool_only.contains(" pick "),
+        "pool filter drops other subsystems"
+    );
+}
+
+/// The ring is a bounded window: a small cap keeps at most `cap`
+/// records and counts what it overwrote, while the registry still
+/// counts everything — capacity changes retention, never observation.
+#[test]
+fn ring_cap_bounds_retention_and_counts_drops() {
+    let mix = ContentionMix::preset("burst", 32).unwrap();
+    let opts = |cap: usize| ContentionOpts {
+        pool: pooled(32),
+        trace_cap: cap,
+        ..ContentionOpts::classic(true, 3)
+    };
+    let small = run_contention_with(&mix, opts(64)).unwrap().obs.unwrap();
+    assert!(small.events.len() <= 64, "ring respects its capacity");
+    assert!(small.dropped > 0, "a burst run overflows a 64-slot ring");
+    assert_eq!(
+        small.total_events(),
+        small.events.len() as u64 + small.dropped,
+        "registry total = retained + dropped"
+    );
+    let big = run_contention_with(&mix, opts(1 << 20)).unwrap().obs.unwrap();
+    assert_eq!(big.dropped, 0, "a huge ring drops nothing");
+    assert_eq!(
+        big.total_events(),
+        small.total_events(),
+        "capacity changes retention, not what was observed"
+    );
+    assert_eq!(
+        &big.events[big.events.len() - small.events.len()..],
+        &small.events[..],
+        "the small ring keeps exactly the latest window"
+    );
+}
+
+/// Every retained record respects the documented vocabulary, and the
+/// injected host clock makes the single-recorder stream strictly
+/// ordered.
+#[test]
+fn recorded_events_respect_the_vocabulary() {
+    let sc = ChurnScenario::preset("churn_full", 32).unwrap();
+    let opts = ContentionOpts {
+        pool: pooled(32),
+        fault: sc.fault.clone(),
+        trace_cap: 1 << 18,
+        ..ContentionOpts::classic(true, 13)
+    };
+    let snap = run_contention_with(&sc.mix, opts).unwrap().obs.unwrap();
+    assert!(snap.subsystems_seen().contains(&Subsystem::Fault), "churn records cascades");
+    for ev in &snap.events {
+        assert!(ev.t >= 0.0, "simulated time is non-negative");
+        match ev.kind {
+            TraceKind::Pick => assert!(ev.unit <= 13, "pick branch code in range: {}", ev.unit),
+            TraceKind::RegisterRoute => {
+                assert!(ev.detail == 0 || ev.detail == 1, "route detail is pool/batch")
+            }
+            TraceKind::FaultCascade => {
+                assert!((0..=4).contains(&ev.detail), "cascade step code in range")
+            }
+            _ => {}
+        }
+    }
+    assert!(
+        snap.events.windows(2).all(|w| w[0].host_ns < w[1].host_ns),
+        "one recorder's stream is strictly host-clock ordered"
+    );
+}
+
+/// Property 1's timeline half: `without_timeline()` must leave the
+/// utilization series provably empty even on the pool dispatch/release
+/// paths (which push their own occupancy deltas) — and stripping the
+/// timeline must not change the schedule.
+#[test]
+fn without_timeline_stays_empty_on_pool_paths() {
+    let short = |name: &str| JobSpec {
+        name: name.into(),
+        tasks: vec![SchedTaskSpec {
+            request: ResourceRequest::WholeNode,
+            duration: 2.0,
+            batch: ComputeBatch { count: 1, each: 2.0 },
+            lanes: 64,
+        }],
+        reservation: None,
+        priority: 0,
+        preemptable: false,
+    };
+    let run = |strip: bool| {
+        let mut sim = SchedulerSim::new(
+            Cluster::tx_green(4),
+            CostModel::slurm_like_tx_green(),
+            NoiseModel::dedicated(),
+            9,
+        )
+        .with_backfill(true)
+        .with_pool(PoolConfig { size: 2, min: 1, max: 3, ..PoolConfig::sized(2) });
+        if strip {
+            sim = sim.without_timeline();
+        }
+        let mut q = EventQueue::new();
+        for i in 0..8 {
+            sim.submit_at(&mut q, 0.5 + 0.7 * f64::from(i), short(&format!("short-{i}")));
+        }
+        sim.run(&mut q)
+    };
+    let with = run(false);
+    let without = run(true);
+    assert!(
+        with.pool.as_ref().is_some_and(|p| p.launches > 0),
+        "the workload exercises the pool dispatch path"
+    );
+    assert!(!with.timeline.is_empty(), "timeline recording is on by default");
+    assert!(without.timeline.is_empty(), "without_timeline() must record nothing");
+    assert_eq!(
+        with.final_time.to_bits(),
+        without.final_time.to_bits(),
+        "stripping the timeline must not change the schedule"
+    );
+    assert_eq!(with.events_processed, without.events_processed);
+}
+
+/// Opt-in self-profiling accumulates `pick_next` invocations and the
+/// simulated charge; it must not disturb the trace itself.
+#[test]
+fn self_profiling_accumulates_pick_timings() {
+    let mix = ContentionMix::preset("tiny", 8).unwrap();
+    let opts = |profile: bool| ContentionOpts {
+        trace_cap: 4096,
+        trace_profile: profile,
+        ..ContentionOpts::classic(true, 3)
+    };
+    let plain = run_contention_with(&mix, opts(false)).unwrap().obs.unwrap();
+    assert!(plain.profile.is_none(), "profiling is opt-in");
+    let profiled = run_contention_with(&mix, opts(true)).unwrap().obs.unwrap();
+    let p = profiled.profile.expect("profiling on");
+    assert!(p.picks > 0, "picks were timed");
+    assert!(p.sim_cost_s > 0.0, "simulated charge accumulated");
+    assert_eq!(
+        decision_log(&plain, None),
+        decision_log(&profiled, None),
+        "profiling must not change the recorded decisions"
+    );
+}
