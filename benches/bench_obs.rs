@@ -1,0 +1,133 @@
+//! Bench: flight-recorder overhead + the bench-trajectory watchdog.
+//!
+//! Two acceptance bars for the observability layer:
+//!
+//! 1. **Recorder overhead** — running the burst contention scenario
+//!    with the flight recorder on (`trace_cap = 1<<20`) must cost at
+//!    most **15%** wall time over the identical recorder-off run. The
+//!    recorder is a branch + ring push per decision; if that bar
+//!    moves, an observation site grew a real cost.
+//! 2. **Trajectory watchdog** — the headline ratios in the workspace
+//!    `BENCH_*.json` artifacts (pool dispatch speedup at ≥4096 nodes,
+//!    trace replay speedup at ≥65536 nodes, federation rate gain) must
+//!    not regress past `--tolerance` against the pinned baselines in
+//!    `--baseline-dir`, and must stay above their hard floors
+//!    (10×/5×/3×) regardless.
+//!
+//! ```bash
+//! cargo bench --bench bench_obs                       # full run
+//! cargo bench --bench bench_obs -- --quick            # CI smoke
+//! cargo bench --bench bench_obs -- --baseline-dir baseline --tolerance 0.25
+//! cargo bench --bench bench_obs -- --bless            # report, never fail
+//! ```
+//!
+//! `--bless` prints every verdict but exits 0 — use it when
+//! intentionally re-pinning baselines (commit the fresh `BENCH_*.json`
+//! files as the new baseline afterwards). Results land in
+//! `BENCH_obs.json` at the crate root.
+
+use llsched::bench::watchdog;
+use llsched::bench::{arg_value, bench, fmt_secs, has_flag, section, write_artifact, BenchOpts};
+use llsched::coordinator::experiment::{run_contention_with, ContentionOpts};
+use llsched::pool::PoolConfig;
+use llsched::util::json::Json;
+use llsched::workload::contention::ContentionMix;
+use std::path::Path;
+
+/// Parse `--flag value` as a string from argv (panics on malformed
+/// input: a bench invocation error should fail loudly).
+fn arg_str<'a>(args: &'a [String], flag: &str) -> Option<&'a str> {
+    args.iter().position(|a| a == flag).map(|i| {
+        args.get(i + 1)
+            .unwrap_or_else(|| panic!("{flag} needs a value"))
+            .as_str()
+    })
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = has_flag(&args, "--quick");
+    let bless = has_flag(&args, "--bless");
+    let nodes = arg_value(&args, "--nodes")
+        .map(|v| v as u32)
+        .unwrap_or(if quick { 32 } else { 64 });
+    let iters = arg_value(&args, "--iters")
+        .map(|v| v as usize)
+        .unwrap_or(if quick { 5 } else { 7 });
+    let bar_pct = arg_value(&args, "--overhead-bar").unwrap_or(15.0);
+    let tolerance = arg_value(&args, "--tolerance").unwrap_or(0.25);
+    let baseline_dir = arg_str(&args, "--baseline-dir").unwrap_or(".");
+
+    section(&format!("recorder overhead at burst ({nodes} nodes, {iters} iters)"));
+    let mix = ContentionMix::preset("burst", nodes).expect("burst preset");
+    // The `trace`/`explain` pool-fleet defaults, so the traced run
+    // exercises the pool observation sites too.
+    let opts_for = |trace_cap: usize| {
+        let n = nodes as usize;
+        ContentionOpts {
+            pool: PoolConfig {
+                size: (n / 4).max(1),
+                min: (n / 8).min((n / 4).max(1)),
+                max: (3 * n / 4).max((n / 4).max(1)),
+                ..PoolConfig::disabled()
+            },
+            trace_cap,
+            ..ContentionOpts::classic(true, 7)
+        }
+    };
+    let bench_opts = BenchOpts {
+        warmup: 1,
+        iters,
+        max_wall: std::time::Duration::from_secs(120),
+    };
+    let untraced = bench("burst, recorder off (trace_cap 0)", bench_opts, |_| {
+        run_contention_with(&mix, opts_for(0)).expect("untraced run")
+    });
+    println!("{}", untraced.line());
+    let traced = bench("burst, recorder on (trace_cap 1<<20)", bench_opts, |_| {
+        run_contention_with(&mix, opts_for(1 << 20)).expect("traced run")
+    });
+    println!("{}", traced.line());
+    let overhead_pct = (traced.summary.p50 / untraced.summary.p50 - 1.0) * 100.0;
+    let overhead_ok = overhead_pct <= bar_pct;
+    println!(
+        "recorder overhead: traced p50 {} vs untraced p50 {} → {overhead_pct:+.1}% \
+         (bar {bar_pct:.0}%)  [{}]",
+        fmt_secs(traced.summary.p50),
+        fmt_secs(untraced.summary.p50),
+        if overhead_ok { "PASS" } else { "FAIL" }
+    );
+
+    section(&format!("bench-trajectory watchdog (baselines: {baseline_dir})"));
+    let rep = watchdog::run(Path::new("."), Path::new(baseline_dir), tolerance);
+    for line in rep.lines() {
+        println!("{line}");
+    }
+
+    let failed = !bless && (!overhead_ok || !rep.passed);
+    if bless && (!overhead_ok || !rep.passed) {
+        println!("(--bless: reporting only, not failing)");
+    }
+    let report = Json::obj()
+        .set("bench", "bench_obs")
+        .set("command", std::env::args().collect::<Vec<_>>().join(" "))
+        .set(
+            "overhead",
+            Json::obj()
+                .set("preset", "burst")
+                .set("nodes", nodes)
+                .set("iters", iters)
+                .set("untraced_p50_s", untraced.summary.p50)
+                .set("traced_p50_s", traced.summary.p50)
+                .set("overhead_pct", overhead_pct)
+                .set("bar_pct", bar_pct)
+                .set("passed", overhead_ok),
+        )
+        .set("tolerance", tolerance)
+        .set("watchdog", rep.to_json())
+        .set("passed", !failed);
+    write_artifact("BENCH_obs.json", &report);
+    if failed {
+        std::process::exit(1);
+    }
+}

@@ -4,6 +4,8 @@
 //!-clock budgets, and a uniform report format used by every bench binary
 //! under `benches/`.
 
+pub mod watchdog;
+
 use crate::util::json::Json;
 use crate::util::stats::Summary;
 use std::time::{Duration, Instant};

@@ -1,0 +1,299 @@
+//! SLO watchdog over the bench trajectory: compare fresh `BENCH_*.json`
+//! artifacts against pinned baselines and fail on regression of the
+//! headline metrics the repo advertises.
+//!
+//! The watched metrics are deliberately *ratios* (speedups, rate
+//! gains), not absolute wall times: ratios compare the same machine
+//! against itself inside one bench run, so a baseline recorded on one
+//! box remains meaningful on another. Each metric also carries a hard
+//! floor from the repo's performance claims (≥10× pool dispatch at
+//! ≥4096 nodes, ≥5× trace replay at ≥65536 nodes, ≥3× federation rate
+//! gain) — a fresh value below its floor fails even when it matches
+//! the baseline, because then the *claim* is broken, not just the
+//! trend.
+
+use crate::util::json::Json;
+use std::path::Path;
+
+/// Artifacts the watchdog knows how to read headline metrics from.
+pub const WATCHED: [&str; 2] = ["BENCH_pool.json", "BENCH_federation.json"];
+
+/// One headline metric extracted from a bench artifact.
+#[derive(Debug, Clone)]
+pub struct Metric {
+    /// Stable metric name, e.g. `dispatch_speedup_at_4096_nodes`.
+    pub name: &'static str,
+    /// Hard floor from the repo's performance claims.
+    pub floor: f64,
+    pub value: f64,
+}
+
+/// The comparison of one metric between a fresh artifact and the
+/// pinned baseline.
+#[derive(Debug, Clone)]
+pub struct Verdict {
+    /// `file:metric` label.
+    pub metric: String,
+    pub fresh: f64,
+    /// NaN when the baseline artifact or metric was missing.
+    pub baseline: f64,
+    pub floor: f64,
+    pub passed: bool,
+    pub note: String,
+}
+
+/// The full watchdog outcome over every watched artifact.
+#[derive(Debug, Clone)]
+pub struct WatchdogReport {
+    pub verdicts: Vec<Verdict>,
+    pub passed: bool,
+}
+
+impl WatchdogReport {
+    /// One report line per verdict plus a PASS/FAIL trailer.
+    pub fn lines(&self) -> Vec<String> {
+        let mut out: Vec<String> = self
+            .verdicts
+            .iter()
+            .map(|v| {
+                format!(
+                    "{:<4} {:<50} fresh {:>9} baseline {:>9} floor {:>6} — {}",
+                    if v.passed { "ok" } else { "FAIL" },
+                    v.metric,
+                    num(v.fresh),
+                    num(v.baseline),
+                    num(v.floor),
+                    v.note,
+                )
+            })
+            .collect();
+        out.push(format!("watchdog: {}", if self.passed { "PASS" } else { "FAIL" }));
+        out
+    }
+
+    /// The report as a `BENCH_obs.json` section (NaN emits as null).
+    pub fn to_json(&self) -> Json {
+        let rows: Vec<Json> = self
+            .verdicts
+            .iter()
+            .map(|v| {
+                Json::obj()
+                    .set("metric", v.metric.clone())
+                    .set("fresh", v.fresh)
+                    .set("baseline", v.baseline)
+                    .set("floor", v.floor)
+                    .set("passed", v.passed)
+                    .set("note", v.note.clone())
+            })
+            .collect();
+        Json::obj().set("verdicts", Json::Arr(rows)).set("passed", self.passed)
+    }
+}
+
+/// Extract the headline metrics this artifact carries. Unknown files
+/// and absent sections yield an empty list, never an error — artifact
+/// schemas may grow fields without breaking the watchdog.
+pub fn headline_metrics(file: &str, doc: &Json) -> Vec<Metric> {
+    let mut ms = Vec::new();
+    match file {
+        "BENCH_pool.json" => {
+            if let Some(v) = max_speedup(doc, "dispatch", 4096.0) {
+                ms.push(Metric { name: "dispatch_speedup_at_4096_nodes", floor: 10.0, value: v });
+            }
+            if let Some(v) = max_speedup(doc, "trace", 65536.0) {
+                ms.push(Metric { name: "trace_speedup_at_65536_nodes", floor: 5.0, value: v });
+            }
+        }
+        "BENCH_federation.json" => {
+            if let Some(v) = doc.get("rate_gain").and_then(Json::as_f64) {
+                ms.push(Metric { name: "federation_rate_gain", floor: 3.0, value: v });
+            }
+        }
+        _ => {}
+    }
+    ms
+}
+
+/// Best `speedup` among `section` rows at or past the scale cutoff.
+fn max_speedup(doc: &Json, section: &str, min_nodes: f64) -> Option<f64> {
+    let rows = doc.get(section)?.as_arr()?;
+    let mut best: Option<f64> = None;
+    for row in rows {
+        let nodes = row.get("nodes").and_then(Json::as_f64).unwrap_or(0.0);
+        if nodes < min_nodes {
+            continue;
+        }
+        if let Some(s) = row.get("speedup").and_then(Json::as_f64) {
+            best = Some(best.map_or(s, |b| b.max(s)));
+        }
+    }
+    best
+}
+
+/// Compare fresh artifacts in `fresh_dir` against pinned baselines in
+/// `baseline_dir`. `tolerance` is fractional (0.25 = a fresh ratio may
+/// sit up to 25% below its baseline before counting as a regression —
+/// the watched ratios are machine-independent but still jitter). An
+/// unreadable fresh artifact fails loudly; a missing *baseline* only
+/// skips the comparison (first runs have nothing pinned yet), while
+/// the hard floors still apply.
+pub fn run(fresh_dir: &Path, baseline_dir: &Path, tolerance: f64) -> WatchdogReport {
+    let mut verdicts = Vec::new();
+    let mut passed = true;
+    for file in WATCHED {
+        let fresh_doc = match load(&fresh_dir.join(file)) {
+            Ok(d) => d,
+            Err(e) => {
+                passed = false;
+                verdicts.push(Verdict {
+                    metric: file.to_string(),
+                    fresh: f64::NAN,
+                    baseline: f64::NAN,
+                    floor: f64::NAN,
+                    passed: false,
+                    note: format!("fresh artifact unreadable: {e}"),
+                });
+                continue;
+            }
+        };
+        let base_metrics = match load(&baseline_dir.join(file)) {
+            Ok(d) => headline_metrics(file, &d),
+            Err(_) => Vec::new(),
+        };
+        for m in headline_metrics(file, &fresh_doc) {
+            let baseline = base_metrics.iter().find(|b| b.name == m.name).map(|b| b.value);
+            let mut ok = true;
+            let mut notes: Vec<String> = Vec::new();
+            if m.value < m.floor {
+                ok = false;
+                notes.push(format!("below the {:.0}x floor", m.floor));
+            }
+            match baseline {
+                Some(b) if m.value < b * (1.0 - tolerance) => {
+                    ok = false;
+                    notes.push(format!(
+                        "regressed more than {:.0}% vs baseline",
+                        tolerance * 100.0
+                    ));
+                }
+                Some(_) => {}
+                None => notes.push("no baseline; comparison skipped".into()),
+            }
+            if notes.is_empty() {
+                notes.push("ok".into());
+            }
+            passed &= ok;
+            verdicts.push(Verdict {
+                metric: format!("{file}:{}", m.name),
+                fresh: m.value,
+                baseline: baseline.unwrap_or(f64::NAN),
+                floor: m.floor,
+                passed: ok,
+                note: notes.join("; "),
+            });
+        }
+    }
+    WatchdogReport { verdicts, passed }
+}
+
+fn load(path: &Path) -> Result<Json, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    Json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+fn num(x: f64) -> String {
+    if x.is_nan() {
+        "-".into()
+    } else {
+        format!("{x:.2}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::fs;
+
+    fn pool_doc(dispatch_4096: f64, trace_65536: f64) -> String {
+        Json::obj()
+            .set("bench", "bench_pool")
+            .set(
+                "dispatch",
+                Json::Arr(vec![
+                    Json::obj().set("nodes", 512u64).set("speedup", 84.2),
+                    Json::obj().set("nodes", 4096u64).set("speedup", dispatch_4096),
+                ]),
+            )
+            .set(
+                "trace",
+                Json::Arr(vec![
+                    Json::obj().set("nodes", 4096u64).set("speedup", 2.7),
+                    Json::obj().set("nodes", 65536u64).set("speedup", trace_65536),
+                ]),
+            )
+            .to_pretty()
+    }
+
+    #[test]
+    fn headline_extraction_picks_the_at_scale_rows() {
+        let doc = Json::parse(&pool_doc(174.6, 28.9)).unwrap();
+        let ms = headline_metrics("BENCH_pool.json", &doc);
+        assert_eq!(ms.len(), 2);
+        assert_eq!(ms[0].name, "dispatch_speedup_at_4096_nodes");
+        assert_eq!(ms[0].value, 174.6, "the 512-node row is below the cutoff");
+        assert_eq!(ms[1].value, 28.9);
+        let fed = Json::obj().set("rate_gain", 4.0);
+        let ms = headline_metrics("BENCH_federation.json", &fed);
+        assert_eq!(ms.len(), 1);
+        assert_eq!(ms[0].value, 4.0);
+        assert!(headline_metrics("BENCH_other.json", &fed).is_empty());
+    }
+
+    #[test]
+    fn watchdog_passes_matching_dirs_and_fails_regressions() {
+        let root = std::env::temp_dir().join("llsched_watchdog_regression_test");
+        let (fresh, base) = (root.join("fresh"), root.join("base"));
+        fs::create_dir_all(&fresh).unwrap();
+        fs::create_dir_all(&base).unwrap();
+        let fed = Json::obj().set("rate_gain", 4.0).to_pretty();
+        fs::write(base.join("BENCH_pool.json"), pool_doc(174.6, 28.9)).unwrap();
+        fs::write(base.join("BENCH_federation.json"), &fed).unwrap();
+        fs::write(fresh.join("BENCH_pool.json"), pool_doc(174.6, 28.9)).unwrap();
+        fs::write(fresh.join("BENCH_federation.json"), &fed).unwrap();
+        let rep = run(&fresh, &base, 0.25);
+        assert!(rep.passed, "{:?}", rep.lines());
+        assert_eq!(rep.verdicts.len(), 3);
+        // A drop past the tolerance band fails (100 < 174.6 * 0.75)...
+        fs::write(fresh.join("BENCH_pool.json"), pool_doc(100.0, 28.9)).unwrap();
+        assert!(!run(&fresh, &base, 0.25).passed);
+        // ...a drop inside it does not (140 > 174.6 * 0.75).
+        fs::write(fresh.join("BENCH_pool.json"), pool_doc(140.0, 28.9)).unwrap();
+        assert!(run(&fresh, &base, 0.25).passed);
+        // Breaking the hard floor fails even with a matching baseline.
+        fs::write(fresh.join("BENCH_pool.json"), pool_doc(8.0, 28.9)).unwrap();
+        fs::write(base.join("BENCH_pool.json"), pool_doc(8.0, 28.9)).unwrap();
+        assert!(!run(&fresh, &base, 0.25).passed);
+    }
+
+    #[test]
+    fn missing_baseline_skips_while_missing_fresh_fails() {
+        let root = std::env::temp_dir().join("llsched_watchdog_missing_test");
+        let (fresh, base) = (root.join("fresh"), root.join("base"));
+        fs::create_dir_all(&fresh).unwrap();
+        fs::create_dir_all(&base).unwrap();
+        fs::write(fresh.join("BENCH_pool.json"), pool_doc(174.6, 28.9)).unwrap();
+        let fed = Json::obj().set("rate_gain", 4.0).to_pretty();
+        fs::write(fresh.join("BENCH_federation.json"), &fed).unwrap();
+        let rep = run(&fresh, &base, 0.25);
+        assert!(rep.passed, "no baseline is a skip: {:?}", rep.lines());
+        assert!(rep.verdicts.iter().all(|v| v.baseline.is_nan()));
+        // An unreadable fresh artifact is loud, not a silent pass.
+        fs::remove_file(fresh.join("BENCH_federation.json")).unwrap();
+        let rep = run(&fresh, &base, 0.25);
+        assert!(!rep.passed);
+        // The JSON view mirrors the verdicts.
+        let j = rep.to_json();
+        assert_eq!(j.get("passed"), Some(&Json::Bool(false)));
+        assert_eq!(j.get("verdicts").and_then(Json::as_arr).map(<[Json]>::len), Some(3));
+    }
+}

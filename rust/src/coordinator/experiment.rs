@@ -12,7 +12,7 @@ use crate::federation::{FederationConfig, FederationOutcome, Gateway};
 use crate::metrics::contention::{per_class, pool_report, ClassReport, PoolReport};
 use crate::metrics::overhead::OverheadPoint;
 use crate::metrics::timeline::UtilizationSeries;
-use crate::obs::{Obs, ObsSnapshot, Subsystem};
+use crate::obs::{reconstruct_spans, Obs, ObsSnapshot, Subsystem, WaitBlame, BLAME_CAUSES};
 use crate::placement::Strategy;
 use crate::pool::{FleetConfig, PoolConfig, ShardConfig};
 use crate::scheduler::core::{HotPath, SchedulerSim, SimOutcome, TaskModel};
@@ -196,6 +196,11 @@ pub struct ContentionOpts {
     /// Only meaningful with `trace_cap > 0`; wall-clock, so excluded
     /// from the byte-determinism guarantees.
     pub trace_profile: bool,
+    /// Reconstruct per-job wait-blame spans from the recorder and
+    /// attach a per-class rollup to the result — the v7 export
+    /// switch. Needs `trace_cap > 0` to have any effect; off by
+    /// default so v6-and-earlier export bytes are untouched.
+    pub blame: bool,
     pub seed: u64,
 }
 
@@ -216,6 +221,7 @@ impl ContentionOpts {
             fault: FaultConfig::disabled(),
             trace_cap: 0,
             trace_profile: false,
+            blame: false,
             seed,
         }
     }
@@ -300,6 +306,9 @@ pub struct ContentionResult {
     /// Flight-recorder snapshot (`None` when `opts.trace_cap == 0` —
     /// the v6 export switch).
     pub obs: Option<ObsSnapshot>,
+    /// Per-class wait-blame rollup (`None` unless `opts.blame` and
+    /// the recorder were both on — the v7 export switch).
+    pub blame: Option<Vec<ClassBlame>>,
 }
 
 /// The federated slice of one contention run: the gateway knobs plus
@@ -314,6 +323,19 @@ pub struct FederationRunSummary {
     pub batches: u64,
     /// Aggregate p95 launch latency over all gateway jobs, seconds.
     pub p95_latency: f64,
+}
+
+/// Per-class wait-blame rollup reconstructed from the flight
+/// recorder — the v7 export payload.
+#[derive(Debug, Clone)]
+pub struct ClassBlame {
+    pub class: JobClass,
+    /// Launched jobs of this class with a reconstructed span.
+    pub jobs: usize,
+    /// Mean attributed wait over those jobs, seconds.
+    pub mean_wait_s: f64,
+    /// Per-cause totals, seconds, in [`BLAME_CAUSES`] order.
+    pub blame: WaitBlame,
 }
 
 /// Run one contention mix with the classic single-hold options — the
@@ -408,6 +430,10 @@ pub fn run_contention_with(
         .pool
         .as_ref()
         .map(|po| pool_report(&outcome.records, po, total_cores, span));
+    let blame = match (&outcome.obs, opts.blame) {
+        (Some(snap), true) => Some(class_blame(snap, &classes)),
+        _ => None,
+    };
     Ok(ContentionResult {
         mix_name: mix.name.clone(),
         nodes: mix.nodes,
@@ -425,6 +451,7 @@ pub fn run_contention_with(
         unfinished,
         federation: None,
         obs: outcome.obs,
+        blame,
     })
 }
 
@@ -493,6 +520,15 @@ pub fn run_contention_federated(
     let out = gw.run(subs);
     let reports = federation_class_reports(&out, total_cores);
     let utilization: f64 = reports.iter().map(|r| r.utilization).sum();
+    let blame = match (&out.obs, opts.blame) {
+        (Some(snap), true) => {
+            // Gateway job indices are dense submission indices, so the
+            // gateway job table doubles as the class table.
+            let classes: Vec<JobClass> = out.jobs.iter().map(|j| j.class).collect();
+            Some(class_blame(snap, &classes))
+        }
+        _ => None,
+    };
     Ok(ContentionResult {
         mix_name: mix.name.clone(),
         nodes: mix.nodes,
@@ -523,6 +559,7 @@ pub fn run_contention_federated(
         }),
         obs: out.obs,
         opts,
+        blame,
     })
 }
 
@@ -571,6 +608,31 @@ fn federation_class_reports(out: &FederationOutcome, total_cores: u64) -> Vec<Cl
                     0.0
                 },
             }
+        })
+        .collect()
+}
+
+/// Per-class wait-blame rollup from a flight-recorder snapshot:
+/// spans reconstructed by [`crate::obs::reconstruct_spans`], bucketed
+/// by the submission-order class table (job span keys are dense
+/// submission indices in both standalone and federated runs).
+fn class_blame(snap: &ObsSnapshot, classes: &[JobClass]) -> Vec<ClassBlame> {
+    let spans = reconstruct_spans(snap);
+    JOB_CLASSES
+        .iter()
+        .map(|&class| {
+            let mut jobs = 0usize;
+            let mut wait = 0.0f64;
+            let mut blame = WaitBlame::default();
+            for s in spans.spans.iter().filter(|s| s.launched) {
+                if classes.get(s.job as usize).copied() == Some(class) {
+                    jobs += 1;
+                    wait += s.wait_s;
+                    blame.merge(&s.blame);
+                }
+            }
+            let mean_wait_s = if jobs > 0 { wait / jobs as f64 } else { f64::NAN };
+            ClassBlame { class, jobs, mean_wait_s, blame }
         })
         .collect()
 }
@@ -871,6 +933,22 @@ const CONTENTION_SCHEMA_V6_EXTRA: [&str; 7] = [
     "obs_fed_events",
 ];
 
+/// The v7 column extension: per-class wait-blame rollups reconstructed
+/// from the flight recorder. Emitted only when some result opted into
+/// attribution (`blame: true`, which itself needs `trace_cap > 0`);
+/// blame-off rows in a mixed v7 document write a zero job count and
+/// leave the seconds cells empty, and shard rows always zero-fill.
+const CONTENTION_SCHEMA_V7_EXTRA: [&str; 8] = [
+    "obs_blame_jobs",
+    "obs_blame_mean_wait_s",
+    "obs_blame_hol_s",
+    "obs_blame_fence_s",
+    "obs_blame_cold_start_s",
+    "obs_blame_requeue_backoff_s",
+    "obs_blame_gateway_batch_s",
+    "obs_blame_steal_s",
+];
+
 /// Per-class contention series as CSV (one row per scenario × class),
 /// mirroring `fig1 --out`: the `contention --out DIR` data dump.
 /// Classic runs export the v1 schema exactly; any pool or preemptive-
@@ -879,7 +957,8 @@ const CONTENTION_SCHEMA_V6_EXTRA: [&str; 7] = [
 /// (v2 columns + the shard extension and per-shard rows); any fault-
 /// injected run switches it to v4 (+ the churn counter extension); any
 /// federated run switches it to v5 (+ the gateway extension); any
-/// recorder-on run switches it to v6 (+ the flight-recorder counters).
+/// recorder-on run switches it to v6 (+ the flight-recorder counters);
+/// any blame-on run switches it to v7 (+ the wait-attribution rollups).
 pub fn contention_csv(results: &[ContentionResult]) -> Csv {
     let extended = results
         .iter()
@@ -888,6 +967,7 @@ pub fn contention_csv(results: &[ContentionResult]) -> Csv {
     let faulted = results.iter().any(|r| r.opts.fault_enabled());
     let federated = results.iter().any(|r| r.federation.is_some());
     let traced = results.iter().any(|r| r.obs.is_some());
+    let blamed = results.iter().any(|r| r.blame.is_some());
     let mut header: Vec<&str> = CONTENTION_SCHEMA_V1.to_vec();
     if extended {
         header.extend(CONTENTION_SCHEMA_V2_EXTRA);
@@ -903,6 +983,9 @@ pub fn contention_csv(results: &[ContentionResult]) -> Csv {
     }
     if traced {
         header.extend(CONTENTION_SCHEMA_V6_EXTRA);
+    }
+    if blamed {
+        header.extend(CONTENTION_SCHEMA_V7_EXTRA);
     }
     let mut c = Csv::with_header(&header);
     for r in results {
@@ -1003,6 +1086,24 @@ pub fn contention_csv(results: &[ContentionResult]) -> Csv {
                 }
             }
         };
+        // The v7 wait-blame extension: per-class rollups reconstructed
+        // from the flight recorder (zero-filled on shard rows and on
+        // blame-off rows in a mixed document).
+        let blame_cols = |row: &mut Vec<String>, cb: Option<&ClassBlame>| match cb {
+            Some(cb) => {
+                row.push(cb.jobs.to_string());
+                row.push(f6(cb.mean_wait_s));
+                for i in 0..BLAME_CAUSES.len() {
+                    row.push(f6(cb.blame.get(i)));
+                }
+            }
+            None => {
+                row.push("0".into());
+                for _ in 0..=BLAME_CAUSES.len() {
+                    row.push(String::new());
+                }
+            }
+        };
         for rep in &r.reports {
             let mut row = prefix([
                 rep.class.to_string(),
@@ -1043,6 +1144,13 @@ pub fn contention_csv(results: &[ContentionResult]) -> Csv {
             }
             if traced {
                 obs_cols(&mut row);
+            }
+            if blamed {
+                let cb = r
+                    .blame
+                    .as_ref()
+                    .and_then(|b| b.iter().find(|cb| cb.class == rep.class));
+                blame_cols(&mut row, cb);
             }
             c.row(&row);
         }
@@ -1085,6 +1193,9 @@ pub fn contention_csv(results: &[ContentionResult]) -> Csv {
                     }
                     if traced {
                         obs_cols(&mut row);
+                    }
+                    if blamed {
+                        blame_cols(&mut row, None);
                     }
                     c.row(&row);
                 }
@@ -1203,6 +1314,22 @@ pub fn contention_json(results: &[ContentionResult]) -> Json {
                         .set("dropped", o.dropped)
                         .set("subsystems", subsystems),
                 );
+            }
+            if let Some(blame) = &r.blame {
+                let rows: Vec<Json> = blame
+                    .iter()
+                    .map(|cb| {
+                        let mut o = Json::obj()
+                            .set("class", cb.class.label())
+                            .set("jobs", cb.jobs)
+                            .set("mean_wait_s", cb.mean_wait_s);
+                        for (i, name) in BLAME_CAUSES.iter().enumerate() {
+                            o = o.set(format!("{name}_s"), cb.blame.get(i));
+                        }
+                        o
+                    })
+                    .collect();
+                run = run.set("blame", Json::Arr(rows));
             }
             run.set("classes", Json::Arr(classes))
         })

@@ -237,6 +237,9 @@ impl Gateway {
             let id = inst.sim.submit_at(&mut inst.q, t, spec);
             self.jobs[idx].inst_job = id;
             inst.candidates.push_back(idx);
+            // Cross-process join key for the span layer: gateway job
+            // `idx` now lives on instance `i` as local job `id`.
+            self.trace(TraceKind::JobLink, i as u32, idx as u64, t, id as i64);
         }
         self.insts[i].batches += 1;
         self.batches += 1;
@@ -311,6 +314,8 @@ impl Gateway {
             self.jobs[idx].steals += 1;
             self.steals += 1;
             self.trace(TraceKind::StealAttempt, donor as u32, idx as u64, t, recv as i64);
+            // Re-bind the join key: the job's local id changed hands.
+            self.trace(TraceKind::JobLink, recv as u32, idx as u64, t, id as i64);
             return Some(moved);
         }
         None

@@ -27,12 +27,19 @@ use llsched::fault::scenario::ChurnScenario;
 use llsched::fault::FaultConfig;
 use llsched::metrics::overhead::speedup;
 use llsched::metrics::report;
-use llsched::obs::{decision_log, perfetto_json, profile_lines, Subsystem};
+use llsched::obs::{
+    build_timeline, decision_log, perfetto_json, perfetto_spans, profile_lines,
+    reconstruct_spans, timeline_csv, timeline_json, JobSpan, SpanSet, Subsystem, WaitBlame,
+    BLAME_CAUSES,
+};
 use llsched::placement::Strategy;
 use llsched::pool::{PoolConfig, ShardConfig};
 use llsched::scheduler::queue::AgingPolicy;
+use llsched::util::csv::Csv;
 use llsched::util::fmt::dur;
-use llsched::workload::contention::{ContentionMix, WalltimeError};
+use llsched::util::json::Json;
+use llsched::util::stats::percentile;
+use llsched::workload::contention::{ContentionMix, JobClass, WalltimeError, JOB_CLASSES};
 use std::path::PathBuf;
 
 fn main() {
@@ -80,6 +87,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "churn" => cmd_churn(args),
         "federate" => cmd_federate(args),
         "trace" => cmd_trace(args),
+        "explain" => cmd_explain(args),
         "spot" => cmd_spot(args),
         "artifacts" => cmd_artifacts(args),
         other => {
@@ -195,6 +203,32 @@ commands:
                             against the cost model's simulated charge;
                             --no-pool traces the batch-only path; see
                             docs/observability.md for the event
+                            vocabulary
+  explain [--preset P] [--nodes N] [--seed S] [--instances I]
+          [--trace-cap N] [--job N] [--worst K] [--slo CLASS:P95]
+          [--interval S] [--no-pool] [--out DIR]
+                            run one scenario with the flight recorder +
+                            wait attribution on and explain where job
+                            latency came from: P is any contention or
+                            churn preset (default burst); prints the
+                            per-class wait-blame rollup over the causes
+                            hol|fence|cold_start|requeue_backoff|
+                            gateway_batch|steal, then the top --worst K
+                            jobs by attributed wait (default 10), or
+                            one job's full blame breakdown with
+                            --job N; --slo CLASS:P95 (e.g.
+                            interactive:2.0) checks the p95 attributed
+                            wait of that class per --interval-second
+                            window (default 1) and annotates every
+                            breached window with its dominant blame
+                            cause; --instances > 1 explains the
+                            federated fleet, where gateway batching and
+                            steal hops become blamable causes; --out
+                            writes per-job blame.csv + blame.json, the
+                            bucketed fleet timeline.csv +
+                            timeline.json, and spans.json (Perfetto
+                            wait/run span lanes); see
+                            docs/observability.md for the attribution
                             vocabulary
   spot [--nodes N]          spot-job release-latency comparison
   artifacts                 verify AOT artifacts load and execute
@@ -523,6 +557,7 @@ fn cmd_contention(args: &Args) -> Result<()> {
         fault: FaultConfig::disabled(),
         trace_cap: 0,
         trace_profile: false,
+        blame: false,
         seed,
     };
     let mut results: Vec<ContentionResult> = Vec::new();
@@ -758,11 +793,10 @@ fn cmd_trace(args: &Args) -> Result<()> {
         ));
     }
     let filter = match args.opt("trace-filter") {
-        Some(s) => Some(Subsystem::parse(s).ok_or_else(|| {
-            llsched::Error::Config(format!(
-                "unknown --trace-filter {s:?} (one of scheduler|backfill|pool|fault|federation)"
-            ))
-        })?),
+        Some(s) => Some(
+            Subsystem::parse_list(s)
+                .map_err(|e| llsched::Error::Config(format!("--trace-filter: {e}")))?,
+        ),
         None => None,
     };
     let format = args.opt("format").unwrap_or("both");
@@ -834,13 +868,387 @@ fn cmd_trace(args: &Args) -> Result<()> {
     let dir = PathBuf::from(args.opt("trace-out").unwrap_or("results"));
     std::fs::create_dir_all(&dir)?;
     if matches!(format, "perfetto" | "both") {
-        std::fs::write(dir.join("trace.json"), perfetto_json(snap, filter).to_pretty())?;
+        let json = perfetto_json(snap, filter.as_deref());
+        std::fs::write(dir.join("trace.json"), json.to_pretty())?;
     }
     if matches!(format, "log" | "both") {
-        std::fs::write(dir.join("trace.log"), decision_log(snap, filter))?;
+        std::fs::write(dir.join("trace.log"), decision_log(snap, filter.as_deref()))?;
     }
     println!("(trace exports in {dir:?})");
     Ok(())
+}
+
+fn cmd_explain(args: &Args) -> Result<()> {
+    args.expect_known(&[
+        "preset",
+        "nodes",
+        "seed",
+        "instances",
+        "trace-cap",
+        "job",
+        "worst",
+        "slo",
+        "interval",
+        "no-pool",
+        "out",
+    ])?;
+    let nodes: u32 = args.opt_parse("nodes", 32)?;
+    let seed: u64 = args.opt_parse("seed", 7)?;
+    let instances: usize = args.opt_parse("instances", 1)?;
+    if instances == 0 {
+        return Err(llsched::Error::Config("instances must be >= 1".into()));
+    }
+    // Attribution reconstructs spans from the ring window, so default
+    // to a cap that comfortably retains whole scenario runs.
+    let trace_cap: usize = args.opt_parse("trace-cap", 1 << 20)?;
+    if trace_cap == 0 {
+        return Err(llsched::Error::Config(
+            "trace-cap must be >= 1 (attribution reads the recorder)".into(),
+        ));
+    }
+    let interval: f64 = args.opt_parse("interval", 1.0)?;
+    if !interval.is_finite() || interval <= 0.0 {
+        return Err(llsched::Error::Config("--interval must be > 0".into()));
+    }
+    let job = match args.opt("job") {
+        Some(s) => match s.parse::<u64>() {
+            Ok(id) => Some(id),
+            Err(_) => {
+                return Err(llsched::Error::Config(format!("--job: bad job id {s:?}")));
+            }
+        },
+        None => None,
+    };
+    let worst: usize = args.opt_parse("worst", 10)?;
+    let slo = match args.opt("slo") {
+        Some(s) => Some(parse_slo(s)?),
+        None => None,
+    };
+    let preset = args.opt("preset").unwrap_or("burst");
+    let (mix, fault) = if preset.starts_with("churn_") {
+        let scenario = ChurnScenario::preset(preset, nodes)?;
+        (scenario.mix, scenario.fault)
+    } else {
+        (ContentionMix::preset(preset, nodes)?, FaultConfig::disabled())
+    };
+    // Same pool-fleet default as `trace`: cold starts are one of the
+    // causes worth attributing, over the partition each scheduler owns.
+    let pool = if args.flag("no-pool") {
+        PoolConfig::disabled()
+    } else {
+        let n = (nodes as usize / instances).max(2);
+        PoolConfig {
+            size: (n / 4).max(1),
+            min: (n / 8).min((n / 4).max(1)),
+            max: (3 * n / 4).max((n / 4).max(1)),
+            ..PoolConfig::disabled()
+        }
+    };
+    pool.validate().map_err(llsched::Error::Config)?;
+    let opts = ContentionOpts {
+        pool,
+        fault,
+        trace_cap,
+        blame: true,
+        ..ContentionOpts::classic(true, seed)
+    };
+    let res = if instances > 1 {
+        run_contention_federated(
+            &mix,
+            opts,
+            FederationConfig {
+                instances,
+                ..FederationConfig::default()
+            },
+        )?
+    } else {
+        run_contention_with(&mix, opts)?
+    };
+    // Job ids are dense submission indices on both the single-scheduler
+    // and the gateway path, so regenerating the mix recovers the job →
+    // class table without re-running anything.
+    let classes: Vec<JobClass> = mix.generate(seed).into_iter().map(|s| s.class).collect();
+    let snap = res.obs.as_ref().expect("an explain run always carries a recorder");
+    let spans = reconstruct_spans(snap);
+    let tl = build_timeline(snap, interval);
+    print_contention(&res);
+    println!();
+    if spans.partial {
+        println!(
+            "note: the ring dropped {} record(s) — spans are partial; raise --trace-cap",
+            snap.dropped
+        );
+    }
+    if let Some(blame) = &res.blame {
+        println!("wait blame by class (seconds attributed across launched jobs):");
+        let mut table = llsched::util::fmt::Table::new(vec![
+            "class",
+            "jobs",
+            "mean wait",
+            "hol",
+            "fence",
+            "cold start",
+            "requeue",
+            "gateway",
+            "steal",
+        ]);
+        for cb in blame {
+            let mut row = vec![cb.class.to_string(), cb.jobs.to_string(), secs(cb.mean_wait_s)];
+            for i in 0..BLAME_CAUSES.len() {
+                row.push(secs(cb.blame.get(i)));
+            }
+            table.row(row);
+        }
+        println!("{}", table.render());
+    }
+    match job {
+        Some(id) => match spans.get(id) {
+            Some(s) => print_span(s, &classes),
+            None => println!(
+                "job {id}: no span reconstructed (unknown id, or its records left the ring)"
+            ),
+        },
+        None => {
+            println!("top {worst} job(s) by attributed wait:");
+            let mut table = llsched::util::fmt::Table::new(vec![
+                "job",
+                "class",
+                "wait",
+                "dominant",
+                "hol",
+                "fence",
+                "cold",
+                "requeue",
+                "gateway",
+                "steal",
+                "hops",
+            ]);
+            for s in spans.worst(worst) {
+                let (cause, _) = s.blame.dominant();
+                let mut row = vec![
+                    s.job.to_string(),
+                    class_label(&classes, s.job).to_string(),
+                    secs(s.wait_s),
+                    BLAME_CAUSES[cause].to_string(),
+                ];
+                for i in 0..BLAME_CAUSES.len() {
+                    row.push(secs(s.blame.get(i)));
+                }
+                row.push(s.steal_hops.to_string());
+                table.row(row);
+            }
+            println!("{}", table.render());
+        }
+    }
+    if let Some((class, threshold)) = slo {
+        println!("SLO {class}: p95 attributed wait <= {threshold:.3}s per {interval:.1}s window");
+        let launched: Vec<&JobSpan> = spans
+            .spans
+            .iter()
+            .filter(|s| s.launched && classes.get(s.job as usize).copied() == Some(class))
+            .collect();
+        let mut breaches = 0usize;
+        for b in tl.fleet() {
+            let t1 = b.t0 + tl.interval_s;
+            let waits: Vec<f64> = launched
+                .iter()
+                .filter(|s| s.launch_t >= b.t0 && s.launch_t < t1)
+                .map(|s| s.wait_s)
+                .collect();
+            if waits.is_empty() {
+                continue;
+            }
+            let p95 = percentile(&waits, 95.0);
+            if p95 > threshold {
+                breaches += 1;
+                // The max wait is >= p95 > threshold, so the breaching
+                // set is never empty; blame the window on them.
+                let mut blame = WaitBlame::default();
+                for s in &launched {
+                    if s.launch_t >= b.t0 && s.launch_t < t1 && s.wait_s > threshold {
+                        blame.merge(&s.blame);
+                    }
+                }
+                let (cause, cause_s) = blame.dominant();
+                println!(
+                    "  breach [{:.1}s, {t1:.1}s): p95 wait {p95:.3}s over {} launch(es), \
+                     dominant blame {} ({:.3}s)",
+                    b.t0,
+                    waits.len(),
+                    BLAME_CAUSES[cause],
+                    cause_s,
+                );
+            }
+        }
+        if breaches == 0 {
+            println!("  no breached windows");
+        } else {
+            println!("  {breaches} breached window(s)");
+        }
+    }
+    if let Some(out) = args.opt("out") {
+        let dir = PathBuf::from(out);
+        std::fs::create_dir_all(&dir)?;
+        blame_csv(&spans, &classes).save(&dir.join("blame.csv"))?;
+        std::fs::write(
+            dir.join("blame.json"),
+            blame_json(&res, &spans, &classes).to_pretty(),
+        )?;
+        timeline_csv(&tl).save(&dir.join("timeline.csv"))?;
+        std::fs::write(dir.join("timeline.json"), timeline_json(&tl).to_pretty())?;
+        std::fs::write(dir.join("spans.json"), perfetto_spans(&spans).to_pretty())?;
+        println!("(explain exports in {dir:?})");
+    }
+    Ok(())
+}
+
+/// `--slo CLASS:P95_SECONDS`, e.g. `interactive:2.0`.
+fn parse_slo(s: &str) -> Result<(JobClass, f64)> {
+    let (class, thr) = s.split_once(':').ok_or_else(|| {
+        llsched::Error::Config(format!("--slo: expected CLASS:P95_SECONDS, got {s:?}"))
+    })?;
+    let class = JOB_CLASSES
+        .into_iter()
+        .find(|c| c.label() == class)
+        .ok_or_else(|| {
+            llsched::Error::Config(format!(
+                "--slo: unknown class {class:?} (one of interactive|batch)"
+            ))
+        })?;
+    let thr: f64 = thr
+        .parse()
+        .map_err(|_| llsched::Error::Config(format!("--slo: bad threshold {thr:?}")))?;
+    if !thr.is_finite() || thr <= 0.0 {
+        return Err(llsched::Error::Config("--slo: threshold must be > 0".into()));
+    }
+    Ok((class, thr))
+}
+
+fn class_label(classes: &[JobClass], job: u64) -> &'static str {
+    classes.get(job as usize).map(|c| c.label()).unwrap_or("?")
+}
+
+/// Seconds cell: `-` for NaN (no data), fixed millisecond precision
+/// otherwise.
+fn secs(x: f64) -> String {
+    if x.is_nan() {
+        "-".into()
+    } else {
+        format!("{x:.3}s")
+    }
+}
+
+fn print_span(s: &JobSpan, classes: &[JobClass]) {
+    println!(
+        "job {} ({}): {} task(s), instance {}",
+        s.job,
+        class_label(classes, s.job),
+        s.tasks,
+        s.pid
+    );
+    println!(
+        "  submitted {}  launched {}  finished {}",
+        secs(s.submit_t),
+        secs(s.launch_t),
+        secs(s.finish_t)
+    );
+    if !s.launched {
+        println!("  never launched — no wait window to attribute");
+        return;
+    }
+    println!("  wait {} attributed:", secs(s.wait_s));
+    for (i, name) in BLAME_CAUSES.iter().enumerate() {
+        let v = s.blame.get(i);
+        if v > 0.0 {
+            println!("    {name:<16} {v:>10.3}s  ({:.1}%)", 100.0 * v / s.wait_s.max(1e-12));
+        }
+    }
+    if s.steal_hops > 0 {
+        println!("  steal hops: {}", s.steal_hops);
+    }
+    if s.partial {
+        println!("  (partial: the ring dropped records during this run)");
+    }
+}
+
+/// Per-job blame table as CSV (one row per reconstructed span).
+fn blame_csv(spans: &SpanSet, classes: &[JobClass]) -> Csv {
+    let mut header: Vec<String> = ["job", "class", "pid", "tasks"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    header.extend(["submit_s", "launch_s", "finish_s", "wait_s"].iter().map(|s| s.to_string()));
+    header.extend(BLAME_CAUSES.iter().map(|c| format!("{c}_s")));
+    header.extend(["steal_hops", "launched", "partial"].iter().map(|s| s.to_string()));
+    let mut c = Csv::with_header(&header);
+    for s in &spans.spans {
+        let mut row = vec![
+            s.job.to_string(),
+            class_label(classes, s.job).to_string(),
+            s.pid.to_string(),
+            s.tasks.to_string(),
+        ];
+        for x in [s.submit_t, s.launch_t, s.finish_t, s.wait_s] {
+            row.push(if x.is_nan() { String::new() } else { format!("{x:.6}") });
+        }
+        for i in 0..BLAME_CAUSES.len() {
+            row.push(format!("{:.6}", s.blame.get(i)));
+        }
+        row.push(s.steal_hops.to_string());
+        row.push(s.launched.to_string());
+        row.push(s.partial.to_string());
+        c.row(&row);
+    }
+    c
+}
+
+/// Per-job spans plus the per-class rollup as one JSON document.
+fn blame_json(res: &ContentionResult, spans: &SpanSet, classes: &[JobClass]) -> Json {
+    let jobs: Vec<Json> = spans
+        .spans
+        .iter()
+        .map(|s| {
+            let mut o = Json::obj()
+                .set("job", s.job)
+                .set("class", class_label(classes, s.job))
+                .set("pid", s.pid)
+                .set("tasks", s.tasks)
+                .set("submit_s", s.submit_t)
+                .set("launch_s", s.launch_t)
+                .set("finish_s", s.finish_t)
+                .set("wait_s", s.wait_s)
+                .set("steal_hops", s.steal_hops)
+                .set("launched", s.launched)
+                .set("partial", s.partial);
+            for (i, name) in BLAME_CAUSES.iter().enumerate() {
+                o = o.set(format!("{name}_s"), s.blame.get(i));
+            }
+            o
+        })
+        .collect();
+    let mut doc = Json::obj()
+        .set("scenario", res.mix_name.clone())
+        .set("nodes", res.nodes)
+        .set("seed", res.opts.seed)
+        .set("partial", spans.partial)
+        .set("jobs", Json::Arr(jobs));
+    if let Some(blame) = &res.blame {
+        let rows: Vec<Json> = blame
+            .iter()
+            .map(|cb| {
+                let mut o = Json::obj()
+                    .set("class", cb.class.label())
+                    .set("jobs", cb.jobs)
+                    .set("mean_wait_s", cb.mean_wait_s);
+                for (i, name) in BLAME_CAUSES.iter().enumerate() {
+                    o = o.set(format!("{name}_s"), cb.blame.get(i));
+                }
+                o
+            })
+            .collect();
+        doc = doc.set("classes", Json::Arr(rows));
+    }
+    doc
 }
 
 fn cmd_federate(args: &Args) -> Result<()> {

@@ -9,8 +9,8 @@
 use super::{ObsSnapshot, ProfileAccum, Subsystem, TraceEvent};
 use crate::util::json::Json;
 
-fn keep(ev: &TraceEvent, filter: Option<Subsystem>) -> bool {
-    filter.is_none_or(|f| ev.kind.subsystem() == f)
+fn keep(ev: &TraceEvent, filter: Option<&[Subsystem]>) -> bool {
+    filter.is_none_or(|f| f.contains(&ev.kind.subsystem()))
 }
 
 /// Render a snapshot as Chrome-trace/Perfetto JSON (the "JSON object
@@ -19,7 +19,7 @@ fn keep(ev: &TraceEvent, filter: Option<Subsystem>) -> bool {
 /// instance, `tid` = subsystem, with unit/id/detail/host_ns in `args`.
 /// Process/thread-name metadata events come first so Perfetto labels
 /// the tracks.
-pub fn perfetto_json(snap: &ObsSnapshot, filter: Option<Subsystem>) -> Json {
+pub fn perfetto_json(snap: &ObsSnapshot, filter: Option<&[Subsystem]>) -> Json {
     let kept: Vec<&TraceEvent> = snap.events.iter().filter(|e| keep(e, filter)).collect();
 
     let mut pids: Vec<u32> = kept.iter().map(|e| e.pid).collect();
@@ -82,7 +82,7 @@ pub fn perfetto_json(snap: &ObsSnapshot, filter: Option<Subsystem>) -> Json {
         )
 }
 
-fn kept_count(snap: &ObsSnapshot, filter: Option<Subsystem>) -> u64 {
+fn kept_count(snap: &ObsSnapshot, filter: Option<&[Subsystem]>) -> u64 {
     snap.events.iter().filter(|e| keep(e, filter)).count() as u64
 }
 
@@ -92,7 +92,7 @@ fn kept_count(snap: &ObsSnapshot, filter: Option<Subsystem>) -> u64 {
 /// ```text
 /// [    1.234567] p0  pool       pool_dispatch   unit=3          id=1042     detail=17 host_ns=52000
 /// ```
-pub fn decision_log(snap: &ObsSnapshot, filter: Option<Subsystem>) -> String {
+pub fn decision_log(snap: &ObsSnapshot, filter: Option<&[Subsystem]>) -> String {
     let mut out = String::new();
     for ev in snap.events.iter().filter(|e| keep(e, filter)) {
         let unit =
@@ -158,14 +158,19 @@ mod tests {
     }
 
     #[test]
-    fn filter_keeps_one_subsystem() {
+    fn filter_keeps_listed_subsystems() {
         let s = sample();
-        let text = perfetto_json(&s, Some(Subsystem::Pool)).to_pretty();
+        let text = perfetto_json(&s, Some(&[Subsystem::Pool])).to_pretty();
         assert!(text.contains("pool_dispatch"));
         assert!(!text.contains("gateway_flush"));
-        let log = decision_log(&s, Some(Subsystem::Federation));
+        let log = decision_log(&s, Some(&[Subsystem::Federation]));
         assert_eq!(log.lines().count(), 1);
         assert!(log.contains("gateway_flush"));
+        // A two-subsystem list keeps both and drops the rest.
+        let both = decision_log(&s, Some(&[Subsystem::Pool, Subsystem::Federation]));
+        assert_eq!(both.lines().count(), 2);
+        assert!(both.contains("pool_dispatch") && both.contains("gateway_flush"));
+        assert!(!both.contains(" pick "));
     }
 
     #[test]

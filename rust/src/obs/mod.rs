@@ -30,11 +30,18 @@
 
 mod export;
 mod registry;
+pub mod spans;
+pub mod timeline;
 mod trace;
 
 pub use export::{decision_log, perfetto_json, profile_lines};
 pub use registry::{
     Histogram, Registry, DECISION_LATENCY_BOUNDS, QUEUE_DEPTH_BOUNDS, STEAL_HOPS_BOUNDS,
+};
+pub use spans::{reconstruct_spans, JobSpan, SpanSet, WaitBlame, BLAME_CAUSES};
+pub use timeline::{
+    build_timeline, perfetto_spans, timeline_csv, timeline_json, Timeline, TimelineBucket,
+    FLEET_PID,
 };
 pub use trace::{MonoClock, Subsystem, TraceEvent, TraceKind, TraceRing};
 
@@ -169,8 +176,18 @@ impl ObsSnapshot {
 
     /// Merge per-instance snapshots (already pid-tagged at recorder
     /// construction) into one fleet snapshot: events interleaved in
-    /// deterministic `(sim time, pid, host_ns)` order, registries
-    /// summed, profiles summed when any part carried one.
+    /// the total, documented `(sim time, pid, host_ns, seq)` order —
+    /// `seq` being each event's position in the concatenation of the
+    /// parts in iteration order — registries summed, profiles summed
+    /// when any part carried one.
+    ///
+    /// The final `seq` tie-break matters: every recorder's injected
+    /// [`MonoClock`] starts at the same origin, so two *different*
+    /// parts carrying the same pid (e.g. re-merged snapshots) can
+    /// collide on `(t, pid, host_ns)`. Without a total order the sort
+    /// would be free to reorder such events between runs, breaking the
+    /// byte-identical-exports pin and deterministic federated span
+    /// reconstruction.
     pub fn merge<'a>(parts: impl IntoIterator<Item = &'a ObsSnapshot>) -> ObsSnapshot {
         let mut events: Vec<TraceEvent> = Vec::new();
         let mut dropped = 0;
@@ -187,12 +204,14 @@ impl ObsSnapshot {
                 acc.sim_cost_s += p.sim_cost_s;
             }
         }
-        events.sort_by(|a, b| {
-            a.t.partial_cmp(&b.t)
-                .unwrap_or(std::cmp::Ordering::Equal)
+        let mut order: Vec<(usize, &TraceEvent)> = events.iter().enumerate().collect();
+        order.sort_by(|(sa, a), (sb, b)| {
+            a.t.total_cmp(&b.t)
                 .then(a.pid.cmp(&b.pid))
                 .then(a.host_ns.cmp(&b.host_ns))
+                .then(sa.cmp(sb))
         });
+        let events = order.into_iter().map(|(_, e)| *e).collect();
         ObsSnapshot { events, dropped, registry, profile }
     }
 }
@@ -227,6 +246,33 @@ mod tests {
         assert_eq!(s.dropped, 3);
         assert_eq!(s.total_events(), 5, "counters survive ring overwrites");
         assert_eq!(s.events.len() as u64 + s.dropped, s.total_events());
+    }
+
+    #[test]
+    fn merge_order_is_total_when_events_share_a_timestamp() {
+        // Two parts tagged with the same pid whose injected clocks both
+        // start at 0: every event pair collides on (t, pid, host_ns),
+        // so only the concatenation-index tie-break orders them. The
+        // documented order is (t, pid, host_ns, seq) — part A's events
+        // strictly before part B's — and it must be stable across
+        // merges (the federated determinism regression).
+        let mut a = Obs::new(8).with_pid(3);
+        let mut b = Obs::new(8).with_pid(3);
+        a.record(TraceKind::Pick, 0, 100, 1.0, 0);
+        b.record(TraceKind::PoolDispatch, 0, 200, 1.0, 0);
+        let (sa, sb) = (a.snapshot(), b.snapshot());
+        let m1 = ObsSnapshot::merge([&sa, &sb]);
+        let m2 = ObsSnapshot::merge([&sa, &sb]);
+        let ids: Vec<u64> = m1.events.iter().map(|e| e.id).collect();
+        assert_eq!(ids, vec![100, 200], "concatenation order breaks the tie");
+        assert_eq!(
+            m1.events, m2.events,
+            "same parts, same order — merge is deterministic"
+        );
+        // And NaN-free totality: total_cmp never panics and never
+        // reports Equal for distinct times.
+        let order: Vec<f64> = m1.events.iter().map(|e| e.t).collect();
+        assert!(order.windows(2).all(|w| w[0] <= w[1]));
     }
 
     #[test]

@@ -1,0 +1,724 @@
+//! Span reconstruction and wait attribution: fold the flight
+//! recorder's event stream back into per-job lifecycle spans and
+//! decompose each job's queue wait into named causes.
+//!
+//! The recorder (PR 9) answers *what happened*; this layer answers
+//! *why a given job waited*. It is a pure function of an
+//! [`ObsSnapshot`] — no scheduler state, no randomness — so spans are
+//! deterministic and federated snapshots merged with
+//! [`ObsSnapshot::merge`] reconstruct identically every run.
+//!
+//! ## Anchors
+//!
+//! A job's span is stitched from the trace vocabulary:
+//!
+//! * **submit** — the `Pick` branch-0 record emitted at `Submit`
+//!   (standalone), or the `GatewayRoute` record (federated).
+//! * **queued** — the `JobQueued` record, which also carries the
+//!   job's contiguous task-arena range (`unit` = task count,
+//!   `detail` = first task id): the job→task join key.
+//! * **launch** — the first task to start. Pool tasks anchor on
+//!   `PoolDispatch`, backfilled tasks on `BackfillAdmit`, held tasks
+//!   on `HoldClear`, and plain dispatches on a *resolved* `Pick`
+//!   branch-2 attempt: an attempt whose next same-task event is a
+//!   `WaitCause` fence/capacity marker failed; any other resolution
+//!   means the task started at `t + detail/1e9` (the pick's service
+//!   charge).
+//! * **finish** — the last `Pick` branch-4 (cleanup) record.
+//! * **steal hops** — `JobLink` records chain a gateway job index
+//!   through every instance that ever owned it; the last link is the
+//!   instance whose local span finishes the job.
+//!
+//! ## Blame
+//!
+//! The wait window (submit → first launch, plus one re-wait window
+//! per fault requeue) is tiled by *cause segments*: the current cause
+//! starts as head-of-line and flips at each `WaitCause` marker
+//! recorded for one of the job's tasks. Because the segments
+//! telescope, the per-cause totals sum to the job's total wait to
+//! float rounding — the invariant pinned by
+//! `rust/tests/obs_spans_properties.rs`.
+//!
+//! When the ring dropped records (`snapshot.dropped > 0`) anchors may
+//! be missing, so every span — and the [`SpanSet`] itself — is marked
+//! `partial` and the sum invariant is not claimed.
+
+use std::collections::BTreeMap;
+
+use super::{ObsSnapshot, TraceKind};
+
+/// Names of the wait-blame causes, indexed by the `WaitBlame` part
+/// order: head-of-line capacity blocking, backfill-fence/hold
+/// rejection, pool cold-start (resize cooldown), fault-requeue retry
+/// backoff, gateway batching delay, federation steal hops.
+pub const BLAME_CAUSES: [&str; 6] =
+    ["hol", "fence", "cold_start", "requeue_backoff", "gateway_batch", "steal"];
+
+/// `BLAME_CAUSES` indices, named.
+pub const CAUSE_HOL: usize = 0;
+pub const CAUSE_FENCE: usize = 1;
+pub const CAUSE_COLD_START: usize = 2;
+pub const CAUSE_REQUEUE: usize = 3;
+pub const CAUSE_GATEWAY: usize = 4;
+pub const CAUSE_STEAL: usize = 5;
+
+/// Map a `WaitCause` marker's `unit` (the on-wire cause code) to a
+/// `BLAME_CAUSES` index. Codes: 0 hold-park/head-of-line, 1
+/// cooldown-block, 2 fence-reject, 3 requeue-backoff.
+fn marker_cause(code: u32) -> usize {
+    match code {
+        1 => CAUSE_COLD_START,
+        2 => CAUSE_FENCE,
+        3 => CAUSE_REQUEUE,
+        _ => CAUSE_HOL,
+    }
+}
+
+/// Per-cause seconds of attributed queue wait for one job (or an
+/// aggregate over many).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct WaitBlame {
+    /// Seconds per cause, in `BLAME_CAUSES` order.
+    pub parts: [f64; 6],
+}
+
+impl WaitBlame {
+    /// Attribute `dt` seconds to one cause (negative clamps to zero).
+    pub fn add(&mut self, cause: usize, dt: f64) {
+        if dt > 0.0 {
+            self.parts[cause] += dt;
+        }
+    }
+
+    /// Seconds attributed to one cause, by `BLAME_CAUSES` index.
+    pub fn get(&self, cause: usize) -> f64 {
+        self.parts[cause]
+    }
+
+    /// Total attributed wait across every cause.
+    pub fn total(&self) -> f64 {
+        self.parts.iter().sum()
+    }
+
+    /// The largest cause, as `(BLAME_CAUSES index, seconds)`.
+    /// Ties break toward the lower index; all-zero blame reports
+    /// `(CAUSE_HOL, 0.0)`.
+    pub fn dominant(&self) -> (usize, f64) {
+        let mut best = (0, self.parts[0]);
+        for (i, &v) in self.parts.iter().enumerate().skip(1) {
+            if v > best.1 {
+                best = (i, v);
+            }
+        }
+        best
+    }
+
+    /// Sum another blame vector into this one.
+    pub fn merge(&mut self, other: &WaitBlame) {
+        for (a, b) in self.parts.iter_mut().zip(other.parts.iter()) {
+            *a += b;
+        }
+    }
+}
+
+/// One reconstructed job lifecycle span with its wait attribution.
+#[derive(Debug, Clone)]
+pub struct JobSpan {
+    /// Job key: the local job id (standalone) or the gateway job
+    /// index (federated).
+    pub job: u64,
+    /// Final owning instance (the gateway's routing target, after any
+    /// steals).
+    pub pid: u32,
+    /// Task count, from the `JobQueued` arena range.
+    pub tasks: u32,
+    /// Submission time: local `Submit` (standalone) or gateway
+    /// arrival (federated).
+    pub submit_t: f64,
+    /// Local queue-entry time on the final owner (NaN when the
+    /// anchor was dropped).
+    pub queued_t: f64,
+    /// First task launch (NaN when the job never launched in the
+    /// traced window).
+    pub launch_t: f64,
+    /// Last task cleanup (NaN when not observed).
+    pub finish_t: f64,
+    /// Whether any task of the job was observed launching.
+    pub launched: bool,
+    /// Federation steal hops the job took before launching.
+    pub steal_hops: u32,
+    /// Total attributed queue wait: submit → first launch, plus one
+    /// re-wait window per observed fault requeue.
+    pub wait_s: f64,
+    /// The wait, decomposed by cause. `blame.total()` equals
+    /// `wait_s` to float rounding on non-partial spans.
+    pub blame: WaitBlame,
+    /// True when anchors may be missing (ring drops, or a span whose
+    /// submit/queued record was not observed).
+    pub partial: bool,
+}
+
+/// Every job span reconstructed from one snapshot.
+#[derive(Debug, Clone)]
+pub struct SpanSet {
+    /// Spans, sorted by job key.
+    pub spans: Vec<JobSpan>,
+    /// True when the ring dropped records: every span is then partial
+    /// and the blame-sums-to-wait invariant is not claimed.
+    pub partial: bool,
+}
+
+impl SpanSet {
+    /// The span for one job key, if reconstructed.
+    pub fn get(&self, job: u64) -> Option<&JobSpan> {
+        self.spans.binary_search_by(|s| s.job.cmp(&job)).ok().map(|i| &self.spans[i])
+    }
+
+    /// The `k` launched jobs with the largest attributed wait,
+    /// longest first (ties break toward the lower job key).
+    pub fn worst(&self, k: usize) -> Vec<&JobSpan> {
+        let mut launched: Vec<&JobSpan> = self.spans.iter().filter(|s| s.launched).collect();
+        launched.sort_by(|a, b| b.wait_s.total_cmp(&a.wait_s).then(a.job.cmp(&b.job)));
+        launched.truncate(k);
+        launched
+    }
+
+    /// Sum of every span's blame vector.
+    pub fn total_blame(&self) -> WaitBlame {
+        let mut acc = WaitBlame::default();
+        for s in &self.spans {
+            acc.merge(&s.blame);
+        }
+        acc
+    }
+
+    /// Mean attributed wait over launched jobs (NaN when none).
+    pub fn mean_wait_s(&self) -> f64 {
+        let launched: Vec<f64> =
+            self.spans.iter().filter(|s| s.launched).map(|s| s.wait_s).collect();
+        if launched.is_empty() {
+            f64::NAN
+        } else {
+            launched.iter().sum::<f64>() / launched.len() as f64
+        }
+    }
+}
+
+/// Local (per-instance) job bookkeeping built from the stream.
+#[derive(Debug, Clone)]
+struct LocalJob {
+    submit_t: f64,
+    queued_t: f64,
+    first_task: u64,
+    count: u32,
+}
+
+/// Per-task reconstruction state: the online state machine that
+/// resolves dispatch attempts and collects launch/requeue/marker
+/// timelines.
+#[derive(Debug, Clone, Default)]
+struct TaskTrack {
+    /// An unresolved `Pick` branch-2 attempt: `(pick t, cost s)`.
+    pending: Option<(f64, f64)>,
+    /// Whether the task is currently between queue entry (or a
+    /// requeue) and its next launch.
+    waiting: bool,
+    /// Observed launch times, oldest first.
+    launches: Vec<f64>,
+    /// Fault requeues: `(requeue t, retry backoff s)`.
+    requeues: Vec<(f64, f64)>,
+    /// Wait-cause markers: `(t, on-wire cause code)`.
+    markers: Vec<(f64, u32)>,
+    /// Last observed cleanup time (NaN until seen).
+    finish: f64,
+}
+
+impl TaskTrack {
+    fn new() -> TaskTrack {
+        TaskTrack { waiting: true, finish: f64::NAN, ..TaskTrack::default() }
+    }
+
+    /// Resolve an open dispatch attempt as successful: the attempt's
+    /// op completed without a failure marker, so the task started at
+    /// pick time plus the service charge.
+    fn resolve_pending(&mut self) {
+        if let Some((at, cost)) = self.pending.take() {
+            self.launch(at + cost);
+        }
+    }
+
+    fn launch(&mut self, t: f64) {
+        if self.waiting {
+            self.launches.push(t);
+            self.waiting = false;
+        }
+    }
+
+    fn on_attempt(&mut self, t: f64, cost_s: f64) {
+        self.resolve_pending();
+        self.pending = Some((t, cost_s));
+    }
+
+    /// A launch anchor with an explicit start time (`HoldClear`,
+    /// `BackfillAdmit`, `PoolDispatch`). Supersedes any open attempt:
+    /// both describe the same start.
+    fn on_anchor(&mut self, t: f64) {
+        self.pending = None;
+        self.launch(t);
+    }
+
+    fn on_marker(&mut self, t: f64, code: u32) {
+        // A capacity/fence marker is the failure resolution of an
+        // open dispatch attempt; either way the marker flips the
+        // job's current wait cause.
+        if matches!(code, 0 | 2) {
+            self.pending = None;
+        }
+        self.markers.push((t, code));
+    }
+
+    fn on_requeue(&mut self, t: f64, backoff_s: f64) {
+        self.resolve_pending();
+        self.requeues.push((t, backoff_s));
+        self.waiting = true;
+    }
+
+    fn on_cleanup(&mut self, t: f64) {
+        self.resolve_pending();
+        if self.finish.is_nan() || t > self.finish {
+            self.finish = t;
+        }
+    }
+}
+
+/// A gateway-side job: arrival plus its chain of ownership links.
+#[derive(Debug, Clone, Default)]
+struct GatewayJob {
+    submit_t: f64,
+    /// `(t, owning instance, instance-local job id)`, oldest first.
+    links: Vec<(f64, u32, u64)>,
+}
+
+fn blank_job() -> LocalJob {
+    LocalJob { submit_t: f64::NAN, queued_t: f64::NAN, first_task: 0, count: 0 }
+}
+
+/// What `local_blame` reconstructs for one local job.
+struct LocalSpanOut {
+    launch_t: f64,
+    finish_t: f64,
+    wait_s: f64,
+    blame: WaitBlame,
+}
+
+fn nan_min(a: f64, b: f64) -> f64 {
+    if a.is_nan() || b < a {
+        b
+    } else {
+        a
+    }
+}
+
+fn nan_max(a: f64, b: f64) -> f64 {
+    if a.is_nan() || b > a {
+        b
+    } else {
+        a
+    }
+}
+
+/// Tile the window `[start, launch]` with cause segments flipped by
+/// the given markers (sorted by time), starting from head-of-line.
+fn tile_window(blame: &mut WaitBlame, start: f64, launch: f64, markers: &[(f64, u32)]) {
+    let mut cur_t = start;
+    let mut cur_cause = CAUSE_HOL;
+    for &(mt, code) in markers {
+        if mt <= start || mt >= launch {
+            continue;
+        }
+        blame.add(cur_cause, mt - cur_t);
+        cur_t = mt;
+        cur_cause = marker_cause(code);
+    }
+    blame.add(cur_cause, launch - cur_t);
+}
+
+/// Reconstruct the local part of a job's span: first launch, finish,
+/// and the blame tiling of `[start, first launch]` plus one re-wait
+/// window per requeue that relaunched.
+fn local_blame(
+    start: f64,
+    pid: u32,
+    lj: &LocalJob,
+    tracks: &BTreeMap<(u32, u64), TaskTrack>,
+) -> Option<LocalSpanOut> {
+    let tids = lj.first_task..lj.first_task + u64::from(lj.count);
+
+    let mut first_launch = f64::NAN;
+    let mut finish = f64::NAN;
+    for tid in tids.clone() {
+        if let Some(tr) = tracks.get(&(pid, tid)) {
+            if let Some(&l0) = tr.launches.first() {
+                first_launch = nan_min(first_launch, l0);
+            }
+            if !tr.finish.is_nan() {
+                finish = nan_max(finish, tr.finish);
+            }
+        }
+    }
+    if first_launch.is_nan() {
+        return None;
+    }
+
+    let mut blame = WaitBlame::default();
+    let mut wait = first_launch - start;
+
+    // Window 0: submit → first launch, flipped by markers from any of
+    // the job's tasks (the job waits as a unit until its head task
+    // starts).
+    let mut markers: Vec<(f64, u32)> = Vec::new();
+    for tid in tids.clone() {
+        if let Some(tr) = tracks.get(&(pid, tid)) {
+            markers.extend(tr.markers.iter().filter(|&&(_, c)| c != 3).copied());
+        }
+    }
+    markers.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    tile_window(&mut blame, start, first_launch, &markers);
+
+    // Re-wait windows: a fault requeue reopens the wait at the
+    // requeue time; the retry backoff itself is blamed first, the
+    // remainder tiles from head-of-line using the task's own markers.
+    for tid in tids {
+        let Some(tr) = tracks.get(&(pid, tid)) else { continue };
+        for &(rt, backoff) in &tr.requeues {
+            let Some(&relaunch) = tr.launches.iter().find(|&&l| l > rt) else { continue };
+            let backoff_end = (rt + backoff).min(relaunch);
+            blame.add(CAUSE_REQUEUE, backoff_end - rt);
+            tile_window(&mut blame, backoff_end, relaunch, &tr.markers);
+            wait += relaunch - rt;
+        }
+    }
+
+    Some(LocalSpanOut { launch_t: first_launch, finish_t: finish, wait_s: wait, blame })
+}
+
+/// Fold a snapshot's event stream into per-job spans with wait
+/// attribution. Pure and deterministic: same snapshot, same spans.
+pub fn reconstruct_spans(snap: &ObsSnapshot) -> SpanSet {
+    let dropped = snap.dropped > 0;
+
+    let mut jobs: BTreeMap<(u32, u64), LocalJob> = BTreeMap::new();
+    let mut tracks: BTreeMap<(u32, u64), TaskTrack> = BTreeMap::new();
+    let mut gateway: BTreeMap<u64, GatewayJob> = BTreeMap::new();
+    let mut steal_hops: BTreeMap<u64, u32> = BTreeMap::new();
+
+    // Pass 1: per-pid online reconstruction. The merged stream is
+    // sorted by (t, pid, host_ns, seq); within one pid that order is
+    // the recording order, so each per-task state machine sees its
+    // events chronologically.
+    for ev in &snap.events {
+        match ev.kind {
+            TraceKind::Pick => {
+                let key = (ev.pid, ev.id);
+                match ev.unit {
+                    0 => {
+                        let lj = jobs.entry(key).or_insert_with(blank_job);
+                        if lj.submit_t.is_nan() {
+                            lj.submit_t = ev.t;
+                        }
+                    }
+                    2 => {
+                        let tr = tracks.entry(key).or_insert_with(TaskTrack::new);
+                        tr.on_attempt(ev.t, ev.detail as f64 / 1e9);
+                    }
+                    4 => {
+                        let tr = tracks.entry(key).or_insert_with(TaskTrack::new);
+                        tr.on_cleanup(ev.t);
+                    }
+                    _ => {}
+                }
+            }
+            TraceKind::JobQueued => {
+                let lj = jobs.entry((ev.pid, ev.id)).or_insert_with(blank_job);
+                lj.queued_t = ev.t;
+                lj.first_task = ev.detail as u64;
+                lj.count = ev.unit;
+            }
+            TraceKind::WaitCause => {
+                let tr = tracks.entry((ev.pid, ev.id)).or_insert_with(TaskTrack::new);
+                if ev.unit == 3 {
+                    tr.on_requeue(ev.t, ev.detail as f64 / 1e9);
+                } else {
+                    tr.on_marker(ev.t, ev.unit);
+                }
+            }
+            TraceKind::HoldClear | TraceKind::BackfillAdmit | TraceKind::PoolDispatch => {
+                let tr = tracks.entry((ev.pid, ev.id)).or_insert_with(TaskTrack::new);
+                tr.on_anchor(ev.t);
+            }
+            TraceKind::GatewayRoute => {
+                let gw = gateway.entry(ev.id).or_default();
+                if gw.links.is_empty() && gw.submit_t == 0.0 {
+                    gw.submit_t = ev.t;
+                }
+            }
+            TraceKind::JobLink => {
+                let gw = gateway.entry(ev.id).or_default();
+                gw.links.push((ev.t, ev.unit, ev.detail as u64));
+            }
+            TraceKind::StealAttempt => {
+                *steal_hops.entry(ev.id).or_insert(0) += 1;
+            }
+            _ => {}
+        }
+    }
+    for tr in tracks.values_mut() {
+        tr.resolve_pending();
+    }
+
+    let federated = !gateway.is_empty();
+    let mut spans: Vec<JobSpan> = Vec::new();
+
+    if federated {
+        for (&idx, gw) in &gateway {
+            let hops = steal_hops.get(&idx).copied().unwrap_or(0);
+            let Some(&(last_t, owner, local_id)) = gw.links.last() else {
+                // Routed but never flushed to an instance: still
+                // backlogged when the trace ended.
+                spans.push(JobSpan {
+                    job: idx,
+                    pid: u32::MAX,
+                    tasks: 0,
+                    submit_t: gw.submit_t,
+                    queued_t: f64::NAN,
+                    launch_t: f64::NAN,
+                    finish_t: f64::NAN,
+                    launched: false,
+                    steal_hops: hops,
+                    wait_s: 0.0,
+                    blame: WaitBlame::default(),
+                    partial: dropped,
+                });
+                continue;
+            };
+            let lj = jobs.get(&(owner, local_id)).cloned().unwrap_or_else(blank_job);
+            let anchors_missing = lj.submit_t.is_nan() || lj.queued_t.is_nan();
+            let local_start = if lj.submit_t.is_nan() { last_t } else { lj.submit_t };
+            let mut blame = WaitBlame::default();
+            // Gateway batching: arrival → first flush to an instance.
+            // Steal hops: first flush → the final owner's local
+            // submission. The three segments telescope with the local
+            // window so blame still sums to the total wait.
+            let first_link_t = gw.links[0].0;
+            blame.add(CAUSE_GATEWAY, first_link_t - gw.submit_t);
+            blame.add(CAUSE_STEAL, local_start - first_link_t);
+            let gw_wait =
+                (first_link_t - gw.submit_t).max(0.0) + (local_start - first_link_t).max(0.0);
+            match local_blame(local_start, owner, &lj, &tracks) {
+                Some(out) => {
+                    blame.merge(&out.blame);
+                    spans.push(JobSpan {
+                        job: idx,
+                        pid: owner,
+                        tasks: lj.count,
+                        submit_t: gw.submit_t,
+                        queued_t: lj.queued_t,
+                        launch_t: out.launch_t,
+                        finish_t: out.finish_t,
+                        launched: true,
+                        steal_hops: hops,
+                        wait_s: gw_wait + out.wait_s,
+                        blame,
+                        partial: dropped || anchors_missing,
+                    });
+                }
+                None => spans.push(JobSpan {
+                    job: idx,
+                    pid: owner,
+                    tasks: lj.count,
+                    submit_t: gw.submit_t,
+                    queued_t: lj.queued_t,
+                    launch_t: f64::NAN,
+                    finish_t: f64::NAN,
+                    launched: false,
+                    steal_hops: hops,
+                    wait_s: 0.0,
+                    blame: WaitBlame::default(),
+                    partial: dropped || anchors_missing,
+                }),
+            }
+        }
+    } else {
+        for (&(pid, job), lj) in &jobs {
+            let anchors_missing = lj.submit_t.is_nan() || lj.queued_t.is_nan();
+            let start = if lj.submit_t.is_nan() {
+                if lj.queued_t.is_nan() {
+                    continue;
+                }
+                lj.queued_t
+            } else {
+                lj.submit_t
+            };
+            match local_blame(start, pid, lj, &tracks) {
+                Some(out) => spans.push(JobSpan {
+                    job,
+                    pid,
+                    tasks: lj.count,
+                    submit_t: start,
+                    queued_t: lj.queued_t,
+                    launch_t: out.launch_t,
+                    finish_t: out.finish_t,
+                    launched: true,
+                    steal_hops: 0,
+                    wait_s: out.wait_s,
+                    blame: out.blame,
+                    partial: dropped || anchors_missing,
+                }),
+                None => spans.push(JobSpan {
+                    job,
+                    pid,
+                    tasks: lj.count,
+                    submit_t: start,
+                    queued_t: lj.queued_t,
+                    launch_t: f64::NAN,
+                    finish_t: f64::NAN,
+                    launched: false,
+                    steal_hops: 0,
+                    wait_s: 0.0,
+                    blame: WaitBlame::default(),
+                    partial: dropped || anchors_missing,
+                }),
+            }
+        }
+    }
+
+    spans.sort_by(|a, b| a.job.cmp(&b.job).then(a.pid.cmp(&b.pid)));
+    SpanSet { spans, partial: dropped }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::Obs;
+
+    const EPS: f64 = 1e-9;
+
+    #[test]
+    fn single_job_dispatch_retry_attributes_to_hol() {
+        let mut o = Obs::new(64);
+        // Submit at t=0 (1 ms registration charge), queued, then a
+        // failed dispatch attempt resolved by a capacity marker, then
+        // a successful one: launch at 2.0 + 0.5 = 2.5.
+        o.record(TraceKind::Pick, 0, 7, 0.0, 1_000_000);
+        o.record(TraceKind::JobQueued, 1, 7, 0.001, 40);
+        o.record(TraceKind::Pick, 2, 40, 1.0, 500_000_000);
+        o.record(TraceKind::WaitCause, 0, 40, 1.5, 0);
+        o.record(TraceKind::Pick, 2, 40, 2.0, 500_000_000);
+        o.record(TraceKind::Pick, 4, 40, 5.0, 0);
+        let set = reconstruct_spans(&o.snapshot());
+        assert!(!set.partial);
+        assert_eq!(set.spans.len(), 1);
+        let s = set.get(7).expect("span for job 7");
+        assert!(s.launched && !s.partial);
+        assert_eq!((s.tasks, s.steal_hops), (1, 0));
+        assert!((s.submit_t - 0.0).abs() < EPS && (s.launch_t - 2.5).abs() < EPS);
+        assert!((s.finish_t - 5.0).abs() < EPS);
+        assert!((s.wait_s - 2.5).abs() < EPS);
+        // Both segments carry the head-of-line cause.
+        assert!((s.blame.get(CAUSE_HOL) - 2.5).abs() < EPS);
+        assert!((s.blame.total() - s.wait_s).abs() < EPS, "blame tiles the wait");
+    }
+
+    #[test]
+    fn fence_and_cooldown_markers_flip_the_cause() {
+        let mut o = Obs::new(64);
+        o.record(TraceKind::Pick, 0, 1, 0.0, 0);
+        o.record(TraceKind::JobQueued, 1, 1, 0.0, 9);
+        // Fence-reject at 1.0, cooldown-block at 3.0, launch (pool)
+        // at 4.0: hol [0,1), fence [1,3), cold_start [3,4).
+        o.record(TraceKind::WaitCause, 2, 9, 1.0, 0);
+        o.record(TraceKind::WaitCause, 1, 9, 3.0, 0);
+        o.record(TraceKind::PoolDispatch, 0, 9, 4.0, 5);
+        let set = reconstruct_spans(&o.snapshot());
+        let s = set.get(1).expect("span");
+        assert!((s.blame.get(CAUSE_HOL) - 1.0).abs() < EPS);
+        assert!((s.blame.get(CAUSE_FENCE) - 2.0).abs() < EPS);
+        assert!((s.blame.get(CAUSE_COLD_START) - 1.0).abs() < EPS);
+        assert!((s.blame.total() - s.wait_s).abs() < EPS);
+        assert_eq!(s.blame.dominant().0, CAUSE_FENCE);
+    }
+
+    #[test]
+    fn requeue_opens_a_rewait_window_blamed_on_backoff() {
+        let mut o = Obs::new(64);
+        o.record(TraceKind::Pick, 0, 2, 0.0, 0);
+        o.record(TraceKind::JobQueued, 1, 2, 0.0, 3);
+        o.record(TraceKind::BackfillAdmit, 0, 3, 1.0, 0);
+        // Killed by a fault at t=4 with a 2 s retry backoff, then
+        // relaunched at t=7: requeue_backoff 2 s + hol 1 s on top of
+        // the 1 s first-launch wait.
+        o.record(TraceKind::WaitCause, 3, 3, 4.0, 2_000_000_000);
+        o.record(TraceKind::BackfillAdmit, 0, 3, 7.0, 0);
+        o.record(TraceKind::Pick, 4, 3, 9.0, 0);
+        let set = reconstruct_spans(&o.snapshot());
+        let s = set.get(2).expect("span");
+        assert!((s.wait_s - 4.0).abs() < EPS, "1 s first wait + 3 s re-wait");
+        assert!((s.blame.get(CAUSE_REQUEUE) - 2.0).abs() < EPS);
+        assert!((s.blame.get(CAUSE_HOL) - 2.0).abs() < EPS);
+        assert!((s.blame.total() - s.wait_s).abs() < EPS);
+    }
+
+    #[test]
+    fn federated_span_chains_gateway_and_steal_segments() {
+        // Gateway (pid 2) routes job idx 0, flushes it to instance 0
+        // at t=1, instance 1 steals it at t=2, instance 1 launches it
+        // at t=3: gateway_batch 1 s, steal 1 s, hol 1 s.
+        let mut gw = Obs::new(64).with_pid(2);
+        gw.record(TraceKind::GatewayRoute, 0, 0, 0.0, 0);
+        gw.record(TraceKind::JobLink, 0, 0, 1.0, 5);
+        gw.record(TraceKind::StealAttempt, 0, 0, 2.0, 1);
+        gw.record(TraceKind::JobLink, 1, 0, 2.0, 8);
+        let mut inst = Obs::new(64).with_pid(1);
+        inst.record(TraceKind::Pick, 0, 8, 2.0, 0);
+        inst.record(TraceKind::JobQueued, 1, 8, 2.0, 17);
+        inst.record(TraceKind::PoolDispatch, 0, 17, 3.0, 4);
+        let (a, b) = (gw.snapshot(), inst.snapshot());
+        let merged = ObsSnapshot::merge([&a, &b]);
+        let set = reconstruct_spans(&merged);
+        assert_eq!(set.spans.len(), 1, "one gateway job, no standalone double-count");
+        let s = set.get(0).expect("gateway span");
+        assert_eq!((s.pid, s.steal_hops, s.tasks), (1, 1, 1));
+        assert!((s.wait_s - 3.0).abs() < EPS);
+        assert!((s.blame.get(CAUSE_GATEWAY) - 1.0).abs() < EPS);
+        assert!((s.blame.get(CAUSE_STEAL) - 1.0).abs() < EPS);
+        assert!((s.blame.get(CAUSE_HOL) - 1.0).abs() < EPS);
+        assert!((s.blame.total() - s.wait_s).abs() < EPS);
+    }
+
+    #[test]
+    fn ring_drops_mark_every_span_partial() {
+        let mut o = Obs::new(2);
+        o.record(TraceKind::Pick, 0, 1, 0.0, 0);
+        o.record(TraceKind::JobQueued, 1, 1, 0.0, 0);
+        o.record(TraceKind::Pick, 2, 0, 1.0, 0);
+        let snap = o.snapshot();
+        assert!(snap.dropped > 0);
+        let set = reconstruct_spans(&snap);
+        assert!(set.partial);
+        assert!(set.spans.iter().all(|s| s.partial));
+    }
+
+    #[test]
+    fn worst_ranks_launched_jobs_by_wait() {
+        let mut o = Obs::new(64);
+        for (job, tid, launch) in [(0u64, 10u64, 4.0), (1, 11, 9.0), (2, 12, 1.0)] {
+            o.record(TraceKind::Pick, 0, job, 0.0, 0);
+            o.record(TraceKind::JobQueued, 1, job, 0.0, tid as i64);
+            o.record(TraceKind::PoolDispatch, 0, tid, launch, 0);
+        }
+        let set = reconstruct_spans(&o.snapshot());
+        let worst: Vec<u64> = set.worst(2).iter().map(|s| s.job).collect();
+        assert_eq!(worst, vec![1, 0]);
+        assert!((set.mean_wait_s() - (4.0 + 9.0 + 1.0) / 3.0).abs() < EPS);
+    }
+}

@@ -1,0 +1,535 @@
+//! Fleet timeseries: fold a flight-recorder snapshot into
+//! fixed-interval buckets of queue and fleet state, per federation
+//! instance and fleet-wide, with CSV / JSON / Perfetto exporters.
+//!
+//! Like the span layer this is a pure, deterministic function of an
+//! [`ObsSnapshot`]. Gauges are reconstructed by replaying the event
+//! stream — queue entries from `JobQueued`, task starts from the
+//! launch anchors (`PoolDispatch`, `BackfillAdmit`, `HoldClear`, and
+//! resolved `Pick` branch-2 attempts), completions from `Pick`
+//! branch-4 cleanups, pool lease level from `PoolResize` deltas,
+//! pool in-flight from `PoolDispatch`/`PoolRelease`, and active-fault
+//! nodes from `FaultCascade` fail/drain/recover steps — and sampling
+//! the counters at each bucket boundary.
+//!
+//! Two documented approximations: gauges are *bucket-end samples*
+//! (intra-bucket excursions are invisible), and `utilization` is the
+//! running-task count normalized by the run's observed peak (the
+//! trace does not carry per-node core occupancy). Both are noted in
+//! `docs/observability.md`.
+
+use std::collections::BTreeMap;
+
+use super::spans::SpanSet;
+use super::{ObsSnapshot, TraceKind};
+use crate::util::csv::Csv;
+use crate::util::json::Json;
+
+/// The pid used for the fleet-aggregate rows (sorts after every real
+/// federation instance).
+pub const FLEET_PID: u32 = u32::MAX;
+
+/// One fixed-interval sample of one instance (or the fleet).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TimelineBucket {
+    /// Bucket start, seconds of simulated time.
+    pub t0: f64,
+    /// Federation instance, or [`FLEET_PID`] for the aggregate row.
+    pub pid: u32,
+    /// Tasks queued but not yet launched, sampled at bucket end.
+    pub pending: f64,
+    /// Tasks running at bucket end.
+    pub running: f64,
+    /// `running` normalized by the run's peak running count for this
+    /// row's pid (0 when the peak is 0).
+    pub utilization: f64,
+    /// Net pool lease level (grow minus shrink) at bucket end.
+    pub pool_leased: f64,
+    /// Tasks in flight on pool nodes at bucket end.
+    pub pool_inflight: f64,
+    /// Nodes failed or draining (not yet recovered) at bucket end.
+    pub faults_active: f64,
+    /// Task launches inside the bucket.
+    pub launches: f64,
+    /// Task cleanups inside the bucket.
+    pub completions: f64,
+}
+
+/// A bucketed fleet timeseries.
+#[derive(Debug, Clone)]
+pub struct Timeline {
+    /// Bucket width, seconds.
+    pub interval_s: f64,
+    /// Rows sorted by `(bucket, pid)`; the fleet row of each bucket
+    /// sorts last. Empty when the snapshot held no events.
+    pub buckets: Vec<TimelineBucket>,
+    /// True when the source ring dropped records (gauges may start
+    /// mid-stream and drift).
+    pub partial: bool,
+}
+
+impl Timeline {
+    /// Rows for one pid, in time order.
+    pub fn for_pid(&self, pid: u32) -> Vec<&TimelineBucket> {
+        self.buckets.iter().filter(|b| b.pid == pid).collect()
+    }
+
+    /// The fleet-aggregate rows, in time order.
+    pub fn fleet(&self) -> Vec<&TimelineBucket> {
+        self.for_pid(FLEET_PID)
+    }
+}
+
+/// Instantaneous counter deltas replayed during the sweep.
+#[derive(Debug, Clone, Copy)]
+enum Delta {
+    Queued(f64),
+    Launch,
+    Unlaunch,
+    Complete,
+    Leased(f64),
+    Inflight(f64),
+    Fault(f64),
+}
+
+/// Minimal per-task attempt resolver (the span layer's rule): a
+/// `Pick` branch-2 attempt launches at `t + cost` unless its next
+/// same-task event is a capacity/fence `WaitCause` marker.
+#[derive(Debug, Clone, Copy, Default)]
+struct Mini {
+    pending: Option<(f64, f64)>,
+    running: bool,
+}
+
+fn fmt_cell(x: f64) -> String {
+    if x.is_nan() {
+        String::new()
+    } else if x == x.trunc() && x.abs() < 1e15 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x:.6}")
+    }
+}
+
+/// Fold a snapshot into fixed-interval buckets. `interval_s` is
+/// clamped below at 1 µs and widened when it would produce more than
+/// 200 000 buckets.
+pub fn build_timeline(snap: &ObsSnapshot, interval_s: f64) -> Timeline {
+    fn push(map: &mut BTreeMap<u32, Vec<(f64, Delta)>>, pid: u32, t: f64, d: Delta) {
+        map.entry(pid).or_default().push((t, d));
+    }
+    let mut deltas: BTreeMap<u32, Vec<(f64, Delta)>> = BTreeMap::new();
+    let mut minis: BTreeMap<(u32, u64), Mini> = BTreeMap::new();
+
+    for ev in &snap.events {
+        // Every pid seen gets a delta stream, even if it stays empty
+        // (a gateway's rows sample as zero rather than vanishing).
+        deltas.entry(ev.pid).or_default();
+        match ev.kind {
+            TraceKind::JobQueued => {
+                push(&mut deltas, ev.pid, ev.t, Delta::Queued(f64::from(ev.unit)));
+            }
+            TraceKind::Pick => match ev.unit {
+                2 => {
+                    let m = minis.entry((ev.pid, ev.id)).or_default();
+                    if let Some((at, c)) = m.pending.take() {
+                        if !m.running {
+                            m.running = true;
+                            push(&mut deltas, ev.pid, at + c, Delta::Launch);
+                        }
+                    }
+                    m.pending = Some((ev.t, ev.detail as f64 / 1e9));
+                }
+                4 => {
+                    let m = minis.entry((ev.pid, ev.id)).or_default();
+                    if let Some((at, c)) = m.pending.take() {
+                        if !m.running {
+                            m.running = true;
+                            push(&mut deltas, ev.pid, at + c, Delta::Launch);
+                        }
+                    }
+                    if m.running {
+                        m.running = false;
+                        push(&mut deltas, ev.pid, ev.t, Delta::Complete);
+                    }
+                }
+                _ => {}
+            },
+            TraceKind::HoldClear | TraceKind::BackfillAdmit | TraceKind::PoolDispatch => {
+                let m = minis.entry((ev.pid, ev.id)).or_default();
+                m.pending = None;
+                if !m.running {
+                    m.running = true;
+                    push(&mut deltas, ev.pid, ev.t, Delta::Launch);
+                }
+                if ev.kind == TraceKind::PoolDispatch {
+                    push(&mut deltas, ev.pid, ev.t, Delta::Inflight(1.0));
+                }
+            }
+            TraceKind::PoolRelease => {
+                push(&mut deltas, ev.pid, ev.t, Delta::Inflight(-1.0));
+            }
+            TraceKind::WaitCause => {
+                let m = minis.entry((ev.pid, ev.id)).or_default();
+                match ev.unit {
+                    3 => {
+                        // Fault requeue: the task stopped running and
+                        // is queued again (pending for the next
+                        // launch).
+                        m.pending = None;
+                        if m.running {
+                            m.running = false;
+                            push(&mut deltas, ev.pid, ev.t, Delta::Unlaunch);
+                        }
+                    }
+                    _ => {
+                        m.pending = None;
+                    }
+                }
+            }
+            TraceKind::PoolResize => {
+                push(&mut deltas, ev.pid, ev.t, Delta::Leased(ev.detail as f64));
+            }
+            TraceKind::FaultCascade => {
+                let d = match ev.detail {
+                    0 | 3 => 1.0,
+                    1 => -1.0,
+                    _ => 0.0,
+                };
+                if d != 0.0 {
+                    push(&mut deltas, ev.pid, ev.t, Delta::Fault(d));
+                }
+            }
+            _ => {}
+        }
+    }
+    for ((pid, _), m) in &mut minis {
+        if let Some((at, c)) = m.pending.take() {
+            if !m.running {
+                m.running = true;
+                push(&mut deltas, *pid, at + c, Delta::Launch);
+            }
+        }
+    }
+
+    let mut t_end: f64 = 0.0;
+    for stream in deltas.values_mut() {
+        stream.sort_by(|a, b| a.0.total_cmp(&b.0));
+        if let Some(&(t, _)) = stream.last() {
+            if t > t_end {
+                t_end = t;
+            }
+        }
+    }
+    if deltas.is_empty() {
+        return Timeline { interval_s, buckets: Vec::new(), partial: snap.dropped > 0 };
+    }
+
+    let mut dt = interval_s.max(1e-6);
+    if t_end / dt > 200_000.0 {
+        dt = t_end / 200_000.0;
+    }
+    let nbuckets = (t_end / dt).floor() as usize + 1;
+
+    let mut rows: Vec<TimelineBucket> = Vec::new();
+    let mut peaks: BTreeMap<u32, f64> = BTreeMap::new();
+    for (&pid, stream) in &deltas {
+        let mut cursor = 0usize;
+        let (mut pending, mut running) = (0.0f64, 0.0f64);
+        let (mut leased, mut inflight, mut faults) = (0.0f64, 0.0f64, 0.0f64);
+        let mut peak = 0.0f64;
+        for k in 0..nbuckets {
+            let bucket_end = (k + 1) as f64 * dt;
+            let (mut launches, mut completions) = (0.0f64, 0.0f64);
+            while cursor < stream.len() && stream[cursor].0 < bucket_end {
+                match stream[cursor].1 {
+                    Delta::Queued(n) => pending += n,
+                    Delta::Launch => {
+                        pending -= 1.0;
+                        running += 1.0;
+                        launches += 1.0;
+                    }
+                    Delta::Unlaunch => {
+                        pending += 1.0;
+                        running -= 1.0;
+                    }
+                    Delta::Complete => {
+                        running -= 1.0;
+                        completions += 1.0;
+                    }
+                    Delta::Leased(n) => leased += n,
+                    Delta::Inflight(n) => inflight += n,
+                    Delta::Fault(n) => faults += n,
+                }
+                cursor += 1;
+            }
+            if running > peak {
+                peak = running;
+            }
+            rows.push(TimelineBucket {
+                t0: k as f64 * dt,
+                pid,
+                pending: pending.max(0.0),
+                running: running.max(0.0),
+                utilization: 0.0,
+                pool_leased: leased.max(0.0),
+                pool_inflight: inflight.max(0.0),
+                faults_active: faults.max(0.0),
+                launches,
+                completions,
+            });
+        }
+        peaks.insert(pid, peak);
+    }
+
+    // Fleet aggregate: the per-bucket sum over instances. With the
+    // per-pid rows grouped contiguously above, bucket k of pid i is
+    // row i * nbuckets + k.
+    let npids = deltas.len();
+    let mut fleet_peak = 0.0f64;
+    let mut fleet_rows: Vec<TimelineBucket> = Vec::with_capacity(nbuckets);
+    for k in 0..nbuckets {
+        let mut agg = TimelineBucket { t0: k as f64 * dt, pid: FLEET_PID, ..Default::default() };
+        for i in 0..npids {
+            let r = &rows[i * nbuckets + k];
+            agg.pending += r.pending;
+            agg.running += r.running;
+            agg.pool_leased += r.pool_leased;
+            agg.pool_inflight += r.pool_inflight;
+            agg.faults_active += r.faults_active;
+            agg.launches += r.launches;
+            agg.completions += r.completions;
+        }
+        if agg.running > fleet_peak {
+            fleet_peak = agg.running;
+        }
+        fleet_rows.push(agg);
+    }
+    peaks.insert(FLEET_PID, fleet_peak);
+    rows.append(&mut fleet_rows);
+
+    for r in &mut rows {
+        let peak = peaks.get(&r.pid).copied().unwrap_or(0.0);
+        r.utilization = if peak > 0.0 { r.running / peak } else { 0.0 };
+    }
+    rows.sort_by(|a, b| a.t0.total_cmp(&b.t0).then(a.pid.cmp(&b.pid)));
+
+    Timeline { interval_s: dt, buckets: rows, partial: snap.dropped > 0 }
+}
+
+/// Timeline column names, in row order after `t_s` and `pid`.
+pub const TIMELINE_COLS: [&str; 8] = [
+    "pending",
+    "running",
+    "utilization",
+    "pool_leased",
+    "pool_inflight",
+    "faults_active",
+    "launches",
+    "completions",
+];
+
+/// Render a timeline as CSV: one row per `(bucket, pid)`, the fleet
+/// row labelled `fleet`.
+pub fn timeline_csv(tl: &Timeline) -> Csv {
+    let mut cols = vec!["t_s".to_string(), "pid".to_string()];
+    cols.extend(TIMELINE_COLS.iter().map(|c| c.to_string()));
+    let mut csv = Csv::with_header(&cols);
+    for b in &tl.buckets {
+        let pid = if b.pid == FLEET_PID { "fleet".to_string() } else { b.pid.to_string() };
+        let cells = vec![
+            fmt_cell(b.t0),
+            pid,
+            fmt_cell(b.pending),
+            fmt_cell(b.running),
+            fmt_cell(b.utilization),
+            fmt_cell(b.pool_leased),
+            fmt_cell(b.pool_inflight),
+            fmt_cell(b.faults_active),
+            fmt_cell(b.launches),
+            fmt_cell(b.completions),
+        ];
+        csv.row(&cells);
+    }
+    csv
+}
+
+/// Render a timeline as JSON (same rows as the CSV).
+pub fn timeline_json(tl: &Timeline) -> Json {
+    let rows: Vec<Json> = tl
+        .buckets
+        .iter()
+        .map(|b| {
+            let pid: Json = if b.pid == FLEET_PID { "fleet".into() } else { u64::from(b.pid).into() };
+            Json::obj()
+                .set("t_s", b.t0)
+                .set("pid", pid)
+                .set("pending", b.pending)
+                .set("running", b.running)
+                .set("utilization", b.utilization)
+                .set("pool_leased", b.pool_leased)
+                .set("pool_inflight", b.pool_inflight)
+                .set("faults_active", b.faults_active)
+                .set("launches", b.launches)
+                .set("completions", b.completions)
+        })
+        .collect();
+    Json::obj()
+        .set("interval_s", tl.interval_s)
+        .set("partial", tl.partial)
+        .set("buckets", Json::Arr(rows))
+}
+
+/// Render a span set as Perfetto *complete* events (`ph: "X"`,
+/// duration spans) alongside PR 9's instant stream: one wait span per
+/// launched job (submit → first launch, blame in `args`) on track 99
+/// and one run span (launch → finish, when observed) on track 98.
+pub fn perfetto_spans(set: &SpanSet) -> Json {
+    use super::spans::BLAME_CAUSES;
+    let mut pids: Vec<u32> = set.spans.iter().filter(|s| s.launched).map(|s| s.pid).collect();
+    pids.sort_unstable();
+    pids.dedup();
+
+    let mut events: Vec<Json> = Vec::new();
+    for pid in &pids {
+        events.push(
+            Json::obj()
+                .set("name", "process_name")
+                .set("ph", "M")
+                .set("pid", u64::from(*pid))
+                .set("args", Json::obj().set("name", format!("instance {pid}"))),
+        );
+        for (tid, label) in [(99u64, "job wait"), (98, "job run")] {
+            events.push(
+                Json::obj()
+                    .set("name", "thread_name")
+                    .set("ph", "M")
+                    .set("pid", u64::from(*pid))
+                    .set("tid", tid)
+                    .set("args", Json::obj().set("name", label)),
+            );
+        }
+    }
+    for s in set.spans.iter().filter(|s| s.launched) {
+        let mut args = Json::obj()
+            .set("job", s.job)
+            .set("steal_hops", u64::from(s.steal_hops))
+            .set("partial", s.partial);
+        for (i, name) in BLAME_CAUSES.iter().enumerate() {
+            args = args.set(format!("blame_{name}_s"), s.blame.get(i));
+        }
+        events.push(
+            Json::obj()
+                .set("name", format!("wait job {}", s.job))
+                .set("ph", "X")
+                .set("ts", s.submit_t * 1e6)
+                .set("dur", s.wait_s * 1e6)
+                .set("pid", u64::from(s.pid))
+                .set("tid", 99u64)
+                .set("args", args),
+        );
+        if !s.finish_t.is_nan() && !s.launch_t.is_nan() {
+            events.push(
+                Json::obj()
+                    .set("name", format!("run job {}", s.job))
+                    .set("ph", "X")
+                    .set("ts", s.launch_t * 1e6)
+                    .set("dur", (s.finish_t - s.launch_t).max(0.0) * 1e6)
+                    .set("pid", u64::from(s.pid))
+                    .set("tid", 98u64),
+            );
+        }
+    }
+    Json::obj().set("displayTimeUnit", "ms").set("traceEvents", Json::Arr(events))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{reconstruct_spans, Obs};
+
+    const EPS: f64 = 1e-9;
+
+    fn sample() -> ObsSnapshot {
+        let mut o = Obs::new(64);
+        // Job 0 with two tasks queued at 0.2; one launches via the
+        // pool at 1.2 and cleans up at 2.2; the other never starts.
+        o.record(TraceKind::Pick, 0, 0, 0.2, 0);
+        o.record(TraceKind::JobQueued, 2, 0, 0.2, 10);
+        o.record(TraceKind::PoolDispatch, 0, 10, 1.2, 4);
+        o.record(TraceKind::PoolRelease, 0, 10, 2.0, 4);
+        o.record(TraceKind::Pick, 4, 10, 2.2, 0);
+        o.snapshot()
+    }
+
+    #[test]
+    fn buckets_sample_pending_running_and_counts() {
+        let tl = build_timeline(&sample(), 1.0);
+        assert!(!tl.partial);
+        let p0 = tl.for_pid(0);
+        assert_eq!(p0.len(), 3, "t_end 2.2 at 1 s interval gives 3 buckets");
+        assert!((p0[0].pending - 2.0).abs() < EPS && p0[0].running == 0.0);
+        assert!((p0[1].pending - 1.0).abs() < EPS);
+        assert!((p0[1].running - 1.0).abs() < EPS);
+        assert!((p0[1].launches - 1.0).abs() < EPS);
+        assert!((p0[1].pool_inflight - 1.0).abs() < EPS);
+        assert!((p0[2].running - 0.0).abs() < EPS);
+        assert!((p0[2].completions - 1.0).abs() < EPS);
+        // Utilization normalizes against the run's peak (1 task).
+        assert!((p0[1].utilization - 1.0).abs() < EPS);
+        // The fleet aggregate mirrors the single instance.
+        let fleet = tl.fleet();
+        assert_eq!(fleet.len(), 3);
+        assert!((fleet[1].running - 1.0).abs() < EPS);
+    }
+
+    #[test]
+    fn resize_and_fault_deltas_are_gauges() {
+        let mut o = Obs::new(64);
+        o.record(TraceKind::PoolResize, 0, 4, 0.5, 4);
+        o.record(TraceKind::FaultCascade, 3, 2, 0.6, 0);
+        o.record(TraceKind::FaultCascade, 3, 0, 1.5, 1);
+        o.record(TraceKind::PoolResize, 0, 2, 2.5, -2);
+        let tl = build_timeline(&o.snapshot(), 1.0);
+        let p0 = tl.for_pid(0);
+        assert!((p0[0].pool_leased - 4.0).abs() < EPS);
+        assert!((p0[0].faults_active - 1.0).abs() < EPS);
+        assert!((p0[1].faults_active - 0.0).abs() < EPS);
+        assert!((p0[2].pool_leased - 2.0).abs() < EPS);
+    }
+
+    #[test]
+    fn csv_and_json_exports_are_deterministic() {
+        let tl = build_timeline(&sample(), 1.0);
+        let csv = timeline_csv(&tl);
+        let head = csv.as_str().lines().next().unwrap();
+        assert_eq!(
+            head,
+            "t_s,pid,pending,running,utilization,pool_leased,pool_inflight,\
+             faults_active,launches,completions"
+        );
+        assert_eq!(csv.as_str().lines().count(), 1 + 6, "3 buckets x (pid 0 + fleet)");
+        assert!(csv.as_str().contains("fleet"));
+        let j1 = timeline_json(&tl).to_pretty();
+        let j2 = timeline_json(&build_timeline(&sample(), 1.0)).to_pretty();
+        assert_eq!(j1, j2);
+    }
+
+    #[test]
+    fn perfetto_spans_emit_complete_events() {
+        let set = reconstruct_spans(&sample());
+        let text = perfetto_spans(&set).to_pretty();
+        assert!(text.contains("\"ph\": \"X\""));
+        assert!(text.contains("wait job 0"));
+        assert!(text.contains("run job 0"));
+        assert!(text.contains("blame_hol_s"));
+        assert!(text.contains("\"dur\""));
+    }
+
+    #[test]
+    fn empty_snapshot_yields_empty_timeline() {
+        let o = Obs::new(4);
+        let tl = build_timeline(&o.snapshot(), 1.0);
+        assert!(tl.buckets.is_empty());
+    }
+}

@@ -56,6 +56,32 @@ impl Subsystem {
     pub fn parse(s: &str) -> Option<Subsystem> {
         Subsystem::ALL.into_iter().find(|sub| sub.name() == s)
     }
+
+    /// Parse a comma-separated `--trace-filter` list. Unknown names are
+    /// an error naming the bad token (not silently dropped); empty
+    /// tokens are ignored so trailing commas are harmless.
+    pub fn parse_list(s: &str) -> Result<Vec<Subsystem>, String> {
+        let mut subs = Vec::new();
+        for tok in s.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            match Subsystem::parse(tok) {
+                Some(sub) => {
+                    if !subs.contains(&sub) {
+                        subs.push(sub);
+                    }
+                }
+                None => {
+                    return Err(format!(
+                        "unknown subsystem {tok:?} (one of \
+                         scheduler|backfill|pool|fault|federation)"
+                    ))
+                }
+            }
+        }
+        if subs.is_empty() {
+            return Err("empty subsystem list".into());
+        }
+        Ok(subs)
+    }
 }
 
 /// The decision vocabulary: every kind of record the flight recorder
@@ -112,11 +138,27 @@ pub enum TraceKind {
     /// A steal candidate refused withdrawal (already started): `unit`
     /// the donor, `id` the gateway job index, `detail` the receiver.
     StealRefused,
+    /// A job's tasks entered the local queues at Register: `unit` the
+    /// task count, `id` the job, `detail` the first task id of the
+    /// job's contiguous arena range. The span layer's queue-entry
+    /// anchor and job→task mapping.
+    JobQueued,
+    /// A wait-cause marker: a decision point explained *why* pending
+    /// work did not start. `unit` is the cause code (0 hold-park,
+    /// 1 cooldown-block, 2 fence-reject, 3 requeue-backoff), `id` the
+    /// task held up, `detail` a cause-specific payload (the backoff
+    /// delay in nanoseconds for code 3, else 0).
+    WaitCause,
+    /// The gateway bound a gateway job to an instance-local job id at
+    /// flush or steal: `unit` the owning instance, `id` the gateway
+    /// job index, `detail` the instance-local job id. The span layer's
+    /// cross-process join key.
+    JobLink,
 }
 
 impl TraceKind {
     /// Number of kinds (sizing for per-kind counters).
-    pub const COUNT: usize = 15;
+    pub const COUNT: usize = 18;
 
     /// Every kind, in declaration order (indexable by [`Self::index`]).
     pub const ALL: [TraceKind; TraceKind::COUNT] = [
@@ -135,6 +177,9 @@ impl TraceKind {
         TraceKind::GatewayFlush,
         TraceKind::StealAttempt,
         TraceKind::StealRefused,
+        TraceKind::JobQueued,
+        TraceKind::WaitCause,
+        TraceKind::JobLink,
     ];
 
     /// Position in [`Self::ALL`].
@@ -160,13 +205,19 @@ impl TraceKind {
             TraceKind::GatewayFlush => "gateway_flush",
             TraceKind::StealAttempt => "steal_attempt",
             TraceKind::StealRefused => "steal_refused",
+            TraceKind::JobQueued => "job_queued",
+            TraceKind::WaitCause => "wait_cause",
+            TraceKind::JobLink => "job_link",
         }
     }
 
     /// The subsystem this kind belongs to.
     pub fn subsystem(self) -> Subsystem {
         match self {
-            TraceKind::Pick | TraceKind::RegisterRoute => Subsystem::Scheduler,
+            TraceKind::Pick
+            | TraceKind::RegisterRoute
+            | TraceKind::JobQueued
+            | TraceKind::WaitCause => Subsystem::Scheduler,
             TraceKind::BackfillAdmit
             | TraceKind::BackfillReject
             | TraceKind::HoldPlan
@@ -179,7 +230,8 @@ impl TraceKind {
             TraceKind::GatewayRoute
             | TraceKind::GatewayFlush
             | TraceKind::StealAttempt
-            | TraceKind::StealRefused => Subsystem::Federation,
+            | TraceKind::StealRefused
+            | TraceKind::JobLink => Subsystem::Federation,
         }
     }
 }
@@ -323,6 +375,27 @@ mod tests {
             assert_eq!(Subsystem::parse(s.name()), Some(s));
         }
         assert_eq!(Subsystem::parse("nope"), None);
+    }
+
+    #[test]
+    fn parse_list_accepts_commas_and_rejects_unknowns() {
+        assert_eq!(
+            Subsystem::parse_list("pool,federation").unwrap(),
+            vec![Subsystem::Pool, Subsystem::Federation]
+        );
+        assert_eq!(
+            Subsystem::parse_list(" scheduler , pool ,").unwrap(),
+            vec![Subsystem::Scheduler, Subsystem::Pool],
+            "whitespace and trailing commas are harmless"
+        );
+        assert_eq!(
+            Subsystem::parse_list("pool,pool").unwrap(),
+            vec![Subsystem::Pool],
+            "duplicates collapse"
+        );
+        let err = Subsystem::parse_list("pool,bogus").unwrap_err();
+        assert!(err.contains("bogus"), "error names the bad token: {err}");
+        assert!(Subsystem::parse_list("").is_err(), "an empty list is an error");
     }
 
     #[test]

@@ -91,6 +91,12 @@ impl SchedulerSim {
                 self.start_running(now, tid, p, request == ResourceRequest::WholeNode, q);
             }
             None => {
+                // Wait-cause marker for the span layer: a fenced
+                // failure (holds active or pool-owned nodes excluded)
+                // is a fence-reject (code 2); an unconstrained failure
+                // is plain head-of-line capacity blocking (code 0).
+                let cause = if hold_active || pool_fence { 2 } else { 0 };
+                self.trace(TraceKind::WaitCause, cause, tid, now, 0);
                 if self.backfill {
                     self.plan_holds(now, tid, request);
                 }
@@ -990,8 +996,16 @@ impl SchedulerSim {
         // touch the donor; `any_pooled` gates fleet-wide fences), so
         // every shard — and the batch backfill scans — re-evaluate.
         p.mark_all();
+        // Wait-cause marker: the shard has queued work but this resize
+        // delivered no new capacity (cooldown/hysteresis hold, blocked
+        // grow, or a shrink) — the head keeps waiting on pool cold
+        // start (code 1).
+        let starved = if delta <= 0 { p.fleet.shards[sid].pending.front().copied() } else { None };
         self.backfill_dirty = true;
         self.trace(TraceKind::PoolResize, sid as u32, delta.unsigned_abs(), now, delta);
+        if let Some(front) = starved {
+            self.trace(TraceKind::WaitCause, 1, front, now, 0);
+        }
         q.at(now + cooldown, SchedEvent::ShardWake(sid as u32));
     }
 
@@ -1294,7 +1308,11 @@ impl SchedulerSim {
             );
             return;
         }
-        q.at(now + self.fault_cfg.retry.delay(retries), SchedEvent::Requeue(tid));
+        let delay = self.fault_cfg.retry.delay(retries);
+        // Wait-cause marker: the task sits out its retry backoff
+        // (code 3; detail = the backoff delay in nanoseconds).
+        self.trace(TraceKind::WaitCause, 3, tid, now, (delay * 1e9) as i64);
+        q.at(now + delay, SchedEvent::Requeue(tid));
     }
 
     /// A retry backoff expired: reset the task's record to PENDING and

@@ -324,6 +324,14 @@ impl SchedulerSim {
                 // check stays: a preempt can cancel a task between
                 // materialization and registration completing.)
                 let prio = self.jobs[job as usize].priority;
+                // The span layer's queue-entry anchor and job→task
+                // mapping: one record per job, carrying its contiguous
+                // arena range (unit = task count, detail = first task).
+                let (range_first, range_count) = {
+                    let m = &self.jobs[job as usize];
+                    (m.first_task, m.task_count)
+                };
+                self.trace(TraceKind::JobQueued, range_count, job, now, range_first as i64);
                 if self.legacy_register {
                     // Bench-only: the pre-arena whole-arena scan, kept
                     // so the speedup is measurable against the same

@@ -1,8 +1,12 @@
-//! Minimal JSON value model and serializer (offline build: no serde).
+//! Minimal JSON value model, serializer, and parser (offline build:
+//! no serde).
 //!
 //! Only what the metrics/report layer needs: objects, arrays, strings,
 //! numbers, booleans, null, with correct string escaping and stable key
-//! order (insertion order) so emitted reports are diff-friendly.
+//! order (insertion order) so emitted reports are diff-friendly. The
+//! parser exists for the consumers of our own emitted documents (the
+//! bench watchdog reading pinned `BENCH_*.json` baselines), but accepts
+//! any standard JSON text.
 
 use std::fmt::Write as _;
 
@@ -47,6 +51,44 @@ impl Json {
             Json::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
             _ => None,
         }
+    }
+
+    /// Number value of a `Num` node.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    /// String value of a `Str` node.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Elements of an `Arr` node.
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(xs) => Some(xs),
+            _ => None,
+        }
+    }
+
+    /// Parse a JSON document. Round-trips everything [`Json::to_string`]
+    /// and [`Json::to_pretty`] emit (objects keep insertion order), and
+    /// accepts standard JSON in general; errors carry the byte offset.
+    pub fn parse(s: &str) -> Result<Json, String> {
+        let mut p = Parser { s, i: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.i != s.len() {
+            return Err(format!("trailing data at byte {}", p.i));
+        }
+        Ok(v)
     }
 
     /// Serialize compactly.
@@ -128,6 +170,202 @@ impl Json {
                 out.push('}');
             }
             other => other.write(out),
+        }
+    }
+}
+
+/// Recursive-descent state over the input text; `i` is a byte offset
+/// and always sits on a char boundary.
+struct Parser<'a> {
+    s: &'a str,
+    i: usize,
+}
+
+impl Parser<'_> {
+    fn peek(&self) -> Option<u8> {
+        self.s.as_bytes().get(self.i).copied()
+    }
+
+    fn err(&self, msg: &str) -> String {
+        format!("{msg} at byte {}", self.i)
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.i += 1;
+        }
+    }
+
+    fn eat(&mut self, c: u8) -> Result<(), String> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected {:?}", c as char)))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        match self.peek() {
+            None => Err(self.err("unexpected end of input")),
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(_) => self.number(),
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> Result<Json, String> {
+        if self.s.as_bytes()[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            Err(self.err("bad literal"))
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.eat(b'{')?;
+        let mut pairs = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(pairs));
+        }
+        loop {
+            self.skip_ws();
+            let k = self.string()?;
+            self.skip_ws();
+            self.eat(b':')?;
+            self.skip_ws();
+            let v = self.value()?;
+            pairs.push((k, v));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(pairs));
+                }
+                _ => return Err(self.err("expected ',' or '}'")),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.eat(b'[')?;
+        let mut xs = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Json::Arr(xs));
+        }
+        loop {
+            self.skip_ws();
+            xs.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(xs));
+                }
+                _ => return Err(self.err("expected ',' or ']'")),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.i += 1;
+                    let esc = self.peek().ok_or_else(|| self.err("unterminated escape"))?;
+                    self.i += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => {
+                            let c = self.unicode_escape()?;
+                            out.push(c);
+                        }
+                        _ => return Err(self.err("bad escape")),
+                    }
+                }
+                Some(c) if c < 0x80 => {
+                    out.push(c as char);
+                    self.i += 1;
+                }
+                Some(_) => {
+                    let ch = self.s[self.i..].chars().next().expect("valid utf-8");
+                    out.push(ch);
+                    self.i += ch.len_utf8();
+                }
+            }
+        }
+    }
+
+    /// The code point of a `\uXXXX` escape whose `\u` is already
+    /// consumed, combining UTF-16 surrogate pairs.
+    fn unicode_escape(&mut self) -> Result<char, String> {
+        let hi = self.hex4()?;
+        if !(0xD800..0xDC00).contains(&hi) {
+            return char::from_u32(hi).ok_or_else(|| self.err("bad \\u escape"));
+        }
+        let tail = self.s.as_bytes().get(self.i..self.i + 2);
+        if tail != Some(b"\\u".as_slice()) {
+            return Err(self.err("lone high surrogate"));
+        }
+        self.i += 2;
+        let lo = self.hex4()?;
+        if !(0xDC00..0xE000).contains(&lo) {
+            return Err(self.err("bad low surrogate"));
+        }
+        let cp = 0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00);
+        char::from_u32(cp).ok_or_else(|| self.err("bad surrogate pair"))
+    }
+
+    fn hex4(&mut self) -> Result<u32, String> {
+        let hex = self
+            .s
+            .get(self.i..self.i + 4)
+            .ok_or_else(|| self.err("truncated \\u escape"))?;
+        let cp = u32::from_str_radix(hex, 16).map_err(|_| self.err("bad \\u escape"))?;
+        self.i += 4;
+        Ok(cp)
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        while let Some(c) = self.peek() {
+            if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-') {
+                self.i += 1;
+            } else {
+                break;
+            }
+        }
+        match self.s[start..self.i].parse::<f64>() {
+            Ok(x) => Ok(Json::Num(x)),
+            Err(_) => Err(format!("bad number at byte {start}")),
         }
     }
 }
@@ -247,5 +485,40 @@ mod tests {
     fn empty_containers_compact() {
         assert_eq!(Json::Arr(vec![]).to_pretty().trim(), "[]");
         assert_eq!(Json::obj().to_pretty().trim(), "{}");
+    }
+
+    #[test]
+    fn parse_roundtrips_emitted_documents() {
+        let j = Json::obj()
+            .set("name", "bench_obs")
+            .set("ratio", 3.5)
+            .set("n", 174u64)
+            .set("ok", true)
+            .set("none", Json::Null)
+            .set("xs", vec![1u64, 2, 3])
+            .set("inner", Json::obj().set("k", "v"))
+            .set("empty", Json::Arr(vec![]));
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+        assert_eq!(Json::parse(&j.to_pretty()).unwrap(), j, "pretty form parses too");
+    }
+
+    #[test]
+    fn parse_handles_escapes_and_numbers() {
+        let j = Json::parse(r#"{"s":"a\"b\\c\ndA😀é","x":-1.5e-3}"#).unwrap();
+        assert_eq!(j.get("s").and_then(Json::as_str), Some("a\"b\\c\ndA\u{1f600}é"));
+        assert_eq!(j.get("x").and_then(Json::as_f64), Some(-0.0015));
+        assert_eq!(Json::parse(" [ 1 , 2.5 ] ").unwrap().as_arr().map(<[Json]>::len), Some(2));
+        let u = Json::parse("\"\\u0041\\ud83d\\ude00\"").unwrap();
+        assert_eq!(u.as_str(), Some("A\u{1f600}"), "\\u escapes incl. surrogate pairs");
+    }
+
+    #[test]
+    fn parse_rejects_malformed_input() {
+        assert!(Json::parse("").is_err());
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("treu").is_err());
+        assert!(Json::parse("{}extra").is_err());
+        assert!(Json::parse(r#""\ud800""#).is_err(), "lone surrogate");
     }
 }

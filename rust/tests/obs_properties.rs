@@ -211,7 +211,7 @@ fn federated_burst_trace_covers_four_subsystems() {
         assert!(text.contains(key), "perfetto export missing {key}");
     }
     // A subsystem filter keeps exactly that subsystem's vocabulary.
-    let pool_only = decision_log(snap, Some(Subsystem::Pool));
+    let pool_only = decision_log(snap, Some(&[Subsystem::Pool]));
     assert!(pool_only.contains("pool_dispatch"), "pool filter keeps pool events");
     assert!(
         !pool_only.contains("gateway_route") && !pool_only.contains(" pick "),

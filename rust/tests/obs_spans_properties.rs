@@ -1,0 +1,233 @@
+//! Wait-attribution property suite.
+//!
+//! [`reconstruct_spans`] promises, in order:
+//!
+//! 1. **Blame tiles the wait.** On a drop-free snapshot, every
+//!    launched job's per-cause blame sums to its attributed wait (to
+//!    float rounding) — across pool on/off, churn on/off, and through
+//!    the federated gateway with steal hops.
+//! 2. **Drops demote, never lie.** When the ring dropped records the
+//!    span set and every span are flagged partial; the sum invariant
+//!    is no longer claimed.
+//! 3. **Attribution is an observer.** The blame switch changes no
+//!    schedule byte — recorder-off runs stay bit-for-bit identical
+//!    with blame on or off, and a recorder-off run never grows a
+//!    rollup.
+
+use llsched::coordinator::experiment::{
+    run_contention_federated, run_contention_with, ContentionOpts, ContentionResult,
+};
+use llsched::fault::scenario::ChurnScenario;
+use llsched::fault::FaultConfig;
+use llsched::federation::FederationConfig;
+use llsched::obs::{reconstruct_spans, SpanSet, BLAME_CAUSES};
+use llsched::pool::PoolConfig;
+use llsched::workload::contention::ContentionMix;
+
+/// Relative-with-floor closeness for telescoped float sums.
+fn close(a: f64, b: f64) -> bool {
+    (a - b).abs() <= 1e-6 * a.abs().max(b.abs()).max(1.0)
+}
+
+/// The `trace`/`explain` commands' cluster-scaled elastic pool.
+fn pooled(nodes: u32) -> PoolConfig {
+    let n = nodes.max(2) as usize;
+    PoolConfig {
+        size: (n / 4).max(1),
+        min: (n / 8).min((n / 4).max(1)),
+        max: (3 * n / 4).max((n / 4).max(1)),
+        ..PoolConfig::disabled()
+    }
+}
+
+/// Workload + fault plan for a preset name (churn presets carry their
+/// scenario's fault plan; contention presets run fault-free).
+fn case(preset: &str, nodes: u32) -> (ContentionMix, FaultConfig) {
+    if preset.starts_with("churn_") {
+        let sc = ChurnScenario::preset(preset, nodes).unwrap();
+        (sc.mix, sc.fault)
+    } else {
+        (
+            ContentionMix::preset(preset, nodes).unwrap(),
+            FaultConfig::disabled(),
+        )
+    }
+}
+
+/// Property 1 on one drop-free span set: non-negative parts, and the
+/// blame decomposition tiles every launched span's wait exactly.
+fn assert_blame_tiles(set: &SpanSet, label: &str) {
+    assert!(!set.partial, "{label}: a drop-free snapshot yields a complete set");
+    let launched = set.spans.iter().filter(|s| s.launched).count();
+    assert!(launched > 0, "{label}: the run launches jobs");
+    for s in set.spans.iter().filter(|s| s.launched) {
+        assert!(!s.partial, "{label}: job {} partial without drops", s.job);
+        assert!(s.wait_s >= 0.0, "{label}: job {} wait is negative", s.job);
+        for (i, name) in BLAME_CAUSES.iter().enumerate() {
+            assert!(s.blame.get(i) >= 0.0, "{label}: job {} {name} negative", s.job);
+        }
+        assert!(
+            close(s.blame.total(), s.wait_s),
+            "{label}: job {} blame {} != wait {}",
+            s.job,
+            s.blame.total(),
+            s.wait_s
+        );
+    }
+}
+
+/// Property 1 over the pool × churn grid: whatever combination of
+/// elastic pool and fault churn produced the wait, the decomposition
+/// tiles it — and the attached per-class rollup agrees with an
+/// independent reconstruction.
+#[test]
+fn blame_tiles_the_wait_across_pool_and_churn_grid() {
+    let grid = [
+        ("burst", false, 3u64),
+        ("burst", true, 7),
+        ("churn_mtbf", true, 11),
+        ("churn_full", false, 5),
+    ];
+    for (preset, pool_on, seed) in grid {
+        let nodes = 32u32;
+        let (mix, fault) = case(preset, nodes);
+        let opts = ContentionOpts {
+            pool: if pool_on { pooled(nodes) } else { PoolConfig::disabled() },
+            fault,
+            trace_cap: 1 << 20,
+            blame: true,
+            ..ContentionOpts::classic(true, seed)
+        };
+        let res = run_contention_with(&mix, opts).unwrap();
+        let snap = res.obs.as_ref().expect("traced run carries a snapshot");
+        assert_eq!(snap.dropped, 0, "{preset}: a 1<<20 ring is drop-free here");
+        let set = reconstruct_spans(snap);
+        let label = format!("{preset} pool={pool_on}");
+        assert_blame_tiles(&set, &label);
+        let rollup = res.blame.as_ref().expect("the blame switch attaches a rollup");
+        let jobs: usize = rollup.iter().map(|cb| cb.jobs).sum();
+        assert_eq!(
+            jobs,
+            set.spans.iter().filter(|s| s.launched).count(),
+            "{label}: the rollup covers every launched span"
+        );
+        // Unlaunched spans carry zero blame, so the per-class totals
+        // must reproduce the set-wide aggregate cause by cause.
+        let total = set.total_blame();
+        for (i, name) in BLAME_CAUSES.iter().enumerate() {
+            let sum: f64 = rollup.iter().map(|cb| cb.blame.get(i)).sum();
+            assert!(close(sum, total.get(i)), "{label}: rollup {name} diverged");
+        }
+    }
+}
+
+/// Property 1 through the federated gateway: spans keyed by gateway
+/// job index survive batching and steal hops in the merged snapshot,
+/// and the gateway/steal segments telescope with the local window.
+#[test]
+fn blame_tiles_the_wait_through_the_federated_gateway() {
+    let mix = ContentionMix::preset("burst", 64).unwrap();
+    let fed = FederationConfig {
+        instances: 2,
+        ..FederationConfig::default()
+    };
+    let opts = ContentionOpts {
+        pool: pooled(32),
+        trace_cap: 1 << 20,
+        blame: true,
+        ..ContentionOpts::classic(true, 9)
+    };
+    let res = run_contention_federated(&mix, opts, fed).unwrap();
+    let snap = res.obs.as_ref().expect("traced federated run carries a snapshot");
+    assert_eq!(snap.dropped, 0, "a 1<<20 ring is drop-free here");
+    let set = reconstruct_spans(snap);
+    assert_blame_tiles(&set, "federated burst");
+    for s in set.spans.iter().filter(|s| s.launched) {
+        assert_ne!(s.pid, u32::MAX, "a launched span has a real owning instance");
+    }
+    let fedsum = res.federation.as_ref().expect("federated run carries the rollup");
+    assert!(fedsum.batches > 0, "the gateway flushed batches");
+    // The gateway traces `StealAttempt` (keyed by gateway job index)
+    // exactly where it counts a steal, so recorded steals must
+    // surface as span hops.
+    if fedsum.steals > 0 {
+        assert!(
+            set.spans.iter().any(|s| s.steal_hops > 0),
+            "recorded steals surface as span hops"
+        );
+    }
+    assert!(res.blame.is_some(), "the blame switch works through the gateway");
+}
+
+/// Property 2: a ring too small for the run drops records, which must
+/// demote the whole set — and every span in it — to partial.
+#[test]
+fn tiny_ring_drops_mark_spans_partial() {
+    let mix = ContentionMix::preset("burst", 32).unwrap();
+    let opts = ContentionOpts {
+        pool: pooled(32),
+        trace_cap: 64,
+        blame: true,
+        ..ContentionOpts::classic(true, 3)
+    };
+    let res = run_contention_with(&mix, opts).unwrap();
+    let snap = res.obs.as_ref().expect("traced run carries a snapshot");
+    assert!(snap.dropped > 0, "a burst run overflows a 64-slot ring");
+    let set = reconstruct_spans(snap);
+    assert!(set.partial, "drops demote the set");
+    assert!(set.spans.iter().all(|s| s.partial), "drops demote every span");
+}
+
+/// Property 3: the blame switch observes, it never steers — and with
+/// the recorder off it is inert (no snapshot, no rollup, identical
+/// schedule bytes).
+#[test]
+fn blame_switch_never_changes_the_schedule() {
+    let (mix, fault) = case("churn_full", 32);
+    let opts = |cap: usize, blame: bool| ContentionOpts {
+        pool: pooled(32),
+        fault: fault.clone(),
+        trace_cap: cap,
+        blame,
+        ..ContentionOpts::classic(true, 11)
+    };
+    // Recorder off: blame on/off must be bit-for-bit identical and
+    // neither run grows a snapshot or rollup.
+    let off_plain = run_contention_with(&mix, opts(0, false)).unwrap();
+    let off_blamed = run_contention_with(&mix, opts(0, true)).unwrap();
+    assert!(off_plain.obs.is_none() && off_blamed.obs.is_none());
+    assert!(off_plain.blame.is_none(), "no recorder, no rollup");
+    assert!(off_blamed.blame.is_none(), "blame needs the recorder");
+    assert_schedules_match(&off_plain, &off_blamed, "recorder off");
+    // Recorder on: blame attaches the rollup without moving a byte.
+    let on_plain = run_contention_with(&mix, opts(1 << 18, false)).unwrap();
+    let on_blamed = run_contention_with(&mix, opts(1 << 18, true)).unwrap();
+    assert!(on_plain.blame.is_none(), "blame stays opt-in");
+    assert!(on_blamed.blame.is_some(), "recorder + switch = rollup");
+    assert_schedules_match(&off_plain, &on_blamed, "recorder on");
+}
+
+/// Bit-for-bit schedule equality across the counters and per-class
+/// float quantiles two runs of the same seed must share.
+fn assert_schedules_match(a: &ContentionResult, b: &ContentionResult, label: &str) {
+    assert_eq!(a.span.to_bits(), b.span.to_bits(), "{label}: span diverged");
+    assert_eq!(a.backfills, b.backfills, "{label}: backfills diverged");
+    assert_eq!(a.unfinished, b.unfinished, "{label}: unfinished diverged");
+    assert_eq!(
+        a.overdue_preemptions, b.overdue_preemptions,
+        "{label}: preemptions diverged"
+    );
+    for (ra, rb) in a.reports.iter().zip(&b.reports) {
+        assert_eq!(
+            ra.median_launch_latency.to_bits(),
+            rb.median_launch_latency.to_bits(),
+            "{label}: median latency diverged"
+        );
+        assert_eq!(
+            ra.p95_launch_latency.to_bits(),
+            rb.p95_launch_latency.to_bits(),
+            "{label}: p95 latency diverged"
+        );
+        assert_eq!(ra.completed, rb.completed, "{label}: completions diverged");
+    }
+}
